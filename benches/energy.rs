@@ -1,0 +1,79 @@
+//! Bench: Table 4 + Table 5 — FPGA resource fractions and energy per
+//! query, plus the TPU roofline estimates for the L1 kernels
+//! (DESIGN.md Sec 8 — interpret=True forbids wallclock TPU numbers, so
+//! structure-derived estimates are the deliverable).
+//!
+//! Run: `cargo bench --bench energy`
+
+use chameleon::config::DATASETS;
+use chameleon::hwmodel::fpga::FpgaModel;
+use chameleon::hwmodel::tpu;
+
+fn main() {
+    println!("{}", chameleon::report::table4_resources());
+    println!("{}", chameleon::report::table5_energy());
+
+    // Sec 6.2 cost-efficiency discussion: "increasing the number of
+    // memory channels to, e.g., 12, would lead to around 3x PQ-code scan
+    // performance", and HBM-class bandwidth beyond that.
+    println!("== ablation: memory-system variants (SIFT paper-scale scan) ==");
+    println!("variant           channels  scan GB/s  query_ms  speedup");
+    let codes = (1e9 * 32.0 / 32768.0) as usize;
+    let base = FpgaModel::default();
+    let base_ms = base.query_latency(codes, 16, 32, 100).total() * 1e3;
+    for (name, channels, clock) in [
+        ("U250 (paper)", 4usize, 140e6),
+        ("12-channel", 12, 140e6),
+        ("HBM-class", 32, 225e6),
+    ] {
+        let f = FpgaModel { n_channels: channels, clock_hz: clock, ..base };
+        let ms = f.query_latency(codes, 16, 32, 100).total() * 1e3;
+        println!(
+            "{name:<17} {channels:<9} {:<10.1} {ms:<9.3} {:.2}x",
+            f.scan_bandwidth() / 1e9,
+            base_ms / ms
+        );
+    }
+    println!();
+
+    println!("== TPU roofline estimates for L1 kernels (per query) ==");
+    println!("kernel           flops      hbm_bytes  AI     vmem/tile  mxu_util  est_us");
+    for ds in DATASETS {
+        let n = (ds.n_paper as f64 * ds.nprobe as f64 / ds.nlist_paper as f64) as usize;
+        let e = tpu::adc_scan_estimate(n, ds.m, tpu::adc_n_tile(ds.m));
+        println!(
+            "adc_scan_{:<7} {:>10.2e} {:>10.2e} {:>6.1} {:>10.2e} {:>8.4} {:>7.1}",
+            ds.name,
+            e.flops,
+            e.hbm_bytes,
+            e.intensity(),
+            e.vmem_bytes_per_tile,
+            e.mxu_utilization,
+            e.latency_s() * 1e6,
+        );
+        assert!(e.fits_vmem());
+    }
+    for ds in DATASETS {
+        let e = tpu::lut_estimate(ds.m, ds.dsub());
+        println!(
+            "lut_{:<12} {:>10.2e} {:>10.2e} {:>6.1} {:>10.2e} {:>8} {:>7.2}",
+            ds.name,
+            e.flops,
+            e.hbm_bytes,
+            e.intensity(),
+            e.vmem_bytes_per_tile,
+            "vpu",
+            e.latency_s() * 1e6,
+        );
+    }
+    let e = tpu::ivf_scan_estimate(1, 32_768, 512, 1024);
+    println!(
+        "ivf_scan_b1      {:>10.2e} {:>10.2e} {:>6.1} {:>10.2e} {:>8.1} {:>7.1}",
+        e.flops,
+        e.hbm_bytes,
+        e.intensity(),
+        e.vmem_bytes_per_tile,
+        e.mxu_utilization,
+        e.latency_s() * 1e6,
+    );
+}

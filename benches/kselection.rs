@@ -1,0 +1,51 @@
+//! Bench: Fig 7/8 — K-selection analysis: binomial distribution, resource
+//! savings, the agreement rate of the approximate hierarchical queue, and
+//! the ablation of DESIGN.md Sec 7 (approximate vs exact).
+//!
+//! Run: `cargo bench --bench kselection`
+
+use chameleon::kselect::hierarchical::{agreement_rate, ApproxHierarchicalQueue};
+use chameleon::kselect::HierarchicalConfig;
+use chameleon::util::rng::Rng;
+use chameleon::util::timer::Bench;
+
+fn main() {
+    println!("{}", chameleon::report::fig7_probability());
+    println!("{}", chameleon::report::fig8_resources());
+
+    // Ablation: exact vs approximate agreement + resources.
+    println!("== ablation: approximate vs exact hierarchical queue ==");
+    println!("lanes depth agree%   resource_units");
+    for &lanes in &[4usize, 8, 16, 32] {
+        for quantile in [0.9, 0.99, 0.999] {
+            let cfg = HierarchicalConfig::approximate(100, lanes, quantile);
+            let rate = agreement_rate(cfg, 8192, 200, 7);
+            println!(
+                "{lanes:<5} {:<5} {:<8.1} {} (target {quantile})",
+                cfg.l1_depth,
+                rate * 100.0,
+                cfg.resource_units()
+            );
+        }
+    }
+
+    // Measured software throughput of the queue simulator (the hardware
+    // rate is 1 element/lane/2 cycles by construction; this measures the
+    // simulator itself, which sits on the measured request path).
+    let mut bench = Bench::new("queue_sim_throughput");
+    let mut rng = Rng::new(1);
+    let dists: Vec<f32> = (0..65_536).map(|_| rng.f32()).collect();
+    for &lanes in &[16usize, 32] {
+        for (nm, cfg) in [
+            ("exact", HierarchicalConfig::exact(100, lanes)),
+            ("approx99", HierarchicalConfig::approximate(100, lanes, 0.99)),
+        ] {
+            let s = bench.case(&format!("{nm}_lanes{lanes}_64k"), || {
+                let mut q = ApproxHierarchicalQueue::new(cfg);
+                q.push_block(&dists, 0);
+                q.finalize().len()
+            });
+            println!("    -> {:.1} M elems/s", dists.len() as f64 / s.p50 / 1e6);
+        }
+    }
+}

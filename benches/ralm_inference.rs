@@ -1,0 +1,56 @@
+//! Bench: Fig 11/12 — end-to-end RALM inference latency + throughput,
+//! Chameleon (FPGA-GPU retrieval) vs the CPU-GPU baseline, plus measured
+//! decode-step costs of the scaled models through PJRT.
+//!
+//! Run: `cargo bench --bench ralm_inference`
+
+use chameleon::chamlm::worker::GpuWorker;
+use chameleon::config;
+use chameleon::runtime::Runtime;
+use chameleon::util::timer::Bench;
+
+fn main() {
+    println!("{}", chameleon::report::fig11_latency(512));
+    println!("{}", chameleon::report::fig12_throughput(512));
+
+    // Measured: the scaled decode step through the AOT artifact (the
+    // request-path cost the modeled numbers stand on).
+    let artifacts =
+        std::env::var("CHAMELEON_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let runtime = match Runtime::new(&artifacts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping measured section (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let mut bench = Bench::new("measured_decode_step");
+    let mut w = GpuWorker::new(&runtime, &config::DEC_TINY, 0, 7).unwrap();
+    let ids = vec![1u32; w.knn_k];
+    let dd = vec![1.0f32; w.knn_k];
+    let mut tok = 1u32;
+    let s = bench.case_n("dec_tiny_b1", 3, 30, || {
+        if w.steps as usize >= config::DEC_TINY.max_seq {
+            w.reset();
+        }
+        let out = w.step(tok, (&ids, &dd)).unwrap();
+        tok = (tok + 1) % 100;
+        out.probs.len()
+    });
+    println!("    -> {:.1} tokens/s measured (scaled model, CPU PJRT)", 1.0 / s.p50);
+
+    let mut we = GpuWorker::new(&runtime, &config::ENCDEC_TINY, 0, 7).unwrap();
+    let chunks: Vec<u32> = (0..we.enc_tokens() as u32).collect();
+    we.encode(&chunks).unwrap();
+    let s = bench.case_n("encdec_tiny_b1", 3, 30, || {
+        if we.steps as usize >= config::ENCDEC_TINY.max_seq {
+            we.reset();
+            we.encode(&chunks).unwrap();
+        }
+        we.step(1, (&[], &[])).unwrap().probs.len()
+    });
+    println!("    -> {:.1} tokens/s measured", 1.0 / s.p50);
+
+    let mut bench = Bench::new("measured_encode");
+    bench.case_n("encdec_tiny_encoder", 2, 15, || we.encode(&chunks).unwrap());
+}

@@ -1,0 +1,75 @@
+//! Bench: Fig 10 — query latency scaling out memory nodes (LogGP
+//! extrapolation, the paper's own method), plus measured multi-node
+//! dispatch through the in-process dispatcher and over real sockets.
+//!
+//! Run: `cargo bench --bench scalability`
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::net::client::NodeClient;
+use chameleon::net::server::NodeServer;
+use chameleon::util::timer::Bench;
+
+fn main() {
+    println!("{}", chameleon::report::fig10_scalability(10_000, 64, 42));
+
+    // Measured: in-process dispatcher with 1..8 nodes over a scaled db.
+    let ds = config::dataset_by_name("SYN-512").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, 10_000, 64, 3);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 100, 5);
+    let mut bench = Bench::new("measured_dispatch");
+    for &n_nodes in &[1usize, 2, 4, 8] {
+        let nodes: Vec<MemoryNode> = (0..n_nodes)
+            .map(|i| {
+                MemoryNode::new(Shard::carve(&index, i, n_nodes), ScanEngine::Native, 100)
+            })
+            .collect();
+        let mut disp = Dispatcher::new(nodes, 100);
+        let mut qi = 0usize;
+        bench.case(&format!("inproc_{n_nodes}nodes"), || {
+            qi = (qi + 1) % data.n_queries;
+            let q = data.query(qi);
+            let lists = index.probe(q, ds.nprobe);
+            disp.search(q, &index.pq.centroids, &lists, ds.nprobe).unwrap().topk.len()
+        });
+    }
+
+    // Measured: networked nodes over localhost TCP.
+    let mut bench = Bench::new("measured_networked");
+    for &n_nodes in &[1usize, 2, 4] {
+        let servers: Vec<NodeServer> = (0..n_nodes)
+            .map(|node_id| {
+                let data = SyntheticDataset::generate_sized(ds, 10_000, 64, 3);
+                let index =
+                    IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 100, 5);
+                let cb = index.pq.centroids.clone();
+                NodeServer::spawn_with(
+                    move || {
+                        MemoryNode::new(
+                            Shard::carve(&index, node_id, n_nodes),
+                            ScanEngine::Native,
+                            100,
+                        )
+                    },
+                    cb,
+                    ds.nprobe,
+                )
+                .unwrap()
+            })
+            .collect();
+        let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+        let mut client = NodeClient::connect(&addrs, 100).unwrap();
+        let mut qi = 0usize;
+        bench.case_n(&format!("tcp_{n_nodes}nodes"), 2, 12, || {
+            qi = (qi + 1) % data.n_queries;
+            let q = data.query(qi);
+            let lists = index.probe(q, ds.nprobe);
+            client.search(qi as u64, q, &lists).unwrap().0.len()
+        });
+        client.shutdown_nodes();
+    }
+}

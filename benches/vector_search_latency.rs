@@ -1,0 +1,70 @@
+//! Bench: Fig 9 — vector search latency for the four system
+//! configurations across datasets and batch sizes, plus the *measured*
+//! hot-path costs on this host (native ADC scan, LUT build, end-to-end
+//! dispatcher search).
+//!
+//! Run: `cargo bench --bench vector_search_latency`
+
+use chameleon::chamvs::backend::{BackendKind, SearchBackend};
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config::DATASETS;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::pq::scan::{adc_scan_into, build_lut};
+use chameleon::util::rng::Rng;
+use chameleon::util::timer::Bench;
+
+fn main() {
+    // Part 1: the paper-scale Fig 9 table (modeled; printed as report).
+    println!("{}", chameleon::report::fig9_search_latency(10_000, 64, 42));
+
+    // Part 2: measured host-side scan costs backing the model's shapes.
+    let mut bench = Bench::new("measured_adc_scan");
+    let mut rng = Rng::new(1);
+    for ds in DATASETS {
+        let n = 60_000; // ~codes per probed query at paper scale, sharded
+        let codes: Vec<u8> = (0..n * ds.m).map(|_| rng.below(256) as u8).collect();
+        let lut: Vec<f32> = (0..ds.m * 256).map(|_| rng.f32()).collect();
+        let mut out = vec![0.0f32; n];
+        let s = bench.case(&format!("native_m{}_60k", ds.m), || {
+            adc_scan_into(&codes, n, ds.m, &lut, &mut out);
+            out[0]
+        });
+        let bytes = (n * ds.m) as f64;
+        println!(
+            "    -> {:.2} GB/s/core (paper calibration: ~1 GB/s/core SIMD)",
+            bytes / s.p50 / 1e9
+        );
+    }
+
+    // Part 3: end-to-end measured search through the dispatcher.
+    let ds = &chameleon::config::SIFT;
+    let data = SyntheticDataset::generate_sized(ds, 20_000, 64, 3);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 141, 5);
+    let mut bench = Bench::new("measured_end_to_end_search");
+    for kind in BackendKind::ALL {
+        let nodes =
+            vec![MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, 100)];
+        let mut backend =
+            SearchBackend::new(kind, ds, Dispatcher::new(nodes, 100), true);
+        let mut qi = 0usize;
+        bench.case(kind.name(), || {
+            qi = (qi + 1) % data.n_queries;
+            backend.search(&index, data.query(qi), 100).unwrap().1.total()
+        });
+    }
+
+    // Part 4: LUT construction cost (shared stage of every backend).
+    let mut bench = Bench::new("measured_lut_build");
+    for ds in DATASETS {
+        let q: Vec<f32> = (0..ds.d).map(|_| rng.f32()).collect();
+        let cb = chameleon::pq::codebook::PqCodebook {
+            d: ds.d,
+            m: ds.m,
+            centroids: (0..ds.m * 256 * ds.dsub()).map(|_| rng.f32()).collect(),
+        };
+        bench.case(&format!("m{}_d{}", ds.m, ds.d), || build_lut(&cb, &q));
+    }
+}

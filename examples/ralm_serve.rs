@@ -1,0 +1,90 @@
+//! RALM serving: load a small real model (the AOT dec_tiny/encdec_tiny
+//! artifacts), serve batched generation requests through the full
+//! coordinator path, and report latency + throughput — the serving-paper
+//! end-to-end driver (Fig 11/12 shape at scaled size).
+//!
+//! Run: `cargo run --release --example ralm_serve -- [--model dec_tiny]
+//!       [--sequences 4] [--tokens 48] [--interval 1]`
+
+use chameleon::chamlm::pool::WorkerPool;
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::engine::RalmEngine;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::runtime::Runtime;
+use chameleon::util::cli::Args;
+use chameleon::util::stats::Summary;
+
+fn main() -> chameleon::Result<()> {
+    let args = Args::parse();
+    let seed = args.get_u64("seed", 11);
+    let n_seq = args.get_usize("sequences", 4);
+    let n_tokens = args.get_usize("tokens", 48);
+    let model = match args.get_or("model", "dec_tiny") {
+        "dec_tiny" => &config::DEC_TINY,
+        "encdec_tiny" => &config::ENCDEC_TINY,
+        other => anyhow::bail!("unknown model {other}"),
+    };
+    let paper = if model.is_encdec() { &config::ENCDEC_S } else { &config::DEC_S };
+    let ds = config::dataset_by_name("SIFT").unwrap();
+
+    println!("== building retrieval stack ==");
+    let data = SyntheticDataset::generate_sized(ds, 8000, 16, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 64, seed);
+    let nodes =
+        vec![MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, model.k)];
+    let corpus = Corpus::generate(data.n, model.vocab, config::CHUNK_LEN, seed);
+    let retriever =
+        Retriever::new(ds, index, Dispatcher::new(nodes, model.k), corpus);
+
+    println!("== loading model '{}' via PJRT ==", model.name);
+    let runtime = Runtime::new(
+        &std::env::var("CHAMELEON_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )?;
+    let pool = WorkerPool::new(&runtime, model, 1, seed)?;
+    let mut engine = RalmEngine::new(pool, retriever, paper);
+
+    println!("== serving {n_seq} sequences x {n_tokens} tokens ==");
+    let prompts: Vec<u32> = (0..n_seq as u32).map(|i| i * 3 + 1).collect();
+    let stats = engine.serve_batch(&prompts, n_tokens, seed)?;
+
+    // Per-step latency summary of the first sequence (Fig 11 shape).
+    let s0 = &stats.per_sequence[0];
+    let retr_steps: Vec<f64> = s0
+        .retrieval_steps
+        .iter()
+        .map(|&s| s0.step_measured_s[s])
+        .collect();
+    let plain_steps: Vec<f64> = s0
+        .step_measured_s
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !s0.retrieval_steps.contains(i))
+        .map(|(_, &t)| t)
+        .collect();
+    println!(
+        "{}",
+        Summary::of(&s0.step_measured_s).render_ms("step latency (all, measured)")
+    );
+    if !retr_steps.is_empty() {
+        println!(
+            "{}",
+            Summary::of(&retr_steps).render_ms("  retrieval steps")
+        );
+    }
+    if !plain_steps.is_empty() {
+        println!("{}", Summary::of(&plain_steps).render_ms("  plain steps"));
+    }
+    println!(
+        "throughput: measured {:.1} tok/s (scaled CPU execution), modeled {:.1} tok/s ({} paper-scale)",
+        stats.tokens as f64 / stats.measured_s,
+        stats.modeled_tokens_per_s(),
+        paper.name
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! End-to-end validation driver: train a RALM decoder with the AOT-lowered
+//! jax train step (fwd + bwd + Adam, compiled once, executed from rust via
+//! PJRT) on a synthetic Markov corpus, logging the loss curve.
+//!
+//! All optimizer state stays device-resident: each step's outputs (new
+//! params, new Adam moments) are fed back as the next step's parameter
+//! buffers without host round-trips.
+//!
+//! Default model is the scaled `dec_tiny`; pass `--model dec_s` for the
+//! ~101M-parameter Dec-S (Table 2) — the EXPERIMENTS.md run — after
+//! building its artifact with `make artifacts-full`.
+//!
+//! Run: `cargo run --release --example train_ralm -- [--steps 300] [--model dec_tiny]`
+
+use chameleon::data::corpus::training_sequences;
+use chameleon::runtime::{HostTensor, Runtime};
+use chameleon::util::cli::Args;
+
+fn main() -> chameleon::Result<()> {
+    let args = Args::parse();
+    let steps = args.get_usize("steps", 200);
+    let seed = args.get_u64("seed", 5);
+    let model = args.get_or("model", "dec_tiny").to_string();
+    let artifact = format!("train_{model}");
+    let log_every = args.get_usize("log-every", 10);
+
+    let runtime = Runtime::new(
+        &std::env::var("CHAMELEON_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )?;
+    println!("== compiling {artifact} (one-time XLA compile) ==");
+    let t0 = std::time::Instant::now();
+    let mut exe = runtime.executor(&artifact, seed)?;
+    println!("   compiled in {:.1}s, {} parameter tensors resident",
+        t0.elapsed().as_secs_f64(), exe.n_params());
+
+    let spec = exe.spec.clone();
+    let batch = spec.static_usize("batch").unwrap();
+    let seq = spec.static_usize("seq").unwrap();
+    let n_params = spec.static_usize("n_params").unwrap_or(0);
+    let vocab = spec
+        .inputs
+        .iter()
+        .find(|t| t.name == "embed")
+        .map(|t| t.shape[0])
+        .unwrap();
+    println!(
+        "   model ~{:.1}M params, batch={batch}, seq={seq}, vocab={vocab}",
+        n_params as f64 / 1e6
+    );
+
+    // Synthetic Markov corpus: learnable n-gram structure (loss must fall
+    // from ~ln(vocab) toward the Markov entropy ~ln(5)). For large-vocab
+    // models the corpus is confined to a sub-vocabulary so the structure
+    // is learnable within a few hundred steps of a 1-core run: the model
+    // first learns the support (loss -> ln(corpus_vocab)), then the
+    // transitions.
+    let corpus_vocab = args
+        .get_usize("corpus-vocab", vocab.min(4096))
+        .min(vocab);
+    let corpus = training_sequences(steps * batch, seq, corpus_vocab, seed ^ 9);
+
+    println!("== training {steps} steps ==");
+    println!("step  loss      tok/s");
+    let mut losses = Vec::with_capacity(steps);
+    let train_t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let mut toks = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            toks.extend(corpus[step * batch + b].iter().map(|&t| t as i32));
+        }
+        let arg_step = HostTensor::i32(&[], vec![step as i32]);
+        let arg_toks = HostTensor::i32(&[batch, seq], toks);
+        let outs = exe.call(&[arg_step, arg_toks])?;
+        // Output 0: loss; outputs 1..=3n: new params + Adam moments, fed
+        // back as the next step's parameter buffers.
+        let loss = outs[0].as_f32()?[0];
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        losses.push(loss as f64);
+        for (i, t) in outs.iter().enumerate().skip(1) {
+            exe.set_param(i - 1, t)?;
+        }
+        if step % log_every == 0 || step + 1 == steps {
+            let tps = ((step + 1) * batch * seq) as f64
+                / train_t0.elapsed().as_secs_f64();
+            println!("{step:<5} {loss:<9.4} {tps:.0}");
+        }
+    }
+
+    let first = losses[..5.min(losses.len())].iter().sum::<f64>()
+        / 5.min(losses.len()) as f64;
+    let last = losses[losses.len().saturating_sub(5)..].iter().sum::<f64>()
+        / 5.min(losses.len()) as f64;
+    println!(
+        "\nloss: {first:.4} -> {last:.4} over {steps} steps ({:.1} min)",
+        train_t0.elapsed().as_secs_f64() / 60.0
+    );
+    println!(
+        "uniform ln({vocab}) = {:.3}; corpus support ln({corpus_vocab}) = {:.3}; markov floor ln(5) = {:.3}",
+        (vocab as f64).ln(),
+        (corpus_vocab as f64).ln(),
+        5f64.ln()
+    );
+    anyhow::ensure!(last < first, "loss did not decrease");
+    println!("train_ralm OK");
+    Ok(())
+}

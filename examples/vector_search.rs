@@ -1,0 +1,74 @@
+//! Vector-search deep dive: runs all four Fig 9 system configurations on
+//! one dataset, printing measured (scaled) + modeled (paper-scale)
+//! latency summaries and verifying recall against exact ground truth.
+//!
+//! Run: `cargo run --release --example vector_search -- [--dataset SIFT] [--n 20000] [--pjrt]`
+
+use chameleon::chamvs::backend::{BackendKind, SearchBackend};
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::data::recall::{ground_truth, mean_recall};
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::runtime::Runtime;
+use chameleon::util::cli::Args;
+use chameleon::util::stats::Summary;
+
+fn main() -> chameleon::Result<()> {
+    let args = Args::parse();
+    let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 20_000);
+    let n_queries = args.get_usize("queries", 32);
+    let seed = args.get_u64("seed", 7);
+    let k = 100;
+
+    println!("== dataset {} (scaled n={n}, paper n=1e9) ==", ds.name);
+    let data = SyntheticDataset::generate_sized(ds, n, 256, seed);
+    let nlist = (n as f64).sqrt() as usize;
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed);
+
+    // Recall vs exact ground truth (Sec 6.1 sanity).
+    let gt = ground_truth(&data.data, data.n, data.d, &data.queries, n_queries, 10);
+    let mut results = Vec::new();
+    for q in 0..n_queries {
+        let (ids, _) = index.search(data.query(q), ds.nprobe, 10);
+        results.push(ids);
+    }
+    println!("R@10 at nprobe={}: {:.3}", ds.nprobe, mean_recall(&results, &gt));
+
+    // The four Fig 9 backends, sharing one index.
+    for kind in BackendKind::ALL {
+        let use_pjrt = args.flag("pjrt") && kind.uses_fpga_scan();
+        let nodes: Vec<MemoryNode> = if use_pjrt {
+            let rt = Runtime::new(
+                &std::env::var("CHAMELEON_ARTIFACTS")
+                    .unwrap_or_else(|_| "artifacts".into()),
+            )?;
+            vec![MemoryNode::with_pjrt(Shard::carve(&index, 0, 1), &rt, k, seed)?]
+        } else {
+            vec![MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, k)]
+        };
+        let mut backend =
+            SearchBackend::new(kind, ds, Dispatcher::new(nodes, k), true);
+        let mut modeled = Vec::new();
+        let mut measured = Vec::new();
+        for qi in 0..n_queries {
+            let (res, lat) = backend.search(&index, data.query(qi), k)?;
+            modeled.push(lat.total());
+            measured.push(res.measured_s);
+        }
+        println!(
+            "{}",
+            Summary::of(&modeled).render_ms(&format!("{} modeled(paper)", kind.name()))
+        );
+        println!(
+            "{}",
+            Summary::of(&measured)
+                .render_ms(&format!("{} measured(scaled)", kind.name()))
+        );
+    }
+    Ok(())
+}

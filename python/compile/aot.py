@@ -1,0 +1,338 @@
+# L2 -> artifacts: lower every entry point to HLO *text* + manifest.json.
+#
+# HLO text (NOT lowered.compiler_ir().serialize()) is the interchange
+# format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+# which the rust side's xla_extension 0.5.1 rejects; the text parser
+# reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+#
+# Every artifact is lowered with return_tuple=False so the rust runtime
+# gets one PJRT buffer per output and can keep state (e.g. the KV cache)
+# on device between calls without host round-trips.
+#
+# Model parameters are NOT shipped as data: manifest.json records each
+# parameter input's (name, shape, init_scale) and the rust side
+# materializes them with its own deterministic RNG. Numerical correctness
+# of the HLO is established by pytest against the pure-jnp oracles, with
+# explicit inputs, independent of any particular parameter values.
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import cost, model, pq
+from .kernels import ivf_scan as ivf_kernel
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _meta(name, shape, dtype, kind="arg", init_scale=None):
+    d = {
+        "name": name,
+        "shape": list(shape),
+        "dtype": "f32" if dtype == F32 else "i32",
+        "kind": kind,
+    }
+    if init_scale is not None:
+        d["init_scale"] = float(init_scale)
+    return d
+
+
+def _param_specs(cfg):
+    """Flattened (sorted-name) parameter spec list + ShapeDtypeStructs."""
+    params = model.init_params(cfg, seed=0)
+    names = sorted(params)
+    metas, specs = [], []
+    for n in names:
+        shape = params[n].shape
+        scale = 0.02 if n in ("embed", "pos") else 1.0 / (shape[0] ** 0.5)
+        metas.append(_meta(n, shape, F32, kind="param", init_scale=scale))
+        specs.append(spec(shape))
+    return names, metas, specs
+
+
+# --------------------------------------------------------------------------
+# Entry-point builders. Each returns (lowered, input_metas, output_metas,
+# static) for one artifact.
+# --------------------------------------------------------------------------
+def build_decode(cfg, batch):
+    # The manifest must list exactly the inputs surviving jax's dead-arg
+    # elimination: encoder-decoder decode never touches the encoder-layer
+    # params (the encoder runs in its own artifact) nor the kNN payload
+    # (rt/rd), so those are excluded from the signature outright.
+    names, pmetas, pspecs = _param_specs(cfg)
+    if cfg.is_encdec:
+        keep = [i for i, n in enumerate(names) if not n.startswith("enc")]
+        names = [names[i] for i in keep]
+        pmetas = [pmetas[i] for i in keep]
+        pspecs = [pspecs[i] for i in keep]
+    L, h, T, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+    k = cfg.knn_k
+
+    def fn_single(plist, token, pos, kv, *rest):
+        params = dict(zip(names, plist))
+        if cfg.is_encdec:
+            (enc_out,) = rest
+            rt = jnp.zeros((k,), I32)
+            rd = jnp.full((k,), 1e4, F32)
+        else:
+            rt, rd = rest
+            enc_out = None
+        return model.decode_step(
+            cfg, params, token, pos, kv, rt, rd, enc_out=enc_out, interpret=True
+        )
+
+    enc_s = cfg.knn_k * cfg.chunk_len if cfg.is_encdec else None
+    if batch == 1:
+        args = [
+            spec((1,), I32),
+            spec((1,), I32),
+            spec((L, 2, h, T, dh)),
+        ]
+        dyn = [
+            _meta("token", (1,), I32),
+            _meta("pos", (1,), I32),
+            _meta("kv_cache", (L, 2, h, T, dh), F32),
+        ]
+        fn = fn_single
+    else:
+        fn = jax.vmap(fn_single, in_axes=(None, 0, 0, 0, 0) + ((0,) if not cfg.is_encdec else ()))
+        args = [
+            spec((batch, 1), I32),
+            spec((batch, 1), I32),
+            spec((batch, L, 2, h, T, dh)),
+        ]
+        dyn = [
+            _meta("token", (batch, 1), I32),
+            _meta("pos", (batch, 1), I32),
+            _meta("kv_cache", (batch, L, 2, h, T, dh), F32),
+        ]
+    if cfg.is_encdec:
+        eshape = (enc_s, cfg.dim) if batch == 1 else (batch, enc_s, cfg.dim)
+        args.append(spec(eshape))
+        dyn.append(_meta("enc_out", eshape, F32))
+    else:
+        kshape = (k,) if batch == 1 else (batch, k)
+        args += [spec(kshape, I32), spec(kshape)]
+        dyn += [
+            _meta("retrieved_tokens", kshape, I32),
+            _meta("retrieved_dists", kshape, F32),
+        ]
+
+    lowered = jax.jit(fn).lower(pspecs, *args)
+    b = batch if batch > 1 else None
+    out_kv = (L, 2, h, T, dh) if batch == 1 else (batch, L, 2, h, T, dh)
+    outs = [
+        _meta("probs", (cfg.vocab,) if batch == 1 else (batch, cfg.vocab), F32),
+        _meta("query_vec", (cfg.dim,) if batch == 1 else (batch, cfg.dim), F32),
+        _meta("new_kv", out_kv, F32),
+    ]
+    static = {
+        "model": cfg.name,
+        "batch": batch,
+        "vocab": cfg.vocab,
+        "dim": cfg.dim,
+        "n_layers": L,
+        "n_heads": h,
+        "max_seq": T,
+        "knn_k": k,
+        "knn_lambda": cfg.knn_lambda,
+        "knn_temp": cfg.knn_temp,
+        "is_encdec": cfg.is_encdec,
+        "chunk_len": cfg.chunk_len,
+        "cost": cost.decode_step_cost(cfg),
+    }
+    return lowered, pmetas + dyn, outs, static
+
+
+def build_encode(cfg):
+    # Only the encoder-side parameters: jax DCEs unused arguments out of
+    # the lowered HLO signature, so the manifest must list exactly the
+    # parameters the encoder touches (embed, pos, enc*), or the rust
+    # executor's buffer count will not match the compiled program.
+    names, pmetas, pspecs = _param_specs(cfg)
+    keep = [
+        i
+        for i, n in enumerate(names)
+        if n in ("embed", "pos") or n.startswith("enc")
+    ]
+    names = [names[i] for i in keep]
+    pmetas = [pmetas[i] for i in keep]
+    pspecs = [pspecs[i] for i in keep]
+    s = cfg.knn_k * cfg.chunk_len
+
+    def fn(plist, chunk_tokens):
+        params = dict(zip(names, plist))
+        return (model.encoder_forward(cfg, params, chunk_tokens),)
+
+    lowered = jax.jit(fn).lower(pspecs, spec((s,), I32))
+    dyn = [_meta("chunk_tokens", (s,), I32)]
+    outs = [_meta("enc_out", (s, cfg.dim), F32)]
+    return lowered, pmetas + dyn, outs, {"model": cfg.name, "enc_seq": s}
+
+
+def build_train(cfg, batch, seq):
+    names, pmetas, pspecs = _param_specs(cfg)
+
+    def fn(plist, mlist, vlist, step, tokens):
+        params = dict(zip(names, plist))
+        m = dict(zip(names, mlist))
+        v = dict(zip(names, vlist))
+        loss, np_, nm, nv = model.train_step(cfg, params, m, v, step, tokens)
+        return (loss, *[np_[n] for n in names], *[nm[n] for n in names],
+                *[nv[n] for n in names])
+
+    lowered = jax.jit(fn).lower(
+        pspecs, pspecs, pspecs, spec((), I32), spec((batch, seq), I32)
+    )
+    mmetas = [dict(m, name="adam_m." + m["name"], init_scale=0.0) for m in pmetas]
+    vmetas = [dict(m, name="adam_v." + m["name"], init_scale=0.0) for m in pmetas]
+    dyn = [_meta("step", (), I32), _meta("tokens", (batch, seq), I32)]
+    outs = [_meta("loss", (), F32)]
+    outs += [_meta("new." + m["name"], m["shape"], F32) for m in pmetas]
+    outs += [_meta("new_m." + m["name"], m["shape"], F32) for m in pmetas]
+    outs += [_meta("new_v." + m["name"], m["shape"], F32) for m in pmetas]
+    static = {
+        "model": cfg.name,
+        "batch": batch,
+        "seq": seq,
+        "n_params": cfg.param_count(),
+    }
+    return lowered, pmetas + mmetas + vmetas + dyn, outs, static
+
+
+def build_chamvs_scan(name, m, dsub, n_codes, k, num_lanes):
+    fn = lambda q, cb, codes, nv: pq.chamvs_scan(
+        q, cb, codes, nv, k=k, num_lanes=num_lanes, interpret=True
+    )
+    lowered = jax.jit(fn).lower(
+        spec((m, dsub)), spec((m, 256, dsub)), spec((n_codes, m), I32),
+        spec((1,), I32),
+    )
+    ins = [
+        _meta("query", (m, dsub), F32),
+        _meta("codebook", (m, 256, dsub), F32),
+        _meta("codes", (n_codes, m), I32),
+        _meta("n_valid", (1,), I32),
+    ]
+    outs = [_meta("topk_dists", (k,), F32), _meta("topk_idxs", (k,), I32)]
+    static = {
+        "m": m, "dsub": dsub, "n_codes": n_codes, "k": k,
+        "num_lanes": num_lanes,
+        "cost": cost.adc_scan_cost(n_codes, m),
+        "lut_cost": cost.lut_cost(m, dsub),
+    }
+    return lowered, ins, outs, static
+
+
+def build_ivf_scan(d, nlist, batch, nprobe):
+    fn = lambda q, c: ivf_kernel.ivf_scan(q, c, nprobe, interpret=True)
+    lowered = jax.jit(fn).lower(spec((batch, d)), spec((nlist, d)))
+    ins = [_meta("queries", (batch, d), F32), _meta("centroids", (nlist, d), F32)]
+    outs = [
+        _meta("dists", (batch, nprobe), F32),
+        _meta("list_ids", (batch, nprobe), I32),
+    ]
+    static = {
+        "d": d, "nlist": nlist, "batch": batch, "nprobe": nprobe,
+        "cost": cost.ivf_scan_cost(batch, nlist, d),
+    }
+    return lowered, ins, outs, static
+
+
+# --------------------------------------------------------------------------
+# Artifact registry: everything `make artifacts` produces.
+# --------------------------------------------------------------------------
+def registry(full=False):
+    arts = {}
+    # ChamLM decode steps (tiny models run in every example/bench; dec_s is
+    # the ~100M-param end-to-end validation model).
+    arts["decode_dec_tiny_b1"] = lambda: build_decode(model.DEC_TINY, 1)
+    arts["decode_dec_tiny_b8"] = lambda: build_decode(model.DEC_TINY, 8)
+    arts["decode_encdec_tiny_b1"] = lambda: build_decode(model.ENCDEC_TINY, 1)
+    arts["encode_encdec_tiny"] = lambda: build_encode(model.ENCDEC_TINY)
+    arts["train_dec_tiny"] = lambda: build_train(model.DEC_TINY, 8, 64)
+    # ChamVS near-memory scan, one per PQ width of Table 3.
+    arts["chamvs_scan_m16"] = lambda: build_chamvs_scan("m16", 16, 8, 32768, 100, 16)
+    arts["chamvs_scan_m32"] = lambda: build_chamvs_scan("m32", 32, 16, 32768, 100, 16)
+    arts["chamvs_scan_m64"] = lambda: build_chamvs_scan("m64", 64, 16, 16384, 100, 16)
+    # ChamVS.idx index scans (scaled nlist=1024; D of Table 3 datasets).
+    for d in (128, 512, 1024):
+        for b in (1, 16):
+            arts[f"ivf_scan_d{d}_b{b}"] = (
+                lambda d=d, b=b: build_ivf_scan(d, 1024, b, 32)
+            )
+    if full:
+        # Paper-scale models: heavy to lower/compile; built on demand.
+        arts["decode_dec_s_b1"] = lambda: build_decode(model.DEC_S, 1)
+        arts["train_dec_s"] = lambda: build_train(model.DEC_S, 2, 64)
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    ap.add_argument("--full", action="store_true",
+                    help="also build paper-scale dec_s artifacts")
+    # Back-compat with the original scaffold Makefile:
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    arts = registry(full=args.full)
+    only = set(args.only.split(",")) if args.only else None
+    for name, build in arts.items():
+        if only and name not in only:
+            continue
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if (
+            not only
+            and os.path.exists(path)
+            and name in manifest["artifacts"]
+        ):
+            print(f"[aot] {name}: up to date")
+            continue
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered, ins, outs, static = build()
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": ins,
+            "outputs": outs,
+            "static": static,
+        }
+        print(f"[aot] {name}: {len(text)} chars, {len(ins)} inputs, "
+              f"{len(outs)} outputs")
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest -> {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

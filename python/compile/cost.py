@@ -1,0 +1,78 @@
+# Analytic cost model for the L1/L2 artifacts (DESIGN.md Sec 8).
+#
+# interpret=True gives CPU-numpy timings only, so TPU efficiency is
+# *estimated* from first principles here: VMEM footprint per tile, HBM
+# traffic, MXU/VPU FLOPs and the resulting arithmetic intensity. The same
+# numbers are emitted into artifacts/manifest.json so the rust hwmodel can
+# cross-check its FPGA/GPU models against the TPU mapping.
+
+MXU_FLOPS = 2 * 128 * 128  # MACs/cycle on one MXU pass, f32 systolic
+VMEM_BYTES = 16 * 2**20  # ~16 MiB usable VMEM per core
+HBM_BW = 1.2e12  # bytes/s (TPU v4-ish)
+PEAK_BF16 = 275e12  # FLOP/s
+
+
+def lut_cost(m, dsub):
+    """LUT build: (m, 256, dsub) broadcast-sub-square-reduce (VPU)."""
+    flops = 3 * m * 256 * dsub  # sub, mul, add-reduce
+    vmem = 4 * (m * dsub + m * 256 * dsub + m * 256)
+    return {"flops": flops, "vmem_bytes": vmem, "unit": "vpu"}
+
+
+def adc_scan_cost(n, m, n_tile=None):
+    """One-hot-MXU ADC: contraction (n_tile, m*256) x (m*256,) per tile."""
+    if n_tile is None:
+        n_tile = max(128, 8192 // m)  # mirrors kernels.pq_scan.n_tile
+    flops = 2 * n * m * 256  # the one-hot contraction as dense MACs
+    useful_flops = 2 * n * m  # lookups+adds actually needed
+    hbm = n * m * 4  # int32 codes streamed (bf16 LUT stays resident)
+    vmem_tile = 4 * (n_tile * m + n_tile * m * 256 + m * 256 + n_tile)
+    return {
+        "flops": flops,
+        "useful_flops": useful_flops,
+        "hbm_bytes": hbm,
+        "vmem_bytes_per_tile": vmem_tile,
+        "mxu_utilization_est": round(useful_flops / flops, 6),
+        "arithmetic_intensity": flops / hbm,
+        "unit": "mxu",
+    }
+
+
+def ivf_scan_cost(b, nlist, d, c_tile=1024):
+    flops = 2 * b * nlist * d
+    hbm = 4 * (nlist * d + b * d + b * nlist)
+    vmem_tile = 4 * (b * d + c_tile * d + b * c_tile)
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "vmem_bytes_per_tile": vmem_tile,
+        "arithmetic_intensity": flops / hbm,
+        "unit": "mxu",
+    }
+
+
+def decode_step_cost(cfg):
+    """Per-token FLOPs/bytes for one decode step of a ModelConfig."""
+    d, l, v = cfg.dim, cfg.n_layers, cfg.vocab
+    ffn = cfg.ffn_dim
+    attn_proj = 4 * d * d
+    cross = 4 * d * d if cfg.is_encdec else 0
+    per_layer = 2 * (attn_proj + cross + 2 * d * ffn)
+    flops = l * per_layer + 2 * v * d
+    param_bytes = 4 * cfg.param_count()
+    kv_bytes = 4 * l * 2 * d * cfg.max_seq
+    return {
+        "flops": flops,
+        "param_bytes": param_bytes,
+        "kv_bytes": kv_bytes,
+        # decode is bandwidth-bound: every param read once per token
+        "arithmetic_intensity": flops / max(param_bytes, 1),
+        "unit": "mxu",
+    }
+
+
+def estimate_tpu_latency_s(cost):
+    """Roofline latency: max(compute, memory) given the cost dict."""
+    t_compute = cost.get("flops", 0) / PEAK_BF16
+    t_mem = cost.get("hbm_bytes", cost.get("param_bytes", 0)) / HBM_BW
+    return max(t_compute, t_mem)

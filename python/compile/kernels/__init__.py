@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the Chameleon reproduction.
+
+Every kernel is authored with ``interpret=True`` so it lowers to plain HLO
+ops executable on the PJRT CPU client (the rust runtime). Real-TPU
+performance is estimated analytically from the BlockSpec tiling; see
+DESIGN.md Sec 8 and ``python/compile/cost.py``.
+
+Kernels (paper mapping):
+  pq_lut    - distance lookup-table construction   (Sec 4, LUT unit)
+  pq_scan   - ADC scan over PQ codes, one-hot-MXU  (Sec 4.1, decoding units)
+  topk      - approximate hierarchical top-K       (Sec 4.2.2)
+  ivf_scan  - IVF centroid distance scan           (Sec 3, ChamVS.idx)
+  attention - decode-step attention over KV cache  (Sec 3, ChamLM)
+"""
+
+from . import attention, ivf_scan, pq_lut, pq_scan, ref, topk  # noqa: F401

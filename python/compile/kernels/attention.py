@@ -1,0 +1,87 @@
+# L1 kernel: single-step decode attention over a KV cache (ChamLM).
+#
+# Flash-style online-softmax accumulation: the KV cache is tiled along the
+# time axis; each grid step rescales a running (max, denominator, output)
+# triple held in VMEM scratch. This is the TPU shape of the paper's GPU
+# decode hot loop -- the (h, T_TILE, dh) K/V tiles stream HBM->VMEM while
+# the softmax state never leaves VMEM.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+T_TILE = 128  # cache positions per grid step
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, t_ref, o_ref, m_ref, l_ref, acc_ref):
+    # q_ref: (h, dh); k_ref/v_ref: (h, T_TILE, dh); t_ref: (1,) valid length.
+    # Scratch: m_ref (h,), l_ref (h,), acc_ref (h, dh) persist across steps.
+    step = pl.program_id(0)
+    h, dh = q_ref.shape
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full((h,), -jnp.inf, jnp.float32)
+        l_ref[...] = jnp.zeros((h,), jnp.float32)
+        acc_ref[...] = jnp.zeros((h, dh), jnp.float32)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    t = t_ref[0]
+
+    scores = jnp.einsum("hd,htd->ht", q, k) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)
+    )  # (h, T_TILE)
+    pos = step * T_TILE + jnp.arange(T_TILE, dtype=jnp.int32)
+    scores = jnp.where(pos[None, :] < t, scores, -jnp.inf)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+    # exp(-inf - -inf) guards: where m_cur is -inf the whole tile is masked.
+    safe_m = jnp.where(jnp.isfinite(m_cur), m_cur, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    p = jnp.exp(scores - safe_m[:, None])
+    p = jnp.where(jnp.isfinite(scores), p, 0.0)
+    l_cur = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_cur = alpha[:, None] * acc_prev + jnp.einsum("ht,htd->hd", p, v)
+    m_ref[...], l_ref[...], acc_ref[...] = m_cur, l_cur, acc_cur
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / l_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, t, interpret=True):
+    """Single-step decode attention.
+
+    q (h, dh); k_cache/v_cache (h, T, dh); t scalar int32 valid length.
+    Returns (h, dh) f32. T must be a multiple of T_TILE (or <= T_TILE).
+    """
+    h, dh = q.shape
+    T = k_cache.shape[1]
+    tile = min(T_TILE, T)
+    assert T % tile == 0, (T, tile)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1)
+    grid = (T // tile,)
+    return pl.pallas_call(
+        functools.partial(_decode_attn_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h, dh), lambda i: (0, 0)),
+            pl.BlockSpec((h, tile, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((h, tile, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((h, dh), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, t_arr)

@@ -1,0 +1,61 @@
+# L1 kernel: IVF centroid distance scan (ChamVS.idx, paper Sec 3).
+#
+# The paper runs this on the GPU colocated with the LLM: every query is
+# compared against all nlist centroids and the nprobe closest lists are
+# probed. On TPU the distance part is one MXU matmul via the
+# ||x||^2 - 2 x.c + ||c||^2 expansion; BlockSpec tiles the nlist axis so a
+# (B, C_TILE) score tile plus the (C_TILE, d) centroid tile stay in VMEM.
+# Selection (top-nprobe) happens outside the kernel in the L2 graph.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+C_TILE = 1024  # centroids per grid step
+
+
+def _ivf_dist_kernel(q_ref, c_ref, out_ref):
+    # q_ref: (b, d), c_ref: (C_TILE, d), out_ref: (b, C_TILE)
+    q = q_ref[...]
+    c = c_ref[...]
+    q2 = jnp.sum(q * q, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    qc = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = q2 - 2.0 * qc + c2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ivf_dists(queries, centroids, interpret=True):
+    """Squared L2 distances (b, nlist) via a tiled Pallas matmul kernel."""
+    b, d = queries.shape
+    nlist = centroids.shape[0]
+    assert centroids.shape == (nlist, d)
+    tile = min(C_TILE, nlist)
+    assert nlist % tile == 0, (nlist, tile)
+    return pl.pallas_call(
+        _ivf_dist_kernel,
+        grid=(nlist // tile,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, nlist), jnp.float32),
+        interpret=interpret,
+    )(queries, centroids)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "interpret"))
+def ivf_scan(queries, centroids, nprobe, interpret=True):
+    """Top-nprobe closest IVF lists per query: (b, nprobe) dists + ids.
+
+    Selection is argsort-based rather than jax.lax.top_k — the latter's
+    HLO (`topk` instruction) cannot be parsed by the rust runtime's
+    xla_extension 0.5.1 (see kernels.topk.topk_smallest).
+    """
+    d = ivf_dists(queries, centroids, interpret=interpret)
+    idxs = jnp.argsort(d, axis=1)[:, :nprobe].astype(jnp.int32)
+    return jnp.take_along_axis(d, idxs, axis=1), idxs

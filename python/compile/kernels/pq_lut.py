@@ -1,0 +1,59 @@
+# L1 kernel: distance lookup table construction (paper Sec 4, "distance
+# lookup table construction unit").
+#
+# The FPGA builds an (m x 256) table of squared L2 distances between each
+# sub-query vector and the 256 PQ centroids of that sub-space, then streams
+# it into the PQ decoding units' BRAM. On TPU the analogous move is one
+# fused broadcast-subtract-square-reduce over a (m, 256, dsub) tile held in
+# VMEM -- pure VPU work, no MXU needed; the table then stays resident for
+# the whole IVF-list scan exactly like the BRAM copy does.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sub-space tile: how many of the m sub-spaces one program instance handles.
+# m is 16/32/64 in the paper's datasets; 8 divides all of them and keeps the
+# per-tile VMEM footprint at 8*256*dsub*4B (<= 128 KiB for dsub <= 16).
+M_TILE = 8
+
+
+def _lut_kernel(q_ref, cb_ref, out_ref):
+    # q_ref:  (M_TILE, dsub), cb_ref: (M_TILE, 256, dsub)
+    # out_ref: (M_TILE, 256)
+    q = q_ref[...]
+    cb = cb_ref[...]
+    diff = q[:, None, :] - cb
+    out_ref[...] = jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut(query, codebook, interpret=True):
+    """Build the PQ distance lookup table with a Pallas kernel.
+
+    query:    (m, dsub) f32
+    codebook: (m, 256, dsub) f32
+    returns:  (m, 256) f32
+    """
+    m, dsub = query.shape
+    assert codebook.shape == (m, 256, dsub), codebook.shape
+    tile = min(M_TILE, m)
+    assert m % tile == 0, (m, tile)
+    grid = (m // tile,)
+    return pl.pallas_call(
+        _lut_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, dsub), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 256, dsub), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 256), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 256), jnp.float32),
+        interpret=interpret,
+    )(query, codebook)
+
+
+def batched_lut(queries, codebook, interpret=True):
+    """(b, m, dsub) -> (b, m, 256); vmapped over the batch of queries."""
+    return jax.vmap(lambda q: lut(q, codebook, interpret=interpret))(queries)

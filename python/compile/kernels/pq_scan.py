@@ -1,0 +1,87 @@
+# L1 kernel: ADC scan over PQ codes (paper Sec 4.1, "PQ decoding units").
+#
+# Hardware adaptation (DESIGN.md Sec 3): the FPGA streams m-byte PQ codes
+# from DRAM and performs m parallel BRAM lookups + an adder tree, one
+# database vector per clock. A TPU has no per-byte scatter BRAM, so the
+# same algebra is re-cast for the MXU: expand each code byte to a one-hot
+# row and contract against the LUT,
+#
+#     dist[n] = sum_i onehot(code[n, i]) . lut[i, :]
+#
+# which is a (N_TILE*m, 256) x (256,) style contraction the systolic array
+# executes at full utilization in bf16/f32. BlockSpec tiles N so the
+# one-hot expansion never materializes in HBM: each grid step stages one
+# (N_TILE, m) code tile into VMEM, expands, contracts, and writes N_TILE
+# distances -- the double-buffered HBM->VMEM stream standing in for the
+# paper's AXI bursts.
+#
+# A gather variant (`adc_scan_gather`) keeps the FPGA's lookup structure
+# verbatim; it is the ablation baseline (DESIGN.md Sec 7) and loses on TPU
+# because per-element gathers serialize on the VPU.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Database vectors per grid step. The one-hot expansion is the VMEM
+# pressure point (tile*m*256*4B), so the tile shrinks as m grows:
+# 8192/m keeps the expansion at ~8 MiB — half of VMEM, leaving room for
+# the double-buffered input stream.
+def n_tile(m):
+    return max(128, 8192 // m)
+
+
+def _adc_onehot_kernel(codes_ref, lut_ref, out_ref):
+    # codes_ref: (N_TILE, m) int32, lut_ref: (m, 256), out_ref: (N_TILE,)
+    codes = codes_ref[...]
+    lut_tbl = lut_ref[...]
+    # One-hot on the 256-wide lane axis; contraction feeds the MXU.
+    onehot = (codes[:, :, None] == jnp.arange(256, dtype=jnp.int32)).astype(
+        lut_tbl.dtype
+    )  # (N_TILE, m, 256)
+    dists = jax.lax.dot_general(
+        onehot.reshape(codes.shape[0], -1),
+        lut_tbl.reshape(-1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = dists
+
+
+def _adc_gather_kernel(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...]
+    lut_tbl = lut_ref[...]
+    gathered = jnp.take_along_axis(lut_tbl[None, :, :], codes[:, :, None], axis=2)
+    out_ref[...] = jnp.sum(gathered[:, :, 0], axis=1).astype(jnp.float32)
+
+
+def _scan(kernel, codes, lut_tbl, interpret):
+    n, m = codes.shape
+    assert lut_tbl.shape == (m, 256), lut_tbl.shape
+    tile = min(n_tile(m), n)
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(codes, lut_tbl)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def adc_scan(codes, lut_tbl, interpret=True):
+    """One-hot-MXU ADC scan. codes (n, m) int32, lut (m, 256) -> (n,) f32."""
+    return _scan(_adc_onehot_kernel, codes, lut_tbl, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def adc_scan_gather(codes, lut_tbl, interpret=True):
+    """Gather-based ADC scan (ablation baseline; FPGA-verbatim structure)."""
+    return _scan(_adc_gather_kernel, codes, lut_tbl, interpret)

@@ -1,0 +1,107 @@
+# Pure-jnp correctness oracles for every L1 Pallas kernel.
+#
+# These are the CORE correctness signal: pytest (python/tests/) sweeps
+# shapes/dtypes with hypothesis and asserts the Pallas kernels match these
+# references to tight tolerances. The rust side then trusts the AOT HLO.
+import jax
+import jax.numpy as jnp
+
+
+def lut_ref(query, codebook):
+    """Distance lookup table: d(x_i, c_i_j) for every sub-space i, centroid j.
+
+    query:    (m, dsub)       sub-query vectors
+    codebook: (m, 256, dsub)  PQ centroids per sub-space
+    returns:  (m, 256) f32    squared L2 per (sub-space, centroid)
+    """
+    diff = query[:, None, :] - codebook  # (m, 256, dsub)
+    return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+
+
+def batched_lut_ref(queries, codebook):
+    """(b, m, dsub), (m, 256, dsub) -> (b, m, 256)."""
+    return jax.vmap(lambda q: lut_ref(q, codebook))(queries)
+
+
+def adc_scan_ref(codes, lut):
+    """Asymmetric distance computation over PQ codes.
+
+    codes: (n, m) int32 in [0, 256)   quantized database vectors
+    lut:   (m, 256) f32               distance lookup table
+    returns: (n,) f32                 approximate squared L2 distances
+    """
+    gathered = jnp.take_along_axis(
+        lut[None, :, :], codes[:, :, None], axis=2
+    )  # (n, m, 1)
+    return jnp.sum(gathered[:, :, 0], axis=1).astype(jnp.float32)
+
+
+def topk_ref(dists, k):
+    """Exact top-K smallest distances. returns (vals, idxs), ascending."""
+    neg_vals, idxs = jax.lax.top_k(-dists, k)
+    return -neg_vals, idxs
+
+
+def approx_hier_topk_ref(dists, k, num_lanes, lane_depth):
+    """Reference for the *approximate hierarchical* top-K of paper Sec 4.2.2.
+
+    Distances are dealt round-robin to `num_lanes` lanes (mirroring one
+    systolic L1 queue per PQ decoding unit), each lane keeps only its
+    `lane_depth` smallest (the truncated L1 queue), and a final exact top-K
+    (the L2 queue) merges the survivors. Output is only approximate when a
+    single lane holds more than `lane_depth` of the true top-K -- the paper
+    sizes lane_depth so that happens for <1% of queries.
+
+    dists: (n,) with n % num_lanes == 0. Returns (vals, idxs) ascending.
+    """
+    n = dists.shape[0]
+    per = n // num_lanes
+    # Round-robin deal: lane l gets elements l, l+num_lanes, l+2*num_lanes...
+    lanes = dists.reshape(per, num_lanes).T  # (num_lanes, per)
+    lane_idx = (
+        jnp.arange(per)[None, :] * num_lanes + jnp.arange(num_lanes)[:, None]
+    )  # original index of lanes[l, j]
+    neg_vals, pos = jax.lax.top_k(-lanes, lane_depth)  # (num_lanes, lane_depth)
+    cand_vals = -neg_vals
+    cand_idx = jnp.take_along_axis(lane_idx, pos, axis=1)
+    flat_vals = cand_vals.reshape(-1)
+    flat_idx = cand_idx.reshape(-1)
+    neg_out, sel = jax.lax.top_k(-flat_vals, k)
+    return -neg_out, flat_idx[sel]
+
+
+def ivf_dists_ref(queries, centroids):
+    """Squared L2 between each query and every IVF centroid.
+
+    queries: (b, d), centroids: (nlist, d) -> (b, nlist) f32
+    """
+    q2 = jnp.sum(queries * queries, axis=1, keepdims=True)  # (b, 1)
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]  # (1, nlist)
+    qc = queries @ centroids.T  # (b, nlist)
+    return (q2 - 2.0 * qc + c2).astype(jnp.float32)
+
+
+def ivf_scan_ref(queries, centroids, nprobe):
+    """Top-nprobe closest centroids per query: (b, nprobe) dists + ids."""
+    d = ivf_dists_ref(queries, centroids)
+    neg_vals, idxs = jax.lax.top_k(-d, nprobe)
+    return -neg_vals, idxs
+
+
+def attention_ref(q, k_cache, v_cache, t):
+    """Single-step decode attention with a causal length mask.
+
+    q:       (h, dh)      current step's query per head
+    k_cache: (h, T, dh)   key cache (first t entries valid)
+    v_cache: (h, T, dh)
+    t:       scalar int   number of valid cache entries (>= 1)
+    returns: (h, dh) f32
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("hd,htd->ht", q, k_cache) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    mask = jnp.arange(k_cache.shape[1])[None, :] < t
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("ht,htd->hd", probs, v_cache.astype(jnp.float32))

@@ -1,0 +1,106 @@
+# L1 kernel: approximate hierarchical top-K (paper Sec 4.2.2).
+#
+# The FPGA pairs every PQ decoding unit with two truncated systolic L1
+# priority queues and merges them through one exact L2 queue. The
+# approximation contract -- each lane keeps only `lane_depth` << K
+# candidates, sized so <1% of queries lose a true neighbor -- carries over
+# unchanged. On TPU the "lanes" become the sublane axis of a (num_lanes,
+# n/num_lanes) tile, the truncated L1 queue is a lane-local top-`lane_depth`
+# (iterative masked min-extraction, vectorized across lanes), and the L2
+# merge is an exact top-K over the num_lanes*lane_depth survivors. The
+# resource-vs-exactness trade of Fig 8 shows up here as work: selection cost
+# scales with lane_depth, not K*num_lanes.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def topk_smallest(x, k):
+    """Sort-based smallest-k selection: (vals ascending, int32 idxs).
+
+    Deliberately avoids jax.lax.top_k: its HLO lowering emits the newer
+    `topk(..., largest=true)` instruction which the rust side's
+    xla_extension 0.5.1 text parser rejects; `sort` round-trips fine.
+    """
+    idx = jnp.argsort(x)[:k].astype(jnp.int32)
+    return x[idx], idx
+
+
+def _lane_topk_kernel(dists_ref, vals_ref, idxs_ref, *, num_lanes, lane_depth):
+    # dists_ref: (n,). Outputs: (num_lanes, lane_depth) vals + original idxs.
+    n = dists_ref.shape[0]
+    per = n // num_lanes
+    x = dists_ref[...]
+    # Round-robin deal, matching one distance per decoding unit per cycle.
+    lanes = x.reshape(per, num_lanes).T  # (num_lanes, per)
+    lane_idx = (
+        jnp.arange(per, dtype=jnp.int32)[None, :] * num_lanes
+        + jnp.arange(num_lanes, dtype=jnp.int32)[:, None]
+    )
+
+    def body(i, carry):
+        cur, vals, idxs = carry
+        j = jnp.argmin(cur, axis=1)  # (num_lanes,) lane-local minima
+        v = jnp.take_along_axis(cur, j[:, None], axis=1)[:, 0]
+        gi = jnp.take_along_axis(lane_idx, j[:, None], axis=1)[:, 0]
+        vals = vals.at[:, i].set(v)
+        idxs = idxs.at[:, i].set(gi)
+        cur = cur.at[jnp.arange(num_lanes), j].set(jnp.inf)
+        return cur, vals, idxs
+
+    vals0 = jnp.full((num_lanes, lane_depth), jnp.inf, jnp.float32)
+    idxs0 = jnp.zeros((num_lanes, lane_depth), jnp.int32)
+    _, vals, idxs = jax.lax.fori_loop(0, lane_depth, body, (lanes, vals0, idxs0))
+    vals_ref[...] = vals
+    idxs_ref[...] = idxs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "num_lanes", "lane_depth", "interpret")
+)
+def approx_hier_topk(dists, k, num_lanes=16, lane_depth=None, interpret=True):
+    """Approximate hierarchical top-K.
+
+    dists: (n,) f32 with n % num_lanes == 0.
+    Returns (vals, idxs) of the ~K smallest, ascending. Identical to exact
+    top-K unless one lane holds more than lane_depth of the true top-K.
+    """
+    if lane_depth is None:
+        lane_depth = default_lane_depth(k, num_lanes)
+    n = dists.shape[0]
+    assert n % num_lanes == 0, (n, num_lanes)
+    kern = functools.partial(
+        _lane_topk_kernel, num_lanes=num_lanes, lane_depth=lane_depth
+    )
+    vals, idxs = pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((num_lanes, lane_depth), jnp.float32),
+            jax.ShapeDtypeStruct((num_lanes, lane_depth), jnp.int32),
+        ),
+        interpret=interpret,
+    )(dists)
+    # L2 queue: exact merge of the lane survivors.
+    merged_vals, sel = topk_smallest(vals.reshape(-1), k)
+    return merged_vals, idxs.reshape(-1)[sel]
+
+
+def default_lane_depth(k, num_lanes):
+    """Binomial truncation bound of paper Sec 4.2.2.
+
+    Smallest depth d such that P[Binom(k, 1/num_lanes) > d] <= 1e-2 / num_lanes
+    (union bound over lanes => >= 99% of queries exactly match the exact
+    module). Mirrors rust `kselect::binomial::required_depth`.
+    """
+    import math
+
+    p = 1.0 / num_lanes
+    target = 1e-2 / num_lanes
+    cum = 0.0
+    for d in range(k + 1):
+        cum += math.comb(k, d) * p**d * (1 - p) ** (k - d)
+        if 1.0 - cum <= target:
+            return max(d, 1)
+    return k

@@ -1,0 +1,297 @@
+# L2: ChamLM model graphs (paper Sec 3/5 — Fairseq-based in the original,
+# re-implemented in JAX here).
+#
+# Two RALM families from Table 2:
+#   * decoder-only (Dec-S/L): kNN-LM style; every step's last hidden state
+#     is the retrieval query, and the next-token distribution is
+#     interpolated with a distribution over retrieved next-tokens
+#     (p = lambda * p_knn + (1 - lambda) * p_lm).
+#   * encoder-decoder (EncDec-S/L): RETRO style; retrieved token chunks are
+#     processed by a shallow encoder and consumed by the decoder through
+#     cross-attention, with retrieval every `interval` tokens.
+#
+# The decode hot path calls the L1 Pallas attention kernel; everything is
+# AOT-lowered by aot.py and executed from rust via PJRT. Python never runs
+# at request time.
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    n_layers: int  # decoder layers
+    n_heads: int
+    enc_layers: int = 0  # 0 => decoder-only
+    max_seq: int = 512
+    knn_k: int = 100  # neighbors per retrieval
+    chunk_len: int = 8  # tokens per retrieved chunk (EncDec)
+    knn_lambda: float = 0.25
+    knn_temp: float = 10.0
+
+    @property
+    def head_dim(self):
+        return self.dim // self.n_heads
+
+    @property
+    def ffn_dim(self):
+        return 4 * self.dim
+
+    @property
+    def is_encdec(self):
+        return self.enc_layers > 0
+
+    def param_count(self):
+        """Analytic parameter count at paper scale.
+
+        Encoder-decoder models are counted with a separate encoder
+        embedding table (matches Table 2: EncDec-L = 1738M); the tiny
+        execution variants share one table, which only matters for the
+        scaled models' actual memory, not the paper-scale cost model.
+        """
+        d, v = self.dim, self.vocab
+        per_dec = 4 * d * d + 2 * d * self.ffn_dim + (4 * d * d if self.is_encdec else 0)
+        per_enc = 4 * d * d + 2 * d * self.ffn_dim
+        enc_embed = v * d if self.is_encdec else 0
+        return (
+            v * d  # tied embedding / output projection
+            + enc_embed
+            + self.max_seq * d  # learned positions
+            + self.n_layers * per_dec
+            + self.enc_layers * per_enc
+        )
+
+
+# ---- Table 2 model zoo (paper-scale) plus scaled execution variants. ----
+DEC_S = ModelConfig("dec_s", 50_000, 512, 24, 8)
+DEC_L = ModelConfig("dec_l", 50_000, 1024, 96, 16)
+ENCDEC_S = ModelConfig("encdec_s", 50_000, 512, 24, 8, enc_layers=2, knn_k=10)
+ENCDEC_L = ModelConfig("encdec_l", 50_000, 1024, 96, 16, enc_layers=2, knn_k=10)
+# Scaled variants: same architecture, small enough for the PJRT CPU client
+# to decode at interactive rates in the rust serving path.
+DEC_TINY = ModelConfig("dec_tiny", 2048, 128, 4, 4, max_seq=512, knn_k=10)
+ENCDEC_TINY = ModelConfig(
+    "encdec_tiny", 2048, 128, 4, 4, enc_layers=2, max_seq=512, knn_k=4
+)
+
+CONFIGS = {c.name: c for c in [DEC_S, DEC_L, ENCDEC_S, ENCDEC_L, DEC_TINY, ENCDEC_TINY]}
+
+
+# --------------------------------------------------------------------------
+# Parameters. Stored as a flat dict name -> array; aot.py serializes them in
+# sorted-name order, which is also the flattened argument order of the AOT
+# entry points (see manifest.json).
+# --------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, seed: int = 0):
+    rng = jax.random.PRNGKey(seed)
+    p = {}
+
+    def dense(key, shape, scale=None):
+        nonlocal rng
+        rng, k = jax.random.split(rng)
+        scale = scale if scale is not None else (1.0 / jnp.sqrt(shape[0]))
+        p[key] = (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    dense("embed", (cfg.vocab, cfg.dim), scale=0.02)
+    dense("pos", (cfg.max_seq, cfg.dim), scale=0.02)
+    for i in range(cfg.n_layers):
+        pre = f"dec{i:03d}"
+        for nm in ["wq", "wk", "wv", "wo"]:
+            dense(f"{pre}.{nm}", (cfg.dim, cfg.dim))
+        dense(f"{pre}.w1", (cfg.dim, cfg.ffn_dim))
+        dense(f"{pre}.w2", (cfg.ffn_dim, cfg.dim))
+        if cfg.is_encdec:
+            for nm in ["cq", "ck", "cv", "co"]:
+                dense(f"{pre}.{nm}", (cfg.dim, cfg.dim))
+    for i in range(cfg.enc_layers):
+        pre = f"enc{i:03d}"
+        for nm in ["wq", "wk", "wv", "wo"]:
+            dense(f"{pre}.{nm}", (cfg.dim, cfg.dim))
+        dense(f"{pre}.w1", (cfg.dim, cfg.ffn_dim))
+        dense(f"{pre}.w2", (cfg.ffn_dim, cfg.dim))
+    return p
+
+
+def _rms_norm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _split_heads(x, n_heads):
+    # (..., dim) -> (..., h, dh)
+    return x.reshape(x.shape[:-1] + (n_heads, x.shape[-1] // n_heads))
+
+
+# --------------------------------------------------------------------------
+# Decode step (single sequence). The rust ChamLM worker drives this once per
+# generated token via the AOT artifact; batching is vmap in aot.py.
+# --------------------------------------------------------------------------
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    token,  # (1,) int32 current input token
+    pos,  # (1,) int32 position (== number of tokens generated so far)
+    kv_cache,  # (n_layers, 2, h, T, dh) f32
+    retrieved_tokens,  # (knn_k,) int32 next-tokens of neighbors (Dec only)
+    retrieved_dists,  # (knn_k,) f32 neighbor distances (Dec only)
+    enc_out: Optional[jnp.ndarray] = None,  # (S, dim) encoder output (EncDec)
+    interpret: bool = True,
+):
+    """One token-generation step.
+
+    Returns (probs (vocab,), query_vec (dim,), new_kv_cache).
+    `query_vec` is the normalized last hidden state — the retrieval query
+    the paper sends to ChamVS (workflow step 1 in Sec 3).
+    """
+    h_dim, dh = cfg.n_heads, cfg.head_dim
+    t = pos[0]
+    x = params["embed"][token[0]] + params["pos"][t]
+
+    new_kv = []
+    for i in range(cfg.n_layers):
+        pre = f"dec{i:03d}"
+        xn = _rms_norm(x)
+        q = _split_heads(xn @ params[f"{pre}.wq"], h_dim)  # (h, dh)
+        k = _split_heads(xn @ params[f"{pre}.wk"], h_dim)
+        v = _split_heads(xn @ params[f"{pre}.wv"], h_dim)
+        k_cache = jax.lax.dynamic_update_index_in_dim(
+            kv_cache[i, 0].transpose(1, 0, 2), k, t, 0
+        ).transpose(1, 0, 2)  # (h, T, dh)
+        v_cache = jax.lax.dynamic_update_index_in_dim(
+            kv_cache[i, 1].transpose(1, 0, 2), v, t, 0
+        ).transpose(1, 0, 2)
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+        o = attn_kernel.decode_attention(q, k_cache, v_cache, t + 1, interpret=interpret)
+        x = x + o.reshape(-1).astype(jnp.float32) @ params[f"{pre}.wo"]
+        if cfg.is_encdec and enc_out is not None:
+            xn = _rms_norm(x)
+            cq = _split_heads(xn @ params[f"{pre}.cq"], h_dim)
+            ck = _split_heads(enc_out @ params[f"{pre}.ck"], h_dim)  # (S, h, dh)
+            cv = _split_heads(enc_out @ params[f"{pre}.cv"], h_dim)
+            scores = jnp.einsum("hd,shd->hs", cq, ck) / jnp.sqrt(
+                jnp.asarray(dh, jnp.float32)
+            )
+            probs_c = jax.nn.softmax(scores, axis=-1)
+            co = jnp.einsum("hs,shd->hd", probs_c, cv)
+            x = x + co.reshape(-1) @ params[f"{pre}.co"]
+        xn = _rms_norm(x)
+        x = x + jax.nn.gelu(xn @ params[f"{pre}.w1"]) @ params[f"{pre}.w2"]
+
+    x = _rms_norm(x)
+    logits = x @ params["embed"].T  # tied output projection
+    p_lm = jax.nn.softmax(logits)
+
+    if not cfg.is_encdec:
+        # kNN-LM interpolation (paper Sec 2.1, second category). Distances
+        # are clipped: the rust worker pads missing neighbors with huge
+        # sentinels, and exp() of their negated values must stay finite in
+        # f32 under XLA's softmax rewrite.
+        clipped = jnp.clip(retrieved_dists, 0.0, 1e4)
+        w = jax.nn.softmax(-clipped / cfg.knn_temp)  # (knn_k,)
+        p_knn = jnp.zeros((cfg.vocab,), jnp.float32).at[retrieved_tokens].add(w)
+        probs = cfg.knn_lambda * p_knn + (1.0 - cfg.knn_lambda) * p_lm
+    else:
+        probs = p_lm
+
+    query_vec = x  # retrieval query for the *next* step
+    return probs, query_vec, jnp.stack(new_kv)
+
+
+def encoder_forward(cfg: ModelConfig, params, chunk_tokens, interpret=True):
+    """EncDec encoder over retrieved chunks (paper's shallow 2-layer encoder).
+
+    chunk_tokens: (knn_k * chunk_len,) int32 concatenated retrieved chunks.
+    Returns (S, dim) f32 latent knowledge representations.
+    """
+    del interpret  # encoder is plain jnp; it runs once per retrieval only
+    s = chunk_tokens.shape[0]
+    x = params["embed"][chunk_tokens] + params["pos"][:s]
+    h_dim, dh = cfg.n_heads, cfg.head_dim
+    for i in range(cfg.enc_layers):
+        pre = f"enc{i:03d}"
+        xn = _rms_norm(x)
+        q = _split_heads(xn @ params[f"{pre}.wq"], h_dim)  # (s, h, dh)
+        k = _split_heads(xn @ params[f"{pre}.wk"], h_dim)
+        v = _split_heads(xn @ params[f"{pre}.wv"], h_dim)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(
+            jnp.asarray(dh, jnp.float32)
+        )
+        probs = jax.nn.softmax(scores, axis=-1)  # bidirectional: no mask
+        o = jnp.einsum("hqk,khd->qhd", probs, v).reshape(s, -1)
+        x = x + o @ params[f"{pre}.wo"]
+        xn = _rms_norm(x)
+        x = x + jax.nn.gelu(xn @ params[f"{pre}.w1"]) @ params[f"{pre}.w2"]
+    return _rms_norm(x)
+
+
+# --------------------------------------------------------------------------
+# Training (end-to-end validation driver). Full causal forward + Adam.
+# --------------------------------------------------------------------------
+def lm_forward(cfg: ModelConfig, params, tokens):
+    """Causal LM forward over (B, S) tokens -> (B, S, vocab) logits."""
+    b, s = tokens.shape
+    h_dim, dh = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens] + params["pos"][:s][None]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    for i in range(cfg.n_layers):
+        pre = f"dec{i:03d}"
+        xn = _rms_norm(x)
+        q = _split_heads(xn @ params[f"{pre}.wq"], h_dim)  # (b, s, h, dh)
+        k = _split_heads(xn @ params[f"{pre}.wk"], h_dim)
+        v = _split_heads(xn @ params[f"{pre}.wv"], h_dim)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.asarray(dh, jnp.float32)
+        )
+        scores = jnp.where(mask[None, None] > 0, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, -1)
+        x = x + o @ params[f"{pre}.wo"]
+        xn = _rms_norm(x)
+        x = x + jax.nn.gelu(xn @ params[f"{pre}.w1"]) @ params[f"{pre}.w2"]
+    return _rms_norm(x) @ params["embed"].T
+
+
+def lm_loss(cfg: ModelConfig, params, tokens):
+    """Next-token cross-entropy over (B, S) tokens."""
+    logits = lm_forward(cfg, params, tokens)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}}
+
+
+def train_step(cfg: ModelConfig, params, opt_m, opt_v, step, tokens, lr=3e-4):
+    """One Adam step. Flat dict params in/out so aot.py can lower it.
+
+    Returns (loss, new_params, new_m, new_v).
+    """
+    loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, tokens))(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step.astype(jnp.float32) + 1.0
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        m = b1 * opt_m[k] + (1 - b1) * grads[k]
+        v = b2 * opt_v[k] + (1 - b2) * grads[k] * grads[k]
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m, v
+    return loss, new_p, new_m, new_v
+
+
+# Convenience jitted batched decode for tests.
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def decode_step_jit(cfg, params, token, pos, kv_cache, rt, rd, interpret=True):
+    return decode_step(cfg, params, token, pos, kv_cache, rt, rd, interpret=interpret)

@@ -1,0 +1,55 @@
+# L2: ChamVS.mem search graph — the compute a disaggregated memory node
+# performs per (query, IVF-list-shard) scan request (paper Sec 3 workflow
+# steps 5-6): build the distance LUT, ADC-scan the shard's PQ codes, and
+# K-select through the approximate hierarchical queue.
+#
+# One artifact per (n_codes, m, k) shape; the rust memory node pads its
+# probed lists up to `n_codes` and passes `n_valid` so padding never wins.
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pq_lut, pq_scan, topk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "num_lanes", "lane_depth", "interpret")
+)
+def chamvs_scan(
+    query,  # (m, dsub) f32 sub-query vectors
+    codebook,  # (m, 256, dsub) f32 PQ centroids
+    codes,  # (n, m) int32 PQ codes of the probed lists (padded)
+    n_valid,  # (1,) int32 number of real codes (<= n)
+    k=100,
+    num_lanes=16,
+    lane_depth=None,
+    interpret=True,
+):
+    """Full near-memory scan: LUT -> ADC -> approximate hierarchical top-K.
+
+    Returns (vals (k,), idxs (k,)) — idxs are positions into `codes`; the
+    rust node maps them back to global vector IDs via its shard layout.
+    """
+    lut_tbl = pq_lut.lut(query, codebook, interpret=interpret)
+    dists = pq_scan.adc_scan(codes, lut_tbl, interpret=interpret)
+    n = codes.shape[0]
+    pad_mask = jnp.arange(n, dtype=jnp.int32) >= n_valid[0]
+    dists = jnp.where(pad_mask, jnp.float32(jnp.finfo(jnp.float32).max), dists)
+    return topk.approx_hier_topk(
+        dists, k, num_lanes=num_lanes, lane_depth=lane_depth, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "num_lanes", "lane_depth", "interpret")
+)
+def chamvs_scan_batch(queries, codebook, codes, n_valid, k=100, num_lanes=16,
+                      lane_depth=None, interpret=True):
+    """Batched variant: queries (b, m, dsub), codes (b, n, m), n_valid (b, 1)."""
+    return jax.vmap(
+        lambda q, c, nv: chamvs_scan(
+            q, codebook, c, nv, k=k, num_lanes=num_lanes,
+            lane_depth=lane_depth, interpret=interpret,
+        )
+    )(queries, codes, n_valid)

@@ -1,0 +1,9 @@
+fn main() {
+    for f in std::env::args().skip(1) {
+        eprint!("parsing {f} ... ");
+        match xla::HloModuleProto::from_text_file(&f) {
+            Ok(_) => eprintln!("OK"),
+            Err(e) => eprintln!("ERR {}", format!("{e}").lines().next().unwrap_or("")),
+        }
+    }
+}

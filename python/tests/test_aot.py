@@ -1,0 +1,83 @@
+# AOT pipeline tests: manifest consistency and HLO-text validity of every
+# artifact the registry produces (the rust runtime trusts these).
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_registry(manifest):
+    for name in aot.registry(full=False):
+        assert name in manifest["artifacts"], f"{name} missing from manifest"
+
+
+def test_artifact_files_exist_and_are_hlo(manifest):
+    for name, spec in manifest["artifacts"].items():
+        path = os.path.join(ART_DIR, spec["file"])
+        assert os.path.exists(path), path
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name}: not HLO text"
+
+
+def test_input_kinds_and_order(manifest):
+    # Params come first (sorted), then args — the rust Executor relies on
+    # this ordering when assembling execute_b argument lists.
+    for name, spec in manifest["artifacts"].items():
+        kinds = [i["kind"] for i in spec["inputs"]]
+        if "param" in kinds:
+            first_arg = kinds.index("arg") if "arg" in kinds else len(kinds)
+            assert all(k == "param" for k in kinds[:first_arg]), name
+            assert all(k == "arg" for k in kinds[first_arg:]), name
+            # Model params (non-optimizer-state) are sorted by name; the
+            # rust Executor feeds params strictly in manifest order.
+            pnames = [
+                i["name"]
+                for i in spec["inputs"]
+                if i["kind"] == "param" and not i["name"].startswith("adam_")
+            ]
+            assert pnames == sorted(pnames), f"{name}: params not sorted"
+
+
+def test_decode_static_config(manifest):
+    spec = manifest["artifacts"]["decode_dec_tiny_b1"]
+    st = spec["static"]
+    cfg = model.DEC_TINY
+    assert st["vocab"] == cfg.vocab
+    assert st["dim"] == cfg.dim
+    assert st["n_layers"] == cfg.n_layers
+    assert st["knn_k"] == cfg.knn_k
+    outs = [o["name"] for o in spec["outputs"]]
+    assert outs == ["probs", "query_vec", "new_kv"]
+
+
+def test_scan_artifacts_cover_table3_widths(manifest):
+    for m in (16, 32, 64):
+        name = f"chamvs_scan_m{m}"
+        st = manifest["artifacts"][name]["static"]
+        assert st["m"] == m
+        assert st["k"] == 100
+        # VMEM discipline: cost dict records a tile that fits ~16 MiB.
+        assert st["cost"]["vmem_bytes_per_tile"] < 16 * 2**20
+
+
+def test_cost_fields_present(manifest):
+    st = manifest["artifacts"]["decode_dec_tiny_b1"]["static"]
+    assert st["cost"]["flops"] > 0
+    assert st["cost"]["param_bytes"] > 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

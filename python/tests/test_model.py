@@ -1,0 +1,140 @@
+# L2 model correctness: decode-with-KV-cache vs full forward, kNN-LM
+# interpolation, encoder-decoder path, and the train step.
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+CFG = model.DEC_TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+def zero_kv(cfg):
+    return jnp.zeros(
+        (cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32
+    )
+
+
+def no_knn(cfg):
+    rt = jnp.zeros((cfg.knn_k,), jnp.int32)
+    rd = jnp.full((cfg.knn_k,), 1e4, jnp.float32)
+    return rt, rd
+
+
+def test_decode_matches_forward(params):
+    # Stepping the decode path must reproduce the full causal forward.
+    cfg0 = model.ModelConfig(
+        "lam0", CFG.vocab, CFG.dim, CFG.n_layers, CFG.n_heads,
+        max_seq=CFG.max_seq, knn_k=CFG.knn_k, knn_lambda=0.0,
+    )
+    toks = jnp.asarray([[5, 9, 3, 7, 100, 42]], jnp.int32)
+    logits = model.lm_forward(cfg0, params, toks)
+    kv = zero_kv(cfg0)
+    rt, rd = no_knn(cfg0)
+    for i in range(6):
+        probs, _, kv = model.decode_step_jit(
+            cfg0, params, toks[0, i : i + 1], jnp.asarray([i], jnp.int32), kv, rt, rd
+        )
+        want = jax.nn.softmax(logits[0, i])
+        np.testing.assert_allclose(
+            np.asarray(probs), np.asarray(want), rtol=5e-3, atol=5e-5
+        )
+
+
+def test_knn_interpolation_shifts_mass(params):
+    # Close neighbors all voting for one token must raise its probability
+    # by ~lambda relative to the pure LM distribution.
+    kv = zero_kv(CFG)
+    rt, rd = no_knn(CFG)
+    tok = jnp.asarray([3], jnp.int32)
+    pos = jnp.asarray([0], jnp.int32)
+    p_lm, _, _ = model.decode_step_jit(CFG, params, tok, pos, kv, rt, rd)
+    target = 777
+    rt2 = jnp.full((CFG.knn_k,), target, jnp.int32)
+    rd2 = jnp.zeros((CFG.knn_k,), jnp.float32)  # all at distance 0
+    p_knn, _, _ = model.decode_step_jit(CFG, params, tok, pos, kv, rt2, rd2)
+    gain = float(p_knn[target] - p_lm[target])
+    assert abs(gain - CFG.knn_lambda * (1.0 - float(p_lm[target]) / 1.0)) < 0.05
+    assert float(jnp.abs(p_knn.sum() - 1.0)) < 1e-3
+
+
+def test_knn_distance_weighting(params):
+    # A strictly closer neighbor gets more interpolation weight.
+    kv = zero_kv(CFG)
+    tok = jnp.asarray([3], jnp.int32)
+    pos = jnp.asarray([0], jnp.int32)
+    rt = jnp.asarray([11] + [22] * (CFG.knn_k - 1), jnp.int32)
+    rd = jnp.asarray([0.0] + [50.0] * (CFG.knn_k - 1), jnp.float32)
+    probs, _, _ = model.decode_step_jit(CFG, params, tok, pos, kv, rt, rd)
+    assert float(probs[11]) > float(probs[22])
+
+
+def test_encdec_decode_consumes_encoder():
+    cfg = model.ENCDEC_TINY
+    p = model.init_params(cfg, seed=1)
+    chunks = jnp.arange(cfg.knn_k * cfg.chunk_len, dtype=jnp.int32) % cfg.vocab
+    enc = model.encoder_forward(cfg, p, chunks)
+    assert enc.shape == (cfg.knn_k * cfg.chunk_len, cfg.dim)
+    kv = zero_kv(cfg)
+    rt, rd = no_knn(cfg)
+    tok = jnp.asarray([1], jnp.int32)
+    pos = jnp.asarray([0], jnp.int32)
+    probs1, _, _ = model.decode_step(cfg, p, tok, pos, kv, rt, rd, enc_out=enc)
+    # Different encoder content must change the distribution.
+    enc2 = model.encoder_forward(cfg, p, (chunks + 7) % cfg.vocab)
+    probs2, _, _ = model.decode_step(cfg, p, tok, pos, kv, rt, rd, enc_out=enc2)
+    assert not np.allclose(np.asarray(probs1), np.asarray(probs2), atol=1e-5)
+    assert abs(float(probs1.sum()) - 1.0) < 1e-3
+
+
+def test_train_step_reduces_loss():
+    cfg = model.DEC_TINY
+    p = model.init_params(cfg, seed=2)
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    rng = np.random.default_rng(0)
+    # Markov-structured tokens (learnable).
+    seqs = np.zeros((8, 32), np.int32)
+    for b in range(8):
+        t = rng.integers(0, cfg.vocab)
+        for s in range(32):
+            seqs[b, s] = t
+            t = (t + rng.choice([1, 2, 3])) % cfg.vocab
+    toks = jnp.asarray(seqs)
+    step_fn = jax.jit(
+        lambda p, m, v, s: model.train_step(cfg, p, m, v, s, toks, lr=1e-3)
+    )
+    losses = []
+    for s in range(8):
+        loss, p, m, v = step_fn(p, m, v, jnp.asarray(s, jnp.int32))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_param_count_matches_init():
+    for cfg in [model.DEC_TINY, model.DEC_S]:
+        p = model.init_params(cfg, seed=0)
+        actual = sum(int(np.prod(v.shape)) for v in p.values())
+        assert actual == cfg.param_count() - (
+            cfg.vocab * cfg.dim if cfg.is_encdec else 0
+        )
+
+
+def test_query_vec_is_final_hidden(params):
+    kv = zero_kv(CFG)
+    rt, rd = no_knn(CFG)
+    _, qv, _ = model.decode_step_jit(
+        CFG, params, jnp.asarray([9], jnp.int32), jnp.asarray([0], jnp.int32), kv, rt, rd
+    )
+    assert qv.shape == (CFG.dim,)
+    assert bool(jnp.all(jnp.isfinite(qv)))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,68 @@
+# L2 search-graph correctness: the full chamvs_scan pipeline (LUT -> ADC
+# -> approximate top-K) vs a flat oracle, including the padding contract
+# the rust memory node relies on.
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import pq
+from compile.kernels import ref
+
+
+def setup(seed, n=2048, m=16, dsub=8):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((m, dsub)), jnp.float32)
+    cb = jnp.asarray(rng.standard_normal((m, 256, dsub)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), jnp.int32)
+    return q, cb, codes
+
+
+def oracle(q, cb, codes, k):
+    lut = ref.lut_ref(q, cb)
+    dists = ref.adc_scan_ref(codes, lut)
+    return ref.topk_ref(dists, k)
+
+
+def test_chamvs_scan_matches_oracle():
+    q, cb, codes = setup(0)
+    n_valid = jnp.asarray([codes.shape[0]], jnp.int32)
+    vals, idxs = pq.chamvs_scan(q, cb, codes, n_valid, k=100)
+    ovals, oidxs = oracle(q, cb, codes, 100)
+    overlap = np.isin(np.asarray(idxs), np.asarray(oidxs)).mean()
+    assert overlap >= 0.98, overlap
+    np.testing.assert_allclose(
+        np.sort(np.asarray(vals)), np.asarray(vals), rtol=1e-6
+    )  # ascending
+
+
+def test_padding_never_wins():
+    # Mark only the first 100 codes valid; padded rows must never appear.
+    q, cb, codes = setup(1, n=1024)
+    n_valid = jnp.asarray([100], jnp.int32)
+    vals, idxs = pq.chamvs_scan(q, cb, codes, n_valid, k=50)
+    assert int(jnp.max(idxs)) < 100
+    # And results equal the oracle restricted to the valid prefix.
+    ovals, oidxs = oracle(q, cb, codes[:100], 50)
+    overlap = np.isin(np.asarray(idxs), np.asarray(oidxs)).mean()
+    assert overlap >= 0.95, overlap
+
+
+def test_batch_variant_consistent():
+    q, cb, codes = setup(2, n=512)
+    qs = jnp.stack([q, q * 0.5])
+    codes_b = jnp.stack([codes, codes])
+    nv = jnp.asarray([[512], [512]], jnp.int32)
+    vals, idxs = pq.chamvs_scan_batch(qs, cb, codes_b, nv, k=10)
+    v0, i0 = pq.chamvs_scan(q, cb, codes, jnp.asarray([512], jnp.int32), k=10)
+    np.testing.assert_allclose(np.asarray(vals[0]), np.asarray(v0), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idxs[0]), np.asarray(i0))
+
+
+def test_distances_nonnegative():
+    q, cb, codes = setup(3, n=512)
+    vals, _ = pq.chamvs_scan(q, cb, codes, jnp.asarray([512], jnp.int32), k=20)
+    assert bool(jnp.all(vals >= 0.0))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,63 @@
+//! `chamvs-node` — a standalone ChamVS disaggregated memory-node server.
+//!
+//! The coordinator and the nodes agree on (dataset, n, seed, node-id,
+//! n-nodes), so each process deterministically rebuilds its shard; in the
+//! paper the coordinator ships the shard into the node's DRAM at init
+//! time, which here would move the same bytes over localhost.
+//!
+//! Usage:
+//!   chamvs-node --dataset SIFT --n 20000 --node-id 0 --nodes 2 [--k 100]
+//! Prints `LISTENING <addr>` once ready; the coordinator (see
+//! examples/disaggregated.rs) connects to that address.
+
+use anyhow::Result;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::net::server::NodeServer;
+use chameleon::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("chamvs-node error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 20_000);
+    let node_id = args.get_usize("node-id", 0);
+    let n_nodes = args.get_usize("nodes", 1);
+    let k = args.get_usize("k", 100);
+    let seed = args.get_u64("seed", 42);
+
+    eprintln!(
+        "[chamvs-node {node_id}/{n_nodes}] building shard ({} n={n})",
+        ds.name
+    );
+    let data = SyntheticDataset::generate_sized(ds, n, 16, seed);
+    let nlist = (n as f64).sqrt() as usize;
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
+    let codebook = index.pq.centroids.clone();
+
+    let server = NodeServer::spawn_with(
+        move || {
+            let shard = Shard::carve(&index, node_id, n_nodes);
+            MemoryNode::new(shard, ScanEngine::Native, k)
+        },
+        codebook,
+        ds.nprobe,
+    )?;
+    println!("LISTENING {}", server.addr);
+    eprintln!("[chamvs-node {node_id}] serving on {}", server.addr);
+    // Park the main thread; the server shuts down on a Shutdown frame,
+    // which drops through process exit via Ctrl-C or coordinator signal.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

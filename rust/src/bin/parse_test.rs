@@ -1,0 +1,27 @@
+// Debug utility: parse / compile / execute an artifact step by step.
+use chameleon::runtime::{HostTensor, Runtime};
+
+fn run() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "decode_dec_tiny_b1".into());
+    let stage = std::env::args().nth(2).unwrap_or_else(|| "exec".into());
+    let rt = Runtime::new("artifacts")?;
+    let spec = rt.manifest.get(&name)?.clone();
+    eprintln!("parse+spec OK: {} inputs {} outputs", spec.inputs.len(), spec.outputs.len());
+    if stage == "parse" { return Ok(()); }
+    let exe = rt.executor(&name, 7)?;
+    eprintln!("compile+params OK ({} params)", exe.n_params());
+    if stage == "compile" { return Ok(()); }
+    let args: Vec<HostTensor> = spec.args().map(HostTensor::zeros).collect();
+    eprintln!("calling with {} zero args ...", args.len());
+    let outs = exe.call(&args)?;
+    eprintln!("exec OK: {} outputs, out0 len {}", outs.len(), outs[0].len());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    std::thread::Builder::new()
+        .stack_size(512 << 20)
+        .spawn(run)?
+        .join()
+        .unwrap()
+}

@@ -1,0 +1,25 @@
+// §Perf A/B harness: unblocked vs L1-blocked m=64 ADC scan, clean core.
+use chameleon::pq::scan::{adc_scan_into, scan_unrolled_m64_unblocked};
+use chameleon::util::rng::Rng;
+use chameleon::util::timer::sample;
+use chameleon::util::stats::Summary;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let (n, m) = (60_000usize, 64usize);
+    let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+    let lut: Vec<f32> = (0..m * 256).map(|_| rng.f32()).collect();
+    let mut out = vec![0.0f32; n];
+    let bytes = (n * m) as f64;
+    let a = Summary::of(&sample(5, 30, || {
+        scan_unrolled_m64_unblocked(&codes, n, &lut, &mut out);
+        out[0]
+    }));
+    let b = Summary::of(&sample(5, 30, || {
+        adc_scan_into(&codes, n, m, &lut, &mut out);
+        out[0]
+    }));
+    println!("m64 unblocked: p50={:.3}ms  {:.2} GB/s/core", a.p50*1e3, bytes/a.p50/1e9);
+    println!("m64 blocked:   p50={:.3}ms  {:.2} GB/s/core", b.p50*1e3, bytes/b.p50/1e9);
+    println!("speedup: {:.2}x", a.p50 / b.p50);
+}

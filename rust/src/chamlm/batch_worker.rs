@@ -1,0 +1,122 @@
+//! Batched decode worker: drives the vmapped `decode_*_b{B}` artifact —
+//! one PJRT call advances B sequences one token (the Fig 12 throughput
+//! configuration, where batching amortizes the weight traffic).
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::{Executor, HostTensor, Runtime};
+
+/// B sequences stepped in lockstep through one batched artifact.
+pub struct BatchWorker {
+    pub model: &'static ModelConfig,
+    pub batch: usize,
+    decode: Executor,
+    kv: Option<HostTensor>,
+    pub knn_k: usize,
+    pub steps: u64,
+}
+
+/// One batched step's host outputs.
+pub struct BatchStepOutput {
+    /// (B, vocab) row-major probabilities.
+    pub probs: Vec<f32>,
+    /// (B, dim) row-major retrieval queries.
+    pub query_vecs: Vec<f32>,
+    pub vocab: usize,
+    pub dim: usize,
+}
+
+impl BatchStepOutput {
+    pub fn probs_of(&self, b: usize) -> &[f32] {
+        &self.probs[b * self.vocab..(b + 1) * self.vocab]
+    }
+
+    pub fn query_of(&self, b: usize) -> &[f32] {
+        &self.query_vecs[b * self.dim..(b + 1) * self.dim]
+    }
+}
+
+impl BatchWorker {
+    /// Load `decode_<model>_b<batch>` (must exist in the manifest).
+    pub fn new(
+        runtime: &Runtime,
+        model: &'static ModelConfig,
+        batch: usize,
+        seed: u64,
+    ) -> Result<BatchWorker> {
+        let name = format!("decode_{}_b{batch}", model.name);
+        let decode = runtime
+            .executor(&name, seed)
+            .with_context(|| format!("loading batched artifact {name}"))?;
+        let knn_k = decode.spec.static_usize("knn_k").unwrap_or(model.k);
+        Ok(BatchWorker { model, batch, decode, kv: None, knn_k, steps: 0 })
+    }
+
+    pub fn reset(&mut self) {
+        self.kv = None;
+        self.steps = 0;
+    }
+
+    /// Advance all B sequences one token.
+    ///
+    /// `tokens`: B current tokens. `retrieved`: per-sequence (ids, dists)
+    /// payloads (empty slices allowed).
+    pub fn step(
+        &mut self,
+        tokens: &[u32],
+        retrieved: &[(Vec<u32>, Vec<f32>)],
+    ) -> Result<BatchStepOutput> {
+        let b = self.batch;
+        anyhow::ensure!(tokens.len() == b, "expected {b} tokens");
+        anyhow::ensure!(retrieved.len() == b, "expected {b} payloads");
+        let pos = self.steps as i32;
+        anyhow::ensure!((pos as usize) < self.model.max_seq, "sequence overflow");
+
+        let kv = match self.kv.take() {
+            Some(t) => t,
+            None => {
+                let shape = self
+                    .decode
+                    .spec
+                    .args()
+                    .find(|a| a.name == "kv_cache")
+                    .context("missing kv_cache input")?
+                    .shape
+                    .clone();
+                HostTensor::F32 {
+                    shape: shape.clone(),
+                    data: vec![0.0; shape.iter().product()],
+                }
+            }
+        };
+        let k = self.knn_k;
+        let mut rt = vec![0i32; b * k];
+        let mut rd = vec![1e4f32; b * k];
+        for (s, (ids, dists)) in retrieved.iter().enumerate() {
+            for i in 0..k.min(ids.len()) {
+                rt[s * k + i] = ids[i] as i32;
+                rd[s * k + i] = dists.get(i).copied().unwrap_or(1e4);
+            }
+        }
+        let args = vec![
+            HostTensor::i32(&[b, 1], tokens.iter().map(|&t| t as i32).collect()),
+            HostTensor::i32(&[b, 1], vec![pos; b]),
+            kv,
+            HostTensor::i32(&[b, k], rt),
+            HostTensor::f32(&[b, k], rd),
+        ];
+        let mut outs = self.decode.call(&args)?;
+        anyhow::ensure!(outs.len() == 3, "decode expects 3 outputs");
+        self.kv = Some(outs.pop().unwrap());
+        let query_vecs = outs.pop().unwrap().as_f32()?.to_vec();
+        let probs = outs.pop().unwrap().as_f32()?.to_vec();
+        self.steps += 1;
+        Ok(BatchStepOutput {
+            probs,
+            query_vecs,
+            vocab: self.model.vocab,
+            dim: self.model.dim,
+        })
+    }
+}

@@ -1,0 +1,21 @@
+//! ChamLM: the multi-accelerator LLM inference engine (paper Sec 3/5).
+//!
+//! Each [`worker::GpuWorker`] owns one compiled decode artifact (the
+//! stand-in for one GPU process) with parameters and KV cache resident as
+//! PJRT buffers; [`generator::Generator`] drives token generation with
+//! retrieval at the model's interval, and [`pool::WorkerPool`] fans
+//! requests across workers like the paper's per-GPU processes.
+
+pub mod batch_worker;
+pub mod generator;
+pub mod pool;
+pub mod sampler;
+pub mod scheduler;
+pub mod worker;
+
+pub use batch_worker::BatchWorker;
+
+pub use generator::{GenerationStats, Generator};
+pub use pool::WorkerPool;
+pub use scheduler::{ContinuousScheduler, Request};
+pub use worker::GpuWorker;

@@ -1,0 +1,104 @@
+//! Token sampling over the decode artifact's probability output.
+
+use crate::util::rng::Rng;
+
+/// Sampling policy for the next token.
+#[derive(Clone, Copy, Debug)]
+pub enum Sampler {
+    /// Argmax decoding.
+    Greedy,
+    /// Temperature sampling (1.0 = raw distribution).
+    Temperature(f32),
+    /// Top-k truncation + temperature.
+    TopK(usize, f32),
+}
+
+impl Sampler {
+    /// Draw a token id from `probs` (already a normalized distribution —
+    /// the decode artifact outputs post-interpolation probabilities).
+    pub fn sample(&self, probs: &[f32], rng: &mut Rng) -> u32 {
+        match *self {
+            Sampler::Greedy => argmax(probs),
+            Sampler::Temperature(t) => {
+                if t <= 1e-4 {
+                    return argmax(probs);
+                }
+                let weights: Vec<f64> =
+                    probs.iter().map(|&p| (p.max(1e-30) as f64).powf(1.0 / t as f64)).collect();
+                draw(&weights, rng)
+            }
+            Sampler::TopK(k, t) => {
+                let mut idx: Vec<usize> = (0..probs.len()).collect();
+                idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+                idx.truncate(k.max(1));
+                let weights: Vec<f64> = idx
+                    .iter()
+                    .map(|&i| (probs[i].max(1e-30) as f64).powf(1.0 / t.max(1e-4) as f64))
+                    .collect();
+                idx[draw(&weights, rng) as usize] as u32
+            }
+        }
+    }
+}
+
+fn argmax(probs: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &p) in probs.iter().enumerate() {
+        if p > probs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+fn draw(weights: &[f64], rng: &mut Rng) -> u32 {
+    let total: f64 = weights.iter().sum();
+    let mut target = rng.f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        target -= w;
+        if target <= 0.0 {
+            return i as u32;
+        }
+    }
+    (weights.len() - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let probs = [0.1, 0.6, 0.3];
+        let mut rng = Rng::new(1);
+        assert_eq!(Sampler::Greedy.sample(&probs, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_zero_is_greedy() {
+        let probs = [0.2, 0.1, 0.7];
+        let mut rng = Rng::new(2);
+        assert_eq!(Sampler::Temperature(0.0).sample(&probs, &mut rng), 2);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let probs = [0.9, 0.1];
+        let mut rng = Rng::new(3);
+        let s = Sampler::Temperature(1.0);
+        let n = 10_000;
+        let ones =
+            (0..n).filter(|_| s.sample(&probs, &mut rng) == 1).count() as f64 / n as f64;
+        assert!((ones - 0.1).abs() < 0.02, "{ones}");
+    }
+
+    #[test]
+    fn topk_excludes_tail() {
+        let probs = [0.5, 0.3, 0.2];
+        let mut rng = Rng::new(4);
+        let s = Sampler::TopK(2, 1.0);
+        for _ in 0..200 {
+            assert_ne!(s.sample(&probs, &mut rng), 2);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! A ChamLM worker: the rust stand-in for one of the paper's GPU
+//! processes. Owns a compiled decode artifact, its parameters and the KV
+//! cache as device-resident PJRT buffers, and steps one token at a time.
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::{Executor, HostTensor, Runtime};
+
+/// Decode-step output on the host.
+pub struct StepOutput {
+    /// Post-interpolation next-token distribution (vocab,).
+    pub probs: Vec<f32>,
+    /// The retrieval query vector for the next step (dim,).
+    pub query_vec: Vec<f32>,
+}
+
+/// One model replica driving an AOT decode artifact.
+///
+/// The KV cache round-trips through the host between steps: this
+/// xla_extension returns multi-output executables as one tuple buffer, so
+/// buffer-level state feedback is not available (see Executor::call). For
+/// the scaled models the copy is ~16 MB/step, well under the decode cost.
+pub struct GpuWorker {
+    pub id: usize,
+    pub model: &'static ModelConfig,
+    decode: Executor,
+    encode: Option<Executor>,
+    /// KV cache threaded through decode calls (host side).
+    kv: Option<HostTensor>,
+    /// Encoder output for cross-attention (EncDec models).
+    enc_out: Option<HostTensor>,
+    pub knn_k: usize,
+    pub vocab: usize,
+    pub steps: u64,
+}
+
+impl GpuWorker {
+    /// Create a worker for a model whose decode artifact exists.
+    pub fn new(
+        runtime: &Runtime,
+        model: &'static ModelConfig,
+        id: usize,
+        seed: u64,
+    ) -> Result<GpuWorker> {
+        let artifact = model
+            .artifact
+            .with_context(|| format!("model {} has no decode artifact", model.name))?;
+        let decode = runtime.executor(artifact, seed)?;
+        let knn_k = decode.spec.static_usize("knn_k").unwrap_or(model.k);
+        let vocab = decode.spec.static_usize("vocab").unwrap_or(model.vocab);
+        let encode = if model.is_encdec() {
+            Some(runtime.executor(&format!("encode_{}", model.name), seed)?)
+        } else {
+            None
+        };
+        Ok(GpuWorker {
+            id,
+            model,
+            decode,
+            encode,
+            kv: None,
+            enc_out: None,
+            knn_k,
+            vocab,
+            steps: 0,
+        })
+    }
+
+    /// Reset per-sequence state (KV cache re-zeroed lazily on next step).
+    pub fn reset(&mut self) {
+        self.kv = None;
+        self.enc_out = None;
+        self.steps = 0;
+    }
+
+    fn kv_meta_shape(&self) -> Vec<usize> {
+        // Inputs: params..., token, pos, kv_cache, rt, rd [, enc_out]
+        self.decode
+            .spec
+            .args()
+            .find(|a| a.name == "kv_cache")
+            .expect("decode artifact missing kv_cache input")
+            .shape
+            .to_vec()
+    }
+
+    /// Run the encoder over retrieved chunk tokens (EncDec only).
+    pub fn encode(&mut self, chunk_tokens: &[u32]) -> Result<()> {
+        let enc = self.encode.as_ref().context("not an encoder-decoder model")?;
+        let meta = enc.spec.args().next().unwrap().clone();
+        anyhow::ensure!(
+            chunk_tokens.len() == meta.element_count(),
+            "encoder expects {} tokens, got {}",
+            meta.element_count(),
+            chunk_tokens.len()
+        );
+        let toks: Vec<i32> = chunk_tokens.iter().map(|&t| t as i32).collect();
+        let outs = enc.call(&[HostTensor::i32(&meta.shape, toks)])?;
+        self.enc_out = Some(outs.into_iter().next().unwrap());
+        Ok(())
+    }
+
+    /// One decode step: feed the current token + retrieval payload, get
+    /// the next-token distribution and the next retrieval query.
+    ///
+    /// `retrieved`: (token ids, distances) of the K neighbors — for
+    /// decoder-only models this is the kNN-LM payload; EncDec models
+    /// ignore it (pass empty) and consume `enc_out` set via [`encode`].
+    pub fn step(
+        &mut self,
+        token: u32,
+        retrieved: (&[u32], &[f32]),
+    ) -> Result<StepOutput> {
+        let pos = self.steps as i32;
+        let max_seq = self.model.max_seq as i32;
+        anyhow::ensure!(pos < max_seq, "sequence exceeds max_seq {max_seq}");
+
+        // Assemble args in manifest order: token, pos, kv, then enc_out
+        // (EncDec) or the kNN payload rt, rd (decoder-only).
+        let kv = match self.kv.take() {
+            Some(t) => t,
+            None => {
+                let shape = self.kv_meta_shape();
+                HostTensor::F32 {
+                    shape: shape.clone(),
+                    data: vec![0.0; shape.iter().product()],
+                }
+            }
+        };
+        let mut args = vec![
+            HostTensor::i32(&[1], vec![token as i32]),
+            HostTensor::i32(&[1], vec![pos]),
+            kv,
+        ];
+        if self.model.is_encdec() {
+            let enc = self
+                .enc_out
+                .as_ref()
+                .context("EncDec worker stepped before encode()")?;
+            args.push(enc.clone());
+        } else {
+            let (rt, rd) = self.retrieval_payload(retrieved);
+            args.push(rt);
+            args.push(rd);
+        }
+
+        let mut outs = self.decode.call(&args)?;
+        // Outputs: probs, query_vec, new_kv.
+        anyhow::ensure!(outs.len() == 3, "decode expects 3 outputs");
+        self.kv = Some(outs.pop().unwrap());
+        let query_vec = outs.pop().unwrap().as_f32()?.to_vec();
+        let probs = outs.pop().unwrap().as_f32()?.to_vec();
+        self.steps += 1;
+        Ok(StepOutput { probs, query_vec })
+    }
+
+    fn retrieval_payload(&self, retrieved: (&[u32], &[f32])) -> (HostTensor, HostTensor) {
+        let (ids, dists) = retrieved;
+        let k = self.knn_k;
+        // Missing neighbors get the model's clip ceiling (1e4): far enough
+        // for ~zero weight, small enough to stay finite through softmax.
+        let mut rt = vec![0i32; k];
+        let mut rd = vec![1e4f32; k];
+        for i in 0..k.min(ids.len()) {
+            rt[i] = ids[i] as i32;
+            rd[i] = dists.get(i).copied().unwrap_or(1e4);
+        }
+        (HostTensor::i32(&[k], rt), HostTensor::f32(&[k], rd))
+    }
+
+    /// Expected retrieved-chunk token count for encode() (EncDec).
+    pub fn enc_tokens(&self) -> usize {
+        self.encode
+            .as_ref()
+            .map(|e| e.spec.args().next().unwrap().element_count())
+            .unwrap_or(0)
+    }
+
+    /// Sanity check a probability vector (used by integration tests).
+    pub fn check_probs(probs: &[f32]) -> bool {
+        let sum: f32 = probs.iter().sum();
+        probs.iter().all(|p| p.is_finite() && *p >= -1e-6) && (sum - 1.0).abs() < 1e-2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_probs_rejects_garbage() {
+        assert!(GpuWorker::check_probs(&[0.5, 0.5]));
+        assert!(!GpuWorker::check_probs(&[f32::NAN, 1.0]));
+        assert!(!GpuWorker::check_probs(&[0.9, 0.9]));
+    }
+}

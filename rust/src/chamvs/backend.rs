@@ -1,0 +1,274 @@
+//! The four vector-search system configurations of Fig 9:
+//! CPU (monolithic), CPU-GPU (GPU index scan, CPU PQ scan), FPGA-CPU
+//! (CPU index scan, FPGA PQ scan over the network), FPGA-GPU (GPU index
+//! scan, FPGA PQ scan — the ChamVS design point).
+//!
+//! Numerics always run for real (native rust or PJRT artifacts); the
+//! *latency* of each hardware stage comes from the hwmodel module,
+//! composed per configuration exactly as the paper composes its systems.
+
+use anyhow::Result;
+
+use super::dispatcher::{Dispatcher, SearchResult};
+use crate::config::DatasetConfig;
+use crate::hwmodel::{CpuModel, GpuModel};
+use crate::ivf::index::IvfPqIndex;
+
+/// Which Fig 9 system configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Cpu,
+    CpuGpu,
+    FpgaCpu,
+    FpgaGpu,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 4] =
+        [BackendKind::Cpu, BackendKind::CpuGpu, BackendKind::FpgaCpu, BackendKind::FpgaGpu];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "CPU",
+            BackendKind::CpuGpu => "CPU-GPU",
+            BackendKind::FpgaCpu => "FPGA-CPU",
+            BackendKind::FpgaGpu => "FPGA-GPU",
+        }
+    }
+
+    pub fn uses_fpga_scan(&self) -> bool {
+        matches!(self, BackendKind::FpgaCpu | BackendKind::FpgaGpu)
+    }
+
+    pub fn uses_gpu_index(&self) -> bool {
+        matches!(self, BackendKind::CpuGpu | BackendKind::FpgaGpu)
+    }
+}
+
+/// Per-query latency decomposition for one backend (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyBreakdown {
+    pub index_scan_s: f64,
+    pub lut_s: f64,
+    pub pq_scan_s: f64,
+    pub network_s: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.index_scan_s + self.lut_s + self.pq_scan_s + self.network_s
+    }
+}
+
+/// A runnable vector-search system in one of the Fig 9 configurations.
+pub struct SearchBackend {
+    pub kind: BackendKind,
+    pub ds: &'static DatasetConfig,
+    pub cpu: CpuModel,
+    pub gpu: GpuModel,
+    /// Execution engine: dispatcher over the (possibly single-node)
+    /// memory-node set. Backends without FPGAs still execute through it —
+    /// only the latency attribution differs.
+    pub dispatcher: Dispatcher,
+    /// Scale factor from our scaled dataset to paper-scale latencies:
+    /// modeled stages use paper-scale vector counts directly.
+    pub paper_scale: bool,
+}
+
+impl SearchBackend {
+    pub fn new(
+        kind: BackendKind,
+        ds: &'static DatasetConfig,
+        dispatcher: Dispatcher,
+        paper_scale: bool,
+    ) -> SearchBackend {
+        SearchBackend {
+            kind,
+            ds,
+            cpu: CpuModel::default(),
+            gpu: GpuModel::default(),
+            dispatcher,
+            paper_scale,
+        }
+    }
+
+    fn nlist(&self) -> usize {
+        if self.paper_scale {
+            self.ds.nlist_paper
+        } else {
+            self.ds.nlist_scaled
+        }
+    }
+
+    /// Run one query end-to-end: real numerics via the dispatcher, latency
+    /// composed from the stage models for this backend.
+    ///
+    /// With `paper_scale`, the query's scanned-code count is projected to
+    /// paper scale by *relative probe mass*: this query's scan size vs the
+    /// scaled index's expected size, times the paper's expected size —
+    /// preserving per-query variation (the Fig 9 violin spread) across
+    /// the scale change.
+    pub fn search(
+        &mut self,
+        index: &IvfPqIndex,
+        query: &[f32],
+        k: usize,
+    ) -> Result<(SearchResult, LatencyBreakdown)> {
+        let nprobe = self.ds.nprobe;
+        let lists = index.probe(query, nprobe);
+        let result =
+            self.dispatcher.search(query, &index.pq.centroids, &lists, nprobe)?;
+        let _ = k;
+        let n_codes = if self.paper_scale {
+            let expected =
+                index.len() as f64 * nprobe as f64 / index.nlist as f64;
+            let rel = result.n_scanned as f64 / expected.max(1.0);
+            (rel * self.ds.n_paper as f64 * nprobe as f64
+                / self.ds.nlist_paper as f64) as usize
+        } else {
+            result.n_scanned
+        };
+        let lat = self.latency_model(n_codes);
+        Ok((result, lat))
+    }
+
+    /// Latency model for a query scanning `n_codes` PQ codes (already at
+    /// the modeled scale).
+    pub fn latency_model(&self, n_codes: usize) -> LatencyBreakdown {
+        let ds = self.ds;
+        let nlist = self.nlist();
+        let n_nodes = self.dispatcher.nodes.len().max(1);
+        let mut lat = LatencyBreakdown::default();
+
+        // Stage 1: IVF index scan.
+        lat.index_scan_s = if self.kind.uses_gpu_index() {
+            self.gpu.index_scan_latency(nlist, ds.d, 1)
+        } else {
+            self.cpu.index_scan_latency(nlist, ds.d)
+        };
+
+        // Stage 2+3: LUT construction + PQ scan.
+        if self.kind.uses_fpga_scan() {
+            let fpga = &self.dispatcher.nodes[0].fpga;
+            let per_node = n_codes / n_nodes;
+            let s = fpga.query_latency(per_node, ds.m, ds.nprobe, self.dispatcher.k);
+            lat.lut_s = s.lut_s;
+            lat.pq_scan_s = s.scan_s + s.kselect_drain_s;
+            // Stage 4: network (disaggregated backends only).
+            let query_bytes = 4 * ds.d + 4 * ds.nprobe;
+            lat.network_s = self
+                .dispatcher
+                .net
+                .query_roundtrip(n_nodes, query_bytes, 12 * self.dispatcher.k);
+        } else {
+            lat.lut_s = self.cpu.lut_latency(ds.m, ds.dsub(), ds.nprobe);
+            lat.pq_scan_s = self.cpu.scan_latency(n_codes, ds.m);
+            lat.network_s = 0.0; // monolithic server
+        }
+        lat
+    }
+
+    /// Batched-query latency (batch members pipeline through each stage).
+    pub fn batch_latency_model(&self, b: usize, n_codes: usize) -> f64 {
+        let one = self.latency_model(n_codes);
+        if self.kind.uses_fpga_scan() {
+            // Accelerator pipelines queries; stages overlap.
+            one.network_s
+                + one.index_scan_s
+                + one.lut_s
+                + b as f64 * one.pq_scan_s.max(one.lut_s)
+        } else {
+            // CPU batch model (limited intra-query parallelism; see
+            // CpuModel::query_latency). GPU-index variants still pay the
+            // scan on CPU, so the same model applies with the index stage
+            // swapped.
+            let ds = self.ds;
+            let scan_and_lut = self.cpu.query_latency(
+                b,
+                n_codes,
+                ds.m,
+                ds.dsub(),
+                self.nlist(),
+                ds.nprobe,
+            ) - self.cpu.index_scan_latency(self.nlist(), ds.d)
+                * (b as f64 / self.cpu.n_cores as f64).ceil();
+            let idx = if self.kind.uses_gpu_index() {
+                self.gpu.index_scan_latency(self.nlist(), ds.d, b)
+            } else {
+                self.cpu.index_scan_latency(self.nlist(), ds.d)
+                    * (b as f64 / self.cpu.n_cores as f64).ceil()
+            };
+            idx + scan_and_lut
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chamvs::node::{MemoryNode, ScanEngine};
+    use crate::config::SIFT;
+    use crate::ivf::shard::Shard;
+    use crate::util::rng::Rng;
+
+    fn toy_backend(kind: BackendKind) -> (SearchBackend, IvfPqIndex, usize) {
+        let mut rng = Rng::new(1);
+        let (n, d, m, nlist) = (2000, 128, 16, 32);
+        let data = rng.normal_vec(n * d);
+        let idx = IvfPqIndex::build(&data, n, d, m, nlist, 3);
+        let nodes =
+            vec![MemoryNode::new(Shard::carve(&idx, 0, 1), ScanEngine::Native, 10)];
+        let disp = Dispatcher::new(nodes, 10);
+        (SearchBackend::new(kind, &SIFT, disp, true), idx, d)
+    }
+
+    #[test]
+    fn fig9_ordering_fpga_gpu_fastest() {
+        // Paper-scale modeled latencies must order: FPGA-GPU < FPGA-CPU
+        // < CPU, and CPU-GPU ~ CPU (scan-dominated).
+        let scanned = 1_000_000;
+        let lat = |kind| {
+            let (b, _, _) = toy_backend(kind);
+            b.latency_model(scanned).total()
+        };
+        let cpu = lat(BackendKind::Cpu);
+        let cpu_gpu = lat(BackendKind::CpuGpu);
+        let fpga_cpu = lat(BackendKind::FpgaCpu);
+        let fpga_gpu = lat(BackendKind::FpgaGpu);
+        assert!(fpga_gpu < fpga_cpu, "{fpga_gpu} vs {fpga_cpu}");
+        assert!(fpga_cpu < cpu, "{fpga_cpu} vs {cpu}");
+        assert!(cpu_gpu < cpu * 1.05, "{cpu_gpu} vs {cpu}");
+        // Speedup bands of Fig 9 at SIFT scale.
+        let speedup = cpu / fpga_gpu;
+        assert!(speedup > 2.0 && speedup < 30.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn search_returns_numerics_and_latency() {
+        let (mut b, idx, d) = toy_backend(BackendKind::FpgaGpu);
+        let mut rng = Rng::new(5);
+        let q = rng.normal_vec(d);
+        let (res, lat) = b.search(&idx, &q, 10).unwrap();
+        assert_eq!(res.topk.len(), 10);
+        assert!(lat.total() > 0.0);
+        assert!(lat.network_s > 0.0);
+    }
+
+    #[test]
+    fn cpu_backend_has_no_network() {
+        let (b, _, _) = toy_backend(BackendKind::Cpu);
+        assert_eq!(b.latency_model(1000).network_s, 0.0);
+    }
+
+    #[test]
+    fn batching_amortizes_on_fpga_more_than_cpu() {
+        let scanned = 1_000_000;
+        let (f, _, _) = toy_backend(BackendKind::FpgaGpu);
+        let (c, _, _) = toy_backend(BackendKind::Cpu);
+        let f_gain = f.batch_latency_model(16, scanned)
+            / (16.0 * f.latency_model(scanned).total());
+        let c_gain = c.batch_latency_model(16, scanned)
+            / (16.0 * c.latency_model(scanned).total());
+        assert!(f_gain < c_gain, "{f_gain} vs {c_gain}");
+    }
+}

@@ -1,0 +1,18 @@
+//! ChamVS: the distributed, accelerated vector search engine
+//! (paper Sec 3-4).
+//!
+//! * [`node`] — a disaggregated memory node: a vector-sharded slice of the
+//!   database plus a near-memory scan engine (native rust ADC or the
+//!   AOT-compiled Pallas pipeline via PJRT).
+//! * [`dispatcher`] — query broadcast + per-node top-K aggregation
+//!   (the coordinator-side half of the workflow, steps 4-8 of Sec 3).
+//! * [`backend`] — the four system configurations of Fig 9
+//!   (CPU, CPU-GPU, FPGA-CPU, FPGA-GPU) with composed latency models.
+
+pub mod backend;
+pub mod dispatcher;
+pub mod node;
+
+pub use backend::{BackendKind, SearchBackend};
+pub use dispatcher::{Dispatcher, SearchResult};
+pub use node::{MemoryNode, NodeResult, ScanEngine};

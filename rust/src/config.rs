@@ -1,0 +1,334 @@
+//! Configuration system: the model zoo (paper Table 2), dataset zoo
+//! (paper Table 3), and system topology.
+//!
+//! Each paper-scale config carries a *scaled* execution counterpart so the
+//! whole stack runs for real on this testbed (PJRT CPU client, no
+//! FPGAs/GPUs), while the `hwmodel` module projects paper-scale numbers.
+
+use crate::util::json::{obj, Json};
+
+/// A RALM model configuration (paper Table 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub enc_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    /// Retrieval interval in tokens (1 = retrieve every step).
+    pub interval: usize,
+    /// Neighbors fetched per retrieval.
+    pub k: usize,
+    /// Which AOT decode artifact executes this model (scaled variants only;
+    /// paper-scale models are projected via hwmodel).
+    pub artifact: Option<&'static str>,
+}
+
+impl ModelConfig {
+    pub const fn is_encdec(&self) -> bool {
+        self.enc_layers > 0
+    }
+
+    /// Analytic parameter count, mirroring python `ModelConfig.param_count`.
+    /// Encoder-decoder models carry a separate encoder embedding table
+    /// (with it, EncDec-L lands exactly on Table 2's 1738M).
+    pub fn param_count(&self) -> usize {
+        let (d, v) = (self.dim, self.vocab);
+        let ffn = 4 * d;
+        let cross = if self.is_encdec() { 4 * d * d } else { 0 };
+        let per_dec = 4 * d * d + 2 * d * ffn + cross;
+        let per_enc = 4 * d * d + 2 * d * ffn;
+        let enc_embed = if self.is_encdec() { v * d } else { 0 };
+        v * d
+            + enc_embed
+            + self.max_seq * d
+            + self.n_layers * per_dec
+            + self.enc_layers * per_enc
+    }
+
+    /// FLOPs for one decode step (used by the GPU/TPU cost models).
+    pub fn decode_flops(&self) -> f64 {
+        let d = self.dim as f64;
+        let ffn = 4.0 * d;
+        let cross = if self.is_encdec() { 4.0 * d * d } else { 0.0 };
+        let per_layer = 2.0 * (4.0 * d * d + cross + 2.0 * d * ffn);
+        self.n_layers as f64 * per_layer + 2.0 * self.vocab as f64 * d
+    }
+
+    /// FLOPs for one encoder pass over the retrieved chunks (EncDec only).
+    pub fn encode_flops(&self) -> f64 {
+        if !self.is_encdec() {
+            return 0.0;
+        }
+        let d = self.dim as f64;
+        let s = (self.k * CHUNK_LEN) as f64;
+        let ffn = 4.0 * d;
+        let per_layer = 2.0 * s * (4.0 * d * d + 2.0 * d * ffn) + 2.0 * s * s * d;
+        self.enc_layers as f64 * per_layer
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.into())),
+            ("dim", Json::Num(self.dim as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("params", Json::Num(self.param_count() as f64)),
+            ("interval", Json::Num(self.interval as f64)),
+            ("k", Json::Num(self.k as f64)),
+        ])
+    }
+}
+
+/// Tokens per retrieved chunk for encoder-decoder models.
+pub const CHUNK_LEN: usize = 8;
+
+/// Paper Table 2: Dec-S (101M, interval 1, K=100).
+pub const DEC_S: ModelConfig = ModelConfig {
+    name: "dec_s",
+    dim: 512,
+    n_layers: 24,
+    enc_layers: 0,
+    n_heads: 8,
+    vocab: 50_000,
+    max_seq: 512,
+    interval: 1,
+    k: 100,
+    artifact: None,
+};
+
+/// Paper Table 2: Dec-L (1259M, interval 1, K=100).
+pub const DEC_L: ModelConfig = ModelConfig {
+    name: "dec_l",
+    dim: 1024,
+    n_layers: 96,
+    enc_layers: 0,
+    n_heads: 16,
+    vocab: 50_000,
+    max_seq: 512,
+    interval: 1,
+    k: 100,
+    artifact: None,
+};
+
+/// Paper Table 2: EncDec-S (158M, interval 8/64/512, K=10).
+pub const ENCDEC_S: ModelConfig = ModelConfig {
+    name: "encdec_s",
+    dim: 512,
+    n_layers: 24,
+    enc_layers: 2,
+    n_heads: 8,
+    vocab: 50_000,
+    max_seq: 512,
+    interval: 8,
+    k: 10,
+    artifact: None,
+};
+
+/// Paper Table 2: EncDec-L (1738M, interval 8/64/512, K=10).
+pub const ENCDEC_L: ModelConfig = ModelConfig {
+    name: "encdec_l",
+    dim: 1024,
+    n_layers: 96,
+    enc_layers: 2,
+    n_heads: 16,
+    vocab: 50_000,
+    max_seq: 512,
+    interval: 8,
+    k: 10,
+    artifact: None,
+};
+
+/// Scaled decoder that actually executes on the PJRT CPU client.
+pub const DEC_TINY: ModelConfig = ModelConfig {
+    name: "dec_tiny",
+    dim: 128,
+    n_layers: 4,
+    enc_layers: 0,
+    n_heads: 4,
+    vocab: 2048,
+    max_seq: 512,
+    interval: 1,
+    k: 10,
+    artifact: Some("decode_dec_tiny_b1"),
+};
+
+/// Scaled encoder-decoder executing on the PJRT CPU client.
+pub const ENCDEC_TINY: ModelConfig = ModelConfig {
+    name: "encdec_tiny",
+    dim: 128,
+    n_layers: 4,
+    enc_layers: 2,
+    n_heads: 4,
+    vocab: 2048,
+    max_seq: 512,
+    interval: 8,
+    k: 4,
+    artifact: Some("decode_encdec_tiny_b1"),
+};
+
+pub const PAPER_MODELS: [&ModelConfig; 4] = [&DEC_S, &DEC_L, &ENCDEC_S, &ENCDEC_L];
+
+pub fn model_by_name(name: &str) -> Option<&'static ModelConfig> {
+    [&DEC_S, &DEC_L, &ENCDEC_S, &ENCDEC_L, &DEC_TINY, &ENCDEC_TINY]
+        .into_iter()
+        .find(|m| m.name == name)
+}
+
+/// A vector dataset configuration (paper Table 3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetConfig {
+    pub name: &'static str,
+    /// Paper-scale vector count (always 1e9 in Table 3).
+    pub n_paper: usize,
+    /// Scaled vector count actually generated on this testbed.
+    pub n_scaled: usize,
+    pub d: usize,
+    pub m: usize,
+    pub nlist_paper: usize,
+    pub nlist_scaled: usize,
+    pub nprobe: usize,
+}
+
+impl DatasetConfig {
+    pub const fn dsub(&self) -> usize {
+        self.d / self.m
+    }
+
+    /// Bytes of PQ codes + vector IDs at paper scale (Table 3 last row
+    /// counts 8-byte IDs alongside m-byte codes).
+    pub fn paper_bytes(&self) -> usize {
+        self.n_paper * (self.m + 8)
+    }
+
+    /// Bytes of PQ codes scanned per query at a given scale.
+    pub fn scan_bytes_per_query(&self, n: usize, nlist: usize) -> f64 {
+        // nprobe lists out of nlist, balanced lists.
+        n as f64 * self.nprobe as f64 / nlist as f64 * self.m as f64
+    }
+
+    /// Which chamvs_scan artifact serves this dataset's PQ width.
+    pub fn scan_artifact(&self) -> String {
+        format!("chamvs_scan_m{}", self.m)
+    }
+
+    pub fn ivf_artifact(&self, batch: usize) -> String {
+        format!("ivf_scan_d{}_b{}", self.d, batch)
+    }
+}
+
+/// SIFT1B: D=128, 16-byte PQ.
+pub const SIFT: DatasetConfig = DatasetConfig {
+    name: "SIFT",
+    n_paper: 1_000_000_000,
+    n_scaled: 200_000,
+    d: 128,
+    m: 16,
+    nlist_paper: 32_768,
+    nlist_scaled: 1024,
+    nprobe: 32,
+};
+
+/// Deep1B: D=96 in the paper; padded to 128 here so PQ sub-spaces stay
+/// 8-wide (the paper's own SYN datasets replicate SIFT the same way).
+pub const DEEP: DatasetConfig = DatasetConfig {
+    name: "Deep",
+    n_paper: 1_000_000_000,
+    n_scaled: 200_000,
+    d: 96,
+    m: 16,
+    nlist_paper: 32_768,
+    nlist_scaled: 1024,
+    nprobe: 32,
+};
+
+/// SYN-512: D=512, 32-byte PQ (RALM-dimensioned).
+pub const SYN512: DatasetConfig = DatasetConfig {
+    name: "SYN-512",
+    n_paper: 1_000_000_000,
+    n_scaled: 100_000,
+    d: 512,
+    m: 32,
+    nlist_paper: 32_768,
+    nlist_scaled: 1024,
+    nprobe: 32,
+};
+
+/// SYN-1024: D=1024, 64-byte PQ.
+pub const SYN1024: DatasetConfig = DatasetConfig {
+    name: "SYN-1024",
+    n_paper: 1_000_000_000,
+    n_scaled: 50_000,
+    d: 1024,
+    m: 64,
+    nlist_paper: 32_768,
+    nlist_scaled: 1024,
+    nprobe: 32,
+};
+
+pub const DATASETS: [&DatasetConfig; 4] = [&SIFT, &DEEP, &SYN512, &SYN1024];
+
+pub fn dataset_by_name(name: &str) -> Option<&'static DatasetConfig> {
+    DATASETS.into_iter().find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+/// System topology: how many of each accelerator, and where artifacts live.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub artifacts_dir: String,
+    pub n_memory_nodes: usize,
+    pub n_gpus: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            artifacts_dir: std::env::var("CHAMELEON_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".to_string()),
+            n_memory_nodes: 1,
+            n_gpus: 1,
+            k: 100,
+            seed: 0xC4A7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_table2() {
+        // Table 2: Dec-S 101M, Dec-L 1259M, EncDec-S 158M, EncDec-L 1738M.
+        assert!((DEC_S.param_count() as f64 / 101e6 - 1.0).abs() < 0.02);
+        assert!((DEC_L.param_count() as f64 / 1259e6 - 1.0).abs() < 0.02);
+        assert!((ENCDEC_S.param_count() as f64 / 158e6 - 1.0).abs() < 0.06);
+        assert!((ENCDEC_L.param_count() as f64 / 1738e6 - 1.0).abs() < 0.06);
+    }
+
+    #[test]
+    fn dataset_lookup() {
+        assert_eq!(dataset_by_name("sift").unwrap().m, 16);
+        assert_eq!(dataset_by_name("SYN-512").unwrap().d, 512);
+        assert!(dataset_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn table3_pq_bytes() {
+        // Table 3: PQ + vec ID = 24 GB for SIFT/Deep, 40 GB SYN-512, 72 GB SYN-1024.
+        assert_eq!(SIFT.paper_bytes(), 24_000_000_000);
+        assert_eq!(SYN512.paper_bytes(), 40_000_000_000);
+        assert_eq!(SYN1024.paper_bytes(), 72_000_000_000);
+    }
+
+    #[test]
+    fn decode_flops_positive_and_ordered() {
+        assert!(DEC_L.decode_flops() > DEC_S.decode_flops());
+        assert!(ENCDEC_S.encode_flops() > 0.0);
+        assert_eq!(DEC_S.encode_flops(), 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Dynamic request batcher: the coordinator groups retrieval requests
+//! arriving from GPU processes before broadcasting to the memory nodes
+//! (paper Sec 3; batching behaviour drives the Fig 9/12 batch sweeps).
+
+use std::time::{Duration, Instant};
+
+/// A pending request tagged with its source (paper: "records the
+/// association between queries and GPU IDs").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pending<T> {
+    pub source_gpu: usize,
+    pub payload: T,
+    pub arrived: Instant,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// ... or when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// A dynamic batcher accumulating requests until the policy fires.
+pub struct DynamicBatcher<T> {
+    pub policy: BatchPolicy,
+    queue: Vec<Pending<T>>,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        DynamicBatcher { policy, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, source_gpu: usize, payload: T) {
+        self.queue.push(Pending { source_gpu, payload, arrived: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether the policy says "dispatch now".
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        self.queue
+            .first()
+            .map(|p| now.duration_since(p.arrived) >= self.policy.max_wait)
+            .unwrap_or(false)
+    }
+
+    /// Take up to `max_batch` requests (FIFO).
+    pub fn take_batch(&mut self) -> Vec<Pending<T>> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_on_size() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10),
+        });
+        b.push(0, "a");
+        assert!(!b.ready(Instant::now()));
+        b.push(1, "b");
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn fires_on_timeout() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(0, 42u32);
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn fifo_order_and_partial_take() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_secs(1),
+        });
+        for i in 0..5 {
+            b.push(i, i);
+        }
+        let batch = b.take_batch();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: DynamicBatcher<u8> = DynamicBatcher::new(BatchPolicy::default());
+        assert!(!b.ready(Instant::now()));
+    }
+}

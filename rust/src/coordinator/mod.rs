@@ -1,0 +1,15 @@
+//! The CPU coordinator server (paper Sec 3): routes queries between the
+//! LLM side (ChamLM) and the retrieval side (ChamVS), converts retrieved
+//! vector IDs into tokens, batches requests, and hosts the end-to-end
+//! RALM engine used by the examples and benches.
+
+pub mod batcher;
+pub mod engine;
+pub mod ratio;
+pub mod retriever;
+pub mod server;
+
+pub use batcher::DynamicBatcher;
+pub use engine::RalmEngine;
+pub use retriever::{RetrievalResult, Retriever};
+pub use server::{CoordinatorClient, CoordinatorServer};

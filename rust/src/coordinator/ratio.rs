@@ -1,0 +1,132 @@
+//! The accelerator-ratio analysis of Fig 13: for each RALM configuration,
+//! how many GPUs does one ChamVS vector-search engine saturate?
+//!
+//! ratio = ChamVS throughput (queries/s) / per-GPU retrieval demand
+//! (queries/s). Demand = token throughput / retrieval interval. The paper
+//! reports ratios from 0.2 to 442, concluding that a monolithic
+//! fixed-ratio server cannot serve all configurations.
+
+use crate::config::{DatasetConfig, ModelConfig};
+use crate::hwmodel::fpga::FpgaModel;
+use crate::hwmodel::gpu::GpuModel;
+
+/// One Fig 13 row.
+#[derive(Clone, Debug)]
+pub struct RatioRow {
+    pub model: &'static str,
+    pub dataset: &'static str,
+    pub interval: usize,
+    pub batch: usize,
+    /// Tokens/s one GPU sustains at this batch.
+    pub gpu_tokens_per_s: f64,
+    /// Queries/s one ChamVS engine sustains.
+    pub chamvs_qps: f64,
+    /// GPUs needed to saturate the ChamVS engine.
+    pub gpus_per_chamvs: f64,
+}
+
+/// Compute the ratio for one (model, dataset, interval, batch) point.
+pub fn accelerator_ratio(
+    model: &'static ModelConfig,
+    ds: &'static DatasetConfig,
+    interval: usize,
+    batch: usize,
+    gpu: &GpuModel,
+    fpga: &FpgaModel,
+) -> RatioRow {
+    // GPU side: steady-state tokens/s for a batch of sequences, including
+    // the amortized retrieval-adjacent work that stays on the GPU
+    // (query generation + encoder passes for EncDec).
+    let decode_s = gpu.decode_step_latency(model, batch);
+    let encode_s = if model.is_encdec() {
+        gpu.encode_latency(model, batch) / interval as f64
+    } else {
+        0.0
+    };
+    let step_s = decode_s + encode_s;
+    let tokens_per_s = batch as f64 / step_s;
+    // Retrieval demand: every sequence retrieves once per `interval`.
+    let demand_qps = tokens_per_s / interval as f64;
+
+    // ChamVS side: pipelined scan throughput of one memory node.
+    let codes_per_query =
+        ds.n_paper as f64 * ds.nprobe as f64 / ds.nlist_paper as f64;
+    let scan_s = fpga
+        .query_latency(codes_per_query as usize, ds.m, ds.nprobe, model.k)
+        .scan_s;
+    let lut_s = fpga.query_latency(1, ds.m, ds.nprobe, model.k).lut_s;
+    let chamvs_qps = 1.0 / scan_s.max(lut_s);
+
+    RatioRow {
+        model: model.name,
+        dataset: ds.name,
+        interval,
+        batch,
+        gpu_tokens_per_s: tokens_per_s,
+        chamvs_qps,
+        gpus_per_chamvs: chamvs_qps / demand_qps,
+    }
+}
+
+/// The full Fig 13 sweep: every Table 2 model at its intervals, on its
+/// dataset, at the paper's latency/throughput batch sizes.
+pub fn fig13_sweep(gpu: &GpuModel, fpga: &FpgaModel) -> Vec<RatioRow> {
+    use crate::config::{DEC_L, DEC_S, ENCDEC_L, ENCDEC_S, SYN1024, SYN512};
+    let mut rows = Vec::new();
+    let cases: [(&'static ModelConfig, &'static DatasetConfig, &[usize], &[usize]); 4] = [
+        (&DEC_S, &SYN512, &[1], &[1, 64]),
+        (&DEC_L, &SYN1024, &[1], &[1, 8]),
+        (&ENCDEC_S, &SYN512, &[8, 64, 512], &[1, 64]),
+        (&ENCDEC_L, &SYN1024, &[8, 64, 512], &[1, 8]),
+    ];
+    for (model, ds, intervals, batches) in cases {
+        for &interval in intervals {
+            for &batch in batches {
+                rows.push(accelerator_ratio(model, ds, interval, batch, gpu, fpga));
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DEC_S, ENCDEC_L, SYN1024, SYN512};
+
+    #[test]
+    fn ratio_spans_orders_of_magnitude() {
+        // Fig 13: 0.2 .. 442 GPUs per ChamVS engine.
+        let (g, f) = (GpuModel::default(), FpgaModel::default());
+        let rows = fig13_sweep(&g, &f);
+        let min = rows.iter().map(|r| r.gpus_per_chamvs).fold(f64::MAX, f64::min);
+        let max = rows.iter().map(|r| r.gpus_per_chamvs).fold(0.0, f64::max);
+        assert!(min < 2.0, "min {min}");
+        assert!(max > 50.0, "max {max}");
+        assert!(max / min > 100.0, "span {min}..{max}");
+    }
+
+    #[test]
+    fn interval_1_small_model_needs_fractional_gpus() {
+        // Dec-S at interval 1, large batch: retrieval-bound => < a few
+        // GPUs saturate the search engine.
+        let (g, f) = (GpuModel::default(), FpgaModel::default());
+        let r = accelerator_ratio(&DEC_S, &SYN512, 1, 64, &g, &f);
+        assert!(r.gpus_per_chamvs < 5.0, "{}", r.gpus_per_chamvs);
+    }
+
+    #[test]
+    fn rare_retrieval_large_model_needs_many_gpus() {
+        let (g, f) = (GpuModel::default(), FpgaModel::default());
+        let r = accelerator_ratio(&ENCDEC_L, &SYN1024, 512, 1, &g, &f);
+        assert!(r.gpus_per_chamvs > 50.0, "{}", r.gpus_per_chamvs);
+    }
+
+    #[test]
+    fn demand_decreases_with_interval() {
+        let (g, f) = (GpuModel::default(), FpgaModel::default());
+        let r8 = accelerator_ratio(&ENCDEC_L, &SYN1024, 8, 8, &g, &f);
+        let r512 = accelerator_ratio(&ENCDEC_L, &SYN1024, 512, 8, &g, &f);
+        assert!(r512.gpus_per_chamvs > r8.gpus_per_chamvs);
+    }
+}

@@ -1,0 +1,175 @@
+//! The coordinator as a network service: GPU clients submit retrieval
+//! requests over TCP; the coordinator fans them out to the memory nodes,
+//! k-way-merges results, converts vector ids to tokens, and replies
+//! (paper Sec 3, workflow steps 3-9 — the "CPU coordinator server").
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::retriever::Retriever;
+use crate::net::protocol::{Frame, Kind, RetrieveRequest, RetrieveResponse};
+use crate::util::metrics::Metrics;
+
+/// A running coordinator server.
+pub struct CoordinatorServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CoordinatorServer {
+    /// Spawn the coordinator on an ephemeral local port. The retriever is
+    /// built on the server thread (PJRT engines are not Send).
+    pub fn spawn_with(
+        builder: impl FnOnce() -> Retriever + Send + 'static,
+    ) -> Result<CoordinatorServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut retriever = builder();
+            let metrics = Metrics::new();
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let _ = serve_gpu(stream, &mut retriever, &metrics, &stop2);
+                        if stop2.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            eprintln!("[coordinator] metrics:\n{}", metrics.render());
+        });
+        Ok(CoordinatorServer { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for CoordinatorServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_gpu(
+    stream: TcpStream,
+    retriever: &mut Retriever,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let frame = match Frame::read_from(&mut reader) {
+            Ok(f) => f,
+            Err(e) => {
+                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if timed_out {
+                    continue;
+                }
+                return Ok(());
+            }
+        };
+        match frame.kind {
+            Kind::Shutdown => {
+                stop.store(true, Ordering::Relaxed);
+                return Ok(());
+            }
+            Kind::RetrieveRequest => {
+                let req = RetrieveRequest::decode(&frame)?;
+                metrics.incr("retrieve_requests", 1);
+                metrics.incr(&format!("gpu_{}_requests", req.gpu_id), 1);
+                let r = metrics
+                    .time("retrieve", || retriever.retrieve(&req.query))?;
+                let tokens = if req.want_chunks {
+                    retriever.gather_chunks(&r.ids)
+                } else {
+                    retriever.gather_next_tokens(&r.ids)
+                };
+                let resp = RetrieveResponse {
+                    query_id: req.query_id,
+                    tokens,
+                    dists: r.dists,
+                };
+                resp.encode().write_to(&mut writer)?;
+            }
+            other => anyhow::bail!("unexpected frame {other:?} at coordinator"),
+        }
+    }
+}
+
+/// GPU-process-side client of the coordinator.
+pub struct CoordinatorClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    pub gpu_id: u32,
+    next_id: u64,
+}
+
+impl CoordinatorClient {
+    pub fn connect(addr: SocketAddr, gpu_id: u32) -> Result<CoordinatorClient> {
+        let stream =
+            TcpStream::connect(addr).context("connecting to coordinator")?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(CoordinatorClient { stream, reader, gpu_id, next_id: 0 })
+    }
+
+    /// One blocking retrieval round trip (the per-token path for
+    /// decoder-only models).
+    pub fn retrieve(
+        &mut self,
+        query: &[f32],
+        lists: &[u32],
+        k: usize,
+        want_chunks: bool,
+    ) -> Result<RetrieveResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        RetrieveRequest {
+            query_id: id,
+            gpu_id: self.gpu_id,
+            query: query.to_vec(),
+            lists: lists.to_vec(),
+            k: k as u32,
+            want_chunks,
+        }
+        .encode()
+        .write_to(&mut self.stream)?;
+        let f = Frame::read_from(&mut self.reader)?;
+        let resp = RetrieveResponse::decode(&f)?;
+        anyhow::ensure!(resp.query_id == id, "response id mismatch");
+        Ok(resp)
+    }
+
+    pub fn shutdown_coordinator(&mut self) {
+        let _ = Frame { kind: Kind::Shutdown, payload: vec![] }.write_to(&mut self.stream);
+    }
+}

@@ -1,0 +1,142 @@
+//! Synthetic token corpus + vocabulary — the textual side of the RALM
+//! database (paper Sec 3: the coordinator "converts the retrieved vector
+//! IDs into their respective textual representations").
+//!
+//! Every database vector id maps to (a) a next-token (for decoder-only
+//! kNN-LM retrieval) and (b) a token chunk (for encoder-decoder RETRO-
+//! style retrieval). The corpus is generated from a deterministic Markov
+//! chain so the LM actually has learnable structure (used by the training
+//! example, where loss must visibly fall).
+
+use crate::util::rng::Rng;
+
+/// Token store mapping vector ids to retrieved content.
+pub struct Corpus {
+    pub vocab: usize,
+    pub chunk_len: usize,
+    /// Next token per database entry (decoder-only retrieval payload).
+    pub next_tokens: Vec<u32>,
+    /// Token chunk per database entry (EncDec retrieval payload).
+    pub chunks: Vec<u32>,
+}
+
+impl Corpus {
+    /// Build a corpus of `n` entries over `vocab` tokens.
+    pub fn generate(n: usize, vocab: usize, chunk_len: usize, seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed);
+        let mut next_tokens = Vec::with_capacity(n);
+        let mut chunks = Vec::with_capacity(n * chunk_len);
+        for _ in 0..n {
+            let mut t = rng.below(vocab) as u32;
+            next_tokens.push(t);
+            for _ in 0..chunk_len {
+                chunks.push(t);
+                t = markov_next(t, vocab, &mut rng);
+            }
+        }
+        Corpus { vocab, chunk_len, next_tokens, chunks }
+    }
+
+    pub fn next_token(&self, id: u64) -> u32 {
+        self.next_tokens[id as usize % self.next_tokens.len()]
+    }
+
+    pub fn chunk(&self, id: u64) -> &[u32] {
+        let n = self.next_tokens.len();
+        let i = id as usize % n;
+        &self.chunks[i * self.chunk_len..(i + 1) * self.chunk_len]
+    }
+
+    /// Token ids for the K retrieved neighbors (decoder-only payload).
+    pub fn gather_next_tokens(&self, ids: &[u64]) -> Vec<u32> {
+        ids.iter().map(|&i| self.next_token(i)).collect()
+    }
+
+    /// Concatenated chunks for the K retrieved neighbors (EncDec payload).
+    pub fn gather_chunks(&self, ids: &[u64]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(ids.len() * self.chunk_len);
+        for &i in ids {
+            out.extend_from_slice(self.chunk(i));
+        }
+        out
+    }
+}
+
+/// Deterministic Markov structure: each token transitions within a small
+/// neighborhood, giving sequences n-gram statistics an LM can learn.
+fn markov_next(t: u32, vocab: usize, rng: &mut Rng) -> u32 {
+    let step = [1, 2, 3, 5, 7][rng.below(5)];
+    ((t as usize + step) % vocab) as u32
+}
+
+/// Generate a training corpus of token sequences with Markov structure.
+pub fn training_sequences(
+    n_seqs: usize,
+    seq_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..n_seqs)
+        .map(|_| {
+            let mut t = rng.below(vocab) as u32;
+            let mut seq = Vec::with_capacity(seq_len);
+            for _ in 0..seq_len {
+                seq.push(t);
+                t = markov_next(t, vocab, &mut rng);
+            }
+            seq
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let c = Corpus::generate(100, 2048, 8, 1);
+        assert_eq!(c.next_tokens.len(), 100);
+        assert_eq!(c.chunks.len(), 800);
+        assert!(c.next_tokens.iter().all(|&t| (t as usize) < 2048));
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let c = Corpus::generate(50, 512, 4, 2);
+        let ids = [0u64, 7, 49];
+        assert_eq!(c.gather_next_tokens(&ids).len(), 3);
+        assert_eq!(c.gather_chunks(&ids).len(), 12);
+    }
+
+    #[test]
+    fn chunk_starts_with_next_token() {
+        // The chunk's first token is the entry's next-token (the chunk is
+        // "the continuation text" of the neighbor).
+        let c = Corpus::generate(20, 128, 8, 3);
+        for id in 0..20u64 {
+            assert_eq!(c.chunk(id)[0], c.next_token(id));
+        }
+    }
+
+    #[test]
+    fn training_sequences_learnable_structure() {
+        // Transitions must be confined to the 5-step neighborhood.
+        let seqs = training_sequences(10, 64, 100, 4);
+        for s in &seqs {
+            for w in s.windows(2) {
+                let delta = (w[1] as i64 - w[0] as i64).rem_euclid(100);
+                assert!([1, 2, 3, 5, 7].contains(&delta), "delta {delta}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(30, 256, 4, 9);
+        let b = Corpus::generate(30, 256, 4, 9);
+        assert_eq!(a.next_tokens, b.next_tokens);
+        assert_eq!(a.chunks, b.chunks);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dataset substrates: deterministic synthetic vector datasets standing in
+//! for SIFT1B/Deep1B (paper Table 3), exact ground truth, recall
+//! measurement, and a synthetic token corpus + vocabulary for the RALM
+//! text path.
+
+pub mod corpus;
+pub mod recall;
+pub mod synthetic;
+
+pub use recall::recall_at_k;
+pub use synthetic::SyntheticDataset;

@@ -1,0 +1,78 @@
+//! Energy-per-query model (paper Table 5): power x time for each engine
+//! involved in a query. The paper measures CPU power via RAPL and GPU via
+//! nvidia-smi; here both are modelled with load-power constants and the
+//! latency models of this module's siblings.
+
+use super::cpu::CpuModel;
+use super::fpga::FpgaModel;
+use super::gpu::GpuModel;
+use crate::config::DatasetConfig;
+
+/// Average energy per query (J) for the CPU-only baseline at batch `b`.
+pub fn cpu_energy_per_query(
+    cpu: &CpuModel,
+    ds: &DatasetConfig,
+    n_codes: usize,
+    b: usize,
+) -> f64 {
+    let t_batch =
+        cpu.query_latency(b, b * n_codes / b, ds.m, ds.dsub(), ds.nlist_paper, ds.nprobe);
+    cpu.power_w * t_batch / b as f64
+}
+
+/// Average energy per query (J) for ChamVS (FPGA scan + GPU index scan).
+pub fn chamvs_energy_per_query(
+    fpga: &FpgaModel,
+    gpu: &GpuModel,
+    ds: &DatasetConfig,
+    n_codes: usize,
+    b: usize,
+) -> f64 {
+    let t_fpga = fpga.batch_latency(b, n_codes, ds.m, ds.nprobe, 100);
+    let t_gpu = gpu.index_scan_latency(ds.nlist_paper, ds.d, b);
+    (fpga.power_w * t_fpga + gpu.power_w * t_gpu) / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SIFT, SYN1024};
+
+    fn paper_codes(ds: &DatasetConfig) -> usize {
+        (ds.n_paper as f64 * ds.nprobe as f64 / ds.nlist_paper as f64) as usize
+    }
+
+    #[test]
+    fn chamvs_beats_cpu_by_5_to_30x() {
+        // Table 5 band: 5.8-26.2x energy advantage.
+        let (c, f, g) = (CpuModel::default(), FpgaModel::default(), GpuModel::default());
+        for ds in [&SIFT, &SYN1024] {
+            for b in [1usize, 4, 16] {
+                let e_cpu = cpu_energy_per_query(&c, ds, paper_codes(ds), b);
+                let e_cham = chamvs_energy_per_query(&f, &g, ds, paper_codes(ds), b);
+                let ratio = e_cpu / e_cham;
+                assert!(
+                    ratio > 3.0 && ratio < 40.0,
+                    "{} b={b}: ratio {ratio}",
+                    ds.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sift_b1_energy_order_of_magnitude() {
+        // Table 5: CPU SIFT b=1 = 950 mJ; model must land within ~3x.
+        let c = CpuModel::default();
+        let e = cpu_energy_per_query(&c, &SIFT, paper_codes(&SIFT), 1);
+        assert!(e > 0.2 && e < 3.0, "{e} J");
+    }
+
+    #[test]
+    fn batching_reduces_energy_per_query() {
+        let (f, g) = (FpgaModel::default(), GpuModel::default());
+        let e1 = chamvs_energy_per_query(&f, &g, &SIFT, paper_codes(&SIFT), 1);
+        let e16 = chamvs_energy_per_query(&f, &g, &SIFT, paper_codes(&SIFT), 16);
+        assert!(e16 < e1, "{e16} !< {e1}");
+    }
+}

@@ -1,0 +1,219 @@
+//! Cycle-level model of the ChamVS near-memory accelerator
+//! (paper Sec 4, Fig 4/5) and its U250 resource footprint (Table 4).
+
+use crate::kselect::HierarchicalConfig;
+
+/// Alveo U250 resource pools (paper Sec 6.2).
+pub const U250_LUT: f64 = 1_728_000.0;
+pub const U250_FF: f64 = 3_456_000.0;
+pub const U250_BRAM: f64 = 2_688.0; // 18 Kb blocks counted as paper's 2.1K 36Kb? use 36Kb tiles
+pub const U250_URAM: f64 = 1_280.0;
+pub const U250_DSP: f64 = 12_288.0;
+
+/// The paper's prototype clock and memory system.
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaModel {
+    /// Accelerator clock (Hz). Paper: 140 MHz.
+    pub clock_hz: f64,
+    /// DDR channels per node. Paper: 4 x 16 GB DDR4.
+    pub n_channels: usize,
+    /// Bytes per channel per cycle through the AXI interface. Paper: 64.
+    pub axi_bytes: usize,
+    /// Board power under load (W) for the energy model (Table 5 regime).
+    pub power_w: f64,
+}
+
+impl Default for FpgaModel {
+    fn default() -> Self {
+        FpgaModel { clock_hz: 140e6, n_channels: 4, axi_bytes: 64, power_w: 45.0 }
+    }
+}
+
+/// Per-query latency breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScanLatency {
+    pub lut_s: f64,
+    pub scan_s: f64,
+    pub kselect_drain_s: f64,
+}
+
+impl ScanLatency {
+    pub fn total(&self) -> f64 {
+        self.lut_s + self.scan_s + self.kselect_drain_s
+    }
+}
+
+impl FpgaModel {
+    /// Number of PQ decoding units instantiated for quantization width `m`
+    /// (paper Sec 4.1: `channels * axi_width / m`).
+    pub fn n_decoding_units(&self, m: usize) -> usize {
+        (self.n_channels * self.axi_bytes / m).max(1)
+    }
+
+    /// PQ-code bytes consumed per second when all channels stream.
+    pub fn scan_bandwidth(&self) -> f64 {
+        self.clock_hz * (self.n_channels * self.axi_bytes) as f64
+    }
+
+    /// Latency for one query scanning `n_codes` vectors of `m`-byte codes
+    /// over `nprobe` lists (paper's pipeline: LUT construction, streaming
+    /// ADC decode, K-selection drain).
+    pub fn query_latency(&self, n_codes: usize, m: usize, nprobe: usize, k: usize) -> ScanLatency {
+        // LUT construction: 256 table entries per sub-space, all m
+        // sub-spaces in parallel, one entry per cycle, one table per
+        // probed list (per-list residual tables, Sec 4).
+        let lut_cycles = 256.0 * nprobe as f64;
+        // ADC scan: each decoding unit consumes one code (m bytes) per
+        // cycle; all units run in parallel across channels, so the node
+        // retires `units` codes per cycle when streaming.
+        let units = self.n_decoding_units(m) as f64;
+        let scan_cycles = n_codes as f64 / units;
+        // K-selection is pipelined with the scan; only the final drain of
+        // the hierarchical queue shows up as latency (L2 merge of
+        // 2*units queues, two cycles per element).
+        let drain_cycles = (2 * k) as f64 + 2.0 * units;
+        ScanLatency {
+            lut_s: lut_cycles / self.clock_hz,
+            scan_s: scan_cycles / self.clock_hz,
+            kselect_drain_s: drain_cycles / self.clock_hz,
+        }
+    }
+
+    /// Batched query latency: queries stream back-to-back through the
+    /// pipeline (LUT overlap with previous scan), so batch latency is one
+    /// pipeline fill plus `b` scan phases.
+    pub fn batch_latency(&self, b: usize, n_codes: usize, m: usize, nprobe: usize, k: usize) -> f64 {
+        let one = self.query_latency(n_codes, m, nprobe, k);
+        one.lut_s + one.kselect_drain_s + b as f64 * one.scan_s.max(one.lut_s)
+    }
+
+    /// Resource model for the full accelerator (Table 4 / Fig 8).
+    ///
+    /// Coefficients are calibrated against Table 4's reported fractions:
+    /// the accelerator consumes ~20-28% LUTs with the dominant terms being
+    /// the network stack + decoding units (per-unit cost scales with m via
+    /// the m-way adder tree) and the K-selection queues (linear in total
+    /// queue length, ~250 LUT/entry from Sec 4.2.1's "100-element queue ~
+    /// 2.5% of U250 LUTs").
+    pub fn resources(&self, m: usize, kcfg: &HierarchicalConfig) -> Resources {
+        let units = self.n_decoding_units(m) as f64;
+        // Fixed infrastructure: TCP/IP stack + DDR controllers + control.
+        let base_lut = 220_000.0;
+        let base_ff = 300_000.0;
+        let base_bram = 220.0;
+        // One decoding unit: m parallel lookups + adder tree + FIFO.
+        let unit_lut = 900.0 + 260.0 * m as f64;
+        let unit_ff = 1_200.0 + 320.0 * m as f64;
+        let unit_bram = 1.0 + m as f64 / 4.0; // LUT table columns
+        let unit_dsp = 2.0 * m as f64;
+        // Priority queues: ~250 LUT / ~330 FF per entry (2.5% of U250 for
+        // a 100-entry queue ~= 432 LUT/entry in their HLS; we fold the
+        // compare-swap + control into 250 with FF separate).
+        let q_entries = kcfg.resource_units() as f64;
+        let q_lut = 250.0 * q_entries;
+        let q_ff = 330.0 * q_entries;
+        // LUT-construction unit: dsub-wide L2 distance pipeline.
+        let lutc_dsp = 640.0;
+        let lutc_lut = 30_000.0;
+        Resources {
+            lut: base_lut + units * unit_lut + q_lut + lutc_lut,
+            ff: base_ff + units * unit_ff + q_ff + 40_000.0,
+            bram: base_bram + units * unit_bram + 64.0,
+            uram: 56.0, // metadata/address tables, constant
+            dsp: 300.0 + units * unit_dsp + lutc_dsp,
+        }
+    }
+}
+
+/// Absolute resource counts; `fraction_of_u250` renders Table 4 rows.
+#[derive(Clone, Copy, Debug)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub uram: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub fn fraction_of_u250(&self) -> [f64; 5] {
+        [
+            self.lut / U250_LUT,
+            self.ff / U250_FF,
+            self.bram / U250_BRAM,
+            self.uram / U250_URAM,
+            self.dsp / U250_DSP,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoding_unit_count_matches_paper_example() {
+        // Paper Sec 4.1: m=32, 4 channels, 64-byte AXI => 8 units.
+        let f = FpgaModel::default();
+        assert_eq!(f.n_decoding_units(32), 8);
+        assert_eq!(f.n_decoding_units(16), 16);
+        assert_eq!(f.n_decoding_units(64), 4);
+    }
+
+    #[test]
+    fn scan_bandwidth_is_35_8_gbs() {
+        let f = FpgaModel::default();
+        assert!((f.scan_bandwidth() / 35.84e9 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_scales_linearly_with_codes() {
+        let f = FpgaModel::default();
+        let a = f.query_latency(100_000, 16, 32, 100).scan_s;
+        let b = f.query_latency(200_000, 16, 32, 100).scan_s;
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sift_scale_query_under_2ms() {
+        // 1e9 vectors, nprobe 32/nlist 32768 -> ~1e6 codes scanned: the
+        // paper's FPGA-GPU median for SIFT b=1 sits near 1-2 ms.
+        let f = FpgaModel::default();
+        let codes = (1e9 * 32.0 / 32768.0) as usize;
+        let lat = f.query_latency(codes, 16, 32, 100).total();
+        assert!(lat > 1e-4 && lat < 3e-3, "{lat}");
+    }
+
+    #[test]
+    fn resources_within_u250_and_table4_band() {
+        let f = FpgaModel::default();
+        for &m in &[16usize, 32, 64] {
+            let kcfg = HierarchicalConfig::approximate(100, 2 * f.n_decoding_units(m), 0.99);
+            let r = f.resources(m, &kcfg);
+            let frac = r.fraction_of_u250();
+            // Table 4: LUT 23-28%, FF 15-19%, DSP 8-13%.
+            assert!(frac[0] > 0.15 && frac[0] < 0.35, "m={m} LUT {}", frac[0]);
+            assert!(frac[1] > 0.10 && frac[1] < 0.25, "m={m} FF {}", frac[1]);
+            assert!(frac[4] > 0.05 && frac[4] < 0.20, "m={m} DSP {}", frac[4]);
+        }
+    }
+
+    #[test]
+    fn exact_queues_would_blow_lut_budget() {
+        // Sec 4.2.1: full-length L1 queues are unaffordable. On our
+        // 4-channel default with m=16 (16 units -> 32 L1 queues), exact
+        // K=100 queues eat ~half the device on queues alone — the paper's
+        // 32-unit configuration (64 queues) overflows it outright.
+        let f = FpgaModel::default();
+        let lanes = 2 * f.n_decoding_units(16);
+        let exact = HierarchicalConfig::exact(100, lanes);
+        let q_lut = 250.0 * exact.resource_units() as f64;
+        assert!(q_lut > U250_LUT * 0.45, "{q_lut}");
+        // Paper's example: 64 L1 queues.
+        let paper = HierarchicalConfig::exact(100, 64);
+        assert!(250.0 * paper.resource_units() as f64 > U250_LUT * 0.9);
+        let approx = HierarchicalConfig::approximate(100, lanes, 0.99);
+        let aq_lut = 250.0 * approx.resource_units() as f64;
+        assert!(aq_lut < U250_LUT * 0.2, "{aq_lut}");
+    }
+}

@@ -1,0 +1,127 @@
+//! GPU performance model: RTX 3090 for LLM inference and IVF index
+//! scanning (paper Sec 6.1/6.2), plus the GPU PQ-scan inefficiency the
+//! paper cites (Sec 2.3: ~50% of bandwidth even at large batch, after
+//! multiple passes over intermediate results).
+
+use crate::config::ModelConfig;
+
+/// An LLM/IVF GPU model (RTX 3090 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    /// Device memory bandwidth (bytes/s). 3090: 936 GB/s GDDR6X.
+    pub mem_bw: f64,
+    /// Dense fp16/bf16 throughput (FLOP/s). 3090: ~71 TFLOPS tensor.
+    pub peak_flops: f64,
+    /// Effective fraction of peak FLOPs for batched transformer layers.
+    pub flops_efficiency: f64,
+    /// Effective fraction of bandwidth for PQ scanning (paper: ~0.5).
+    pub pq_scan_bw_fraction: f64,
+    /// Board power under load (W) for Table 5 / energy reports.
+    pub power_w: f64,
+    /// Kernel-launch + framework overhead per decode step (s).
+    pub step_overhead: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            mem_bw: 936e9,
+            peak_flops: 71e12,
+            flops_efficiency: 0.45,
+            pq_scan_bw_fraction: 0.5,
+            power_w: 300.0,
+            step_overhead: 200e-6,
+        }
+    }
+}
+
+impl GpuModel {
+    /// One decode step for batch `b`: bandwidth-bound on parameters at
+    /// small batch, compute-bound at large batch (2-byte weights).
+    pub fn decode_step_latency(&self, model: &ModelConfig, b: usize) -> f64 {
+        let param_bytes = 2.0 * model.param_count() as f64;
+        let t_mem = param_bytes / self.mem_bw;
+        let t_compute =
+            b as f64 * model.decode_flops() / (self.peak_flops * self.flops_efficiency);
+        self.step_overhead + t_mem.max(t_compute)
+    }
+
+    /// Encoder pass over retrieved chunks (EncDec models, compute-bound).
+    pub fn encode_latency(&self, model: &ModelConfig, b: usize) -> f64 {
+        if !model.is_encdec() {
+            return 0.0;
+        }
+        let t = b as f64 * model.encode_flops()
+            / (self.peak_flops * self.flops_efficiency);
+        self.step_overhead + t
+    }
+
+    /// IVF index scan: query x nlist centroid distances + top-nprobe.
+    /// Bandwidth-bound on reading the centroid matrix once per batch.
+    pub fn index_scan_latency(&self, nlist: usize, d: usize, b: usize) -> f64 {
+        let bytes = 4.0 * (nlist * d) as f64;
+        let flops = 2.0 * (b * nlist * d) as f64;
+        self.step_overhead / 4.0
+            + (bytes / self.mem_bw).max(flops / (self.peak_flops * self.flops_efficiency))
+    }
+
+    /// PQ scan on GPU out of *host* memory over the interconnect (the
+    /// CPU-GPU hybrid's fatal bottleneck, Sec 2.3) — not used by the
+    /// paper's chosen baselines but exposed for ablations.
+    pub fn pq_scan_host_latency(&self, n_codes: usize, m: usize, link_bw: f64) -> f64 {
+        (n_codes * m) as f64 / link_bw
+    }
+
+    /// PQ scan on GPU out of device memory (Sec 2.3: ~50% of bandwidth).
+    pub fn pq_scan_device_latency(&self, n_codes: usize, m: usize) -> f64 {
+        (n_codes * m) as f64 / (self.mem_bw * self.pq_scan_bw_fraction)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DEC_L, DEC_S};
+
+    #[test]
+    fn small_batch_is_bandwidth_bound() {
+        let g = GpuModel::default();
+        let t1 = g.decode_step_latency(&DEC_S, 1);
+        let t8 = g.decode_step_latency(&DEC_S, 8);
+        // Same parameter traffic => nearly identical latency.
+        assert!((t8 / t1 - 1.0).abs() < 0.2, "{t1} vs {t8}");
+    }
+
+    #[test]
+    fn large_model_slower() {
+        let g = GpuModel::default();
+        assert!(
+            g.decode_step_latency(&DEC_L, 1) > 5.0 * g.decode_step_latency(&DEC_S, 1)
+        );
+    }
+
+    #[test]
+    fn dec_s_tokens_per_second_plausible() {
+        // 101M params * 2 B / 936 GB/s ~= 0.2 ms + overhead: hundreds to
+        // thousands of tokens/s at b=1, as observed for small models.
+        let g = GpuModel::default();
+        let t = g.decode_step_latency(&DEC_S, 1);
+        let tps = 1.0 / t;
+        assert!(tps > 500.0 && tps < 5000.0, "{tps}");
+    }
+
+    #[test]
+    fn index_scan_fast_but_not_free() {
+        let g = GpuModel::default();
+        let t = g.index_scan_latency(32_768, 512, 1);
+        assert!(t > 1e-5 && t < 1e-3, "{t}");
+    }
+
+    #[test]
+    fn compute_bound_at_huge_batch() {
+        let g = GpuModel::default();
+        let t256 = g.decode_step_latency(&DEC_S, 256);
+        let t1 = g.decode_step_latency(&DEC_S, 1);
+        assert!(t256 > 1.5 * t1, "{t256} vs {t1}");
+    }
+}

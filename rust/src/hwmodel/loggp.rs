@@ -1,0 +1,105 @@
+//! LogGP network model (paper Sec 6.2 "Scalability"; Culler et al. /
+//! Alexandrov et al.). The paper extrapolates multi-node latency with a
+//! tree-topology broadcast/reduce, 10 us endpoint latency and 100 Gbps
+//! links; Fig 10 is regenerated from the same model here.
+
+/// LogGP parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LogGp {
+    /// End-to-end latency between two endpoints (s). Paper: 10 us.
+    pub latency_s: f64,
+    /// Per-message CPU overhead (s).
+    pub overhead_s: f64,
+    /// Gap per byte for long messages = 1 / bandwidth (s/B). 100 Gbps.
+    pub gap_per_byte: f64,
+}
+
+impl Default for LogGp {
+    fn default() -> Self {
+        LogGp {
+            latency_s: 10e-6,
+            overhead_s: 1e-6,
+            gap_per_byte: 8.0 / 100e9,
+        }
+    }
+}
+
+impl LogGp {
+    /// Point-to-point time for a `bytes`-long message.
+    pub fn p2p(&self, bytes: usize) -> f64 {
+        self.latency_s + 2.0 * self.overhead_s + bytes as f64 * self.gap_per_byte
+    }
+
+    /// Broadcast to `n` nodes over a binary tree: ceil(log2(n)) rounds.
+    pub fn broadcast(&self, n: usize, bytes: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        tree_rounds(n) as f64 * self.p2p(bytes)
+    }
+
+    /// Reduce from `n` nodes (same tree structure, same cost shape).
+    pub fn reduce(&self, n: usize, bytes: usize) -> f64 {
+        self.broadcast(n, bytes)
+    }
+
+    /// Full ChamVS round trip: broadcast query to `n` memory nodes,
+    /// reduce per-node top-K results back (paper's Fig 10 setup).
+    pub fn query_roundtrip(&self, n: usize, query_bytes: usize, result_bytes: usize) -> f64 {
+        if n <= 1 {
+            // Single node still crosses the network once each way.
+            return self.p2p(query_bytes) + self.p2p(result_bytes);
+        }
+        self.broadcast(n, query_bytes) + self.reduce(n, result_bytes)
+    }
+}
+
+/// Rounds in a binary broadcast tree.
+fn tree_rounds(n: usize) -> u32 {
+    (usize::BITS - (n - 1).leading_zeros()).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_small_message_is_latency_dominated() {
+        let g = LogGp::default();
+        let t = g.p2p(256);
+        assert!(t > 10e-6 && t < 15e-6, "{t}");
+    }
+
+    #[test]
+    fn tree_rounds_log2() {
+        assert_eq!(tree_rounds(2), 1);
+        assert_eq!(tree_rounds(4), 2);
+        assert_eq!(tree_rounds(8), 3);
+        assert_eq!(tree_rounds(5), 3);
+        assert_eq!(tree_rounds(16), 4);
+    }
+
+    #[test]
+    fn broadcast_grows_logarithmically() {
+        let g = LogGp::default();
+        let t4 = g.broadcast(4, 1024);
+        let t16 = g.broadcast(16, 1024);
+        assert!((t16 / t4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_small_vs_query_time() {
+        // Paper: network latency negligible vs query latency (ms-scale);
+        // the 16-node roundtrip must stay below 200 us.
+        let g = LogGp::default();
+        let t = g.query_roundtrip(16, 2048 + 32 * 4, 100 * 12);
+        assert!(t < 200e-6, "{t}");
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_messages() {
+        let g = LogGp::default();
+        let t = g.p2p(100_000_000);
+        assert!((t - 0.008).abs() / 0.008 < 0.01, "{t}");
+    }
+}

@@ -1,0 +1,24 @@
+//! First-principles hardware performance/resource/energy models.
+//!
+//! The paper's testbed (Alveo U250 FPGAs, RTX 3090 GPUs, EPYC CPUs,
+//! 100 Gbps network) does not exist here, so every accelerator latency in
+//! the reports comes from these models — parameterized directly from the
+//! paper's own numbers (Sec 4: 140 MHz, 4 channels x 64 B AXI; Sec 2.3:
+//! ~1 GB/s/core CPU PQ scan, ~50% GPU bandwidth PQ scan; Sec 6.2: LogGP
+//! with 10 us endpoint latency). The *measured* side (rust CPU scan,
+//! PJRT-executed kernels) validates the shapes these models predict.
+//!
+//! This substitution is exactly the paper's own methodology for Fig 10,
+//! which extrapolates beyond its two physical FPGAs with LogGP sampling.
+
+pub mod cpu;
+pub mod energy;
+pub mod fpga;
+pub mod gpu;
+pub mod loggp;
+pub mod tpu;
+
+pub use cpu::CpuModel;
+pub use fpga::FpgaModel;
+pub use gpu::GpuModel;
+pub use loggp::LogGp;

@@ -1,0 +1,121 @@
+//! TPU roofline estimates for the L1 Pallas kernels (DESIGN.md Sec 8).
+//!
+//! interpret=True gives CPU-numpy timings only, so real-TPU performance of
+//! the kernels is *estimated* from their BlockSpec structure: VMEM bytes
+//! per tile, HBM traffic, and MXU/VPU FLOPs. These numbers cross-check the
+//! `cost` dicts aot.py embeds in artifacts/manifest.json.
+
+/// TPU v4-class machine constants (one core).
+pub const HBM_BW: f64 = 1.2e12; // bytes/s
+pub const PEAK_BF16: f64 = 275e12; // FLOP/s
+pub const VMEM_BYTES: f64 = 16.0 * 1024.0 * 1024.0;
+
+/// Roofline estimate for one kernel invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelEstimate {
+    pub flops: f64,
+    pub hbm_bytes: f64,
+    pub vmem_bytes_per_tile: f64,
+    /// Fraction of MXU MACs doing useful work (1.0 = dense-efficient).
+    pub mxu_utilization: f64,
+}
+
+impl KernelEstimate {
+    /// max(compute, memory) latency in seconds.
+    pub fn latency_s(&self) -> f64 {
+        (self.flops / PEAK_BF16).max(self.hbm_bytes / HBM_BW)
+    }
+
+    /// Arithmetic intensity (FLOP/byte); the v4 ridge point is ~230.
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.hbm_bytes.max(1.0)
+    }
+
+    pub fn fits_vmem(&self) -> bool {
+        self.vmem_bytes_per_tile <= VMEM_BYTES
+    }
+}
+
+/// The kernel's m-dependent tile rule (mirrors `pq_scan.n_tile`): keeps
+/// the one-hot expansion at ~8 MiB of VMEM regardless of PQ width.
+pub fn adc_n_tile(m: usize) -> usize {
+    (8192 / m).max(128)
+}
+
+/// One-hot-MXU ADC scan over `n` codes of width `m` (pq_scan.py).
+pub fn adc_scan_estimate(n: usize, m: usize, n_tile: usize) -> KernelEstimate {
+    let flops = 2.0 * (n * m * 256) as f64; // dense contraction
+    let useful = 2.0 * (n * m) as f64; // lookups + adds actually required
+    KernelEstimate {
+        flops,
+        hbm_bytes: (n * m * 4) as f64, // i32 codes stream once
+        vmem_bytes_per_tile: 4.0 * (n_tile * m * 256 + n_tile * m + m * 256) as f64,
+        mxu_utilization: useful / flops,
+    }
+}
+
+/// LUT construction (pq_lut.py): VPU broadcast-square-reduce.
+pub fn lut_estimate(m: usize, dsub: usize) -> KernelEstimate {
+    KernelEstimate {
+        flops: 3.0 * (m * 256 * dsub) as f64,
+        hbm_bytes: 4.0 * (m * 256 * dsub + m * dsub + m * 256) as f64,
+        vmem_bytes_per_tile: 4.0 * (8 * 256 * dsub) as f64,
+        mxu_utilization: 0.0, // pure VPU
+    }
+}
+
+/// IVF centroid scan (ivf_scan.py): dense (b, d) x (d, nlist) matmul.
+pub fn ivf_scan_estimate(b: usize, nlist: usize, d: usize, c_tile: usize) -> KernelEstimate {
+    KernelEstimate {
+        flops: 2.0 * (b * nlist * d) as f64,
+        hbm_bytes: 4.0 * (nlist * d + b * d + b * nlist) as f64,
+        vmem_bytes_per_tile: 4.0 * (b * d + c_tile * d + b * c_tile) as f64,
+        mxu_utilization: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_tiles_fit_vmem() {
+        for &m in &[16usize, 32, 64] {
+            let e = adc_scan_estimate(32_768, m, adc_n_tile(m));
+            assert!(e.fits_vmem(), "m={m}: {} bytes", e.vmem_bytes_per_tile);
+        }
+    }
+
+    #[test]
+    fn fixed_tile_would_overflow_vmem() {
+        // The bug the tile rule fixes: a flat 512-tile at m=32 needs
+        // ~16.8 MB of VMEM for the one-hot expansion alone.
+        let e = adc_scan_estimate(32_768, 32, 512);
+        assert!(!e.fits_vmem());
+    }
+
+    #[test]
+    fn adc_utilization_is_1_over_256() {
+        let e = adc_scan_estimate(1000, 32, 512);
+        assert!((e.mxu_utilization - 1.0 / 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ivf_scan_bandwidth_bound_at_b1() {
+        let e = ivf_scan_estimate(1, 32_768, 512, 1024);
+        // intensity ~ 2 flops/4 bytes per centroid element: << ridge.
+        assert!(e.intensity() < 2.0);
+        assert!(e.latency_s() > e.flops / PEAK_BF16);
+    }
+
+    #[test]
+    fn adc_scan_faster_than_fpga_at_paper_scale() {
+        // Sanity: a TPU running the one-hot ADC at 1/256 utilization still
+        // beats the 35.8 GB/s FPGA stream for m=16 paper-scale scans,
+        // because the code stream is only 4 B/code.
+        let n = 1_000_000;
+        let e = adc_scan_estimate(n, 16, 512);
+        let fpga_s = (n * 16) as f64 / 35.84e9;
+        assert!(e.latency_s() < fpga_s * 4.0, "{} vs {}", e.latency_s(), fpga_s);
+    }
+}

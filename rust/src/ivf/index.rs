@@ -1,0 +1,197 @@
+//! The combined IVF-PQ index: coarse quantizer + per-list PQ codes.
+//!
+//! Training follows the paper's setup (Sec 6.1): `nlist ~= sqrt(n)`
+//! clusters trained on a sample, PQ trained on residual-free raw vectors
+//! (as Faiss's IndexIVFPQ with `by_residual=false`, matching the
+//! accelerator's LUT-per-query design which uses one table for all lists).
+
+use crate::pq::codebook::PqCodebook;
+use crate::pq::kmeans::{kmeans, nearest};
+use crate::pq::scan::{adc_scan, build_lut};
+
+/// A fully-trained IVF-PQ index with encoded database.
+pub struct IvfPqIndex {
+    pub d: usize,
+    pub m: usize,
+    pub nlist: usize,
+    /// (nlist, d) coarse centroids.
+    pub centroids: Vec<f32>,
+    pub pq: PqCodebook,
+    /// Per-list PQ codes, list l: (len_l, m) row-major.
+    pub list_codes: Vec<Vec<u8>>,
+    /// Per-list global vector ids, aligned with `list_codes` rows.
+    pub list_ids: Vec<Vec<u64>>,
+}
+
+impl IvfPqIndex {
+    /// Train coarse quantizer + PQ and encode the whole database.
+    pub fn build(
+        data: &[f32],
+        n: usize,
+        d: usize,
+        m: usize,
+        nlist: usize,
+        seed: u64,
+    ) -> IvfPqIndex {
+        assert_eq!(data.len(), n * d);
+        // Coarse quantizer on a sample (Faiss uses ~max(256*nlist, all)).
+        let train_n = n.min(64 * nlist).max(nlist);
+        let coarse = kmeans(&data[..train_n * d], train_n, d, nlist, 10, seed);
+        // PQ codebook trained on a sample of raw vectors.
+        let pq_n = n.min(20_000).max(256);
+        let pq = PqCodebook::train(&data[..pq_n * d], pq_n, d, m, seed ^ 0x9E37);
+
+        let mut list_codes: Vec<Vec<u8>> = vec![Vec::new(); nlist];
+        let mut list_ids: Vec<Vec<u64>> = vec![Vec::new(); nlist];
+        let mut code = vec![0u8; m];
+        for i in 0..n {
+            let v = &data[i * d..(i + 1) * d];
+            let (l, _) = nearest(v, &coarse.centroids, nlist, d);
+            pq.encode_one(v, &mut code);
+            list_codes[l].extend_from_slice(&code);
+            list_ids[l].push(i as u64);
+        }
+        IvfPqIndex {
+            d,
+            m,
+            nlist,
+            centroids: coarse.centroids,
+            pq,
+            list_codes,
+            list_ids,
+        }
+    }
+
+    /// Number of encoded vectors.
+    pub fn len(&self) -> usize {
+        self.list_ids.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Scan the IVF index: ids of the `nprobe` nearest coarse centroids.
+    pub fn probe(&self, query: &[f32], nprobe: usize) -> Vec<u32> {
+        let mut dists: Vec<(f32, u32)> = (0..self.nlist)
+            .map(|l| {
+                let c = &self.centroids[l * self.d..(l + 1) * self.d];
+                let dist: f32 =
+                    query.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+                (dist, l as u32)
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        dists[..nprobe.min(self.nlist)].iter().map(|&(_, l)| l).collect()
+    }
+
+    /// Full CPU search: probe + ADC scan + exact top-k (the monolithic
+    /// `CPU` baseline of Fig 9).
+    pub fn search(&self, query: &[f32], nprobe: usize, k: usize) -> (Vec<u64>, Vec<f32>) {
+        let lists = self.probe(query, nprobe);
+        let lut = build_lut(&self.pq, query);
+        let mut best: Vec<(f32, u64)> = Vec::new();
+        for &l in &lists {
+            let codes = &self.list_codes[l as usize];
+            let ids = &self.list_ids[l as usize];
+            let n = ids.len();
+            if n == 0 {
+                continue;
+            }
+            let dists = adc_scan(codes, n, self.m, &lut);
+            for (i, &dist) in dists.iter().enumerate() {
+                best.push((dist, ids[i]));
+            }
+        }
+        best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        best.truncate(k);
+        (
+            best.iter().map(|&(_, i)| i).collect(),
+            best.iter().map(|&(d, _)| d).collect(),
+        )
+    }
+
+    /// Total vectors that would be scanned for a probe set (cost model).
+    pub fn scan_count(&self, lists: &[u32]) -> usize {
+        lists.iter().map(|&l| self.list_ids[l as usize].len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::flat::flat_search;
+    use crate::util::rng::Rng;
+
+    fn toy_index(seed: u64) -> (IvfPqIndex, Vec<f32>, usize, usize) {
+        let mut rng = Rng::new(seed);
+        let (n, d, m, nlist) = (4000, 32, 8, 64);
+        let data = rng.normal_vec(n * d);
+        (IvfPqIndex::build(&data, n, d, m, nlist, 7), data, n, d)
+    }
+
+    #[test]
+    fn all_vectors_indexed_once() {
+        let (idx, _, n, _) = toy_index(1);
+        assert_eq!(idx.len(), n);
+        let mut seen: Vec<u64> = idx.list_ids.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn probe_returns_nearest_lists() {
+        let (idx, data, _, d) = toy_index(2);
+        let lists = idx.probe(&data[..d], 8);
+        assert_eq!(lists.len(), 8);
+        // The probed lists must include the list that holds the vector
+        // itself (query == database vector 0).
+        let holder = idx
+            .list_ids
+            .iter()
+            .position(|ids| ids.contains(&0))
+            .unwrap() as u32;
+        assert!(lists.contains(&holder), "lists {lists:?} miss {holder}");
+    }
+
+    #[test]
+    fn recall_at_k_reasonable() {
+        // With nprobe covering half the lists, R@10 should be high even
+        // for random gaussian data (paper gets 93-94% @ 0.1% scanned on
+        // real datasets; random data needs a larger fraction).
+        let (idx, data, n, d) = toy_index(3);
+        let mut rng = Rng::new(11);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..20 {
+            let q = rng.normal_vec(d);
+            let (got, _) = idx.search(&q, 32, 10);
+            let (exact, _) = flat_search(&data, n, d, &q, 10);
+            total += 10;
+            hits += got.iter().filter(|g| exact.contains(&(**g as u32))).count();
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.5, "R@10 = {recall}");
+    }
+
+    #[test]
+    fn search_results_sorted_and_unique() {
+        let (idx, _, _, d) = toy_index(4);
+        let mut rng = Rng::new(5);
+        let q = rng.normal_vec(d);
+        let (ids, dists) = idx.search(&q, 16, 50);
+        assert_eq!(ids.len(), 50);
+        assert!(dists.windows(2).all(|w| w[0] <= w[1]));
+        let mut u = ids.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 50);
+    }
+
+    #[test]
+    fn scan_count_accumulates() {
+        let (idx, _, n, _) = toy_index(6);
+        let all: Vec<u32> = (0..idx.nlist as u32).collect();
+        assert_eq!(idx.scan_count(&all), n);
+    }
+}

@@ -1,0 +1,146 @@
+//! Memory layout policies of ChamVS.mem (paper Sec 4.3):
+//! * per-channel interleaving of each list's codes so every DDR channel
+//!   carries an equal share of a scan, and
+//! * the two distributed partitioning schemes (vector-sharded vs
+//!   list-sharded) whose load-balance behaviour Fig 9/10 depend on.
+
+/// How database vectors are split across disaggregated memory nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioning {
+    /// Every node holds all IVF lists but only 1/N of the vectors per list
+    /// (the paper's choice: scan load is always balanced).
+    VectorSharded,
+    /// Each node holds a disjoint subset of the lists (risk: all probed
+    /// lists may land on one node).
+    ListSharded,
+}
+
+/// Assignment of one list's vectors to memory channels, interleaved in
+/// 64-byte AXI beats (paper: "evenly distributes the quantized vectors
+/// ... among all memory channels").
+#[derive(Clone, Debug)]
+pub struct ChannelLayout {
+    pub n_channels: usize,
+    /// Per-channel vector counts for the list.
+    pub per_channel: Vec<usize>,
+}
+
+impl ChannelLayout {
+    /// Distribute `n` vectors of `m`-byte codes over `n_channels` channels
+    /// round-robin per vector.
+    pub fn balance(n: usize, n_channels: usize) -> ChannelLayout {
+        let base = n / n_channels;
+        let extra = n % n_channels;
+        let per_channel =
+            (0..n_channels).map(|c| base + usize::from(c < extra)).collect();
+        ChannelLayout { n_channels, per_channel }
+    }
+
+    /// Max / mean imbalance across channels (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.per_channel.iter().max().unwrap() as f64;
+        let mean = self.per_channel.iter().sum::<usize>() as f64
+            / self.n_channels as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Cycles to stream this list through the decoding units: the slowest
+    /// channel dominates (each channel feeds its own units).
+    pub fn scan_cycles(&self, codes_per_cycle_per_channel: f64) -> f64 {
+        let max = *self.per_channel.iter().max().unwrap() as f64;
+        max / codes_per_cycle_per_channel
+    }
+}
+
+/// Split the vectors of every list across `n_nodes` (VectorSharded), or
+/// assign whole lists round-robin (ListSharded). Returns, per node, the
+/// number of vectors it scans for a given probe set.
+pub fn scan_load_per_node(
+    list_sizes: &[usize],
+    probed: &[u32],
+    n_nodes: usize,
+    part: Partitioning,
+) -> Vec<usize> {
+    let mut load = vec![0usize; n_nodes];
+    match part {
+        Partitioning::VectorSharded => {
+            for &l in probed {
+                let n = list_sizes[l as usize];
+                let base = n / n_nodes;
+                let extra = n % n_nodes;
+                for (node, slot) in load.iter_mut().enumerate() {
+                    *slot += base + usize::from(node < extra);
+                }
+            }
+        }
+        Partitioning::ListSharded => {
+            for &l in probed {
+                load[l as usize % n_nodes] += list_sizes[l as usize];
+            }
+        }
+    }
+    load
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn channel_balance_exact() {
+        let l = ChannelLayout::balance(1000, 4);
+        assert_eq!(l.per_channel, vec![250; 4]);
+        assert!((l.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn channel_balance_remainder() {
+        let l = ChannelLayout::balance(10, 4);
+        assert_eq!(l.per_channel.iter().sum::<usize>(), 10);
+        assert!(l.per_channel.iter().max().unwrap() - l.per_channel.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn vector_sharding_always_balanced() {
+        let mut rng = Rng::new(1);
+        let sizes: Vec<usize> = (0..100).map(|_| 50 + rng.below(1000)).collect();
+        let probed: Vec<u32> = (0..32).map(|_| rng.below(100) as u32).collect();
+        let load = scan_load_per_node(&sizes, &probed, 4, Partitioning::VectorSharded);
+        let max = *load.iter().max().unwrap() as f64;
+        let min = *load.iter().min().unwrap() as f64;
+        assert!(max / min < 1.01, "{load:?}");
+    }
+
+    #[test]
+    fn list_sharding_can_skew() {
+        // All probed lists on node 0 (ids ≡ 0 mod n_nodes).
+        let sizes = vec![100usize; 64];
+        let probed: Vec<u32> = (0..8).map(|i| i * 4).collect();
+        let load = scan_load_per_node(&sizes, &probed, 4, Partitioning::ListSharded);
+        assert_eq!(load[0], 800);
+        assert_eq!(load[1] + load[2] + load[3], 0);
+    }
+
+    #[test]
+    fn loads_conserve_totals() {
+        let mut rng = Rng::new(2);
+        let sizes: Vec<usize> = (0..64).map(|_| rng.below(500)).collect();
+        let probed: Vec<u32> = (0..16).map(|_| rng.below(64) as u32).collect();
+        let total: usize = probed.iter().map(|&l| sizes[l as usize]).sum();
+        for part in [Partitioning::VectorSharded, Partitioning::ListSharded] {
+            let load = scan_load_per_node(&sizes, &probed, 4, part);
+            assert_eq!(load.iter().sum::<usize>(), total, "{part:?}");
+        }
+    }
+
+    #[test]
+    fn scan_cycles_uses_slowest_channel() {
+        let l = ChannelLayout { n_channels: 2, per_channel: vec![10, 30] };
+        assert!((l.scan_cycles(2.0) - 15.0).abs() < 1e-12);
+    }
+}

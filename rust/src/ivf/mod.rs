@@ -1,0 +1,13 @@
+//! IVF (inverted-file) index built from scratch (paper Sec 2.2):
+//! a coarse k-means quantizer partitions the database into `nlist`
+//! clusters; queries scan only the `nprobe` nearest lists.
+
+pub mod index;
+pub mod layout;
+pub mod persist;
+pub mod shard;
+pub mod update;
+
+pub use index::IvfPqIndex;
+pub use layout::{ChannelLayout, Partitioning};
+pub use shard::Shard;

@@ -1,0 +1,167 @@
+//! Index persistence: save/load a trained IVF-PQ index (and shards) in a
+//! simple length-prefixed binary format, so memory nodes can boot from a
+//! file instead of retraining — the practical deployment path for the
+//! paper's "the coordinator loads the database into node DRAM at init".
+//!
+//! Format (little-endian):
+//!   magic "CHAMIDX1" | d u32 | m u32 | nlist u32
+//!   | coarse centroids f32[nlist*d]
+//!   | pq centroids f32[m*256*dsub]
+//!   | per list: len u32, codes u8[len*m], ids u64[len]
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian as LE, ReadBytesExt, WriteBytesExt};
+
+use super::index::IvfPqIndex;
+use crate::pq::codebook::{PqCodebook, KSUB};
+
+const MAGIC: &[u8; 8] = b"CHAMIDX1";
+
+impl IvfPqIndex {
+    /// Serialize to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_u32::<LE>(self.d as u32)?;
+        w.write_u32::<LE>(self.m as u32)?;
+        w.write_u32::<LE>(self.nlist as u32)?;
+        write_f32s(&mut w, &self.centroids)?;
+        write_f32s(&mut w, &self.pq.centroids)?;
+        for l in 0..self.nlist {
+            let ids = &self.list_ids[l];
+            w.write_u32::<LE>(ids.len() as u32)?;
+            w.write_all(&self.list_codes[l])?;
+            for &id in ids {
+                w.write_u64::<LE>(id)?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Deserialize from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<IvfPqIndex> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a chameleon index file");
+        }
+        let d = r.read_u32::<LE>()? as usize;
+        let m = r.read_u32::<LE>()? as usize;
+        let nlist = r.read_u32::<LE>()? as usize;
+        if m == 0 || d == 0 || d % m != 0 || nlist == 0 || nlist > 1 << 24 {
+            bail!("corrupt index header: d={d} m={m} nlist={nlist}");
+        }
+        let dsub = d / m;
+        let centroids = read_f32s(&mut r, nlist * d)?;
+        let pq_centroids = read_f32s(&mut r, m * KSUB * dsub)?;
+        let mut list_codes = Vec::with_capacity(nlist);
+        let mut list_ids = Vec::with_capacity(nlist);
+        for _ in 0..nlist {
+            let len = r.read_u32::<LE>()? as usize;
+            if len > 1 << 28 {
+                bail!("corrupt list length {len}");
+            }
+            let mut codes = vec![0u8; len * m];
+            r.read_exact(&mut codes)?;
+            let mut ids = Vec::with_capacity(len);
+            for _ in 0..len {
+                ids.push(r.read_u64::<LE>()?);
+            }
+            list_codes.push(codes);
+            list_ids.push(ids);
+        }
+        Ok(IvfPqIndex {
+            d,
+            m,
+            nlist,
+            centroids,
+            pq: PqCodebook { d, m, centroids: pq_centroids },
+            list_codes,
+            list_ids,
+        })
+    }
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    for &x in xs {
+        w.write_f32::<LE>(x)?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.read_f32::<LE>()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cham_{}_{}", name, std::process::id()))
+    }
+
+    fn toy() -> IvfPqIndex {
+        let mut rng = Rng::new(1);
+        let (n, d, m, nlist) = (1200, 16, 4, 16);
+        let data = rng.normal_vec(n * d);
+        IvfPqIndex::build(&data, n, d, m, nlist, 2)
+    }
+
+    #[test]
+    fn roundtrip_preserves_search_results() {
+        let idx = toy();
+        let path = tmp("roundtrip");
+        idx.save(&path).unwrap();
+        let back = IvfPqIndex::load(&path).unwrap();
+        assert_eq!(back.d, idx.d);
+        assert_eq!(back.len(), idx.len());
+        let mut rng = Rng::new(9);
+        for _ in 0..5 {
+            let q = rng.normal_vec(idx.d);
+            let (a_ids, a_d) = idx.search(&q, 8, 10);
+            let (b_ids, b_d) = back.search(&q, 8, 10);
+            assert_eq!(a_ids, b_ids);
+            assert_eq!(a_d, b_d);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"definitely not an index").unwrap();
+        assert!(IvfPqIndex::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let idx = toy();
+        let path = tmp("trunc");
+        idx.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(IvfPqIndex::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(IvfPqIndex::load("/nonexistent/idx.bin").is_err());
+    }
+}

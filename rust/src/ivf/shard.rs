@@ -1,0 +1,126 @@
+//! A memory-node shard of the database: the slice of every IVF list that
+//! one disaggregated node holds under vector-sharded partitioning
+//! (paper Sec 4.3, first scheme).
+
+use super::index::IvfPqIndex;
+
+/// One node's shard: per-list codes + global ids.
+pub struct Shard {
+    pub node_id: usize,
+    pub n_nodes: usize,
+    pub m: usize,
+    pub list_codes: Vec<Vec<u8>>,
+    pub list_ids: Vec<Vec<u64>>,
+}
+
+impl Shard {
+    /// Carve node `node_id`'s vector-sharded slice out of a built index.
+    /// Vector `j` of list `l` goes to node `j % n_nodes` (round-robin, so
+    /// shard sizes differ by at most one vector per list).
+    pub fn carve(index: &IvfPqIndex, node_id: usize, n_nodes: usize) -> Shard {
+        assert!(node_id < n_nodes);
+        let m = index.m;
+        let mut list_codes = Vec::with_capacity(index.nlist);
+        let mut list_ids = Vec::with_capacity(index.nlist);
+        for l in 0..index.nlist {
+            let ids = &index.list_ids[l];
+            let codes = &index.list_codes[l];
+            let mut sc = Vec::new();
+            let mut si = Vec::new();
+            for (j, &id) in ids.iter().enumerate() {
+                if j % n_nodes == node_id {
+                    sc.extend_from_slice(&codes[j * m..(j + 1) * m]);
+                    si.push(id);
+                }
+            }
+            list_codes.push(sc);
+            list_ids.push(si);
+        }
+        Shard { node_id, n_nodes, m, list_codes, list_ids }
+    }
+
+    /// Vectors this shard scans for a probe set.
+    pub fn scan_count(&self, lists: &[u32]) -> usize {
+        lists.iter().map(|&l| self.list_ids[l as usize].len()).sum()
+    }
+
+    /// Total vectors held.
+    pub fn len(&self) -> usize {
+        self.list_ids.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Gather the (codes, global ids) of a probe set into contiguous
+    /// buffers — the staging step before either the native ADC scan or the
+    /// PJRT accelerator artifact.
+    pub fn gather(&self, lists: &[u32]) -> (Vec<u8>, Vec<u64>) {
+        let total = self.scan_count(lists);
+        let mut codes = Vec::with_capacity(total * self.m);
+        let mut ids = Vec::with_capacity(total);
+        for &l in lists {
+            codes.extend_from_slice(&self.list_codes[l as usize]);
+            ids.extend_from_slice(&self.list_ids[l as usize]);
+        }
+        (codes, ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy() -> IvfPqIndex {
+        let mut rng = Rng::new(1);
+        let (n, d, m, nlist) = (2000, 16, 4, 32);
+        let data = rng.normal_vec(n * d);
+        IvfPqIndex::build(&data, n, d, m, nlist, 3)
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        let idx = toy();
+        let shards: Vec<Shard> = (0..4).map(|i| Shard::carve(&idx, i, 4)).collect();
+        let total: usize = shards.iter().map(Shard::len).sum();
+        assert_eq!(total, idx.len());
+        // Every id appears in exactly one shard.
+        let mut all: Vec<u64> =
+            shards.iter().flat_map(|s| s.list_ids.iter().flatten().cloned()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), idx.len());
+    }
+
+    #[test]
+    fn shard_loads_balanced_per_list() {
+        let idx = toy();
+        let shards: Vec<Shard> = (0..4).map(|i| Shard::carve(&idx, i, 4)).collect();
+        for l in 0..idx.nlist {
+            let sizes: Vec<usize> =
+                shards.iter().map(|s| s.list_ids[l].len()).collect();
+            let max = sizes.iter().max().unwrap();
+            let min = sizes.iter().min().unwrap();
+            assert!(max - min <= 1, "list {l}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn gather_aligns_codes_and_ids() {
+        let idx = toy();
+        let s = Shard::carve(&idx, 0, 2);
+        let lists = [0u32, 3, 7];
+        let (codes, ids) = s.gather(&lists);
+        assert_eq!(codes.len(), ids.len() * s.m);
+        assert_eq!(ids.len(), s.scan_count(&lists));
+    }
+
+    #[test]
+    fn single_node_shard_is_whole_index() {
+        let idx = toy();
+        let s = Shard::carve(&idx, 0, 1);
+        assert_eq!(s.len(), idx.len());
+    }
+}

@@ -1,0 +1,147 @@
+//! Dynamic knowledge-base updates: add and remove vectors without
+//! retraining — the RALM selling point the paper's introduction leads
+//! with ("knowledge editing can be achieved by simply updating the
+//! database, without retraining the LLM").
+//!
+//! Adds assign the new vector to its nearest coarse centroid and append
+//! its PQ code; removals tombstone by global id. Neither touches the
+//! trained coarse/PQ codebooks (the Faiss operating model).
+
+use std::collections::HashSet;
+
+use super::index::IvfPqIndex;
+use crate::pq::kmeans::nearest;
+
+impl IvfPqIndex {
+    /// Insert one vector with a caller-chosen global id. Returns the IVF
+    /// list it landed in.
+    pub fn add(&mut self, id: u64, v: &[f32]) -> usize {
+        assert_eq!(v.len(), self.d);
+        let (l, _) = nearest(v, &self.centroids, self.nlist, self.d);
+        let mut code = vec![0u8; self.m];
+        self.pq.encode_one(v, &mut code);
+        self.list_codes[l].extend_from_slice(&code);
+        self.list_ids[l].push(id);
+        l
+    }
+
+    /// Insert a batch of (id, vector) pairs.
+    pub fn add_batch(&mut self, ids: &[u64], data: &[f32]) {
+        assert_eq!(data.len(), ids.len() * self.d);
+        for (i, &id) in ids.iter().enumerate() {
+            self.add(id, &data[i * self.d..(i + 1) * self.d]);
+        }
+    }
+
+    /// Remove every vector whose id is in `ids`. Returns how many entries
+    /// were removed. O(total vectors) — batched removal is the intended
+    /// usage pattern (knowledge deletions are rare, bulk events).
+    pub fn remove(&mut self, ids: &HashSet<u64>) -> usize {
+        let mut removed = 0;
+        let m = self.m;
+        for l in 0..self.nlist {
+            let keep: Vec<usize> = (0..self.list_ids[l].len())
+                .filter(|&j| !ids.contains(&self.list_ids[l][j]))
+                .collect();
+            if keep.len() == self.list_ids[l].len() {
+                continue;
+            }
+            removed += self.list_ids[l].len() - keep.len();
+            let mut new_codes = Vec::with_capacity(keep.len() * m);
+            let mut new_ids = Vec::with_capacity(keep.len());
+            for &j in &keep {
+                new_codes.extend_from_slice(&self.list_codes[l][j * m..(j + 1) * m]);
+                new_ids.push(self.list_ids[l][j]);
+            }
+            self.list_codes[l] = new_codes;
+            self.list_ids[l] = new_ids;
+        }
+        removed
+    }
+
+    /// Replace the vector behind an id (delete + re-insert).
+    pub fn update(&mut self, id: u64, v: &[f32]) {
+        let mut one = HashSet::new();
+        one.insert(id);
+        self.remove(&one);
+        self.add(id, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy() -> (IvfPqIndex, Vec<f32>, usize) {
+        let mut rng = Rng::new(1);
+        let (n, d, m, nlist) = (1500, 16, 4, 16);
+        let data = rng.normal_vec(n * d);
+        (IvfPqIndex::build(&data, n, d, m, nlist, 2), data, d)
+    }
+
+    #[test]
+    fn added_vector_is_retrievable() {
+        let (mut idx, _, d) = toy();
+        let mut rng = Rng::new(5);
+        let v = rng.normal_vec(d);
+        idx.add(999_999, &v);
+        // Searching with the vector itself must surface the new id.
+        let (ids, _) = idx.search(&v, idx.nlist, 10);
+        assert!(ids.contains(&999_999), "{ids:?}");
+    }
+
+    #[test]
+    fn removed_vector_never_returned() {
+        let (mut idx, data, d) = toy();
+        let victim = 42u64;
+        let before = idx.len();
+        let mut ids = HashSet::new();
+        ids.insert(victim);
+        assert_eq!(idx.remove(&ids), 1);
+        assert_eq!(idx.len(), before - 1);
+        let q = &data[victim as usize * d..(victim as usize + 1) * d];
+        let (got, _) = idx.search(q, idx.nlist, 50);
+        assert!(!got.contains(&victim));
+    }
+
+    #[test]
+    fn update_moves_vector() {
+        let (mut idx, _, d) = toy();
+        let mut rng = Rng::new(7);
+        let v1 = rng.normal_vec(d);
+        let v2: Vec<f32> = v1.iter().map(|x| x + 10.0).collect();
+        idx.add(777_777, &v1);
+        idx.update(777_777, &v2);
+        // Still exactly one copy.
+        let count: usize = idx
+            .list_ids
+            .iter()
+            .flatten()
+            .filter(|&&i| i == 777_777)
+            .count();
+        assert_eq!(count, 1);
+        let (got, _) = idx.search(&v2, idx.nlist, 5);
+        assert!(got.contains(&777_777));
+    }
+
+    #[test]
+    fn batch_add_keeps_alignment() {
+        let (mut idx, _, d) = toy();
+        let mut rng = Rng::new(8);
+        let new = rng.normal_vec(5 * d);
+        idx.add_batch(&[9001, 9002, 9003, 9004, 9005], &new);
+        for l in 0..idx.nlist {
+            assert_eq!(idx.list_codes[l].len(), idx.list_ids[l].len() * idx.m);
+        }
+        assert_eq!(idx.len(), 1505);
+    }
+
+    #[test]
+    fn remove_batch_counts() {
+        let (mut idx, _, _) = toy();
+        let ids: HashSet<u64> = (0..100u64).collect();
+        assert_eq!(idx.remove(&ids), 100);
+        assert_eq!(idx.remove(&ids), 0); // idempotent
+    }
+}

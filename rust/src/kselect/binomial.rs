@@ -1,0 +1,164 @@
+//! Binomial analysis of the approximate hierarchical priority queue
+//! (paper Sec 4.2.2, Fig 7/8).
+//!
+//! With distances dealt uniformly to `num_queues` L1 queues, the count of
+//! true top-K results landing in one queue is Binomial(K, 1/num_queues):
+//! `p(k) = C(K, k) (1/Q)^k (1 - 1/Q)^(K-k)`. Truncating each L1 queue to
+//! the smallest depth whose exceedance probability is below a target keeps
+//! results identical for (e.g.) 99% of queries at ~10x less hardware.
+
+/// P[one queue holds exactly `k` of the top-K] (paper's p(k)).
+pub fn hold_probability(big_k: usize, num_queues: usize, k: usize) -> f64 {
+    if k > big_k {
+        return 0.0;
+    }
+    let p = 1.0 / num_queues as f64;
+    ln_choose(big_k, k).exp()
+        * p.powi(k as i32)
+        * (1.0 - p).powi((big_k - k) as i32)
+}
+
+/// P[one queue holds more than `depth` of the top-K] (tail beyond the
+/// truncated queue's capacity).
+pub fn exceed_probability(big_k: usize, num_queues: usize, depth: usize) -> f64 {
+    let mut cum = 0.0;
+    for k in 0..=depth.min(big_k) {
+        cum += hold_probability(big_k, num_queues, k);
+    }
+    (1.0 - cum).max(0.0)
+}
+
+/// P[*any* of the queues overflows] via the union bound — the per-query
+/// probability that the approximate module's output differs from exact.
+pub fn any_queue_exceed_probability(big_k: usize, num_queues: usize, depth: usize) -> f64 {
+    (num_queues as f64 * exceed_probability(big_k, num_queues, depth)).min(1.0)
+}
+
+/// Smallest per-queue depth such that >= `quantile` of queries (e.g. 0.99)
+/// are guaranteed identical to exact K-selection (union bound).
+pub fn required_depth(big_k: usize, num_queues: usize, quantile: f64) -> usize {
+    let target = (1.0 - quantile) / num_queues as f64;
+    for depth in 1..=big_k {
+        if exceed_probability(big_k, num_queues, depth) <= target {
+            return depth;
+        }
+    }
+    big_k
+}
+
+/// ln C(n, k) via lgamma, stable for the K≈100 regime of the paper.
+fn ln_choose(n: usize, k: usize) -> f64 {
+    ln_gamma((n + 1) as f64) - ln_gamma((k + 1) as f64) - ln_gamma((n - k + 1) as f64)
+}
+
+/// Lanczos approximation of ln Γ(x) (x > 0).
+fn ln_gamma(x: f64) -> f64 {
+    // g = 7, n = 9 Lanczos coefficients.
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let total: f64 =
+            (0..=100).map(|k| hold_probability(100, 16, k)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+    }
+
+    #[test]
+    fn paper_fig7_shape() {
+        // Fig 7: with 16 queues and K=100, mean is 6.25 and holding more
+        // than 20 is vanishingly unlikely.
+        let mean: f64 =
+            (0..=100).map(|k| k as f64 * hold_probability(100, 16, k)).sum();
+        assert!((mean - 6.25).abs() < 1e-6, "mean {mean}");
+        assert!(exceed_probability(100, 16, 20) < 1e-5);
+        // The mode sits near the mean.
+        let mode = (0..=100)
+            .max_by(|&a, &b| {
+                hold_probability(100, 16, a)
+                    .partial_cmp(&hold_probability(100, 16, b))
+                    .unwrap()
+            })
+            .unwrap();
+        assert!((5..=7).contains(&mode), "mode {mode}");
+    }
+
+    #[test]
+    fn required_depth_monotone_in_queues() {
+        // More queues => fewer of the top-K per queue => shallower queues.
+        let d4 = required_depth(100, 4, 0.99);
+        let d16 = required_depth(100, 16, 0.99);
+        let d64 = required_depth(100, 64, 0.99);
+        assert!(d4 > d16 && d16 > d64, "{d4} {d16} {d64}");
+        // Fig 8: order-of-magnitude savings at 16+ queues.
+        assert!(d16 <= 20, "depth {d16}");
+        assert!(d64 * 64 < 100 * 64 / 8, "no 8x saving: {d64}");
+    }
+
+    #[test]
+    fn exceedance_matches_monte_carlo() {
+        // Empirically deal 100 ranks into 16 queues and count overflows.
+        let mut rng = Rng::new(9);
+        let (big_k, q, depth) = (100usize, 16usize, 10usize);
+        let trials = 20_000;
+        let mut exceed = 0usize;
+        for _ in 0..trials {
+            let mut counts = vec![0usize; q];
+            for _ in 0..big_k {
+                counts[rng.below(q)] += 1;
+            }
+            if counts[0] > depth {
+                exceed += 1;
+            }
+        }
+        let emp = exceed as f64 / trials as f64;
+        let ana = exceed_probability(big_k, q, depth);
+        assert!(
+            (emp - ana).abs() < 0.01,
+            "empirical {emp} vs analytic {ana}"
+        );
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24.0f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(11.0) - (3628800.0f64).ln()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn union_bound_upper_bounds() {
+        let single = exceed_probability(100, 16, 12);
+        let any = any_queue_exceed_probability(100, 16, 12);
+        assert!(any >= single);
+        assert!(any <= 16.0 * single + 1e-12);
+    }
+}

@@ -1,0 +1,199 @@
+//! The (approximate) hierarchical priority queue (paper Sec 4.2).
+//!
+//! Level-1: one truncated systolic queue per producer lane (two per PQ
+//! decoding unit in hardware — a queue ingests one element per two
+//! cycles while a decoding unit emits one per cycle). Level-2: an exact
+//! merge of the lane survivors. With `l1_depth == k` the module is exact;
+//! the paper's contribution is truncating `l1_depth` to the binomial bound
+//! (Sec 4.2.2) for ~10x resource savings (Fig 8).
+
+use super::binomial::required_depth;
+use super::systolic::{Entry, SystolicQueue};
+
+/// Sizing of a hierarchical K-selection module.
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchicalConfig {
+    pub k: usize,
+    pub num_lanes: usize,
+    /// Per-lane L1 queue depth. `k` = exact module.
+    pub l1_depth: usize,
+}
+
+impl HierarchicalConfig {
+    /// Exact configuration (L1 queues of full length K).
+    pub fn exact(k: usize, num_lanes: usize) -> Self {
+        HierarchicalConfig { k, num_lanes, l1_depth: k }
+    }
+
+    /// Approximate configuration sized for `quantile` identical queries
+    /// (paper uses 0.99).
+    pub fn approximate(k: usize, num_lanes: usize, quantile: f64) -> Self {
+        HierarchicalConfig {
+            k,
+            num_lanes,
+            l1_depth: required_depth(k, num_lanes, quantile).min(k),
+        }
+    }
+
+    /// Total register/compare-swap units across L1 + L2 queues — the
+    /// resource proxy of Fig 8 (hardware cost is ~linear in queue length).
+    pub fn resource_units(&self) -> usize {
+        self.num_lanes * self.l1_depth + self.k
+    }
+}
+
+/// A software-simulated hierarchical priority queue processing a stream of
+/// (distance, id) entries dealt round-robin across lanes — exactly how the
+/// PQ decoding units feed the hardware queues.
+pub struct ApproxHierarchicalQueue {
+    pub cfg: HierarchicalConfig,
+    lanes: Vec<SystolicQueue>,
+    next_lane: usize,
+}
+
+impl ApproxHierarchicalQueue {
+    pub fn new(cfg: HierarchicalConfig) -> Self {
+        let lanes = (0..cfg.num_lanes).map(|_| SystolicQueue::new(cfg.l1_depth)).collect();
+        ApproxHierarchicalQueue { cfg, lanes, next_lane: 0 }
+    }
+
+    /// Ingest one distance (round-robin lane assignment).
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u64) {
+        self.lanes[self.next_lane].replace((dist, id));
+        self.next_lane = (self.next_lane + 1) % self.cfg.num_lanes;
+    }
+
+    /// Ingest a slice of distances with ids `base..base+n`.
+    pub fn push_block(&mut self, dists: &[f32], base: u64) {
+        for (i, &d) in dists.iter().enumerate() {
+            self.push(d, base + i as u64);
+        }
+    }
+
+    /// L2 merge: exact top-K over all lane survivors, ascending.
+    pub fn finalize(&self) -> Vec<Entry> {
+        let mut all: Vec<Entry> =
+            self.lanes.iter().flat_map(|q| q.drain_sorted()).collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        all.truncate(self.cfg.k);
+        all
+    }
+
+    /// Simulated hardware cycles: lanes run in parallel, so the maximum
+    /// lane cycle count is the module's latency contribution.
+    pub fn cycles(&self) -> u64 {
+        self.lanes.iter().map(SystolicQueue::cycles).max().unwrap_or(0)
+    }
+}
+
+/// Exact software top-k (ascending) — oracle for tests and agreement
+/// measurements.
+pub fn exact_topk(dists: &[f32], k: usize) -> Vec<Entry> {
+    let mut all: Vec<Entry> =
+        dists.iter().enumerate().map(|(i, &d)| (d, i as u64)).collect();
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    all.truncate(k);
+    all
+}
+
+/// Fraction of streams (over `trials` random shuffles) where the
+/// approximate module's result *distances* exactly match exact top-K —
+/// the "99% identical" metric of Sec 4.2.2.
+pub fn agreement_rate(
+    cfg: HierarchicalConfig,
+    n: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut agree = 0usize;
+    for _ in 0..trials {
+        let dists: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut q = ApproxHierarchicalQueue::new(cfg);
+        q.push_block(&dists, 0);
+        let approx = q.finalize();
+        let exact = exact_topk(&dists, cfg.k);
+        let same = approx.len() == exact.len()
+            && approx.iter().zip(&exact).all(|(a, e)| a.0 == e.0);
+        agree += usize::from(same);
+    }
+    agree as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_config_matches_oracle() {
+        prop::check(
+            "hier-exact-matches",
+            |rng| {
+                let k = 1 + rng.below(50);
+                let lanes = 1 + rng.below(8);
+                let dists = prop::gen_distances(rng, 400);
+                (k, lanes, dists)
+            },
+            |(k, lanes, dists)| {
+                let cfg = HierarchicalConfig::exact(*k, *lanes);
+                let mut q = ApproxHierarchicalQueue::new(cfg);
+                q.push_block(dists, 0);
+                let got = q.finalize();
+                let expect = exact_topk(dists, *k);
+                assert_eq!(got.len(), expect.len());
+                for (g, e) in got.iter().zip(&expect) {
+                    assert_eq!(g.0, e.0, "dists differ");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn approximate_agrees_at_target_quantile() {
+        // Paper claim: sized for 99%, the approximate queue returns
+        // identical results for >= 99% of queries.
+        let cfg = HierarchicalConfig::approximate(100, 16, 0.99);
+        assert!(cfg.l1_depth < 100, "should truncate, got {}", cfg.l1_depth);
+        let rate = agreement_rate(cfg, 4096, 400, 7);
+        assert!(rate >= 0.985, "agreement {rate}");
+    }
+
+    #[test]
+    fn resource_savings_order_of_magnitude() {
+        // Fig 8: approximate vs exact resources at 16 lanes, K=100.
+        let exact = HierarchicalConfig::exact(100, 16).resource_units();
+        let approx =
+            HierarchicalConfig::approximate(100, 16, 0.99).resource_units();
+        assert!(
+            exact as f64 / approx as f64 > 4.0,
+            "savings only {exact}/{approx}"
+        );
+    }
+
+    #[test]
+    fn ids_track_distances() {
+        let dists = vec![9.0, 1.0, 8.0, 0.5, 7.0, 0.25];
+        let cfg = HierarchicalConfig::exact(3, 2);
+        let mut q = ApproxHierarchicalQueue::new(cfg);
+        q.push_block(&dists, 100);
+        let got = q.finalize();
+        assert_eq!(got[0], (0.25, 105));
+        assert_eq!(got[1], (0.5, 103));
+        assert_eq!(got[2], (1.0, 101));
+    }
+
+    #[test]
+    fn parallel_lanes_cycle_count() {
+        // 16 lanes, 1600 pushes round-robin -> 100 replaces per lane ->
+        // 200 cycles max (2 per replace).
+        let cfg = HierarchicalConfig::exact(10, 16);
+        let mut q = ApproxHierarchicalQueue::new(cfg);
+        for i in 0..1600 {
+            q.push(i as f32, i);
+        }
+        assert_eq!(q.cycles(), 200);
+    }
+}

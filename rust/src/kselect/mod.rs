@@ -1,0 +1,13 @@
+//! K-selection hardware designs (paper Sec 4.2): the register-array
+//! systolic priority queue primitive, the exact hierarchical arrangement,
+//! and the paper's contribution — the *approximate* hierarchical priority
+//! queue whose truncated L1 queues save an order of magnitude of hardware
+//! while keeping >= 99% of queries bit-identical.
+
+pub mod binomial;
+pub mod hierarchical;
+pub mod systolic;
+
+pub use binomial::{exceed_probability, required_depth};
+pub use hierarchical::{ApproxHierarchicalQueue, HierarchicalConfig};
+pub use systolic::SystolicQueue;

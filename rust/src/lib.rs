@@ -1,0 +1,39 @@
+//! # Chameleon — heterogeneous & disaggregated RALM serving (reproduction)
+//!
+//! Rust + JAX + Pallas reproduction of *"Chameleon: a Heterogeneous and
+//! Disaggregated Accelerator System for Retrieval-Augmented Language
+//! Models"* (Jiang et al., 2023).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * **L3 (this crate)** — the request path: CPU coordinator, ChamVS
+//!   memory nodes and dispatcher, ChamLM worker pool, hardware performance
+//!   models, and every substrate the paper depends on (IVF-PQ built from
+//!   scratch, K-selection hardware simulators, LogGP network model, ...).
+//! * **L2 (python/compile)** — JAX model + search graphs, AOT-lowered to
+//!   HLO text in `artifacts/`, loaded here via the PJRT C API
+//!   ([`runtime`]). Python never runs at request time.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot-spots (PQ LUT/ADC scan, approximate hierarchical top-K, IVF scan,
+//!   decode attention).
+//!
+//! Quick start: see `examples/quickstart.rs`, or run
+//! `cargo run --release -- demo`.
+
+pub mod chamlm;
+pub mod chamvs;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hwmodel;
+pub mod ivf;
+pub mod kselect;
+pub mod net;
+pub mod pq;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+pub use config::{DatasetConfig, ModelConfig, SystemConfig};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,222 @@
+//! `chameleon` — the leader CLI.
+//!
+//! Subcommands:
+//!   demo                quickstart: search + one generated sequence
+//!   search              vector search over a scaled dataset
+//!   serve               generate sequences end-to-end (RALM inference)
+//!   report <id>         regenerate a paper table/figure
+//!                       (fig7 fig8 fig9 fig10 fig11 fig12 fig13
+//!                        table4 table5 recall all)
+
+use anyhow::{bail, Result};
+use chameleon::chamlm::pool::WorkerPool;
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config::{self, SystemConfig};
+use chameleon::coordinator::engine::RalmEngine;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::report;
+use chameleon::runtime::Runtime;
+use chameleon::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("demo") => demo(args),
+        Some("search") => search(args),
+        Some("serve") => serve(args),
+        Some("report") => report_cmd(args),
+        Some(other) => bail!("unknown subcommand '{other}' (try --help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "chameleon — heterogeneous & disaggregated RALM serving (reproduction)\n\
+         \n\
+         USAGE: chameleon <subcommand> [options]\n\
+         \n\
+         demo                      quickstart search + generation\n\
+         search [--dataset SIFT] [--queries 64] [--nodes 2] [--pjrt]\n\
+         serve  [--model dec_tiny] [--tokens 64] [--sequences 2]\n\
+         report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|all>\n\
+         \n\
+         Common options: --n <scaled db size> --seed <u64> --artifacts <dir>"
+    );
+}
+
+/// Build the standard retrieval stack for a dataset config.
+fn build_retriever(
+    ds: &'static config::DatasetConfig,
+    n: usize,
+    n_nodes: usize,
+    k: usize,
+    use_pjrt: bool,
+    sys: &SystemConfig,
+) -> Result<(Retriever, SyntheticDataset)> {
+    let data = SyntheticDataset::generate_sized(ds, n, 256, sys.seed);
+    let nlist = (n as f64).sqrt() as usize;
+    eprintln!("[build] dataset {} n={n} d={} nlist={nlist}", ds.name, ds.d);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, sys.seed ^ 1);
+    let nodes: Vec<MemoryNode> = if use_pjrt {
+        let runtime = Runtime::new(&sys.artifacts_dir)?;
+        (0..n_nodes)
+            .map(|i| {
+                MemoryNode::with_pjrt(
+                    Shard::carve(&index, i, n_nodes),
+                    &runtime,
+                    k,
+                    sys.seed,
+                )
+            })
+            .collect::<Result<_>>()?
+    } else {
+        (0..n_nodes)
+            .map(|i| {
+                Ok(MemoryNode::new(Shard::carve(&index, i, n_nodes), ScanEngine::Native, k))
+            })
+            .collect::<Result<_>>()?
+    };
+    let dispatcher = Dispatcher::new(nodes, k);
+    let corpus = Corpus::generate(n, 2048, config::CHUNK_LEN, sys.seed ^ 2);
+    Ok((Retriever::new(ds, index, dispatcher, corpus), data))
+}
+
+fn demo(args: &Args) -> Result<()> {
+    let sys = system_config(args);
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let (mut retriever, data) = build_retriever(ds, 4000, 2, 10, false, &sys)?;
+    println!("== vector search demo ==");
+    let r = retriever.retrieve(data.query(0))?;
+    println!("top-10 ids: {:?}", r.ids);
+    println!(
+        "modeled paper-scale retrieval latency: {:.3} ms",
+        r.modeled_s * 1e3
+    );
+
+    println!("\n== RALM generation demo (dec_tiny via PJRT) ==");
+    let runtime = Runtime::new(&sys.artifacts_dir)?;
+    let pool = WorkerPool::new(&runtime, &config::DEC_TINY, 1, sys.seed)?;
+    let mut engine = RalmEngine::new(pool, retriever, &config::DEC_S);
+    let stats = engine.generate(1, 32, sys.seed)?;
+    println!("generated 32 tokens: {:?}...", &stats.tokens[..8]);
+    println!(
+        "measured {:.1} ms/token, modeled paper-scale {:.2} ms/token",
+        stats.measured_total() / 32.0 * 1e3,
+        stats.modeled_total() / 32.0 * 1e3
+    );
+    Ok(())
+}
+
+fn search(args: &Args) -> Result<()> {
+    let sys = system_config(args);
+    let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 20_000);
+    let n_nodes = args.get_usize("nodes", 2);
+    let n_queries = args.get_usize("queries", 64);
+    let k = args.get_usize("k", 100);
+    let (mut retriever, data) =
+        build_retriever(ds, n, n_nodes, k, args.flag("pjrt"), &sys)?;
+    let mut modeled = Vec::new();
+    let mut measured = Vec::new();
+    for i in 0..n_queries {
+        let r = retriever.retrieve(data.query(i % data.n_queries))?;
+        modeled.push(r.modeled_s);
+        measured.push(r.measured_s);
+    }
+    use chameleon::util::stats::Summary;
+    println!("{}", Summary::of(&modeled).render_ms("modeled paper-scale"));
+    println!("{}", Summary::of(&measured).render_ms("measured (scaled, host)"));
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let sys = system_config(args);
+    let model = match args.get_or("model", "dec_tiny") {
+        "dec_tiny" => &config::DEC_TINY,
+        "encdec_tiny" => &config::ENCDEC_TINY,
+        other => bail!("serve supports dec_tiny|encdec_tiny (got {other})"),
+    };
+    let paper = if model.is_encdec() { &config::ENCDEC_S } else { &config::DEC_S };
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let n_tokens = args.get_usize("tokens", 64);
+    let n_seq = args.get_usize("sequences", 2);
+    let (retriever, _) = build_retriever(ds, 8000, 1, model.k, false, &sys)?;
+    let runtime = Runtime::new(&sys.artifacts_dir)?;
+    let pool = WorkerPool::new(&runtime, model, 1, sys.seed)?;
+    let mut engine = RalmEngine::new(pool, retriever, paper);
+    let prompts: Vec<u32> = (0..n_seq as u32).map(|i| i + 1).collect();
+    let stats = engine.serve_batch(&prompts, n_tokens, sys.seed)?;
+    println!(
+        "served {} sequences x {} tokens: measured {:.2}s total, modeled paper-scale {:.1} tokens/s",
+        stats.sequences,
+        n_tokens,
+        stats.measured_s,
+        stats.modeled_tokens_per_s()
+    );
+    Ok(())
+}
+
+fn report_cmd(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let n = args.get_usize("n", 20_000);
+    let q = args.get_usize("queries", 64);
+    let seed = args.get_u64("seed", 42);
+    let run_one = |id: &str| -> Result<()> {
+        let text = match id {
+            "fig7" => report::fig7_probability(),
+            "fig8" => report::fig8_resources(),
+            "fig9" => report::fig9_search_latency(n, q, seed),
+            "fig10" => report::fig10_scalability(n, q, seed),
+            "fig11" => report::fig11_latency(512),
+            "fig12" => report::fig12_throughput(512),
+            "fig13" => report::fig13_ratio(),
+            "table4" => report::table4_resources(),
+            "table5" => report::table5_energy(),
+            "recall" => report::recall_report(n.min(20_000), q.min(32), seed),
+            other => bail!("unknown report '{other}'"),
+        };
+        println!("{text}");
+        Ok(())
+    };
+    if which == "all" {
+        for id in [
+            "fig7", "fig8", "table4", "table5", "fig9", "fig10", "fig11", "fig12",
+            "fig13", "recall",
+        ] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn system_config(args: &Args) -> SystemConfig {
+    let mut sys = SystemConfig::default();
+    if let Some(dir) = args.get("artifacts") {
+        sys.artifacts_dir = dir.to_string();
+    }
+    sys.seed = args.get_u64("seed", sys.seed);
+    sys
+}

@@ -1,0 +1,88 @@
+//! Coordinator-side client: broadcasts scan requests to remote memory
+//! nodes and merges their responses (the networked twin of
+//! `chamvs::dispatcher`).
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+
+use anyhow::{Context, Result};
+
+use super::protocol::{Frame, Kind, ScanRequest, ScanResponse};
+use crate::chamvs::dispatcher::merge_topk;
+use crate::chamvs::node::NodeResult;
+
+/// Connections to a set of remote memory nodes.
+pub struct NodeClient {
+    conns: Vec<(SocketAddr, TcpStream, BufReader<TcpStream>)>,
+    pub k: usize,
+}
+
+impl NodeClient {
+    pub fn connect(addrs: &[SocketAddr], k: usize) -> Result<NodeClient> {
+        let mut conns = Vec::with_capacity(addrs.len());
+        for &addr in addrs {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to memory node {addr}"))?;
+            stream.set_nodelay(true)?;
+            let reader = BufReader::new(stream.try_clone()?);
+            conns.push((addr, stream, reader));
+        }
+        Ok(NodeClient { conns, k })
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Broadcast one query and merge the per-node top-K responses.
+    /// Returns (global top-K, max node modeled seconds).
+    pub fn search(
+        &mut self,
+        query_id: u64,
+        query: &[f32],
+        lists: &[u32],
+    ) -> Result<(Vec<(f32, u64)>, f64)> {
+        let req = ScanRequest {
+            query_id,
+            query: query.to_vec(),
+            lists: lists.to_vec(),
+            k: self.k as u32,
+        };
+        let frame = req.encode();
+        // Broadcast phase (paper step 5).
+        for (_, stream, _) in &mut self.conns {
+            frame.write_to(stream)?;
+        }
+        // Gather phase (paper step 7) — responses arrive in node order on
+        // each dedicated connection.
+        let mut results = Vec::with_capacity(self.conns.len());
+        let mut max_modeled = 0.0f64;
+        for (addr, _, reader) in &mut self.conns {
+            let f = Frame::read_from(reader)
+                .with_context(|| format!("reading response from {addr}"))?;
+            let resp = ScanResponse::decode(&f)?;
+            anyhow::ensure!(resp.query_id == query_id, "response id mismatch");
+            max_modeled = max_modeled.max(resp.modeled_s);
+            results.push(NodeResult {
+                topk: resp
+                    .dists
+                    .iter()
+                    .zip(&resp.ids)
+                    .map(|(&d, &i)| (d, i))
+                    .collect(),
+                measured_s: 0.0,
+                modeled_s: resp.modeled_s,
+                n_scanned: 0,
+            });
+        }
+        Ok((merge_topk(&results, self.k), max_modeled))
+    }
+
+    /// Ask all nodes to shut down.
+    pub fn shutdown_nodes(&mut self) {
+        let f = Frame { kind: Kind::Shutdown, payload: vec![] };
+        for (_, stream, _) in &mut self.conns {
+            let _ = f.write_to(stream);
+        }
+    }
+}

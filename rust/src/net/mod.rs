@@ -1,0 +1,13 @@
+//! Disaggregation over real sockets: a length-prefixed binary protocol,
+//! a memory-node server (`chamvs-node` binary) and the coordinator-side
+//! client. The paper's prototype uses a hardware TCP/IP stack on the FPGA
+//! and socket programs on the CPU (Sec 5); here both ends are std TCP
+//! with blocking I/O and one thread per connection.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::NodeClient;
+pub use protocol::{Frame, ScanRequest, ScanResponse};
+pub use server::NodeServer;

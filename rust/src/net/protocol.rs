@@ -1,0 +1,354 @@
+//! Wire protocol between the coordinator and memory nodes.
+//!
+//! Frames are length-prefixed little-endian binary:
+//!   u32 magic | u32 kind | u64 payload_len | payload
+//! Payload encodings are fixed-layout (no self-describing overhead —
+//! the hot path moves f32/u32 arrays).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+use byteorder::{LittleEndian as LE, ReadBytesExt, WriteBytesExt};
+
+pub const MAGIC: u32 = 0xC4A3_1E0F;
+
+/// Frame kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    ScanRequest = 1,
+    ScanResponse = 2,
+    Shutdown = 3,
+    /// GPU -> coordinator: retrieve neighbors + tokens for a query vector
+    /// (paper workflow step 3).
+    RetrieveRequest = 4,
+    /// Coordinator -> GPU: neighbor tokens + distances (step 9).
+    RetrieveResponse = 5,
+}
+
+impl Kind {
+    fn from_u32(x: u32) -> Result<Kind> {
+        Ok(match x {
+            1 => Kind::ScanRequest,
+            2 => Kind::ScanResponse,
+            3 => Kind::Shutdown,
+            4 => Kind::RetrieveRequest,
+            5 => Kind::RetrieveResponse,
+            other => bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// A raw frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: Kind,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_u32::<LE>(MAGIC)?;
+        w.write_u32::<LE>(self.kind as u32)?;
+        w.write_u64::<LE>(self.payload.len() as u64)?;
+        w.write_all(&self.payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let magic = r.read_u32::<LE>()?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let kind = Kind::from_u32(r.read_u32::<LE>()?)?;
+        let len = r.read_u64::<LE>()? as usize;
+        if len > 1 << 30 {
+            bail!("frame too large: {len}");
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        Ok(Frame { kind, payload })
+    }
+}
+
+/// A scan request: query vector + probed list ids (paper step 4/5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScanRequest {
+    pub query_id: u64,
+    pub query: Vec<f32>,
+    pub lists: Vec<u32>,
+    pub k: u32,
+}
+
+impl ScanRequest {
+    pub fn encode(&self) -> Frame {
+        let mut p = Vec::with_capacity(24 + 4 * self.query.len() + 4 * self.lists.len());
+        p.write_u64::<LE>(self.query_id).unwrap();
+        p.write_u32::<LE>(self.k).unwrap();
+        p.write_u32::<LE>(self.query.len() as u32).unwrap();
+        p.write_u32::<LE>(self.lists.len() as u32).unwrap();
+        for &x in &self.query {
+            p.write_f32::<LE>(x).unwrap();
+        }
+        for &l in &self.lists {
+            p.write_u32::<LE>(l).unwrap();
+        }
+        Frame { kind: Kind::ScanRequest, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<ScanRequest> {
+        if f.kind != Kind::ScanRequest {
+            bail!("not a scan request");
+        }
+        let mut r = &f.payload[..];
+        let query_id = r.read_u64::<LE>()?;
+        let k = r.read_u32::<LE>()?;
+        let qn = r.read_u32::<LE>()? as usize;
+        let ln = r.read_u32::<LE>()? as usize;
+        let mut query = Vec::with_capacity(qn);
+        for _ in 0..qn {
+            query.push(r.read_f32::<LE>()?);
+        }
+        let mut lists = Vec::with_capacity(ln);
+        for _ in 0..ln {
+            lists.push(r.read_u32::<LE>()?);
+        }
+        Ok(ScanRequest { query_id, query, lists, k })
+    }
+}
+
+/// A scan response: the node's local top-K (paper step 7).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScanResponse {
+    pub query_id: u64,
+    pub node_id: u32,
+    pub dists: Vec<f32>,
+    pub ids: Vec<u64>,
+    /// Node-side modeled accelerator seconds (for latency accounting).
+    pub modeled_s: f64,
+}
+
+impl ScanResponse {
+    pub fn encode(&self) -> Frame {
+        assert_eq!(self.dists.len(), self.ids.len());
+        let mut p = Vec::with_capacity(28 + 12 * self.ids.len());
+        p.write_u64::<LE>(self.query_id).unwrap();
+        p.write_u32::<LE>(self.node_id).unwrap();
+        p.write_f64::<LE>(self.modeled_s).unwrap();
+        p.write_u32::<LE>(self.ids.len() as u32).unwrap();
+        for &d in &self.dists {
+            p.write_f32::<LE>(d).unwrap();
+        }
+        for &i in &self.ids {
+            p.write_u64::<LE>(i).unwrap();
+        }
+        Frame { kind: Kind::ScanResponse, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<ScanResponse> {
+        if f.kind != Kind::ScanResponse {
+            bail!("not a scan response");
+        }
+        let mut r = &f.payload[..];
+        let query_id = r.read_u64::<LE>()?;
+        let node_id = r.read_u32::<LE>()?;
+        let modeled_s = r.read_f64::<LE>()?;
+        let n = r.read_u32::<LE>()? as usize;
+        let mut dists = Vec::with_capacity(n);
+        for _ in 0..n {
+            dists.push(r.read_f32::<LE>()?);
+        }
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(r.read_u64::<LE>()?);
+        }
+        Ok(ScanResponse { query_id, node_id, dists, ids, modeled_s })
+    }
+}
+
+/// GPU-side retrieval request: the raw query vector plus the list ids the
+/// colocated index scan selected (the coordinator "records the
+/// association between queries and GPU IDs", Sec 3 step 3/4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetrieveRequest {
+    pub query_id: u64,
+    pub gpu_id: u32,
+    pub query: Vec<f32>,
+    pub lists: Vec<u32>,
+    pub k: u32,
+    /// True for EncDec models: respond with chunk tokens, not next-tokens.
+    pub want_chunks: bool,
+}
+
+impl RetrieveRequest {
+    pub fn encode(&self) -> Frame {
+        let mut p = Vec::new();
+        p.write_u64::<LE>(self.query_id).unwrap();
+        p.write_u32::<LE>(self.gpu_id).unwrap();
+        p.write_u32::<LE>(self.k).unwrap();
+        p.write_u32::<LE>(u32::from(self.want_chunks)).unwrap();
+        p.write_u32::<LE>(self.query.len() as u32).unwrap();
+        p.write_u32::<LE>(self.lists.len() as u32).unwrap();
+        for &x in &self.query {
+            p.write_f32::<LE>(x).unwrap();
+        }
+        for &l in &self.lists {
+            p.write_u32::<LE>(l).unwrap();
+        }
+        Frame { kind: Kind::RetrieveRequest, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<RetrieveRequest> {
+        if f.kind != Kind::RetrieveRequest {
+            bail!("not a retrieve request");
+        }
+        let mut r = &f.payload[..];
+        let query_id = r.read_u64::<LE>()?;
+        let gpu_id = r.read_u32::<LE>()?;
+        let k = r.read_u32::<LE>()?;
+        let want_chunks = r.read_u32::<LE>()? != 0;
+        let qn = r.read_u32::<LE>()? as usize;
+        let ln = r.read_u32::<LE>()? as usize;
+        let mut query = Vec::with_capacity(qn);
+        for _ in 0..qn {
+            query.push(r.read_f32::<LE>()?);
+        }
+        let mut lists = Vec::with_capacity(ln);
+        for _ in 0..ln {
+            lists.push(r.read_u32::<LE>()?);
+        }
+        Ok(RetrieveRequest { query_id, gpu_id, query, lists, k, want_chunks })
+    }
+}
+
+/// Coordinator reply: retrieved token payload + distances.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetrieveResponse {
+    pub query_id: u64,
+    /// Next-tokens of the K neighbors (decoder-only) or concatenated
+    /// chunk tokens (EncDec, K*chunk_len long).
+    pub tokens: Vec<u32>,
+    pub dists: Vec<f32>,
+}
+
+impl RetrieveResponse {
+    pub fn encode(&self) -> Frame {
+        let mut p = Vec::new();
+        p.write_u64::<LE>(self.query_id).unwrap();
+        p.write_u32::<LE>(self.tokens.len() as u32).unwrap();
+        p.write_u32::<LE>(self.dists.len() as u32).unwrap();
+        for &t in &self.tokens {
+            p.write_u32::<LE>(t).unwrap();
+        }
+        for &d in &self.dists {
+            p.write_f32::<LE>(d).unwrap();
+        }
+        Frame { kind: Kind::RetrieveResponse, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<RetrieveResponse> {
+        if f.kind != Kind::RetrieveResponse {
+            bail!("not a retrieve response");
+        }
+        let mut r = &f.payload[..];
+        let query_id = r.read_u64::<LE>()?;
+        let tn = r.read_u32::<LE>()? as usize;
+        let dn = r.read_u32::<LE>()? as usize;
+        let mut tokens = Vec::with_capacity(tn);
+        for _ in 0..tn {
+            tokens.push(r.read_u32::<LE>()?);
+        }
+        let mut dists = Vec::with_capacity(dn);
+        for _ in 0..dn {
+            dists.push(r.read_f32::<LE>()?);
+        }
+        Ok(RetrieveResponse { query_id, tokens, dists })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retrieve_request_roundtrip() {
+        let req = RetrieveRequest {
+            query_id: 5,
+            gpu_id: 2,
+            query: vec![0.5, -1.0],
+            lists: vec![3, 1],
+            k: 10,
+            want_chunks: true,
+        };
+        let mut buf = Vec::new();
+        req.encode().write_to(&mut buf).unwrap();
+        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(RetrieveRequest::decode(&back).unwrap(), req);
+    }
+
+    #[test]
+    fn retrieve_response_roundtrip() {
+        let resp = RetrieveResponse {
+            query_id: 5,
+            tokens: vec![10, 20, 30],
+            dists: vec![0.1, 0.2, 0.3],
+        };
+        let mut buf = Vec::new();
+        resp.encode().write_to(&mut buf).unwrap();
+        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(RetrieveResponse::decode(&back).unwrap(), resp);
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let req = ScanRequest {
+            query_id: 42,
+            query: vec![1.0, -2.5, 3.25],
+            lists: vec![7, 9, 11],
+            k: 10,
+        };
+        let frame = req.encode();
+        let mut buf = Vec::new();
+        frame.write_to(&mut buf).unwrap();
+        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(ScanRequest::decode(&back).unwrap(), req);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = ScanResponse {
+            query_id: 1,
+            node_id: 3,
+            dists: vec![0.5, 1.5],
+            ids: vec![100, 200],
+            modeled_s: 1.25e-3,
+        };
+        let frame = resp.encode();
+        let mut buf = Vec::new();
+        frame.write_to(&mut buf).unwrap();
+        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(ScanResponse::decode(&back).unwrap(), resp);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = vec![0u8; 16];
+        assert!(Frame::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_kind() {
+        let req = ScanRequest { query_id: 0, query: vec![], lists: vec![], k: 1 };
+        let f = req.encode();
+        assert!(ScanResponse::decode(&f).is_err());
+    }
+
+    #[test]
+    fn shutdown_frame_roundtrip() {
+        let f = Frame { kind: Kind::Shutdown, payload: vec![] };
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(back.kind, Kind::Shutdown);
+    }
+}

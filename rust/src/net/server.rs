@@ -1,0 +1,140 @@
+//! The memory-node server: listens for scan requests, runs them on its
+//! [`MemoryNode`], and replies with the local top-K (the software shape of
+//! the paper's FPGA node with its hardware TCP/IP stack).
+//!
+//! PJRT handles are not `Send` (the xla crate wraps `Rc` internals), so
+//! the node is *built inside* the server thread via a builder closure and
+//! connections are served sequentially on that thread — matching the
+//! paper's single accelerator pipeline per node, which also processes one
+//! scan at a time.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::protocol::{Frame, Kind, ScanRequest, ScanResponse};
+use crate::chamvs::dispatcher::build_lut_from_raw;
+use crate::chamvs::node::MemoryNode;
+
+/// A running memory-node server.
+pub struct NodeServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NodeServer {
+    /// Spawn a server on an ephemeral local port. The node is constructed
+    /// by `builder` on the server thread; `codebook` is the raw
+    /// (m, 256, dsub) PQ centroid tensor shared with the coordinator.
+    pub fn spawn_with(
+        builder: impl FnOnce() -> MemoryNode + Send + 'static,
+        codebook: Vec<f32>,
+        nprobe: usize,
+    ) -> Result<NodeServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut node = builder();
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let _ =
+                            serve_conn(stream, &mut node, &codebook, nprobe, &stop2);
+                        if stop2.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(NodeServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// Request shutdown (any in-flight connection finishes its frame).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Nudge the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NodeServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    node: &mut MemoryNode,
+    codebook: &[f32],
+    nprobe: usize,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    // Poll the stop flag between frames so shutdown() can join even while
+    // a client connection sits idle.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let frame = match Frame::read_from(&mut reader) {
+            Ok(f) => f,
+            Err(e) => {
+                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if timed_out {
+                    continue;
+                }
+                return Ok(()); // peer closed / protocol error
+            }
+        };
+        match frame.kind {
+            Kind::Shutdown => {
+                stop.store(true, Ordering::Relaxed);
+                return Ok(());
+            }
+            Kind::ScanRequest => {
+                let req = ScanRequest::decode(&frame)?;
+                let m = node.shard.m;
+                let dsub = req.query.len() / m;
+                // Defensive: drop list ids outside this shard (a buggy or
+                // malicious coordinator must not kill the node).
+                let nlist = node.shard.list_codes.len() as u32;
+                let lists: Vec<u32> =
+                    req.lists.iter().copied().filter(|&l| l < nlist).collect();
+                let lut = build_lut_from_raw(codebook, &req.query, m, dsub);
+                let r = node.scan(&lut, &req.query, codebook, &lists, nprobe)?;
+                let resp = ScanResponse {
+                    query_id: req.query_id,
+                    node_id: node.shard.node_id as u32,
+                    dists: r.topk.iter().map(|&(d, _)| d).collect(),
+                    ids: r.topk.iter().map(|&(_, i)| i).collect(),
+                    modeled_s: r.modeled_s,
+                };
+                resp.encode().write_to(&mut writer)?;
+            }
+            other => anyhow::bail!("unexpected frame {other:?} at memory node"),
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! PQ codebook: training (k-means per sub-space), encoding vectors into
+//! m-byte codes, and reconstruction (paper Fig 2, steps 1-3).
+
+use super::kmeans::{kmeans, nearest};
+
+/// Centroids per PQ sub-space (8-bit codes, paper Sec 2.2: M = 256).
+pub const KSUB: usize = 256;
+
+/// A trained product quantizer.
+#[derive(Clone)]
+pub struct PqCodebook {
+    pub d: usize,
+    pub m: usize,
+    /// (m, 256, dsub) row-major centroid tensor.
+    pub centroids: Vec<f32>,
+}
+
+impl PqCodebook {
+    pub fn dsub(&self) -> usize {
+        self.d / self.m
+    }
+
+    /// Train one k-means per sub-space over `n` training vectors.
+    pub fn train(data: &[f32], n: usize, d: usize, m: usize, seed: u64) -> PqCodebook {
+        assert_eq!(d % m, 0, "d={d} must divide into m={m} sub-spaces");
+        assert!(n >= KSUB, "need >= {KSUB} training vectors, got {n}");
+        let dsub = d / m;
+        let mut centroids = vec![0.0f32; m * KSUB * dsub];
+        // Per-sub-space training set is the sliced columns.
+        let mut sub = vec![0.0f32; n * dsub];
+        for i in 0..m {
+            for v in 0..n {
+                sub[v * dsub..(v + 1) * dsub]
+                    .copy_from_slice(&data[v * d + i * dsub..v * d + (i + 1) * dsub]);
+            }
+            let r = kmeans(&sub, n, dsub, KSUB, 10, seed ^ (i as u64) << 32);
+            centroids[i * KSUB * dsub..(i + 1) * KSUB * dsub]
+                .copy_from_slice(&r.centroids);
+        }
+        PqCodebook { d, m, centroids }
+    }
+
+    /// Centroid sub-vector for (sub-space i, code c).
+    #[inline]
+    pub fn centroid(&self, i: usize, c: usize) -> &[f32] {
+        let dsub = self.dsub();
+        let off = (i * KSUB + c) * dsub;
+        &self.centroids[off..off + dsub]
+    }
+
+    /// Encode one vector into m bytes.
+    pub fn encode_one(&self, v: &[f32], out: &mut [u8]) {
+        let dsub = self.dsub();
+        for i in 0..self.m {
+            let sub = &v[i * dsub..(i + 1) * dsub];
+            let cents = &self.centroids[i * KSUB * dsub..(i + 1) * KSUB * dsub];
+            let (best, _) = nearest(sub, cents, KSUB, dsub);
+            out[i] = best as u8;
+        }
+    }
+
+    /// Encode `n` vectors into an (n, m) code matrix.
+    pub fn encode(&self, data: &[f32], n: usize) -> Vec<u8> {
+        assert_eq!(data.len(), n * self.d);
+        let mut codes = vec![0u8; n * self.m];
+        for v in 0..n {
+            let row = &data[v * self.d..(v + 1) * self.d];
+            self.encode_one(row, &mut codes[v * self.m..(v + 1) * self.m]);
+        }
+        codes
+    }
+
+    /// Reconstruct the quantized vector c(y) from its code.
+    pub fn decode_one(&self, code: &[u8], out: &mut [f32]) {
+        let dsub = self.dsub();
+        for i in 0..self.m {
+            out[i * dsub..(i + 1) * dsub]
+                .copy_from_slice(self.centroid(i, code[i] as usize));
+        }
+    }
+
+    /// Mean squared reconstruction error over a sample (training QA).
+    pub fn reconstruction_mse(&self, data: &[f32], n: usize) -> f32 {
+        let mut code = vec![0u8; self.m];
+        let mut rec = vec![0.0f32; self.d];
+        let mut total = 0.0f64;
+        for v in 0..n {
+            let row = &data[v * self.d..(v + 1) * self.d];
+            self.encode_one(row, &mut code);
+            self.decode_one(&code, &mut rec);
+            let e: f32 = row.iter().zip(&rec).map(|(a, b)| (a - b) * (a - b)).sum();
+            total += e as f64;
+        }
+        (total / n as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn train_toy(seed: u64) -> (PqCodebook, Vec<f32>, usize) {
+        let mut rng = Rng::new(seed);
+        let (n, d, m) = (1000, 32, 4);
+        let data = rng.normal_vec(n * d);
+        (PqCodebook::train(&data, n, d, m, 1), data, n)
+    }
+
+    #[test]
+    fn shapes() {
+        let (cb, _, _) = train_toy(1);
+        assert_eq!(cb.dsub(), 8);
+        assert_eq!(cb.centroids.len(), 4 * 256 * 8);
+    }
+
+    #[test]
+    fn encode_decode_reduces_error_vs_zero() {
+        let (cb, data, n) = train_toy(2);
+        let mse = cb.reconstruction_mse(&data, n);
+        // Zero reconstruction would give mse ~= d (unit variance): PQ must
+        // be far better.
+        assert!(mse < 32.0 * 0.5, "mse {mse}");
+    }
+
+    #[test]
+    fn codes_cover_many_centroids() {
+        let (cb, data, n) = train_toy(3);
+        let codes = cb.encode(&data, n);
+        let distinct: std::collections::HashSet<u8> =
+            codes.iter().step_by(cb.m).cloned().collect();
+        assert!(distinct.len() > 100, "only {} codes used", distinct.len());
+    }
+
+    #[test]
+    fn encode_is_nearest_centroid() {
+        let (cb, data, _) = train_toy(4);
+        let mut code = vec![0u8; cb.m];
+        let dsub = cb.dsub();
+        cb.encode_one(&data[..cb.d], &mut code);
+        for i in 0..cb.m {
+            let sub = &data[i * dsub..(i + 1) * dsub];
+            // The chosen centroid must not be beaten by any other.
+            let chosen = cb.centroid(i, code[i] as usize);
+            let chosen_d: f32 =
+                sub.iter().zip(chosen).map(|(a, b)| (a - b) * (a - b)).sum();
+            for c in 0..KSUB {
+                let alt = cb.centroid(i, c);
+                let alt_d: f32 =
+                    sub.iter().zip(alt).map(|(a, b)| (a - b) * (a - b)).sum();
+                assert!(alt_d >= chosen_d - 1e-5);
+            }
+        }
+    }
+}

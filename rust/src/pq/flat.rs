@@ -1,0 +1,91 @@
+//! Exact (flat) nearest-neighbor search — the ground-truth oracle used to
+//! measure recall (paper Sec 2.2: R@K against exact neighbors).
+
+/// Exact top-k nearest neighbors of `query` among `n` row-major vectors.
+/// Returns (ids, squared distances), ascending by distance.
+pub fn flat_search(data: &[f32], n: usize, d: usize, query: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+    assert_eq!(query.len(), d);
+    assert!(k <= n);
+    // Max-heap of (dist, id) keeping the k smallest.
+    let mut heap: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+    for i in 0..n {
+        let row = &data[i * d..(i + 1) * d];
+        let mut dist = 0.0f32;
+        for j in 0..d {
+            let t = query[j] - row[j];
+            dist += t * t;
+        }
+        if heap.len() < k {
+            heap.push((dist, i as u32));
+            if heap.len() == k {
+                heap.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            }
+        } else if dist < heap[0].0 {
+            // Replace current max, restore descending order by insertion.
+            heap[0] = (dist, i as u32);
+            let mut j = 0;
+            while j + 1 < heap.len() && heap[j].0 < heap[j + 1].0 {
+                heap.swap(j, j + 1);
+                j += 1;
+            }
+        }
+    }
+    heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let ids = heap.iter().map(|&(_, i)| i).collect();
+    let dists = heap.iter().map(|&(d, _)| d).collect();
+    (ids, dists)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn finds_planted_neighbor() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (500, 16);
+        let mut data = rng.normal_vec(n * d);
+        let q = rng.normal_vec(d);
+        // Plant an almost-exact copy of the query at id 123.
+        for j in 0..d {
+            data[123 * d + j] = q[j] + 1e-4;
+        }
+        let (ids, dists) = flat_search(&data, n, d, &q, 5);
+        assert_eq!(ids[0], 123);
+        assert!(dists[0] < 1e-4);
+        assert!(dists.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn matches_naive_sort() {
+        let mut rng = Rng::new(2);
+        let (n, d, k) = (200, 8, 20);
+        let data = rng.normal_vec(n * d);
+        let q = rng.normal_vec(d);
+        let (ids, _) = flat_search(&data, n, d, &q, k);
+        // Naive: compute all distances, sort.
+        let mut all: Vec<(f32, u32)> = (0..n)
+            .map(|i| {
+                let row = &data[i * d..(i + 1) * d];
+                let dist: f32 =
+                    q.iter().zip(row).map(|(a, b)| (a - b) * (a - b)).sum();
+                (dist, i as u32)
+            })
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let expect: Vec<u32> = all[..k].iter().map(|&(_, i)| i).collect();
+        assert_eq!(ids, expect);
+    }
+
+    #[test]
+    fn k_equals_n() {
+        let mut rng = Rng::new(3);
+        let data = rng.normal_vec(10 * 4);
+        let q = rng.normal_vec(4);
+        let (ids, _) = flat_search(&data, 10, 4, &q, 10);
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,214 @@
+//! Lloyd's k-means with k-means++-style seeding — the clustering substrate
+//! for PQ codebooks (256 centroids per sub-space) and IVF coarse
+//! quantizers (paper Sec 2.2).
+
+use crate::util::rng::Rng;
+
+/// Result of a k-means run.
+pub struct KmeansResult {
+    /// Row-major (k, d) centroid matrix.
+    pub centroids: Vec<f32>,
+    /// Assignment of each input vector to its nearest centroid.
+    pub assign: Vec<u32>,
+    /// Final mean squared distance (inertia / n).
+    pub mse: f32,
+}
+
+/// Run k-means over `n` row-major `d`-dim vectors.
+///
+/// Deterministic for a given seed. Empty clusters are re-seeded from the
+/// points of the largest cluster (Faiss-style split).
+pub fn kmeans(
+    data: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> KmeansResult {
+    assert_eq!(data.len(), n * d);
+    assert!(k >= 1 && n >= k, "need n >= k ({n} vs {k})");
+    let mut rng = Rng::new(seed);
+
+    // k-means++ seeding: spread the initial centroids by sampling each
+    // next seed proportionally to squared distance from the chosen set.
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.below(n);
+    centroids.extend_from_slice(&data[first * d..(first + 1) * d]);
+    let mut d2: Vec<f32> = (0..n)
+        .map(|i| {
+            let v = &data[i * d..(i + 1) * d];
+            v.iter()
+                .zip(&centroids[..d])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum()
+        })
+        .collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, &x) in d2.iter().enumerate() {
+                target -= x as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centroids.extend_from_slice(&data[pick * d..(pick + 1) * d]);
+        // Update nearest-seed distances.
+        let new_c = &data[pick * d..(pick + 1) * d];
+        for i in 0..n {
+            let v = &data[i * d..(i + 1) * d];
+            let dist: f32 =
+                v.iter().zip(new_c).map(|(a, b)| (a - b) * (a - b)).sum();
+            if dist < d2[i] {
+                d2[i] = dist;
+            }
+        }
+        let _ = c;
+    }
+
+    let mut assign = vec![0u32; n];
+    let mut mse = f32::MAX;
+    for _iter in 0..iters {
+        // Assignment step.
+        let mut inertia = 0.0f64;
+        for i in 0..n {
+            let v = &data[i * d..(i + 1) * d];
+            let (best, dist) = nearest(v, &centroids, k, d);
+            assign[i] = best as u32;
+            inertia += dist as f64;
+        }
+        mse = (inertia / n as f64) as f32;
+
+        // Update step.
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            let v = &data[i * d..(i + 1) * d];
+            for (s, &x) in sums[c * d..(c + 1) * d].iter_mut().zip(v) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed empty cluster near a random point of the largest.
+                let big = (0..k).max_by_key(|&j| counts[j]).unwrap();
+                let members: Vec<usize> =
+                    (0..n).filter(|&i| assign[i] as usize == big).collect();
+                let pick = members[rng.below(members.len())];
+                for j in 0..d {
+                    centroids[c * d + j] =
+                        data[pick * d + j] + 0.01 * rng.normal();
+                }
+            } else {
+                for j in 0..d {
+                    centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    // Final assignment against the last centroid update.
+    let mut inertia = 0.0f64;
+    for i in 0..n {
+        let v = &data[i * d..(i + 1) * d];
+        let (best, dist) = nearest(v, &centroids, k, d);
+        assign[i] = best as u32;
+        inertia += dist as f64;
+    }
+    mse = mse.min((inertia / n as f64) as f32);
+    KmeansResult { centroids, assign, mse }
+}
+
+/// Index + squared distance of the centroid nearest to `v`.
+#[inline]
+pub fn nearest(v: &[f32], centroids: &[f32], k: usize, d: usize) -> (usize, f32) {
+    let mut best = 0usize;
+    let mut best_d = f32::MAX;
+    for c in 0..k {
+        let mut dist = 0.0f32;
+        let row = &centroids[c * d..(c + 1) * d];
+        for j in 0..d {
+            let t = v[j] - row[j];
+            dist += t * t;
+        }
+        if dist < best_d {
+            best_d = dist;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Three well-separated Gaussian blobs must be recovered exactly.
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let d = 4;
+        let centers = [[0.0; 4], [10.0, 10.0, 10.0, 10.0], [-10.0, 5.0, -5.0, 10.0]];
+        let mut data = Vec::new();
+        for i in 0..300 {
+            let c = &centers[i % 3];
+            for j in 0..d {
+                data.push(c[j] + 0.1 * rng.normal());
+            }
+        }
+        let r = kmeans(&data, 300, d, 3, 10, 42);
+        assert!(r.mse < 0.1, "mse {}", r.mse);
+        // All members of one blob share an assignment.
+        for blob in 0..3 {
+            let first = r.assign[blob];
+            for i in (blob..300).step_by(3) {
+                assert_eq!(r.assign[i], first, "blob {blob} split");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(2);
+        let data = rng.normal_vec(100 * 8);
+        let a = kmeans(&data, 100, 8, 10, 5, 7);
+        let b = kmeans(&data, 100, 8, 10, 5, 7);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn mse_decreases_with_more_clusters() {
+        let mut rng = Rng::new(3);
+        let data = rng.normal_vec(500 * 8);
+        let a = kmeans(&data, 500, 8, 2, 8, 1).mse;
+        let b = kmeans(&data, 500, 8, 32, 8, 1).mse;
+        assert!(b < a, "{b} !< {a}");
+    }
+
+    #[test]
+    fn handles_k_equals_n() {
+        let mut rng = Rng::new(4);
+        let data = rng.normal_vec(16 * 4);
+        let r = kmeans(&data, 16, 4, 16, 4, 1);
+        assert!(r.mse < 1e-6); // every point its own centroid
+    }
+
+    #[test]
+    fn assignments_in_range() {
+        let mut rng = Rng::new(5);
+        let data = rng.normal_vec(200 * 6);
+        let r = kmeans(&data, 200, 6, 13, 6, 2);
+        assert!(r.assign.iter().all(|&a| (a as usize) < 13));
+    }
+}

@@ -1,0 +1,15 @@
+//! Product quantization built from scratch (paper Sec 2.2).
+//!
+//! This is both a substrate (the paper assumes Faiss) and the CPU baseline
+//! of Fig 9: [`scan`] implements the ADC loop whose per-code table lookups
+//! and dependent accumulations are exactly the bottleneck the paper
+//! measures at ~1 GB/s/core on Xeon.
+
+pub mod codebook;
+pub mod flat;
+pub mod kmeans;
+pub mod scan;
+
+pub use codebook::PqCodebook;
+pub use kmeans::kmeans;
+pub use scan::{adc_scan, adc_scan_into, build_lut};

@@ -1,0 +1,239 @@
+//! ADC (asymmetric distance computation) scan over PQ codes — the CPU
+//! baseline of Fig 9 and the hot loop the paper calibrates at ~1 GB/s/core.
+//!
+//! `build_lut` mirrors paper Fig 2 step 5 (per-query distance table);
+//! `adc_scan` mirrors step 6 (per-code lookups + accumulate). The unrolled
+//! variants are the Sec §Perf-optimized hot path; correctness is pinned to
+//! the scalar reference by unit + property tests.
+
+use super::codebook::{PqCodebook, KSUB};
+
+/// Build the (m, 256) distance lookup table for one query.
+pub fn build_lut(cb: &PqCodebook, query: &[f32]) -> Vec<f32> {
+    assert_eq!(query.len(), cb.d);
+    let dsub = cb.dsub();
+    let mut lut = vec![0.0f32; cb.m * KSUB];
+    for i in 0..cb.m {
+        let sub = &query[i * dsub..(i + 1) * dsub];
+        let cents = &cb.centroids[i * KSUB * dsub..(i + 1) * KSUB * dsub];
+        let row = &mut lut[i * KSUB..(i + 1) * KSUB];
+        for (c, slot) in row.iter_mut().enumerate() {
+            let cent = &cents[c * dsub..(c + 1) * dsub];
+            let mut acc = 0.0f32;
+            for j in 0..dsub {
+                let t = sub[j] - cent[j];
+                acc += t * t;
+            }
+            *slot = acc;
+        }
+    }
+    lut
+}
+
+/// Scan `n` PQ codes against a LUT, returning one distance per code.
+pub fn adc_scan(codes: &[u8], n: usize, m: usize, lut: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    adc_scan_into(codes, n, m, lut, &mut out);
+    out
+}
+
+/// Scan into a caller-provided buffer (hot path: zero allocation).
+///
+/// Dispatches to an m-specialized unrolled loop for the paper's PQ widths;
+/// the generic path handles anything else.
+pub fn adc_scan_into(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+    assert_eq!(codes.len(), n * m);
+    assert_eq!(lut.len(), m * KSUB);
+    assert!(out.len() >= n);
+    match m {
+        16 => scan_unrolled::<16>(codes, n, lut, out),
+        32 => scan_unrolled::<32>(codes, n, lut, out),
+        // m=64's LUT is 64 KiB — larger than L1D — so a single pass
+        // thrashes the cache (measured 0.65 GB/s/core vs 1.55 at m=16).
+        // Two column-blocked passes keep each 32 KiB half-LUT resident
+        // (EXPERIMENTS.md §Perf).
+        64 => scan_blocked_64(codes, n, lut, out),
+        _ => scan_generic(codes, n, m, lut, out),
+    }
+}
+
+/// Scalar reference implementation (kept simple; ground truth for tests).
+pub fn scan_generic(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+    for v in 0..n {
+        let code = &codes[v * m..(v + 1) * m];
+        let mut acc = 0.0f32;
+        for (i, &c) in code.iter().enumerate() {
+            acc += lut[i * KSUB + c as usize];
+        }
+        out[v] = acc;
+    }
+}
+
+/// Const-generic unrolled scan: four independent accumulators break the
+/// lookup->add dependency chain the paper blames for CPU inefficiency
+/// (Sec 2.3); the compiler keeps the LUT base addresses in registers.
+fn scan_unrolled<const M: usize>(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(M % 4, 0);
+    for v in 0..n {
+        let code = &codes[v * M..(v + 1) * M];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut i = 0;
+        while i < M {
+            a0 += lut[i * KSUB + code[i] as usize];
+            a1 += lut[(i + 1) * KSUB + code[i + 1] as usize];
+            a2 += lut[(i + 2) * KSUB + code[i + 2] as usize];
+            a3 += lut[(i + 3) * KSUB + code[i + 3] as usize];
+            i += 4;
+        }
+        out[v] = (a0 + a1) + (a2 + a3);
+    }
+}
+
+/// Ablation reference: the single-pass unrolled m=64 scan (the L1-blocked
+/// variant replaced it on the hot path; kept benchable for the §Perf A/B).
+pub fn scan_unrolled_m64_unblocked(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+    scan_unrolled::<64>(codes, n, lut, out)
+}
+
+/// Column-blocked scan for m=64: two passes over the codes, each using a
+/// 32 KiB half of the LUT that fits L1D. The second pass accumulates onto
+/// the first's partial sums; code rows are 64 B (one cache line), so the
+/// extra pass re-reads each line once — cheap next to the avoided LUT
+/// misses.
+fn scan_blocked_64(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+    const M: usize = 64;
+    const HALF: usize = 32;
+    for v in 0..n {
+        let code = &codes[v * M..v * M + HALF];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut i = 0;
+        while i < HALF {
+            a0 += lut[i * KSUB + code[i] as usize];
+            a1 += lut[(i + 1) * KSUB + code[i + 1] as usize];
+            a2 += lut[(i + 2) * KSUB + code[i + 2] as usize];
+            a3 += lut[(i + 3) * KSUB + code[i + 3] as usize];
+            i += 4;
+        }
+        out[v] = (a0 + a1) + (a2 + a3);
+    }
+    let hi_lut = &lut[HALF * KSUB..];
+    for v in 0..n {
+        let code = &codes[v * M + HALF..(v + 1) * M];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut i = 0;
+        while i < HALF {
+            a0 += hi_lut[i * KSUB + code[i] as usize];
+            a1 += hi_lut[(i + 1) * KSUB + code[i + 1] as usize];
+            a2 += hi_lut[(i + 2) * KSUB + code[i + 2] as usize];
+            a3 += hi_lut[(i + 3) * KSUB + code[i + 3] as usize];
+            i += 4;
+        }
+        out[v] += (a0 + a1) + (a2 + a3);
+    }
+}
+
+/// Exact ADC distance of a single code against a LUT (for verification).
+pub fn adc_one(code: &[u8], lut: &[f32]) -> f32 {
+    code.iter().enumerate().map(|(i, &c)| lut[i * KSUB + c as usize]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_lut(rng: &mut Rng, m: usize) -> Vec<f32> {
+        (0..m * KSUB).map(|_| rng.f32() * 10.0).collect()
+    }
+
+    #[test]
+    fn unrolled_matches_generic_for_paper_widths() {
+        let mut rng = Rng::new(1);
+        for &m in &[16usize, 32, 64] {
+            let n = 257; // deliberately not a multiple of anything
+            let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+            let lut = random_lut(&mut rng, m);
+            let mut fast = vec![0.0f32; n];
+            let mut slow = vec![0.0f32; n];
+            adc_scan_into(&codes, n, m, &lut, &mut fast);
+            scan_generic(&codes, n, m, &lut, &mut slow);
+            for (a, b) in fast.iter().zip(&slow) {
+                // Different accumulation order: relative f32 tolerance.
+                assert!((a - b).abs() < 1e-5 * a.abs().max(1.0), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn adc_equals_reconstruction_distance() {
+        // d(x, c(y)) computed via LUT must equal the explicit distance to
+        // the reconstructed vector (paper Sec 2.2 formula).
+        let mut rng = Rng::new(2);
+        let (n, d, m) = (300, 16, 4);
+        let data = rng.normal_vec(n * d);
+        let cb = PqCodebook::train(&data, n, d, m, 3);
+        let q = rng.normal_vec(d);
+        let lut = build_lut(&cb, &q);
+        let codes = cb.encode(&data, n);
+        let dists = adc_scan(&codes, n, m, &lut);
+        let mut rec = vec![0.0f32; d];
+        for v in 0..n {
+            cb.decode_one(&codes[v * m..(v + 1) * m], &mut rec);
+            let explicit: f32 =
+                q.iter().zip(&rec).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(
+                (explicit - dists[v]).abs() < 1e-3,
+                "v={v}: {explicit} vs {}",
+                dists[v]
+            );
+        }
+    }
+
+    #[test]
+    fn prop_scan_matches_scalar_any_m() {
+        prop::check(
+            "adc-scan-matches",
+            |rng| {
+                let m = [4, 8, 12, 16, 20, 32, 48, 64][rng.below(8)];
+                let n = 1 + rng.below(100);
+                let codes: Vec<u8> =
+                    (0..n * m).map(|_| rng.below(256) as u8).collect();
+                let lut: Vec<f32> =
+                    (0..m * KSUB).map(|_| rng.normal().abs()).collect();
+                (m, n, codes, lut)
+            },
+            |(m, n, codes, lut)| {
+                let mut fast = vec![0.0f32; *n];
+                let mut slow = vec![0.0f32; *n];
+                adc_scan_into(codes, *n, *m, lut, &mut fast);
+                scan_generic(codes, *n, *m, lut, &mut slow);
+                for (a, b) in fast.iter().zip(&slow) {
+                    assert!((a - b).abs() < 1e-5 * a.abs().max(1.0));
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn lut_rows_are_subspace_distances() {
+        let mut rng = Rng::new(4);
+        let (n, d, m) = (400, 8, 2);
+        let data = rng.normal_vec(n * d);
+        let cb = PqCodebook::train(&data, n, d, m, 5);
+        let q = rng.normal_vec(d);
+        let lut = build_lut(&cb, &q);
+        let dsub = cb.dsub();
+        for i in 0..m {
+            for c in 0..KSUB {
+                let cent = cb.centroid(i, c);
+                let expect: f32 = q[i * dsub..(i + 1) * dsub]
+                    .iter()
+                    .zip(cent)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!((lut[i * KSUB + c] - expect).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Report generators: one function per paper table/figure, printing the
+//! same rows/series the paper reports (DESIGN.md Sec 5 experiment index).
+//! Each is callable from `chameleon report <id>` and from the benches.
+
+pub mod search;
+pub mod system;
+pub mod tables;
+
+pub use search::{fig10_scalability, fig9_search_latency, recall_report};
+pub use system::{fig11_latency, fig12_throughput, fig13_ratio};
+pub use tables::{fig7_probability, fig8_resources, table4_resources, table5_energy};
+
+/// Render a markdown-ish table row.
+pub fn row(cells: &[String]) -> String {
+    format!("| {} |", cells.join(" | "))
+}

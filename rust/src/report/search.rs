@@ -1,0 +1,215 @@
+//! Fig 9 (search latency distributions), Fig 10 (scalability) and the
+//! recall setup check of Sec 6.1.
+
+use crate::chamvs::backend::{BackendKind, SearchBackend};
+use crate::chamvs::dispatcher::Dispatcher;
+use crate::chamvs::node::{MemoryNode, ScanEngine};
+use crate::config::{DatasetConfig, DATASETS};
+use crate::data::recall::{ground_truth, mean_recall};
+use crate::data::synthetic::SyntheticDataset;
+use crate::hwmodel::loggp::LogGp;
+use crate::ivf::index::IvfPqIndex;
+use crate::ivf::shard::Shard;
+use crate::util::rng::Rng;
+use crate::util::stats::{Histogram, Summary};
+
+/// Build a scaled dataset + index + single-node dispatcher for a dataset.
+pub fn build_stack(
+    ds: &'static DatasetConfig,
+    n: usize,
+    n_nodes: usize,
+    k: usize,
+    seed: u64,
+) -> (SyntheticDataset, IvfPqIndex, Vec<MemoryNode>) {
+    let data = SyntheticDataset::generate_sized(ds, n, 256, seed);
+    // Fine-grained lists (nlist >> nprobe, like the paper's 32768 vs 32):
+    // per-query scan size then varies with the probed lists' sizes, which
+    // is exactly what spreads the Fig 9 violins.
+    let nlist = (n / 16).min(ds.nlist_scaled).max(16);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
+    let nodes = (0..n_nodes)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, n_nodes), ScanEngine::Native, k))
+        .collect();
+    (data, index, nodes)
+}
+
+/// Fig 9: per-backend latency distributions over the query set.
+/// Distributions arise from per-query scan-size variation (IVF list sizes
+/// differ), exactly the paper's source of violin spread.
+pub fn fig9_search_latency(n_scaled: usize, n_queries: usize, seed: u64) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 9 — vector search latency (paper-scale model; ms)\n");
+    out.push_str(
+        "dataset    batch backend    p50       p99       dist (modeled)\n",
+    );
+    for ds in DATASETS {
+        let (data, index, nodes) = build_stack(ds, n_scaled, 1, 100, seed);
+        let dispatcher = Dispatcher::new(nodes, 100);
+        let mut backend = SearchBackend::new(BackendKind::Cpu, ds, dispatcher, true);
+        // Collect per-query scan counts once (same across backends).
+        let mut scan_counts = Vec::with_capacity(n_queries);
+        let mut rng = Rng::new(seed ^ 7);
+        for _ in 0..n_queries {
+            let qi = rng.below(data.n_queries);
+            let lists = index.probe(data.query(qi), ds.nprobe);
+            scan_counts.push(index.scan_count(&lists));
+        }
+        // Scale each query's scanned-count to paper scale: normalize by
+        // the *expected* probe mass at scaled size (nprobe/nlist differs
+        // between the scaled and paper indexes), keeping the per-query
+        // relative variation that produces the violin spread.
+        let expected =
+            data.n as f64 * ds.nprobe as f64 / index.nlist as f64;
+        let paper_mean = ds.n_paper as f64 * ds.nprobe as f64 / ds.nlist_paper as f64;
+        for kind in BackendKind::ALL {
+            backend.kind = kind;
+            for &b in &[1usize, 4, 16] {
+                let lats: Vec<f64> = scan_counts
+                    .iter()
+                    .map(|&c| {
+                        let rel = c as f64 / expected;
+                        let paper_scanned = (rel * paper_mean) as usize;
+                        backend.batch_latency_model(b, paper_scanned) / b as f64
+                    })
+                    .collect();
+                let s = Summary::of(&lats);
+                let h = Histogram::of(&lats, 24);
+                out.push_str(&format!(
+                    "{:<10} {:<5} {:<10} {:>8.3} {:>8.3}  {}\n",
+                    ds.name,
+                    b,
+                    kind.name(),
+                    s.p50 * 1e3,
+                    s.p99 * 1e3,
+                    h.sparkline(),
+                ));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig 10: median/p99 latency scaling out memory nodes (LogGP sampling,
+/// the paper's own extrapolation method on SYN-512).
+pub fn fig10_scalability(n_scaled: usize, n_queries: usize, seed: u64) -> String {
+    let ds = crate::config::dataset_by_name("SYN-512").unwrap();
+    let (data, index, nodes) = build_stack(ds, n_scaled, 1, 100, seed);
+    let fpga = nodes[0].fpga;
+    let net = LogGp::default();
+    // Per-query 1-node accelerator latency samples at paper scale
+    // (probe-mass-normalized, as in fig9).
+    let expected = data.n as f64 * ds.nprobe as f64 / index.nlist as f64;
+    let paper_mean = ds.n_paper as f64 * ds.nprobe as f64 / ds.nlist_paper as f64;
+    let mut rng = Rng::new(seed ^ 3);
+    let base: Vec<f64> = (0..n_queries)
+        .map(|_| {
+            let qi = rng.below(data.n_queries);
+            let lists = index.probe(data.query(qi), ds.nprobe);
+            let rel = index.scan_count(&lists) as f64 / expected;
+            let paper_scanned = rel * paper_mean;
+            fpga.query_latency(paper_scanned as usize, ds.m, ds.nprobe, 100).total()
+        })
+        .collect();
+
+    let mut out = String::new();
+    out.push_str("Fig 10 — scaling memory nodes, SYN-512 (ms)\n");
+    out.push_str("nodes  batch  p50       p99\n");
+    for &n_nodes in &[1usize, 2, 4, 8, 16] {
+        for &b in &[1usize, 16, 64] {
+            // A query on N nodes completes when the slowest node finishes
+            // 1/N of the work: max of N samples scaled by 1/N (the paper's
+            // sampling method), plus the LogGP round trip.
+            let mut samples = Vec::with_capacity(n_queries);
+            let mut r2 = Rng::new(seed ^ (n_nodes as u64) << 8 ^ b as u64);
+            for _ in 0..n_queries {
+                let mut worst: f64 = 0.0;
+                for _ in 0..n_nodes {
+                    worst = worst.max(base[r2.below(base.len())]);
+                }
+                let accel = worst / n_nodes as f64 * b as f64;
+                let netw = net.query_roundtrip(n_nodes, 4 * ds.d + 4 * ds.nprobe, 1200);
+                samples.push(accel + netw);
+            }
+            let s = Summary::of(&samples);
+            out.push_str(&format!(
+                "{n_nodes:<6} {b:<6} {:>8.3} {:>8.3}\n",
+                s.p50 * 1e3 / b as f64,
+                s.p99 * 1e3 / b as f64,
+            ));
+        }
+    }
+    out.push_str("(paper: +7.9% median at b=64, +54.5% at b=1 going 1->many nodes)\n");
+    out
+}
+
+/// Sec 6.1 recall check: R@K of the scaled IVF-PQ setup.
+pub fn recall_report(n_scaled: usize, n_queries: usize, seed: u64) -> String {
+    let ds = crate::config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, n_scaled, n_queries, seed);
+    let nlist = (n_scaled as f64).sqrt() as usize;
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
+    let mut out = String::new();
+    out.push_str("Recall — scaled SIFT-like dataset (Sec 6.1 setup)\n");
+    out.push_str(&format!("n={n_scaled} nlist={nlist} m={}\n", ds.m));
+    out.push_str("nprobe  R@1     R@10    R@100\n");
+    let gt100 = ground_truth(&data.data, data.n, data.d, &data.queries, n_queries, 100);
+    for &nprobe in &[1usize, 4, 16, 32, 64] {
+        let mut results = Vec::new();
+        for q in 0..n_queries {
+            let (ids, _) = index.search(data.query(q), nprobe, 100);
+            results.push(ids);
+        }
+        let r1 = mean_recall(
+            &results.iter().map(|r| r[..1].to_vec()).collect::<Vec<_>>(),
+            &gt100.iter().map(|g| g[..1].to_vec()).collect::<Vec<_>>(),
+        );
+        let r10 = mean_recall(
+            &results.iter().map(|r| r[..10.min(r.len())].to_vec()).collect::<Vec<_>>(),
+            &gt100.iter().map(|g| g[..10].to_vec()).collect::<Vec<_>>(),
+        );
+        let r100 = mean_recall(&results, &gt100);
+        out.push_str(&format!(
+            "{nprobe:<7} {r1:<7.3} {r10:<7.3} {r100:<7.3}\n"
+        ));
+    }
+    out.push_str("(paper: R@100 = 93-94% at nprobe=32 on billion-scale sets)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_report_shapes() {
+        let s = fig9_search_latency(2000, 16, 1);
+        // 4 datasets x 4 backends x 3 batches rows.
+        let data_rows = s
+            .lines()
+            .filter(|l| BackendKind::ALL.iter().any(|k| l.contains(k.name())))
+            .count();
+        assert!(data_rows >= 48, "{data_rows} rows");
+    }
+
+    #[test]
+    fn fig10_tail_grows_with_nodes_at_b1() {
+        let s = fig10_scalability(2000, 32, 2);
+        assert!(s.contains("nodes"));
+        assert!(s.lines().count() > 10);
+    }
+
+    #[test]
+    fn recall_improves_with_nprobe() {
+        let s = recall_report(2000, 8, 3);
+        let rows: Vec<f64> = s
+            .lines()
+            .filter(|l| l.chars().next().map(char::is_numeric).unwrap_or(false))
+            .filter_map(|l| {
+                l.split_whitespace().nth(3).and_then(|x| x.parse().ok())
+            })
+            .collect();
+        assert!(rows.len() >= 4);
+        assert!(rows.last().unwrap() >= rows.first().unwrap());
+    }
+}

@@ -1,0 +1,219 @@
+//! Fig 11 (RALM inference latency), Fig 12 (throughput) and Fig 13
+//! (accelerator ratio) — the end-to-end system experiments.
+
+use crate::config::{ModelConfig, DEC_L, DEC_S, ENCDEC_L, ENCDEC_S, SYN1024, SYN512};
+use crate::hwmodel::fpga::FpgaModel;
+use crate::hwmodel::{CpuModel, GpuModel};
+
+/// Modeled per-step latency of a RALM inference step for a system.
+/// `chameleon=true` -> FPGA-GPU retrieval; false -> CPU retrieval baseline.
+pub fn step_latency(
+    model: &ModelConfig,
+    batch: usize,
+    retrieval_step: bool,
+    chameleon: bool,
+    gpu: &GpuModel,
+    cpu: &CpuModel,
+    fpga: &FpgaModel,
+) -> f64 {
+    let ds = if model.dim >= 1024 { &SYN1024 } else { &SYN512 };
+    let mut t = gpu.decode_step_latency(model, batch);
+    if retrieval_step {
+        let codes =
+            (ds.n_paper as f64 * ds.nprobe as f64 / ds.nlist_paper as f64) as usize;
+        t += if chameleon {
+            gpu.index_scan_latency(ds.nlist_paper, ds.d, batch)
+                + fpga.batch_latency(batch, codes, ds.m, ds.nprobe, model.k)
+                + crate::hwmodel::loggp::LogGp::default().query_roundtrip(
+                    1,
+                    4 * ds.d + 4 * ds.nprobe,
+                    12 * model.k,
+                )
+        } else {
+            batch as f64
+                * cpu.query_latency(1, codes, ds.m, ds.dsub(), ds.nlist_paper, ds.nprobe)
+        };
+        if model.is_encdec() {
+            t += gpu.encode_latency(model, batch);
+        }
+    }
+    t
+}
+
+/// Fig 11: latency over token-generation steps for the four models at
+/// their retrieval intervals, Chameleon vs CPU-GPU baseline.
+pub fn fig11_latency(n_tokens: usize) -> String {
+    let (gpu, cpu, fpga) = (GpuModel::default(), CpuModel::default(), FpgaModel::default());
+    let mut out = String::new();
+    out.push_str("Fig 11 — RALM inference latency per step (b=1; ms)\n");
+    out.push_str(
+        "model     interval system     step(no-retr) step(retr) seq_total(s) speedup@retr\n",
+    );
+    for (model, interval) in [
+        (&DEC_S, 1usize),
+        (&DEC_L, 1),
+        (&ENCDEC_S, 8),
+        (&ENCDEC_L, 8),
+    ] {
+        let mut m = model.clone();
+        m.interval = interval;
+        let row = |chameleon: bool| -> (f64, f64, f64) {
+            let plain = step_latency(&m, 1, false, chameleon, &gpu, &cpu, &fpga);
+            let retr = step_latency(&m, 1, true, chameleon, &gpu, &cpu, &fpga);
+            let total: f64 = (0..n_tokens)
+                .map(|s| {
+                    if s % interval == 0 {
+                        retr
+                    } else {
+                        plain
+                    }
+                })
+                .sum();
+            (plain, retr, total)
+        };
+        let (bp, br, bt) = row(false);
+        let (cp, cr, ct) = row(true);
+        out.push_str(&format!(
+            "{:<9} {:<8} {:<10} {:>12.3} {:>10.3} {:>12.3} {:>8}\n",
+            m.name, interval, "CPU-GPU", bp * 1e3, br * 1e3, bt, "-"
+        ));
+        out.push_str(&format!(
+            "{:<9} {:<8} {:<10} {:>12.3} {:>10.3} {:>12.3} {:>7.2}x\n",
+            m.name,
+            interval,
+            "Chameleon",
+            cp * 1e3,
+            cr * 1e3,
+            ct,
+            br / cr,
+        ));
+    }
+    out.push_str("(paper speedup at retrieval steps: 1.94-4.11x Dec-S, 1.71-3.02x Dec-L,\n");
+    out.push_str(" 1.76-3.41x EncDec-S, 1.29-2.13x EncDec-L)\n");
+    out
+}
+
+/// Fig 12: throughput across retrieval intervals.
+pub fn fig12_throughput(n_tokens: usize) -> String {
+    let (gpu, cpu, fpga) = (GpuModel::default(), CpuModel::default(), FpgaModel::default());
+    let mut out = String::new();
+    out.push_str("Fig 12 — RALM inference throughput (tokens/s)\n");
+    out.push_str("model     interval batch  baseline   chameleon  speedup\n");
+    let cases: [(&ModelConfig, &[usize], usize); 4] = [
+        (&DEC_S, &[1], 64),
+        (&DEC_L, &[1], 8),
+        (&ENCDEC_S, &[8, 64, 512], 64),
+        (&ENCDEC_L, &[8, 64, 512], 8),
+    ];
+    for (model, intervals, batch) in cases {
+        for &interval in intervals {
+            let mut m = model.clone();
+            m.interval = interval;
+            let tput = |chameleon: bool| -> f64 {
+                let plain = step_latency(&m, batch, false, chameleon, &gpu, &cpu, &fpga);
+                let retr = step_latency(&m, batch, true, chameleon, &gpu, &cpu, &fpga);
+                let total: f64 = (0..n_tokens)
+                    .map(|s| if s % interval == 0 { retr } else { plain })
+                    .sum();
+                (batch * n_tokens) as f64 / total
+            };
+            let base = tput(false);
+            let cham = tput(true);
+            out.push_str(&format!(
+                "{:<9} {:<8} {:<6} {:>9.1} {:>10.1} {:>7.2}x\n",
+                m.name,
+                interval,
+                batch,
+                base,
+                cham,
+                cham / base,
+            ));
+        }
+    }
+    out.push_str("(paper: 3.18x Dec-S, 2.34x Dec-L at interval=1; gains shrink as interval grows)\n");
+    out
+}
+
+/// Fig 13: GPUs needed to saturate one ChamVS engine per configuration.
+pub fn fig13_ratio() -> String {
+    let (gpu, fpga) = (GpuModel::default(), FpgaModel::default());
+    let rows = crate::coordinator::ratio::fig13_sweep(&gpu, &fpga);
+    let mut out = String::new();
+    out.push_str("Fig 13 — GPUs to saturate one ChamVS engine\n");
+    out.push_str("model     dataset   interval batch  tokens/s/GPU  ChamVS qps  GPUs/ChamVS\n");
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<9} {:<9} {:<8} {:<6} {:>12.1} {:>11.1} {:>11.1}\n",
+            r.model,
+            r.dataset,
+            r.interval,
+            r.batch,
+            r.gpu_tokens_per_s,
+            r.chamvs_qps,
+            r.gpus_per_chamvs,
+        ));
+    }
+    let min = rows.iter().map(|r| r.gpus_per_chamvs).fold(f64::MAX, f64::min);
+    let max = rows.iter().map(|r| r.gpus_per_chamvs).fold(0.0, f64::max);
+    out.push_str(&format!(
+        "range: {min:.1} .. {max:.0} (paper: 0.2 .. 442) — disaggregation required\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_chameleon_faster_at_retrieval_steps() {
+        // Paper Fig 11 retrieval-step speedups top out at 4.11x for the
+        // smallest model; our single-core CPU retrieval baseline makes
+        // the b=1 gap somewhat larger (see EXPERIMENTS.md). Assert the
+        // shape: every model gains, and gains shrink as models grow.
+        let (gpu, cpu, fpga) =
+            (GpuModel::default(), CpuModel::default(), FpgaModel::default());
+        let speedup = |model: &ModelConfig| {
+            step_latency(model, 1, true, false, &gpu, &cpu, &fpga)
+                / step_latency(model, 1, true, true, &gpu, &cpu, &fpga)
+        };
+        for model in [&DEC_S, &DEC_L, &ENCDEC_S, &ENCDEC_L] {
+            let s = speedup(model);
+            assert!(s > 1.1 && s < 25.0, "{}: speedup {s}", model.name);
+        }
+        assert!(speedup(&DEC_S) > speedup(&DEC_L), "small models gain more");
+        assert!(speedup(&ENCDEC_S) > speedup(&ENCDEC_L));
+    }
+
+    #[test]
+    fn fig12_interval1_speedup_band() {
+        // Dec-S at interval 1, b=64: paper reports 3.18x; model must land
+        // within a sensible band around it.
+        let (gpu, cpu, fpga) =
+            (GpuModel::default(), CpuModel::default(), FpgaModel::default());
+        let mut m = DEC_S.clone();
+        m.interval = 1;
+        let plain_b = step_latency(&m, 64, false, false, &gpu, &cpu, &fpga);
+        let retr_b = step_latency(&m, 64, true, false, &gpu, &cpu, &fpga);
+        let plain_c = step_latency(&m, 64, false, true, &gpu, &cpu, &fpga);
+        let retr_c = step_latency(&m, 64, true, true, &gpu, &cpu, &fpga);
+        let speedup = (plain_b + retr_b) / (plain_c + retr_c);
+        assert!(speedup > 1.5, "{speedup}");
+    }
+
+    #[test]
+    fn no_retrieval_steps_identical_between_systems() {
+        let (gpu, cpu, fpga) =
+            (GpuModel::default(), CpuModel::default(), FpgaModel::default());
+        let a = step_latency(&DEC_S, 1, false, false, &gpu, &cpu, &fpga);
+        let b = step_latency(&DEC_S, 1, false, true, &gpu, &cpu, &fpga);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reports_render() {
+        assert!(fig11_latency(64).contains("Chameleon"));
+        assert!(fig12_throughput(64).contains("speedup"));
+        assert!(fig13_ratio().contains("disaggregation"));
+    }
+}

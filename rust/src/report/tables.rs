@@ -1,0 +1,159 @@
+//! Fig 7, Fig 8, Table 4, Table 5 — the K-selection analysis and the
+//! resource/energy tables (all analytic/model-driven, like the paper's).
+
+use crate::config::{DatasetConfig, DATASETS};
+use crate::hwmodel::energy::{chamvs_energy_per_query, cpu_energy_per_query};
+use crate::hwmodel::fpga::FpgaModel;
+use crate::hwmodel::{CpuModel, GpuModel};
+use crate::kselect::binomial::{exceed_probability, hold_probability, required_depth};
+use crate::kselect::hierarchical::agreement_rate;
+use crate::kselect::HierarchicalConfig;
+
+fn paper_codes(ds: &DatasetConfig) -> usize {
+    (ds.n_paper as f64 * ds.nprobe as f64 / ds.nlist_paper as f64) as usize
+}
+
+/// Fig 7: p(k) and P(k) for one of 16 L1 queues holding k of the top-100,
+/// plus a Monte-Carlo agreement check of the truncated queue.
+pub fn fig7_probability() -> String {
+    let (big_k, q) = (100usize, 16usize);
+    let mut out = String::new();
+    out.push_str("Fig 7 — P[one of 16 L1 queues holds k of top-100]\n");
+    out.push_str("k    p(k)        P(<=k)      bar\n");
+    let mut cum = 0.0;
+    for k in 0..=24 {
+        let p = hold_probability(big_k, q, k);
+        cum += p;
+        let bar = "#".repeat((p * 250.0) as usize);
+        out.push_str(&format!("{k:<4} {p:<11.6} {cum:<11.6} {bar}\n"));
+    }
+    let depth = required_depth(big_k, q, 0.99);
+    out.push_str(&format!(
+        "\n99%-identical truncation depth: {depth} (exceed prob/queue {:.2e})\n",
+        exceed_probability(big_k, q, depth)
+    ));
+    let rate = agreement_rate(
+        HierarchicalConfig::approximate(big_k, q, 0.99),
+        16_384,
+        300,
+        42,
+    );
+    out.push_str(&format!(
+        "Monte-Carlo agreement of truncated queue (300 queries): {:.1}%\n",
+        rate * 100.0
+    ));
+    out
+}
+
+/// Fig 8: hardware resource savings of the approximate hierarchical queue
+/// vs the exact module, sweeping the number of L1 queues.
+pub fn fig8_resources() -> String {
+    let k = 100;
+    let mut out = String::new();
+    out.push_str("Fig 8 — priority-queue resource units (K=100, 99% identical)\n");
+    out.push_str("queues  exact_units  approx_units  savings  depth\n");
+    for &q in &[2usize, 4, 8, 16, 32, 64] {
+        let exact = HierarchicalConfig::exact(k, q).resource_units();
+        let approx = HierarchicalConfig::approximate(k, q, 0.99);
+        out.push_str(&format!(
+            "{q:<7} {exact:<12} {:<13} {:<8.2} {}\n",
+            approx.resource_units(),
+            exact as f64 / approx.resource_units() as f64,
+            approx.l1_depth,
+        ));
+    }
+    out
+}
+
+/// Table 4: FPGA resource fractions per dataset.
+pub fn table4_resources() -> String {
+    let f = FpgaModel::default();
+    let mut out = String::new();
+    out.push_str("Table 4 — ChamVS accelerator resource fractions (U250)\n");
+    out.push_str("Dataset    LUT     FF      BRAM    URAM    DSP\n");
+    for ds in DATASETS {
+        let lanes = 2 * f.n_decoding_units(ds.m);
+        let kcfg = HierarchicalConfig::approximate(100, lanes, 0.99);
+        let r = f.resources(ds.m, &kcfg).fraction_of_u250();
+        out.push_str(&format!(
+            "{:<10} {:<7.1} {:<7.1} {:<7.1} {:<7.1} {:<7.1}\n",
+            ds.name,
+            r[0] * 100.0,
+            r[1] * 100.0,
+            r[2] * 100.0,
+            r[3] * 100.0,
+            r[4] * 100.0,
+        ));
+    }
+    out.push_str("(percent; paper band: LUT 23-28, FF 15-19, DSP 8-12)\n");
+    out
+}
+
+/// Table 5: energy per query (mJ), CPU vs ChamVS, b in {1,4,16}.
+pub fn table5_energy() -> String {
+    let cpu = CpuModel::default();
+    let fpga = FpgaModel::default();
+    let gpu = GpuModel::default();
+    let mut out = String::new();
+    out.push_str("Table 5 — energy per query (mJ)\n");
+    out.push_str("Dataset    CPU b=1   b=4     b=16    | ChamVS b=1  b=4    b=16   | ratio(b=1)\n");
+    for ds in DATASETS {
+        let codes = paper_codes(ds);
+        let e_cpu: Vec<f64> = [1, 4, 16]
+            .iter()
+            .map(|&b| cpu_energy_per_query(&cpu, ds, codes, b) * 1e3)
+            .collect();
+        let e_chm: Vec<f64> = [1, 4, 16]
+            .iter()
+            .map(|&b| chamvs_energy_per_query(&fpga, &gpu, ds, codes, b) * 1e3)
+            .collect();
+        out.push_str(&format!(
+            "{:<10} {:<9.1} {:<7.1} {:<7.1} | {:<11.1} {:<6.1} {:<6.1} | {:.1}x\n",
+            ds.name,
+            e_cpu[0],
+            e_cpu[1],
+            e_cpu[2],
+            e_chm[0],
+            e_chm[1],
+            e_chm[2],
+            e_cpu[0] / e_chm[0],
+        ));
+    }
+    out.push_str("(paper: CPU 950.3/434.0/143.3 mJ on SIFT; ChamVS 53.6/28.2/21.5)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_renders_rows() {
+        let s = fig7_probability();
+        assert!(s.contains("P[one of 16"));
+        assert!(s.lines().count() > 20);
+        assert!(s.contains("Monte-Carlo"));
+    }
+
+    #[test]
+    fn fig8_shows_savings() {
+        let s = fig8_resources();
+        assert!(s.contains("64"));
+        // Savings column must grow with queue count.
+        assert!(s.lines().count() >= 8);
+    }
+
+    #[test]
+    fn table4_has_all_datasets() {
+        let s = table4_resources();
+        for name in ["SIFT", "Deep", "SYN-512", "SYN-1024"] {
+            assert!(s.contains(name), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn table5_ratio_in_band() {
+        let s = table5_energy();
+        assert!(s.contains("ratio"));
+    }
+}

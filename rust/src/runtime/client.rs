@@ -1,0 +1,174 @@
+//! The PJRT client wrapper: compiles HLO-text artifacts once and executes
+//! them with cached parameter buffers.
+//!
+//! Pattern follows /opt/xla-example/src/bin/load_hlo.rs:
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute_b`. Artifacts are lowered with
+//! return_tuple=False, so each output arrives as its own `PjRtBuffer` —
+//! recurrent state (the KV cache) is fed back without host round-trips.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// Process-wide PJRT runtime: one CPU client + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn compile(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = spec
+            .hlo_path
+            .to_str()
+            .context("non-utf8 artifact path")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of artifact '{name}'"))?,
+        );
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Build an [`Executor`] with parameters materialized deterministically
+    /// from the manifest's init metadata.
+    pub fn executor(&self, name: &str, seed: u64) -> Result<Executor> {
+        let spec = self.manifest.get(name)?.clone();
+        let exe = self.compile(name)?;
+        let mut rng = Rng::new(seed);
+        let mut param_bufs = Vec::new();
+        let mut param_srcs = Vec::new();
+        for meta in &spec.inputs {
+            if meta.is_param {
+                let host = HostTensor::init_param(meta, &mut rng);
+                let lit = host.to_literal()?;
+                let buf = self
+                    .client
+                    .buffer_from_host_literal(None, &lit)
+                    .with_context(|| format!("uploading param {}", meta.name))?;
+                param_bufs.push(buf);
+                // Retain the source literal: the device copy is async and
+                // reads it on a worker thread (see call()'s safety note).
+                param_srcs.push(lit);
+            }
+        }
+        Ok(Executor { spec, exe, param_bufs, param_srcs, client: self.client.clone() })
+    }
+}
+
+/// A compiled artifact plus its resident parameter buffers.
+///
+/// Call protocol: `call` takes the non-param ("arg") inputs in manifest
+/// order as host tensors and returns every output as a host tensor.
+///
+/// SAFETY NOTE: `buffer_from_host_literal` copies the literal
+/// *asynchronously* on a TFRT worker thread; dropping the source `Literal`
+/// before the copy runs is a use-after-free (observed as a flaky SIGSEGV
+/// in `ShapeUtil::ByteSizeOfElements`). Every upload therefore keeps its
+/// literal alive until a synchronizing event: parameter source literals
+/// are retained in `param_srcs`, and `call` holds per-call literals until
+/// the outputs have been fetched (output sync transitively waits on input
+/// definition).
+pub struct Executor {
+    pub spec: ArtifactSpec,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    param_srcs: Vec<xla::Literal>,
+    client: xla::PjRtClient,
+}
+
+impl Executor {
+    /// Number of non-parameter inputs expected per call.
+    pub fn n_args(&self) -> usize {
+        self.spec.args().count()
+    }
+
+    /// Execute with host-tensor args; all outputs copied back to host.
+    ///
+    /// Multi-output artifacts come back from this xla_extension as ONE
+    /// tuple buffer (PJRT does not untuple here); the tuple is decomposed
+    /// on the host transparently.
+    pub fn call(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        // Upload args, keeping the source literals alive (see struct doc).
+        let lits = args.iter().map(HostTensor::to_literal).collect::<Result<Vec<_>>>()?;
+        let uploaded = lits
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = uploaded.iter().collect();
+        let outs = self.call_buffers(&refs)?;
+        // Fetching outputs waits for the computation, which waits for the
+        // input copies — only then is dropping `lits` safe.
+        let host = if outs.len() == 1 && self.spec.outputs.len() > 1 {
+            let mut lit = outs[0].to_literal_sync()?;
+            let parts = lit.decompose_tuple()?;
+            parts.iter().map(HostTensor::from_literal).collect()
+        } else {
+            outs.iter()
+                .map(|b| HostTensor::from_literal(&b.to_literal_sync()?))
+                .collect()
+        };
+        drop(lits);
+        host
+    }
+
+    /// Execute with explicit arg buffers (device-resident state loop).
+    pub fn call_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        anyhow::ensure!(
+            args.len() == self.n_args(),
+            "artifact '{}' expects {} args, got {}",
+            self.spec.name,
+            self.n_args(),
+            args.len()
+        );
+        let mut all: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        all.extend_from_slice(args);
+        let mut outs = self.exe.execute_b(&all)?;
+        anyhow::ensure!(!outs.is_empty(), "no replica outputs");
+        Ok(std::mem::take(&mut outs[0]))
+    }
+
+    /// Copy one output buffer to host.
+    pub fn fetch(&self, buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        HostTensor::from_literal(&buf.to_literal_sync()?)
+    }
+
+    /// Replace a resident parameter with new host values (training loop:
+    /// adopt updated weights/optimizer state for the next step). The
+    /// source literal is retained, replacing the previous one.
+    pub fn set_param(&mut self, idx: usize, t: &HostTensor) -> Result<()> {
+        let lit = t.to_literal()?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        self.param_bufs[idx] = buf;
+        self.param_srcs[idx] = lit;
+        Ok(())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_bufs.len()
+    }
+}

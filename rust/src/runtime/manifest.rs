@@ -1,0 +1,169 @@
+//! Typed view of `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One input or output tensor of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// "param" inputs are materialized once (deterministic init) and kept
+    /// as device buffers; "arg" inputs change per call.
+    pub is_param: bool,
+    /// Init stddev for params (aot.py records the jax init scale).
+    pub init_scale: f32,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub static_cfg: Json,
+}
+
+impl ArtifactSpec {
+    pub fn params(&self) -> impl Iterator<Item = &TensorMeta> {
+        self.inputs.iter().filter(|t| t.is_param)
+    }
+
+    pub fn args(&self) -> impl Iterator<Item = &TensorMeta> {
+        self.inputs.iter().filter(|t| !t.is_param)
+    }
+
+    /// Static config integer (e.g. "m", "n_codes", "knn_k").
+    pub fn static_usize(&self, key: &str) -> Option<usize> {
+        self.static_cfg.get(key).and_then(Json::as_usize)
+    }
+
+    pub fn static_f64(&self, key: &str) -> Option<f64> {
+        self.static_cfg.get(key).and_then(Json::as_f64)
+    }
+}
+
+/// The parsed manifest: artifact name -> spec.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            artifacts.insert(name.clone(), parse_spec(&dir, name, spec)?);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn parse_spec(dir: &Path, name: &str, spec: &Json) -> Result<ArtifactSpec> {
+    let file = spec
+        .get("file")
+        .and_then(Json::as_str)
+        .with_context(|| format!("artifact {name}: missing file"))?;
+    let parse_tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+        let arr = spec
+            .get(key)
+            .and_then(Json::as_arr)
+            .with_context(|| format!("artifact {name}: missing {key}"))?;
+        arr.iter().map(parse_tensor).collect()
+    };
+    Ok(ArtifactSpec {
+        name: name.to_string(),
+        hlo_path: dir.join(file),
+        inputs: parse_tensors("inputs")?,
+        outputs: parse_tensors("outputs")?,
+        static_cfg: spec.get("static").cloned().unwrap_or(Json::Null),
+    })
+}
+
+fn parse_tensor(t: &Json) -> Result<TensorMeta> {
+    let name = t.get("name").and_then(Json::as_str).context("tensor name")?;
+    let shape = t
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("tensor shape")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match t.get("dtype").and_then(Json::as_str) {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => bail!("unsupported dtype {other:?}"),
+    };
+    let is_param = t.get("kind").and_then(Json::as_str) == Some("param");
+    let init_scale =
+        t.get("init_scale").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    Ok(TensorMeta { name: name.to_string(), shape, dtype, is_param, init_scale })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("cham_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{"artifacts":{"toy":{"file":"toy.hlo.txt",
+            "inputs":[
+              {"name":"w","shape":[4,4],"dtype":"f32","kind":"param","init_scale":0.5},
+              {"name":"x","shape":[4],"dtype":"f32","kind":"arg"},
+              {"name":"t","shape":[1],"dtype":"i32","kind":"arg"}],
+            "outputs":[{"name":"y","shape":[4],"dtype":"f32"}],
+            "static":{"m":16,"cost":{"flops":123}}}}}"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("toy").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.params().count(), 1);
+        assert_eq!(a.args().count(), 2);
+        assert_eq!(a.inputs[0].init_scale, 0.5);
+        assert_eq!(a.inputs[2].dtype, DType::I32);
+        assert_eq!(a.static_usize("m"), Some(16));
+        assert_eq!(a.outputs[0].element_count(), 4);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes them
+//! on the XLA CPU client from the request path — the rust half of the
+//! L2->L3 bridge. Python never runs here.
+//!
+//! The interchange format is HLO *text*: jax >= 0.5 serializes protos with
+//! 64-bit instruction ids that this crate's xla_extension (0.5.1) rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executor, Runtime};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorMeta};
+pub use tensor::HostTensor;

@@ -1,0 +1,162 @@
+//! Host-side tensors and their conversion to/from XLA literals.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorMeta};
+use crate::util::rng::Rng;
+
+/// A host tensor matching one artifact input/output.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(meta: &TensorMeta) -> HostTensor {
+        match meta.dtype {
+            DType::F32 => HostTensor::F32 {
+                shape: meta.shape.clone(),
+                data: vec![0.0; meta.element_count()],
+            },
+            DType::I32 => HostTensor::I32 {
+                shape: meta.shape.clone(),
+                data: vec![0; meta.element_count()],
+            },
+        }
+    }
+
+    /// Deterministic parameter init: normal(0, init_scale), mirroring the
+    /// jax-side init distributions recorded in the manifest.
+    pub fn init_param(meta: &TensorMeta, rng: &mut Rng) -> HostTensor {
+        match meta.dtype {
+            DType::F32 => {
+                let n = meta.element_count();
+                let data =
+                    (0..n).map(|_| rng.normal() * meta.init_scale).collect();
+                HostTensor::F32 { shape: meta.shape.clone(), data }
+            }
+            DType::I32 => HostTensor::zeros(meta),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(shape: &[usize], dtype: DType, scale: f32) -> TensorMeta {
+        TensorMeta {
+            name: "t".into(),
+            shape: shape.to_vec(),
+            dtype,
+            is_param: true,
+            init_scale: scale,
+        }
+    }
+
+    #[test]
+    fn zeros_shapes() {
+        let t = HostTensor::zeros(&meta(&[2, 3], DType::F32, 0.0));
+        assert_eq!(t.len(), 6);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn param_init_scale() {
+        let mut rng = Rng::new(1);
+        let t = HostTensor::init_param(&meta(&[100, 100], DType::F32, 0.02), &mut rng);
+        let data = t.as_f32().unwrap();
+        let std = (data.iter().map(|x| x * x).sum::<f32>() / data.len() as f32).sqrt();
+        assert!((std - 0.02).abs() < 0.002, "std {std}");
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 2]);
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(&[3], vec![7, -1, 5]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7, -1, 5]);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let t = HostTensor::i32(&[1], vec![1]);
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny command-line parser (offline substrate for clap).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand if it
+    /// does not start with '-').
+    pub fn parse_from(tokens: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = tokens.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value`, `--key value`, or boolean `--flag`.
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse_from(&toks("serve --batch 8 --verbose --out=x.json db"));
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("out"), Some("x.json"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["db"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse_from(&toks("x --n 42 --f 1.5"));
+        assert_eq!(a.get_usize("n", 0), 42);
+        assert!((a.get_f64("f", 0.0) - 1.5).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse_from(&toks("run --fast"));
+        assert!(a.flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse_from(&toks("--help"));
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Lightweight metrics: counters + latency histograms with JSON export —
+//! the observability layer of the coordinator (the paper's prototype logs
+//! equivalent per-stage timings for its evaluation).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::json::{obj, Json};
+use super::stats::Summary;
+
+/// A process-wide metrics registry (cheap enough for the request path).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    samples: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment a counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn observe(&self, name: &str, secs: f64) {
+        self.samples
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(secs);
+    }
+
+    /// Time a closure into a histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        let s = self.samples.lock().unwrap();
+        s.get(name).filter(|v| !v.is_empty()).map(|v| Summary::of(v))
+    }
+
+    /// Export everything as JSON (counters + per-histogram percentiles).
+    pub fn to_json(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let samples = self.samples.lock().unwrap();
+        let mut c = BTreeMap::new();
+        for (k, v) in counters.iter() {
+            c.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut h = BTreeMap::new();
+        for (k, v) in samples.iter() {
+            if v.is_empty() {
+                continue;
+            }
+            let s = Summary::of(v);
+            h.insert(
+                k.clone(),
+                obj(vec![
+                    ("n", Json::Num(s.n as f64)),
+                    ("p50", Json::Num(s.p50)),
+                    ("p90", Json::Num(s.p90)),
+                    ("p99", Json::Num(s.p99)),
+                    ("mean", Json::Num(s.mean)),
+                ]),
+            );
+        }
+        obj(vec![("counters", Json::Obj(c)), ("latency", Json::Obj(h))])
+    }
+
+    /// Human-readable dump.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, v) in self.samples.lock().unwrap().iter() {
+            if !v.is_empty() {
+                out.push_str(&Summary::of(v).render_ms(k));
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("queries", 1);
+        m.incr("queries", 2);
+        assert_eq!(m.counter("queries"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histograms_summarize() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64 / 1000.0);
+        }
+        let s = m.summary("lat").unwrap();
+        assert_eq!(s.n, 100);
+        assert!((s.p50 - 0.0505).abs() < 1e-3);
+    }
+
+    #[test]
+    fn time_records() {
+        let m = Metrics::new();
+        let v = m.time("work", || 7u32);
+        assert_eq!(v, 7);
+        assert_eq!(m.summary("work").unwrap().n, 1);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let m = Metrics::new();
+        m.incr("a", 5);
+        m.observe("b", 0.25);
+        let j = m.to_json();
+        let parsed = crate::util::json::Json::parse(&j.dump()).unwrap();
+        assert_eq!(
+            parsed.get("counters").unwrap().get("a").unwrap().as_f64(),
+            Some(5.0)
+        );
+        assert!(parsed.get("latency").unwrap().get("b").is_some());
+    }
+}

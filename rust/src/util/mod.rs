@@ -1,0 +1,15 @@
+//! Shared utilities: deterministic RNG, minimal JSON, statistics, timing,
+//! a tiny CLI parser and a property-testing helper.
+//!
+//! All of these are substrates we would normally pull from crates.io
+//! (rand/serde_json/criterion/clap/proptest); the build is fully offline,
+//! so they are implemented from scratch here and unit-tested like any
+//! other module.
+
+pub mod cli;
+pub mod json;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,80 @@
+//! Minimal property-testing harness (offline substrate for proptest).
+//!
+//! `check` runs a property over many generated cases; on failure it
+//! re-raises with the failing seed so the case can be replayed
+//! deterministically (`PROP_SEED=<n> cargo test ...`).
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` over `cases` generated inputs. The generator receives a
+/// per-case RNG; the property panics (via assert!) to signal failure.
+pub fn check<G, T, P>(name: &str, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T),
+{
+    let base_seed =
+        std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE_u64);
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&input)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {case} (replay with PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a vector of f32 distances with duplicates and extremes mixed in
+/// — the adversarial shape for K-selection code.
+pub fn gen_distances(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.below(max_len);
+    (0..n)
+        .map(|_| match rng.below(10) {
+            0 => 0.0,
+            1 => f32::MAX,
+            2 => rng.f32(), // dense cluster near 0
+            _ => rng.normal().abs() * 100.0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum-nonneg", |r| r.normal_vec(10), |xs| {
+            let s: f32 = xs.iter().map(|x| x * x).sum();
+            assert!(s >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_reports_failures() {
+        check("always-fails", |r| r.below(10), |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_distances_nonempty() {
+        let mut r = Rng::new(1);
+        for _ in 0..50 {
+            let d = gen_distances(&mut r, 100);
+            assert!(!d.is_empty() && d.len() <= 100);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Latency/throughput statistics: percentiles, summaries, and a tiny
+//! fixed-width histogram used by the benches and reports (offline
+//! substrate for criterion's statistics).
+
+/// Summary statistics over a sample of latency values (seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub std: f64,
+}
+
+impl Summary {
+    /// Compute a summary; `samples` need not be sorted.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            min: s[0],
+            max: s[n - 1],
+            p50: percentile_sorted(&s, 0.50),
+            p90: percentile_sorted(&s, 0.90),
+            p99: percentile_sorted(&s, 0.99),
+            std: var.sqrt(),
+        }
+    }
+
+    /// One-line human-readable rendering (times in ms).
+    pub fn render_ms(&self, label: &str) -> String {
+        format!(
+            "{label:<32} n={:<6} p50={:>9.3}ms p90={:>9.3}ms p99={:>9.3}ms mean={:>9.3}ms",
+            self.n,
+            self.p50 * 1e3,
+            self.p90 * 1e3,
+            self.p99 * 1e3,
+            self.mean * 1e3,
+        )
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, q)
+}
+
+/// A fixed-bin histogram for rendering latency distributions in reports
+/// (the textual stand-in for the paper's violin plots in Fig 9).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<usize>,
+}
+
+impl Histogram {
+    pub fn of(samples: &[f64], n_bins: usize) -> Histogram {
+        let lo = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut bins = vec![0usize; n_bins];
+        let width = ((hi - lo) / n_bins as f64).max(1e-12);
+        for &x in samples {
+            let b = (((x - lo) / width) as usize).min(n_bins - 1);
+            bins[b] += 1;
+        }
+        Histogram { lo, hi, bins }
+    }
+
+    /// ASCII sparkline of the distribution shape.
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = *self.bins.iter().max().unwrap_or(&1) as f64;
+        self.bins
+            .iter()
+            .map(|&c| {
+                let idx = ((c as f64 / max) * 7.0).round() as usize;
+                GLYPHS[idx.min(7)]
+            })
+            .collect()
+    }
+}
+
+/// Throughput helper: items per second given total wall time.
+pub fn throughput(items: usize, secs: f64) -> f64 {
+    items as f64 / secs.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_sequence() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&s, 0.5) - 50.5).abs() < 1e-9);
+        assert!((percentile(&s, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&s, 1.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&s, 0.99) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[0.5]);
+        assert_eq!(s.p50, 0.5);
+        assert_eq!(s.p99, 0.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64 / 100.0).collect();
+        let h = Histogram::of(&xs, 20);
+        assert_eq!(h.bins.iter().sum::<usize>(), 1000);
+        assert_eq!(h.sparkline().chars().count(), 20);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput(100, 2.0) - 50.0).abs() < 1e-12);
+    }
+}

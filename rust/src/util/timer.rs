@@ -1,0 +1,80 @@
+//! Wall-clock timing helpers and a micro-bench harness (offline substrate
+//! for criterion). Used by `benches/*` and the `report` module.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Time a closure once, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat a closure and return per-iteration latency samples (seconds).
+///
+/// Runs `warmup` unrecorded iterations first; a black-box consume of the
+/// result keeps the optimizer honest.
+pub fn sample<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+/// A named benchmark group printing criterion-style one-liners.
+pub struct Bench {
+    group: String,
+    pub results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        println!("\n== bench group: {group} ==");
+        Bench { group: group.to_string(), results: Vec::new() }
+    }
+
+    /// Run one case with the default warmup/iteration policy.
+    pub fn case<T>(&mut self, name: &str, f: impl FnMut() -> T) -> Summary {
+        self.case_n(name, 3, 20, f)
+    }
+
+    pub fn case_n<T>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        f: impl FnMut() -> T,
+    ) -> Summary {
+        let s = Summary::of(&sample(warmup, iters, f));
+        println!("{}", s.render_ms(&format!("{}/{}", self.group, name)));
+        self.results.push((name.to_string(), s.clone()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_something() {
+        let (v, secs) = time(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn sample_count() {
+        let s = sample(2, 10, || 1 + 1);
+        assert_eq!(s.len(), 10);
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+}

@@ -1,0 +1,93 @@
+//! End-to-end networked coordinator tests: GPU client -> coordinator ->
+//! (in-process) memory nodes -> token conversion -> reply.
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorClient, CoordinatorServer};
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+
+fn build_retriever(seed: u64) -> Retriever {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, 2000, 8, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 32, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..2)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 2), ScanEngine::Native, 10))
+        .collect();
+    let corpus = Corpus::generate(2000, 2048, config::CHUNK_LEN, seed ^ 2);
+    Retriever::new(ds, index, Dispatcher::new(nodes, 10), corpus)
+}
+
+#[test]
+fn gpu_client_retrieves_tokens() {
+    let mut server = CoordinatorServer::spawn_with(|| build_retriever(11)).unwrap();
+    let mut client = CoordinatorClient::connect(server.addr, 0).unwrap();
+
+    // Reference retrieval against an identical local stack.
+    let mut local = build_retriever(11);
+    let ds = SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        2000,
+        8,
+        11,
+    );
+    for qi in 0..3 {
+        let q = ds.query(qi);
+        let lists = local.index.probe(q, local.ds.nprobe);
+        let want = local.retrieve(q).unwrap();
+        let want_tokens = local.gather_next_tokens(&want.ids);
+
+        let resp = client.retrieve(q, &lists, 10, false).unwrap();
+        assert_eq!(resp.tokens.len(), 10);
+        assert_eq!(resp.tokens, want_tokens, "query {qi}");
+        assert_eq!(resp.dists.len(), 10);
+        assert!(resp.dists.windows(2).all(|w| w[0] <= w[1]));
+    }
+    client.shutdown_coordinator();
+    server.shutdown();
+}
+
+#[test]
+fn chunk_retrieval_for_encdec() {
+    let mut server = CoordinatorServer::spawn_with(|| build_retriever(13)).unwrap();
+    let mut client = CoordinatorClient::connect(server.addr, 1).unwrap();
+    let ds = SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        2000,
+        8,
+        13,
+    );
+    let resp = client.retrieve(ds.query(0), &[], 10, true).unwrap();
+    // Chunks: K * CHUNK_LEN tokens even with an empty probe (empty topk
+    // means zero chunks — allow both shapes).
+    assert!(resp.tokens.len() % config::CHUNK_LEN == 0);
+    client.shutdown_coordinator();
+    server.shutdown();
+}
+
+#[test]
+fn multiple_gpu_clients_sequential() {
+    let mut server = CoordinatorServer::spawn_with(|| build_retriever(17)).unwrap();
+    let ds = SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        2000,
+        8,
+        17,
+    );
+    // Connections are served sequentially; each client completes its
+    // round trips after the previous disconnects.
+    for gpu in 0..2 {
+        let mut client = CoordinatorClient::connect(server.addr, gpu).unwrap();
+        let local = build_retriever(17);
+        let q = ds.query(gpu as usize);
+        let lists = local.index.probe(q, local.ds.nprobe);
+        let resp = client.retrieve(q, &lists, 10, false).unwrap();
+        assert_eq!(resp.tokens.len(), 10);
+        drop(client);
+    }
+    server.shutdown();
+}

@@ -1,0 +1,106 @@
+//! Failure-injection tests: the coordinator must degrade gracefully when
+//! memory nodes die, frames are corrupt, or artifacts are missing.
+
+use std::io::Write;
+use std::net::TcpStream;
+
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::net::client::NodeClient;
+use chameleon::net::protocol::{Frame, Kind, ScanRequest};
+use chameleon::net::server::NodeServer;
+
+fn spawn_node(seed: u64) -> (NodeServer, IvfPqIndex, SyntheticDataset) {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, 1500, 8, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 16, seed ^ 1);
+    let cb = index.pq.centroids.clone();
+    let data2 = SyntheticDataset::generate_sized(ds, 1500, 8, seed);
+    let index2 = IvfPqIndex::build(&data2.data, data2.n, data2.d, ds.m, 16, seed ^ 1);
+    let server = NodeServer::spawn_with(
+        move || MemoryNode::new(Shard::carve(&index2, 0, 1), ScanEngine::Native, 10),
+        cb,
+        8,
+    )
+    .unwrap();
+    (server, index, data)
+}
+
+#[test]
+fn client_errors_when_node_dies_mid_query() {
+    let (mut server, index, data) = spawn_node(1);
+    let mut client = NodeClient::connect(&[server.addr], 10).unwrap();
+    // Healthy query first.
+    let q = data.query(0);
+    let lists = index.probe(q, 8);
+    let (topk, _) = client.search(0, q, &lists).unwrap();
+    assert_eq!(topk.len(), 10);
+    // Kill the node, then query again: must be an Err, not a hang/panic.
+    server.shutdown();
+    let res = client.search(1, q, &lists);
+    assert!(res.is_err(), "expected error after node death");
+}
+
+#[test]
+fn server_survives_garbage_bytes() {
+    let (server, index, data) = spawn_node(2);
+    // Throw garbage at the node on one connection...
+    {
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.write_all(b"this is not a chameleon frame at all............").unwrap();
+    } // connection dropped
+    // ... a fresh, well-formed connection must still be served.
+    let mut client = NodeClient::connect(&[server.addr], 10).unwrap();
+    let q = data.query(1);
+    let lists = index.probe(q, 8);
+    let (topk, _) = client.search(7, q, &lists).unwrap();
+    assert_eq!(topk.len(), 10);
+    client.shutdown_nodes();
+}
+
+#[test]
+fn server_rejects_oversized_frame_gracefully() {
+    let (server, _index, _data) = spawn_node(3);
+    let mut s = TcpStream::connect(server.addr).unwrap();
+    // Valid magic/kind but an absurd length; server must drop the
+    // connection without dying.
+    use byteorder::{LittleEndian, WriteBytesExt};
+    s.write_u32::<LittleEndian>(chameleon::net::protocol::MAGIC).unwrap();
+    s.write_u32::<LittleEndian>(1).unwrap();
+    s.write_u64::<LittleEndian>(u64::MAX / 2).unwrap();
+    drop(s);
+    // Server still answers.
+    let mut client = NodeClient::connect(&[server.addr], 10).unwrap();
+    // Empty probe list: node returns empty topk, not an error.
+    let req_q = vec![0.0f32; 128];
+    let (topk, _) = client.search(9, &req_q, &[]).unwrap();
+    assert!(topk.is_empty());
+    client.shutdown_nodes();
+}
+
+#[test]
+fn scan_request_with_out_of_range_list_is_filtered() {
+    let (server, _index, data) = spawn_node(4);
+    let mut s = TcpStream::connect(server.addr).unwrap();
+    let req = ScanRequest {
+        query_id: 1,
+        query: data.query(0).to_vec(),
+        lists: vec![10_000], // out of range: node must filter, not die
+        k: 10,
+    };
+    req.encode().write_to(&mut s).unwrap();
+    let mut reader = std::io::BufReader::new(s);
+    let resp = Frame::read_from(&mut reader).unwrap();
+    assert_eq!(resp.kind, Kind::ScanResponse);
+    let resp = chameleon::net::protocol::ScanResponse::decode(&resp).unwrap();
+    assert!(resp.ids.is_empty(), "no valid lists => no results");
+}
+
+#[test]
+fn runtime_missing_artifacts_dir_errors() {
+    let r = chameleon::runtime::Runtime::new("/nonexistent/artifacts");
+    assert!(r.is_err());
+}
