@@ -1,0 +1,147 @@
+//! Bench: the `retcache` subsystem — modeled serving throughput of the
+//! cached + speculative engine vs the seed synchronous path, sweeping
+//! cache capacity x query-repeat ratio (Zipf skew), plus measured host
+//! costs of the cache hot path.
+//!
+//! Acceptance tracked here: on a Zipf-skewed repeated-query workload the
+//! cached+speculative engine must show >= 1.3x modeled tokens/s over the
+//! synchronous path (also asserted by the unit test in
+//! rust/src/retcache/model.rs).
+//!
+//! Run: `cargo bench --bench retrieval_cache`
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config::{CHUNK_LEN, DEC_S, SIFT};
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::retcache::{
+    repeat_fraction, zipf_stream, CacheConfig, CachedEntry, EvictionPolicy, KeyPolicy,
+    RetrievalCache, ServeModel, SpecConfig,
+};
+use chameleon::util::timer::Bench;
+
+fn build_retriever(seed: u64) -> (Retriever, SyntheticDataset) {
+    let data = SyntheticDataset::generate_sized(&SIFT, 8000, 256, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, SIFT.m, 64, seed ^ 1);
+    let nodes =
+        vec![MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, 100)];
+    let dispatcher = Dispatcher::new(nodes, 100);
+    let corpus = Corpus::generate(data.n, 2048, CHUNK_LEN, seed ^ 2);
+    (Retriever::new(&SIFT, index, dispatcher, corpus), data)
+}
+
+fn main() {
+    let seed = 42u64;
+    let (mut retriever, data) = build_retriever(seed);
+    let sm = ServeModel::new(&DEC_S);
+
+    // Part 1: capacity x repeat-ratio sweep (modeled paper-scale serving).
+    println!("Retcache sweep — Dec-S over SIFT, 512 retrievals, 64 unique queries");
+    println!(
+        "capacity_B  zipf_a  repeat%  hit%   spec%  sync_tok/s  cached_tok/s  speedup"
+    );
+    let mut best = 0.0f64;
+    for &cap in &[64usize << 10, 256 << 10, 1 << 20, 8 << 20] {
+        for &alpha in &[0.5f64, 1.1, 2.0] {
+            let stream = zipf_stream(64, alpha, 512, seed ^ 7);
+            let repeat = repeat_fraction(&stream);
+            let queries: Vec<Vec<f32>> = stream
+                .iter()
+                .map(|&i| data.query(i % data.n_queries).to_vec())
+                .collect();
+            retriever.enable_cache(CacheConfig {
+                capacity_bytes: cap,
+                policy: EvictionPolicy::Lru,
+                key: KeyPolicy::Quantized(0.05),
+            });
+            retriever.enable_speculation(SpecConfig::default());
+            retriever.reset_retcache_stats();
+            let r = sm.run(&mut retriever, &queries).expect("serve model");
+            best = best.max(r.speedup());
+            println!(
+                "{:<11} {:<7} {:>6.1}  {:>5.1}  {:>5.1}  {:>10.1} {:>13.1} {:>7.2}x",
+                cap,
+                alpha,
+                repeat * 100.0,
+                r.hit_rate() * 100.0,
+                r.spec_hits as f64 / r.retrievals as f64 * 100.0,
+                r.sync_tokens_per_s(),
+                r.modeled_tokens_per_s(),
+                r.speedup(),
+            );
+        }
+    }
+    println!(
+        "best modeled speedup {best:.2}x (acceptance bar: >= 1.30x on skewed workloads)"
+    );
+    println!();
+    print!("{}", retriever.cache_report());
+
+    // Part 2: eviction-policy comparison under pressure (tight budget,
+    // mixed-cost entries favour cost-aware eviction).
+    println!("\nEviction policy at 64 KiB, zipf 1.1:");
+    for policy in [EvictionPolicy::Lru, EvictionPolicy::CostAware] {
+        let stream = zipf_stream(64, 1.1, 512, seed ^ 7);
+        let queries: Vec<Vec<f32>> = stream
+            .iter()
+            .map(|&i| data.query(i % data.n_queries).to_vec())
+            .collect();
+        retriever.enable_cache(CacheConfig {
+            capacity_bytes: 64 << 10,
+            policy,
+            key: KeyPolicy::Quantized(0.05),
+        });
+        retriever.enable_speculation(SpecConfig::default());
+        retriever.reset_retcache_stats();
+        let r = sm.run(&mut retriever, &queries).expect("serve model");
+        println!(
+            "  {:?}: hit {:.1}%, cached {:.1} tok/s, speedup {:.2}x",
+            policy,
+            r.hit_rate() * 100.0,
+            r.modeled_tokens_per_s(),
+            r.speedup(),
+        );
+    }
+
+    // Part 3: measured host cost of the cache hot path (the number the
+    // modeled CACHE_LOOKUP_S constant must stay honest against).
+    let mut bench = Bench::new("measured_cache_hot_path");
+    let mut cache = RetrievalCache::new(CacheConfig {
+        capacity_bytes: 8 << 20,
+        policy: EvictionPolicy::Lru,
+        key: KeyPolicy::Quantized(0.05),
+    });
+    let queries: Vec<Vec<f32>> =
+        (0..256).map(|i| data.query(i % data.n_queries).to_vec()).collect();
+    for q in &queries {
+        cache.insert(
+            q,
+            CachedEntry {
+                ids: (0..100u64).collect(),
+                dists: vec![0.5; 100],
+                modeled_s: 1e-3,
+            },
+        );
+    }
+    let mut qi = 0usize;
+    bench.case_n("get_hit_d128_k100", 10, 200, || {
+        qi = (qi + 1) % queries.len();
+        cache.get(&queries[qi]).is_some()
+    });
+    let mut qi = 0usize;
+    bench.case_n("insert_evicting_d128_k100", 10, 200, || {
+        qi = (qi + 1) % queries.len();
+        cache.insert(
+            &queries[qi],
+            CachedEntry {
+                ids: (0..100u64).collect(),
+                dists: vec![0.5; 100],
+                modeled_s: 1e-3,
+            },
+        );
+    });
+}

@@ -5,6 +5,14 @@
 //!
 //! Run: `cargo run --release --example ralm_serve -- [--model dec_tiny]
 //!       [--sequences 4] [--tokens 48] [--interval 1]`
+//!
+//! Retcache knobs (see rust/src/retcache/): `--cache-kb <n>` enables the
+//! retrieval cache with an n-KiB byte budget (0 = off, the default),
+//! `--eviction lru|cost` picks the eviction policy, `--key-grid <step>`
+//! the embedding quantization step (0 = exact keys), and `--speculate`
+//! turns on speculative prefetching (`--spec-tolerance <msd>` sets the
+//! verification tolerance). With any of these on, the serve report ends
+//! with the cache hit/miss + speculation-accuracy counter block.
 
 use chameleon::chamlm::pool::WorkerPool;
 use chameleon::chamvs::dispatcher::Dispatcher;
@@ -16,6 +24,7 @@ use chameleon::data::corpus::Corpus;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
+use chameleon::retcache::{CacheConfig, EvictionPolicy, KeyPolicy, SpecConfig};
 use chameleon::runtime::Runtime;
 use chameleon::util::cli::Args;
 use chameleon::util::stats::Summary;
@@ -48,6 +57,30 @@ fn main() -> chameleon::Result<()> {
     )?;
     let pool = WorkerPool::new(&runtime, model, 1, seed)?;
     let mut engine = RalmEngine::new(pool, retriever, paper);
+
+    // Retcache: optional cache + speculation in front of ChamVS.
+    let cache_kb = args.get_usize("cache-kb", 0);
+    let cache_cfg = (cache_kb > 0).then(|| {
+        let policy = match args.get_or("eviction", "lru") {
+            "cost" => EvictionPolicy::CostAware,
+            _ => EvictionPolicy::Lru,
+        };
+        let grid = args.get_f64("key-grid", 0.05) as f32;
+        let key = if grid > 0.0 { KeyPolicy::Quantized(grid) } else { KeyPolicy::Exact };
+        CacheConfig { capacity_bytes: cache_kb << 10, policy, key }
+    });
+    let spec_cfg = args.flag("speculate").then(|| SpecConfig {
+        tolerance: args.get_f64("spec-tolerance", 1e-4) as f32,
+        ..SpecConfig::default()
+    });
+    if cache_cfg.is_some() || spec_cfg.is_some() {
+        println!(
+            "== retcache on: cache {:?}, speculation {:?} ==",
+            cache_cfg.as_ref().map(|c| (c.capacity_bytes, c.policy)),
+            spec_cfg.as_ref().map(|s| s.tolerance),
+        );
+        engine.enable_retcache(cache_cfg, spec_cfg);
+    }
 
     println!("== serving {n_seq} sequences x {n_tokens} tokens ==");
     let prompts: Vec<u32> = (0..n_seq as u32).map(|i| i * 3 + 1).collect();
@@ -86,5 +119,9 @@ fn main() -> chameleon::Result<()> {
         stats.modeled_tokens_per_s(),
         paper.name
     );
+    let cache_block = engine.cache_report();
+    if !cache_block.is_empty() {
+        print!("{cache_block}");
+    }
     Ok(())
 }

@@ -78,8 +78,21 @@ impl<'a> Generator<'a> {
                 } else {
                     project_query(&query, self.retriever.dim())
                 };
-                let r = self.retriever.retrieve(&q)?;
-                modeled += r.modeled_s;
+                let r = if self.retriever.retcache_enabled() {
+                    // Cache-aware path: a hit charges the lookup constant,
+                    // a verified speculative prefetch only the residual
+                    // not hidden behind the decode window since the
+                    // previous retrieval (max(decode, retrieval) instead
+                    // of the sum), a miss the full round trip.
+                    let cr = self.retriever.retrieve_cached(&q)?;
+                    modeled +=
+                        self.retriever.charge_retrieval(&cr, self.modeled_decode_s, interval);
+                    cr.result
+                } else {
+                    let r = self.retriever.retrieve(&q)?;
+                    modeled += r.modeled_s;
+                    r
+                };
                 stats.retrieval_steps.push(step);
                 if is_encdec {
                     let chunks = self.retriever.gather_chunks(&r.ids);

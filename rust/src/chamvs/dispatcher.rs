@@ -32,16 +32,36 @@ impl SearchResult {
     }
 }
 
+/// Handle for an in-flight speculative query (see [`Dispatcher::submit`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ticket(pub u64);
+
+/// A submitted-but-not-yet-collected scan request.
+struct PendingScan {
+    id: u64,
+    query: Vec<f32>,
+    lists: Vec<u32>,
+    nprobe: usize,
+}
+
 /// In-process dispatcher over a set of memory nodes.
 pub struct Dispatcher {
     pub nodes: Vec<MemoryNode>,
     pub net: LogGp,
     pub k: usize,
+    next_ticket: u64,
+    pending: Vec<PendingScan>,
 }
 
 impl Dispatcher {
     pub fn new(nodes: Vec<MemoryNode>, k: usize) -> Dispatcher {
-        Dispatcher { nodes, net: LogGp::default(), k }
+        Dispatcher {
+            nodes,
+            net: LogGp::default(),
+            k,
+            next_ticket: 0,
+            pending: Vec::new(),
+        }
     }
 
     /// Broadcast one query's scan request to all nodes and merge results.
@@ -86,6 +106,56 @@ impl Dispatcher {
             measured_s: results.iter().map(|r| r.measured_s).sum(),
             n_scanned: results.iter().map(|r| r.n_scanned).sum(),
         })
+    }
+
+    /// Enqueue a scan request without blocking on its result — the
+    /// coordinator-side half of speculative retrieval: the query is
+    /// considered "in flight on the memory nodes" while the GPU keeps
+    /// decoding, and is collected later with [`poll`](Self::poll).
+    ///
+    /// The in-process dispatcher has no background threads (PJRT node
+    /// engines are not `Send`), so the scan itself executes lazily at poll
+    /// time; the *modeled* latencies in the returned [`SearchResult`] are
+    /// identical either way, and the overlap accounting happens in the
+    /// serving layer (`retcache`), which charges only the residual of the
+    /// retrieval latency not hidden behind decode steps.
+    pub fn submit(&mut self, query: &[f32], lists: &[u32], nprobe: usize) -> Ticket {
+        let id = self.next_ticket;
+        self.next_ticket += 1;
+        self.pending.push(PendingScan {
+            id,
+            query: query.to_vec(),
+            lists: lists.to_vec(),
+            nprobe,
+        });
+        Ticket(id)
+    }
+
+    /// Collect the result of a submitted query. Returns `None` for an
+    /// unknown (or already collected / cancelled) ticket. `codebook` is the
+    /// same raw PQ centroid tensor [`search`](Self::search) takes.
+    pub fn poll(&mut self, ticket: Ticket, codebook: &[f32]) -> Option<Result<SearchResult>> {
+        let i = self.pending.iter().position(|p| p.id == ticket.0)?;
+        let p = self.pending.swap_remove(i);
+        Some(self.search(&p.query, codebook, &p.lists, p.nprobe))
+    }
+
+    /// Drop an in-flight query without collecting it (mis-speculation).
+    /// Returns whether the ticket was actually pending.
+    pub fn cancel(&mut self, ticket: Ticket) -> bool {
+        let i = self.pending.iter().position(|p| p.id == ticket.0);
+        match i {
+            Some(i) => {
+                self.pending.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of submitted-but-uncollected queries.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
     }
 }
 
@@ -232,6 +302,39 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn submit_poll_matches_blocking_search() {
+        let (mut disp, idx, d) = build_dispatcher(2, true);
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 8);
+        let want = disp.search(&q, &idx.pq.centroids, &lists, 8).unwrap();
+        let t = disp.submit(&q, &lists, 8);
+        assert_eq!(disp.in_flight(), 1);
+        let got = disp.poll(t, &idx.pq.centroids).unwrap().unwrap();
+        assert_eq!(disp.in_flight(), 0);
+        assert_eq!(got.topk, want.topk);
+        // Collected tickets are gone.
+        assert!(disp.poll(t, &idx.pq.centroids).is_none());
+    }
+
+    #[test]
+    fn cancel_drops_pending_query() {
+        let (mut disp, idx, d) = build_dispatcher(1, false);
+        let mut rng = Rng::new(12);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 4);
+        let a = disp.submit(&q, &lists, 4);
+        let b = disp.submit(&q, &lists, 4);
+        assert_ne!(a, b);
+        assert_eq!(disp.in_flight(), 2);
+        assert!(disp.cancel(a));
+        assert!(!disp.cancel(a), "double cancel");
+        assert_eq!(disp.in_flight(), 1);
+        assert!(disp.poll(a, &idx.pq.centroids).is_none());
+        assert!(disp.poll(b, &idx.pq.centroids).unwrap().is_ok());
     }
 
     #[test]

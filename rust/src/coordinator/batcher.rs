@@ -69,9 +69,64 @@ impl<T> DynamicBatcher<T> {
     }
 }
 
+/// Tracks which request source (GPU id) the retriever's in-flight
+/// speculative prefetch belongs to. The coordinator overlaps prefetch
+/// with the *issuing* GPU's decode steps; when requests from different
+/// GPUs interleave on one retriever, a prediction made for GPU A must not
+/// be verified against GPU B's query — the server cancels it instead
+/// (see `coordinator::server` and the retcache module).
+#[derive(Debug, Default)]
+pub struct PrefetchTracker {
+    owner: Option<usize>,
+    /// Source switches observed (each one cancels an in-flight prefetch).
+    pub switches: u64,
+}
+
+impl PrefetchTracker {
+    pub fn new() -> PrefetchTracker {
+        PrefetchTracker::default()
+    }
+
+    /// Record a retrieval from `source`. Returns true when an in-flight
+    /// prefetch belongs to a *different* source and must be cancelled
+    /// before this retrieval runs.
+    pub fn observe(&mut self, source: usize) -> bool {
+        let switch = self.owner.is_some_and(|o| o != source);
+        if switch {
+            self.switches += 1;
+        }
+        self.owner = Some(source);
+        switch
+    }
+
+    /// Forget the current owner (connection teardown, cache reset).
+    pub fn reset(&mut self) {
+        self.owner = None;
+    }
+
+    pub fn owner(&self) -> Option<usize> {
+        self.owner
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prefetch_tracker_flags_source_switches() {
+        let mut t = PrefetchTracker::new();
+        assert!(!t.observe(0), "first source never cancels");
+        assert!(!t.observe(0), "same source keeps its prefetch");
+        assert!(t.observe(1), "switch cancels");
+        assert!(!t.observe(1));
+        assert!(t.observe(0));
+        assert_eq!(t.switches, 2);
+        assert_eq!(t.owner(), Some(0));
+        t.reset();
+        assert_eq!(t.owner(), None);
+        assert!(!t.observe(2), "reset forgets the owner");
+    }
 
     #[test]
     fn fires_on_size() {

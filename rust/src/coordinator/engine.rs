@@ -9,6 +9,7 @@ use crate::chamlm::sampler::Sampler;
 use crate::config::ModelConfig;
 use crate::coordinator::retriever::Retriever;
 use crate::hwmodel::gpu::GpuModel;
+use crate::retcache::{CacheConfig, SpecConfig, CACHE_LOOKUP_S};
 
 /// Serving-side statistics for a batch of sequences.
 #[derive(Clone, Debug, Default)]
@@ -55,8 +56,31 @@ impl RalmEngine {
         }
     }
 
+    /// Turn on the retrieval cache and/or speculative prefetching for the
+    /// serving path (see the `retcache` module).
+    pub fn enable_retcache(&mut self, cache: Option<CacheConfig>, spec: Option<SpecConfig>) {
+        if let Some(c) = cache {
+            self.retriever.enable_cache(c);
+        }
+        if let Some(s) = spec {
+            self.retriever.enable_speculation(s);
+        }
+    }
+
+    /// Retcache counter block for the serve report (empty when disabled).
+    pub fn cache_report(&self) -> String {
+        if self.retriever.retcache_enabled() {
+            self.retriever.cache_report()
+        } else {
+            String::new()
+        }
+    }
+
     /// Generate one sequence of `n_tokens` and return its stats.
     pub fn generate(&mut self, prompt: u32, n_tokens: usize, seed: u64) -> Result<GenerationStats> {
+        // A speculative prefetch predicted from another sequence's query
+        // would only pollute verification — drop it at the boundary.
+        self.retriever.cancel_speculation();
         let modeled_decode = self.gpu.decode_step_latency(self.paper_model, 1);
         let modeled_encode = self.gpu.encode_latency(self.paper_model, 1);
         let worker = self.pool.next_worker();
@@ -81,6 +105,7 @@ impl RalmEngine {
     ) -> Result<ServeStats> {
         let b = prompts.len();
         let t0 = std::time::Instant::now();
+        let rstats_before = self.retriever.rstats;
         let mut per_sequence = Vec::with_capacity(b);
         for (i, &p) in prompts.iter().enumerate() {
             per_sequence.push(self.generate(p, n_tokens, seed ^ i as u64)?);
@@ -89,11 +114,6 @@ impl RalmEngine {
         // one decode; retrieval requests are batched to ChamVS.
         let decode_s = self.gpu.decode_step_latency(self.paper_model, b);
         let interval = self.paper_model.interval.max(1);
-        let retr = per_sequence[0]
-            .step_modeled_s
-            .iter()
-            .sum::<f64>(); // includes per-seq retrieval; recompute batched:
-        let _ = retr;
         let retr_per_step = {
             // Batched retrieval: b queries pipelined through the FPGA.
             let node = &self.retriever.dispatcher.nodes[0];
@@ -110,8 +130,23 @@ impl RalmEngine {
         };
         let steps = n_tokens as f64;
         let retrieval_steps = (n_tokens as f64 / interval as f64).ceil();
+        // Cache-aware accounting: charge retrieval steps by how this
+        // batch's retrievals were actually served. With retcache disabled
+        // no sources are counted and this reduces to the seed formula
+        // (decode + full batched retrieval every interval).
+        let d = self.retriever.rstats.delta_since(&rstats_before);
+        let retr_charged = if d.total() == 0 {
+            retr_per_step
+        } else {
+            let overlap = self.retriever.overlap_window_s(decode_s, interval);
+            let residual = (retr_per_step - overlap).max(0.0);
+            (d.misses as f64 * retr_per_step
+                + d.spec_hits as f64 * (CACHE_LOOKUP_S + residual)
+                + d.cache_hits as f64 * CACHE_LOOKUP_S)
+                / d.total() as f64
+        };
         let modeled_s =
-            steps * decode_s + retrieval_steps * (retr_per_step + encode_s);
+            steps * decode_s + retrieval_steps * (retr_charged + encode_s);
         Ok(ServeStats {
             sequences: b,
             tokens: b * n_tokens,

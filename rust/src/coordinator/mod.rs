@@ -9,7 +9,7 @@ pub mod ratio;
 pub mod retriever;
 pub mod server;
 
-pub use batcher::DynamicBatcher;
+pub use batcher::{DynamicBatcher, PrefetchTracker};
 pub use engine::RalmEngine;
-pub use retriever::{RetrievalResult, Retriever};
+pub use retriever::{CachedRetrieval, RetrievalResult, Retriever};
 pub use server::{CoordinatorClient, CoordinatorServer};

@@ -6,11 +6,16 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::chamvs::dispatcher::Dispatcher;
+use crate::chamvs::dispatcher::{Dispatcher, SearchResult};
 use crate::config::DatasetConfig;
 use crate::data::corpus::Corpus;
 use crate::hwmodel::gpu::GpuModel;
 use crate::ivf::index::IvfPqIndex;
+use crate::retcache::{
+    charged_latency, CacheConfig, CachedEntry, RetrievalCache, RetrievalSource,
+    RetrievalStats, SpecConfig, SpecVerdict, Speculator,
+};
+use crate::util::metrics::Metrics;
 
 /// One retrieval's outcome.
 #[derive(Clone, Debug)]
@@ -24,7 +29,18 @@ pub struct RetrievalResult {
     pub measured_s: f64,
 }
 
-/// Retrieval engine: index + dispatcher + token store.
+/// A retrieval served through the cache-aware path: the result plus where
+/// it came from. `result.modeled_s` is always the *full* synchronous
+/// round-trip latency; how much of it a serving step actually pays is
+/// decided by [`crate::retcache::charged_latency`].
+#[derive(Clone, Debug)]
+pub struct CachedRetrieval {
+    pub result: RetrievalResult,
+    pub source: RetrievalSource,
+}
+
+/// Retrieval engine: index + dispatcher + token store, optionally fronted
+/// by the `retcache` subsystem (retrieval cache + speculative prefetch).
 pub struct Retriever {
     pub ds: &'static DatasetConfig,
     pub index: IvfPqIndex,
@@ -33,6 +49,12 @@ pub struct Retriever {
     pub gpu: GpuModel,
     /// If true, stage latencies are modeled at paper scale (1e9 vectors).
     pub paper_scale: bool,
+    /// Retrieval cache (None = seed synchronous behaviour).
+    pub cache: Option<RetrievalCache>,
+    /// Speculative prefetcher (None = no speculation).
+    pub spec: Option<Speculator>,
+    /// Counters over the cache-aware path.
+    pub rstats: RetrievalStats,
 }
 
 impl Retriever {
@@ -49,7 +71,76 @@ impl Retriever {
             corpus,
             gpu: GpuModel::default(),
             paper_scale: true,
+            cache: None,
+            spec: None,
+            rstats: RetrievalStats::default(),
         }
+    }
+
+    /// Enable (or reconfigure — the cache restarts cold) the retrieval
+    /// cache.
+    pub fn enable_cache(&mut self, cfg: CacheConfig) {
+        self.cache = Some(RetrievalCache::new(cfg));
+    }
+
+    /// Enable (or reconfigure) speculative prefetching.
+    pub fn enable_speculation(&mut self, cfg: SpecConfig) {
+        self.cancel_speculation();
+        self.spec = Some(Speculator::new(cfg));
+    }
+
+    /// Drop any in-flight speculative query (sequence boundaries,
+    /// reconfiguration) without counting it as a mis-speculation.
+    pub fn cancel_speculation(&mut self) {
+        if let Some(s) = self.spec.as_mut() {
+            if let Some(t) = s.take_in_flight() {
+                self.dispatcher.cancel(t);
+            }
+        }
+    }
+
+    /// Whether [`retrieve_cached`](Self::retrieve_cached) does anything
+    /// beyond plain [`retrieve`](Self::retrieve).
+    pub fn retcache_enabled(&self) -> bool {
+        self.cache.is_some() || self.spec.is_some()
+    }
+
+    /// Reset the retcache counters (benches reuse one retriever).
+    pub fn reset_retcache_stats(&mut self) {
+        self.rstats = RetrievalStats::default();
+    }
+
+    /// Human-readable retcache block for the serve reports.
+    pub fn cache_report(&self) -> String {
+        self.rstats.render(self.cache.as_ref(), self.spec.as_ref())
+    }
+
+    /// Export the retcache counters into a metrics registry.
+    pub fn export_metrics(&self, m: &Metrics) {
+        self.rstats.export(m, self.cache.as_ref(), self.spec.as_ref());
+    }
+
+    /// The decode window a speculative prefetch may overlap with:
+    /// `interval * speculation_depth` decode steps.
+    pub fn overlap_window_s(&self, decode_s: f64, interval: usize) -> f64 {
+        let depth = self.spec.as_ref().map(|s| s.cfg.depth.max(1)).unwrap_or(1);
+        (interval.max(1) * depth) as f64 * decode_s
+    }
+
+    /// Modeled latency a serving step pays for a cached retrieval
+    /// (see [`crate::retcache::charged_latency`]), accruing the
+    /// saved-latency stat. The single accounting point shared by the
+    /// generator, the batch engine, and the worker-free serve model.
+    pub fn charge_retrieval(
+        &mut self,
+        cr: &CachedRetrieval,
+        decode_s: f64,
+        interval: usize,
+    ) -> f64 {
+        let overlap = self.overlap_window_s(decode_s, interval);
+        let charged = charged_latency(cr.source, cr.result.modeled_s, overlap);
+        self.rstats.saved_modeled_s += (cr.result.modeled_s - charged).max(0.0);
+        charged
     }
 
     /// Database vector dimensionality (query dimension).
@@ -59,6 +150,41 @@ impl Retriever {
 
     pub fn k(&self) -> usize {
         self.dispatcher.k
+    }
+
+    /// Modeled paper-scale latency of one dispatcher search: GPU index
+    /// scan + FPGA scan (rescaled to paper-scale codes per node when
+    /// `paper_scale`) + network round trip.
+    fn model_search_latency(&self, r: &SearchResult, nprobe: usize) -> f64 {
+        let nlist = if self.paper_scale {
+            self.ds.nlist_paper
+        } else {
+            self.index.nlist
+        };
+        let idx_s = self.gpu.index_scan_latency(nlist, self.ds.d, 1);
+        let scan_s = if self.paper_scale {
+            // Rescale the FPGA stage to paper-scale codes per node.
+            let paper_codes =
+                self.ds.n_paper as f64 * nprobe as f64 / self.ds.nlist_paper as f64;
+            let per_node = (paper_codes / self.dispatcher.nodes.len() as f64) as usize;
+            self.dispatcher.nodes[0]
+                .fpga
+                .query_latency(per_node, self.ds.m, nprobe, self.dispatcher.k)
+                .total()
+        } else {
+            r.accel_s
+        };
+        idx_s + scan_s + r.network_s
+    }
+
+    fn search_to_result(&self, r: SearchResult, nprobe: usize, t0: Instant) -> RetrievalResult {
+        let modeled_s = self.model_search_latency(&r, nprobe);
+        RetrievalResult {
+            ids: r.topk.iter().map(|&(_, i)| i).collect(),
+            dists: r.topk.iter().map(|&(d, _)| d).collect(),
+            modeled_s,
+            measured_s: t0.elapsed().as_secs_f64(),
+        }
     }
 
     /// Full retrieval for one query vector.
@@ -71,32 +197,94 @@ impl Retriever {
         let r = self
             .dispatcher
             .search(query, &self.index.pq.centroids, &lists, nprobe)?;
+        Ok(self.search_to_result(r, nprobe, t0))
+    }
 
-        let nlist = if self.paper_scale {
-            self.ds.nlist_paper
-        } else {
-            self.index.nlist
+    /// Cache-aware retrieval: serve from the retrieval cache, else from a
+    /// verified speculative prefetch, else run the full round trip — and
+    /// in the latter cases refill the cache and launch the next
+    /// speculative query on the dispatcher.
+    ///
+    /// Results are identical to [`retrieve`](Self::retrieve) with exact
+    /// keys and zero speculation tolerance; a quantized key or nonzero
+    /// tolerance may serve a near-duplicate query's neighbors — the
+    /// knobs' documented fidelity/latency trade-off.
+    pub fn retrieve_cached(&mut self, query: &[f32]) -> Result<CachedRetrieval> {
+        let t0 = Instant::now();
+        // 1) Retrieval cache.
+        let mut hit: Option<RetrievalResult> = None;
+        if let Some(cache) = self.cache.as_mut() {
+            if let Some(e) = cache.get(query) {
+                hit = Some(RetrievalResult {
+                    ids: e.ids.clone(),
+                    dists: e.dists.clone(),
+                    modeled_s: e.modeled_s,
+                    measured_s: t0.elapsed().as_secs_f64(),
+                });
+            }
+        }
+        if let Some(result) = hit {
+            self.rstats.count(RetrievalSource::CacheHit);
+            // Keep the speculative prediction tracking the *latest* query,
+            // so a stale prefetch from before a run of cache hits isn't
+            // later mis-counted as a bad prediction.
+            if self.spec.as_ref().is_some_and(|s| !s.predicts(query)) {
+                self.issue_speculation(query);
+            }
+            return Ok(CachedRetrieval { result, source: RetrievalSource::CacheHit });
+        }
+        // 2) Speculative prefetch verification.
+        let verdict = match self.spec.as_mut() {
+            Some(s) => s.verify_take(query),
+            None => SpecVerdict::Idle,
         };
-        let idx_s = self.gpu.index_scan_latency(nlist, self.ds.d, 1);
-        let scan_s = if self.paper_scale {
-            // Rescale the FPGA stage to paper-scale codes per node.
-            let paper_codes = self.ds.n_paper as f64 * nprobe as f64
-                / self.ds.nlist_paper as f64;
-            let per_node = (paper_codes / self.dispatcher.nodes.len() as f64) as usize;
-            self.dispatcher.nodes[0]
-                .fpga
-                .query_latency(per_node, self.ds.m, nprobe, self.dispatcher.k)
-                .total()
-        } else {
-            r.accel_s
+        let (result, source) = match verdict {
+            SpecVerdict::Hit(ticket) => {
+                match self.dispatcher.poll(ticket, &self.index.pq.centroids) {
+                    Some(r) => {
+                        let result = self.search_to_result(r?, self.ds.nprobe, t0);
+                        (result, RetrievalSource::SpecHit)
+                    }
+                    // Lost ticket (defensive): fall back to a real query.
+                    None => (self.retrieve(query)?, RetrievalSource::Miss),
+                }
+            }
+            SpecVerdict::Reject(ticket) => {
+                self.dispatcher.cancel(ticket);
+                (self.retrieve(query)?, RetrievalSource::Miss)
+            }
+            SpecVerdict::Idle => (self.retrieve(query)?, RetrievalSource::Miss),
         };
-        let modeled_s = idx_s + scan_s + r.network_s;
-        Ok(RetrievalResult {
-            ids: r.topk.iter().map(|&(_, i)| i).collect(),
-            dists: r.topk.iter().map(|&(d, _)| d).collect(),
-            modeled_s,
-            measured_s: t0.elapsed().as_secs_f64(),
-        })
+        // 3) Refill the cache with the fresh result.
+        if let Some(cache) = self.cache.as_mut() {
+            cache.insert(
+                query,
+                CachedEntry {
+                    ids: result.ids.clone(),
+                    dists: result.dists.clone(),
+                    modeled_s: result.modeled_s,
+                },
+            );
+        }
+        // 4) Launch the next speculative query while the GPU decodes.
+        self.issue_speculation(query);
+        self.rstats.count(source);
+        Ok(CachedRetrieval { result, source })
+    }
+
+    /// Submit the predicted next query to the dispatcher (non-blocking),
+    /// replacing any stale in-flight speculation.
+    fn issue_speculation(&mut self, query: &[f32]) {
+        if self.spec.is_none() {
+            return;
+        }
+        if let Some(old) = self.spec.as_mut().unwrap().take_in_flight() {
+            self.dispatcher.cancel(old);
+        }
+        let predicted = self.spec.as_ref().unwrap().predict(query);
+        let lists = self.index.probe(&predicted, self.ds.nprobe);
+        let ticket = self.dispatcher.submit(&predicted, &lists, self.ds.nprobe);
+        self.spec.as_mut().unwrap().set_in_flight(ticket, predicted);
     }
 
     /// Step 9: convert neighbor ids to next-tokens (decoder-only payload).
@@ -149,6 +337,89 @@ mod tests {
         assert_eq!(toks.len(), 3);
         let chunks = r.gather_chunks(&[0, 1]);
         assert_eq!(chunks.len(), 16);
+    }
+
+    #[test]
+    fn cached_retrieval_matches_uncached() {
+        use crate::retcache::{CacheConfig, KeyPolicy, RetrievalSource};
+        let mut r = toy_retriever(2);
+        let ds = SyntheticDataset::generate_sized(&SIFT, 10, 4, 9);
+        let q = ds.query(0);
+        let want = r.retrieve(q).unwrap();
+        r.enable_cache(CacheConfig { key: KeyPolicy::Exact, ..CacheConfig::default() });
+        // First cached call: miss, runs the full path.
+        let a = r.retrieve_cached(q).unwrap();
+        assert_eq!(a.source, RetrievalSource::Miss);
+        assert_eq!(a.result.ids, want.ids);
+        // Second call: cache hit with identical payload + full modeled_s.
+        let b = r.retrieve_cached(q).unwrap();
+        assert_eq!(b.source, RetrievalSource::CacheHit);
+        assert_eq!(b.result.ids, want.ids);
+        assert_eq!(b.result.dists, want.dists);
+        assert!((b.result.modeled_s - a.result.modeled_s).abs() < 1e-12);
+        assert_eq!(r.rstats.misses, 1);
+        assert_eq!(r.rstats.cache_hits, 1);
+    }
+
+    #[test]
+    fn speculation_hits_on_repeated_query_without_cache() {
+        use crate::retcache::{RetrievalSource, SpecConfig};
+        let mut r = toy_retriever(1);
+        r.enable_speculation(SpecConfig::default());
+        let ds = SyntheticDataset::generate_sized(&SIFT, 10, 4, 9);
+        let q = ds.query(1);
+        let want = r.retrieve(q).unwrap();
+        let a = r.retrieve_cached(q).unwrap();
+        assert_eq!(a.source, RetrievalSource::Miss);
+        assert_eq!(r.dispatcher.in_flight(), 1, "prefetch in flight");
+        // Same query again: the prediction verifies and the prefetched
+        // result is consumed, with identical numerics.
+        let b = r.retrieve_cached(q).unwrap();
+        assert_eq!(b.source, RetrievalSource::SpecHit);
+        assert_eq!(b.result.ids, want.ids);
+        assert_eq!(r.spec.as_ref().unwrap().verified, 1);
+        // A far-away query rejects the new in-flight prediction.
+        let far = ds.query(2);
+        let c = r.retrieve_cached(far).unwrap();
+        assert_eq!(c.source, RetrievalSource::Miss);
+        assert_eq!(r.spec.as_ref().unwrap().rejected, 1);
+        assert_eq!(r.dispatcher.in_flight(), 1, "stale prefetch cancelled");
+        r.cancel_speculation();
+        assert_eq!(r.dispatcher.in_flight(), 0);
+    }
+
+    #[test]
+    fn cache_hit_keeps_prediction_fresh() {
+        use crate::retcache::{CacheConfig, KeyPolicy, SpecConfig};
+        let mut r = toy_retriever(1);
+        r.enable_cache(CacheConfig { key: KeyPolicy::Exact, ..CacheConfig::default() });
+        r.enable_speculation(SpecConfig::default());
+        let ds = SyntheticDataset::generate_sized(&SIFT, 10, 4, 9);
+        let q = ds.query(0);
+        r.retrieve_cached(q).unwrap(); // miss -> prefetch predicting q
+        assert_eq!(r.spec.as_ref().unwrap().issued, 1);
+        r.retrieve_cached(q).unwrap(); // hit, prediction already fresh
+        assert_eq!(r.spec.as_ref().unwrap().issued, 1, "no redundant reissue");
+        assert_eq!(r.dispatcher.in_flight(), 1);
+        // After serving a different query, a cache hit on q refreshes the
+        // (now stale) prediction back to q instead of leaving it to rot.
+        let q2 = ds.query(1);
+        r.retrieve_cached(q2).unwrap(); // miss; stale prediction rejected
+        assert!(r.spec.as_ref().unwrap().predicts(q2));
+        r.retrieve_cached(q).unwrap(); // cache hit on q
+        assert!(r.spec.as_ref().unwrap().predicts(q), "prediction refreshed");
+        assert_eq!(r.dispatcher.in_flight(), 1);
+    }
+
+    #[test]
+    fn retcache_disabled_counts_nothing() {
+        let mut r = toy_retriever(1);
+        assert!(!r.retcache_enabled());
+        let ds = SyntheticDataset::generate_sized(&SIFT, 10, 4, 9);
+        let cr = r.retrieve_cached(ds.query(0)).unwrap();
+        assert_eq!(cr.source, crate::retcache::RetrievalSource::Miss);
+        assert_eq!(r.rstats.misses, 1);
+        assert_eq!(r.dispatcher.in_flight(), 0, "no speculation issued");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::batcher::PrefetchTracker;
 use crate::coordinator::retriever::Retriever;
 use crate::net::protocol::{Frame, Kind, RetrieveRequest, RetrieveResponse};
 use crate::util::metrics::Metrics;
@@ -34,19 +35,34 @@ impl CoordinatorServer {
         let handle = std::thread::spawn(move || {
             let mut retriever = builder();
             let metrics = Metrics::new();
+            let mut prefetch = PrefetchTracker::new();
             for conn in listener.incoming() {
                 if stop2.load(Ordering::Relaxed) {
                     break;
                 }
                 match conn {
                     Ok(stream) => {
-                        let _ = serve_gpu(stream, &mut retriever, &metrics, &stop2);
+                        let _ = serve_gpu(
+                            stream,
+                            &mut retriever,
+                            &metrics,
+                            &mut prefetch,
+                            &stop2,
+                        );
+                        // Connection teardown: a prefetch predicted from the
+                        // departed client's sequence must not verify against
+                        // whoever connects next.
+                        retriever.cancel_speculation();
+                        prefetch.reset();
                         if stop2.load(Ordering::Relaxed) {
                             break;
                         }
                     }
                     Err(_) => break,
                 }
+            }
+            if retriever.retcache_enabled() {
+                retriever.export_metrics(&metrics);
             }
             eprintln!("[coordinator] metrics:\n{}", metrics.render());
         });
@@ -72,6 +88,7 @@ fn serve_gpu(
     stream: TcpStream,
     retriever: &mut Retriever,
     metrics: &Metrics,
+    prefetch: &mut PrefetchTracker,
     stop: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
@@ -106,8 +123,31 @@ fn serve_gpu(
                 let req = RetrieveRequest::decode(&frame)?;
                 metrics.incr("retrieve_requests", 1);
                 metrics.incr(&format!("gpu_{}_requests", req.gpu_id), 1);
-                let r = metrics
-                    .time("retrieve", || retriever.retrieve(&req.query))?;
+                // Retcache path: a prefetch predicted for another GPU's
+                // sequence must not verify against this query.
+                if prefetch.observe(req.gpu_id as usize) {
+                    retriever.cancel_speculation();
+                    metrics.incr("retcache.prefetch_source_switches", 1);
+                }
+                let r = if retriever.retcache_enabled() {
+                    let cr = metrics
+                        .time("retrieve", || retriever.retrieve_cached(&req.query))?;
+                    metrics.incr(
+                        match cr.source {
+                            crate::retcache::RetrievalSource::Miss => "retrieve_miss",
+                            crate::retcache::RetrievalSource::CacheHit => {
+                                "retrieve_cache_hit"
+                            }
+                            crate::retcache::RetrievalSource::SpecHit => {
+                                "retrieve_spec_hit"
+                            }
+                        },
+                        1,
+                    );
+                    cr.result
+                } else {
+                    metrics.time("retrieve", || retriever.retrieve(&req.query))?
+                };
                 let tokens = if req.want_chunks {
                     retriever.gather_chunks(&r.ids)
                 } else {

@@ -30,6 +30,7 @@ pub mod kselect;
 pub mod net;
 pub mod pq;
 pub mod report;
+pub mod retcache;
 pub mod runtime;
 pub mod util;
 

@@ -6,7 +6,7 @@
 //!   serve               generate sequences end-to-end (RALM inference)
 //!   report <id>         regenerate a paper table/figure
 //!                       (fig7 fig8 fig9 fig10 fig11 fig12 fig13
-//!                        table4 table5 recall all)
+//!                        table4 table5 recall retcache all)
 
 use anyhow::{bail, Result};
 use chameleon::chamlm::pool::WorkerPool;
@@ -58,7 +58,7 @@ fn print_help() {
          demo                      quickstart search + generation\n\
          search [--dataset SIFT] [--queries 64] [--nodes 2] [--pjrt]\n\
          serve  [--model dec_tiny] [--tokens 64] [--sequences 2]\n\
-         report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|all>\n\
+         report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|all>\n\
          \n\
          Common options: --n <scaled db size> --seed <u64> --artifacts <dir>"
     );
@@ -194,6 +194,7 @@ fn report_cmd(args: &Args) -> Result<()> {
             "table4" => report::table4_resources(),
             "table5" => report::table5_energy(),
             "recall" => report::recall_report(n.min(20_000), q.min(32), seed),
+            "retcache" => report::retcache_report(n.min(20_000), seed),
             other => bail!("unknown report '{other}'"),
         };
         println!("{text}");
@@ -202,7 +203,7 @@ fn report_cmd(args: &Args) -> Result<()> {
     if which == "all" {
         for id in [
             "fig7", "fig8", "table4", "table5", "fig9", "fig10", "fig11", "fig12",
-            "fig13", "recall",
+            "fig13", "recall", "retcache",
         ] {
             run_one(id)?;
         }

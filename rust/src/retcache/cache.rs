@@ -1,0 +1,316 @@
+//! The retrieval cache: query embedding -> cached ChamVS result, with a
+//! byte budget (not an entry count — entries carry K ids + K distances and
+//! K varies 10..100 across models) and pluggable eviction.
+//!
+//! Eviction policies:
+//! * **LRU** — classic recency order.
+//! * **Cost-aware** — evict the entry with the lowest *saved modeled
+//!   latency per byte* (a cheap-to-recompute result occupying many bytes
+//!   goes first), with recency as tie-break. This matters once datasets
+//!   mix: a SYN-1024 retrieval costs ~4x a SIFT one at the same footprint.
+
+use std::collections::HashMap;
+
+use super::key::{CacheKey, KeyPolicy};
+
+/// Modeled coordinator-side cost of a cache hit (hash + copy of the K
+/// result rows) — charged instead of the full ChamVS round trip.
+pub const CACHE_LOOKUP_S: f64 = 2e-6;
+
+/// Fixed per-entry bookkeeping overhead charged to the byte budget.
+const ENTRY_OVERHEAD_BYTES: usize = 64;
+
+/// Which entry goes first when the byte budget is exceeded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    Lru,
+    CostAware,
+}
+
+/// Cache sizing + keying knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Byte budget over keys + payloads + per-entry overhead.
+    pub capacity_bytes: usize,
+    pub policy: EvictionPolicy,
+    pub key: KeyPolicy,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity_bytes: 4 << 20,
+            policy: EvictionPolicy::Lru,
+            key: KeyPolicy::Quantized(0.05),
+        }
+    }
+}
+
+/// One cached retrieval outcome.
+#[derive(Clone, Debug)]
+pub struct CachedEntry {
+    pub ids: Vec<u64>,
+    pub dists: Vec<f32>,
+    /// Modeled paper-scale latency of the retrieval this entry replaces —
+    /// the latency a hit saves, and the cost-aware eviction numerator.
+    pub modeled_s: f64,
+}
+
+impl CachedEntry {
+    fn payload_bytes(&self) -> usize {
+        8 * self.ids.len() + 4 * self.dists.len()
+    }
+}
+
+struct Slot {
+    entry: CachedEntry,
+    bytes: usize,
+    /// Monotonic recency stamp (larger = more recently used).
+    tick: u64,
+}
+
+/// Byte-budgeted retrieval cache.
+pub struct RetrievalCache {
+    pub cfg: CacheConfig,
+    map: HashMap<CacheKey, Slot>,
+    bytes: usize,
+    tick: u64,
+    // Lifetime counters (exported via retcache::stats; saved-latency
+    // accounting lives in RetrievalStats via Retriever::charge_retrieval).
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl RetrievalCache {
+    pub fn new(cfg: CacheConfig) -> RetrievalCache {
+        RetrievalCache {
+            cfg,
+            map: HashMap::new(),
+            bytes: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Bytes currently charged against the budget.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Look up a query; a hit refreshes recency and updates counters.
+    pub fn get(&mut self, query: &[f32]) -> Option<&CachedEntry> {
+        let key = self.cfg.key.key(query);
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&key) {
+            Some(slot) => {
+                slot.tick = tick;
+                self.hits += 1;
+                Some(&slot.entry)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a query's retrieval result, evicting under the
+    /// configured policy until it fits. An entry larger than the whole
+    /// budget is rejected rather than flushing the cache for nothing.
+    pub fn insert(&mut self, query: &[f32], entry: CachedEntry) {
+        let key = self.cfg.key.key(query);
+        let new_bytes = key.bytes() + entry.payload_bytes() + ENTRY_OVERHEAD_BYTES;
+        if new_bytes > self.cfg.capacity_bytes {
+            return;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        while self.bytes + new_bytes > self.cfg.capacity_bytes {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        self.tick += 1;
+        self.bytes += new_bytes;
+        self.insertions += 1;
+        self.map.insert(key, Slot { entry, bytes: new_bytes, tick: self.tick });
+    }
+
+    /// Evict one entry per the policy; false if the cache is empty.
+    ///
+    /// O(n) scan per eviction — acceptable at in-process entry counts
+    /// (a few thousand under the default budget) and only paid on
+    /// miss-inserts under byte pressure; a tick-ordered secondary index
+    /// is the upgrade path when multi-tenant budgets raise entry counts.
+    fn evict_one(&mut self) -> bool {
+        let victim = match self.cfg.policy {
+            EvictionPolicy::Lru => self
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.tick)
+                .map(|(k, _)| k.clone()),
+            EvictionPolicy::CostAware => self
+                .map
+                .iter()
+                .min_by(|(_, a), (_, b)| {
+                    let sa = a.entry.modeled_s / a.bytes as f64;
+                    let sb = b.entry.modeled_s / b.bytes as f64;
+                    sa.partial_cmp(&sb)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.tick.cmp(&b.tick))
+                })
+                .map(|(k, _)| k.clone()),
+        };
+        match victim {
+            Some(k) => {
+                let slot = self.map.remove(&k).unwrap();
+                self.bytes -= slot.bytes;
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Lifetime hit rate in [0, 1] (0 when never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Whether a query would currently hit, without touching recency or
+    /// counters (used by the speculation layer to decide what to prefetch).
+    pub fn would_hit(&self, query: &[f32]) -> bool {
+        self.map.contains_key(&self.cfg.key.key(query))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(k: usize, modeled_s: f64) -> CachedEntry {
+        CachedEntry {
+            ids: (0..k as u64).collect(),
+            dists: vec![0.5; k],
+            modeled_s,
+        }
+    }
+
+    fn cfg(capacity: usize, policy: EvictionPolicy) -> CacheConfig {
+        CacheConfig { capacity_bytes: capacity, policy, key: KeyPolicy::Exact }
+    }
+
+    fn q(i: usize) -> Vec<f32> {
+        vec![i as f32; 8]
+    }
+
+    // Entry size with KeyPolicy::Exact, d=8, k=10:
+    // key 32 + ids 80 + dists 40 + overhead 64 = 216 bytes.
+    const E: usize = 216;
+
+    #[test]
+    fn hit_returns_payload_and_counts() {
+        let mut c = RetrievalCache::new(cfg(10 * E, EvictionPolicy::Lru));
+        assert!(c.get(&q(1)).is_none());
+        c.insert(&q(1), entry(10, 1e-3));
+        let e = c.get(&q(1)).expect("hit");
+        assert_eq!(e.ids.len(), 10);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        // Room for exactly 2 entries.
+        let mut c = RetrievalCache::new(cfg(2 * E, EvictionPolicy::Lru));
+        c.insert(&q(1), entry(10, 1e-3));
+        c.insert(&q(2), entry(10, 1e-3));
+        // Touch 1 so 2 becomes LRU, then insert 3.
+        assert!(c.get(&q(1)).is_some());
+        c.insert(&q(3), entry(10, 1e-3));
+        assert_eq!(c.evictions, 1);
+        assert!(c.would_hit(&q(1)), "recently used survives");
+        assert!(!c.would_hit(&q(2)), "LRU evicted");
+        assert!(c.would_hit(&q(3)));
+    }
+
+    #[test]
+    fn cost_aware_evicts_cheapest_per_byte() {
+        let mut c = RetrievalCache::new(cfg(2 * E, EvictionPolicy::CostAware));
+        c.insert(&q(1), entry(10, 5e-3)); // expensive to recompute
+        c.insert(&q(2), entry(10, 1e-4)); // cheap
+        // Make the cheap entry the most recent; cost-aware must still pick it.
+        assert!(c.get(&q(2)).is_some());
+        c.insert(&q(3), entry(10, 2e-3));
+        assert!(c.would_hit(&q(1)), "expensive entry survives");
+        assert!(!c.would_hit(&q(2)), "cheap entry evicted despite recency");
+    }
+
+    #[test]
+    fn byte_budget_enforced() {
+        let cap = 5 * E + E / 2; // room for 5, not 6
+        let mut c = RetrievalCache::new(cfg(cap, EvictionPolicy::Lru));
+        for i in 0..50 {
+            c.insert(&q(i), entry(10, 1e-3));
+            assert!(c.bytes() <= cap, "over budget: {} > {cap}", c.bytes());
+        }
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.bytes(), 5 * E);
+        assert_eq!(c.evictions, 45);
+    }
+
+    #[test]
+    fn oversized_entry_rejected_without_flushing() {
+        let mut c = RetrievalCache::new(cfg(2 * E, EvictionPolicy::Lru));
+        c.insert(&q(1), entry(10, 1e-3));
+        c.insert(&q(2), entry(1000, 1e-3)); // > whole budget
+        assert!(c.would_hit(&q(1)), "existing entries untouched");
+        assert!(!c.would_hit(&q(2)));
+        assert_eq!(c.evictions, 0);
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_in_place() {
+        let mut c = RetrievalCache::new(cfg(2 * E, EvictionPolicy::Lru));
+        c.insert(&q(1), entry(10, 1e-3));
+        c.insert(&q(1), entry(10, 9e-3));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), E);
+        let e = c.get(&q(1)).unwrap();
+        assert!((e.modeled_s - 9e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantized_policy_hits_on_jittered_queries() {
+        let mut c = RetrievalCache::new(CacheConfig {
+            capacity_bytes: 1 << 20,
+            policy: EvictionPolicy::Lru,
+            key: KeyPolicy::Quantized(0.1),
+        });
+        c.insert(&q(1), entry(10, 1e-3));
+        let mut jq = q(1);
+        jq[0] += 0.01;
+        assert!(c.get(&jq).is_some(), "near-identical query hits");
+    }
+}

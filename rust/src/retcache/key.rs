@@ -1,0 +1,109 @@
+//! Cache keys over query embeddings.
+//!
+//! RALM retrieval queries are hidden-state projections: byte-identical
+//! repeats happen (same prompt, replayed request), but near-identical
+//! queries whose retrieval results agree are far more common (RaLMSpec's
+//! observation). The cache therefore supports two keying modes:
+//!
+//! * **Exact** — the raw f32 bit pattern; hits only on byte-identical
+//!   queries (no recall risk).
+//! * **Quantized** — each component snapped to a fixed grid, so queries
+//!   within ~`grid/2` per dimension collapse to one key. Coarser grids
+//!   trade retrieval fidelity for hit rate, exactly like the PQ trade-off
+//!   the paper's accelerator is built around.
+
+use crate::util::rng::Rng;
+
+/// How queries are mapped to cache keys.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeyPolicy {
+    /// Bit-exact f32 key.
+    Exact,
+    /// Components snapped to a grid of this step size (must be > 0).
+    Quantized(f32),
+}
+
+impl KeyPolicy {
+    /// Build the key for a query under this policy.
+    pub fn key(&self, query: &[f32]) -> CacheKey {
+        match *self {
+            KeyPolicy::Exact => CacheKey::Exact(query.iter().map(|x| x.to_bits()).collect()),
+            KeyPolicy::Quantized(grid) => {
+                assert!(grid > 0.0, "quantization grid must be positive");
+                CacheKey::Quantized(
+                    query
+                        .iter()
+                        .map(|&x| {
+                            let q = (x / grid).round();
+                            q.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+}
+
+/// A hashed cache key (exact bits or quantized grid coordinates).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum CacheKey {
+    Exact(Vec<u32>),
+    Quantized(Vec<i16>),
+}
+
+impl CacheKey {
+    /// Bytes this key occupies in the cache (budget accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            CacheKey::Exact(v) => 4 * v.len(),
+            CacheKey::Quantized(v) => 2 * v.len(),
+        }
+    }
+}
+
+/// Deterministic jitter helper for tests: `query + uniform(-eps, eps)`.
+pub fn jitter(query: &[f32], eps: f32, rng: &mut Rng) -> Vec<f32> {
+    query.iter().map(|&x| x + (rng.f32() * 2.0 - 1.0) * eps).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_key_distinguishes_bit_changes() {
+        let a = KeyPolicy::Exact.key(&[1.0, 2.0]);
+        let b = KeyPolicy::Exact.key(&[1.0, 2.0]);
+        let c = KeyPolicy::Exact.key(&[1.0, 2.0 + 1e-7]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn quantized_key_collapses_nearby_queries() {
+        let p = KeyPolicy::Quantized(0.1);
+        let base = vec![0.5f32, -1.2, 3.3];
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let near = jitter(&base, 0.01, &mut rng);
+            assert_eq!(p.key(&base), p.key(&near));
+        }
+        // A full grid step away must differ.
+        let far: Vec<f32> = base.iter().map(|x| x + 0.2).collect();
+        assert_ne!(p.key(&base), p.key(&far));
+    }
+
+    #[test]
+    fn key_bytes_scale_with_dim() {
+        assert_eq!(KeyPolicy::Exact.key(&[0.0; 128]).bytes(), 512);
+        assert_eq!(KeyPolicy::Quantized(0.5).key(&[0.0; 128]).bytes(), 256);
+    }
+
+    #[test]
+    fn quantized_clamps_extremes() {
+        let p = KeyPolicy::Quantized(1e-6);
+        // Would overflow i16 without clamping; must not panic.
+        let k = p.key(&[1e9, -1e9]);
+        assert_eq!(k, CacheKey::Quantized(vec![i16::MAX, i16::MIN]));
+    }
+}

@@ -1,0 +1,79 @@
+//! `retcache` — retrieval cache + speculative retrieval for the serving
+//! path.
+//!
+//! Chameleon's disaggregated design makes every retrieval a full
+//! coordinator -> ChamVS.idx -> ChamVS.mem round trip, and the seed
+//! `RalmEngine` blocks decode on that trip at every retrieval interval.
+//! This subsystem removes the round trip from the hot path twice over:
+//!
+//! * [`cache`] — a byte-budgeted retrieval cache keyed on exact or
+//!   quantized query embeddings, with LRU and cost-aware eviction.
+//! * [`spec`] — a RaLMSpec-style speculative prefetcher: the predicted
+//!   next query is submitted to the [`crate::chamvs::Dispatcher`]'s
+//!   non-blocking `submit`/`poll` API while the GPU decodes, verified
+//!   against the real query on arrival, and cancelled on mismatch.
+//! * [`stats`] — hit/miss + speculation-accuracy + saved-latency counters,
+//!   exportable to [`crate::util::metrics::Metrics`] and the reports.
+//! * [`model`] — a worker-free serving model (decode latencies from
+//!   [`crate::hwmodel::GpuModel`], real retrieval numerics from
+//!   [`crate::coordinator::Retriever`]) used by the benches, tests and the
+//!   `report retcache` command.
+//! * [`workload`] — deterministic Zipf query streams.
+//!
+//! Latency accounting contract (see [`charged_latency`]): a cache hit is
+//! charged the lookup constant; a verified speculative prefetch is charged
+//! only the residual of the retrieval latency not hidden behind the decode
+//! steps it overlapped (`max(0, retrieval - overlap)`), so a serving step
+//! costs `max(decode, residual_retrieval)`-shaped time instead of the sum;
+//! a miss is charged the full synchronous round trip, exactly like the
+//! seed engine.
+
+pub mod cache;
+pub mod key;
+pub mod model;
+pub mod spec;
+pub mod stats;
+pub mod workload;
+
+pub use cache::{CacheConfig, CachedEntry, EvictionPolicy, RetrievalCache, CACHE_LOOKUP_S};
+pub use key::{CacheKey, KeyPolicy};
+pub use model::{ModeledServe, ServeModel};
+pub use spec::{SpecConfig, SpecVerdict, Speculator};
+pub use stats::{RetrievalSource, RetrievalStats};
+pub use workload::{repeat_fraction, zipf_stream};
+
+/// Modeled latency charged to a serving step for one retrieval, given how
+/// it was served, its full synchronous latency, and the decode window it
+/// could overlap with (`interval * decode_step * speculation depth`).
+pub fn charged_latency(source: RetrievalSource, full_s: f64, overlap_s: f64) -> f64 {
+    match source {
+        RetrievalSource::Miss => full_s,
+        RetrievalSource::CacheHit => CACHE_LOOKUP_S,
+        RetrievalSource::SpecHit => CACHE_LOOKUP_S + (full_s - overlap_s).max(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_charges_full_latency() {
+        assert_eq!(charged_latency(RetrievalSource::Miss, 1e-3, 5e-4), 1e-3);
+    }
+
+    #[test]
+    fn cache_hit_charges_lookup_only() {
+        assert_eq!(charged_latency(RetrievalSource::CacheHit, 1e-3, 0.0), CACHE_LOOKUP_S);
+    }
+
+    #[test]
+    fn spec_hit_charges_residual() {
+        // Retrieval 1 ms, overlap 0.4 ms -> 0.6 ms residual + lookup.
+        let c = charged_latency(RetrievalSource::SpecHit, 1e-3, 4e-4);
+        assert!((c - (6e-4 + CACHE_LOOKUP_S)).abs() < 1e-12);
+        // Fully hidden retrieval charges only the lookup.
+        let c = charged_latency(RetrievalSource::SpecHit, 1e-3, 5e-3);
+        assert_eq!(c, CACHE_LOOKUP_S);
+    }
+}

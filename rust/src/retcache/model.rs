@@ -1,0 +1,199 @@
+//! A worker-free serving model: real retrieval numerics through a
+//! [`Retriever`] + modeled GPU decode latencies, with and without the
+//! retcache fast paths. This is what the `retrieval_cache` bench, the
+//! `report retcache` command and the deterministic end-to-end tests
+//! drive — no PJRT artifacts required.
+//!
+//! Per retrieval interval the modeled cost is
+//! `interval * decode + charged_retrieval (+ encode for EncDec)`, where
+//! the charged retrieval follows [`super::charged_latency`]: full round
+//! trip on a miss (the seed synchronous engine), the lookup constant on a
+//! cache hit, and only the non-overlapped residual on a verified
+//! speculative prefetch — i.e. the step pays
+//! `max(decode_window, retrieval)`-shaped time instead of the sum.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::coordinator::retriever::Retriever;
+use crate::hwmodel::gpu::GpuModel;
+
+/// Outcome of one modeled serving run.
+#[derive(Clone, Debug)]
+pub struct ModeledServe {
+    pub tokens: usize,
+    pub retrievals: usize,
+    /// Cache-aware modeled wall time.
+    pub modeled_s: f64,
+    /// The same workload on the seed synchronous path (every retrieval
+    /// charged in full) — the speedup denominator.
+    pub sync_modeled_s: f64,
+    pub misses: u64,
+    pub cache_hits: u64,
+    pub spec_hits: u64,
+}
+
+impl ModeledServe {
+    pub fn modeled_tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.modeled_s.max(1e-12)
+    }
+
+    pub fn sync_tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.sync_modeled_s.max(1e-12)
+    }
+
+    /// Modeled throughput gain of the cached path over the seed
+    /// synchronous path on this workload.
+    pub fn speedup(&self) -> f64 {
+        self.sync_modeled_s / self.modeled_s.max(1e-12)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.retrievals == 0 {
+            0.0
+        } else {
+            (self.cache_hits + self.spec_hits) as f64 / self.retrievals as f64
+        }
+    }
+}
+
+/// Serving simulator over a paper-scale model's decode/encode latencies.
+pub struct ServeModel {
+    pub model: &'static ModelConfig,
+    pub gpu: GpuModel,
+}
+
+impl ServeModel {
+    pub fn new(model: &'static ModelConfig) -> ServeModel {
+        ServeModel { model, gpu: GpuModel::default() }
+    }
+
+    /// Modeled single-sequence decode step.
+    pub fn decode_step_s(&self) -> f64 {
+        self.gpu.decode_step_latency(self.model, 1)
+    }
+
+    /// Serve a stream of retrieval queries: each entry is the query of one
+    /// retrieval interval (`interval` decode steps + one retrieval).
+    /// Uses the retriever's cache/speculation when enabled, and always
+    /// tracks the synchronous-equivalent cost alongside.
+    pub fn run(&self, retriever: &mut Retriever, queries: &[Vec<f32>]) -> Result<ModeledServe> {
+        let interval = self.model.interval.max(1);
+        let decode_s = self.decode_step_s();
+        let encode_s = self.gpu.encode_latency(self.model, 1);
+        let cached = retriever.retcache_enabled();
+        let before = retriever.rstats;
+
+        let mut modeled_s = 0.0;
+        let mut sync_s = 0.0;
+        for q in queries {
+            let block = interval as f64 * decode_s + encode_s;
+            let (full, charged) = if cached {
+                let cr = retriever.retrieve_cached(q)?;
+                let charged = retriever.charge_retrieval(&cr, decode_s, interval);
+                (cr.result.modeled_s, charged)
+            } else {
+                let r = retriever.retrieve(q)?;
+                (r.modeled_s, r.modeled_s)
+            };
+            modeled_s += block + charged;
+            sync_s += block + full;
+        }
+        let d = retriever.rstats.delta_since(&before);
+        Ok(ModeledServe {
+            tokens: queries.len() * interval,
+            retrievals: queries.len(),
+            modeled_s,
+            sync_modeled_s: sync_s,
+            misses: d.misses,
+            cache_hits: d.cache_hits,
+            spec_hits: d.spec_hits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chamvs::dispatcher::Dispatcher;
+    use crate::chamvs::node::{MemoryNode, ScanEngine};
+    use crate::config::{DEC_S, SIFT};
+    use crate::data::corpus::Corpus;
+    use crate::data::synthetic::SyntheticDataset;
+    use crate::ivf::index::IvfPqIndex;
+    use crate::ivf::shard::Shard;
+    use crate::retcache::{zipf_stream, CacheConfig, SpecConfig};
+
+    fn toy_stack() -> (Retriever, SyntheticDataset) {
+        let data = SyntheticDataset::generate_sized(&SIFT, 2000, 64, 1);
+        let index = IvfPqIndex::build(&data.data, data.n, data.d, SIFT.m, 32, 2);
+        let nodes =
+            vec![MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, 10)];
+        let dispatcher = Dispatcher::new(nodes, 10);
+        let corpus = Corpus::generate(2000, 2048, 8, 3);
+        (Retriever::new(&SIFT, index, dispatcher, corpus), data)
+    }
+
+    fn workload(data: &SyntheticDataset, n_unique: usize, len: usize) -> Vec<Vec<f32>> {
+        zipf_stream(n_unique, 1.1, len, 17)
+            .into_iter()
+            .map(|i| data.query(i % data.n_queries).to_vec())
+            .collect()
+    }
+
+    #[test]
+    fn cached_serve_at_least_as_fast_and_1_3x_on_zipf() {
+        let (mut retriever, data) = toy_stack();
+        let queries = workload(&data, 32, 200);
+        let sm = ServeModel::new(&DEC_S);
+
+        retriever.enable_cache(CacheConfig::default());
+        retriever.enable_speculation(SpecConfig::default());
+        let out = sm.run(&mut retriever, &queries).unwrap();
+
+        assert_eq!(out.retrievals, 200);
+        assert_eq!(
+            out.misses + out.cache_hits + out.spec_hits,
+            200,
+            "every retrieval attributed"
+        );
+        assert!(out.cache_hits > 0, "repeated queries must hit");
+        // Acceptance: cached serve >= uncached tokens/s, and >= 1.3x on a
+        // Zipf-skewed repeated-query workload.
+        assert!(
+            out.modeled_tokens_per_s() >= out.sync_tokens_per_s(),
+            "{} < {}",
+            out.modeled_tokens_per_s(),
+            out.sync_tokens_per_s()
+        );
+        assert!(out.speedup() >= 1.3, "speedup {}", out.speedup());
+        assert!(out.hit_rate() > 0.5, "hit rate {}", out.hit_rate());
+        assert!(retriever.rstats.saved_modeled_s > 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (mut a, data) = toy_stack();
+        let queries = workload(&data, 16, 60);
+        let sm = ServeModel::new(&DEC_S);
+        a.enable_cache(CacheConfig::default());
+        let ra = sm.run(&mut a, &queries).unwrap();
+
+        let (mut b, _) = toy_stack();
+        b.enable_cache(CacheConfig::default());
+        let rb = sm.run(&mut b, &queries).unwrap();
+        assert_eq!(ra.cache_hits, rb.cache_hits);
+        assert!((ra.modeled_s - rb.modeled_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncached_run_matches_sync_baseline() {
+        let (mut r, data) = toy_stack();
+        let queries = workload(&data, 8, 30);
+        let sm = ServeModel::new(&DEC_S);
+        let out = sm.run(&mut r, &queries).unwrap();
+        assert_eq!(out.modeled_s, out.sync_modeled_s);
+        assert_eq!(out.speedup(), 1.0);
+        assert_eq!(out.cache_hits + out.spec_hits, 0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Speculative retrieval (RaLMSpec-style): while the GPU decodes the next
+//! `interval` tokens, the coordinator already has a *predicted* next query
+//! in flight on ChamVS. When the real query materializes it is verified
+//! against the prediction; on a match the prefetched result is consumed
+//! and only the retrieval latency not hidden behind decode is charged, on
+//! a mismatch the in-flight query is cancelled and a normal retrieval
+//! runs.
+//!
+//! Exactness: with `tolerance = 0` a verified speculation is bit-exact
+//! (the prefetched scan ran the identical query) and speculation changes
+//! latency, never results. A *nonzero* tolerance is an approximation
+//! knob, like quantized cache keys: a verified hit serves the *predicted*
+//! query's neighbors, which near PQ distance boundaries can differ from
+//! the drifted real query's — the documented fidelity/latency trade-off.
+//!
+//! The predictor is query-continuity: consecutive retrieval queries come
+//! from consecutive hidden states of the same sequence, so "next query ==
+//! current query (within tolerance)" is the highest-value single guess —
+//! the same locality RaLMSpec exploits with its caching speculator.
+
+use crate::chamvs::dispatcher::Ticket;
+
+/// Speculation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecConfig {
+    /// Mean per-dimension squared distance below which the real query is
+    /// considered to match the prediction. 0 = bit-exact only.
+    pub tolerance: f32,
+    /// How many retrieval intervals ahead the prefetch is issued (the
+    /// overlap window is `depth * interval` decode steps). The in-process
+    /// speculator keeps one prediction in flight; depth scales how much
+    /// decode time the serving layer may credit against it.
+    pub depth: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { tolerance: 1e-4, depth: 1 }
+    }
+}
+
+/// Outcome of verifying the real query against the in-flight prediction.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SpecVerdict {
+    /// Prediction matched; consume this in-flight ticket.
+    Hit(Ticket),
+    /// Prediction missed; cancel this ticket and retrieve normally.
+    Reject(Ticket),
+    /// Nothing was in flight.
+    Idle,
+}
+
+/// Tracks the single in-flight speculative query and its accuracy.
+pub struct Speculator {
+    pub cfg: SpecConfig,
+    in_flight: Option<(Ticket, Vec<f32>)>,
+    pub issued: u64,
+    pub verified: u64,
+    pub rejected: u64,
+}
+
+impl Speculator {
+    pub fn new(cfg: SpecConfig) -> Speculator {
+        Speculator { cfg, in_flight: None, issued: 0, verified: 0, rejected: 0 }
+    }
+
+    /// The next-query prediction given the query that just retrieved.
+    pub fn predict(&self, current: &[f32]) -> Vec<f32> {
+        current.to_vec()
+    }
+
+    /// Record a newly submitted prefetch.
+    pub fn set_in_flight(&mut self, ticket: Ticket, predicted: Vec<f32>) {
+        self.in_flight = Some((ticket, predicted));
+        self.issued += 1;
+    }
+
+    /// Take the outstanding ticket without verification (cancellation on
+    /// sequence boundaries / cache reconfiguration).
+    pub fn take_in_flight(&mut self) -> Option<Ticket> {
+        self.in_flight.take().map(|(t, _)| t)
+    }
+
+    pub fn has_in_flight(&self) -> bool {
+        self.in_flight.is_some()
+    }
+
+    /// Whether the in-flight prediction is exactly this query (used to
+    /// keep predictions fresh across cache hits without re-submitting).
+    pub fn predicts(&self, query: &[f32]) -> bool {
+        self.in_flight.as_ref().is_some_and(|(_, p)| p.as_slice() == query)
+    }
+
+    /// Verify the real query against the in-flight prediction, consuming
+    /// it either way (hit -> poll the ticket, reject -> cancel it).
+    pub fn verify_take(&mut self, query: &[f32]) -> SpecVerdict {
+        match self.in_flight.take() {
+            None => SpecVerdict::Idle,
+            Some((ticket, predicted)) => {
+                if Self::close(query, &predicted, self.cfg.tolerance) {
+                    self.verified += 1;
+                    SpecVerdict::Hit(ticket)
+                } else {
+                    self.rejected += 1;
+                    SpecVerdict::Reject(ticket)
+                }
+            }
+        }
+    }
+
+    /// Fraction of issued speculations that verified (0 when none issued).
+    pub fn accuracy(&self) -> f64 {
+        let settled = self.verified + self.rejected;
+        if settled == 0 {
+            0.0
+        } else {
+            self.verified as f64 / settled as f64
+        }
+    }
+
+    fn close(a: &[f32], b: &[f32], tolerance: f32) -> bool {
+        if a.len() != b.len() || a.is_empty() {
+            return false;
+        }
+        let msd: f32 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            / a.len() as f32;
+        msd <= tolerance
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_without_prefetch() {
+        let mut s = Speculator::new(SpecConfig::default());
+        assert_eq!(s.verify_take(&[1.0, 2.0]), SpecVerdict::Idle);
+        assert_eq!(s.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn exact_match_verifies() {
+        let mut s = Speculator::new(SpecConfig { tolerance: 0.0, depth: 1 });
+        let q = vec![0.5f32; 16];
+        s.set_in_flight(Ticket(7), s.predict(&q));
+        assert!(s.has_in_flight());
+        assert_eq!(s.verify_take(&q), SpecVerdict::Hit(Ticket(7)));
+        assert!(!s.has_in_flight());
+        assert_eq!(s.verified, 1);
+        assert_eq!(s.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn far_query_rejects_and_consumes() {
+        let mut s = Speculator::new(SpecConfig { tolerance: 1e-4, depth: 1 });
+        s.set_in_flight(Ticket(3), vec![0.0f32; 16]);
+        let far = vec![1.0f32; 16];
+        assert_eq!(s.verify_take(&far), SpecVerdict::Reject(Ticket(3)));
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.verify_take(&far), SpecVerdict::Idle, "consumed either way");
+        assert_eq!(s.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn tolerance_admits_drifted_queries() {
+        let mut s = Speculator::new(SpecConfig { tolerance: 1e-2, depth: 1 });
+        let q = vec![0.5f32; 16];
+        let drifted: Vec<f32> = q.iter().map(|x| x + 0.05).collect();
+        s.set_in_flight(Ticket(1), q.clone());
+        assert_eq!(s.verify_take(&drifted), SpecVerdict::Hit(Ticket(1)));
+        // Dimension mismatch never verifies.
+        s.set_in_flight(Ticket(2), q);
+        assert_eq!(s.verify_take(&[0.5f32; 8]), SpecVerdict::Reject(Ticket(2)));
+    }
+
+    #[test]
+    fn take_in_flight_cancels_silently() {
+        let mut s = Speculator::new(SpecConfig::default());
+        s.set_in_flight(Ticket(9), vec![1.0]);
+        assert_eq!(s.take_in_flight(), Some(Ticket(9)));
+        assert_eq!(s.take_in_flight(), None);
+        assert_eq!(s.verified + s.rejected, 0, "not counted as settled");
+    }
+}

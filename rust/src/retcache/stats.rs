@@ -1,0 +1,205 @@
+//! Hit-rate and saved-latency accounting for the retrieval cache +
+//! speculation path, exportable into [`crate::util::metrics::Metrics`]
+//! and renderable into the serve reports.
+
+use crate::util::json::{obj, Json};
+use crate::util::metrics::Metrics;
+
+use super::cache::RetrievalCache;
+use super::spec::Speculator;
+
+/// Where a retrieval was served from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetrievalSource {
+    /// Full coordinator -> ChamVS round trip.
+    Miss,
+    /// Served from the retrieval cache.
+    CacheHit,
+    /// Served from a verified speculative prefetch.
+    SpecHit,
+}
+
+/// Per-retriever counters over the cached serving path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RetrievalStats {
+    pub misses: u64,
+    pub cache_hits: u64,
+    pub spec_hits: u64,
+    /// Modeled seconds the cached/speculative path saved vs the
+    /// synchronous baseline (sum of full latency minus charged latency).
+    pub saved_modeled_s: f64,
+}
+
+impl RetrievalStats {
+    /// Count a retrieval by source only (the saved-latency term is added
+    /// by the serving layer, which knows the decode overlap window).
+    pub fn count(&mut self, source: RetrievalSource) {
+        self.record(source, 0.0, 0.0);
+    }
+
+    pub fn record(&mut self, source: RetrievalSource, full_s: f64, charged_s: f64) {
+        match source {
+            RetrievalSource::Miss => self.misses += 1,
+            RetrievalSource::CacheHit => self.cache_hits += 1,
+            RetrievalSource::SpecHit => self.spec_hits += 1,
+        }
+        self.saved_modeled_s += (full_s - charged_s).max(0.0);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.misses + self.cache_hits + self.spec_hits
+    }
+
+    /// Fraction of retrievals that avoided the full round trip.
+    pub fn served_fast_rate(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            (self.cache_hits + self.spec_hits) as f64 / t as f64
+        }
+    }
+
+    /// Counter-wise difference (for snapshot/delta accounting around a
+    /// serving run).
+    pub fn delta_since(&self, earlier: &RetrievalStats) -> RetrievalStats {
+        RetrievalStats {
+            misses: self.misses - earlier.misses,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            spec_hits: self.spec_hits - earlier.spec_hits,
+            saved_modeled_s: self.saved_modeled_s - earlier.saved_modeled_s,
+        }
+    }
+
+    /// Push the counters into a metrics registry under `retcache.*`.
+    ///
+    /// Lifetime totals go through `incr` — export once per registry (or
+    /// export deltas via [`delta_since`](Self::delta_since)); repeated
+    /// full exports would double-count. Point-in-time gauges (cache
+    /// bytes/entries) go through `observe`, which is repeat-safe.
+    pub fn export(
+        &self,
+        m: &Metrics,
+        cache: Option<&RetrievalCache>,
+        spec: Option<&Speculator>,
+    ) {
+        m.incr("retcache.misses", self.misses);
+        m.incr("retcache.cache_hits", self.cache_hits);
+        m.incr("retcache.spec_hits", self.spec_hits);
+        m.observe("retcache.saved_modeled_s", self.saved_modeled_s);
+        if let Some(c) = cache {
+            m.observe("retcache.cache_bytes", c.bytes() as f64);
+            m.observe("retcache.cache_entries", c.len() as f64);
+            m.incr("retcache.cache_evictions", c.evictions);
+        }
+        if let Some(s) = spec {
+            m.incr("retcache.spec_issued", s.issued);
+            m.incr("retcache.spec_verified", s.verified);
+            m.incr("retcache.spec_rejected", s.rejected);
+        }
+    }
+
+    /// JSON export for report plumbing.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("misses", Json::Num(self.misses as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("spec_hits", Json::Num(self.spec_hits as f64)),
+            ("saved_modeled_s", Json::Num(self.saved_modeled_s)),
+        ])
+    }
+
+    /// Human-readable block for the serve reports.
+    pub fn render(&self, cache: Option<&RetrievalCache>, spec: Option<&Speculator>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "retcache: {} retrievals | miss {} | cache-hit {} | spec-hit {} | fast-served {:.1}%\n",
+            self.total(),
+            self.misses,
+            self.cache_hits,
+            self.spec_hits,
+            self.served_fast_rate() * 100.0,
+        ));
+        out.push_str(&format!(
+            "retcache: saved {:.3} ms modeled retrieval latency\n",
+            self.saved_modeled_s * 1e3
+        ));
+        if let Some(c) = cache {
+            out.push_str(&format!(
+                "retcache: cache {} entries / {} B used of {} B | lifetime hit-rate {:.1}% | {} evictions ({:?})\n",
+                c.len(),
+                c.bytes(),
+                c.cfg.capacity_bytes,
+                c.hit_rate() * 100.0,
+                c.evictions,
+                c.cfg.policy,
+            ));
+        }
+        if let Some(s) = spec {
+            out.push_str(&format!(
+                "retcache: speculation issued {} | verified {} | rejected {} | accuracy {:.1}%\n",
+                s.issued,
+                s.verified,
+                s.rejected,
+                s.accuracy() * 100.0,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retcache::cache::{CacheConfig, RetrievalCache};
+    use crate::retcache::spec::{SpecConfig, Speculator};
+
+    #[test]
+    fn record_accumulates_sources_and_savings() {
+        let mut s = RetrievalStats::default();
+        s.record(RetrievalSource::Miss, 1e-3, 1e-3);
+        s.record(RetrievalSource::CacheHit, 1e-3, 2e-6);
+        s.record(RetrievalSource::SpecHit, 1e-3, 4e-4);
+        assert_eq!(s.total(), 3);
+        assert!((s.served_fast_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.saved_modeled_s - (998e-6 + 6e-4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_since_subtracts() {
+        let mut s = RetrievalStats::default();
+        s.record(RetrievalSource::Miss, 1e-3, 1e-3);
+        let snap = s;
+        s.record(RetrievalSource::CacheHit, 1e-3, 0.0);
+        let d = s.delta_since(&snap);
+        assert_eq!(d.misses, 0);
+        assert_eq!(d.cache_hits, 1);
+    }
+
+    #[test]
+    fn export_populates_metrics() {
+        let mut s = RetrievalStats::default();
+        s.record(RetrievalSource::CacheHit, 1e-3, 0.0);
+        let cache = RetrievalCache::new(CacheConfig::default());
+        let spec = Speculator::new(SpecConfig::default());
+        let m = Metrics::new();
+        s.export(&m, Some(&cache), Some(&spec));
+        assert_eq!(m.counter("retcache.cache_hits"), 1);
+        assert_eq!(m.counter("retcache.spec_issued"), 0);
+        let j = m.to_json().dump();
+        assert!(j.contains("retcache.cache_hits"), "{j}");
+    }
+
+    #[test]
+    fn render_mentions_all_counter_groups() {
+        let mut s = RetrievalStats::default();
+        s.record(RetrievalSource::SpecHit, 1e-3, 1e-4);
+        let cache = RetrievalCache::new(CacheConfig::default());
+        let spec = Speculator::new(SpecConfig::default());
+        let out = s.render(Some(&cache), Some(&spec));
+        assert!(out.contains("cache-hit"));
+        assert!(out.contains("spec-hit"));
+        assert!(out.contains("speculation issued"));
+        assert!(out.contains("saved"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Deterministic serving workloads for the cache/speculation benches: a
+//! Zipf-skewed stream of query indices (production retrieval traffic is
+//! heavily skewed — the same few queries/prefixes recur), plus helpers to
+//! measure how repetitive a stream actually is.
+
+use crate::util::rng::Rng;
+
+/// A Zipf(alpha) stream of `len` indices over `0..n_unique`.
+/// `alpha = 0` is uniform; larger alpha concentrates mass on low ranks.
+pub fn zipf_stream(n_unique: usize, alpha: f64, len: usize, seed: u64) -> Vec<usize> {
+    assert!(n_unique > 0);
+    let weights: Vec<f64> = (1..=n_unique).map(|r| 1.0 / (r as f64).powf(alpha)).collect();
+    let mut cdf = Vec::with_capacity(n_unique);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w;
+        cdf.push(acc);
+    }
+    let total = acc;
+    let mut rng = Rng::new(seed);
+    (0..len)
+        .map(|_| {
+            let x = rng.f64() * total;
+            // Binary search for the first cdf entry >= x.
+            match cdf.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(n_unique - 1),
+            }
+        })
+        .collect()
+}
+
+/// Fraction of stream positions that repeat an index seen earlier —
+/// the "query-repeat ratio" axis of the cache bench.
+pub fn repeat_fraction(stream: &[usize]) -> f64 {
+    if stream.is_empty() {
+        return 0.0;
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut repeats = 0usize;
+    for &i in stream {
+        if !seen.insert(i) {
+            repeats += 1;
+        }
+    }
+    repeats as f64 / stream.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(zipf_stream(32, 1.1, 200, 9), zipf_stream(32, 1.1, 200, 9));
+        assert_ne!(zipf_stream(32, 1.1, 200, 9), zipf_stream(32, 1.1, 200, 10));
+    }
+
+    #[test]
+    fn indices_in_range() {
+        for &alpha in &[0.0, 0.8, 2.5] {
+            let s = zipf_stream(17, alpha, 500, 3);
+            assert_eq!(s.len(), 500);
+            assert!(s.iter().all(|&i| i < 17));
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_on_low_ranks() {
+        let s = zipf_stream(64, 1.5, 4000, 5);
+        let head = s.iter().filter(|&&i| i < 4).count() as f64 / s.len() as f64;
+        assert!(head > 0.5, "top-4 mass {head}");
+        // Uniform stream spreads out.
+        let u = zipf_stream(64, 0.0, 4000, 5);
+        let uhead = u.iter().filter(|&&i| i < 4).count() as f64 / u.len() as f64;
+        assert!(uhead < 0.15, "uniform top-4 mass {uhead}");
+    }
+
+    #[test]
+    fn higher_alpha_repeats_more() {
+        let lo = repeat_fraction(&zipf_stream(256, 0.2, 512, 7));
+        let hi = repeat_fraction(&zipf_stream(256, 1.8, 512, 7));
+        assert!(hi > lo, "{hi} !> {lo}");
+    }
+
+    #[test]
+    fn repeat_fraction_edges() {
+        assert_eq!(repeat_fraction(&[]), 0.0);
+        assert_eq!(repeat_fraction(&[1, 2, 3]), 0.0);
+        assert!((repeat_fraction(&[1, 1, 1, 1]) - 0.75).abs() < 1e-12);
+    }
+}

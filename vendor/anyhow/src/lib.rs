@@ -1,0 +1,300 @@
+//! Offline vendored substrate for `anyhow` — the API subset this
+//! repository uses, implemented from scratch (the build has no crates.io
+//! access, mirroring the other from-scratch substrates in `util/`).
+//!
+//! Supported surface:
+//! * [`Error`]: type-erased error with a context chain; `Display` shows the
+//!   outermost message, `{:#}` the full `a: b: c` chain, `Debug` the chain
+//!   over multiple lines (what `Result`-returning `main` prints).
+//! * [`Result<T>`] alias with `E = Error`.
+//! * Blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts concrete errors ([`Error`] itself intentionally does *not*
+//!   implement `std::error::Error`, exactly like the real crate).
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * [`Error::downcast_ref`] walking the context chain.
+//! * The `anyhow!`, `bail!` and `ensure!` macros.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with a type-erased error, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    /// A concrete boxed error.
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+    /// An ad-hoc message (from `anyhow!`/`bail!`/`ensure!`).
+    Msg(String),
+    /// A context layer wrapped around a cause.
+    Context { msg: String, source: Box<Error> },
+}
+
+/// A type-erased error with context.
+pub struct Error {
+    repr: Repr,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { repr: Repr::Msg(msg.to_string()) }
+    }
+
+    /// Build an error from a concrete `std::error::Error`.
+    pub fn new<E>(err: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { repr: Repr::Boxed(Box::new(err)) }
+    }
+
+    /// Wrap this error in a context message.
+    pub fn context<C: fmt::Display>(self, msg: C) -> Error {
+        Error { repr: Repr::Context { msg: msg.to_string(), source: Box::new(self) } }
+    }
+
+    /// Downcast against the concrete errors anywhere in the chain.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        match &self.repr {
+            Repr::Boxed(e) => e.downcast_ref::<T>(),
+            Repr::Msg(_) => None,
+            Repr::Context { source, .. } => source.downcast_ref::<T>(),
+        }
+    }
+
+    /// The outermost message of the chain.
+    fn head(&self) -> String {
+        match &self.repr {
+            Repr::Boxed(e) => e.to_string(),
+            Repr::Msg(m) => m.clone(),
+            Repr::Context { msg, .. } => msg.clone(),
+        }
+    }
+
+    /// The error one level beneath this one, if any.
+    fn source_err(&self) -> Option<&Error> {
+        match &self.repr {
+            Repr::Context { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+
+    /// Messages from outermost to root cause.
+    fn chain_msgs(&self) -> Vec<String> {
+        let mut out = vec![self.head()];
+        let mut cur = self.source_err();
+        while let Some(e) = cur {
+            out.push(e.head());
+            cur = e.source_err();
+        }
+        // Also surface the std source chain of the innermost boxed error.
+        if let Some(last) = self.innermost_boxed() {
+            let mut src = last.source();
+            while let Some(s) = src {
+                out.push(s.to_string());
+                src = s.source();
+            }
+        }
+        out
+    }
+
+    fn innermost_boxed(&self) -> Option<&(dyn StdError + 'static)> {
+        match &self.repr {
+            Repr::Boxed(e) => Some(e.as_ref()),
+            Repr::Msg(_) => None,
+            Repr::Context { source, .. } => source.innermost_boxed(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line, as the real crate does.
+            write!(f, "{}", self.chain_msgs().join(": "))
+        } else {
+            write!(f, "{}", self.head())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_msgs();
+        write!(f, "{}", msgs[0])?;
+        if msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T, E> {
+    /// Wrap the error with a message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily-evaluated message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an ad-hoc [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an ad-hoc error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::TimedOut, "slow")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn downcast_through_context() {
+        fn inner() -> Result<()> {
+            Err(io_err()).context("outer")
+        }
+        let e = inner().unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("downcast");
+        assert_eq!(io.kind(), std::io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e = Error::new(io_err()).context("reading frame").context("serving");
+        let s = format!("{e:#}");
+        assert!(s.contains("serving"), "{s}");
+        assert!(s.contains("reading frame"), "{s}");
+        assert!(s.contains("slow"), "{s}");
+        assert_eq!(format!("{e}"), "serving");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        let w: Option<u32> = Some(7);
+        assert_eq!(w.with_context(|| "never").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        fn inner(x: usize) -> Result<usize> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(5).unwrap(), 5);
+        assert_eq!(format!("{}", inner(12).unwrap_err()), "too big: 12");
+        assert_eq!(format!("{}", inner(3).unwrap_err()), "unlucky 3");
+        let e = anyhow!("ad hoc {}", 1);
+        assert_eq!(format!("{e}"), "ad hoc 1");
+    }
+}

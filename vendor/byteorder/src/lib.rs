@@ -1,0 +1,185 @@
+//! Offline vendored substrate for `byteorder` — the API subset this
+//! repository uses (little-endian framed I/O in `net/protocol` and
+//! `ivf/persist`), implemented on std only.
+
+use std::io::{self, Read, Write};
+
+/// Byte-order abstraction over fixed-width encode/decode.
+pub trait ByteOrder {
+    fn read_u16(buf: &[u8; 2]) -> u16;
+    fn read_u32(buf: &[u8; 4]) -> u32;
+    fn read_u64(buf: &[u8; 8]) -> u64;
+    fn write_u16(x: u16) -> [u8; 2];
+    fn write_u32(x: u32) -> [u8; 4];
+    fn write_u64(x: u64) -> [u8; 8];
+}
+
+/// Little-endian byte order.
+#[derive(Clone, Copy, Debug)]
+pub enum LittleEndian {}
+
+/// Big-endian byte order.
+#[derive(Clone, Copy, Debug)]
+pub enum BigEndian {}
+
+impl ByteOrder for LittleEndian {
+    fn read_u16(buf: &[u8; 2]) -> u16 {
+        u16::from_le_bytes(*buf)
+    }
+    fn read_u32(buf: &[u8; 4]) -> u32 {
+        u32::from_le_bytes(*buf)
+    }
+    fn read_u64(buf: &[u8; 8]) -> u64 {
+        u64::from_le_bytes(*buf)
+    }
+    fn write_u16(x: u16) -> [u8; 2] {
+        x.to_le_bytes()
+    }
+    fn write_u32(x: u32) -> [u8; 4] {
+        x.to_le_bytes()
+    }
+    fn write_u64(x: u64) -> [u8; 8] {
+        x.to_le_bytes()
+    }
+}
+
+impl ByteOrder for BigEndian {
+    fn read_u16(buf: &[u8; 2]) -> u16 {
+        u16::from_be_bytes(*buf)
+    }
+    fn read_u32(buf: &[u8; 4]) -> u32 {
+        u32::from_be_bytes(*buf)
+    }
+    fn read_u64(buf: &[u8; 8]) -> u64 {
+        u64::from_be_bytes(*buf)
+    }
+    fn write_u16(x: u16) -> [u8; 2] {
+        x.to_be_bytes()
+    }
+    fn write_u32(x: u32) -> [u8; 4] {
+        x.to_be_bytes()
+    }
+    fn write_u64(x: u64) -> [u8; 8] {
+        x.to_be_bytes()
+    }
+}
+
+/// Network byte order.
+pub type NetworkEndian = BigEndian;
+
+/// Extension methods for reading fixed-width values.
+pub trait ReadBytesExt: Read {
+    fn read_u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn read_u16<T: ByteOrder>(&mut self) -> io::Result<u16> {
+        let mut b = [0u8; 2];
+        self.read_exact(&mut b)?;
+        Ok(T::read_u16(&b))
+    }
+
+    fn read_u32<T: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(T::read_u32(&b))
+    }
+
+    fn read_u64<T: ByteOrder>(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(T::read_u64(&b))
+    }
+
+    fn read_i32<T: ByteOrder>(&mut self) -> io::Result<i32> {
+        Ok(self.read_u32::<T>()? as i32)
+    }
+
+    fn read_i64<T: ByteOrder>(&mut self) -> io::Result<i64> {
+        Ok(self.read_u64::<T>()? as i64)
+    }
+
+    fn read_f32<T: ByteOrder>(&mut self) -> io::Result<f32> {
+        Ok(f32::from_bits(self.read_u32::<T>()?))
+    }
+
+    fn read_f64<T: ByteOrder>(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.read_u64::<T>()?))
+    }
+}
+
+impl<R: Read + ?Sized> ReadBytesExt for R {}
+
+/// Extension methods for writing fixed-width values.
+pub trait WriteBytesExt: Write {
+    fn write_u8(&mut self, x: u8) -> io::Result<()> {
+        self.write_all(&[x])
+    }
+
+    fn write_u16<T: ByteOrder>(&mut self, x: u16) -> io::Result<()> {
+        self.write_all(&T::write_u16(x))
+    }
+
+    fn write_u32<T: ByteOrder>(&mut self, x: u32) -> io::Result<()> {
+        self.write_all(&T::write_u32(x))
+    }
+
+    fn write_u64<T: ByteOrder>(&mut self, x: u64) -> io::Result<()> {
+        self.write_all(&T::write_u64(x))
+    }
+
+    fn write_i32<T: ByteOrder>(&mut self, x: i32) -> io::Result<()> {
+        self.write_u32::<T>(x as u32)
+    }
+
+    fn write_i64<T: ByteOrder>(&mut self, x: i64) -> io::Result<()> {
+        self.write_u64::<T>(x as u64)
+    }
+
+    fn write_f32<T: ByteOrder>(&mut self, x: f32) -> io::Result<()> {
+        self.write_u32::<T>(x.to_bits())
+    }
+
+    fn write_f64<T: ByteOrder>(&mut self, x: f64) -> io::Result<()> {
+        self.write_u64::<T>(x.to_bits())
+    }
+}
+
+impl<W: Write + ?Sized> WriteBytesExt for W {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_le() {
+        let mut buf = Vec::new();
+        buf.write_u32::<LittleEndian>(0xDEADBEEF).unwrap();
+        buf.write_u64::<LittleEndian>(42).unwrap();
+        buf.write_f32::<LittleEndian>(1.5).unwrap();
+        buf.write_f64::<LittleEndian>(-2.25).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(r.read_u32::<LittleEndian>().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.read_u64::<LittleEndian>().unwrap(), 42);
+        assert_eq!(r.read_f32::<LittleEndian>().unwrap(), 1.5);
+        assert_eq!(r.read_f64::<LittleEndian>().unwrap(), -2.25);
+    }
+
+    #[test]
+    fn le_layout() {
+        let mut buf = Vec::new();
+        buf.write_u32::<LittleEndian>(1).unwrap();
+        assert_eq!(buf, vec![1, 0, 0, 0]);
+        let mut buf = Vec::new();
+        buf.write_u32::<BigEndian>(1).unwrap();
+        assert_eq!(buf, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let mut r: &[u8] = &[1, 2];
+        assert!(r.read_u32::<LittleEndian>().is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! Offline stub of the `xla_extension` bindings used by `runtime/`.
+//!
+//! The container this repository builds in has no XLA/PJRT shared library,
+//! so this crate keeps the *host-side* surface fully functional
+//! ([`Literal`] construction, reshape, readback — enough for the tensor
+//! round-trip unit tests) while the *device-side* entry point
+//! ([`PjRtClient::cpu`]) reports `PJRT unavailable`. Everything that needs
+//! a live accelerator (integration tests, `chameleon demo/serve`, the
+//! measured bench sections) detects that error and skips; the modeled
+//! paper-scale reports and the native scan engines are unaffected.
+//!
+//! Swap this path dependency for the real `xla` crate (see
+//! /opt/xla-example in the original environment) to execute the AOT
+//! artifacts for real — the API is a strict subset of that crate.
+
+use std::fmt;
+
+/// Stub error type.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT unavailable (offline xla stub; link the real xla_extension to execute artifacts)"
+    )))
+}
+
+/// Element types surfaced by artifact outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side XLA literal (dense array or tuple).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+/// Sealed-ish conversion trait for the element types `Literal::vec1` and
+/// `Literal::to_vec` support.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralDataWrapper;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+/// Opaque constructor payload (keeps `LiteralData` private).
+pub struct LiteralDataWrapper(LiteralData);
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralDataWrapper {
+        LiteralDataWrapper(LiteralData::F32(data))
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralDataWrapper {
+        LiteralDataWrapper(LiteralData::I32(data))
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            LiteralData::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// A rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let LiteralDataWrapper(inner) = T::wrap(data.to_vec());
+        Literal { dims: vec![data.len() as i64], data: inner }
+    }
+
+    /// Reshape to new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!("reshape {have} elements to {dims:?}")));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => 0,
+        }
+    }
+
+    /// Shape of a dense (non-tuple) literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+            LiteralData::Tuple(_) => return Err(Error("tuple literal has no array shape".into())),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match &mut self.data {
+            LiteralData::Tuple(parts) => Ok(std::mem::take(parts)),
+            _ => Err(Error("not a tuple literal".into())),
+        }
+    }
+
+    /// Build a tuple literal (used by tests of the stub itself).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: LiteralData::Tuple(parts) }
+    }
+}
+
+/// Parsed HLO module handle (stub: parsing requires the real bindings).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation handle built from a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        // Unreachable without a client, but kept functional for symmetry.
+        Ok(PjRtBuffer { literal: lit.clone() })
+    }
+}
+
+/// Compiled executable handle (stub: execution always fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Device buffer handle (stub: holds the host literal).
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let mut t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1i32]).decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("PJRT unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
