@@ -1,10 +1,12 @@
 //! Bench: Fig 10 — query latency scaling out memory nodes (LogGP
 //! extrapolation, the paper's own method), plus measured multi-node
-//! dispatch through the in-process dispatcher and over real sockets.
+//! dispatch through the in-process thread-pooled dispatcher (worker
+//! sweep: wall-clock must drop monotonically 1 -> 4 threads on a 4-node
+//! index) and over real sockets.
 //!
 //! Run: `cargo bench --bench scalability`
 
-use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
 use chameleon::config;
 use chameleon::data::synthetic::SyntheticDataset;
@@ -17,7 +19,8 @@ use chameleon::util::timer::Bench;
 fn main() {
     println!("{}", chameleon::report::fig10_scalability(10_000, 64, 42));
 
-    // Measured: in-process dispatcher with 1..8 nodes over a scaled db.
+    // Measured: in-process dispatcher with 1..8 nodes over a scaled db
+    // (one worker thread per node — the default fan-out).
     let ds = config::dataset_by_name("SYN-512").unwrap();
     let data = SyntheticDataset::generate_sized(ds, 10_000, 64, 3);
     let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 100, 5);
@@ -36,6 +39,63 @@ fn main() {
             let lists = index.probe(q, ds.nprobe);
             disp.search(q, &index.pq.centroids, &lists, ds.nprobe).unwrap().topk.len()
         });
+    }
+
+    // Measured: worker-thread sweep on a fixed 4-node index. Probes are
+    // precomputed so the timed region is purely the dispatch round; each
+    // round pushes a 16-query batch through per-node work queues. Wall
+    // clock must improve monotonically 1 -> 2 -> 4 threads while the CPU
+    // total (sum across nodes) stays flat — the wall/cpu split
+    // `SearchResult` now reports.
+    const BATCH: usize = 16;
+    let nodes: Vec<MemoryNode> = (0..4)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 4), ScanEngine::Native, 100))
+        .collect();
+    let mut disp = Dispatcher::new(nodes, 100);
+    let queries: Vec<Vec<f32>> = (0..data.n_queries)
+        .map(|i| data.query(i).to_vec())
+        .collect();
+    let lists: Vec<Vec<u32>> =
+        queries.iter().map(|q| index.probe(q, ds.nprobe)).collect();
+    let mut bench = Bench::new("measured_thread_sweep_4nodes");
+    let mut walls: Vec<(usize, f64)> = Vec::new();
+    for &threads in &[1usize, 2, 4] {
+        disp.n_threads = threads;
+        let mut start = 0usize;
+        let mut cpu_sum = 0.0f64;
+        let mut rounds = 0u64;
+        let s = bench.case(&format!("batch{BATCH}_{threads}threads"), || {
+            let batch: Vec<BatchQuery> = (0..BATCH)
+                .map(|j| {
+                    let i = (start + j) % queries.len();
+                    BatchQuery { query: &queries[i], lists: &lists[i] }
+                })
+                .collect();
+            start = (start + BATCH) % queries.len();
+            let rs = disp
+                .search_batch(&batch, &index.pq.centroids, ds.nprobe)
+                .unwrap();
+            cpu_sum += rs.iter().map(|r| r.measured_cpu_s).sum::<f64>();
+            rounds += 1;
+            rs.len()
+        });
+        println!(
+            "    -> per-round wall p50 {:.3} ms | node-cpu per round {:.3} ms (sum across nodes)",
+            s.p50 * 1e3,
+            cpu_sum / rounds as f64 * 1e3,
+        );
+        walls.push((threads, s.p50));
+    }
+    for w in walls.windows(2) {
+        let (t0, w0) = w[0];
+        let (t1, w1) = w[1];
+        println!(
+            "    -> {t0} -> {t1} threads: wall {:.3} -> {:.3} ms ({:.2}x){}",
+            w0 * 1e3,
+            w1 * 1e3,
+            w0 / w1.max(1e-12),
+            if w1 < w0 { "" } else { "  ** NOT monotonic **" },
+        );
     }
 
     // Measured: networked nodes over localhost TCP.

@@ -56,6 +56,49 @@ fn main() {
         });
     }
 
+    // Part 3b: parallel dispatch over 4 nodes — per-query wall (max
+    // across nodes) vs cpu (sum across nodes), single and batched.
+    let nodes: Vec<MemoryNode> = (0..4)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 4), ScanEngine::Native, 100))
+        .collect();
+    let mut disp = chameleon::chamvs::Dispatcher::new(nodes, 100);
+    let queries: Vec<Vec<f32>> = (0..data.n_queries)
+        .map(|i| data.query(i).to_vec())
+        .collect();
+    let lists: Vec<Vec<u32>> =
+        queries.iter().map(|q| index.probe(q, ds.nprobe)).collect();
+    let mut bench = Bench::new("measured_parallel_dispatch_4nodes");
+    let mut qi = 0usize;
+    bench.case("single_query_round", || {
+        qi = (qi + 1) % queries.len();
+        let r = disp
+            .search(&queries[qi], &index.pq.centroids, &lists[qi], ds.nprobe)
+            .unwrap();
+        (r.measured_wall_s, r.measured_cpu_s)
+    });
+    let mut start = 0usize;
+    bench.case("batch8_round", || {
+        let batch: Vec<chameleon::chamvs::BatchQuery> = (0..8)
+            .map(|j| {
+                let i = (start + j) % queries.len();
+                chameleon::chamvs::BatchQuery {
+                    query: &queries[i],
+                    lists: &lists[i],
+                }
+            })
+            .collect();
+        start = (start + 8) % queries.len();
+        disp.search_batch(&batch, &index.pq.centroids, ds.nprobe).unwrap().len()
+    });
+    let r = disp
+        .search(&queries[0], &index.pq.centroids, &lists[0], ds.nprobe)
+        .unwrap();
+    println!(
+        "    -> sample query: wall {:.4} ms (max across nodes) vs cpu {:.4} ms (sum)",
+        r.measured_wall_s * 1e3,
+        r.measured_cpu_s * 1e3
+    );
+
     // Part 4: LUT construction cost (shared stage of every backend).
     let mut bench = Bench::new("measured_lut_build");
     for ds in DATASETS {

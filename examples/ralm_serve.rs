@@ -4,7 +4,12 @@
 //! end-to-end driver (Fig 11/12 shape at scaled size).
 //!
 //! Run: `cargo run --release --example ralm_serve -- [--model dec_tiny]
-//!       [--sequences 4] [--tokens 48] [--interval 1]`
+//!       [--sequences 4] [--tokens 48] [--interval 1]
+//!       [--nodes 1] [--dispatch-threads 0]`
+//!
+//! `--nodes <n>` shards the index over n memory nodes and
+//! `--dispatch-threads <t>` sets the dispatcher's fan-out width
+//! (0 = one worker per node; 1 = sequential baseline).
 //!
 //! Retcache knobs (see rust/src/retcache/): `--cache-kb <n>` enables the
 //! retrieval cache with an n-KiB byte budget (0 = off, the default),
@@ -42,14 +47,24 @@ fn main() -> chameleon::Result<()> {
     let paper = if model.is_encdec() { &config::ENCDEC_S } else { &config::DEC_S };
     let ds = config::dataset_by_name("SIFT").unwrap();
 
-    println!("== building retrieval stack ==");
+    let n_nodes = args.get_usize("nodes", 1).max(1);
+    let dispatch_threads = args.get_usize("dispatch-threads", 0);
+
+    println!("== building retrieval stack ({n_nodes} memory node(s)) ==");
     let data = SyntheticDataset::generate_sized(ds, 8000, 16, seed);
     let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 64, seed);
-    let nodes =
-        vec![MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, model.k)];
+    let nodes: Vec<MemoryNode> = (0..n_nodes)
+        .map(|i| {
+            MemoryNode::new(Shard::carve(&index, i, n_nodes), ScanEngine::Native, model.k)
+        })
+        .collect();
     let corpus = Corpus::generate(data.n, model.vocab, config::CHUNK_LEN, seed);
-    let retriever =
-        Retriever::new(ds, index, Dispatcher::new(nodes, model.k), corpus);
+    let dispatcher = Dispatcher::new(nodes, model.k).with_threads(dispatch_threads);
+    println!(
+        "== dispatch: {} worker thread(s) over {n_nodes} node(s) ==",
+        dispatcher.effective_threads()
+    );
+    let retriever = Retriever::new(ds, index, dispatcher, corpus);
 
     println!("== loading model '{}' via PJRT ==", model.name);
     let runtime = Runtime::new(

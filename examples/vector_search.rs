@@ -54,11 +54,13 @@ fn main() -> chameleon::Result<()> {
         let mut backend =
             SearchBackend::new(kind, ds, Dispatcher::new(nodes, k), true);
         let mut modeled = Vec::new();
-        let mut measured = Vec::new();
+        let mut wall = Vec::new();
+        let mut cpu = Vec::new();
         for qi in 0..n_queries {
             let (res, lat) = backend.search(&index, data.query(qi), k)?;
             modeled.push(lat.total());
-            measured.push(res.measured_s);
+            wall.push(res.measured_wall_s);
+            cpu.push(res.measured_cpu_s);
         }
         println!(
             "{}",
@@ -66,8 +68,13 @@ fn main() -> chameleon::Result<()> {
         );
         println!(
             "{}",
-            Summary::of(&measured)
-                .render_ms(&format!("{} measured(scaled)", kind.name()))
+            Summary::of(&wall)
+                .render_ms(&format!("{} measured wall(scaled)", kind.name()))
+        );
+        println!(
+            "{}",
+            Summary::of(&cpu)
+                .render_ms(&format!("{} measured cpu(scaled)", kind.name()))
         );
     }
     Ok(())

@@ -37,6 +37,9 @@ impl GenerationStats {
 /// Drives one worker + one retriever to generate sequences.
 pub struct Generator<'a> {
     pub worker: &'a mut GpuWorker,
+    /// Speculation slot (= the worker's GPU id): this sequence's prefetch
+    /// lane on the dispatcher, isolated from other GPU streams.
+    pub slot: usize,
     pub retriever: &'a mut Retriever,
     pub sampler: Sampler,
     /// Modeled per-decode-step latency of the paper-scale model this
@@ -84,7 +87,7 @@ impl<'a> Generator<'a> {
                     // not hidden behind the decode window since the
                     // previous retrieval (max(decode, retrieval) instead
                     // of the sum), a miss the full round trip.
-                    let cr = self.retriever.retrieve_cached(&q)?;
+                    let cr = self.retriever.retrieve_cached_from(self.slot, &q)?;
                     modeled +=
                         self.retriever.charge_retrieval(&cr, self.modeled_decode_s, interval);
                     cr.result

@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use super::dispatcher::{Dispatcher, SearchResult};
+use super::dispatcher::{BatchQuery, Dispatcher, SearchResult};
 use crate::config::DatasetConfig;
 use crate::hwmodel::{CpuModel, GpuModel};
 use crate::ivf::index::IvfPqIndex;
@@ -119,17 +119,54 @@ impl SearchBackend {
         let result =
             self.dispatcher.search(query, &index.pq.centroids, &lists, nprobe)?;
         let _ = k;
-        let n_codes = if self.paper_scale {
+        let n_codes = self.project_n_codes(index, result.n_scanned);
+        let lat = self.latency_model(n_codes);
+        Ok((result, lat))
+    }
+
+    /// Scanned-code count at the modeled scale: with `paper_scale`, the
+    /// scaled count is projected by *relative probe mass* (this query's
+    /// scan size vs the scaled index's expected size, times the paper's
+    /// expected size), preserving per-query variation across the scale
+    /// change; otherwise the raw count.
+    fn project_n_codes(&self, index: &IvfPqIndex, n_scanned: usize) -> usize {
+        if self.paper_scale {
+            let nprobe = self.ds.nprobe;
             let expected =
                 index.len() as f64 * nprobe as f64 / index.nlist as f64;
-            let rel = result.n_scanned as f64 / expected.max(1.0);
+            let rel = n_scanned as f64 / expected.max(1.0);
             (rel * self.ds.n_paper as f64 * nprobe as f64
                 / self.ds.nlist_paper as f64) as usize
         } else {
-            result.n_scanned
-        };
-        let lat = self.latency_model(n_codes);
-        Ok((result, lat))
+            n_scanned
+        }
+    }
+
+    /// Run a batch of queries end-to-end in ONE parallel dispatch round
+    /// (real numerics via [`Dispatcher::search_batch`]; per-node work
+    /// queues, k-way merge per query), plus the modeled batched latency
+    /// for this backend at the mean projected scan size.
+    pub fn search_many(
+        &mut self,
+        index: &IvfPqIndex,
+        queries: &[&[f32]],
+    ) -> Result<(Vec<SearchResult>, f64)> {
+        anyhow::ensure!(!queries.is_empty(), "empty query batch");
+        let nprobe = self.ds.nprobe;
+        let lists: Vec<Vec<u32>> =
+            queries.iter().map(|q| index.probe(q, nprobe)).collect();
+        let batch: Vec<BatchQuery> = queries
+            .iter()
+            .zip(&lists)
+            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .collect();
+        let results =
+            self.dispatcher.search_batch(&batch, &index.pq.centroids, nprobe)?;
+        let mean_scanned = results.iter().map(|r| r.n_scanned).sum::<usize>()
+            / results.len();
+        let n_codes = self.project_n_codes(index, mean_scanned);
+        let modeled = self.batch_latency_model(queries.len(), n_codes);
+        Ok((results, modeled))
     }
 
     /// Latency model for a query scanning `n_codes` PQ codes (already at
@@ -252,6 +289,24 @@ mod tests {
         assert_eq!(res.topk.len(), 10);
         assert!(lat.total() > 0.0);
         assert!(lat.network_s > 0.0);
+    }
+
+    #[test]
+    fn search_many_matches_sequential() {
+        let (mut b, idx, d) = toy_backend(BackendKind::FpgaGpu);
+        let mut rng = Rng::new(9);
+        let queries: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(d)).collect();
+        let want: Vec<Vec<(f32, u64)>> = queries
+            .iter()
+            .map(|q| b.search(&idx, q, 10).unwrap().0.topk)
+            .collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let (got, modeled) = b.search_many(&idx, &refs).unwrap();
+        assert!(modeled > 0.0);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(&g.topk, w);
+        }
     }
 
     #[test]

@@ -2,6 +2,32 @@
 //! coordination process of the paper's workflow (Sec 3 steps 4-8): the
 //! coordinator broadcasts (query, list IDs) to every node, each node
 //! returns its local top-K, and a k-way merge produces the global top-K.
+//!
+//! Dispatch is truly concurrent: every round fans its scan jobs out over
+//! the memory nodes on a scoped thread pool (`n_threads` workers, each
+//! owning a balanced contiguous chunk of nodes), so host wall-clock
+//! behaves like the paper's disaggregated system — the slowest worker
+//! gates the response. [`SearchResult`] therefore reports both
+//! `measured_wall_s` (max across workers of their nodes' scan-time sums —
+//! the honest parallel number at the configured width, reducing to the
+//! slowest node at full fan-out) and `measured_cpu_s` (sum across nodes,
+//! the total host work).
+//!
+//! Two request shapes share the pool:
+//! * [`Dispatcher::search`] — one query, broadcast to all nodes.
+//! * [`Dispatcher::search_batch`] — B queries per round with per-node
+//!   work queues: each worker thread runs *all* queries of the round
+//!   against its nodes (node-major), and results are k-way merged per
+//!   query as they land.
+//!
+//! Speculative traffic ([`Dispatcher::submit`]) rides the same pool:
+//! queued tickets execute alongside the next batched round (or fan out in
+//! parallel on demand at [`Dispatcher::poll`]) and their results are
+//! parked until collected; single-query `search` leaves them queued so a
+//! blocking retrieval's measured wall-clock never absorbs another
+//! stream's speculative work. Tickets are tagged with a *slot* (one lane per GPU source;
+//! see `coordinator::server`), so submit/poll/cancel on one slot never
+//! disturbs another's in-flight work.
 
 use anyhow::Result;
 
@@ -19,8 +45,14 @@ pub struct SearchResult {
     pub accel_s: f64,
     /// Modeled network round trip (LogGP broadcast + reduce).
     pub network_s: f64,
-    /// Sum of host wall-clock across nodes (sequential in-process here).
-    pub measured_s: f64,
+    /// Honest parallel-dispatch wall-clock at the configured fan-out:
+    /// max across pool workers of the sum of their nodes' scan times.
+    /// With one worker per node this is the slowest node (the paper's
+    /// disaggregated bound); with one thread it equals `measured_cpu_s`
+    /// (a sequential scan is reported as sequential, never as parallel).
+    pub measured_wall_s: f64,
+    /// Sum of host wall-clock across nodes: total CPU work of the scan.
+    pub measured_cpu_s: f64,
     /// Total codes scanned across nodes.
     pub n_scanned: usize,
 }
@@ -36,11 +68,38 @@ impl SearchResult {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Ticket(pub u64);
 
+/// One query of a batched dispatch round (borrowed request payload).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchQuery<'a> {
+    /// Full D-dim query vector.
+    pub query: &'a [f32],
+    /// Probed IVF list ids (from ChamVS.idx).
+    pub lists: &'a [u32],
+}
+
 /// A submitted-but-not-yet-collected scan request.
 struct PendingScan {
     id: u64,
-    query: Vec<f32>,
-    lists: Vec<u32>,
+    /// Ticket lane (one per GPU source); isolation boundary for
+    /// `cancel_slot` and the per-slot in-flight accounting.
+    slot: usize,
+    state: PendingState,
+}
+
+enum PendingState {
+    /// Not yet executed: will run with the next dispatch round (or at
+    /// poll time, whichever comes first).
+    Queued { query: Vec<f32>, lists: Vec<u32>, nprobe: usize },
+    /// Executed alongside an earlier round; parked until polled.
+    Done(SearchResult),
+}
+
+/// One scan job of a dispatch round: the query, its probed lists, and the
+/// per-query LUT shared by every node.
+struct ScanJob<'a> {
+    query: &'a [f32],
+    lists: &'a [u32],
+    lut: Vec<f32>,
     nprobe: usize,
 }
 
@@ -49,6 +108,10 @@ pub struct Dispatcher {
     pub nodes: Vec<MemoryNode>,
     pub net: LogGp,
     pub k: usize,
+    /// Worker threads for node fan-out. 0 (the default) means one worker
+    /// per node; values are clamped to the node count. 1 runs inline on
+    /// the calling thread (the sequential baseline, no spawn overhead).
+    pub n_threads: usize,
     next_ticket: u64,
     pending: Vec<PendingScan>,
 }
@@ -59,12 +122,37 @@ impl Dispatcher {
             nodes,
             net: LogGp::default(),
             k,
+            n_threads: 0,
             next_ticket: 0,
             pending: Vec::new(),
         }
     }
 
-    /// Broadcast one query's scan request to all nodes and merge results.
+    /// Builder-style worker-thread override (`0` = one per node).
+    pub fn with_threads(mut self, n_threads: usize) -> Dispatcher {
+        self.n_threads = n_threads;
+        self
+    }
+
+    /// Effective fan-out width for the current node set.
+    pub fn effective_threads(&self) -> usize {
+        let n = self.nodes.len().max(1);
+        if self.n_threads == 0 {
+            n
+        } else {
+            self.n_threads.min(n)
+        }
+    }
+
+    /// Broadcast one query's scan request to all nodes (in parallel on the
+    /// thread pool) and merge results.
+    ///
+    /// Queued speculative tickets are deliberately NOT drained here: their
+    /// scans would be charged to this query's host wall-clock (the serving
+    /// layer times `retrieve` end-to-end). They execute in parallel at
+    /// [`poll`](Self::poll) time, or ride along with the next
+    /// [`search_batch`](Self::search_batch) round, whose per-query
+    /// measured fields are per-job and immune to that distortion.
     ///
     /// `query` is the full D-dim query; each node re-derives sub-vectors
     /// for its PQ width. `lists` are the probed IVF list ids (from
@@ -76,36 +164,141 @@ impl Dispatcher {
         lists: &[u32],
         nprobe: usize,
     ) -> Result<SearchResult> {
+        let mut out = self.dispatch_round(
+            &[BatchQuery { query, lists }],
+            codebook,
+            nprobe,
+            false,
+        )?;
+        Ok(out.pop().expect("one result per query"))
+    }
+
+    /// Dispatch B queries in one round with per-node work queues: each
+    /// pool worker runs every query of the round against its chunk of
+    /// nodes (node-major), then each query's per-node top-K lists are
+    /// k-way merged. Queued speculative tickets execute in the same round.
+    ///
+    /// Results are bit-identical to B sequential [`search`](Self::search)
+    /// calls; only the measured wall-clock differs (queries share the
+    /// fan-out round instead of paying it B times).
+    pub fn search_batch(
+        &mut self,
+        batch: &[BatchQuery],
+        codebook: &[f32],
+        nprobe: usize,
+    ) -> Result<Vec<SearchResult>> {
+        self.dispatch_round(batch, codebook, nprobe, true)
+    }
+
+    /// Run one parallel round over `batch` (+ optionally the queued
+    /// speculative scans), returning the batch's results in order and
+    /// parking speculative results in their pending entries.
+    fn dispatch_round(
+        &mut self,
+        batch: &[BatchQuery],
+        codebook: &[f32],
+        nprobe: usize,
+        drain_speculative: bool,
+    ) -> Result<Vec<SearchResult>> {
         anyhow::ensure!(!self.nodes.is_empty(), "no memory nodes");
         let m = self.nodes[0].shard.m;
-        let d = query.len();
-        let dsub = d / m;
-        // LUT once per query (the paper builds it on-node; cost identical,
-        // the native engine shares it across nodes for efficiency).
-        let lut = {
-            // Native path needs the trained PQ codebook in PqCodebook form;
-            // nodes hold raw centroid tensors, so build via the free fn.
-            build_lut_from_raw(codebook, query, m, dsub)
-        };
-        let results: Vec<NodeResult> = self
-            .nodes
-            .iter_mut()
-            .map(|n| n.scan(&lut, query, codebook, lists, nprobe))
-            .collect::<Result<Vec<_>>>()?;
+        let threads = self.effective_threads();
 
-        let topk = merge_topk(&results, self.k);
+        // Snapshot queued speculative requests (owned copies) so the round
+        // can run against `&mut self.nodes` and park results afterwards.
+        // A malformed ticket (query dim not divisible by m) is left
+        // Queued rather than failing this round: the error then surfaces
+        // at the owner's `poll` — which runs the ticket as a batch job
+        // and hits the dim check below — not in innocent callers' rounds.
+        let spec: Vec<(u64, Vec<f32>, Vec<u32>, usize)> = if drain_speculative {
+            self.pending
+                .iter()
+                .filter_map(|p| match &p.state {
+                    PendingState::Queued { query, lists, nprobe }
+                        if query.len() % m == 0 =>
+                    {
+                        Some((p.id, query.clone(), lists.clone(), *nprobe))
+                    }
+                    _ => None,
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        // Assemble the round's job list: the blocking batch first, then
+        // the queued speculative tickets.
+        let mut jobs: Vec<ScanJob> = Vec::with_capacity(batch.len() + spec.len());
+        for q in batch {
+            anyhow::ensure!(q.query.len() % m == 0, "query dim not divisible by m");
+            let dsub = q.query.len() / m;
+            jobs.push(ScanJob {
+                query: q.query,
+                lists: q.lists,
+                lut: build_lut_from_raw(codebook, q.query, m, dsub),
+                nprobe,
+            });
+        }
+        for (_, query, lists, sp_nprobe) in &spec {
+            let dsub = query.len() / m;
+            jobs.push(ScanJob {
+                query,
+                lists,
+                lut: build_lut_from_raw(codebook, query, m, dsub),
+                nprobe: *sp_nprobe,
+            });
+        }
+
+        let chunks = chunk_sizes(self.nodes.len(), threads);
+        let per_job = scan_jobs(&mut self.nodes, &chunks, &jobs, codebook)?;
+        let mut results: Vec<SearchResult> = Vec::with_capacity(per_job.len());
+        for (node_results, job) in per_job.iter().zip(&jobs) {
+            results.push(self.aggregate(node_results, job, &chunks));
+        }
+        drop(jobs);
+
+        // Park speculative results on their pending entries (the tail of
+        // `results` matches `spec` in order).
+        for ((id, ..), result) in spec.iter().zip(results.drain(batch.len()..)) {
+            if let Some(p) = self.pending.iter_mut().find(|p| p.id == *id) {
+                p.state = PendingState::Done(result);
+            }
+        }
+        Ok(results)
+    }
+
+    /// Merge one job's per-node results into a [`SearchResult`].
+    /// `chunks` is the pool's node partition: the honest wall is the max
+    /// across workers of the sum of their nodes' scan times (nodes within
+    /// one chunk run serially on that worker).
+    fn aggregate(
+        &self,
+        results: &[NodeResult],
+        job: &ScanJob,
+        chunks: &[usize],
+    ) -> SearchResult {
+        let topk = merge_topk(results, self.k);
         let accel_s = results.iter().map(|r| r.modeled_s).fold(0.0, f64::max);
-        let query_bytes = 4 * d + 4 * lists.len();
+        let query_bytes = 4 * job.query.len() + 4 * job.lists.len();
         let result_bytes = 12 * self.k; // f32 dist + u64 id
         let network_s =
             self.net.query_roundtrip(self.nodes.len(), query_bytes, result_bytes);
-        Ok(SearchResult {
+        let mut wall = 0.0f64;
+        let mut start = 0usize;
+        for &c in chunks {
+            let worker: f64 =
+                results[start..start + c].iter().map(|r| r.measured_s).sum();
+            wall = wall.max(worker);
+            start += c;
+        }
+        SearchResult {
             topk,
             accel_s,
             network_s,
-            measured_s: results.iter().map(|r| r.measured_s).sum(),
+            measured_wall_s: wall,
+            measured_cpu_s: results.iter().map(|r| r.measured_s).sum(),
             n_scanned: results.iter().map(|r| r.n_scanned).sum(),
-        })
+        }
     }
 
     /// Enqueue a scan request without blocking on its result — the
@@ -113,20 +306,37 @@ impl Dispatcher {
     /// considered "in flight on the memory nodes" while the GPU keeps
     /// decoding, and is collected later with [`poll`](Self::poll).
     ///
-    /// The in-process dispatcher has no background threads (PJRT node
-    /// engines are not `Send`), so the scan itself executes lazily at poll
-    /// time; the *modeled* latencies in the returned [`SearchResult`] are
-    /// identical either way, and the overlap accounting happens in the
-    /// serving layer (`retcache`), which charges only the residual of the
-    /// retrieval latency not hidden behind decode steps.
+    /// Queued tickets execute on the thread pool alongside the next
+    /// [`search_batch`](Self::search_batch) round, or in parallel at poll
+    /// time if no batched round ran first; either way the result is
+    /// identical to a blocking `search` of the same request, and the
+    /// overlap accounting happens in the serving layer (`retcache`),
+    /// which charges only the residual of the retrieval latency not
+    /// hidden behind decode steps.
     pub fn submit(&mut self, query: &[f32], lists: &[u32], nprobe: usize) -> Ticket {
+        self.submit_for(0, query, lists, nprobe)
+    }
+
+    /// [`submit`](Self::submit) on an explicit ticket lane. Each GPU
+    /// source owns one slot; cancellation and in-flight accounting never
+    /// cross slots.
+    pub fn submit_for(
+        &mut self,
+        slot: usize,
+        query: &[f32],
+        lists: &[u32],
+        nprobe: usize,
+    ) -> Ticket {
         let id = self.next_ticket;
         self.next_ticket += 1;
         self.pending.push(PendingScan {
             id,
-            query: query.to_vec(),
-            lists: lists.to_vec(),
-            nprobe,
+            slot,
+            state: PendingState::Queued {
+                query: query.to_vec(),
+                lists: lists.to_vec(),
+                nprobe,
+            },
         });
         Ticket(id)
     }
@@ -137,11 +347,27 @@ impl Dispatcher {
     pub fn poll(&mut self, ticket: Ticket, codebook: &[f32]) -> Option<Result<SearchResult>> {
         let i = self.pending.iter().position(|p| p.id == ticket.0)?;
         let p = self.pending.swap_remove(i);
-        Some(self.search(&p.query, codebook, &p.lists, p.nprobe))
+        match p.state {
+            PendingState::Done(result) => Some(Ok(result)),
+            PendingState::Queued { query, lists, nprobe } => {
+                // Not yet piggybacked on a round: run it now (parallel),
+                // without draining other slots' queued tickets.
+                Some(
+                    self.dispatch_round(
+                        &[BatchQuery { query: &query, lists: &lists }],
+                        codebook,
+                        nprobe,
+                        false,
+                    )
+                    .map(|mut v| v.pop().expect("one result per query")),
+                )
+            }
+        }
     }
 
     /// Drop an in-flight query without collecting it (mis-speculation).
-    /// Returns whether the ticket was actually pending.
+    /// Returns whether the ticket was actually pending; cancelling an
+    /// already-collected or already-cancelled ticket is a clean no-op.
     pub fn cancel(&mut self, ticket: Ticket) -> bool {
         let i = self.pending.iter().position(|p| p.id == ticket.0);
         match i {
@@ -153,10 +379,107 @@ impl Dispatcher {
         }
     }
 
-    /// Number of submitted-but-uncollected queries.
+    /// Drop every in-flight query on one slot (GPU teardown / sequence
+    /// boundary). Returns how many tickets were cancelled.
+    pub fn cancel_slot(&mut self, slot: usize) -> usize {
+        let before = self.pending.len();
+        self.pending.retain(|p| p.slot != slot);
+        before - self.pending.len()
+    }
+
+    /// Number of submitted-but-uncollected queries (all slots).
     pub fn in_flight(&self) -> usize {
         self.pending.len()
     }
+
+    /// Number of submitted-but-uncollected queries on one slot.
+    pub fn in_flight_for(&self, slot: usize) -> usize {
+        self.pending.iter().filter(|p| p.slot == slot).count()
+    }
+
+    /// The slot a pending ticket belongs to (`None` once collected or
+    /// cancelled).
+    pub fn ticket_slot(&self, ticket: Ticket) -> Option<usize> {
+        self.pending.iter().find(|p| p.id == ticket.0).map(|p| p.slot)
+    }
+}
+
+/// Balanced node partition for `threads` pool workers: one chunk per
+/// worker, sizes differing by at most one (the first `n % t` workers take
+/// the extra node), covering all nodes in order. The chunk count always
+/// equals `min(threads, n_nodes)`, so the fan-out width a caller
+/// configures is the width that actually runs.
+fn chunk_sizes(n_nodes: usize, threads: usize) -> Vec<usize> {
+    let t = threads.clamp(1, n_nodes.max(1));
+    let base = n_nodes / t;
+    let rem = n_nodes % t;
+    (0..t).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Execute every job against every node, fanning nodes out over one
+/// scoped worker per entry of `chunks` (each worker owns a contiguous
+/// node chunk and processes the full job queue node-major). Returns
+/// results indexed `[job][node]` with node order preserved, so merges are
+/// deterministic regardless of thread count.
+fn scan_jobs(
+    nodes: &mut [MemoryNode],
+    chunks: &[usize],
+    jobs: &[ScanJob],
+    codebook: &[f32],
+) -> Result<Vec<Vec<NodeResult>>> {
+    let n_nodes = nodes.len();
+    let per_node: Vec<Vec<NodeResult>> = if chunks.len() <= 1 {
+        scan_chunk(nodes, jobs, codebook)?
+    } else {
+        let joined = std::thread::scope(|s| {
+            let mut rest = nodes;
+            let mut handles = Vec::with_capacity(chunks.len());
+            for &c in chunks {
+                // `take` moves the tail out of `rest` so the split halves
+                // keep the full outer lifetime the spawned thread needs.
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(c);
+                rest = tail;
+                handles.push(s.spawn(move || scan_chunk(chunk, jobs, codebook)));
+            }
+            handles.into_iter().map(|h| h.join()).collect::<Vec<_>>()
+        });
+        let mut collected: Vec<Vec<NodeResult>> = Vec::with_capacity(n_nodes);
+        for r in joined {
+            match r {
+                Ok(chunk) => collected.extend(chunk?),
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+        collected
+    };
+
+    // Transpose [node][job] -> [job][node].
+    let mut per_job: Vec<Vec<NodeResult>> = (0..jobs.len())
+        .map(|_| Vec::with_capacity(n_nodes))
+        .collect();
+    for node_results in per_node {
+        for (job_i, r) in node_results.into_iter().enumerate() {
+            per_job[job_i].push(r);
+        }
+    }
+    Ok(per_job)
+}
+
+/// Sequential scan of one node chunk over the full job queue (the unit of
+/// work one pool thread executes). Returns results `[node-in-chunk][job]`.
+fn scan_chunk(
+    chunk: &mut [MemoryNode],
+    jobs: &[ScanJob],
+    codebook: &[f32],
+) -> Result<Vec<Vec<NodeResult>>> {
+    chunk
+        .iter_mut()
+        .map(|node| {
+            jobs.iter()
+                .map(|j| node.scan(&j.lut, j.query, codebook, j.lists, j.nprobe))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect()
 }
 
 /// K-way merge of per-node ascending top-K lists (paper step 8).
@@ -241,6 +564,49 @@ mod tests {
     }
 
     #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Rng::new(21);
+        let (_, idx, d) = build_dispatcher(1, true);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 8);
+        let mut want: Option<Vec<(f32, u64)>> = None;
+        for threads in [1usize, 2, 3, 8] {
+            let (mut disp, _, _) = build_dispatcher(4, true);
+            disp.n_threads = threads;
+            let r = disp.search(&q, &idx.pq.centroids, &lists, 8).unwrap();
+            match &want {
+                None => want = Some(r.topk.clone()),
+                Some(w) => assert_eq!(&r.topk, w, "threads={threads}"),
+            }
+            assert!(r.measured_wall_s > 0.0);
+            assert!(r.measured_cpu_s >= r.measured_wall_s);
+        }
+    }
+
+    #[test]
+    fn search_batch_matches_sequential_searches() {
+        let (mut disp, idx, d) = build_dispatcher(3, true);
+        let mut rng = Rng::new(15);
+        let queries: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(d)).collect();
+        let lists: Vec<Vec<u32>> = queries.iter().map(|q| idx.probe(q, 8)).collect();
+        let want: Vec<Vec<(f32, u64)>> = queries
+            .iter()
+            .zip(&lists)
+            .map(|(q, l)| disp.search(q, &idx.pq.centroids, l, 8).unwrap().topk)
+            .collect();
+        let batch: Vec<BatchQuery> = queries
+            .iter()
+            .zip(&lists)
+            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .collect();
+        let got = disp.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
+        assert_eq!(got.len(), queries.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(&g.topk, w);
+        }
+    }
+
+    #[test]
     fn merge_topk_interleaves() {
         let mk = |v: Vec<(f32, u64)>| NodeResult {
             topk: v,
@@ -321,6 +687,64 @@ mod tests {
     }
 
     #[test]
+    fn queued_ticket_executes_with_next_batched_round() {
+        let (mut disp, idx, d) = build_dispatcher(2, true);
+        let mut rng = Rng::new(19);
+        let spec_q = rng.normal_vec(d);
+        let spec_lists = idx.probe(&spec_q, 8);
+        let want = disp.search(&spec_q, &idx.pq.centroids, &spec_lists, 8).unwrap();
+        let t = disp.submit(&spec_q, &spec_lists, 8);
+        // A single-query search leaves the ticket queued (its wall-clock
+        // must not absorb speculative work) ...
+        let other = rng.normal_vec(d);
+        let other_lists = idx.probe(&other, 8);
+        disp.search(&other, &idx.pq.centroids, &other_lists, 8).unwrap();
+        // ... but a batched round drains it in the same parallel fan-out.
+        let batch = [BatchQuery { query: &other, lists: &other_lists }];
+        disp.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
+        assert_eq!(disp.in_flight(), 1, "still pending until polled");
+        let got = disp.poll(t, &idx.pq.centroids).unwrap().unwrap();
+        assert_eq!(got.topk, want.topk);
+    }
+
+    #[test]
+    fn wall_time_tracks_fan_out_width() {
+        // At 1 thread the honest wall IS the cpu sum; at full fan-out it
+        // is the slowest node; in between it is the max worker-chunk sum.
+        let (mut disp, idx, d) = build_dispatcher(4, false);
+        let mut rng = Rng::new(23);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 8);
+        disp.n_threads = 1;
+        let r = disp.search(&q, &idx.pq.centroids, &lists, 8).unwrap();
+        assert!((r.measured_wall_s - r.measured_cpu_s).abs() < 1e-12,
+            "sequential dispatch must report sequential wall");
+        disp.n_threads = 0; // one worker per node
+        let r = disp.search(&q, &idx.pq.centroids, &lists, 8).unwrap();
+        assert!(r.measured_wall_s <= r.measured_cpu_s);
+    }
+
+    #[test]
+    fn malformed_ticket_does_not_poison_rounds() {
+        let (mut disp, idx, d) = build_dispatcher(2, false);
+        let mut rng = Rng::new(31);
+        let bad = rng.normal_vec(d + 1); // dim not divisible by m
+        let good = rng.normal_vec(d);
+        let lists = idx.probe(&good, 4);
+        let t = disp.submit(&bad, &lists, 4);
+        // Blocking and batched rounds still succeed: the malformed ticket
+        // is left queued instead of failing the shared round.
+        assert!(disp.search(&good, &idx.pq.centroids, &lists, 4).is_ok());
+        let batch = [BatchQuery { query: &good, lists: &lists }];
+        assert!(disp.search_batch(&batch, &idx.pq.centroids, 4).is_ok());
+        assert_eq!(disp.in_flight(), 1);
+        // The dim error surfaces at the owner's poll, and the ticket is
+        // consumed by it.
+        assert!(disp.poll(t, &idx.pq.centroids).unwrap().is_err());
+        assert_eq!(disp.in_flight(), 0);
+    }
+
+    #[test]
     fn cancel_drops_pending_query() {
         let (mut disp, idx, d) = build_dispatcher(1, false);
         let mut rng = Rng::new(12);
@@ -338,6 +762,32 @@ mod tests {
     }
 
     #[test]
+    fn slots_isolate_submit_poll_cancel() {
+        let (mut disp, idx, d) = build_dispatcher(2, false);
+        let mut rng = Rng::new(13);
+        let q0 = rng.normal_vec(d);
+        let q1 = rng.normal_vec(d);
+        let l0 = idx.probe(&q0, 4);
+        let l1 = idx.probe(&q1, 4);
+        let t0 = disp.submit_for(0, &q0, &l0, 4);
+        let t1 = disp.submit_for(1, &q1, &l1, 4);
+        assert_eq!(disp.in_flight_for(0), 1);
+        assert_eq!(disp.in_flight_for(1), 1);
+        assert_eq!(disp.ticket_slot(t0), Some(0));
+        assert_eq!(disp.ticket_slot(t1), Some(1));
+        // Cancelling slot 0 leaves slot 1's ticket untouched.
+        assert_eq!(disp.cancel_slot(0), 1);
+        assert_eq!(disp.in_flight_for(0), 0);
+        assert_eq!(disp.in_flight_for(1), 1);
+        assert!(disp.poll(t0, &idx.pq.centroids).is_none());
+        assert!(disp.poll(t1, &idx.pq.centroids).unwrap().is_ok());
+        assert_eq!(disp.in_flight(), 0);
+        // Cancel-after-complete is a clean no-op.
+        assert!(!disp.cancel(t1));
+        assert_eq!(disp.cancel_slot(1), 0);
+    }
+
+    #[test]
     fn latency_fields_populated() {
         let (mut disp, idx, d) = build_dispatcher(2, false);
         let mut rng = Rng::new(8);
@@ -347,6 +797,8 @@ mod tests {
         assert!(r.accel_s > 0.0);
         assert!(r.network_s > 0.0);
         assert!(r.modeled_total() > r.accel_s);
+        assert!(r.measured_wall_s > 0.0);
+        assert!(r.measured_cpu_s >= r.measured_wall_s);
         assert_eq!(r.n_scanned, idx.scan_count(&lists));
     }
 }

@@ -14,5 +14,5 @@ pub mod dispatcher;
 pub mod node;
 
 pub use backend::{BackendKind, SearchBackend};
-pub use dispatcher::{Dispatcher, SearchResult, Ticket};
+pub use dispatcher::{BatchQuery, Dispatcher, SearchResult, Ticket};
 pub use node::{MemoryNode, NodeResult, ScanEngine};

@@ -12,6 +12,15 @@ use crate::kselect::{ApproxHierarchicalQueue, HierarchicalConfig};
 use crate::pq::scan::adc_scan_into;
 use crate::runtime::{Executor, HostTensor, Runtime};
 
+// The dispatcher fans nodes out across scoped worker threads, so every
+// engine variant must stay `Send` (the vendored PJRT substrate's handles
+// are plain host-side data). This fails the build — rather than silently
+// serializing dispatch — if a future engine breaks that.
+const _: fn() = || {
+    fn assert_send<T: Send>() {}
+    assert_send::<MemoryNode>();
+};
+
 /// How a node evaluates distances.
 pub enum ScanEngine {
     /// Native rust ADC scan + hierarchical queue simulator — the software

@@ -67,18 +67,36 @@ impl<T> DynamicBatcher<T> {
         let n = self.queue.len().min(self.policy.max_batch);
         self.queue.drain(..n).collect()
     }
+
+    /// Take one dispatch round and group it by source GPU, preserving
+    /// FIFO order within each group — the shape `Dispatcher::search_batch`
+    /// consumes when per-GPU response queues matter (each group's results
+    /// return to one client stream).
+    pub fn take_batch_grouped(&mut self) -> Vec<(usize, Vec<Pending<T>>)> {
+        let mut groups: Vec<(usize, Vec<Pending<T>>)> = Vec::new();
+        for p in self.take_batch() {
+            match groups.iter_mut().find(|(src, _)| *src == p.source_gpu) {
+                Some((_, g)) => g.push(p),
+                None => groups.push((p.source_gpu, vec![p])),
+            }
+        }
+        groups
+    }
 }
 
-/// Tracks which request source (GPU id) the retriever's in-flight
-/// speculative prefetch belongs to. The coordinator overlaps prefetch
-/// with the *issuing* GPU's decode steps; when requests from different
-/// GPUs interleave on one retriever, a prediction made for GPU A must not
-/// be verified against GPU B's query — the server cancels it instead
-/// (see `coordinator::server` and the retcache module).
+/// Tracks which request sources (GPU ids) are active on one connection
+/// loop, and how often consecutive requests switch sources.
+///
+/// With per-GPU speculation slots (`retcache::SpecSlots`) a source switch
+/// no longer cancels the in-flight prefetch — each source owns an
+/// isolated ticket lane on the dispatcher — but the switch rate stays a
+/// useful interleaving signal, and the seen-source set tells the server
+/// exactly which slots to cancel at connection teardown.
 #[derive(Debug, Default)]
 pub struct PrefetchTracker {
-    owner: Option<usize>,
-    /// Source switches observed (each one cancels an in-flight prefetch).
+    last: Option<usize>,
+    seen: Vec<usize>,
+    /// Source switches observed (stream interleave points).
     pub switches: u64,
 }
 
@@ -87,25 +105,36 @@ impl PrefetchTracker {
         PrefetchTracker::default()
     }
 
-    /// Record a retrieval from `source`. Returns true when an in-flight
-    /// prefetch belongs to a *different* source and must be cancelled
-    /// before this retrieval runs.
+    /// Record a retrieval from `source`. Returns true when the source
+    /// differs from the previous request's (a stream interleave point —
+    /// informational now that slots isolate the prefetch lanes).
     pub fn observe(&mut self, source: usize) -> bool {
-        let switch = self.owner.is_some_and(|o| o != source);
+        let switch = self.last.is_some_and(|o| o != source);
         if switch {
             self.switches += 1;
         }
-        self.owner = Some(source);
+        self.last = Some(source);
+        if !self.seen.contains(&source) {
+            self.seen.push(source);
+        }
         switch
     }
 
-    /// Forget the current owner (connection teardown, cache reset).
-    pub fn reset(&mut self) {
-        self.owner = None;
+    /// Every source seen since the last reset (the slot ids a teardown
+    /// must cancel), in first-seen order.
+    pub fn sources(&self) -> &[usize] {
+        &self.seen
     }
 
+    /// Forget all sources (connection teardown, cache reset).
+    pub fn reset(&mut self) {
+        self.last = None;
+        self.seen.clear();
+    }
+
+    /// The most recent source (None before any request / after reset).
     pub fn owner(&self) -> Option<usize> {
-        self.owner
+        self.last
     }
 }
 
@@ -116,16 +145,43 @@ mod tests {
     #[test]
     fn prefetch_tracker_flags_source_switches() {
         let mut t = PrefetchTracker::new();
-        assert!(!t.observe(0), "first source never cancels");
-        assert!(!t.observe(0), "same source keeps its prefetch");
-        assert!(t.observe(1), "switch cancels");
+        assert!(!t.observe(0), "first source is never a switch");
+        assert!(!t.observe(0), "same source is not a switch");
+        assert!(t.observe(1), "interleave point");
         assert!(!t.observe(1));
         assert!(t.observe(0));
         assert_eq!(t.switches, 2);
         assert_eq!(t.owner(), Some(0));
+        assert_eq!(t.sources(), &[0, 1], "seen set in first-seen order");
         t.reset();
         assert_eq!(t.owner(), None);
-        assert!(!t.observe(2), "reset forgets the owner");
+        assert!(t.sources().is_empty());
+        assert!(!t.observe(2), "reset forgets the sources");
+    }
+
+    #[test]
+    fn take_batch_grouped_preserves_order_within_source() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 6,
+            max_wait: Duration::from_secs(1),
+        });
+        for (src, payload) in [(0, 'a'), (1, 'b'), (0, 'c'), (2, 'd'), (1, 'e')] {
+            b.push(src, payload);
+        }
+        let groups = b.take_batch_grouped();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0, 0);
+        assert_eq!(
+            groups[0].1.iter().map(|p| p.payload).collect::<Vec<_>>(),
+            vec!['a', 'c']
+        );
+        assert_eq!(groups[1].0, 1);
+        assert_eq!(
+            groups[1].1.iter().map(|p| p.payload).collect::<Vec<_>>(),
+            vec!['b', 'e']
+        );
+        assert_eq!(groups[2].0, 2);
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -76,16 +76,22 @@ impl RalmEngine {
         }
     }
 
-    /// Generate one sequence of `n_tokens` and return its stats.
+    /// Generate one sequence of `n_tokens` and return its stats. The
+    /// sequence runs on the next round-robin worker, whose GPU id is the
+    /// speculation slot: each worker owns an independent prefetch lane on
+    /// the dispatcher (submit/poll/cancel isolation across GPUs).
     pub fn generate(&mut self, prompt: u32, n_tokens: usize, seed: u64) -> Result<GenerationStats> {
-        // A speculative prefetch predicted from another sequence's query
-        // would only pollute verification — drop it at the boundary.
-        self.retriever.cancel_speculation();
         let modeled_decode = self.gpu.decode_step_latency(self.paper_model, 1);
         let modeled_encode = self.gpu.encode_latency(self.paper_model, 1);
         let worker = self.pool.next_worker();
+        let slot = worker.id;
+        // A speculative prefetch predicted from a previous sequence on
+        // THIS stream would only pollute verification — drop it at the
+        // boundary. Other workers' lanes stay in flight.
+        self.retriever.cancel_slot_speculation(slot);
         let mut gen = Generator {
             worker,
+            slot,
             retriever: &mut self.retriever,
             sampler: self.sampler,
             modeled_decode_s: modeled_decode,

@@ -6,14 +6,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::chamvs::dispatcher::{Dispatcher, SearchResult};
+use crate::chamvs::dispatcher::{BatchQuery, Dispatcher, SearchResult};
 use crate::config::DatasetConfig;
 use crate::data::corpus::Corpus;
 use crate::hwmodel::gpu::GpuModel;
 use crate::ivf::index::IvfPqIndex;
 use crate::retcache::{
     charged_latency, CacheConfig, CachedEntry, RetrievalCache, RetrievalSource,
-    RetrievalStats, SpecConfig, SpecVerdict, Speculator,
+    RetrievalStats, SpecConfig, SpecSlots, SpecVerdict,
 };
 use crate::util::metrics::Metrics;
 
@@ -51,8 +51,10 @@ pub struct Retriever {
     pub paper_scale: bool,
     /// Retrieval cache (None = seed synchronous behaviour).
     pub cache: Option<RetrievalCache>,
-    /// Speculative prefetcher (None = no speculation).
-    pub spec: Option<Speculator>,
+    /// Per-GPU speculative prefetch lanes (None = no speculation). Each
+    /// request source (GPU id) owns an independent slot; see
+    /// [`retrieve_cached_from`](Self::retrieve_cached_from).
+    pub spec: Option<SpecSlots>,
     /// Counters over the cache-aware path.
     pub rstats: RetrievalStats,
 }
@@ -86,14 +88,24 @@ impl Retriever {
     /// Enable (or reconfigure) speculative prefetching.
     pub fn enable_speculation(&mut self, cfg: SpecConfig) {
         self.cancel_speculation();
-        self.spec = Some(Speculator::new(cfg));
+        self.spec = Some(SpecSlots::new(cfg));
     }
 
-    /// Drop any in-flight speculative query (sequence boundaries,
-    /// reconfiguration) without counting it as a mis-speculation.
+    /// Drop every slot's in-flight speculative query (server teardown,
+    /// reconfiguration) without counting them as mis-speculations.
     pub fn cancel_speculation(&mut self) {
         if let Some(s) = self.spec.as_mut() {
-            if let Some(t) = s.take_in_flight() {
+            for t in s.take_all_in_flight() {
+                self.dispatcher.cancel(t);
+            }
+        }
+    }
+
+    /// Drop one slot's in-flight speculative query (sequence boundary on
+    /// that GPU stream) without touching the other slots' lanes.
+    pub fn cancel_slot_speculation(&mut self, slot: usize) {
+        if let Some(s) = self.spec.as_mut() {
+            if let Some(t) = s.take_in_flight(slot) {
                 self.dispatcher.cancel(t);
             }
         }
@@ -178,12 +190,27 @@ impl Retriever {
     }
 
     fn search_to_result(&self, r: SearchResult, nprobe: usize, t0: Instant) -> RetrievalResult {
+        let measured_s = t0.elapsed().as_secs_f64();
+        self.result_with_measured(r, nprobe, measured_s)
+    }
+
+    /// The single `SearchResult` -> `RetrievalResult` mapping (ids/dists
+    /// extraction + paper-scale latency model); `measured_s` is supplied
+    /// by the caller because its honest value differs by path (end-to-end
+    /// elapsed for blocking retrievals, per-job parallel wall for batched
+    /// rounds).
+    fn result_with_measured(
+        &self,
+        r: SearchResult,
+        nprobe: usize,
+        measured_s: f64,
+    ) -> RetrievalResult {
         let modeled_s = self.model_search_latency(&r, nprobe);
         RetrievalResult {
             ids: r.topk.iter().map(|&(_, i)| i).collect(),
             dists: r.topk.iter().map(|&(d, _)| d).collect(),
             modeled_s,
-            measured_s: t0.elapsed().as_secs_f64(),
+            measured_s,
         }
     }
 
@@ -200,6 +227,38 @@ impl Retriever {
         Ok(self.search_to_result(r, nprobe, t0))
     }
 
+    /// Batched retrieval: probe every query, then run ONE parallel
+    /// dispatch round through the memory nodes' per-node work queues
+    /// ([`Dispatcher::search_batch`]) — the RAGO-style multi-query lever.
+    /// Per-query results and modeled latencies are identical to
+    /// sequential [`retrieve`](Self::retrieve) calls; the fan-out round
+    /// is paid once instead of B times, and any queued speculative
+    /// tickets execute in the same round.
+    pub fn retrieve_many(&mut self, queries: &[&[f32]]) -> Result<Vec<RetrievalResult>> {
+        let nprobe = self.ds.nprobe;
+        let lists: Vec<Vec<u32>> =
+            queries.iter().map(|q| self.index.probe(q, nprobe)).collect();
+        let batch: Vec<BatchQuery> = queries
+            .iter()
+            .zip(&lists)
+            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .collect();
+        let rs = self
+            .dispatcher
+            .search_batch(&batch, &self.index.pq.centroids, nprobe)?;
+        // Per-query measured time is the job's own parallel wall — the
+        // round's elapsed time would absorb piggybacked speculative scans
+        // from other slots, which the dispatcher's accounting contract
+        // keeps out of blocking retrieval numbers.
+        Ok(rs
+            .into_iter()
+            .map(|r| {
+                let measured_s = r.measured_wall_s;
+                self.result_with_measured(r, nprobe, measured_s)
+            })
+            .collect())
+    }
+
     /// Cache-aware retrieval: serve from the retrieval cache, else from a
     /// verified speculative prefetch, else run the full round trip — and
     /// in the latter cases refill the cache and launch the next
@@ -210,6 +269,20 @@ impl Retriever {
     /// tolerance may serve a near-duplicate query's neighbors — the
     /// knobs' documented fidelity/latency trade-off.
     pub fn retrieve_cached(&mut self, query: &[f32]) -> Result<CachedRetrieval> {
+        self.retrieve_cached_from(0, query)
+    }
+
+    /// [`retrieve_cached`](Self::retrieve_cached) on an explicit
+    /// speculation slot: each GPU source (request stream) owns one slot,
+    /// so its prefetch lane is verified, consumed and cancelled in
+    /// isolation — interleaved streams never invalidate each other's
+    /// in-flight speculative queries. The retrieval cache itself is
+    /// shared across slots (results are source-independent).
+    pub fn retrieve_cached_from(
+        &mut self,
+        slot: usize,
+        query: &[f32],
+    ) -> Result<CachedRetrieval> {
         let t0 = Instant::now();
         // 1) Retrieval cache.
         let mut hit: Option<RetrievalResult> = None;
@@ -225,17 +298,17 @@ impl Retriever {
         }
         if let Some(result) = hit {
             self.rstats.count(RetrievalSource::CacheHit);
-            // Keep the speculative prediction tracking the *latest* query,
-            // so a stale prefetch from before a run of cache hits isn't
-            // later mis-counted as a bad prediction.
-            if self.spec.as_ref().is_some_and(|s| !s.predicts(query)) {
-                self.issue_speculation(query);
+            // Keep the slot's speculative prediction tracking the *latest*
+            // query, so a stale prefetch from before a run of cache hits
+            // isn't later mis-counted as a bad prediction.
+            if self.spec.as_ref().is_some_and(|s| !s.predicts(slot, query)) {
+                self.issue_speculation(slot, query);
             }
             return Ok(CachedRetrieval { result, source: RetrievalSource::CacheHit });
         }
-        // 2) Speculative prefetch verification.
+        // 2) Speculative prefetch verification (this slot's lane only).
         let verdict = match self.spec.as_mut() {
-            Some(s) => s.verify_take(query),
+            Some(s) => s.verify_take(slot, query),
             None => SpecVerdict::Idle,
         };
         let (result, source) = match verdict {
@@ -267,24 +340,26 @@ impl Retriever {
             );
         }
         // 4) Launch the next speculative query while the GPU decodes.
-        self.issue_speculation(query);
+        self.issue_speculation(slot, query);
         self.rstats.count(source);
         Ok(CachedRetrieval { result, source })
     }
 
-    /// Submit the predicted next query to the dispatcher (non-blocking),
-    /// replacing any stale in-flight speculation.
-    fn issue_speculation(&mut self, query: &[f32]) {
+    /// Submit the predicted next query to the dispatcher (non-blocking)
+    /// on `slot`'s ticket lane, replacing that slot's stale in-flight
+    /// speculation only.
+    fn issue_speculation(&mut self, slot: usize, query: &[f32]) {
         if self.spec.is_none() {
             return;
         }
-        if let Some(old) = self.spec.as_mut().unwrap().take_in_flight() {
+        if let Some(old) = self.spec.as_mut().unwrap().take_in_flight(slot) {
             self.dispatcher.cancel(old);
         }
-        let predicted = self.spec.as_ref().unwrap().predict(query);
+        let predicted = self.spec.as_mut().unwrap().slot_mut(slot).predict(query);
         let lists = self.index.probe(&predicted, self.ds.nprobe);
-        let ticket = self.dispatcher.submit(&predicted, &lists, self.ds.nprobe);
-        self.spec.as_mut().unwrap().set_in_flight(ticket, predicted);
+        let ticket =
+            self.dispatcher.submit_for(slot, &predicted, &lists, self.ds.nprobe);
+        self.spec.as_mut().unwrap().slot_mut(slot).set_in_flight(ticket, predicted);
     }
 
     /// Step 9: convert neighbor ids to next-tokens (decoder-only payload).
@@ -328,6 +403,22 @@ mod tests {
         assert_eq!(out.dists.len(), 10);
         assert!(out.dists.windows(2).all(|w| w[0] <= w[1]));
         assert!(out.modeled_s > 0.0);
+    }
+
+    #[test]
+    fn retrieve_many_matches_sequential_retrieves() {
+        let mut r = toy_retriever(3);
+        let ds = SyntheticDataset::generate_sized(&SIFT, 10, 4, 9);
+        let want: Vec<RetrievalResult> =
+            (0..4).map(|i| r.retrieve(ds.query(i)).unwrap()).collect();
+        let refs: Vec<&[f32]> = (0..4).map(|i| ds.query(i)).collect();
+        let got = r.retrieve_many(&refs).unwrap();
+        assert_eq!(got.len(), 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.ids, w.ids);
+            assert_eq!(g.dists, w.dists);
+            assert!((g.modeled_s - w.modeled_s).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -377,12 +468,12 @@ mod tests {
         let b = r.retrieve_cached(q).unwrap();
         assert_eq!(b.source, RetrievalSource::SpecHit);
         assert_eq!(b.result.ids, want.ids);
-        assert_eq!(r.spec.as_ref().unwrap().verified, 1);
+        assert_eq!(r.spec.as_ref().unwrap().verified(), 1);
         // A far-away query rejects the new in-flight prediction.
         let far = ds.query(2);
         let c = r.retrieve_cached(far).unwrap();
         assert_eq!(c.source, RetrievalSource::Miss);
-        assert_eq!(r.spec.as_ref().unwrap().rejected, 1);
+        assert_eq!(r.spec.as_ref().unwrap().rejected(), 1);
         assert_eq!(r.dispatcher.in_flight(), 1, "stale prefetch cancelled");
         r.cancel_speculation();
         assert_eq!(r.dispatcher.in_flight(), 0);
@@ -397,17 +488,17 @@ mod tests {
         let ds = SyntheticDataset::generate_sized(&SIFT, 10, 4, 9);
         let q = ds.query(0);
         r.retrieve_cached(q).unwrap(); // miss -> prefetch predicting q
-        assert_eq!(r.spec.as_ref().unwrap().issued, 1);
+        assert_eq!(r.spec.as_ref().unwrap().issued(), 1);
         r.retrieve_cached(q).unwrap(); // hit, prediction already fresh
-        assert_eq!(r.spec.as_ref().unwrap().issued, 1, "no redundant reissue");
+        assert_eq!(r.spec.as_ref().unwrap().issued(), 1, "no redundant reissue");
         assert_eq!(r.dispatcher.in_flight(), 1);
         // After serving a different query, a cache hit on q refreshes the
         // (now stale) prediction back to q instead of leaving it to rot.
         let q2 = ds.query(1);
         r.retrieve_cached(q2).unwrap(); // miss; stale prediction rejected
-        assert!(r.spec.as_ref().unwrap().predicts(q2));
+        assert!(r.spec.as_ref().unwrap().predicts(0, q2));
         r.retrieve_cached(q).unwrap(); // cache hit on q
-        assert!(r.spec.as_ref().unwrap().predicts(q), "prediction refreshed");
+        assert!(r.spec.as_ref().unwrap().predicts(0, q), "prediction refreshed");
         assert_eq!(r.dispatcher.in_flight(), 1);
     }
 

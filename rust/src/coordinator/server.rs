@@ -49,10 +49,13 @@ impl CoordinatorServer {
                             &mut prefetch,
                             &stop2,
                         );
-                        // Connection teardown: a prefetch predicted from the
-                        // departed client's sequence must not verify against
-                        // whoever connects next.
-                        retriever.cancel_speculation();
+                        // Connection teardown: cancel exactly the slots this
+                        // connection's GPU sources touched, so a departed
+                        // client's predictions never verify against whoever
+                        // connects next (other connections' lanes untouched).
+                        for &slot in prefetch.sources() {
+                            retriever.cancel_slot_speculation(slot);
+                        }
                         prefetch.reset();
                         if stop2.load(Ordering::Relaxed) {
                             break;
@@ -123,15 +126,18 @@ fn serve_gpu(
                 let req = RetrieveRequest::decode(&frame)?;
                 metrics.incr("retrieve_requests", 1);
                 metrics.incr(&format!("gpu_{}_requests", req.gpu_id), 1);
-                // Retcache path: a prefetch predicted for another GPU's
-                // sequence must not verify against this query.
-                if prefetch.observe(req.gpu_id as usize) {
-                    retriever.cancel_speculation();
+                // Retcache path: each GPU source owns its own speculation
+                // slot, so interleaved sources no longer cancel each
+                // other's prefetches — the switch rate is kept as an
+                // interleaving metric only.
+                let slot = req.gpu_id as usize;
+                if prefetch.observe(slot) {
                     metrics.incr("retcache.prefetch_source_switches", 1);
                 }
                 let r = if retriever.retcache_enabled() {
-                    let cr = metrics
-                        .time("retrieve", || retriever.retrieve_cached(&req.query))?;
+                    let cr = metrics.time("retrieve", || {
+                        retriever.retrieve_cached_from(slot, &req.query)
+                    })?;
                     metrics.incr(
                         match cr.source {
                             crate::retcache::RetrievalSource::Miss => "retrieve_miss",

@@ -6,7 +6,7 @@
 //!   serve               generate sequences end-to-end (RALM inference)
 //!   report <id>         regenerate a paper table/figure
 //!                       (fig7 fig8 fig9 fig10 fig11 fig12 fig13
-//!                        table4 table5 recall retcache all)
+//!                        table4 table5 recall retcache dispatch all)
 
 use anyhow::{bail, Result};
 use chameleon::chamlm::pool::WorkerPool;
@@ -56,9 +56,9 @@ fn print_help() {
          USAGE: chameleon <subcommand> [options]\n\
          \n\
          demo                      quickstart search + generation\n\
-         search [--dataset SIFT] [--queries 64] [--nodes 2] [--pjrt]\n\
+         search [--dataset SIFT] [--queries 64] [--nodes 2] [--batch 1] [--pjrt]\n\
          serve  [--model dec_tiny] [--tokens 64] [--sequences 2]\n\
-         report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|all>\n\
+         report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|dispatch|all>\n\
          \n\
          Common options: --n <scaled db size> --seed <u64> --artifacts <dir>"
     );
@@ -135,14 +135,28 @@ fn search(args: &Args) -> Result<()> {
     let n_nodes = args.get_usize("nodes", 2);
     let n_queries = args.get_usize("queries", 64);
     let k = args.get_usize("k", 100);
+    let batch = args.get_usize("batch", 1).max(1);
     let (mut retriever, data) =
         build_retriever(ds, n, n_nodes, k, args.flag("pjrt"), &sys)?;
     let mut modeled = Vec::new();
     let mut measured = Vec::new();
-    for i in 0..n_queries {
-        let r = retriever.retrieve(data.query(i % data.n_queries))?;
-        modeled.push(r.modeled_s);
-        measured.push(r.measured_s);
+    let mut i = 0;
+    while i < n_queries {
+        let b = batch.min(n_queries - i);
+        if b > 1 {
+            // Batched path: one parallel dispatch round per B queries.
+            let refs: Vec<&[f32]> =
+                (0..b).map(|j| data.query((i + j) % data.n_queries)).collect();
+            for r in retriever.retrieve_many(&refs)? {
+                modeled.push(r.modeled_s);
+                measured.push(r.measured_s);
+            }
+        } else {
+            let r = retriever.retrieve(data.query(i % data.n_queries))?;
+            modeled.push(r.modeled_s);
+            measured.push(r.measured_s);
+        }
+        i += b;
     }
     use chameleon::util::stats::Summary;
     println!("{}", Summary::of(&modeled).render_ms("modeled paper-scale"));
@@ -195,6 +209,7 @@ fn report_cmd(args: &Args) -> Result<()> {
             "table5" => report::table5_energy(),
             "recall" => report::recall_report(n.min(20_000), q.min(32), seed),
             "retcache" => report::retcache_report(n.min(20_000), seed),
+            "dispatch" => report::dispatch_report(n.min(20_000), q, seed),
             other => bail!("unknown report '{other}'"),
         };
         println!("{text}");
@@ -203,7 +218,7 @@ fn report_cmd(args: &Args) -> Result<()> {
     if which == "all" {
         for id in [
             "fig7", "fig8", "table4", "table5", "fig9", "fig10", "fig11", "fig12",
-            "fig13", "recall", "retcache",
+            "fig13", "recall", "retcache", "dispatch",
         ] {
             run_one(id)?;
         }

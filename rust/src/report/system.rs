@@ -222,9 +222,97 @@ pub fn retcache_report(n_scaled: usize, seed: u64) -> String {
     out
 }
 
+/// Parallel-dispatch report: measured host wall-clock of thread-pooled
+/// ChamVS rounds across worker-thread counts on a 4-node index, next to
+/// the per-query `measured_wall_s` (max across pool workers of their
+/// nodes' scan sums — the honest parallel number at that width) and
+/// `measured_cpu_s` (sum across nodes — total host work). Single-query
+/// broadcast and batched per-node work queues.
+pub fn dispatch_report(n_scaled: usize, n_queries: usize, seed: u64) -> String {
+    use std::time::Instant;
+
+    use crate::chamvs::dispatcher::{BatchQuery, Dispatcher};
+    use crate::util::stats::Summary;
+
+    let ds = crate::config::dataset_by_name("SIFT").unwrap();
+    let (data, index, nodes) =
+        crate::report::search::build_stack(ds, n_scaled, 4, 100, seed);
+    let mut disp = Dispatcher::new(nodes, 100);
+    let n_queries = n_queries.clamp(8, 64);
+    let queries: Vec<Vec<f32>> = (0..n_queries)
+        .map(|i| data.query(i % data.n_queries).to_vec())
+        .collect();
+    let lists: Vec<Vec<u32>> =
+        queries.iter().map(|q| index.probe(q, ds.nprobe)).collect();
+    let batch: Vec<BatchQuery> = queries
+        .iter()
+        .zip(&lists)
+        .map(|(q, l)| BatchQuery { query: q, lists: l })
+        .collect();
+
+    let mut out = String::new();
+    out.push_str("Parallel dispatch — 4 memory nodes, SIFT (ms)\n");
+    out.push_str(
+        "threads mode     round_wall p50_node_wall p50_node_cpu\n",
+    );
+    for &threads in &[1usize, 2, 4] {
+        disp.n_threads = threads;
+        // Single-query broadcasts: one round per query.
+        let t0 = Instant::now();
+        let mut node_wall = Vec::new();
+        let mut node_cpu = Vec::new();
+        for (q, l) in queries.iter().zip(&lists) {
+            let r = disp
+                .search(q, &index.pq.centroids, l, ds.nprobe)
+                .expect("dispatch");
+            node_wall.push(r.measured_wall_s);
+            node_cpu.push(r.measured_cpu_s);
+        }
+        let round_wall = t0.elapsed().as_secs_f64() / n_queries as f64;
+        out.push_str(&format!(
+            "{:<7} {:<8} {:>10.4} {:>13.4} {:>12.4}\n",
+            threads,
+            "single",
+            round_wall * 1e3,
+            Summary::of(&node_wall).p50 * 1e3,
+            Summary::of(&node_cpu).p50 * 1e3,
+        ));
+        // One batched round: every query through per-node work queues.
+        let t0 = Instant::now();
+        let rs = disp
+            .search_batch(&batch, &index.pq.centroids, ds.nprobe)
+            .expect("batched dispatch");
+        let round_wall = t0.elapsed().as_secs_f64() / rs.len() as f64;
+        let node_wall: Vec<f64> = rs.iter().map(|r| r.measured_wall_s).collect();
+        let node_cpu: Vec<f64> = rs.iter().map(|r| r.measured_cpu_s).collect();
+        out.push_str(&format!(
+            "{:<7} {:<8} {:>10.4} {:>13.4} {:>12.4}\n",
+            threads,
+            "batch",
+            round_wall * 1e3,
+            Summary::of(&node_wall).p50 * 1e3,
+            Summary::of(&node_cpu).p50 * 1e3,
+        ));
+    }
+    out.push_str(
+        "(round_wall = measured per-query wall of the round; node_wall = max across\n\
+         pool workers of their nodes' scan sums — the honest parallel number at the\n\
+         configured width; node_cpu = sum across nodes)\n",
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dispatch_report_renders_thread_sweep() {
+        let s = dispatch_report(2000, 8, 5);
+        assert!(s.contains("threads"), "{s}");
+        assert!(s.contains("batch"), "{s}");
+        assert!(s.contains("node_cpu"), "{s}");
+    }
 
     #[test]
     fn retcache_report_shows_speedup_and_counters() {

@@ -9,7 +9,8 @@
 //!   goes first), with recency as tie-break. This matters once datasets
 //!   mix: a SYN-1024 retrieval costs ~4x a SIFT one at the same footprint.
 
-use std::collections::HashMap;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
 
 use super::key::{CacheKey, KeyPolicy};
 
@@ -25,6 +26,17 @@ const ENTRY_OVERHEAD_BYTES: usize = 64;
 pub enum EvictionPolicy {
     Lru,
     CostAware,
+}
+
+impl EvictionPolicy {
+    /// Eviction-index score for an entry occupying `bytes` total: the
+    /// minimum (score, recency tick) is the next victim.
+    fn score(&self, entry: &CachedEntry, bytes: usize) -> f64 {
+        match self {
+            EvictionPolicy::Lru => 0.0,
+            EvictionPolicy::CostAware => entry.modeled_s / bytes as f64,
+        }
+    }
 }
 
 /// Cache sizing + keying knobs.
@@ -69,10 +81,56 @@ struct Slot {
     tick: u64,
 }
 
+/// One candidate in the ordered eviction index — a lazy-deletion min-heap
+/// entry keyed on the policy's eviction score:
+/// * LRU pushes `score = 0` for every entry, so ordering degenerates to
+///   the recency tick (classic LRU order);
+/// * cost-aware pushes `score = modeled_s / bytes` (saved latency per
+///   byte), with the tick as tie-break — identical to the old O(n) scan's
+///   `min_by` comparison.
+///
+/// A candidate is *stale* — skipped on pop — once its slot was touched
+/// again (the slot's tick moved past `tick`) or removed entirely; every
+/// touch pushes a fresh candidate, so each live slot always has exactly
+/// one valid candidate and `evict_one` is O(log n) amortized instead of a
+/// full scan.
+struct EvictCandidate {
+    score: f64,
+    tick: u64,
+    key: CacheKey,
+}
+
+impl PartialEq for EvictCandidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for EvictCandidate {}
+
+impl PartialOrd for EvictCandidate {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EvictCandidate {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed comparison: `BinaryHeap` is a max-heap, so the top is
+        // the minimum (score, tick) — the next victim.
+        other
+            .score
+            .total_cmp(&self.score)
+            .then(other.tick.cmp(&self.tick))
+    }
+}
+
 /// Byte-budgeted retrieval cache.
 pub struct RetrievalCache {
     pub cfg: CacheConfig,
     map: HashMap<CacheKey, Slot>,
+    /// Ordered eviction index over `map` (see [`EvictCandidate`]).
+    heap: BinaryHeap<EvictCandidate>,
     bytes: usize,
     tick: u64,
     // Lifetime counters (exported via retcache::stats; saved-latency
@@ -88,6 +146,7 @@ impl RetrievalCache {
         RetrievalCache {
             cfg,
             map: HashMap::new(),
+            heap: BinaryHeap::new(),
             bytes: 0,
             tick: 0,
             hits: 0,
@@ -110,22 +169,25 @@ impl RetrievalCache {
         self.bytes
     }
 
-    /// Look up a query; a hit refreshes recency and updates counters.
+    /// Look up a query; a hit refreshes recency (re-indexing the entry in
+    /// the eviction heap) and updates counters.
     pub fn get(&mut self, query: &[f32]) -> Option<&CachedEntry> {
         let key = self.cfg.key.key(query);
         self.tick += 1;
         let tick = self.tick;
-        match self.map.get_mut(&key) {
+        let score = match self.map.get_mut(&key) {
             Some(slot) => {
                 slot.tick = tick;
                 self.hits += 1;
-                Some(&slot.entry)
+                self.cfg.policy.score(&slot.entry, slot.bytes)
             }
             None => {
                 self.misses += 1;
-                None
+                return None;
             }
-        }
+        };
+        self.push_candidate(score, tick, key.clone());
+        Some(&self.map[&key].entry)
     }
 
     /// Insert (or refresh) a query's retrieval result, evicting under the
@@ -146,44 +208,45 @@ impl RetrievalCache {
             }
         }
         self.tick += 1;
+        let tick = self.tick;
+        let score = self.cfg.policy.score(&entry, new_bytes);
         self.bytes += new_bytes;
         self.insertions += 1;
-        self.map.insert(key, Slot { entry, bytes: new_bytes, tick: self.tick });
+        self.map.insert(key.clone(), Slot { entry, bytes: new_bytes, tick });
+        self.push_candidate(score, tick, key);
     }
 
     /// Evict one entry per the policy; false if the cache is empty.
     ///
-    /// O(n) scan per eviction — acceptable at in-process entry counts
-    /// (a few thousand under the default budget) and only paid on
-    /// miss-inserts under byte pressure; a tick-ordered secondary index
-    /// is the upgrade path when multi-tenant budgets raise entry counts.
+    /// O(log n) amortized: pop the ordered eviction index until a live
+    /// candidate surfaces (stale candidates — superseded by a later touch
+    /// or already removed — are discarded lazily). The old O(n)
+    /// `min_by` scan survives verbatim as the reference model in the
+    /// `eviction_order_matches_scan_reference` test.
     fn evict_one(&mut self) -> bool {
-        let victim = match self.cfg.policy {
-            EvictionPolicy::Lru => self
-                .map
-                .iter()
-                .min_by_key(|(_, s)| s.tick)
-                .map(|(k, _)| k.clone()),
-            EvictionPolicy::CostAware => self
-                .map
-                .iter()
-                .min_by(|(_, a), (_, b)| {
-                    let sa = a.entry.modeled_s / a.bytes as f64;
-                    let sb = b.entry.modeled_s / b.bytes as f64;
-                    sa.partial_cmp(&sb)
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                        .then(a.tick.cmp(&b.tick))
-                })
-                .map(|(k, _)| k.clone()),
-        };
-        match victim {
-            Some(k) => {
-                let slot = self.map.remove(&k).unwrap();
-                self.bytes -= slot.bytes;
-                self.evictions += 1;
-                true
+        while let Some(c) = self.heap.pop() {
+            let live = self.map.get(&c.key).is_some_and(|s| s.tick == c.tick);
+            if !live {
+                continue;
             }
-            None => false,
+            let slot = self.map.remove(&c.key).unwrap();
+            self.bytes -= slot.bytes;
+            self.evictions += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Index (or re-index after a recency touch) one entry in the
+    /// eviction heap, compacting away stale candidates when they dominate.
+    fn push_candidate(&mut self, score: f64, tick: u64, key: CacheKey) {
+        self.heap.push(EvictCandidate { score, tick, key });
+        if self.heap.len() > 64 && self.heap.len() > 8 * self.map.len() {
+            let heap = std::mem::take(&mut self.heap);
+            self.heap = heap
+                .into_iter()
+                .filter(|c| self.map.get(&c.key).is_some_and(|s| s.tick == c.tick))
+                .collect();
         }
     }
 
@@ -299,6 +362,128 @@ mod tests {
         assert_eq!(c.bytes(), E);
         let e = c.get(&q(1)).unwrap();
         assert!((e.modeled_s - 9e-3).abs() < 1e-12);
+    }
+
+    /// The pre-index O(n) eviction scan, kept verbatim as the reference
+    /// model: the heap-based index must pick byte-for-byte the same
+    /// victims on any recorded trace.
+    struct ScanReference {
+        policy: EvictionPolicy,
+        capacity: usize,
+        /// (query id, recency tick, modeled_s, slot bytes)
+        slots: Vec<(usize, u64, f64, usize)>,
+        tick: u64,
+        bytes: usize,
+        evictions: u64,
+    }
+
+    impl ScanReference {
+        fn new(capacity: usize, policy: EvictionPolicy) -> ScanReference {
+            ScanReference {
+                policy,
+                capacity,
+                slots: Vec::new(),
+                tick: 0,
+                bytes: 0,
+                evictions: 0,
+            }
+        }
+
+        fn get(&mut self, qi: usize) {
+            self.tick += 1;
+            let tick = self.tick;
+            if let Some(s) = self.slots.iter_mut().find(|s| s.0 == qi) {
+                s.1 = tick;
+            }
+        }
+
+        fn insert(&mut self, qi: usize, modeled_s: f64, bytes: usize) {
+            if bytes > self.capacity {
+                return;
+            }
+            if let Some(i) = self.slots.iter().position(|s| s.0 == qi) {
+                self.bytes -= self.slots[i].3;
+                self.slots.remove(i);
+            }
+            while self.bytes + bytes > self.capacity {
+                let victim = match self.policy {
+                    EvictionPolicy::Lru => self
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, s)| s.1)
+                        .map(|(i, _)| i),
+                    EvictionPolicy::CostAware => self
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .min_by(|(_, a), (_, b)| {
+                            let sa = a.2 / a.3 as f64;
+                            let sb = b.2 / b.3 as f64;
+                            sa.partial_cmp(&sb)
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                                .then(a.1.cmp(&b.1))
+                        })
+                        .map(|(i, _)| i),
+                };
+                match victim {
+                    Some(i) => {
+                        self.bytes -= self.slots[i].3;
+                        self.slots.remove(i);
+                        self.evictions += 1;
+                    }
+                    None => break,
+                }
+            }
+            self.tick += 1;
+            self.bytes += bytes;
+            self.slots.push((qi, self.tick, modeled_s, bytes));
+        }
+
+        fn live(&self) -> Vec<usize> {
+            let mut v: Vec<usize> = self.slots.iter().map(|s| s.0).collect();
+            v.sort_unstable();
+            v
+        }
+    }
+
+    #[test]
+    fn eviction_order_matches_scan_reference() {
+        use crate::util::rng::Rng;
+        // Entry bytes with KeyPolicy::Exact, d=8: 32 + 12k + 64.
+        let entry_bytes = |k: usize| 32 + 12 * k + 64;
+        for policy in [EvictionPolicy::Lru, EvictionPolicy::CostAware] {
+            let cap = 6 * entry_bytes(10);
+            let mut cache = RetrievalCache::new(cfg(cap, policy));
+            let mut reference = ScanReference::new(cap, policy);
+            let mut rng = Rng::new(0xEV1C7);
+            // Recorded trace: interleaved gets and inserts over a small
+            // universe, with varying entry sizes and recompute costs so
+            // cost-aware ordering differs from pure recency.
+            for step in 0..400 {
+                let qi = rng.below(24);
+                if rng.below(3) == 0 {
+                    cache.get(&q(qi));
+                    reference.get(qi);
+                } else {
+                    let k = [5usize, 10, 20][rng.below(3)];
+                    let modeled_s = 1e-4 * (1 + rng.below(50)) as f64;
+                    cache.insert(&q(qi), entry(k, modeled_s));
+                    reference.insert(qi, modeled_s, entry_bytes(k));
+                }
+                // Identical victims at every step => identical live sets,
+                // byte accounting and eviction counts.
+                let live: Vec<usize> =
+                    (0..24).filter(|&i| cache.would_hit(&q(i))).collect();
+                assert_eq!(live, reference.live(), "{policy:?} step {step}");
+                assert_eq!(cache.bytes(), reference.bytes, "{policy:?} step {step}");
+                assert_eq!(
+                    cache.evictions, reference.evictions,
+                    "{policy:?} step {step}"
+                );
+            }
+            assert!(cache.evictions > 20, "trace must exercise eviction");
+        }
     }
 
     #[test]

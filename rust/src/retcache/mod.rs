@@ -38,7 +38,7 @@ pub mod workload;
 pub use cache::{CacheConfig, CachedEntry, EvictionPolicy, RetrievalCache, CACHE_LOOKUP_S};
 pub use key::{CacheKey, KeyPolicy};
 pub use model::{ModeledServe, ServeModel};
-pub use spec::{SpecConfig, SpecVerdict, Speculator};
+pub use spec::{SpecConfig, SpecSlots, SpecVerdict, Speculator};
 pub use stats::{RetrievalSource, RetrievalStats};
 pub use workload::{repeat_fraction, zipf_stream};
 

@@ -18,6 +18,8 @@
 //! current query (within tolerance)" is the highest-value single guess —
 //! the same locality RaLMSpec exploits with its caching speculator.
 
+use std::collections::BTreeMap;
+
 use crate::chamvs::dispatcher::Ticket;
 
 /// Speculation knobs.
@@ -132,6 +134,101 @@ impl Speculator {
     }
 }
 
+/// Per-GPU speculation lanes: each GPU source ("slot") owns an
+/// independent [`Speculator`], so verify/cancel on one decode stream
+/// never disturbs another stream's in-flight prefetch — the RaLMSpec
+/// isolation property the single global pending list could not provide.
+/// Slots are created lazily on first use and share one [`SpecConfig`].
+pub struct SpecSlots {
+    pub cfg: SpecConfig,
+    slots: BTreeMap<usize, Speculator>,
+}
+
+impl SpecSlots {
+    pub fn new(cfg: SpecConfig) -> SpecSlots {
+        SpecSlots { cfg, slots: BTreeMap::new() }
+    }
+
+    /// The lane for one GPU source, created on first touch.
+    pub fn slot_mut(&mut self, slot: usize) -> &mut Speculator {
+        let cfg = self.cfg;
+        self.slots.entry(slot).or_insert_with(|| Speculator::new(cfg))
+    }
+
+    /// Read-only view of a lane (None if the slot never speculated).
+    pub fn slot(&self, slot: usize) -> Option<&Speculator> {
+        self.slots.get(&slot)
+    }
+
+    /// Number of lanes that have ever been touched.
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// (slot id, lane) pairs in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (&usize, &Speculator)> {
+        self.slots.iter()
+    }
+
+    /// Speculations issued across all lanes.
+    pub fn issued(&self) -> u64 {
+        self.slots.values().map(|s| s.issued).sum()
+    }
+
+    /// Speculations verified across all lanes.
+    pub fn verified(&self) -> u64 {
+        self.slots.values().map(|s| s.verified).sum()
+    }
+
+    /// Speculations rejected across all lanes.
+    pub fn rejected(&self) -> u64 {
+        self.slots.values().map(|s| s.rejected).sum()
+    }
+
+    /// Aggregate accuracy over all settled speculations (0 when none).
+    pub fn accuracy(&self) -> f64 {
+        let settled = self.verified() + self.rejected();
+        if settled == 0 {
+            0.0
+        } else {
+            self.verified() as f64 / settled as f64
+        }
+    }
+
+    /// Whether `slot`'s in-flight prediction is exactly this query.
+    pub fn predicts(&self, slot: usize, query: &[f32]) -> bool {
+        self.slot(slot).is_some_and(|s| s.predicts(query))
+    }
+
+    pub fn has_in_flight(&self, slot: usize) -> bool {
+        self.slot(slot).is_some_and(|s| s.has_in_flight())
+    }
+
+    /// In-flight prefetches across all lanes.
+    pub fn in_flight_total(&self) -> usize {
+        self.slots.values().filter(|s| s.has_in_flight()).count()
+    }
+
+    /// Take one lane's outstanding ticket without verification.
+    pub fn take_in_flight(&mut self, slot: usize) -> Option<Ticket> {
+        self.slots.get_mut(&slot).and_then(|s| s.take_in_flight())
+    }
+
+    /// Take every lane's outstanding ticket (teardown — the caller
+    /// cancels them on the dispatcher). Not counted as settled.
+    pub fn take_all_in_flight(&mut self) -> Vec<Ticket> {
+        self.slots.values_mut().filter_map(|s| s.take_in_flight()).collect()
+    }
+
+    /// Verify the real query against one lane's in-flight prediction.
+    pub fn verify_take(&mut self, slot: usize, query: &[f32]) -> SpecVerdict {
+        match self.slots.get_mut(&slot) {
+            Some(s) => s.verify_take(query),
+            None => SpecVerdict::Idle,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +282,42 @@ mod tests {
         assert_eq!(s.take_in_flight(), Some(Ticket(9)));
         assert_eq!(s.take_in_flight(), None);
         assert_eq!(s.verified + s.rejected, 0, "not counted as settled");
+    }
+
+    #[test]
+    fn slots_isolate_lanes() {
+        let mut slots = SpecSlots::new(SpecConfig { tolerance: 0.0, depth: 1 });
+        let qa = vec![0.25f32; 8];
+        let qb = vec![0.75f32; 8];
+        slots.slot_mut(0).set_in_flight(Ticket(1), qa.clone());
+        slots.slot_mut(3).set_in_flight(Ticket(2), qb.clone());
+        assert_eq!(slots.n_slots(), 2);
+        assert_eq!(slots.in_flight_total(), 2);
+        assert!(slots.predicts(0, &qa));
+        assert!(!slots.predicts(0, &qb), "lane 0 never predicts lane 3's query");
+        // Verifying lane 0 leaves lane 3's prefetch untouched.
+        assert_eq!(slots.verify_take(0, &qa), SpecVerdict::Hit(Ticket(1)));
+        assert!(slots.has_in_flight(3));
+        assert!(!slots.has_in_flight(0));
+        // Lane 3 rejects its own mismatch independently.
+        assert_eq!(slots.verify_take(3, &qa), SpecVerdict::Reject(Ticket(2)));
+        assert_eq!(slots.verified(), 1);
+        assert_eq!(slots.rejected(), 1);
+        assert!((slots.accuracy() - 0.5).abs() < 1e-12);
+        // Untouched slot verifies Idle without creating a lane.
+        assert_eq!(slots.verify_take(7, &qa), SpecVerdict::Idle);
+        assert_eq!(slots.n_slots(), 2);
+    }
+
+    #[test]
+    fn take_all_in_flight_drains_every_lane() {
+        let mut slots = SpecSlots::new(SpecConfig::default());
+        slots.slot_mut(0).set_in_flight(Ticket(1), vec![1.0]);
+        slots.slot_mut(1).set_in_flight(Ticket(2), vec![2.0]);
+        let mut taken = slots.take_all_in_flight();
+        taken.sort_by_key(|t| t.0);
+        assert_eq!(taken, vec![Ticket(1), Ticket(2)]);
+        assert_eq!(slots.in_flight_total(), 0);
+        assert_eq!(slots.issued(), 2, "issue counters survive teardown");
     }
 }

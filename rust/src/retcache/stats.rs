@@ -6,7 +6,7 @@ use crate::util::json::{obj, Json};
 use crate::util::metrics::Metrics;
 
 use super::cache::RetrievalCache;
-use super::spec::Speculator;
+use super::spec::SpecSlots;
 
 /// Where a retrieval was served from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,7 +81,7 @@ impl RetrievalStats {
         &self,
         m: &Metrics,
         cache: Option<&RetrievalCache>,
-        spec: Option<&Speculator>,
+        spec: Option<&SpecSlots>,
     ) {
         m.incr("retcache.misses", self.misses);
         m.incr("retcache.cache_hits", self.cache_hits);
@@ -93,9 +93,10 @@ impl RetrievalStats {
             m.incr("retcache.cache_evictions", c.evictions);
         }
         if let Some(s) = spec {
-            m.incr("retcache.spec_issued", s.issued);
-            m.incr("retcache.spec_verified", s.verified);
-            m.incr("retcache.spec_rejected", s.rejected);
+            m.incr("retcache.spec_issued", s.issued());
+            m.incr("retcache.spec_verified", s.verified());
+            m.incr("retcache.spec_rejected", s.rejected());
+            m.observe("retcache.spec_slots", s.n_slots() as f64);
         }
     }
 
@@ -110,7 +111,7 @@ impl RetrievalStats {
     }
 
     /// Human-readable block for the serve reports.
-    pub fn render(&self, cache: Option<&RetrievalCache>, spec: Option<&Speculator>) -> String {
+    pub fn render(&self, cache: Option<&RetrievalCache>, spec: Option<&SpecSlots>) -> String {
         let mut out = String::new();
         out.push_str(&format!(
             "retcache: {} retrievals | miss {} | cache-hit {} | spec-hit {} | fast-served {:.1}%\n",
@@ -137,11 +138,12 @@ impl RetrievalStats {
         }
         if let Some(s) = spec {
             out.push_str(&format!(
-                "retcache: speculation issued {} | verified {} | rejected {} | accuracy {:.1}%\n",
-                s.issued,
-                s.verified,
-                s.rejected,
+                "retcache: speculation issued {} | verified {} | rejected {} | accuracy {:.1}% | {} slot(s)\n",
+                s.issued(),
+                s.verified(),
+                s.rejected(),
                 s.accuracy() * 100.0,
+                s.n_slots().max(1),
             ));
         }
         out
@@ -152,7 +154,7 @@ impl RetrievalStats {
 mod tests {
     use super::*;
     use crate::retcache::cache::{CacheConfig, RetrievalCache};
-    use crate::retcache::spec::{SpecConfig, Speculator};
+    use crate::retcache::spec::{SpecConfig, SpecSlots};
 
     #[test]
     fn record_accumulates_sources_and_savings() {
@@ -181,7 +183,7 @@ mod tests {
         let mut s = RetrievalStats::default();
         s.record(RetrievalSource::CacheHit, 1e-3, 0.0);
         let cache = RetrievalCache::new(CacheConfig::default());
-        let spec = Speculator::new(SpecConfig::default());
+        let spec = SpecSlots::new(SpecConfig::default());
         let m = Metrics::new();
         s.export(&m, Some(&cache), Some(&spec));
         assert_eq!(m.counter("retcache.cache_hits"), 1);
@@ -195,7 +197,7 @@ mod tests {
         let mut s = RetrievalStats::default();
         s.record(RetrievalSource::SpecHit, 1e-3, 1e-4);
         let cache = RetrievalCache::new(CacheConfig::default());
-        let spec = Speculator::new(SpecConfig::default());
+        let spec = SpecSlots::new(SpecConfig::default());
         let out = s.render(Some(&cache), Some(&spec));
         assert!(out.contains("cache-hit"));
         assert!(out.contains("spec-hit"));

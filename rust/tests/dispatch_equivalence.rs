@@ -1,0 +1,299 @@
+//! Correctness harness for the parallel ChamVS dispatch path.
+//!
+//! Property: for random indexes and any node count in 1..=8, the
+//! thread-pooled `Dispatcher::search` / `search_batch` top-K is
+//! bit-identical (distance bits rank by rank; ids compared within
+//! equal-distance tie groups, since PQ codes can collide) to a
+//! single-threaded flat scan of the probed lists — and a speculative
+//! `submit` -> `poll` returns exactly what the blocking `search` returns.
+//!
+//! Lifecycle: interleaved per-GPU `submit`/`poll`/`cancel` across slots
+//! never leaks a `PendingScan`, never cross-delivers another slot's
+//! ticket, and cancel-after-complete is a clean no-op.
+
+use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::kselect::HierarchicalConfig;
+use chameleon::pq::scan::{adc_scan, build_lut};
+use chameleon::util::rng::Rng;
+
+/// One random test universe: a built index and its raw data dims.
+struct Universe {
+    idx: IvfPqIndex,
+    d: usize,
+    k: usize,
+    nprobe: usize,
+}
+
+fn random_universe(rng: &mut Rng) -> Universe {
+    let m = [4usize, 8][rng.below(2)];
+    let dsub = [2usize, 4][rng.below(2)];
+    let d = m * dsub;
+    let n = 400 + rng.below(500);
+    let nlist = 8 + rng.below(17);
+    let data = rng.normal_vec(n * d);
+    let idx = IvfPqIndex::build(&data, n, d, m, nlist, rng.next_u64());
+    let k = 1 + rng.below(16);
+    let nprobe = 1 + rng.below(nlist);
+    Universe { idx, d, k, nprobe }
+}
+
+fn build_nodes(idx: &IvfPqIndex, n_nodes: usize, k: usize) -> Vec<MemoryNode> {
+    (0..n_nodes)
+        .map(|i| {
+            let mut node =
+                MemoryNode::new(Shard::carve(idx, i, n_nodes), ScanEngine::Native, k);
+            // Exact K-selection for strict equivalence checking.
+            node.kcfg = HierarchicalConfig::exact(k, node.kcfg.num_lanes);
+            node
+        })
+        .collect()
+}
+
+/// Single-node flat-scan reference: ADC over every probed list with the
+/// same LUT the dispatcher builds, globally sorted, truncated to k.
+fn flat_scan_reference(idx: &IvfPqIndex, query: &[f32], lists: &[u32], k: usize) -> Vec<(f32, u64)> {
+    let lut = build_lut(&idx.pq, query);
+    let mut all: Vec<(f32, u64)> = Vec::new();
+    for &l in lists {
+        let codes = &idx.list_codes[l as usize];
+        let ids = &idx.list_ids[l as usize];
+        let dists = adc_scan(codes, ids.len(), idx.m, &lut);
+        for (i, &d) in dists.iter().enumerate() {
+            all.push((d, ids[i]));
+        }
+    }
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    all.truncate(k);
+    all
+}
+
+/// Bit-identical comparison: distances must match bit-for-bit rank by
+/// rank; ids must match within each equal-distance tie group (PQ-code
+/// collisions make the order inside a tie group representation-defined).
+fn assert_topk_equiv(got: &[(f32, u64)], want: &[(f32, u64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (rank, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.0.to_bits(),
+            w.0.to_bits(),
+            "{ctx}: distance bits at rank {rank}: {} vs {}",
+            g.0,
+            w.0
+        );
+    }
+    let mut i = 0;
+    while i < got.len() {
+        let mut j = i + 1;
+        while j < got.len() && got[j].0.to_bits() == got[i].0.to_bits() {
+            j += 1;
+        }
+        let mut gids: Vec<u64> = got[i..j].iter().map(|&(_, id)| id).collect();
+        let mut wids: Vec<u64> = want[i..j].iter().map(|&(_, id)| id).collect();
+        gids.sort_unstable();
+        wids.sort_unstable();
+        assert_eq!(gids, wids, "{ctx}: tie-group ids at ranks {i}..{j}");
+        i = j;
+    }
+}
+
+/// The property body for one node count: parallel search, batched search
+/// and speculative submit->poll all reproduce the flat-scan reference.
+fn check_equivalence(n_nodes: usize, cases: usize, base_seed: u64) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let u = random_universe(&mut rng);
+        let mut disp = Dispatcher::new(build_nodes(&u.idx, n_nodes, u.k), u.k);
+        // Random thread count (including the sequential baseline) — the
+        // fan-out width must never change results.
+        disp.n_threads = [0usize, 1, 2, 5][rng.below(4)];
+        let ctx = format!("nodes={n_nodes} seed={seed}");
+
+        // Parallel single-query search vs flat scan.
+        let queries: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(u.d)).collect();
+        let lists: Vec<Vec<u32>> =
+            queries.iter().map(|q| u.idx.probe(q, u.nprobe)).collect();
+        for (q, l) in queries.iter().zip(&lists) {
+            let got = disp.search(q, &u.idx.pq.centroids, l, u.nprobe).unwrap();
+            let want = flat_scan_reference(&u.idx, q, l, u.k);
+            assert_topk_equiv(&got.topk, &want, &format!("{ctx} search"));
+            assert!(got.measured_cpu_s >= got.measured_wall_s);
+            assert_eq!(got.n_scanned, u.idx.scan_count(l));
+        }
+
+        // Batched dispatch vs the same references.
+        let batch: Vec<BatchQuery> = queries
+            .iter()
+            .zip(&lists)
+            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .collect();
+        let got_batch =
+            disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe).unwrap();
+        assert_eq!(got_batch.len(), queries.len());
+        for ((q, l), got) in queries.iter().zip(&lists).zip(&got_batch) {
+            let want = flat_scan_reference(&u.idx, q, l, u.k);
+            assert_topk_equiv(&got.topk, &want, &format!("{ctx} search_batch"));
+        }
+
+        // Speculative submit -> poll == blocking search.
+        let sq = rng.normal_vec(u.d);
+        let sl = u.idx.probe(&sq, u.nprobe);
+        let want = disp.search(&sq, &u.idx.pq.centroids, &sl, u.nprobe).unwrap();
+        let t = disp.submit(&sq, &sl, u.nprobe);
+        let got = disp.poll(t, &u.idx.pq.centroids).unwrap().unwrap();
+        assert_topk_equiv(&got.topk, &want.topk, &format!("{ctx} submit/poll"));
+        assert_eq!(disp.in_flight(), 0, "{ctx}: ticket leaked");
+    }
+}
+
+#[test]
+fn dispatch_equivalence_1_node() {
+    check_equivalence(1, 4, 0xD15_0001);
+}
+
+#[test]
+fn dispatch_equivalence_2_nodes() {
+    check_equivalence(2, 4, 0xD15_0002);
+}
+
+#[test]
+fn dispatch_equivalence_4_nodes() {
+    check_equivalence(4, 4, 0xD15_0004);
+}
+
+#[test]
+fn dispatch_equivalence_8_nodes() {
+    check_equivalence(8, 4, 0xD15_0008);
+}
+
+/// Randomized interleaving of per-GPU submit/poll/cancel across four
+/// slots, against a model of which tickets each slot owns. Every polled
+/// result must match the blocking search for the query that slot
+/// submitted (no cross-delivery), counts must never drift (no leaked
+/// `PendingScan`), and cancel/poll after completion must be clean no-ops.
+#[test]
+fn slot_lifecycle_never_leaks_or_cross_delivers() {
+    let mut rng = Rng::new(0x5107);
+    let u = random_universe(&mut rng);
+    let mut disp = Dispatcher::new(build_nodes(&u.idx, 4, u.k), u.k);
+
+    const SLOTS: usize = 4;
+    // Per-slot query (slot-distinct so cross-delivery is detectable) and
+    // its expected blocking result.
+    let queries: Vec<Vec<f32>> = (0..SLOTS).map(|_| rng.normal_vec(u.d)).collect();
+    let lists: Vec<Vec<u32>> =
+        queries.iter().map(|q| u.idx.probe(q, u.nprobe)).collect();
+    let expected: Vec<Vec<(f32, u64)>> = queries
+        .iter()
+        .zip(&lists)
+        .map(|(q, l)| disp.search(q, &u.idx.pq.centroids, l, u.nprobe).unwrap().topk)
+        .collect();
+
+    // Model: the live tickets per slot.
+    let mut live: Vec<Vec<chameleon::chamvs::Ticket>> = vec![Vec::new(); SLOTS];
+    let mut collected: Vec<chameleon::chamvs::Ticket> = Vec::new();
+    for step in 0..300 {
+        let slot = rng.below(SLOTS);
+        match rng.below(5) {
+            // Submit on this slot's lane.
+            0 | 1 => {
+                let t = disp.submit_for(slot, &queries[slot], &lists[slot], u.nprobe);
+                assert_eq!(disp.ticket_slot(t), Some(slot));
+                live[slot].push(t);
+            }
+            // Poll one of this slot's tickets: the result must be the
+            // slot's own query's result.
+            2 => {
+                if let Some(t) = live[slot].pop() {
+                    let r = disp.poll(t, &u.idx.pq.centroids).unwrap().unwrap();
+                    assert_topk_equiv(
+                        &r.topk,
+                        &expected[slot],
+                        &format!("step {step} slot {slot}"),
+                    );
+                    collected.push(t);
+                }
+            }
+            // Cancel one ticket.
+            3 => {
+                if let Some(t) = live[slot].pop() {
+                    assert!(disp.cancel(t), "step {step}: live ticket must cancel");
+                    collected.push(t);
+                }
+            }
+            // Cancel the whole slot; occasionally run a batched round so
+            // queued tickets get piggybacked into Done state first.
+            _ => {
+                if rng.below(2) == 0 {
+                    let batch = [BatchQuery {
+                        query: &queries[slot],
+                        lists: &lists[slot],
+                    }];
+                    disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe)
+                        .unwrap();
+                }
+                let n = disp.cancel_slot(slot);
+                assert_eq!(n, live[slot].len(), "step {step}: cancel_slot count");
+                collected.extend(live[slot].drain(..));
+            }
+        }
+        // No leaks, no cross-slot bleed: the dispatcher's per-slot counts
+        // must track the model exactly.
+        for (s, tickets) in live.iter().enumerate() {
+            assert_eq!(
+                disp.in_flight_for(s),
+                tickets.len(),
+                "step {step}: slot {s} count drift"
+            );
+        }
+        assert_eq!(
+            disp.in_flight(),
+            live.iter().map(Vec::len).sum::<usize>(),
+            "step {step}: total count drift"
+        );
+    }
+    // Cancel/poll after completion are clean no-ops.
+    for t in collected {
+        assert!(!disp.cancel(t), "settled ticket must not cancel");
+        assert!(disp.poll(t, &u.idx.pq.centroids).is_none());
+    }
+    // Drain what's left; the dispatcher must end empty.
+    for (slot, tickets) in live.into_iter().enumerate() {
+        for t in tickets {
+            let r = disp.poll(t, &u.idx.pq.centroids).unwrap().unwrap();
+            assert_topk_equiv(&r.topk, &expected[slot], &format!("drain slot {slot}"));
+        }
+    }
+    assert_eq!(disp.in_flight(), 0);
+}
+
+/// A ticket left queued across multiple blocking rounds is executed once,
+/// parked, and survives unrelated slots' cancellations.
+#[test]
+fn parked_results_survive_other_slot_teardown() {
+    let mut rng = Rng::new(0x9A9);
+    let u = random_universe(&mut rng);
+    let mut disp = Dispatcher::new(build_nodes(&u.idx, 2, u.k), u.k);
+    let q = rng.normal_vec(u.d);
+    let l = u.idx.probe(&q, u.nprobe);
+    let want = disp.search(&q, &u.idx.pq.centroids, &l, u.nprobe).unwrap();
+
+    let t = disp.submit_for(7, &q, &l, u.nprobe);
+    // Two batched rounds pass; the first piggybacks the ticket into Done.
+    for _ in 0..2 {
+        let other = rng.normal_vec(u.d);
+        let ol = u.idx.probe(&other, u.nprobe);
+        let batch = [BatchQuery { query: &other, lists: &ol }];
+        disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe).unwrap();
+    }
+    // Other slots tear down; slot 7's parked result is untouched.
+    assert_eq!(disp.cancel_slot(0), 0);
+    assert_eq!(disp.cancel_slot(1), 0);
+    assert_eq!(disp.in_flight_for(7), 1);
+    let got = disp.poll(t, &u.idx.pq.centroids).unwrap().unwrap();
+    assert_topk_equiv(&got.topk, &want.topk, "parked result");
+    assert_eq!(disp.in_flight(), 0);
+}
