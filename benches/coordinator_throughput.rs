@@ -1,0 +1,111 @@
+//! Bench: multi-client coordinator throughput — cross-connection dynamic
+//! batching (concurrent event loop) vs the one-connection-at-a-time
+//! sequential baseline, at 4 GPU clients over loopback TCP.
+//!
+//! The concurrent server amortizes the per-round dispatch overhead
+//! (thread-pool fan-out, frame decode) across the batch and overlaps the
+//! clients' network round trips, so it must sustain >= 1.5x the
+//! sequential queries/s (the PR acceptance bar; per-query results are
+//! pinned bit-identical by rust/tests/concurrent_serving.rs).
+//!
+//! Run: `cargo bench --bench coordinator_throughput`
+
+use std::time::{Duration, Instant};
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::batcher::BatchPolicy;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorClient, CoordinatorServer, ServeMode};
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+
+const CLIENTS: usize = 4;
+const PER_CLIENT: usize = 96;
+const N: usize = 6000;
+const NODES: usize = 2;
+const K: usize = 10;
+
+fn build_retriever(seed: u64) -> Retriever {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, N, 16, seed);
+    let nlist = (N as f64).sqrt() as usize;
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..NODES)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, NODES), ScanEngine::Native, K))
+        .collect();
+    let corpus = Corpus::generate(N, 2048, config::CHUNK_LEN, seed ^ 2);
+    Retriever::new(ds, index, Dispatcher::new(nodes, K), corpus)
+}
+
+/// Serve CLIENTS x `per_client` blocking retrievals and return (q/s,
+/// rounds, max batch). The retriever is built untimed and moved in.
+fn run(mode: ServeMode, per_client: usize) -> (f64, u64, u64) {
+    let retriever = build_retriever(7);
+    let mut server = CoordinatorServer::spawn(move || retriever, mode).unwrap();
+    let addr = server.addr;
+    let qdata = SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        64,
+        64,
+        9,
+    );
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let qdata = &qdata;
+            s.spawn(move || {
+                let mut client = CoordinatorClient::connect(addr, c as u32).unwrap();
+                for i in 0..per_client {
+                    let q = qdata.query((c * 13 + i) % qdata.n_queries);
+                    client.retrieve(q, &[], K, false).unwrap();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    let out = (
+        (CLIENTS * per_client) as f64 / wall,
+        stats.rounds(),
+        stats.max_batch(),
+    );
+    server.shutdown();
+    out
+}
+
+fn main() {
+    let policy = BatchPolicy {
+        max_batch: CLIENTS,
+        max_wait: Duration::from_millis(2),
+    };
+
+    // Throwaway warmup (page cache, thread stacks, allocator arenas).
+    run(ServeMode::Concurrent(policy), 8);
+
+    let (seq_qps, seq_rounds, _) = run(ServeMode::Sequential, PER_CLIENT);
+    let (conc_qps, conc_rounds, conc_max) =
+        run(ServeMode::Concurrent(policy), PER_CLIENT);
+
+    println!("coordinator throughput — {CLIENTS} clients x {PER_CLIENT} queries, {NODES} nodes, n={N}");
+    println!("  sequential : {seq_qps:>8.0} q/s  ({seq_rounds} rounds of 1)");
+    println!(
+        "  concurrent : {conc_qps:>8.0} q/s  ({conc_rounds} rounds, max batch {conc_max}, policy max_batch={} max_wait={}us)",
+        policy.max_batch,
+        policy.max_wait.as_micros()
+    );
+    let speedup = conc_qps / seq_qps;
+    println!("  speedup    : {speedup:.2}x (acceptance bar: >= 1.5x)");
+    assert!(
+        conc_max >= 2,
+        "batching not observed (max batch {conc_max})"
+    );
+    assert!(
+        speedup >= 1.5,
+        "concurrent batched server must sustain >= 1.5x sequential q/s, got {speedup:.2}x"
+    );
+    println!("coordinator_throughput OK");
+}

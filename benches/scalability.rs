@@ -128,7 +128,7 @@ fn main() {
             qi = (qi + 1) % data.n_queries;
             let q = data.query(qi);
             let lists = index.probe(q, ds.nprobe);
-            client.search(qi as u64, q, &lists).unwrap().0.len()
+            client.search(q, &lists).unwrap().topk.len()
         });
         client.shutdown_nodes();
     }

@@ -67,21 +67,26 @@ fn main() -> chameleon::Result<()> {
 
     println!("== broadcasting {n_queries} queries ==");
     let mut lat = Vec::new();
+    let mut node_wall = Vec::new();
     let mut mismatches = 0usize;
     for qi in 0..n_queries {
         let q = data.query(qi % data.n_queries);
         let lists = index.probe(q, ds.nprobe);
         let t0 = std::time::Instant::now();
-        let (got, _modeled) = client.search(qi as u64, q, &lists)?;
+        let r = client.search(q, &lists)?;
         lat.push(t0.elapsed().as_secs_f64());
+        // Node-side scan wall carried in the responses (no more zeros on
+        // the networked path).
+        node_wall.push(r.measured_wall_s);
         let (_, want) = index.search(q, ds.nprobe, k);
-        for (g, w) in got.iter().zip(&want) {
+        for (g, w) in r.topk.iter().zip(&want) {
             if (g.0 - w).abs() > 1e-4 {
                 mismatches += 1;
             }
         }
     }
     println!("{}", Summary::of(&lat).render_ms("networked search (measured)"));
+    println!("{}", Summary::of(&node_wall).render_ms("node-side scan wall"));
     println!(
         "distributed == monolithic: {} ({} mismatched ranks / {})",
         if mismatches == 0 { "YES" } else { "NO" },

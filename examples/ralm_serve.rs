@@ -18,13 +18,25 @@
 //! turns on speculative prefetching (`--spec-tolerance <msd>` sets the
 //! verification tolerance). With any of these on, the serve report ends
 //! with the cache hit/miss + speculation-accuracy counter block.
+//!
+//! Coordinator batching knobs: `--max-batch <n>` / `--max-wait-us <us>`
+//! set the dynamic-batching policy (printed at startup). With
+//! `--net-clients <n> [--net-queries <q>]` the example serves the
+//! retrieval tier over TCP instead of running the engine: n concurrent
+//! GPU clients drive the multi-connection coordinator event loop
+//! (reader threads -> shared batcher -> dispatch loop -> reply routing)
+//! and the run reports queries/s plus the observed batch sizes.
+
+use std::time::Duration;
 
 use chameleon::chamlm::pool::WorkerPool;
 use chameleon::chamvs::dispatcher::Dispatcher;
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
 use chameleon::config;
+use chameleon::coordinator::batcher::BatchPolicy;
 use chameleon::coordinator::engine::RalmEngine;
 use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorClient, CoordinatorServer, ServeMode};
 use chameleon::data::corpus::Corpus;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
@@ -49,6 +61,15 @@ fn main() -> chameleon::Result<()> {
 
     let n_nodes = args.get_usize("nodes", 1).max(1);
     let dispatch_threads = args.get_usize("dispatch-threads", 0);
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 16).max(1),
+        max_wait: Duration::from_micros(args.get_u64("max-wait-us", 200)),
+    };
+    println!(
+        "== batch policy: max_batch={} max_wait={}us ==",
+        policy.max_batch,
+        policy.max_wait.as_micros()
+    );
 
     println!("== building retrieval stack ({n_nodes} memory node(s)) ==");
     let data = SyntheticDataset::generate_sized(ds, 8000, 16, seed);
@@ -64,14 +85,7 @@ fn main() -> chameleon::Result<()> {
         "== dispatch: {} worker thread(s) over {n_nodes} node(s) ==",
         dispatcher.effective_threads()
     );
-    let retriever = Retriever::new(ds, index, dispatcher, corpus);
-
-    println!("== loading model '{}' via PJRT ==", model.name);
-    let runtime = Runtime::new(
-        &std::env::var("CHAMELEON_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    )?;
-    let pool = WorkerPool::new(&runtime, model, 1, seed)?;
-    let mut engine = RalmEngine::new(pool, retriever, paper);
+    let mut retriever = Retriever::new(ds, index, dispatcher, corpus);
 
     // Retcache: optional cache + speculation in front of ChamVS.
     let cache_kb = args.get_usize("cache-kb", 0);
@@ -94,6 +108,35 @@ fn main() -> chameleon::Result<()> {
             cache_cfg.as_ref().map(|c| (c.capacity_bytes, c.policy)),
             spec_cfg.as_ref().map(|s| s.tolerance),
         );
+    }
+
+    // Networked serving mode: drive the concurrent coordinator event
+    // loop with N clients instead of running the generation engine.
+    let net_clients = args.get_usize("net-clients", 0);
+    if net_clients > 0 {
+        if let Some(c) = cache_cfg {
+            retriever.enable_cache(c);
+        }
+        if let Some(s) = spec_cfg {
+            retriever.enable_speculation(s);
+        }
+        return serve_net_clients(
+            retriever,
+            policy,
+            net_clients,
+            args.get_usize("net-queries", 24),
+            model.k,
+            &data,
+        );
+    }
+
+    println!("== loading model '{}' via PJRT ==", model.name);
+    let runtime = Runtime::new(
+        &std::env::var("CHAMELEON_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )?;
+    let pool = WorkerPool::new(&runtime, model, 1, seed)?;
+    let mut engine = RalmEngine::new(pool, retriever, paper);
+    if cache_cfg.is_some() || spec_cfg.is_some() {
         engine.enable_retcache(cache_cfg, spec_cfg);
     }
 
@@ -138,5 +181,64 @@ fn main() -> chameleon::Result<()> {
     if !cache_block.is_empty() {
         print!("{cache_block}");
     }
+    Ok(())
+}
+
+/// Serve the retrieval tier over TCP: spawn the concurrent coordinator
+/// under `policy` and drive it with `n_clients` concurrent GPU clients,
+/// reporting throughput and the observed batch shapes.
+fn serve_net_clients(
+    retriever: Retriever,
+    policy: BatchPolicy,
+    n_clients: usize,
+    per_client: usize,
+    k: usize,
+    data: &SyntheticDataset,
+) -> chameleon::Result<()> {
+    let per_client = per_client.max(1);
+    let mut server =
+        CoordinatorServer::spawn(move || retriever, ServeMode::Concurrent(policy))?;
+    let addr = server.addr;
+    println!(
+        "== serving retrieval over TCP on {addr}: {n_clients} clients x {per_client} queries =="
+    );
+    let failed = std::sync::Mutex::new(None::<anyhow::Error>);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let failed = &failed;
+            s.spawn(move || {
+                let run = || -> chameleon::Result<()> {
+                    let mut client = CoordinatorClient::connect(addr, c as u32)?;
+                    for i in 0..per_client {
+                        let q = data.query((c * 7 + i) % data.n_queries);
+                        client.retrieve(q, &[], k, false)?;
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    *failed.lock().unwrap() = Some(e);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(e) = failed.into_inner().unwrap() {
+        return Err(e);
+    }
+    let total = (n_clients * per_client) as f64;
+    let stats = server.stats();
+    println!(
+        "served {total:.0} retrievals in {wall:.3}s -> {:.0} q/s",
+        total / wall
+    );
+    println!(
+        "dispatch rounds={} mean_batch={:.2} max_batch={} rounds_with_batch>=2: {}",
+        stats.rounds(),
+        total / stats.rounds().max(1) as f64,
+        stats.max_batch(),
+        stats.batches_ge2()
+    );
+    server.shutdown();
     Ok(())
 }

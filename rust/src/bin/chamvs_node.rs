@@ -45,7 +45,7 @@ fn run() -> Result<()> {
     let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
     let codebook = index.pq.centroids.clone();
 
-    let server = NodeServer::spawn_with(
+    let mut server = NodeServer::spawn_with(
         move || {
             let shard = Shard::carve(&index, node_id, n_nodes);
             MemoryNode::new(shard, ScanEngine::Native, k)
@@ -54,10 +54,16 @@ fn run() -> Result<()> {
         ds.nprobe,
     )?;
     println!("LISTENING {}", server.addr);
+    // Stdout may be piped (CI parses the address from a file): flush now.
+    use std::io::Write;
+    std::io::stdout().flush()?;
     eprintln!("[chamvs-node {node_id}] serving on {}", server.addr);
-    // Park the main thread; the server shuts down on a Shutdown frame,
-    // which drops through process exit via Ctrl-C or coordinator signal.
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    // Park the main thread until a client Shutdown frame stops the
+    // server, then exit cleanly (CI smoke runs depend on this).
+    while !server.stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
+    eprintln!("[chamvs-node {node_id}] shutdown requested, exiting");
+    server.shutdown();
+    Ok(())
 }

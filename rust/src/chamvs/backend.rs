@@ -1,7 +1,17 @@
-//! The four vector-search system configurations of Fig 9:
-//! CPU (monolithic), CPU-GPU (GPU index scan, CPU PQ scan), FPGA-CPU
-//! (CPU index scan, FPGA PQ scan over the network), FPGA-GPU (GPU index
-//! scan, FPGA PQ scan — the ChamVS design point).
+//! Scan execution backends, at two altitudes:
+//!
+//! * [`ScanBackend`] — the unit of dispatch: anything that can execute a
+//!   round of [`ScanJob`]s and return one node-local top-K per job. The
+//!   in-process [`MemoryNode`](super::node::MemoryNode) and the remote
+//!   [`RemoteNode`](crate::net::client::RemoteNode) (one TCP connection to
+//!   a `chamvs-node` server) both implement it, so the
+//!   [`Dispatcher`](super::dispatcher::Dispatcher)'s batched rounds run
+//!   identically over either — the unified network path of the serving
+//!   core.
+//! * [`SearchBackend`] — the four system configurations of Fig 9:
+//!   CPU (monolithic), CPU-GPU (GPU index scan, CPU PQ scan), FPGA-CPU
+//!   (CPU index scan, FPGA PQ scan over the network), FPGA-GPU (GPU index
+//!   scan, FPGA PQ scan — the ChamVS design point).
 //!
 //! Numerics always run for real (native rust or PJRT artifacts); the
 //! *latency* of each hardware stage comes from the hwmodel module,
@@ -10,9 +20,56 @@
 use anyhow::Result;
 
 use super::dispatcher::{BatchQuery, Dispatcher, SearchResult};
+use super::node::NodeResult;
 use crate::config::DatasetConfig;
+use crate::hwmodel::fpga::FpgaModel;
 use crate::hwmodel::{CpuModel, GpuModel};
 use crate::ivf::index::IvfPqIndex;
+
+/// One scan job of a dispatch round: the query, its probed lists, and the
+/// per-query (m, 256) ADC table shared by every local node. `lut` is left
+/// empty when no backend in the round wants one (remote nodes build their
+/// own server-side; see [`ScanBackend::wants_lut`]).
+pub struct ScanJob<'a> {
+    /// Full D-dim query vector.
+    pub query: &'a [f32],
+    /// Probed IVF list ids (from ChamVS.idx).
+    pub lists: &'a [u32],
+    /// Prebuilt (m, 256) distance LUT, or empty (remote-only rounds).
+    pub lut: Vec<f32>,
+    /// Probe width (drives the per-node FPGA latency model).
+    pub nprobe: usize,
+}
+
+/// A scan execution target the dispatcher can fan a round out to: one
+/// disaggregated memory node, in-process or behind a socket. Implementors
+/// must be `Send` — the dispatcher's scoped thread pool moves `&mut`
+/// chunks of the node set across worker threads.
+pub trait ScanBackend: Send {
+    /// PQ width of the shard behind this backend (all nodes of one
+    /// dispatcher share it; used for LUT construction and dim checks).
+    fn m(&self) -> usize;
+
+    /// The FPGA cycle model pricing scans on this node (paper-scale
+    /// latency attribution; remote nodes carry the same default model).
+    fn fpga(&self) -> &FpgaModel;
+
+    /// Whether this backend consumes the dispatcher-prebuilt LUT. Remote
+    /// nodes return false: the node server derives its own table, so the
+    /// coordinator skips the per-query LUT build for remote-only rounds.
+    fn wants_lut(&self) -> bool {
+        true
+    }
+
+    /// Execute every job of a dispatch round on this backend, in order,
+    /// returning one node-local [`NodeResult`] per job. This is the unit
+    /// of work one dispatcher pool thread runs — and, for a remote node,
+    /// exactly one network round trip regardless of the batch size.
+    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], codebook: &[f32]) -> Result<Vec<NodeResult>>;
+
+    /// Ask the backend to shut down (no-op for in-process nodes).
+    fn shutdown(&mut self) {}
+}
 
 /// Which Fig 9 system configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -186,7 +243,7 @@ impl SearchBackend {
 
         // Stage 2+3: LUT construction + PQ scan.
         if self.kind.uses_fpga_scan() {
-            let fpga = &self.dispatcher.nodes[0].fpga;
+            let fpga = self.dispatcher.nodes[0].fpga();
             let per_node = n_codes / n_nodes;
             let s = fpga.query_latency(per_node, ds.m, ds.nprobe, self.dispatcher.k);
             lat.lut_s = s.lut_s;

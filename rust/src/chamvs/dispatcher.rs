@@ -20,6 +20,11 @@
 //!   against its nodes (node-major), and results are k-way merged per
 //!   query as they land.
 //!
+//! The node set is a vector of [`ScanBackend`] trait objects, so the same
+//! dispatcher (and the same merge) drives in-process `MemoryNode` slices
+//! and remote `chamvs-node` connections — a batched round over remote
+//! backends ships each node its whole job queue in one network round trip.
+//!
 //! Speculative traffic ([`Dispatcher::submit`]) rides the same pool:
 //! queued tickets execute alongside the next batched round (or fan out in
 //! parallel on demand at [`Dispatcher::poll`]) and their results are
@@ -31,6 +36,7 @@
 
 use anyhow::Result;
 
+use super::backend::{ScanBackend, ScanJob};
 use super::node::{MemoryNode, NodeResult};
 use crate::hwmodel::loggp::LogGp;
 use crate::pq::scan::build_lut;
@@ -94,18 +100,11 @@ enum PendingState {
     Done(SearchResult),
 }
 
-/// One scan job of a dispatch round: the query, its probed lists, and the
-/// per-query LUT shared by every node.
-struct ScanJob<'a> {
-    query: &'a [f32],
-    lists: &'a [u32],
-    lut: Vec<f32>,
-    nprobe: usize,
-}
-
-/// In-process dispatcher over a set of memory nodes.
+/// Dispatcher over a set of scan backends — in-process memory nodes,
+/// remote `chamvs-node` connections, or a mix (see
+/// [`ScanBackend`](super::backend::ScanBackend)).
 pub struct Dispatcher {
-    pub nodes: Vec<MemoryNode>,
+    pub nodes: Vec<Box<dyn ScanBackend>>,
     pub net: LogGp,
     pub k: usize,
     /// Worker threads for node fan-out. 0 (the default) means one worker
@@ -117,7 +116,20 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
+    /// Dispatcher over in-process memory nodes (the common construction).
     pub fn new(nodes: Vec<MemoryNode>, k: usize) -> Dispatcher {
+        Dispatcher::over(
+            nodes
+                .into_iter()
+                .map(|n| Box::new(n) as Box<dyn ScanBackend>)
+                .collect(),
+            k,
+        )
+    }
+
+    /// Dispatcher over arbitrary scan backends (e.g. remote nodes — the
+    /// networked twin is the same dispatcher, not a parallel code path).
+    pub fn over(nodes: Vec<Box<dyn ScanBackend>>, k: usize) -> Dispatcher {
         Dispatcher {
             nodes,
             net: LogGp::default(),
@@ -201,7 +213,12 @@ impl Dispatcher {
         drain_speculative: bool,
     ) -> Result<Vec<SearchResult>> {
         anyhow::ensure!(!self.nodes.is_empty(), "no memory nodes");
-        let m = self.nodes[0].shard.m;
+        let m = self.nodes[0].m();
+        anyhow::ensure!(
+            self.nodes.iter().all(|n| n.m() == m),
+            "memory nodes disagree on PQ width m"
+        );
+        let need_lut = self.nodes.iter().any(|n| n.wants_lut());
         let threads = self.effective_threads();
 
         // Snapshot queued speculative requests (owned copies) so the round
@@ -235,7 +252,11 @@ impl Dispatcher {
             jobs.push(ScanJob {
                 query: q.query,
                 lists: q.lists,
-                lut: build_lut_from_raw(codebook, q.query, m, dsub),
+                lut: if need_lut {
+                    build_lut_from_raw(codebook, q.query, m, dsub)
+                } else {
+                    Vec::new()
+                },
                 nprobe,
             });
         }
@@ -244,13 +265,17 @@ impl Dispatcher {
             jobs.push(ScanJob {
                 query,
                 lists,
-                lut: build_lut_from_raw(codebook, query, m, dsub),
+                lut: if need_lut {
+                    build_lut_from_raw(codebook, query, m, dsub)
+                } else {
+                    Vec::new()
+                },
                 nprobe: *sp_nprobe,
             });
         }
 
         let chunks = chunk_sizes(self.nodes.len(), threads);
-        let per_job = scan_jobs(&mut self.nodes, &chunks, &jobs, codebook)?;
+        let per_job = run_jobs(&mut self.nodes, &chunks, &jobs, codebook)?;
         let mut results: Vec<SearchResult> = Vec::with_capacity(per_job.len());
         for (node_results, job) in per_job.iter().zip(&jobs) {
             results.push(self.aggregate(node_results, job, &chunks));
@@ -421,8 +446,8 @@ fn chunk_sizes(n_nodes: usize, threads: usize) -> Vec<usize> {
 /// node chunk and processes the full job queue node-major). Returns
 /// results indexed `[job][node]` with node order preserved, so merges are
 /// deterministic regardless of thread count.
-fn scan_jobs(
-    nodes: &mut [MemoryNode],
+fn run_jobs(
+    nodes: &mut [Box<dyn ScanBackend>],
     chunks: &[usize],
     jobs: &[ScanJob],
     codebook: &[f32],
@@ -467,19 +492,14 @@ fn scan_jobs(
 
 /// Sequential scan of one node chunk over the full job queue (the unit of
 /// work one pool thread executes). Returns results `[node-in-chunk][job]`.
+/// Each backend runs the whole queue in one [`ScanBackend::scan_jobs`]
+/// call — for a remote node that is one network round trip per round.
 fn scan_chunk(
-    chunk: &mut [MemoryNode],
+    chunk: &mut [Box<dyn ScanBackend>],
     jobs: &[ScanJob],
     codebook: &[f32],
 ) -> Result<Vec<Vec<NodeResult>>> {
-    chunk
-        .iter_mut()
-        .map(|node| {
-            jobs.iter()
-                .map(|j| node.scan(&j.lut, j.query, codebook, j.lists, j.nprobe))
-                .collect::<Result<Vec<_>>>()
-        })
-        .collect()
+    chunk.iter_mut().map(|node| node.scan_jobs(jobs, codebook)).collect()
 }
 
 /// K-way merge of per-node ascending top-K lists (paper step 8).

@@ -6,13 +6,15 @@
 //!   AOT-compiled Pallas pipeline via PJRT).
 //! * [`dispatcher`] — query broadcast + per-node top-K aggregation
 //!   (the coordinator-side half of the workflow, steps 4-8 of Sec 3).
-//! * [`backend`] — the four system configurations of Fig 9
-//!   (CPU, CPU-GPU, FPGA-CPU, FPGA-GPU) with composed latency models.
+//! * [`backend`] — the [`ScanBackend`] dispatch-target trait (in-process
+//!   node or remote connection) plus the four system configurations of
+//!   Fig 9 (CPU, CPU-GPU, FPGA-CPU, FPGA-GPU) with composed latency
+//!   models.
 
 pub mod backend;
 pub mod dispatcher;
 pub mod node;
 
-pub use backend::{BackendKind, SearchBackend};
+pub use backend::{BackendKind, ScanBackend, ScanJob, SearchBackend};
 pub use dispatcher::{BatchQuery, Dispatcher, SearchResult, Ticket};
 pub use node::{MemoryNode, NodeResult, ScanEngine};

@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::backend::{ScanBackend, ScanJob};
 use crate::hwmodel::fpga::FpgaModel;
 use crate::ivf::shard::Shard;
 use crate::kselect::{ApproxHierarchicalQueue, HierarchicalConfig};
@@ -147,6 +148,22 @@ impl MemoryNode {
             .query_latency(n, m, nprobe, self.k)
             .total();
         Ok(NodeResult { topk, measured_s, modeled_s, n_scanned: n })
+    }
+}
+
+impl ScanBackend for MemoryNode {
+    fn m(&self) -> usize {
+        self.shard.m
+    }
+
+    fn fpga(&self) -> &FpgaModel {
+        &self.fpga
+    }
+
+    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], codebook: &[f32]) -> Result<Vec<NodeResult>> {
+        jobs.iter()
+            .map(|j| self.scan(&j.lut, j.query, codebook, j.lists, j.nprobe))
+            .collect()
     }
 }
 

@@ -62,6 +62,15 @@ impl<T> DynamicBatcher<T> {
             .unwrap_or(false)
     }
 
+    /// How long until the oldest queued request hits `max_wait` (zero if
+    /// already overdue, `None` when the queue is empty) — the condvar
+    /// timeout of the coordinator's dispatch loop.
+    pub fn time_to_ready(&self, now: Instant) -> Option<Duration> {
+        self.queue.first().map(|p| {
+            self.policy.max_wait.saturating_sub(now.duration_since(p.arrived))
+        })
+    }
+
     /// Take up to `max_batch` requests (FIFO).
     pub fn take_batch(&mut self) -> Vec<Pending<T>> {
         let n = self.queue.len().min(self.policy.max_batch);
@@ -229,5 +238,22 @@ mod tests {
     fn empty_never_ready() {
         let b: DynamicBatcher<u8> = DynamicBatcher::new(BatchPolicy::default());
         assert!(!b.ready(Instant::now()));
+        assert_eq!(b.time_to_ready(Instant::now()), None);
+    }
+
+    #[test]
+    fn time_to_ready_counts_down_to_zero() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(50),
+        });
+        b.push(0, 1u32);
+        let now = Instant::now();
+        let left = b.time_to_ready(now).unwrap();
+        assert!(left <= Duration::from_millis(50));
+        // Far past the deadline the remaining wait saturates at zero.
+        let later = now + Duration::from_millis(500);
+        assert_eq!(b.time_to_ready(later), Some(Duration::ZERO));
+        assert!(b.ready(later));
     }
 }

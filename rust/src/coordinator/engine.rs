@@ -6,6 +6,7 @@ use anyhow::Result;
 use crate::chamlm::generator::{GenerationStats, Generator};
 use crate::chamlm::pool::WorkerPool;
 use crate::chamlm::sampler::Sampler;
+use crate::chamvs::backend::ScanBackend;
 use crate::config::ModelConfig;
 use crate::coordinator::retriever::Retriever;
 use crate::hwmodel::gpu::GpuModel;
@@ -122,12 +123,12 @@ impl RalmEngine {
         let interval = self.paper_model.interval.max(1);
         let retr_per_step = {
             // Batched retrieval: b queries pipelined through the FPGA.
-            let node = &self.retriever.dispatcher.nodes[0];
+            let fpga = self.retriever.dispatcher.nodes[0].fpga();
             let ds = self.retriever.ds;
             let paper_codes = (ds.n_paper as f64 * ds.nprobe as f64
                 / ds.nlist_paper as f64) as usize;
             let per_node = paper_codes / self.retriever.dispatcher.nodes.len();
-            node.fpga.batch_latency(b, per_node, ds.m, ds.nprobe, self.retriever.k())
+            fpga.batch_latency(b, per_node, ds.m, ds.nprobe, self.retriever.k())
         };
         let encode_s = if self.paper_model.is_encdec() {
             self.gpu.encode_latency(self.paper_model, b)

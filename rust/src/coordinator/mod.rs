@@ -1,7 +1,7 @@
 //! The CPU coordinator server (paper Sec 3): routes queries between the
 //! LLM side (ChamLM) and the retrieval side (ChamVS), converts retrieved
-//! vector IDs into tokens, batches requests, and hosts the end-to-end
-//! RALM engine used by the examples and benches.
+//! vector IDs into tokens, batches requests across client connections,
+//! and hosts the end-to-end RALM engine used by the examples and benches.
 
 pub mod batcher;
 pub mod engine;
@@ -9,7 +9,7 @@ pub mod ratio;
 pub mod retriever;
 pub mod server;
 
-pub use batcher::{DynamicBatcher, PrefetchTracker};
+pub use batcher::{BatchPolicy, DynamicBatcher, PrefetchTracker};
 pub use engine::RalmEngine;
 pub use retriever::{CachedRetrieval, RetrievalResult, Retriever};
-pub use server::{CoordinatorClient, CoordinatorServer};
+pub use server::{CoordinatorClient, CoordinatorServer, ServeMode, ServerStats};

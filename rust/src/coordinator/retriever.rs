@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::chamvs::backend::ScanBackend;
 use crate::chamvs::dispatcher::{BatchQuery, Dispatcher, SearchResult};
 use crate::config::DatasetConfig;
 use crate::data::corpus::Corpus;
@@ -180,7 +181,7 @@ impl Retriever {
                 self.ds.n_paper as f64 * nprobe as f64 / self.ds.nlist_paper as f64;
             let per_node = (paper_codes / self.dispatcher.nodes.len() as f64) as usize;
             self.dispatcher.nodes[0]
-                .fpga
+                .fpga()
                 .query_latency(per_node, self.ds.m, nprobe, self.dispatcher.k)
                 .total()
         } else {

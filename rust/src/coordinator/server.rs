@@ -2,80 +2,203 @@
 //! requests over TCP; the coordinator fans them out to the memory nodes,
 //! k-way-merges results, converts vector ids to tokens, and replies
 //! (paper Sec 3, workflow steps 3-9 — the "CPU coordinator server").
+//!
+//! Two serving modes ([`ServeMode`]):
+//!
+//! * **Concurrent** (the default) — the event loop that makes the
+//!   coordinator an actual multi-client server: one reader thread per
+//!   connection decodes [`RetrieveRequest`]s into a shared
+//!   [`DynamicBatcher`]; a single dispatch loop (which owns the
+//!   [`Retriever`]) drains cross-connection batches when the
+//!   [`BatchPolicy`] fires, runs them through
+//!   [`Retriever::retrieve_many`] (one parallel round through the memory
+//!   nodes — and one network round trip per remote node), and routes each
+//!   reply back to its owning connection by request id. A connection's
+//!   replies keep FIFO order, so clients may pipeline. When a connection
+//!   closes, exactly the speculation slots its GPU sources touched are
+//!   cancelled (per-connection teardown, as in the sequential server).
+//! * **Sequential** — the pre-batching baseline: one connection served to
+//!   completion at a time on the accept thread. Kept for A/B measurement
+//!   (`benches/coordinator_throughput.rs`, `chameleon serve --net
+//!   --sequential`).
 
+use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::batcher::PrefetchTracker;
-use crate::coordinator::retriever::Retriever;
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Pending, PrefetchTracker};
+use crate::coordinator::retriever::{RetrievalResult, Retriever};
 use crate::net::protocol::{Frame, Kind, RetrieveRequest, RetrieveResponse};
+use crate::retcache::RetrievalSource;
 use crate::util::metrics::Metrics;
+
+/// How idle loops poll their stop flags.
+const POLL: Duration = Duration::from_millis(25);
+
+/// How the coordinator serves its GPU clients.
+#[derive(Clone, Copy, Debug)]
+pub enum ServeMode {
+    /// One connection at a time, served to completion (the pre-batching
+    /// baseline; kept for A/B throughput comparison).
+    Sequential,
+    /// Multi-connection event loop with cross-connection dynamic batching
+    /// under the given policy.
+    Concurrent(BatchPolicy),
+}
+
+/// Serving counters, observable while the server runs (atomics shared via
+/// [`CoordinatorServer::stats`]). `max_batch >= 2` is the "batching
+/// actually happened" witness the integration tests assert on.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    requests: AtomicU64,
+    rounds: AtomicU64,
+    batches_ge2: AtomicU64,
+    max_batch: AtomicU64,
+    teardowns: AtomicU64,
+}
+
+impl ServerStats {
+    fn record_round(&self, batch: u64) {
+        self.requests.fetch_add(batch, Ordering::Relaxed);
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        self.max_batch.fetch_max(batch, Ordering::Relaxed);
+        if batch >= 2 {
+            self.batches_ge2.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Requests served.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Dispatch rounds run (== requests in sequential mode).
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Rounds that carried at least two requests.
+    pub fn batches_ge2(&self) -> u64 {
+        self.batches_ge2.load(Ordering::Relaxed)
+    }
+
+    /// Largest dispatched batch.
+    pub fn max_batch(&self) -> u64 {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    /// Connection teardowns processed (speculation-slot hygiene ran).
+    pub fn teardowns(&self) -> u64 {
+        self.teardowns.load(Ordering::Relaxed)
+    }
+}
+
+/// One decoded request waiting in the shared batcher.
+struct ServerRequest {
+    conn_id: u64,
+    query_id: u64,
+    gpu_id: u32,
+    want_chunks: bool,
+    query: Vec<f32>,
+}
+
+/// State shared between the accept thread, per-connection readers and the
+/// dispatch loop.
+struct Shared {
+    batcher: Mutex<DynamicBatcher<ServerRequest>>,
+    /// Woken on request arrival, teardown and stop.
+    cv: Condvar,
+    /// Connections whose reader exited; the dispatch loop cancels their
+    /// speculation slots (it owns the retriever).
+    teardowns: Mutex<Vec<u64>>,
+    /// Reply routes: connection id -> writer half.
+    writers: Mutex<HashMap<u64, TcpStream>>,
+    stop: AtomicBool,
+    stats: Arc<ServerStats>,
+}
 
 /// A running coordinator server.
 pub struct CoordinatorServer {
     pub addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl CoordinatorServer {
-    /// Spawn the coordinator on an ephemeral local port. The retriever is
-    /// built on the server thread (PJRT engines are not Send).
+    /// Spawn the concurrent coordinator with the default batch policy.
+    /// The retriever is built on the dispatch thread (PJRT engines are
+    /// not Send).
     pub fn spawn_with(
         builder: impl FnOnce() -> Retriever + Send + 'static,
     ) -> Result<CoordinatorServer> {
+        Self::spawn(builder, ServeMode::Concurrent(BatchPolicy::default()))
+    }
+
+    /// Spawn the one-connection-at-a-time baseline server.
+    pub fn spawn_sequential(
+        builder: impl FnOnce() -> Retriever + Send + 'static,
+    ) -> Result<CoordinatorServer> {
+        Self::spawn(builder, ServeMode::Sequential)
+    }
+
+    /// Spawn the coordinator on an ephemeral local port in the given mode.
+    pub fn spawn(
+        builder: impl FnOnce() -> Retriever + Send + 'static,
+        mode: ServeMode,
+    ) -> Result<CoordinatorServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let handle = std::thread::spawn(move || {
-            let mut retriever = builder();
-            let metrics = Metrics::new();
-            let mut prefetch = PrefetchTracker::new();
-            for conn in listener.incoming() {
-                if stop2.load(Ordering::Relaxed) {
-                    break;
-                }
-                match conn {
-                    Ok(stream) => {
-                        let _ = serve_gpu(
-                            stream,
-                            &mut retriever,
-                            &metrics,
-                            &mut prefetch,
-                            &stop2,
-                        );
-                        // Connection teardown: cancel exactly the slots this
-                        // connection's GPU sources touched, so a departed
-                        // client's predictions never verify against whoever
-                        // connects next (other connections' lanes untouched).
-                        for &slot in prefetch.sources() {
-                            retriever.cancel_slot_speculation(slot);
-                        }
-                        prefetch.reset();
-                        if stop2.load(Ordering::Relaxed) {
-                            break;
-                        }
-                    }
-                    Err(_) => break,
-                }
-            }
-            if retriever.retcache_enabled() {
-                retriever.export_metrics(&metrics);
-            }
-            eprintln!("[coordinator] metrics:\n{}", metrics.render());
+        let policy = match mode {
+            ServeMode::Sequential => BatchPolicy::default(),
+            ServeMode::Concurrent(p) => p,
+        };
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(DynamicBatcher::new(policy)),
+            cv: Condvar::new(),
+            teardowns: Mutex::new(Vec::new()),
+            writers: Mutex::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+            stats: Arc::new(ServerStats::default()),
         });
-        Ok(CoordinatorServer { addr, stop, handle: Some(handle) })
+        let mut handles = Vec::new();
+        match mode {
+            ServeMode::Sequential => {
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    serve_sequential(listener, builder, &sh);
+                }));
+            }
+            ServeMode::Concurrent(_) => {
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    dispatch_loop(builder, &sh);
+                }));
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    accept_loop(listener, addr, &sh);
+                }));
+            }
+        }
+        Ok(CoordinatorServer { addr, shared, handles })
+    }
+
+    /// Live serving counters (shared handle; stays valid after shutdown).
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.shared.stats.clone()
     }
 
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        // Nudge the accept loop out of its blocking accept.
         let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -87,31 +210,64 @@ impl Drop for CoordinatorServer {
     }
 }
 
+// ------------------------------------------------------- sequential mode
+
+fn serve_sequential(
+    listener: TcpListener,
+    builder: impl FnOnce() -> Retriever,
+    shared: &Shared,
+) {
+    let mut retriever = builder();
+    let metrics = Metrics::new();
+    let mut prefetch = PrefetchTracker::new();
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let _ = serve_gpu(stream, &mut retriever, &metrics, &mut prefetch, shared);
+                // Connection teardown: cancel exactly the slots this
+                // connection's GPU sources touched, so a departed
+                // client's predictions never verify against whoever
+                // connects next (other connections' lanes untouched).
+                for &slot in prefetch.sources() {
+                    retriever.cancel_slot_speculation(slot);
+                }
+                prefetch.reset();
+                shared.stats.teardowns.fetch_add(1, Ordering::Relaxed);
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if retriever.retcache_enabled() {
+        retriever.export_metrics(&metrics);
+    }
+    eprintln!("[coordinator] metrics:\n{}", metrics.render());
+}
+
 fn serve_gpu(
     stream: TcpStream,
     retriever: &mut Retriever,
     metrics: &Metrics,
     prefetch: &mut PrefetchTracker,
-    stop: &AtomicBool,
+    shared: &Shared,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     loop {
-        if stop.load(Ordering::Relaxed) {
+        if shared.stop.load(Ordering::Relaxed) {
             return Ok(());
         }
         let frame = match Frame::read_from(&mut reader) {
             Ok(f) => f,
             Err(e) => {
-                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-                    matches!(
-                        io.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    )
-                });
-                if timed_out {
+                if read_timed_out(&e) {
                     continue;
                 }
                 return Ok(());
@@ -119,13 +275,20 @@ fn serve_gpu(
         };
         match frame.kind {
             Kind::Shutdown => {
-                stop.store(true, Ordering::Relaxed);
+                shared.stop.store(true, Ordering::Relaxed);
                 return Ok(());
             }
             Kind::RetrieveRequest => {
                 let req = RetrieveRequest::decode(&frame)?;
+                anyhow::ensure!(
+                    req.query.len() == retriever.dim(),
+                    "query dim {} != index dim {}",
+                    req.query.len(),
+                    retriever.dim()
+                );
                 metrics.incr("retrieve_requests", 1);
                 metrics.incr(&format!("gpu_{}_requests", req.gpu_id), 1);
+                shared.stats.record_round(1);
                 // Retcache path: each GPU source owns its own speculation
                 // slot, so interleaved sources no longer cancel each
                 // other's prefetches — the switch rate is kept as an
@@ -138,18 +301,7 @@ fn serve_gpu(
                     let cr = metrics.time("retrieve", || {
                         retriever.retrieve_cached_from(slot, &req.query)
                     })?;
-                    metrics.incr(
-                        match cr.source {
-                            crate::retcache::RetrievalSource::Miss => "retrieve_miss",
-                            crate::retcache::RetrievalSource::CacheHit => {
-                                "retrieve_cache_hit"
-                            }
-                            crate::retcache::RetrievalSource::SpecHit => {
-                                "retrieve_spec_hit"
-                            }
-                        },
-                        1,
-                    );
+                    metrics.incr(source_counter(cr.source), 1);
                     cr.result
                 } else {
                     metrics.time("retrieve", || retriever.retrieve(&req.query))?
@@ -170,6 +322,313 @@ fn serve_gpu(
         }
     }
 }
+
+// ------------------------------------------------------- concurrent mode
+
+/// Accept connections, register their writer halves, and spawn one reader
+/// thread per connection.
+fn accept_loop(listener: TcpListener, addr: SocketAddr, shared: &Arc<Shared>) {
+    let mut next_conn = 0u64;
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                if stream.set_nodelay(true).is_err() {
+                    continue;
+                }
+                let writer = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(_) => continue,
+                };
+                let conn_id = next_conn;
+                next_conn += 1;
+                shared.writers.lock().unwrap().insert(conn_id, writer);
+                let sh = shared.clone();
+                // Readers are detached: they exit on disconnect or within
+                // one poll interval of the stop flag.
+                std::thread::spawn(move || reader_loop(stream, conn_id, addr, &sh));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Decode one connection's frames into the shared batcher. On exit (peer
+/// closed, protocol error, or server stop) the connection is deregistered
+/// and queued for speculation-slot teardown on the dispatch loop.
+fn reader_loop(stream: TcpStream, conn_id: u64, addr: SocketAddr, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let frame = match Frame::read_from(&mut reader) {
+            Ok(f) => f,
+            Err(e) => {
+                if read_timed_out(&e) {
+                    continue;
+                }
+                break;
+            }
+        };
+        match frame.kind {
+            Kind::Shutdown => {
+                shared.stop.store(true, Ordering::Relaxed);
+                shared.cv.notify_all();
+                // Nudge the accept loop so it observes the stop flag.
+                let _ = TcpStream::connect(addr);
+                break;
+            }
+            Kind::RetrieveRequest => match RetrieveRequest::decode(&frame) {
+                Ok(req) => {
+                    let mut b = shared.batcher.lock().unwrap();
+                    b.push(
+                        req.gpu_id as usize,
+                        ServerRequest {
+                            conn_id,
+                            query_id: req.query_id,
+                            gpu_id: req.gpu_id,
+                            want_chunks: req.want_chunks,
+                            query: req.query,
+                        },
+                    );
+                    drop(b);
+                    shared.cv.notify_all();
+                }
+                Err(_) => break,
+            },
+            _ => break,
+        }
+    }
+    shared.writers.lock().unwrap().remove(&conn_id);
+    shared.teardowns.lock().unwrap().push(conn_id);
+    shared.cv.notify_all();
+}
+
+/// What the dispatch loop should do next.
+enum Step {
+    /// Serve this drained batch.
+    Batch(Vec<Pending<ServerRequest>>),
+    /// Process pending connection teardowns first.
+    Teardown,
+    /// Stop flag set and the queue fully drained.
+    Stop,
+}
+
+/// Block until the batch policy fires, a teardown is pending, or the
+/// server stops (draining any queued requests first).
+fn next_step(shared: &Shared) -> Step {
+    let mut guard = shared.batcher.lock().unwrap();
+    loop {
+        if !shared.teardowns.lock().unwrap().is_empty() {
+            return Step::Teardown;
+        }
+        let now = Instant::now();
+        if guard.ready(now) {
+            return Step::Batch(guard.take_batch());
+        }
+        if shared.stop.load(Ordering::Relaxed) {
+            return if guard.is_empty() {
+                Step::Stop
+            } else {
+                Step::Batch(guard.take_batch())
+            };
+        }
+        let wait = guard.time_to_ready(now).unwrap_or(POLL).min(POLL);
+        let (g, _) = shared.cv.wait_timeout(guard, wait).unwrap();
+        guard = g;
+    }
+}
+
+/// The coordinator's serving core: owns the retriever, drains
+/// cross-connection batches, and routes replies back by connection id.
+fn dispatch_loop(builder: impl FnOnce() -> Retriever, shared: &Shared) {
+    let mut retriever = builder();
+    let metrics = Metrics::new();
+    // Per-connection source tracking (slot hygiene + interleave metric).
+    let mut trackers: HashMap<u64, PrefetchTracker> = HashMap::new();
+    loop {
+        match next_step(shared) {
+            Step::Stop => break,
+            Step::Teardown => {
+                let dead: Vec<u64> = std::mem::take(&mut *shared.teardowns.lock().unwrap());
+                for conn_id in dead {
+                    // Cancel exactly the slots this connection's GPU
+                    // sources touched — unless a still-live connection
+                    // (e.g. the same GPU reconnected) has since claimed
+                    // the slot, in which case its lane stays untouched.
+                    if let Some(t) = trackers.remove(&conn_id) {
+                        for &slot in t.sources() {
+                            let claimed_by_live = trackers
+                                .values()
+                                .any(|o| o.sources().contains(&slot));
+                            if !claimed_by_live {
+                                retriever.cancel_slot_speculation(slot);
+                            }
+                        }
+                    }
+                    shared.stats.teardowns.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Step::Batch(batch) => {
+                if batch.is_empty() {
+                    continue;
+                }
+                serve_batch(&batch, &mut retriever, &metrics, shared, &mut trackers);
+            }
+        }
+    }
+    if retriever.retcache_enabled() {
+        retriever.export_metrics(&metrics);
+    }
+    eprintln!("[coordinator] metrics:\n{}", metrics.render());
+}
+
+/// Serve one drained batch: retrieval (one parallel dispatcher round when
+/// retcache is off; the cache/speculation-aware per-request path when it
+/// is on), token conversion, and reply routing.
+fn serve_batch(
+    batch: &[Pending<ServerRequest>],
+    retriever: &mut Retriever,
+    metrics: &Metrics,
+    shared: &Shared,
+    trackers: &mut HashMap<u64, PrefetchTracker>,
+) {
+    // Drop requests whose connection is already gone (reader exited): they
+    // have no reply route, and serving them would resurrect a tracker —
+    // and possibly launch speculation on a slot — *after* that
+    // connection's teardown already ran.
+    let batch: Vec<&Pending<ServerRequest>> = {
+        let writers = shared.writers.lock().unwrap();
+        batch
+            .iter()
+            .filter(|p| writers.contains_key(&p.payload.conn_id))
+            .collect()
+    };
+    if batch.is_empty() {
+        return;
+    }
+    shared.stats.record_round(batch.len() as u64);
+    metrics.incr("retrieve_requests", batch.len() as u64);
+    for p in &batch {
+        metrics.incr(&format!("gpu_{}_requests", p.payload.gpu_id), 1);
+        let tracker = trackers.entry(p.payload.conn_id).or_default();
+        if tracker.observe(p.payload.gpu_id as usize) {
+            metrics.incr("retcache.prefetch_source_switches", 1);
+        }
+    }
+    // A malformed query (wrong dimensionality) must fail only its own
+    // connection — never the shared round the other clients are riding.
+    let dim = retriever.dim();
+    let bad_dim = |p: &Pending<ServerRequest>| {
+        anyhow::anyhow!("query dim {} != index dim {dim}", p.payload.query.len())
+    };
+    let results: Vec<Result<RetrievalResult>> = if retriever.retcache_enabled() {
+        // The cache-aware path is per-request (hits skip the round trip
+        // entirely); requests still arrived and reply in batch order.
+        batch
+            .iter()
+            .map(|p| {
+                if p.payload.query.len() != dim {
+                    return Err(bad_dim(p));
+                }
+                let slot = p.payload.gpu_id as usize;
+                metrics
+                    .time("retrieve", || {
+                        retriever.retrieve_cached_from(slot, &p.payload.query)
+                    })
+                    .map(|cr| {
+                        metrics.incr(source_counter(cr.source), 1);
+                        cr.result
+                    })
+            })
+            .collect()
+    } else {
+        // The whole cross-connection batch in ONE parallel dispatch round
+        // (per-node work queues; one round trip per remote node),
+        // restricted to the well-formed queries.
+        let mut results: Vec<Result<RetrievalResult>> =
+            batch.iter().map(|p| Err(bad_dim(p))).collect();
+        let valid: Vec<usize> = (0..batch.len())
+            .filter(|&i| batch[i].payload.query.len() == dim)
+            .collect();
+        let refs: Vec<&[f32]> = valid
+            .iter()
+            .map(|&i| batch[i].payload.query.as_slice())
+            .collect();
+        if !refs.is_empty() {
+            match metrics.time("retrieve", || retriever.retrieve_many(&refs)) {
+                Ok(rs) => {
+                    for (&i, r) in valid.iter().zip(rs) {
+                        results[i] = Ok(r);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[coordinator] batch retrieval failed: {e:#}");
+                    for &i in &valid {
+                        results[i] = Err(anyhow::anyhow!("batch retrieval failed"));
+                    }
+                }
+            }
+        }
+        results
+    };
+    for (p, result) in batch.iter().zip(results) {
+        match result {
+            Ok(r) => {
+                let tokens = if p.payload.want_chunks {
+                    retriever.gather_chunks(&r.ids)
+                } else {
+                    retriever.gather_next_tokens(&r.ids)
+                };
+                let resp = RetrieveResponse {
+                    query_id: p.payload.query_id,
+                    tokens,
+                    dists: r.dists,
+                };
+                let mut writers = shared.writers.lock().unwrap();
+                if let Some(stream) = writers.get_mut(&p.payload.conn_id) {
+                    if resp.encode().write_to(stream).is_err() {
+                        // Dead peer: drop the route; the reader thread
+                        // will queue the teardown.
+                        let _ = stream.shutdown(std::net::Shutdown::Both);
+                        writers.remove(&p.payload.conn_id);
+                    }
+                }
+            }
+            Err(_) => {
+                // A failed retrieval must not leave the client blocked on
+                // a reply that will never come: close its connection.
+                let mut writers = shared.writers.lock().unwrap();
+                if let Some(stream) = writers.remove(&p.payload.conn_id) {
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                }
+            }
+        }
+    }
+}
+
+fn source_counter(source: RetrievalSource) -> &'static str {
+    match source {
+        RetrievalSource::Miss => "retrieve_miss",
+        RetrievalSource::CacheHit => "retrieve_cache_hit",
+        RetrievalSource::SpecHit => "retrieve_spec_hit",
+    }
+}
+
+fn read_timed_out(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    })
+}
+
+// ------------------------------------------------------------ GPU client
 
 /// GPU-process-side client of the coordinator.
 pub struct CoordinatorClient {
@@ -213,6 +672,43 @@ impl CoordinatorClient {
         let resp = RetrieveResponse::decode(&f)?;
         anyhow::ensure!(resp.query_id == id, "response id mismatch");
         Ok(resp)
+    }
+
+    /// Send a window of requests back-to-back, then collect the replies —
+    /// the concurrent coordinator answers one connection's requests in
+    /// FIFO order, so pipelining feeds the batcher without waiting a
+    /// round trip per query.
+    pub fn retrieve_pipelined(
+        &mut self,
+        queries: &[&[f32]],
+        k: usize,
+        want_chunks: bool,
+    ) -> Result<Vec<RetrieveResponse>> {
+        let base = self.next_id;
+        self.next_id += queries.len() as u64;
+        for (i, q) in queries.iter().enumerate() {
+            RetrieveRequest {
+                query_id: base + i as u64,
+                gpu_id: self.gpu_id,
+                query: q.to_vec(),
+                lists: Vec::new(),
+                k: k as u32,
+                want_chunks,
+            }
+            .encode()
+            .write_to(&mut self.stream)?;
+        }
+        let mut out = Vec::with_capacity(queries.len());
+        for i in 0..queries.len() {
+            let f = Frame::read_from(&mut self.reader)?;
+            let resp = RetrieveResponse::decode(&f)?;
+            anyhow::ensure!(
+                resp.query_id == base + i as u64,
+                "pipelined response out of order"
+            );
+            out.push(resp);
+        }
+        Ok(out)
     }
 
     pub fn shutdown_coordinator(&mut self) {

@@ -8,17 +8,23 @@
 //!                       (fig7 fig8 fig9 fig10 fig11 fig12 fig13
 //!                        table4 table5 recall retcache dispatch all)
 
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 use chameleon::chamlm::pool::WorkerPool;
+use chameleon::chamvs::backend::ScanBackend;
 use chameleon::chamvs::dispatcher::Dispatcher;
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
 use chameleon::config::{self, SystemConfig};
+use chameleon::coordinator::batcher::BatchPolicy;
 use chameleon::coordinator::engine::RalmEngine;
 use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorClient, CoordinatorServer, ServeMode};
 use chameleon::data::corpus::Corpus;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
+use chameleon::net::client::RemoteNode;
 use chameleon::report;
 use chameleon::runtime::Runtime;
 use chameleon::util::cli::Args;
@@ -58,6 +64,10 @@ fn print_help() {
          demo                      quickstart search + generation\n\
          search [--dataset SIFT] [--queries 64] [--nodes 2] [--batch 1] [--pjrt]\n\
          serve  [--model dec_tiny] [--tokens 64] [--sequences 2]\n\
+         serve --net [--clients 4] [--queries 32] [--sequential]\n\
+                [--max-batch 16] [--max-wait-us 200] [--nodes 2]\n\
+                [--remote host:port,host:port]   concurrent coordinator over\n\
+                TCP; --remote uses running chamvs-node memory nodes\n\
          report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|dispatch|all>\n\
          \n\
          Common options: --n <scaled db size> --seed <u64> --artifacts <dir>"
@@ -164,7 +174,24 @@ fn search(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The coordinator's dynamic-batching policy from the CLI knobs.
+fn batch_policy(args: &Args) -> BatchPolicy {
+    BatchPolicy {
+        max_batch: args.get_usize("max-batch", 16).max(1),
+        max_wait: Duration::from_micros(args.get_u64("max-wait-us", 200)),
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
+    let policy = batch_policy(args);
+    println!(
+        "[serve] batch policy: max_batch={} max_wait={}us",
+        policy.max_batch,
+        policy.max_wait.as_micros()
+    );
+    if args.flag("net") {
+        return serve_net(args, policy);
+    }
     let sys = system_config(args);
     let model = match args.get_or("model", "dec_tiny") {
         "dec_tiny" => &config::DEC_TINY,
@@ -189,6 +216,129 @@ fn serve(args: &Args) -> Result<()> {
         stats.modeled_tokens_per_s()
     );
     Ok(())
+}
+
+/// Networked serving: spawn the coordinator (concurrent event loop by
+/// default, `--sequential` for the one-connection-at-a-time baseline) and
+/// drive it with N in-process GPU clients. With `--remote a:p,b:p` the
+/// retrieval tier is running `chamvs-node` processes; otherwise local
+/// in-process memory nodes.
+fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
+    let sys = system_config(args);
+    let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 8000);
+    let n_clients = args.get_usize("clients", 4).max(1);
+    let per_client = args.get_usize("queries", 32).max(1);
+    let k = args.get_usize("k", 10);
+    let sequential = args.flag("sequential");
+
+    let retriever = match args.get("remote") {
+        Some(spec) => build_remote_retriever(ds, n, k, sys.seed, spec)?,
+        None => build_retriever(ds, n, args.get_usize("nodes", 2), k, false, &sys)?.0,
+    };
+    let mode = if sequential {
+        ServeMode::Sequential
+    } else {
+        ServeMode::Concurrent(policy)
+    };
+    let mut server = CoordinatorServer::spawn(move || retriever, mode)?;
+    let addr = server.addr;
+    println!(
+        "[serve-net] coordinator on {addr} ({} mode), {n_clients} clients x {per_client} queries",
+        if sequential { "sequential" } else { "concurrent" }
+    );
+
+    // Deterministic query stream (tiny db, many queries — only the query
+    // vectors are used).
+    let qdata = SyntheticDataset::generate_sized(ds, 64, n_clients * per_client, sys.seed ^ 9);
+    let failed = std::sync::Mutex::new(None::<anyhow::Error>);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let qdata = &qdata;
+            let failed = &failed;
+            s.spawn(move || {
+                let run = || -> Result<()> {
+                    let mut client = CoordinatorClient::connect(addr, c as u32)?;
+                    for i in 0..per_client {
+                        let q = qdata.query((c * per_client + i) % qdata.n_queries);
+                        let resp = client.retrieve(q, &[], k, false)?;
+                        anyhow::ensure!(
+                            resp.dists.len() <= k,
+                            "reply larger than k"
+                        );
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    *failed.lock().unwrap() = Some(e);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(e) = failed.into_inner().unwrap() {
+        return Err(e.context("serve-net client failed"));
+    }
+    let total = (n_clients * per_client) as f64;
+    let stats = server.stats();
+    println!(
+        "[serve-net] {total:.0} requests in {wall:.3}s -> {:.0} q/s",
+        total / wall
+    );
+    println!(
+        "[serve-net] rounds={} mean_batch={:.2} max_batch={} rounds_with_batch>=2: {}",
+        stats.rounds(),
+        total / stats.rounds().max(1) as f64,
+        stats.max_batch(),
+        stats.batches_ge2()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// Retrieval stack over running `chamvs-node` processes: mirror the node
+/// binary's deterministic (dataset, n, seed) shard contract for the probe
+/// index, and connect one `RemoteNode` backend per address — the same
+/// dispatcher then drives the remote tier.
+fn build_remote_retriever(
+    ds: &'static config::DatasetConfig,
+    n: usize,
+    k: usize,
+    seed: u64,
+    spec: &str,
+) -> Result<Retriever> {
+    let data = SyntheticDataset::generate_sized(ds, n, 16, seed);
+    let nlist = (n as f64).sqrt() as usize;
+    eprintln!("[serve-net] building probe index ({} n={n} nlist={nlist})", ds.name);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
+    let mut backends: Vec<Box<dyn ScanBackend>> = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let addr: std::net::SocketAddr = part
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad memory-node address '{part}'"))?;
+        let node = RemoteNode::connect(addr, k)?;
+        // The handshake carries the node's PQ geometry: fail fast on a
+        // (dataset, n, seed) contract mismatch instead of silently
+        // merging garbage distances.
+        anyhow::ensure!(
+            node.m() == ds.m,
+            "memory node {} reports PQ width m={} but dataset {} uses m={} — \
+             start chamvs-node with the same --dataset/--n/--seed",
+            part.trim(),
+            node.m(),
+            ds.name,
+            ds.m
+        );
+        backends.push(Box::new(node));
+        eprintln!("[serve-net] connected memory node {}", part.trim());
+    }
+    anyhow::ensure!(!backends.is_empty(), "--remote needs at least one address");
+    let dispatcher = Dispatcher::over(backends, k);
+    let corpus = Corpus::generate(n, 2048, config::CHUNK_LEN, seed ^ 2);
+    Ok(Retriever::new(ds, index, dispatcher, corpus))
 }
 
 fn report_cmd(args: &Args) -> Result<()> {

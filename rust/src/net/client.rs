@@ -1,88 +1,199 @@
-//! Coordinator-side client: broadcasts scan requests to remote memory
-//! nodes and merges their responses (the networked twin of
-//! `chamvs::dispatcher`).
+//! Coordinator-side remote-node backend: one [`RemoteNode`] per memory
+//! node connection, implementing [`ScanBackend`] so the regular
+//! [`Dispatcher`] fans rounds out over sockets exactly as it does over
+//! in-process nodes — including batched rounds, which ship each node its
+//! whole job queue in a single network round trip
+//! ([`BatchScanRequest`]/[`BatchScanResponse`]).
+//!
+//! [`NodeClient`] is the thin convenience wrapper the examples, benches
+//! and failure tests use: a dispatcher over remote backends with the
+//! single-query/broadcast surface of the old networked client. The former
+//! client-side copy of the top-K merge is gone — merging happens in the
+//! dispatcher, once, for every backend kind.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 
 use anyhow::{Context, Result};
 
-use super::protocol::{Frame, Kind, ScanRequest, ScanResponse};
-use crate::chamvs::dispatcher::merge_topk;
+use super::protocol::{
+    BatchScanRequest, BatchScanResponse, Frame, Hello, Kind, ScanRequest, ScanResponse,
+};
+use crate::chamvs::backend::{ScanBackend, ScanJob};
+use crate::chamvs::dispatcher::{BatchQuery, Dispatcher, SearchResult};
 use crate::chamvs::node::NodeResult;
+use crate::hwmodel::fpga::FpgaModel;
 
-/// Connections to a set of remote memory nodes.
+/// A connection to one remote `chamvs-node` memory node, usable anywhere
+/// the dispatcher takes a scan backend.
+pub struct RemoteNode {
+    addr: SocketAddr,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Node identity from the connection handshake.
+    pub node_id: u32,
+    m: usize,
+    k: usize,
+    fpga: FpgaModel,
+    next_id: u64,
+}
+
+impl RemoteNode {
+    /// Connect and complete the [`Hello`] handshake (which carries the
+    /// node's PQ width, so no out-of-band geometry contract is needed).
+    pub fn connect(addr: SocketAddr, k: usize) -> Result<RemoteNode> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to memory node {addr}"))?;
+        stream.set_nodelay(true)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let frame = Frame::read_from(&mut reader)
+            .with_context(|| format!("reading hello from {addr}"))?;
+        let hello = Hello::decode(&frame)?;
+        anyhow::ensure!(hello.m > 0, "node {addr} reported m=0");
+        Ok(RemoteNode {
+            addr,
+            stream,
+            reader,
+            node_id: hello.node_id,
+            m: hello.m as usize,
+            k,
+            fpga: FpgaModel::default(),
+            next_id: 0,
+        })
+    }
+
+    fn to_node_result(r: ScanResponse) -> NodeResult {
+        NodeResult {
+            topk: r.dists.iter().zip(&r.ids).map(|(&d, &i)| (d, i)).collect(),
+            // The node's own host wall, carried in the response — the
+            // networked path reports honest measured numbers.
+            measured_s: r.measured_s,
+            modeled_s: r.modeled_s,
+            n_scanned: r.n_scanned as usize,
+        }
+    }
+}
+
+impl ScanBackend for RemoteNode {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn fpga(&self) -> &FpgaModel {
+        &self.fpga
+    }
+
+    /// The node server builds its own ADC table; skip the client-side one.
+    fn wants_lut(&self) -> bool {
+        false
+    }
+
+    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], _codebook: &[f32]) -> Result<Vec<NodeResult>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let base = self.next_id;
+        self.next_id += jobs.len() as u64;
+        let k = self.k as u32;
+        let request = |i: usize| ScanRequest {
+            query_id: base + i as u64,
+            query: jobs[i].query.to_vec(),
+            lists: jobs[i].lists.to_vec(),
+            k,
+        };
+        if jobs.len() == 1 {
+            // Single-query broadcast round (paper step 5/7).
+            request(0)
+                .encode()
+                .write_to(&mut self.stream)
+                .with_context(|| format!("sending scan to {}", self.addr))?;
+            let f = Frame::read_from(&mut self.reader)
+                .with_context(|| format!("reading response from {}", self.addr))?;
+            let resp = ScanResponse::decode(&f)?;
+            anyhow::ensure!(resp.query_id == base, "scan response id mismatch");
+            Ok(vec![Self::to_node_result(resp)])
+        } else {
+            // Batched round: the whole job queue in one round trip.
+            BatchScanRequest { items: (0..jobs.len()).map(request).collect() }
+                .encode()
+                .write_to(&mut self.stream)
+                .with_context(|| format!("sending batch scan to {}", self.addr))?;
+            let f = Frame::read_from(&mut self.reader)
+                .with_context(|| format!("reading batch response from {}", self.addr))?;
+            let resp = BatchScanResponse::decode(&f)?;
+            anyhow::ensure!(
+                resp.items.len() == jobs.len(),
+                "batch response arity mismatch: {} vs {}",
+                resp.items.len(),
+                jobs.len()
+            );
+            let mut out = Vec::with_capacity(jobs.len());
+            for (i, item) in resp.items.into_iter().enumerate() {
+                anyhow::ensure!(
+                    item.query_id == base + i as u64,
+                    "batch response id mismatch at {i}"
+                );
+                out.push(Self::to_node_result(item));
+            }
+            Ok(out)
+        }
+    }
+
+    fn shutdown(&mut self) {
+        let _ = Frame { kind: Kind::Shutdown, payload: vec![] }.write_to(&mut self.stream);
+    }
+}
+
+/// Dispatcher-backed client over a set of remote memory nodes.
 pub struct NodeClient {
-    conns: Vec<(SocketAddr, TcpStream, BufReader<TcpStream>)>,
-    pub k: usize,
+    disp: Dispatcher,
 }
 
 impl NodeClient {
     pub fn connect(addrs: &[SocketAddr], k: usize) -> Result<NodeClient> {
-        let mut conns = Vec::with_capacity(addrs.len());
+        anyhow::ensure!(!addrs.is_empty(), "no memory node addresses");
+        let mut backends: Vec<Box<dyn ScanBackend>> = Vec::with_capacity(addrs.len());
         for &addr in addrs {
-            let stream = TcpStream::connect(addr)
-                .with_context(|| format!("connecting to memory node {addr}"))?;
-            stream.set_nodelay(true)?;
-            let reader = BufReader::new(stream.try_clone()?);
-            conns.push((addr, stream, reader));
+            backends.push(Box::new(RemoteNode::connect(addr, k)?));
         }
-        Ok(NodeClient { conns, k })
+        Ok(NodeClient { disp: Dispatcher::over(backends, k) })
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.conns.len()
+        self.disp.nodes.len()
     }
 
-    /// Broadcast one query and merge the per-node top-K responses.
-    /// Returns (global top-K, max node modeled seconds).
-    pub fn search(
-        &mut self,
-        query_id: u64,
-        query: &[f32],
-        lists: &[u32],
-    ) -> Result<(Vec<(f32, u64)>, f64)> {
-        let req = ScanRequest {
-            query_id,
-            query: query.to_vec(),
-            lists: lists.to_vec(),
-            k: self.k as u32,
-        };
-        let frame = req.encode();
-        // Broadcast phase (paper step 5).
-        for (_, stream, _) in &mut self.conns {
-            frame.write_to(stream)?;
-        }
-        // Gather phase (paper step 7) — responses arrive in node order on
-        // each dedicated connection.
-        let mut results = Vec::with_capacity(self.conns.len());
-        let mut max_modeled = 0.0f64;
-        for (addr, _, reader) in &mut self.conns {
-            let f = Frame::read_from(reader)
-                .with_context(|| format!("reading response from {addr}"))?;
-            let resp = ScanResponse::decode(&f)?;
-            anyhow::ensure!(resp.query_id == query_id, "response id mismatch");
-            max_modeled = max_modeled.max(resp.modeled_s);
-            results.push(NodeResult {
-                topk: resp
-                    .dists
-                    .iter()
-                    .zip(&resp.ids)
-                    .map(|(&d, &i)| (d, i))
-                    .collect(),
-                measured_s: 0.0,
-                modeled_s: resp.modeled_s,
-                n_scanned: 0,
-            });
-        }
-        Ok((merge_topk(&results, self.k), max_modeled))
+    pub fn k(&self) -> usize {
+        self.disp.k
+    }
+
+    /// Broadcast one query to all nodes and merge the per-node top-Ks
+    /// (one parallel dispatcher round; `measured_wall_s`/`measured_cpu_s`
+    /// aggregate the nodes' own reported scan walls).
+    pub fn search(&mut self, query: &[f32], lists: &[u32]) -> Result<SearchResult> {
+        // Remote nodes probe with their server-side nprobe; the value here
+        // only feeds the local latency attribution.
+        self.disp.search(query, &[], lists, lists.len().max(1))
+    }
+
+    /// Run a whole batch in one dispatcher round: one network round trip
+    /// per node carries every query.
+    pub fn search_batch(&mut self, batch: &[BatchQuery]) -> Result<Vec<SearchResult>> {
+        let nprobe = batch.iter().map(|b| b.lists.len()).max().unwrap_or(1).max(1);
+        self.disp.search_batch(batch, &[], nprobe)
+    }
+
+    /// The underlying dispatcher (e.g. to hand to a
+    /// [`Retriever`](crate::coordinator::retriever::Retriever) for fully
+    /// networked serving).
+    pub fn into_dispatcher(self) -> Dispatcher {
+        self.disp
     }
 
     /// Ask all nodes to shut down.
     pub fn shutdown_nodes(&mut self) {
-        let f = Frame { kind: Kind::Shutdown, payload: vec![] };
-        for (_, stream, _) in &mut self.conns {
-            let _ = f.write_to(stream);
+        for node in &mut self.disp.nodes {
+            node.shutdown();
         }
     }
 }

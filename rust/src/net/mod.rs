@@ -1,13 +1,18 @@
-//! Disaggregation over real sockets: a length-prefixed binary protocol,
-//! a memory-node server (`chamvs-node` binary) and the coordinator-side
-//! client. The paper's prototype uses a hardware TCP/IP stack on the FPGA
-//! and socket programs on the CPU (Sec 5); here both ends are std TCP
-//! with blocking I/O and one thread per connection.
+//! Disaggregation over real sockets: a length-prefixed binary protocol
+//! (single-query and whole-batch scan frames, plus a node handshake), a
+//! memory-node server (`chamvs-node` binary) and the coordinator-side
+//! [`RemoteNode`] scan backend — the same dispatcher that drives
+//! in-process nodes drives these connections. The paper's prototype uses
+//! a hardware TCP/IP stack on the FPGA and socket programs on the CPU
+//! (Sec 5); here both ends are std TCP with blocking I/O and one thread
+//! per connection.
 
 pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::NodeClient;
-pub use protocol::{Frame, ScanRequest, ScanResponse};
+pub use client::{NodeClient, RemoteNode};
+pub use protocol::{
+    BatchScanRequest, BatchScanResponse, Frame, Hello, ScanRequest, ScanResponse,
+};
 pub use server::NodeServer;

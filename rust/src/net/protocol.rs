@@ -4,6 +4,10 @@
 //!   u32 magic | u32 kind | u64 payload_len | payload
 //! Payload encodings are fixed-layout (no self-describing overhead —
 //! the hot path moves f32/u32 arrays).
+//!
+//! Decoding is defensive: element counts are validated against the
+//! remaining payload before any allocation, so a truncated or garbage
+//! frame yields an error instead of a panic or a huge `Vec` reservation.
 
 use std::io::{Read, Write};
 
@@ -23,6 +27,15 @@ pub enum Kind {
     RetrieveRequest = 4,
     /// Coordinator -> GPU: neighbor tokens + distances (step 9).
     RetrieveResponse = 5,
+    /// Memory node -> coordinator, once per connection at accept time:
+    /// the node's identity and PQ geometry (the client side needs `m` to
+    /// validate query dims without an out-of-band contract).
+    Hello = 6,
+    /// Coordinator -> node: a whole dispatch batch in one frame, so one
+    /// network round trip carries every query of a coordinator round.
+    BatchScanRequest = 7,
+    /// Node -> coordinator: per-query local top-Ks for one batch frame.
+    BatchScanResponse = 8,
 }
 
 impl Kind {
@@ -33,6 +46,9 @@ impl Kind {
             3 => Kind::Shutdown,
             4 => Kind::RetrieveRequest,
             5 => Kind::RetrieveResponse,
+            6 => Kind::Hello,
+            7 => Kind::BatchScanRequest,
+            8 => Kind::BatchScanResponse,
             other => bail!("unknown frame kind {other}"),
         })
     }
@@ -71,6 +87,86 @@ impl Frame {
     }
 }
 
+// ---------------------------------------------------------------- readers
+//
+// Checked array readers: the claimed element count must fit in the bytes
+// actually present, bounding both the read and the allocation by the
+// frame's (already size-capped) payload.
+
+fn read_f32s(r: &mut &[u8], n: usize) -> Result<Vec<f32>> {
+    anyhow::ensure!(r.len() >= 4 * n, "truncated frame: {n} f32s > {} bytes", r.len());
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(r.read_f32::<LE>()?);
+    }
+    Ok(v)
+}
+
+fn read_u32s(r: &mut &[u8], n: usize) -> Result<Vec<u32>> {
+    anyhow::ensure!(r.len() >= 4 * n, "truncated frame: {n} u32s > {} bytes", r.len());
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(r.read_u32::<LE>()?);
+    }
+    Ok(v)
+}
+
+fn read_u64s(r: &mut &[u8], n: usize) -> Result<Vec<u64>> {
+    anyhow::ensure!(r.len() >= 8 * n, "truncated frame: {n} u64s > {} bytes", r.len());
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(r.read_u64::<LE>()?);
+    }
+    Ok(v)
+}
+
+/// An item count whose items occupy at least `min_item_bytes` each.
+fn read_count(r: &mut &[u8], min_item_bytes: usize) -> Result<usize> {
+    let n = r.read_u32::<LE>()? as usize;
+    anyhow::ensure!(
+        n.saturating_mul(min_item_bytes) <= r.len(),
+        "truncated frame: {n} items > {} bytes",
+        r.len()
+    );
+    Ok(n)
+}
+
+// ------------------------------------------------------------------ hello
+
+/// Node handshake, sent by a memory node once per accepted connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub node_id: u32,
+    /// PQ code width of the node's shard.
+    pub m: u32,
+    /// IVF list count of the node's shard.
+    pub nlist: u32,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Frame {
+        let mut p = Vec::with_capacity(12);
+        p.write_u32::<LE>(self.node_id).unwrap();
+        p.write_u32::<LE>(self.m).unwrap();
+        p.write_u32::<LE>(self.nlist).unwrap();
+        Frame { kind: Kind::Hello, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<Hello> {
+        if f.kind != Kind::Hello {
+            bail!("not a hello");
+        }
+        let mut r = &f.payload[..];
+        Ok(Hello {
+            node_id: r.read_u32::<LE>()?,
+            m: r.read_u32::<LE>()?,
+            nlist: r.read_u32::<LE>()?,
+        })
+    }
+}
+
+// ------------------------------------------------------------------- scan
+
 /// A scan request: query vector + probed list ids (paper step 4/5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScanRequest {
@@ -81,8 +177,12 @@ pub struct ScanRequest {
 }
 
 impl ScanRequest {
-    pub fn encode(&self) -> Frame {
-        let mut p = Vec::with_capacity(24 + 4 * self.query.len() + 4 * self.lists.len());
+    /// Serialized body size (the batch frame preallocates from this).
+    fn body_len(&self) -> usize {
+        20 + 4 * self.query.len() + 4 * self.lists.len()
+    }
+
+    fn write_body(&self, p: &mut Vec<u8>) {
         p.write_u64::<LE>(self.query_id).unwrap();
         p.write_u32::<LE>(self.k).unwrap();
         p.write_u32::<LE>(self.query.len() as u32).unwrap();
@@ -93,6 +193,21 @@ impl ScanRequest {
         for &l in &self.lists {
             p.write_u32::<LE>(l).unwrap();
         }
+    }
+
+    fn read_body(r: &mut &[u8]) -> Result<ScanRequest> {
+        let query_id = r.read_u64::<LE>()?;
+        let k = r.read_u32::<LE>()?;
+        let qn = r.read_u32::<LE>()? as usize;
+        let ln = r.read_u32::<LE>()? as usize;
+        let query = read_f32s(r, qn)?;
+        let lists = read_u32s(r, ln)?;
+        Ok(ScanRequest { query_id, query, lists, k })
+    }
+
+    pub fn encode(&self) -> Frame {
+        let mut p = Vec::with_capacity(self.body_len());
+        self.write_body(&mut p);
         Frame { kind: Kind::ScanRequest, payload: p }
     }
 
@@ -100,24 +215,14 @@ impl ScanRequest {
         if f.kind != Kind::ScanRequest {
             bail!("not a scan request");
         }
-        let mut r = &f.payload[..];
-        let query_id = r.read_u64::<LE>()?;
-        let k = r.read_u32::<LE>()?;
-        let qn = r.read_u32::<LE>()? as usize;
-        let ln = r.read_u32::<LE>()? as usize;
-        let mut query = Vec::with_capacity(qn);
-        for _ in 0..qn {
-            query.push(r.read_f32::<LE>()?);
-        }
-        let mut lists = Vec::with_capacity(ln);
-        for _ in 0..ln {
-            lists.push(r.read_u32::<LE>()?);
-        }
-        Ok(ScanRequest { query_id, query, lists, k })
+        Self::read_body(&mut &f.payload[..])
     }
 }
 
-/// A scan response: the node's local top-K (paper step 7).
+/// A scan response: the node's local top-K (paper step 7), plus the
+/// node-side latency accounting — `measured_s` is the host wall actually
+/// spent, so the networked dispatch path reports honest measured numbers
+/// instead of zeros.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScanResponse {
     pub query_id: u64,
@@ -126,15 +231,24 @@ pub struct ScanResponse {
     pub ids: Vec<u64>,
     /// Node-side modeled accelerator seconds (for latency accounting).
     pub modeled_s: f64,
+    /// Node-side host wall-clock seconds actually spent on this scan.
+    pub measured_s: f64,
+    /// PQ codes scanned on the node.
+    pub n_scanned: u64,
 }
 
 impl ScanResponse {
-    pub fn encode(&self) -> Frame {
+    fn body_len(&self) -> usize {
+        40 + 12 * self.ids.len()
+    }
+
+    fn write_body(&self, p: &mut Vec<u8>) {
         assert_eq!(self.dists.len(), self.ids.len());
-        let mut p = Vec::with_capacity(28 + 12 * self.ids.len());
         p.write_u64::<LE>(self.query_id).unwrap();
         p.write_u32::<LE>(self.node_id).unwrap();
         p.write_f64::<LE>(self.modeled_s).unwrap();
+        p.write_f64::<LE>(self.measured_s).unwrap();
+        p.write_u64::<LE>(self.n_scanned).unwrap();
         p.write_u32::<LE>(self.ids.len() as u32).unwrap();
         for &d in &self.dists {
             p.write_f32::<LE>(d).unwrap();
@@ -142,6 +256,23 @@ impl ScanResponse {
         for &i in &self.ids {
             p.write_u64::<LE>(i).unwrap();
         }
+    }
+
+    fn read_body(r: &mut &[u8]) -> Result<ScanResponse> {
+        let query_id = r.read_u64::<LE>()?;
+        let node_id = r.read_u32::<LE>()?;
+        let modeled_s = r.read_f64::<LE>()?;
+        let measured_s = r.read_f64::<LE>()?;
+        let n_scanned = r.read_u64::<LE>()?;
+        let n = read_count(r, 12)?;
+        let dists = read_f32s(r, n)?;
+        let ids = read_u64s(r, n)?;
+        Ok(ScanResponse { query_id, node_id, dists, ids, modeled_s, measured_s, n_scanned })
+    }
+
+    pub fn encode(&self) -> Frame {
+        let mut p = Vec::with_capacity(self.body_len());
+        self.write_body(&mut p);
         Frame { kind: Kind::ScanResponse, payload: p }
     }
 
@@ -149,26 +280,86 @@ impl ScanResponse {
         if f.kind != Kind::ScanResponse {
             bail!("not a scan response");
         }
-        let mut r = &f.payload[..];
-        let query_id = r.read_u64::<LE>()?;
-        let node_id = r.read_u32::<LE>()?;
-        let modeled_s = r.read_f64::<LE>()?;
-        let n = r.read_u32::<LE>()? as usize;
-        let mut dists = Vec::with_capacity(n);
-        for _ in 0..n {
-            dists.push(r.read_f32::<LE>()?);
-        }
-        let mut ids = Vec::with_capacity(n);
-        for _ in 0..n {
-            ids.push(r.read_u64::<LE>()?);
-        }
-        Ok(ScanResponse { query_id, node_id, dists, ids, modeled_s })
+        Self::read_body(&mut &f.payload[..])
     }
 }
 
+// ------------------------------------------------------------ batch scan
+
+/// One coordinator dispatch round as a single frame: every query of the
+/// batch, each with its own request id (replies are matched by id).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchScanRequest {
+    pub items: Vec<ScanRequest>,
+}
+
+impl BatchScanRequest {
+    pub fn encode(&self) -> Frame {
+        let total: usize = self.items.iter().map(ScanRequest::body_len).sum();
+        let mut p = Vec::with_capacity(4 + total);
+        p.write_u32::<LE>(self.items.len() as u32).unwrap();
+        for it in &self.items {
+            it.write_body(&mut p);
+        }
+        Frame { kind: Kind::BatchScanRequest, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<BatchScanRequest> {
+        if f.kind != Kind::BatchScanRequest {
+            bail!("not a batch scan request");
+        }
+        let mut r = &f.payload[..];
+        let n = read_count(&mut r, 20)?;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            items.push(ScanRequest::read_body(&mut r)?);
+        }
+        Ok(BatchScanRequest { items })
+    }
+}
+
+/// Per-query local top-Ks for one [`BatchScanRequest`], in request order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchScanResponse {
+    pub node_id: u32,
+    pub items: Vec<ScanResponse>,
+}
+
+impl BatchScanResponse {
+    pub fn encode(&self) -> Frame {
+        let total: usize = self.items.iter().map(ScanResponse::body_len).sum();
+        let mut p = Vec::with_capacity(8 + total);
+        p.write_u32::<LE>(self.node_id).unwrap();
+        p.write_u32::<LE>(self.items.len() as u32).unwrap();
+        for it in &self.items {
+            it.write_body(&mut p);
+        }
+        Frame { kind: Kind::BatchScanResponse, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<BatchScanResponse> {
+        if f.kind != Kind::BatchScanResponse {
+            bail!("not a batch scan response");
+        }
+        let mut r = &f.payload[..];
+        let node_id = r.read_u32::<LE>()?;
+        let n = read_count(&mut r, 40)?;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            items.push(ScanResponse::read_body(&mut r)?);
+        }
+        Ok(BatchScanResponse { node_id, items })
+    }
+}
+
+// --------------------------------------------------------------- retrieve
+
 /// GPU-side retrieval request: the raw query vector plus the list ids the
 /// colocated index scan selected (the coordinator "records the
-/// association between queries and GPU IDs", Sec 3 step 3/4).
+/// association between queries and GPU IDs", Sec 3 step 3/4). `query_id`
+/// is the per-connection request id replies are routed by — the
+/// concurrent coordinator answers a connection's requests in FIFO order,
+/// and pipelined clients re-match responses on it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RetrieveRequest {
     pub query_id: u64,
@@ -182,7 +373,8 @@ pub struct RetrieveRequest {
 
 impl RetrieveRequest {
     pub fn encode(&self) -> Frame {
-        let mut p = Vec::new();
+        let mut p =
+            Vec::with_capacity(28 + 4 * self.query.len() + 4 * self.lists.len());
         p.write_u64::<LE>(self.query_id).unwrap();
         p.write_u32::<LE>(self.gpu_id).unwrap();
         p.write_u32::<LE>(self.k).unwrap();
@@ -209,14 +401,8 @@ impl RetrieveRequest {
         let want_chunks = r.read_u32::<LE>()? != 0;
         let qn = r.read_u32::<LE>()? as usize;
         let ln = r.read_u32::<LE>()? as usize;
-        let mut query = Vec::with_capacity(qn);
-        for _ in 0..qn {
-            query.push(r.read_f32::<LE>()?);
-        }
-        let mut lists = Vec::with_capacity(ln);
-        for _ in 0..ln {
-            lists.push(r.read_u32::<LE>()?);
-        }
+        let query = read_f32s(&mut r, qn)?;
+        let lists = read_u32s(&mut r, ln)?;
         Ok(RetrieveRequest { query_id, gpu_id, query, lists, k, want_chunks })
     }
 }
@@ -233,7 +419,8 @@ pub struct RetrieveResponse {
 
 impl RetrieveResponse {
     pub fn encode(&self) -> Frame {
-        let mut p = Vec::new();
+        let mut p =
+            Vec::with_capacity(16 + 4 * self.tokens.len() + 4 * self.dists.len());
         p.write_u64::<LE>(self.query_id).unwrap();
         p.write_u32::<LE>(self.tokens.len() as u32).unwrap();
         p.write_u32::<LE>(self.dists.len() as u32).unwrap();
@@ -254,14 +441,8 @@ impl RetrieveResponse {
         let query_id = r.read_u64::<LE>()?;
         let tn = r.read_u32::<LE>()? as usize;
         let dn = r.read_u32::<LE>()? as usize;
-        let mut tokens = Vec::with_capacity(tn);
-        for _ in 0..tn {
-            tokens.push(r.read_u32::<LE>()?);
-        }
-        let mut dists = Vec::with_capacity(dn);
-        for _ in 0..dn {
-            dists.push(r.read_f32::<LE>()?);
-        }
+        let tokens = read_u32s(&mut r, tn)?;
+        let dists = read_f32s(&mut r, dn)?;
         Ok(RetrieveResponse { query_id, tokens, dists })
     }
 }
@@ -269,6 +450,74 @@ impl RetrieveResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sample_scan_request() -> ScanRequest {
+        ScanRequest {
+            query_id: 42,
+            query: vec![1.0, -2.5, 3.25],
+            lists: vec![7, 9, 11],
+            k: 10,
+        }
+    }
+
+    fn sample_scan_response(qid: u64) -> ScanResponse {
+        ScanResponse {
+            query_id: qid,
+            node_id: 3,
+            dists: vec![0.5, 1.5],
+            ids: vec![100, 200],
+            modeled_s: 1.25e-3,
+            measured_s: 0.75e-3,
+            n_scanned: 1234,
+        }
+    }
+
+    /// Frame-layer round trip through write_to/read_from.
+    fn roundtrip(f: Frame) -> Frame {
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        Frame::read_from(&mut &buf[..]).unwrap()
+    }
+
+    #[test]
+    fn every_kind_roundtrips_through_the_frame_layer() {
+        let frames = vec![
+            sample_scan_request().encode(),
+            sample_scan_response(1).encode(),
+            Frame { kind: Kind::Shutdown, payload: vec![] },
+            RetrieveRequest {
+                query_id: 5,
+                gpu_id: 2,
+                query: vec![0.5, -1.0],
+                lists: vec![3, 1],
+                k: 10,
+                want_chunks: true,
+            }
+            .encode(),
+            RetrieveResponse { query_id: 5, tokens: vec![10, 20], dists: vec![0.1, 0.2] }
+                .encode(),
+            Hello { node_id: 2, m: 16, nlist: 77 }.encode(),
+            BatchScanRequest {
+                items: vec![sample_scan_request(), ScanRequest {
+                    query_id: 43,
+                    query: vec![0.0; 4],
+                    lists: vec![],
+                    k: 5,
+                }],
+            }
+            .encode(),
+            BatchScanResponse {
+                node_id: 1,
+                items: vec![sample_scan_response(42), sample_scan_response(43)],
+            }
+            .encode(),
+        ];
+        for f in frames {
+            let back = roundtrip(f.clone());
+            assert_eq!(back.kind, f.kind);
+            assert_eq!(back.payload, f.payload);
+        }
+    }
 
     #[test]
     fn retrieve_request_roundtrip() {
@@ -280,9 +529,7 @@ mod tests {
             k: 10,
             want_chunks: true,
         };
-        let mut buf = Vec::new();
-        req.encode().write_to(&mut buf).unwrap();
-        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        let back = roundtrip(req.encode());
         assert_eq!(RetrieveRequest::decode(&back).unwrap(), req);
     }
 
@@ -293,46 +540,57 @@ mod tests {
             tokens: vec![10, 20, 30],
             dists: vec![0.1, 0.2, 0.3],
         };
-        let mut buf = Vec::new();
-        resp.encode().write_to(&mut buf).unwrap();
-        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        let back = roundtrip(resp.encode());
         assert_eq!(RetrieveResponse::decode(&back).unwrap(), resp);
     }
 
     #[test]
     fn request_roundtrip() {
-        let req = ScanRequest {
-            query_id: 42,
-            query: vec![1.0, -2.5, 3.25],
-            lists: vec![7, 9, 11],
-            k: 10,
-        };
-        let frame = req.encode();
-        let mut buf = Vec::new();
-        frame.write_to(&mut buf).unwrap();
-        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        let req = sample_scan_request();
+        let back = roundtrip(req.encode());
         assert_eq!(ScanRequest::decode(&back).unwrap(), req);
     }
 
     #[test]
     fn response_roundtrip() {
-        let resp = ScanResponse {
-            query_id: 1,
-            node_id: 3,
-            dists: vec![0.5, 1.5],
-            ids: vec![100, 200],
-            modeled_s: 1.25e-3,
-        };
-        let frame = resp.encode();
-        let mut buf = Vec::new();
-        frame.write_to(&mut buf).unwrap();
-        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        let resp = sample_scan_response(1);
+        let back = roundtrip(resp.encode());
         assert_eq!(ScanResponse::decode(&back).unwrap(), resp);
     }
 
     #[test]
+    fn hello_roundtrip() {
+        let h = Hello { node_id: 7, m: 32, nlist: 141 };
+        let back = roundtrip(h.encode());
+        assert_eq!(Hello::decode(&back).unwrap(), h);
+    }
+
+    #[test]
+    fn batch_scan_roundtrip() {
+        let req = BatchScanRequest {
+            items: (0..3)
+                .map(|i| ScanRequest {
+                    query_id: i,
+                    query: vec![i as f32; 4],
+                    lists: vec![i as u32],
+                    k: 10,
+                })
+                .collect(),
+        };
+        let back = roundtrip(req.encode());
+        assert_eq!(BatchScanRequest::decode(&back).unwrap(), req);
+
+        let resp = BatchScanResponse {
+            node_id: 2,
+            items: (0..3).map(|i| sample_scan_response(i)).collect(),
+        };
+        let back = roundtrip(resp.encode());
+        assert_eq!(BatchScanResponse::decode(&back).unwrap(), resp);
+    }
+
+    #[test]
     fn rejects_bad_magic() {
-        let mut buf = vec![0u8; 16];
+        let buf = vec![0u8; 16];
         assert!(Frame::read_from(&mut &buf[..]).is_err());
     }
 
@@ -345,10 +603,72 @@ mod tests {
 
     #[test]
     fn shutdown_frame_roundtrip() {
-        let f = Frame { kind: Kind::Shutdown, payload: vec![] };
-        let mut buf = Vec::new();
-        f.write_to(&mut buf).unwrap();
-        let back = Frame::read_from(&mut &buf[..]).unwrap();
+        let back = roundtrip(Frame { kind: Kind::Shutdown, payload: vec![] });
         assert_eq!(back.kind, Kind::Shutdown);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut buf = Vec::new();
+        sample_scan_request().encode().write_to(&mut buf).unwrap();
+        // Every strict prefix must fail at the frame layer, not panic.
+        for cut in [0, 3, 8, 15, 16, buf.len() - 1] {
+            assert!(Frame::read_from(&mut &buf[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn truncated_payload_decode_errors() {
+        let full = sample_scan_response(9).encode();
+        for cut in 0..full.payload.len() {
+            let f = Frame { kind: full.kind, payload: full.payload[..cut].to_vec() };
+            assert!(ScanResponse::decode(&f).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn garbage_counts_error_without_allocating() {
+        // A frame claiming u32::MAX queries must be rejected up front (a
+        // naive Vec::with_capacity would try to reserve gigabytes).
+        let mut p = Vec::new();
+        p.write_u64::<LE>(1).unwrap(); // query_id
+        p.write_u32::<LE>(10).unwrap(); // k
+        p.write_u32::<LE>(u32::MAX).unwrap(); // qn: absurd
+        p.write_u32::<LE>(0).unwrap(); // ln
+        let f = Frame { kind: Kind::ScanRequest, payload: p };
+        assert!(ScanRequest::decode(&f).is_err());
+
+        let mut p = Vec::new();
+        p.write_u32::<LE>(0).unwrap(); // node_id
+        p.write_u32::<LE>(u32::MAX).unwrap(); // item count: absurd
+        let f = Frame { kind: Kind::BatchScanResponse, payload: p };
+        assert!(BatchScanResponse::decode(&f).is_err());
+    }
+
+    #[test]
+    fn garbage_bytes_decode_errors() {
+        // Arbitrary bytes under a valid kind: decode must return Err (any
+        // error is fine) rather than panicking.
+        let junk: Vec<u8> = (0..64u32).map(|i| (i * 37 + 11) as u8).collect();
+        for kind in [
+            Kind::ScanRequest,
+            Kind::ScanResponse,
+            Kind::RetrieveRequest,
+            Kind::RetrieveResponse,
+            Kind::BatchScanRequest,
+            Kind::BatchScanResponse,
+        ] {
+            let f = Frame { kind, payload: junk.clone() };
+            let failed = match kind {
+                Kind::ScanRequest => ScanRequest::decode(&f).is_err(),
+                Kind::ScanResponse => ScanResponse::decode(&f).is_err(),
+                Kind::RetrieveRequest => RetrieveRequest::decode(&f).is_err(),
+                Kind::RetrieveResponse => RetrieveResponse::decode(&f).is_err(),
+                Kind::BatchScanRequest => BatchScanRequest::decode(&f).is_err(),
+                Kind::BatchScanResponse => BatchScanResponse::decode(&f).is_err(),
+                _ => unreachable!(),
+            };
+            assert!(failed, "{kind:?} accepted garbage");
+        }
     }
 }

@@ -2,6 +2,13 @@
 //! [`MemoryNode`], and replies with the local top-K (the software shape of
 //! the paper's FPGA node with its hardware TCP/IP stack).
 //!
+//! Each accepted connection starts with a [`Hello`] handshake (node id +
+//! PQ geometry), then serves [`ScanRequest`] and [`BatchScanRequest`]
+//! frames. Scans execute through the same [`ScanBackend`] round path the
+//! in-process dispatcher uses, so local and networked nodes run identical
+//! code — a batch frame is one round of jobs, scanned node-major and
+//! answered in one response frame.
+//!
 //! PJRT handles are not `Send` (the xla crate wraps `Rc` internals), so
 //! the node is *built inside* the server thread via a builder closure and
 //! connections are served sequentially on that thread — matching the
@@ -15,7 +22,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::protocol::{Frame, Kind, ScanRequest, ScanResponse};
+use super::protocol::{
+    BatchScanRequest, BatchScanResponse, Frame, Hello, Kind, ScanRequest, ScanResponse,
+};
+use crate::chamvs::backend::{ScanBackend, ScanJob};
 use crate::chamvs::dispatcher::build_lut_from_raw;
 use crate::chamvs::node::MemoryNode;
 
@@ -60,6 +70,13 @@ impl NodeServer {
         Ok(NodeServer { addr, stop, handle: Some(handle) })
     }
 
+    /// Whether the server has been asked to stop (set by
+    /// [`shutdown`](Self::shutdown) or by a client Shutdown frame) — lets
+    /// the `chamvs-node` binary exit instead of parking forever.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
     /// Request shutdown (any in-flight connection finishes its frame).
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
@@ -89,6 +106,14 @@ fn serve_conn(
     // a client connection sits idle.
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
+    // Handshake: the client learns this node's identity and PQ geometry.
+    Hello {
+        node_id: node.shard.node_id as u32,
+        m: node.shard.m as u32,
+        nlist: node.shard.list_codes.len() as u32,
+    }
+    .encode()
+    .write_to(&mut writer)?;
     let mut reader = BufReader::new(stream);
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -116,25 +141,61 @@ fn serve_conn(
             }
             Kind::ScanRequest => {
                 let req = ScanRequest::decode(&frame)?;
-                let m = node.shard.m;
-                let dsub = req.query.len() / m;
-                // Defensive: drop list ids outside this shard (a buggy or
-                // malicious coordinator must not kill the node).
-                let nlist = node.shard.list_codes.len() as u32;
-                let lists: Vec<u32> =
-                    req.lists.iter().copied().filter(|&l| l < nlist).collect();
-                let lut = build_lut_from_raw(codebook, &req.query, m, dsub);
-                let r = node.scan(&lut, &req.query, codebook, &lists, nprobe)?;
-                let resp = ScanResponse {
-                    query_id: req.query_id,
-                    node_id: node.shard.node_id as u32,
-                    dists: r.topk.iter().map(|&(d, _)| d).collect(),
-                    ids: r.topk.iter().map(|&(_, i)| i).collect(),
-                    modeled_s: r.modeled_s,
-                };
-                resp.encode().write_to(&mut writer)?;
+                let mut resp = scan_round(node, codebook, nprobe, &[req])?;
+                resp.pop().expect("one response").encode().write_to(&mut writer)?;
+            }
+            Kind::BatchScanRequest => {
+                let req = BatchScanRequest::decode(&frame)?;
+                let items = scan_round(node, codebook, nprobe, &req.items)?;
+                BatchScanResponse { node_id: node.shard.node_id as u32, items }
+                    .encode()
+                    .write_to(&mut writer)?;
             }
             other => anyhow::bail!("unexpected frame {other:?} at memory node"),
         }
     }
+}
+
+/// Execute one round of scan requests through the node's [`ScanBackend`]
+/// path — the same code the in-process dispatcher runs, so networked and
+/// local dispatch stay behaviorally identical.
+fn scan_round(
+    node: &mut MemoryNode,
+    codebook: &[f32],
+    nprobe: usize,
+    reqs: &[ScanRequest],
+) -> Result<Vec<ScanResponse>> {
+    let m = node.shard.m;
+    let nlist = node.shard.list_codes.len() as u32;
+    // Defensive: drop list ids outside this shard (a buggy or malicious
+    // coordinator must not kill the node).
+    let filtered: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| r.lists.iter().copied().filter(|&l| l < nlist).collect())
+        .collect();
+    let mut jobs = Vec::with_capacity(reqs.len());
+    for (r, lists) in reqs.iter().zip(&filtered) {
+        anyhow::ensure!(r.query.len() % m == 0, "query dim not divisible by m");
+        let dsub = r.query.len() / m;
+        jobs.push(ScanJob {
+            query: &r.query,
+            lists,
+            lut: build_lut_from_raw(codebook, &r.query, m, dsub),
+            nprobe,
+        });
+    }
+    let results = node.scan_jobs(&jobs, codebook)?;
+    Ok(reqs
+        .iter()
+        .zip(results)
+        .map(|(r, nr)| ScanResponse {
+            query_id: r.query_id,
+            node_id: node.shard.node_id as u32,
+            dists: nr.topk.iter().map(|&(d, _)| d).collect(),
+            ids: nr.topk.iter().map(|&(_, i)| i).collect(),
+            modeled_s: nr.modeled_s,
+            measured_s: nr.measured_s,
+            n_scanned: nr.n_scanned as u64,
+        })
+        .collect())
 }

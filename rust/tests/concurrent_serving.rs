@@ -1,0 +1,164 @@
+//! Integration tests for the concurrent coordinator serving core: N
+//! concurrent GPU clients against one coordinator must get results
+//! bit-identical to sequential in-process serving, with cross-connection
+//! dynamic batching actually observed (at least one dispatched batch of
+//! size >= 2), FIFO reply order per connection, and speculation-slot
+//! teardown when a connection departs.
+
+use std::time::Duration;
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::batcher::BatchPolicy;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorClient, CoordinatorServer, ServeMode};
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::net::protocol::RetrieveResponse;
+
+const CLIENTS: usize = 4;
+const PER_CLIENT: usize = 4;
+
+fn build_retriever(seed: u64) -> Retriever {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, 2000, 32, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 32, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..2)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 2), ScanEngine::Native, 10))
+        .collect();
+    let corpus = Corpus::generate(2000, 2048, config::CHUNK_LEN, seed ^ 2);
+    Retriever::new(ds, index, Dispatcher::new(nodes, 10), corpus)
+}
+
+fn queries(seed: u64) -> SyntheticDataset {
+    SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        2000,
+        32,
+        seed,
+    )
+}
+
+#[test]
+fn concurrent_clients_match_sequential_and_batches_form() {
+    let policy = BatchPolicy {
+        max_batch: CLIENTS,
+        // Generous window: the test must observe batching even on a
+        // loaded CI box, and pipelined windows fill it immediately.
+        max_wait: Duration::from_millis(50),
+    };
+    let mut server =
+        CoordinatorServer::spawn(|| build_retriever(21), ServeMode::Concurrent(policy))
+            .unwrap();
+    let addr = server.addr;
+    let stats = server.stats();
+    let ds = queries(21);
+
+    // Reference: the identical retrieval stack, served sequentially
+    // in-process — the concurrent server must be bit-identical.
+    let mut local = build_retriever(21);
+    let mut want: Vec<Vec<(Vec<u32>, Vec<f32>)>> = Vec::new(); // [client][query]
+    for c in 0..CLIENTS {
+        let mut per_client = Vec::new();
+        for i in 0..PER_CLIENT {
+            let q = ds.query(c * PER_CLIENT + i);
+            let r = local.retrieve(q).unwrap();
+            per_client.push((local.gather_next_tokens(&r.ids), r.dists));
+        }
+        want.push(per_client);
+    }
+
+    // N concurrent clients, each pipelining its whole window: replies are
+    // FIFO per connection and the shared batcher sees real batches.
+    let got: Vec<(usize, Vec<RetrieveResponse>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let ds = &ds;
+                s.spawn(move || {
+                    let mut client =
+                        CoordinatorClient::connect(addr, c as u32).unwrap();
+                    let window: Vec<&[f32]> = (0..PER_CLIENT)
+                        .map(|i| ds.query(c * PER_CLIENT + i))
+                        .collect();
+                    let resp =
+                        client.retrieve_pipelined(&window, 10, false).unwrap();
+                    (c, resp)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (c, resps) in got {
+        assert_eq!(resps.len(), PER_CLIENT, "client {c}");
+        for (i, r) in resps.iter().enumerate() {
+            let (want_tokens, want_dists) = &want[c][i];
+            assert_eq!(&r.tokens, want_tokens, "client {c} query {i} tokens");
+            assert_eq!(&r.dists, want_dists, "client {c} query {i} dists");
+        }
+    }
+    assert_eq!(stats.requests(), (CLIENTS * PER_CLIENT) as u64);
+    assert!(
+        stats.max_batch() >= 2,
+        "batching not observed: max dispatched batch {}",
+        stats.max_batch()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn sequential_mode_still_serves_and_never_batches() {
+    let mut server = CoordinatorServer::spawn_sequential(|| build_retriever(33)).unwrap();
+    let ds = queries(33);
+    let mut local = build_retriever(33);
+    for gpu in 0..2u32 {
+        let mut client = CoordinatorClient::connect(server.addr, gpu).unwrap();
+        let q = ds.query(gpu as usize);
+        let want = local.retrieve(q).unwrap();
+        let want_tokens = local.gather_next_tokens(&want.ids);
+        let resp = client.retrieve(q, &[], 10, false).unwrap();
+        assert_eq!(resp.tokens, want_tokens, "gpu {gpu}");
+        assert_eq!(resp.dists, want.dists, "gpu {gpu}");
+        drop(client);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests(), 2);
+    assert_eq!(stats.max_batch(), 1, "sequential mode must not batch");
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_triggers_speculation_slot_teardown() {
+    use chameleon::retcache::SpecConfig;
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) };
+    let mut server = CoordinatorServer::spawn(
+        || {
+            let mut r = build_retriever(44);
+            r.enable_speculation(SpecConfig::default());
+            r
+        },
+        ServeMode::Concurrent(policy),
+    )
+    .unwrap();
+    let stats = server.stats();
+    let ds = queries(44);
+    {
+        let mut client = CoordinatorClient::connect(server.addr, 3).unwrap();
+        // Misses issue speculative prefetches on this connection's slot.
+        client.retrieve(ds.query(0), &[], 10, false).unwrap();
+        client.retrieve(ds.query(1), &[], 10, false).unwrap();
+    } // dropped: the reader exits and queues the teardown
+    let t0 = std::time::Instant::now();
+    while stats.teardowns() == 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        stats.teardowns() >= 1,
+        "connection teardown (slot cancellation) never processed"
+    );
+    server.shutdown();
+}

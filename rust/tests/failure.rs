@@ -36,11 +36,12 @@ fn client_errors_when_node_dies_mid_query() {
     // Healthy query first.
     let q = data.query(0);
     let lists = index.probe(q, 8);
-    let (topk, _) = client.search(0, q, &lists).unwrap();
-    assert_eq!(topk.len(), 10);
+    let r = client.search(q, &lists).unwrap();
+    assert_eq!(r.topk.len(), 10);
+    assert!(r.measured_wall_s > 0.0, "node-side wall must be carried over the wire");
     // Kill the node, then query again: must be an Err, not a hang/panic.
     server.shutdown();
-    let res = client.search(1, q, &lists);
+    let res = client.search(q, &lists);
     assert!(res.is_err(), "expected error after node death");
 }
 
@@ -56,8 +57,8 @@ fn server_survives_garbage_bytes() {
     let mut client = NodeClient::connect(&[server.addr], 10).unwrap();
     let q = data.query(1);
     let lists = index.probe(q, 8);
-    let (topk, _) = client.search(7, q, &lists).unwrap();
-    assert_eq!(topk.len(), 10);
+    let r = client.search(q, &lists).unwrap();
+    assert_eq!(r.topk.len(), 10);
     client.shutdown_nodes();
 }
 
@@ -76,23 +77,29 @@ fn server_rejects_oversized_frame_gracefully() {
     let mut client = NodeClient::connect(&[server.addr], 10).unwrap();
     // Empty probe list: node returns empty topk, not an error.
     let req_q = vec![0.0f32; 128];
-    let (topk, _) = client.search(9, &req_q, &[]).unwrap();
-    assert!(topk.is_empty());
+    let r = client.search(&req_q, &[]).unwrap();
+    assert!(r.topk.is_empty());
     client.shutdown_nodes();
 }
 
 #[test]
 fn scan_request_with_out_of_range_list_is_filtered() {
     let (server, _index, data) = spawn_node(4);
-    let mut s = TcpStream::connect(server.addr).unwrap();
+    let s = TcpStream::connect(server.addr).unwrap();
+    let mut writer = s.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(s);
+    // The node greets each connection with its identity + PQ geometry.
+    let hello = Frame::read_from(&mut reader).unwrap();
+    let hello = chameleon::net::protocol::Hello::decode(&hello).unwrap();
+    assert!(hello.m > 0);
+    assert!(hello.nlist > 0);
     let req = ScanRequest {
         query_id: 1,
         query: data.query(0).to_vec(),
         lists: vec![10_000], // out of range: node must filter, not die
         k: 10,
     };
-    req.encode().write_to(&mut s).unwrap();
-    let mut reader = std::io::BufReader::new(s);
+    req.encode().write_to(&mut writer).unwrap();
     let resp = Frame::read_from(&mut reader).unwrap();
     assert_eq!(resp.kind, Kind::ScanResponse);
     let resp = chameleon::net::protocol::ScanResponse::decode(&resp).unwrap();

@@ -274,12 +274,30 @@ fn networked_nodes_match_local_dispatcher() {
     for qi in 0..3 {
         let q = data.query(qi);
         let lists = index.probe(q, ds.nprobe);
-        let (got, _) = client.search(qi as u64, q, &lists).unwrap();
+        let got = client.search(q, &lists).unwrap().topk;
         let (_, want_d) = index.search(q, ds.nprobe, 10);
         assert_eq!(got.len(), 10);
         for (g, w) in got.iter().zip(&want_d) {
             assert!((g.0 - w).abs() < 1e-4, "query {qi}: {} vs {w}", g.0);
         }
+    }
+
+    // Batched round over the same connections: one BatchScanRequest per
+    // node carries all queries; results must equal the single-query path.
+    let queries: Vec<&[f32]> = (0..3).map(|qi| data.query(qi)).collect();
+    let lists: Vec<Vec<u32>> =
+        queries.iter().map(|q| index.probe(q, ds.nprobe)).collect();
+    let batch: Vec<chameleon::chamvs::dispatcher::BatchQuery> = queries
+        .iter()
+        .zip(&lists)
+        .map(|(q, l)| chameleon::chamvs::dispatcher::BatchQuery { query: q, lists: l })
+        .collect();
+    let rs = client.search_batch(&batch).unwrap();
+    assert_eq!(rs.len(), 3);
+    for (qi, r) in rs.iter().enumerate() {
+        let single = client.search(queries[qi], &lists[qi]).unwrap();
+        assert_eq!(r.topk, single.topk, "batched vs single, query {qi}");
+        assert!(r.measured_wall_s > 0.0, "remote wall must be non-zero");
     }
     client.shutdown_nodes();
     let _ = codebook;
