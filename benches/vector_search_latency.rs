@@ -1,42 +1,268 @@
 //! Bench: Fig 9 — vector search latency for the four system
 //! configurations across datasets and batch sizes, plus the *measured*
 //! hot-path costs on this host (native ADC scan, LUT build, end-to-end
-//! dispatcher search).
+//! dispatcher search) and the zero-copy scan-pipeline A/B
+//! (EXPERIMENTS.md §Perf).
+//!
+//! The scan-pipeline part asserts the acceptance bars of the gather-free
+//! rework — the fused path must beat the legacy copy-then-scan pipeline
+//! by >= 1.3x per query, and the list-major batched round must beat the
+//! query-major round by >= 1.5x at B=8, bit-identical to the flat-scan
+//! reference in exact mode — and emits machine-readable `BENCH_scan.json`
+//! so the perf trajectory is tracked across PRs (CI uploads it).
 //!
 //! Run: `cargo bench --bench vector_search_latency`
+//! Quick CI profile: `CHAM_BENCH_QUICK=1 cargo bench --bench vector_search_latency`
+
+use std::collections::BTreeMap;
 
 use chameleon::chamvs::backend::{BackendKind, SearchBackend};
 use chameleon::chamvs::dispatcher::Dispatcher;
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::chamvs::{ScanBackend, ScanJob};
 use chameleon::config::DATASETS;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
-use chameleon::pq::scan::{adc_scan_into, build_lut};
+use chameleon::kselect::{ApproxHierarchicalQueue, HierarchicalConfig, SelectMode};
+use chameleon::pq::scan::{adc_scan, adc_scan_into, build_lut};
+use chameleon::util::json::{obj, Json};
 use chameleon::util::rng::Rng;
 use chameleon::util::timer::Bench;
 
+/// The seed pipeline, reconstructed for the A/B: gather-copy every probed
+/// list into fresh buffers, scan into a materialized distance vector,
+/// push every distance through the (approximate) hierarchical queue.
+fn legacy_copy_then_scan(
+    shard: &Shard,
+    lut: &[f32],
+    lists: &[u32],
+    kcfg: HierarchicalConfig,
+) -> Vec<(f32, u64)> {
+    let total = shard.scan_count(lists);
+    let mut codes = Vec::with_capacity(total * shard.m);
+    let mut ids = Vec::with_capacity(total);
+    for &l in lists {
+        codes.extend_from_slice(shard.list_codes(l as usize));
+        ids.extend_from_slice(shard.list_ids(l as usize));
+    }
+    let mut scratch = vec![0.0f32; total];
+    adc_scan_into(&codes, total, shard.m, lut, &mut scratch);
+    let mut q = ApproxHierarchicalQueue::new(kcfg);
+    for (i, &d) in scratch.iter().enumerate() {
+        q.push(d, i as u64);
+    }
+    q.finalize()
+        .into_iter()
+        .map(|(d, local)| (d, ids[local as usize]))
+        .collect()
+}
+
+/// Flat-scan reference for the bit-identity check.
+fn flat_reference(index: &IvfPqIndex, lut: &[f32], lists: &[u32], k: usize) -> Vec<(f32, u64)> {
+    let mut all: Vec<(f32, u64)> = Vec::new();
+    for &l in lists {
+        let ids = &index.list_ids[l as usize];
+        let ds = adc_scan(&index.list_codes[l as usize], ids.len(), index.m, lut);
+        for (i, &d) in ds.iter().enumerate() {
+            all.push((d, ids[i]));
+        }
+    }
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    all.truncate(k);
+    all
+}
+
+/// The zero-copy scan-pipeline A/B: gather-free fused vs legacy
+/// copy-then-scan (single query), list-major vs query-major round (B=8),
+/// and the selector ablation. Returns the §Perf JSON block plus the two
+/// acceptance speedups — asserted by `main` *after* `BENCH_scan.json` is
+/// written, so a failing bar still leaves the record for diagnosis.
+fn scan_pipeline_ab(quick: bool) -> (Json, f64, f64) {
+    let ds = &chameleon::config::SIFT;
+    let n = if quick { 8_000 } else { 20_000 };
+    let nlist = ((n as f64).sqrt() as usize).max(16);
+    let data = SyntheticDataset::generate_sized(ds, n, 64, 3);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, 5);
+    let k = 100;
+    let (warmup, iters) = if quick { (2, 8) } else { (3, 20) };
+
+    let shard = Shard::carve(&index, 0, 1);
+    let mut node = MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, k);
+    let legacy_kcfg = node.kcfg; // the seed's default approximate queue
+    let queries: Vec<Vec<f32>> = (0..data.n_queries)
+        .map(|i| data.query(i).to_vec())
+        .collect();
+    let lists: Vec<Vec<u32>> =
+        queries.iter().map(|q| index.probe(q, ds.nprobe)).collect();
+    let luts: Vec<Vec<f32>> = queries.iter().map(|q| build_lut(&index.pq, q)).collect();
+
+    // Bit-identity: the fused exact path must reproduce the flat-scan
+    // reference, distance bits and (single-node) ids.
+    for qi in 0..3 {
+        let r = node
+            .scan(&luts[qi], &queries[qi], &index.pq.centroids, &lists[qi], ds.nprobe)
+            .unwrap();
+        let want = flat_reference(&index, &luts[qi], &lists[qi], k);
+        assert_eq!(r.topk.len(), want.len());
+        for (g, w) in r.topk.iter().zip(&want) {
+            assert_eq!(g.0.to_bits(), w.0.to_bits(), "fused path diverged");
+            assert_eq!(g.1, w.1, "fused path id order diverged");
+        }
+    }
+
+    let mut bench = Bench::new("scan_pipeline_ab");
+    let nq = queries.len();
+
+    // A: legacy copy-then-scan (gather + scratch + hierarchical queue).
+    let mut qi = 0usize;
+    let legacy = bench.case_n("legacy_copy_then_scan", warmup, iters, || {
+        qi = (qi + 1) % nq;
+        legacy_copy_then_scan(&shard, &luts[qi], &lists[qi], legacy_kcfg)
+    });
+
+    // B: gather-free fused scan+select (the serving default).
+    let mut qi = 0usize;
+    let fused = bench.case_n("fused_gather_free", warmup, iters, || {
+        qi = (qi + 1) % nq;
+        node.scan(&luts[qi], &queries[qi], &index.pq.centroids, &lists[qi], ds.nprobe)
+            .unwrap()
+            .topk
+    });
+    let single_speedup = legacy.p50 / fused.p50;
+    println!("    -> fused vs legacy speedup: {single_speedup:.2}x (bar: 1.3x)");
+
+    // Batched round, B=8: query-major (the seed behavior — one legacy
+    // pipeline per query) vs the list-major fused round.
+    let b = 8usize;
+    let qmajor = bench.case_n("batch8_query_major_legacy", warmup, iters, || {
+        let mut out = 0usize;
+        for j in 0..b {
+            out += legacy_copy_then_scan(&shard, &luts[j], &lists[j], legacy_kcfg).len();
+        }
+        out
+    });
+    let jobs: Vec<ScanJob> = (0..b)
+        .map(|j| ScanJob {
+            query: &queries[j],
+            lists: &lists[j],
+            lut: &luts[j],
+            nprobe: ds.nprobe,
+        })
+        .collect();
+    let lmajor = bench.case_n("batch8_list_major_fused", warmup, iters, || {
+        node.scan_jobs(&jobs, &index.pq.centroids).unwrap().len()
+    });
+    let batch_speedup = qmajor.p50 / lmajor.p50;
+    println!("    -> list-major batch speedup at B=8: {batch_speedup:.2}x (bar: 1.5x)");
+
+    // Selector ablation: same gather-free scan, hierarchical queue
+    // (hardware-fidelity path) vs the fused exact selector.
+    let mut hnode = MemoryNode::new(Shard::carve(&index, 0, 1), ScanEngine::Native, k);
+    hnode.select = SelectMode::Hierarchical;
+    let mut qi = 0usize;
+    let hier = bench.case_n("selector_hierarchical", warmup, iters, || {
+        qi = (qi + 1) % nq;
+        hnode
+            .scan(&luts[qi], &queries[qi], &index.pq.centroids, &lists[qi], ds.nprobe)
+            .unwrap()
+            .topk
+    });
+    let ablation = hier.p50 / fused.p50;
+    println!("    -> fused selector vs hierarchical queue: {ablation:.2}x");
+
+    let json = obj(vec![
+        ("n_codes_indexed", Json::Num(n as f64)),
+        ("k", Json::Num(k as f64)),
+        (
+            "fused_vs_legacy",
+            obj(vec![
+                ("legacy_p50_ms", Json::Num(legacy.p50 * 1e3)),
+                ("fused_p50_ms", Json::Num(fused.p50 * 1e3)),
+                ("speedup", Json::Num(single_speedup)),
+            ]),
+        ),
+        (
+            "batch8",
+            obj(vec![
+                ("query_major_p50_ms", Json::Num(qmajor.p50 * 1e3)),
+                ("list_major_p50_ms", Json::Num(lmajor.p50 * 1e3)),
+                ("speedup", Json::Num(batch_speedup)),
+            ]),
+        ),
+        (
+            "selector_ablation",
+            obj(vec![
+                ("hierarchical_p50_ms", Json::Num(hier.p50 * 1e3)),
+                ("fused_p50_ms", Json::Num(fused.p50 * 1e3)),
+                ("speedup", Json::Num(ablation)),
+            ]),
+        ),
+    ]);
+    (json, single_speedup, batch_speedup)
+}
+
 fn main() {
+    let quick = std::env::var("CHAM_BENCH_QUICK").is_ok();
+
     // Part 1: the paper-scale Fig 9 table (modeled; printed as report).
-    println!("{}", chameleon::report::fig9_search_latency(10_000, 64, 42));
+    if !quick {
+        println!("{}", chameleon::report::fig9_search_latency(10_000, 64, 42));
+    }
 
     // Part 2: measured host-side scan costs backing the model's shapes.
     let mut bench = Bench::new("measured_adc_scan");
     let mut rng = Rng::new(1);
+    let mut gb_per_s: BTreeMap<String, Json> = BTreeMap::new();
     for ds in DATASETS {
-        let n = 60_000; // ~codes per probed query at paper scale, sharded
+        // ~codes per probed query at paper scale, sharded.
+        let n = if quick { 20_000 } else { 60_000 };
         let codes: Vec<u8> = (0..n * ds.m).map(|_| rng.below(256) as u8).collect();
         let lut: Vec<f32> = (0..ds.m * 256).map(|_| rng.f32()).collect();
         let mut out = vec![0.0f32; n];
-        let s = bench.case(&format!("native_m{}_60k", ds.m), || {
+        let s = bench.case(&format!("native_m{}_{}k", ds.m, n / 1000), || {
             adc_scan_into(&codes, n, ds.m, &lut, &mut out);
             out[0]
         });
         let bytes = (n * ds.m) as f64;
+        let gbs = bytes / s.p50 / 1e9;
         println!(
-            "    -> {:.2} GB/s/core (paper calibration: ~1 GB/s/core SIMD)",
-            bytes / s.p50 / 1e9
+            "    -> {gbs:.2} GB/s/core (paper calibration: ~1 GB/s/core SIMD)"
         );
+        // Keyed by dataset AND m: SIFT and Deep share m=16 and must both
+        // stay visible in the tracked record.
+        gb_per_s.insert(format!("{}_m{}", ds.name, ds.m), Json::Num(gbs));
+    }
+
+    // Part 2b: the zero-copy scan-pipeline A/B.
+    let (ab, single_speedup, batch_speedup) = scan_pipeline_ab(quick);
+
+    // Machine-readable §Perf record for the cross-PR trajectory — written
+    // *before* the acceptance asserts so a failing bar still uploads the
+    // numbers that explain it.
+    let report = obj(vec![
+        ("bench", Json::Str("scan_pipeline".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("gb_per_s", Json::Obj(gb_per_s)),
+        ("scan_pipeline", ab),
+    ]);
+    std::fs::write("BENCH_scan.json", report.dump()).expect("writing BENCH_scan.json");
+    println!("\nwrote BENCH_scan.json");
+
+    // Acceptance bars (ISSUE 4).
+    assert!(
+        single_speedup >= 1.3,
+        "gather-free fused path must be >= 1.3x the legacy copy-then-scan \
+         wall per query, got {single_speedup:.2}x"
+    );
+    assert!(
+        batch_speedup >= 1.5,
+        "list-major batched round at B=8 must be >= 1.5x the query-major \
+         round's throughput, got {batch_speedup:.2}x"
+    );
+
+    if quick {
+        return;
     }
 
     // Part 3: end-to-end measured search through the dispatcher.

@@ -27,16 +27,17 @@ use crate::hwmodel::{CpuModel, GpuModel};
 use crate::ivf::index::IvfPqIndex;
 
 /// One scan job of a dispatch round: the query, its probed lists, and the
-/// per-query (m, 256) ADC table shared by every local node. `lut` is left
-/// empty when no backend in the round wants one (remote nodes build their
-/// own server-side; see [`ScanBackend::wants_lut`]).
+/// per-query (m, 256) ADC table shared by every local node. `lut` borrows
+/// a slice of the round's reusable LUT arena (zero per-job allocation)
+/// and is left empty when no backend in the round wants one (remote nodes
+/// build their own server-side; see [`ScanBackend::wants_lut`]).
 pub struct ScanJob<'a> {
     /// Full D-dim query vector.
     pub query: &'a [f32],
     /// Probed IVF list ids (from ChamVS.idx).
     pub lists: &'a [u32],
-    /// Prebuilt (m, 256) distance LUT, or empty (remote-only rounds).
-    pub lut: Vec<f32>,
+    /// Prebuilt (m, 256) distance LUT slice, or empty (remote-only rounds).
+    pub lut: &'a [f32],
     /// Probe width (drives the per-node FPGA latency model).
     pub nprobe: usize,
 }
@@ -176,7 +177,7 @@ impl SearchBackend {
         let result =
             self.dispatcher.search(query, &index.pq.centroids, &lists, nprobe)?;
         let _ = k;
-        let n_codes = self.project_n_codes(index, result.n_scanned);
+        let n_codes = self.project_n_codes(index, result.n_scanned as f64);
         let lat = self.latency_model(n_codes);
         Ok((result, lat))
     }
@@ -185,17 +186,18 @@ impl SearchBackend {
     /// scaled count is projected by *relative probe mass* (this query's
     /// scan size vs the scaled index's expected size, times the paper's
     /// expected size), preserving per-query variation across the scale
-    /// change; otherwise the raw count.
-    fn project_n_codes(&self, index: &IvfPqIndex, n_scanned: usize) -> usize {
+    /// change; otherwise the raw count. Takes f64 so batch means project
+    /// without integer truncation.
+    fn project_n_codes(&self, index: &IvfPqIndex, n_scanned: f64) -> usize {
         if self.paper_scale {
             let nprobe = self.ds.nprobe;
             let expected =
                 index.len() as f64 * nprobe as f64 / index.nlist as f64;
-            let rel = n_scanned as f64 / expected.max(1.0);
+            let rel = n_scanned / expected.max(1.0);
             (rel * self.ds.n_paper as f64 * nprobe as f64
                 / self.ds.nlist_paper as f64) as usize
         } else {
-            n_scanned
+            n_scanned.round() as usize
         }
     }
 
@@ -219,8 +221,10 @@ impl SearchBackend {
             .collect();
         let results =
             self.dispatcher.search_batch(&batch, &index.pq.centroids, nprobe)?;
-        let mean_scanned = results.iter().map(|r| r.n_scanned).sum::<usize>()
-            / results.len();
+        // Mean in f64: integer division truncated up to B-1 codes per
+        // query before the paper-scale projection amplified the error.
+        let mean_scanned = results.iter().map(|r| r.n_scanned).sum::<usize>() as f64
+            / results.len() as f64;
         let n_codes = self.project_n_codes(index, mean_scanned);
         let modeled = self.batch_latency_model(queries.len(), n_codes);
         Ok((results, modeled))

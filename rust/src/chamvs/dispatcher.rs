@@ -39,7 +39,8 @@ use anyhow::Result;
 use super::backend::{ScanBackend, ScanJob};
 use super::node::{MemoryNode, NodeResult};
 use crate::hwmodel::loggp::LogGp;
-use crate::pq::scan::build_lut;
+use crate::pq::codebook::KSUB;
+use crate::pq::scan::build_lut_raw_into;
 
 /// Aggregated search result for one query.
 #[derive(Clone, Debug)]
@@ -113,6 +114,9 @@ pub struct Dispatcher {
     pub n_threads: usize,
     next_ticket: u64,
     pending: Vec<PendingScan>,
+    /// Reusable per-round LUT arena: one (m, 256) table per job, built in
+    /// place each round (steady state allocates nothing).
+    lut_arena: Vec<f32>,
 }
 
 impl Dispatcher {
@@ -137,6 +141,7 @@ impl Dispatcher {
             n_threads: 0,
             next_ticket: 0,
             pending: Vec::new(),
+            lut_arena: Vec::new(),
         }
     }
 
@@ -221,9 +226,24 @@ impl Dispatcher {
         let need_lut = self.nodes.iter().any(|n| n.wants_lut());
         let threads = self.effective_threads();
 
+        // The query geometry a LUT-building round accepts: when this
+        // round builds ADC tables, the query must match the codebook's
+        // (m, dsub) exactly — checked here as an error, never as a panic
+        // inside the LUT kernel (mirrors net::server::scan_round). Rounds
+        // without local LUTs (remote-only) defer to the node server's own
+        // geometry check.
+        let lut_len = m * KSUB;
+        let dim_ok = |len: usize| {
+            if need_lut {
+                len == codebook.len() / lut_len * m && codebook.len() % lut_len == 0
+            } else {
+                len % m == 0
+            }
+        };
+
         // Snapshot queued speculative requests (owned copies) so the round
         // can run against `&mut self.nodes` and park results afterwards.
-        // A malformed ticket (query dim not divisible by m) is left
+        // A malformed ticket (query dim mismatching the geometry) is left
         // Queued rather than failing this round: the error then surfaces
         // at the owner's `poll` — which runs the ticket as a batch job
         // and hits the dim check below — not in innocent callers' rounds.
@@ -232,7 +252,7 @@ impl Dispatcher {
                 .iter()
                 .filter_map(|p| match &p.state {
                     PendingState::Queued { query, lists, nprobe }
-                        if query.len() % m == 0 =>
+                        if dim_ok(query.len()) =>
                     {
                         Some((p.id, query.clone(), lists.clone(), *nprobe))
                     }
@@ -243,44 +263,65 @@ impl Dispatcher {
             Vec::new()
         };
 
-        // Assemble the round's job list: the blocking batch first, then
-        // the queued speculative tickets.
-        let mut jobs: Vec<ScanJob> = Vec::with_capacity(batch.len() + spec.len());
+        // Validate blocking queries up front (a malformed query fails the
+        // round before any arena work).
         for q in batch {
-            anyhow::ensure!(q.query.len() % m == 0, "query dim not divisible by m");
-            let dsub = q.query.len() / m;
-            jobs.push(ScanJob {
-                query: q.query,
-                lists: q.lists,
-                lut: if need_lut {
-                    build_lut_from_raw(codebook, q.query, m, dsub)
-                } else {
-                    Vec::new()
-                },
-                nprobe,
-            });
+            anyhow::ensure!(
+                dim_ok(q.query.len()),
+                "query dim {} does not match the index geometry (m={m})",
+                q.query.len()
+            );
         }
-        for (_, query, lists, sp_nprobe) in &spec {
-            let dsub = query.len() / m;
-            jobs.push(ScanJob {
-                query,
-                lists,
-                lut: if need_lut {
-                    build_lut_from_raw(codebook, query, m, dsub)
-                } else {
-                    Vec::new()
-                },
-                nprobe: *sp_nprobe,
-            });
+
+        // Fill the reusable LUT arena: one (m, 256) table per job, built
+        // in place straight from the raw centroid tensor — no per-job
+        // allocation and no codebook copy.
+        let mut arena = std::mem::take(&mut self.lut_arena);
+        arena.clear();
+        if need_lut {
+            let queries = batch
+                .iter()
+                .map(|q| q.query)
+                .chain(spec.iter().map(|(_, q, ..)| q.as_slice()));
+            for query in queries {
+                let start = arena.len();
+                arena.resize(start + lut_len, 0.0);
+                build_lut_raw_into(codebook, query, m, query.len() / m, &mut arena[start..]);
+            }
+        }
+
+        // Assemble the round's job list: the blocking batch first, then
+        // the queued speculative tickets, each borrowing its arena slice.
+        let luts: Vec<&[f32]> = if need_lut {
+            arena.chunks_exact(lut_len).collect()
+        } else {
+            vec![&[] as &[f32]; batch.len() + spec.len()]
+        };
+        let mut jobs: Vec<ScanJob> = Vec::with_capacity(batch.len() + spec.len());
+        for (q, lut) in batch.iter().zip(luts.iter().copied()) {
+            jobs.push(ScanJob { query: q.query, lists: q.lists, lut, nprobe });
+        }
+        let spec_luts = luts[batch.len()..].iter().copied();
+        for ((_, query, lists, sp_nprobe), lut) in spec.iter().zip(spec_luts) {
+            jobs.push(ScanJob { query, lists, lut, nprobe: *sp_nprobe });
         }
 
         let chunks = chunk_sizes(self.nodes.len(), threads);
-        let per_job = run_jobs(&mut self.nodes, &chunks, &jobs, codebook)?;
+        let round = run_jobs(&mut self.nodes, &chunks, &jobs, codebook);
+        let per_job = match round {
+            Ok(r) => r,
+            Err(e) => {
+                drop(jobs);
+                self.lut_arena = arena;
+                return Err(e);
+            }
+        };
         let mut results: Vec<SearchResult> = Vec::with_capacity(per_job.len());
         for (node_results, job) in per_job.iter().zip(&jobs) {
             results.push(self.aggregate(node_results, job, &chunks));
         }
         drop(jobs);
+        self.lut_arena = arena;
 
         // Park speculative results on their pending entries (the tail of
         // `results` matches `spec` in order).
@@ -528,11 +569,14 @@ pub fn merge_topk(results: &[NodeResult], k: usize) -> Vec<(f32, u64)> {
     out
 }
 
-/// Build an (m, 256) LUT from a raw (m, 256, dsub) centroid tensor.
+/// Build an (m, 256) LUT from a raw (m, 256, dsub) centroid tensor
+/// (allocating convenience wrapper over
+/// [`build_lut_raw_into`](crate::pq::scan::build_lut_raw_into) — no
+/// centroid copy).
 pub fn build_lut_from_raw(centroids: &[f32], query: &[f32], m: usize, dsub: usize) -> Vec<f32> {
-    use crate::pq::codebook::PqCodebook;
-    let cb = PqCodebook { d: m * dsub, m, centroids: centroids.to_vec() };
-    build_lut(&cb, query)
+    let mut lut = vec![0.0f32; m * KSUB];
+    build_lut_raw_into(centroids, query, m, dsub, &mut lut);
+    lut
 }
 
 #[cfg(test)]

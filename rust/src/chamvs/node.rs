@@ -1,6 +1,22 @@
 //! A ChamVS.mem disaggregated memory node (paper Sec 3, Fig 4): one shard
 //! of PQ codes + vector ids, a near-memory scan engine, and the FPGA cycle
 //! model that prices each scan.
+//!
+//! The native scan is the zero-copy fused pipeline (EXPERIMENTS.md §Perf):
+//! every probed list is scanned *in place* from the shard's flat storage
+//! (no gather copy), distances stream straight into the K-selector (no
+//! materialized distance buffer), and a batched round is *list-major* —
+//! each probed list's code block is streamed once and scored against all
+//! B ADC tables of the round, so the round's code traffic is O(codes)
+//! instead of O(B · codes). Scratch, selector pool and round maps are
+//! owned by the node and reused: steady-state rounds allocate nothing
+//! beyond their result vectors.
+//!
+//! K-selection is switchable per node ([`SelectMode`]): the fused exact
+//! selector is the serving default; the cycle-accurate (approximate)
+//! hierarchical queue stays available as the hardware-fidelity path and
+//! keeps the single-query gather-order push schedule the FPGA model
+//! defines.
 
 use std::time::Instant;
 
@@ -9,8 +25,11 @@ use anyhow::Result;
 use super::backend::{ScanBackend, ScanJob};
 use crate::hwmodel::fpga::FpgaModel;
 use crate::ivf::shard::Shard;
-use crate::kselect::{ApproxHierarchicalQueue, HierarchicalConfig};
-use crate::pq::scan::adc_scan_into;
+use crate::kselect::{
+    ApproxHierarchicalQueue, FusedSelector, HierarchicalConfig, SelectMode,
+};
+use crate::pq::codebook::KSUB;
+use crate::pq::scan::scan_list_into_sink;
 use crate::runtime::{Executor, HostTensor, Runtime};
 
 // The dispatcher fans nodes out across scoped worker threads, so every
@@ -24,9 +43,8 @@ const _: fn() = || {
 
 /// How a node evaluates distances.
 pub enum ScanEngine {
-    /// Native rust ADC scan + hierarchical queue simulator — the software
-    /// model of the FPGA pipeline (bit-exact distances, same K-selection
-    /// semantics).
+    /// Native rust fused ADC scan+select over the flat shard — the
+    /// software model of the FPGA pipeline.
     Native,
     /// The AOT-compiled Pallas pipeline (LUT -> one-hot ADC -> approximate
     /// hierarchical top-K) executed through PJRT — the accelerator
@@ -39,7 +57,10 @@ pub enum ScanEngine {
 pub struct NodeResult {
     /// (distance, global vector id), ascending, length <= k.
     pub topk: Vec<(f32, u64)>,
-    /// Wall-clock seconds actually spent (host execution).
+    /// Wall-clock seconds actually spent (host execution). In a list-major
+    /// batched round the round's wall is attributed to its jobs
+    /// proportionally to their scanned-code counts, so per-job values sum
+    /// to the node's true round wall.
     pub measured_s: f64,
     /// Modeled near-memory accelerator latency (FPGA cycle model).
     pub modeled_s: f64,
@@ -53,9 +74,28 @@ pub struct MemoryNode {
     pub engine: ScanEngine,
     pub fpga: FpgaModel,
     pub k: usize,
+    /// Sizing of the hierarchical queue (used when `select` is
+    /// [`SelectMode::Hierarchical`]; also feeds the FPGA resource model).
     pub kcfg: HierarchicalConfig,
-    /// Scratch distance buffer (hot path: no per-query allocation).
+    /// K-selection mode: fused exact (default) or hardware-fidelity
+    /// hierarchical.
+    pub select: SelectMode,
+    /// Reusable distance tile for the fused scan (hot path: no per-query
+    /// allocation).
     scratch: Vec<f32>,
+    /// Per-job selector pool for list-major rounds (reused; grown once).
+    selectors: Vec<FusedSelector>,
+    /// Round map: list id -> (job index, job's gather-order base) for
+    /// every job probing that list. Cleared via `touched` after each
+    /// round, so steady state allocates nothing.
+    list_jobs: Vec<Vec<(u32, u64)>>,
+    /// Lists touched by the current round (the dirty set of `list_jobs`).
+    touched: Vec<u32>,
+    /// Per-job scanned-code counts of the current round.
+    job_scanned: Vec<usize>,
+    /// Reusable PJRT staging tile (recovered from the call arguments
+    /// after each execution, so steady-state rounds don't reallocate it).
+    pjrt_padded: Vec<i32>,
 }
 
 impl MemoryNode {
@@ -68,7 +108,13 @@ impl MemoryNode {
             fpga,
             k,
             kcfg: HierarchicalConfig::approximate(k, lanes, 0.99),
+            select: SelectMode::default(),
             scratch: Vec::new(),
+            selectors: Vec::new(),
+            list_jobs: Vec::new(),
+            touched: Vec::new(),
+            job_scanned: Vec::new(),
+            pjrt_padded: Vec::new(),
         }
     }
 
@@ -92,61 +138,239 @@ impl MemoryNode {
         lists: &[u32],
         nprobe: usize,
     ) -> Result<NodeResult> {
-        let t0 = Instant::now();
-        let (codes, ids) = self.shard.gather(lists);
-        let n = ids.len();
+        let jobs = [ScanJob { query: query_sub, lists, lut, nprobe }];
+        let mut out = self.scan_jobs(&jobs, codebook)?;
+        Ok(out.pop().expect("one result per job"))
+    }
+
+    /// List-major fused round (native engine, [`SelectMode::Exact`]):
+    /// stream each probed list's code block once and score it against
+    /// every job of the round that probes it. Selection keys on
+    /// `(distance, gather order)`, so results are bit-identical to a
+    /// query-major scan — and to the flat-scan reference.
+    fn round_fused(&mut self, jobs: &[ScanJob<'_>]) -> Result<Vec<NodeResult>> {
         let m = self.shard.m;
-        let topk = match &mut self.engine {
-            ScanEngine::Native => {
-                self.scratch.resize(n, 0.0);
-                adc_scan_into(&codes, n, m, lut, &mut self.scratch);
-                let mut q = ApproxHierarchicalQueue::new(self.kcfg);
-                for (i, &d) in self.scratch[..n].iter().enumerate() {
-                    q.push(d, i as u64);
+        for job in jobs {
+            anyhow::ensure!(
+                job.lut.len() == m * KSUB,
+                "scan job is missing its (m, 256) ADC table"
+            );
+        }
+        let t0 = Instant::now();
+        let nlist = self.shard.n_lists();
+        if self.selectors.len() < jobs.len() {
+            self.selectors.resize_with(jobs.len(), || FusedSelector::new(1));
+        }
+        for sel in &mut self.selectors[..jobs.len()] {
+            sel.reset(self.k);
+        }
+        if self.list_jobs.len() < nlist {
+            self.list_jobs.resize_with(nlist, Vec::new);
+        }
+        self.job_scanned.clear();
+        self.job_scanned.resize(jobs.len(), 0);
+
+        // Build the round's list -> jobs map (empty lists contribute
+        // nothing, matching the gather semantics; list ids were validated
+        // in `scan_jobs`).
+        for (j, job) in jobs.iter().enumerate() {
+            let mut base = 0u64;
+            for &l in job.lists {
+                let l = l as usize;
+                let len = self.shard.list_len(l);
+                if len == 0 {
+                    continue;
                 }
-                q.finalize()
-                    .into_iter()
-                    .map(|(d, local)| (d, ids[local as usize]))
-                    .collect()
-            }
-            ScanEngine::Pjrt(exe) => {
-                let spec = &exe.spec;
-                let n_codes = spec.static_usize("n_codes").unwrap();
-                let dsub = spec.static_usize("dsub").unwrap();
-                anyhow::ensure!(
-                    n <= n_codes,
-                    "shard scan of {n} codes exceeds artifact tile {n_codes}"
-                );
-                // Pad codes up to the artifact's fixed shape.
-                let mut padded = vec![0i32; n_codes * m];
-                for (i, &c) in codes.iter().enumerate() {
-                    padded[i] = c as i32;
+                if self.list_jobs[l].is_empty() {
+                    self.touched.push(l as u32);
                 }
-                let args = [
-                    HostTensor::f32(&[m, dsub], query_sub.to_vec()),
-                    HostTensor::f32(&[m, 256, dsub], codebook.to_vec()),
-                    HostTensor::i32(&[n_codes, m], padded),
-                    HostTensor::i32(&[1], vec![n as i32]),
-                ];
-                let outs = exe.call(&args)?;
-                let dists = outs[0].as_f32()?;
-                let idxs = outs[1].as_i32()?;
-                // The artifact returns its static k; keep this node's k
-                // (padding sentinels are filtered by the n_valid mask).
-                dists
-                    .iter()
-                    .zip(idxs)
-                    .filter(|&(_, &i)| (i as usize) < n)
-                    .take(self.k)
-                    .map(|(&d, &i)| (d, ids[i as usize]))
-                    .collect()
+                self.list_jobs[l].push((j as u32, base));
+                base += len as u64;
             }
+            self.job_scanned[j] = base as usize;
+        }
+
+        // Scan phase: one pass over each touched list's code block, inner
+        // loop over the jobs probing it (the block stays cache-resident
+        // across the round's B ADC tables).
+        {
+            let shard = &self.shard;
+            let scratch = &mut self.scratch;
+            let selectors = &mut self.selectors;
+            let list_jobs = &self.list_jobs;
+            for &l in &self.touched {
+                let l = l as usize;
+                let codes = shard.list_codes(l);
+                let ids = shard.list_ids(l);
+                for &(j, base) in &list_jobs[l] {
+                    scan_list_into_sink(
+                        codes,
+                        m,
+                        jobs[j as usize].lut,
+                        ids,
+                        base,
+                        scratch,
+                        &mut selectors[j as usize],
+                    );
+                }
+            }
+        }
+        for &l in &self.touched {
+            self.list_jobs[l as usize].clear();
+        }
+        self.touched.clear();
+
+        let mut topks: Vec<Vec<(f32, u64)>> = Vec::with_capacity(jobs.len());
+        for sel in &mut self.selectors[..jobs.len()] {
+            let mut topk = Vec::with_capacity(self.k);
+            sel.emit_into(&mut topk);
+            topks.push(topk);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total: usize = self.job_scanned.iter().sum();
+        Ok(topks
+            .into_iter()
+            .enumerate()
+            .map(|(j, topk)| {
+                let n = self.job_scanned[j];
+                let share = if total > 0 {
+                    wall * n as f64 / total as f64
+                } else {
+                    wall / jobs.len() as f64
+                };
+                NodeResult {
+                    topk,
+                    measured_s: share,
+                    modeled_s: self.fpga.query_latency(n, m, jobs[j].nprobe, self.k).total(),
+                    n_scanned: n,
+                }
+            })
+            .collect())
+    }
+
+    /// Hardware-fidelity round ([`SelectMode::Hierarchical`]): per job, in
+    /// the job's own probe order, stream each list in place into the
+    /// cycle-accurate hierarchical queue (gather-order lane round-robin —
+    /// exactly the FPGA push schedule, still without the gather copy).
+    fn round_hierarchical(&mut self, jobs: &[ScanJob<'_>]) -> Result<Vec<NodeResult>> {
+        let m = self.shard.m;
+        let mut results = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            anyhow::ensure!(
+                job.lut.len() == m * KSUB,
+                "scan job is missing its (m, 256) ADC table"
+            );
+            let t0 = Instant::now();
+            let mut q = ApproxHierarchicalQueue::new(self.kcfg);
+            let mut scanned = 0usize;
+            {
+                let shard = &self.shard;
+                let scratch = &mut self.scratch;
+                for &l in job.lists {
+                    let l = l as usize;
+                    let ids = shard.list_ids(l);
+                    if ids.is_empty() {
+                        continue;
+                    }
+                    scan_list_into_sink(
+                        shard.list_codes(l),
+                        m,
+                        job.lut,
+                        ids,
+                        scanned as u64,
+                        scratch,
+                        &mut q,
+                    );
+                    scanned += ids.len();
+                }
+            }
+            let topk = q.finalize();
+            results.push(NodeResult {
+                topk,
+                measured_s: t0.elapsed().as_secs_f64(),
+                modeled_s: self.fpga.query_latency(scanned, m, job.nprobe, self.k).total(),
+                n_scanned: scanned,
+            });
+        }
+        Ok(results)
+    }
+
+    /// PJRT round: one artifact call per job, staging the padded code
+    /// tile straight from the shard's flat storage (no intermediate
+    /// gather vectors; result rows map back through the per-list bases).
+    fn round_pjrt(&mut self, jobs: &[ScanJob<'_>], codebook: &[f32]) -> Result<Vec<NodeResult>> {
+        let mut results = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            results.push(self.scan_pjrt_one(job, codebook)?);
+        }
+        Ok(results)
+    }
+
+    fn scan_pjrt_one(&mut self, job: &ScanJob<'_>, codebook: &[f32]) -> Result<NodeResult> {
+        let t0 = Instant::now();
+        let m = self.shard.m;
+        let n = self.shard.scan_count(job.lists);
+        let exe = match &mut self.engine {
+            ScanEngine::Pjrt(exe) => exe,
+            ScanEngine::Native => unreachable!("native jobs never reach the PJRT round"),
         };
+        let spec = &exe.spec;
+        let n_codes = spec.static_usize("n_codes").unwrap();
+        let dsub = spec.static_usize("dsub").unwrap();
+        anyhow::ensure!(
+            n <= n_codes,
+            "shard scan of {n} codes exceeds artifact tile {n_codes}"
+        );
+        // Stage codes up to the artifact's fixed shape, straight from the
+        // flat shard buffer into the reusable tile (re-zeroed in place;
+        // no per-job allocation); remember each list's row base for the
+        // result-index mapping.
+        let mut padded = std::mem::take(&mut self.pjrt_padded);
+        padded.clear();
+        padded.resize(n_codes * m, 0);
+        let mut bases: Vec<(usize, u32)> = Vec::with_capacity(job.lists.len());
+        let mut row = 0usize;
+        for &l in job.lists {
+            let codes = self.shard.list_codes(l as usize);
+            for (i, &c) in codes.iter().enumerate() {
+                padded[row * m + i] = c as i32;
+            }
+            bases.push((row, l));
+            row += codes.len() / m;
+        }
+        let mut args = [
+            HostTensor::f32(&[m, dsub], job.query.to_vec()),
+            HostTensor::f32(&[m, 256, dsub], codebook.to_vec()),
+            HostTensor::i32(&[n_codes, m], padded),
+            HostTensor::i32(&[1], vec![n as i32]),
+        ];
+        let outs = exe.call(&args)?;
+        // Recover the staging tile for the next job (the error path above
+        // just drops it — it regrows on the next call).
+        if let HostTensor::I32 { data, .. } =
+            std::mem::replace(&mut args[2], HostTensor::i32(&[0], Vec::new()))
+        {
+            self.pjrt_padded = data;
+        }
+        let dists = outs[0].as_f32()?;
+        let idxs = outs[1].as_i32()?;
+        // The artifact returns its static k; keep this node's k (padding
+        // sentinels are filtered by the n_valid mask). A result row maps
+        // to (list, offset) via the last base at or below it.
+        let topk = dists
+            .iter()
+            .zip(idxs)
+            .filter(|&(_, &i)| (i as usize) < n)
+            .take(self.k)
+            .map(|(&d, &i)| {
+                let i = i as usize;
+                let p = bases.partition_point(|&(b, _)| b <= i) - 1;
+                let (b, l) = bases[p];
+                (d, self.shard.list_ids(l as usize)[i - b])
+            })
+            .collect();
         let measured_s = t0.elapsed().as_secs_f64();
-        let modeled_s = self
-            .fpga
-            .query_latency(n, m, nprobe, self.k)
-            .total();
+        let modeled_s = self.fpga.query_latency(n, m, job.nprobe, self.k).total();
         Ok(NodeResult { topk, measured_s, modeled_s, n_scanned: n })
     }
 }
@@ -161,9 +385,27 @@ impl ScanBackend for MemoryNode {
     }
 
     fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], codebook: &[f32]) -> Result<Vec<NodeResult>> {
-        jobs.iter()
-            .map(|j| self.scan(&j.lut, j.query, codebook, j.lists, j.nprobe))
-            .collect()
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // A probed list outside this shard is a coordinator bug: fail the
+        // round loudly (and identically on every engine) instead of
+        // silently scanning a subset or panicking. The networked server
+        // filters ids before they get here.
+        let nlist = self.shard.n_lists();
+        for job in jobs {
+            anyhow::ensure!(
+                job.lists.iter().all(|&l| (l as usize) < nlist),
+                "scan job probes a list outside this shard (nlist={nlist})"
+            );
+        }
+        if matches!(self.engine, ScanEngine::Pjrt(_)) {
+            return self.round_pjrt(jobs, codebook);
+        }
+        match self.select {
+            SelectMode::Exact => self.round_fused(jobs),
+            SelectMode::Hierarchical => self.round_hierarchical(jobs),
+        }
     }
 }
 
@@ -181,6 +423,22 @@ mod tests {
         (IvfPqIndex::build(&data, n, d, m, nlist, 3), data, d)
     }
 
+    fn flat_reference(idx: &IvfPqIndex, q: &[f32], lists: &[u32], k: usize) -> Vec<(f32, u64)> {
+        let lut = build_lut(&idx.pq, q);
+        let mut best: Vec<(f32, u64)> = Vec::new();
+        for &l in lists {
+            let codes = &idx.list_codes[l as usize];
+            let lids = &idx.list_ids[l as usize];
+            let ds = crate::pq::scan::adc_scan(codes, lids.len(), idx.m, &lut);
+            for (i, &dd) in ds.iter().enumerate() {
+                best.push((dd, lids[i]));
+            }
+        }
+        best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        best.truncate(k);
+        best
+    }
+
     #[test]
     fn native_node_matches_monolithic_search() {
         let (idx, _, d) = setup();
@@ -188,37 +446,63 @@ mod tests {
         let q = rng.normal_vec(d);
         let lists = idx.probe(&q, 8);
         let lut = build_lut(&idx.pq, &q);
+        let want = flat_reference(&idx, &q, &lists, 10);
 
-        // Single node over the whole index == monolithic search.
-        let shard = Shard::carve(&idx, 0, 1);
-        let mut node = MemoryNode::new(shard, ScanEngine::Native, 10);
-        // Exact queues for a strict comparison.
-        node.kcfg = HierarchicalConfig::exact(10, node.kcfg.num_lanes);
-        let r = node.scan(&lut, &q, &idx.pq.centroids, &lists, 8).unwrap();
-        let (ids, dists) = {
-            let lut2 = build_lut(&idx.pq, &q);
-            let mut best: Vec<(f32, u64)> = Vec::new();
-            for &l in &lists {
-                let codes = &idx.list_codes[l as usize];
-                let lids = &idx.list_ids[l as usize];
-                let ds = crate::pq::scan::adc_scan(codes, lids.len(), idx.m, &lut2);
-                for (i, &dd) in ds.iter().enumerate() {
-                    best.push((dd, lids[i]));
-                }
+        // Single node over the whole index == monolithic search, in both
+        // selection modes (exact queues for the hierarchical comparison).
+        for select in [SelectMode::Exact, SelectMode::Hierarchical] {
+            let shard = Shard::carve(&idx, 0, 1);
+            let mut node = MemoryNode::new(shard, ScanEngine::Native, 10);
+            node.select = select;
+            node.kcfg = HierarchicalConfig::exact(10, node.kcfg.num_lanes);
+            let r = node.scan(&lut, &q, &idx.pq.centroids, &lists, 8).unwrap();
+            assert_eq!(r.topk.len(), 10, "{select:?}");
+            for (i, (got, wanted)) in r.topk.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    got.0.to_bits(),
+                    wanted.0.to_bits(),
+                    "{select:?} rank {i}"
+                );
             }
-            best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            best.truncate(10);
-            (
-                best.iter().map(|&(_, i)| i).collect::<Vec<_>>(),
-                best.iter().map(|&(dd, _)| dd).collect::<Vec<_>>(),
-            )
-        };
-        assert_eq!(r.topk.len(), 10);
-        for (i, &(dd, _id)) in r.topk.iter().enumerate() {
-            assert!((dd - dists[i]).abs() < 1e-5, "rank {i}");
+            if select == SelectMode::Exact {
+                // The fused selector's (dist, order) key pins ids too.
+                let got_ids: Vec<u64> = r.topk.iter().map(|&(_, i)| i).collect();
+                let want_ids: Vec<u64> = want.iter().map(|&(_, i)| i).collect();
+                assert_eq!(got_ids, want_ids);
+            }
         }
-        let got_ids: Vec<u64> = r.topk.iter().map(|&(_, i)| i).collect();
-        assert_eq!(got_ids, ids);
+    }
+
+    #[test]
+    fn list_major_batch_matches_per_job_scans() {
+        // One batched scan_jobs round must be bit-identical to scanning
+        // its jobs one at a time, in both selection modes.
+        let (idx, _, d) = setup();
+        let mut rng = Rng::new(7);
+        let queries: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(d)).collect();
+        let lists: Vec<Vec<u32>> = queries.iter().map(|q| idx.probe(q, 6)).collect();
+        let luts: Vec<Vec<f32>> =
+            queries.iter().map(|q| build_lut(&idx.pq, q)).collect();
+        for select in [SelectMode::Exact, SelectMode::Hierarchical] {
+            let shard = Shard::carve(&idx, 0, 2);
+            let mut node = MemoryNode::new(shard, ScanEngine::Native, 10);
+            node.select = select;
+            let jobs: Vec<ScanJob> = queries
+                .iter()
+                .zip(&lists)
+                .zip(&luts)
+                .map(|((q, l), lut)| ScanJob { query: q, lists: l, lut, nprobe: 6 })
+                .collect();
+            let batched = node.scan_jobs(&jobs, &idx.pq.centroids).unwrap();
+            assert_eq!(batched.len(), jobs.len());
+            for (job, batch_r) in jobs.iter().zip(&batched) {
+                let single = node
+                    .scan(job.lut, job.query, &idx.pq.centroids, job.lists, 6)
+                    .unwrap();
+                assert_eq!(batch_r.topk, single.topk, "{select:?}");
+                assert_eq!(batch_r.n_scanned, single.n_scanned);
+            }
+        }
     }
 
     #[test]
@@ -237,6 +521,31 @@ mod tests {
     }
 
     #[test]
+    fn batched_round_wall_attribution_sums_to_round() {
+        let (idx, _, d) = setup();
+        let mut rng = Rng::new(5);
+        let queries: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(d)).collect();
+        let lists: Vec<Vec<u32>> = queries.iter().map(|q| idx.probe(q, 5)).collect();
+        let luts: Vec<Vec<f32>> =
+            queries.iter().map(|q| build_lut(&idx.pq, q)).collect();
+        let jobs: Vec<ScanJob> = queries
+            .iter()
+            .zip(&lists)
+            .zip(&luts)
+            .map(|((q, l), lut)| ScanJob { query: q, lists: l, lut, nprobe: 5 })
+            .collect();
+        let mut node = MemoryNode::new(Shard::carve(&idx, 0, 1), ScanEngine::Native, 10);
+        let rs = node.scan_jobs(&jobs, &idx.pq.centroids).unwrap();
+        assert!(rs.iter().all(|r| r.measured_s > 0.0));
+        // Proportional attribution: bigger scans get bigger shares.
+        for w in rs.windows(2) {
+            if w[0].n_scanned > w[1].n_scanned {
+                assert!(w[0].measured_s >= w[1].measured_s);
+            }
+        }
+    }
+
+    #[test]
     fn sharded_nodes_cover_all_results() {
         let (idx, _, d) = setup();
         let mut rng = Rng::new(4);
@@ -247,7 +556,6 @@ mod tests {
         for node_id in 0..3 {
             let shard = Shard::carve(&idx, node_id, 3);
             let mut node = MemoryNode::new(shard, ScanEngine::Native, 10);
-            node.kcfg = HierarchicalConfig::exact(10, node.kcfg.num_lanes);
             let r = node.scan(&lut, &q, &idx.pq.centroids, &lists, 8).unwrap();
             all.extend(r.topk);
         }

@@ -5,9 +5,10 @@
 //! (as Faiss's IndexIVFPQ with `by_residual=false`, matching the
 //! accelerator's LUT-per-query design which uses one table for all lists).
 
+use crate::kselect::FusedSelector;
 use crate::pq::codebook::PqCodebook;
 use crate::pq::kmeans::{kmeans, nearest};
-use crate::pq::scan::{adc_scan, build_lut};
+use crate::pq::scan::{build_lut, scan_list_into_sink};
 
 /// A fully-trained IVF-PQ index with encoded database.
 pub struct IvfPqIndex {
@@ -72,7 +73,17 @@ impl IvfPqIndex {
     }
 
     /// Scan the IVF index: ids of the `nprobe` nearest coarse centroids.
+    ///
+    /// Partial selection: `select_nth_unstable_by` partitions the nprobe
+    /// nearest to the front in O(nlist), and only that prefix is sorted —
+    /// a full O(nlist log nlist) sort just to keep nprobe entries was the
+    /// index-scan tax at paper-scale nlist. The `(dist, list id)` key
+    /// reproduces the old stable full sort's output order exactly.
     pub fn probe(&self, query: &[f32], nprobe: usize) -> Vec<u32> {
+        let take = nprobe.min(self.nlist);
+        if take == 0 {
+            return Vec::new();
+        }
         let mut dists: Vec<(f32, u32)> = (0..self.nlist)
             .map(|l| {
                 let c = &self.centroids[l * self.d..(l + 1) * self.d];
@@ -81,30 +92,45 @@ impl IvfPqIndex {
                 (dist, l as u32)
             })
             .collect();
-        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        dists[..nprobe.min(self.nlist)].iter().map(|&(_, l)| l).collect()
+        let by_dist_then_list = |a: &(f32, u32), b: &(f32, u32)| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        };
+        if take < self.nlist {
+            dists.select_nth_unstable_by(take - 1, by_dist_then_list);
+            dists.truncate(take);
+        }
+        dists.sort_unstable_by(by_dist_then_list);
+        dists.iter().map(|&(_, l)| l).collect()
     }
 
-    /// Full CPU search: probe + ADC scan + exact top-k (the monolithic
-    /// `CPU` baseline of Fig 9).
+    /// Full CPU search: probe + fused ADC scan+select (the monolithic
+    /// `CPU` baseline of Fig 9). Distances stream straight into the
+    /// fused selector — O(N log k) with no intermediate distance buffer,
+    /// bit-identical to the old scan-everything-then-full-sort pipeline.
     pub fn search(&self, query: &[f32], nprobe: usize, k: usize) -> (Vec<u64>, Vec<f32>) {
         let lists = self.probe(query, nprobe);
         let lut = build_lut(&self.pq, query);
-        let mut best: Vec<(f32, u64)> = Vec::new();
+        let mut sel = FusedSelector::new(k);
+        let mut scratch = Vec::new();
+        let mut order = 0u64;
         for &l in &lists {
-            let codes = &self.list_codes[l as usize];
             let ids = &self.list_ids[l as usize];
-            let n = ids.len();
-            if n == 0 {
+            if ids.is_empty() {
                 continue;
             }
-            let dists = adc_scan(codes, n, self.m, &lut);
-            for (i, &dist) in dists.iter().enumerate() {
-                best.push((dist, ids[i]));
-            }
+            scan_list_into_sink(
+                &self.list_codes[l as usize],
+                self.m,
+                &lut,
+                ids,
+                order,
+                &mut scratch,
+                &mut sel,
+            );
+            order += ids.len() as u64;
         }
-        best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        best.truncate(k);
+        let mut best = Vec::with_capacity(k);
+        sel.emit_into(&mut best);
         (
             best.iter().map(|&(_, i)| i).collect(),
             best.iter().map(|&(d, _)| d).collect(),

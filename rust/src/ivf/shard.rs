@@ -1,16 +1,27 @@
 //! A memory-node shard of the database: the slice of every IVF list that
 //! one disaggregated node holds under vector-sharded partitioning
 //! (paper Sec 4.3, first scheme).
+//!
+//! Storage is flat and list-major: one contiguous codes buffer, one
+//! contiguous ids buffer, and per-list `(offset, len)` extents. A scan
+//! reads each probed list *in place* through [`list_codes`](Shard::list_codes)
+//! / [`list_ids`](Shard::list_ids) — the per-query gather copy of the old
+//! per-list `Vec<Vec<u8>>` layout is gone (EXPERIMENTS.md §Perf).
 
 use super::index::IvfPqIndex;
 
-/// One node's shard: per-list codes + global ids.
+/// One node's shard: flat codes + ids with per-list extents.
 pub struct Shard {
     pub node_id: usize,
     pub n_nodes: usize,
     pub m: usize,
-    pub list_codes: Vec<Vec<u8>>,
-    pub list_ids: Vec<Vec<u64>>,
+    /// All PQ codes, list-contiguous: list `l` occupies
+    /// `codes[off * m .. (off + len) * m]` for `(off, len) = extents[l]`.
+    pub codes: Vec<u8>,
+    /// Global vector ids, aligned row-for-row with `codes`.
+    pub ids: Vec<u64>,
+    /// Per-list `(offset, len)` in vectors into `codes`/`ids`.
+    pub extents: Vec<(usize, usize)>,
 }
 
 impl Shard {
@@ -20,51 +31,59 @@ impl Shard {
     pub fn carve(index: &IvfPqIndex, node_id: usize, n_nodes: usize) -> Shard {
         assert!(node_id < n_nodes);
         let m = index.m;
-        let mut list_codes = Vec::with_capacity(index.nlist);
-        let mut list_ids = Vec::with_capacity(index.nlist);
+        let approx = index.len() / n_nodes + index.nlist;
+        let mut codes = Vec::with_capacity(approx * m);
+        let mut ids = Vec::with_capacity(approx);
+        let mut extents = Vec::with_capacity(index.nlist);
         for l in 0..index.nlist {
-            let ids = &index.list_ids[l];
-            let codes = &index.list_codes[l];
-            let mut sc = Vec::new();
-            let mut si = Vec::new();
-            for (j, &id) in ids.iter().enumerate() {
+            let lids = &index.list_ids[l];
+            let lcodes = &index.list_codes[l];
+            let off = ids.len();
+            for (j, &id) in lids.iter().enumerate() {
                 if j % n_nodes == node_id {
-                    sc.extend_from_slice(&codes[j * m..(j + 1) * m]);
-                    si.push(id);
+                    codes.extend_from_slice(&lcodes[j * m..(j + 1) * m]);
+                    ids.push(id);
                 }
             }
-            list_codes.push(sc);
-            list_ids.push(si);
+            extents.push((off, ids.len() - off));
         }
-        Shard { node_id, n_nodes, m, list_codes, list_ids }
+        Shard { node_id, n_nodes, m, codes, ids, extents }
+    }
+
+    /// Number of IVF lists this shard spans.
+    pub fn n_lists(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// Vectors held for one list.
+    pub fn list_len(&self, l: usize) -> usize {
+        self.extents[l].1
+    }
+
+    /// One list's PQ codes, in place (no copy).
+    pub fn list_codes(&self, l: usize) -> &[u8] {
+        let (off, len) = self.extents[l];
+        &self.codes[off * self.m..(off + len) * self.m]
+    }
+
+    /// One list's global vector ids, in place (no copy).
+    pub fn list_ids(&self, l: usize) -> &[u64] {
+        let (off, len) = self.extents[l];
+        &self.ids[off..off + len]
     }
 
     /// Vectors this shard scans for a probe set.
     pub fn scan_count(&self, lists: &[u32]) -> usize {
-        lists.iter().map(|&l| self.list_ids[l as usize].len()).sum()
+        lists.iter().map(|&l| self.extents[l as usize].1).sum()
     }
 
     /// Total vectors held.
     pub fn len(&self) -> usize {
-        self.list_ids.iter().map(Vec::len).sum()
+        self.ids.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    /// Gather the (codes, global ids) of a probe set into contiguous
-    /// buffers — the staging step before either the native ADC scan or the
-    /// PJRT accelerator artifact.
-    pub fn gather(&self, lists: &[u32]) -> (Vec<u8>, Vec<u64>) {
-        let total = self.scan_count(lists);
-        let mut codes = Vec::with_capacity(total * self.m);
-        let mut ids = Vec::with_capacity(total);
-        for &l in lists {
-            codes.extend_from_slice(&self.list_codes[l as usize]);
-            ids.extend_from_slice(&self.list_ids[l as usize]);
-        }
-        (codes, ids)
+        self.ids.is_empty()
     }
 }
 
@@ -88,7 +107,7 @@ mod tests {
         assert_eq!(total, idx.len());
         // Every id appears in exactly one shard.
         let mut all: Vec<u64> =
-            shards.iter().flat_map(|s| s.list_ids.iter().flatten().cloned()).collect();
+            shards.iter().flat_map(|s| s.ids.iter().cloned()).collect();
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len(), idx.len());
@@ -99,8 +118,7 @@ mod tests {
         let idx = toy();
         let shards: Vec<Shard> = (0..4).map(|i| Shard::carve(&idx, i, 4)).collect();
         for l in 0..idx.nlist {
-            let sizes: Vec<usize> =
-                shards.iter().map(|s| s.list_ids[l].len()).collect();
+            let sizes: Vec<usize> = shards.iter().map(|s| s.list_len(l)).collect();
             let max = sizes.iter().max().unwrap();
             let min = sizes.iter().min().unwrap();
             assert!(max - min <= 1, "list {l}: {sizes:?}");
@@ -108,13 +126,36 @@ mod tests {
     }
 
     #[test]
-    fn gather_aligns_codes_and_ids() {
+    fn flat_layout_is_contiguous_and_aligned() {
         let idx = toy();
         let s = Shard::carve(&idx, 0, 2);
+        assert_eq!(s.n_lists(), idx.nlist);
+        assert_eq!(s.codes.len(), s.ids.len() * s.m);
+        // Extents tile the flat buffers exactly, in list order.
+        let mut cursor = 0usize;
+        for l in 0..s.n_lists() {
+            let (off, len) = s.extents[l];
+            assert_eq!(off, cursor, "list {l} extent not contiguous");
+            cursor += len;
+            assert_eq!(s.list_codes(l).len(), len * s.m);
+            assert_eq!(s.list_ids(l).len(), len);
+        }
+        assert_eq!(cursor, s.len());
+    }
+
+    #[test]
+    fn in_place_slices_match_index_lists() {
+        // A 1-node shard's per-list views must equal the index's own
+        // per-list storage — the in-place scan sees exactly what the old
+        // gather copy produced.
+        let idx = toy();
+        let s = Shard::carve(&idx, 0, 1);
+        for l in 0..idx.nlist {
+            assert_eq!(s.list_codes(l), &idx.list_codes[l][..], "codes, list {l}");
+            assert_eq!(s.list_ids(l), &idx.list_ids[l][..], "ids, list {l}");
+        }
         let lists = [0u32, 3, 7];
-        let (codes, ids) = s.gather(&lists);
-        assert_eq!(codes.len(), ids.len() * s.m);
-        assert_eq!(ids.len(), s.scan_count(&lists));
+        assert_eq!(s.scan_count(&lists), idx.scan_count(&lists));
     }
 
     #[test]

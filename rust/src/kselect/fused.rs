@@ -1,0 +1,297 @@
+//! Fused scan+select: the fast exact K-selector of the zero-copy scan
+//! pipeline (EXPERIMENTS.md §Perf).
+//!
+//! [`FusedSelector`] is a bounded max-heap of at most `k` entries whose
+//! root is the current kth-best distance. The ADC scan offers every
+//! distance through [`DistanceSink::offer`]; once the heap is full, a
+//! single compare against the root rejects the overwhelming majority of
+//! codes without touching the heap — the selection cost all but vanishes
+//! next to the scan itself. This is the serving-default replacement for
+//! pushing every code through the cycle-accurate
+//! [`ApproxHierarchicalQueue`](super::hierarchical::ApproxHierarchicalQueue)
+//! (which stays available behind [`SelectMode::Hierarchical`] as the
+//! hardware-fidelity path; its per-push systolic swap waves cost O(depth)
+//! per code).
+//!
+//! Determinism: entries carry an explicit `order` key (the code's position
+//! in the query's probed-list gather order), and the heap keeps the k
+//! smallest by the lexicographic `(dist, order)` key. That makes the
+//! result independent of the order codes are offered in — a list-major
+//! batched round and a query-major single scan produce bit-identical
+//! top-K lists, both equal to a stable sort of all distances in gather
+//! order (the flat-scan reference).
+
+use super::hierarchical::ApproxHierarchicalQueue;
+
+/// How a memory node selects its local top-K during a scan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SelectMode {
+    /// Fused exact selection ([`FusedSelector`]): the serving default.
+    #[default]
+    Exact,
+    /// The cycle-accurate (approximate) hierarchical priority queue — the
+    /// software model of the FPGA K-selection module (paper Sec 4.2).
+    Hierarchical,
+}
+
+/// Anything an ADC scan can stream `(distance, order, id)` triples into.
+///
+/// `order` is the code's position in the query's gather order (probed
+/// lists concatenated in probe order) and only breaks distance ties;
+/// `id` is the global vector id returned to the caller.
+pub trait DistanceSink {
+    fn offer(&mut self, dist: f32, order: u64, id: u64);
+}
+
+/// Bounded max-heap K-selector with current-kth threshold pruning.
+///
+/// Reusable across queries via [`reset`](FusedSelector::reset): the heap
+/// buffer is retained, so steady-state operation allocates nothing.
+pub struct FusedSelector {
+    k: usize,
+    /// Max-heap by `(dist, order)`; `heap[0]` is the current kth-best.
+    heap: Vec<(f32, u64, u64)>,
+}
+
+/// Lexicographic `(dist, order)` greater-than (the heap ordering; `id` is
+/// payload only). Orders are unique within a query, so this is total.
+#[inline]
+fn key_gt(a: &(f32, u64, u64), b: &(f32, u64, u64)) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 > b.1)
+}
+
+impl FusedSelector {
+    pub fn new(k: usize) -> FusedSelector {
+        FusedSelector { k, heap: Vec::with_capacity(k) }
+    }
+
+    /// Retarget to a (possibly different) `k`, clearing entries but
+    /// keeping the buffer.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.heap.clear();
+        self.heap.reserve(k);
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current kth-best distance — the pruning threshold. `INFINITY`
+    /// until the heap is full (everything is accepted); `NEG_INFINITY`
+    /// for a `k = 0` selector (nothing is ever accepted).
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.k == 0 {
+            f32::NEG_INFINITY
+        } else if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// Offer one scanned distance. Hot path: once full, a code whose
+    /// distance exceeds the current kth is rejected with one compare.
+    #[inline]
+    pub fn offer(&mut self, dist: f32, order: u64, id: u64) {
+        if self.heap.len() < self.k {
+            self.heap.push((dist, order, id));
+            self.sift_up();
+        } else if self.k > 0 {
+            // Threshold prune: the common case is a plain reject.
+            let root = self.heap[0];
+            if dist > root.0 || (dist == root.0 && order > root.1) {
+                return;
+            }
+            self.heap[0] = (dist, order, id);
+            self.sift_down();
+        }
+    }
+
+    fn sift_up(&mut self) {
+        let mut i = self.heap.len() - 1;
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if key_gt(&self.heap[i], &self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self) {
+        let n = self.heap.len();
+        let mut i = 0;
+        loop {
+            let l = 2 * i + 1;
+            if l >= n {
+                break;
+            }
+            let r = l + 1;
+            let mut big = l;
+            if r < n && key_gt(&self.heap[r], &self.heap[l]) {
+                big = r;
+            }
+            if key_gt(&self.heap[big], &self.heap[i]) {
+                self.heap.swap(i, big);
+                i = big;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Drain the selection, ascending by `(dist, order)`, into `out` as
+    /// `(dist, id)` pairs. The selector is left empty (same `k`) and its
+    /// buffer retained; the sort is in-place (no allocation).
+    pub fn emit_into(&mut self, out: &mut Vec<(f32, u64)>) {
+        self.heap
+            .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        out.clear();
+        out.extend(self.heap.iter().map(|&(d, _, id)| (d, id)));
+        self.heap.clear();
+    }
+}
+
+impl DistanceSink for FusedSelector {
+    #[inline]
+    fn offer(&mut self, dist: f32, order: u64, id: u64) {
+        FusedSelector::offer(self, dist, order, id)
+    }
+}
+
+/// The hierarchical queue ingests the same stream (ids as payload; the
+/// lane round-robin depends only on offer order, which the scan keeps in
+/// gather order for this mode).
+impl DistanceSink for ApproxHierarchicalQueue {
+    #[inline]
+    fn offer(&mut self, dist: f32, _order: u64, id: u64) {
+        self.push(dist, id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Reference: stable sort by distance over offer order, truncate k.
+    fn stable_reference(dists: &[f32], k: usize) -> Vec<(f32, u64)> {
+        let mut all: Vec<(f32, u64)> =
+            dists.iter().enumerate().map(|(i, &d)| (d, i as u64)).collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn prop_matches_stable_sort_reference() {
+        prop::check(
+            "fused-selector-matches",
+            |rng| {
+                let k = 1 + rng.below(60);
+                let n = 1 + rng.below(500);
+                // Coarse quantization forces plenty of distance ties.
+                let dists: Vec<f32> =
+                    (0..n).map(|_| (rng.below(32) as f32) * 0.5).collect();
+                (k, dists)
+            },
+            |(k, dists)| {
+                let mut sel = FusedSelector::new(*k);
+                for (i, &d) in dists.iter().enumerate() {
+                    sel.offer(d, i as u64, 1000 + i as u64);
+                }
+                let mut got = Vec::new();
+                sel.emit_into(&mut got);
+                let want = stable_reference(dists, *k);
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.0.to_bits(), w.0.to_bits());
+                    assert_eq!(g.1, 1000 + w.1, "tie order must be stable");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn offer_order_does_not_change_result() {
+        // The (dist, order) key makes the selection independent of the
+        // order codes are offered — the list-major batched invariance.
+        let mut rng = Rng::new(7);
+        let dists: Vec<f32> = (0..300).map(|_| (rng.below(16) as f32) * 0.25).collect();
+        let mut forward = FusedSelector::new(10);
+        let mut backward = FusedSelector::new(10);
+        for (i, &d) in dists.iter().enumerate() {
+            forward.offer(d, i as u64, i as u64);
+        }
+        for (i, &d) in dists.iter().enumerate().rev() {
+            backward.offer(d, i as u64, i as u64);
+        }
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        forward.emit_into(&mut a);
+        backward.emit_into(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn threshold_tracks_kth_best() {
+        let mut sel = FusedSelector::new(2);
+        assert_eq!(sel.threshold(), f32::INFINITY);
+        sel.offer(5.0, 0, 0);
+        assert_eq!(sel.threshold(), f32::INFINITY);
+        sel.offer(3.0, 1, 1);
+        assert_eq!(sel.threshold(), 5.0);
+        sel.offer(1.0, 2, 2);
+        assert_eq!(sel.threshold(), 3.0);
+        sel.offer(9.0, 3, 3); // pruned
+        assert_eq!(sel.threshold(), 3.0);
+    }
+
+    #[test]
+    fn reset_reuses_buffer_without_allocating() {
+        let mut sel = FusedSelector::new(8);
+        for i in 0..100u64 {
+            sel.offer(i as f32, i, i);
+        }
+        let cap = sel.heap.capacity();
+        sel.reset(8);
+        assert!(sel.is_empty());
+        assert_eq!(sel.heap.capacity(), cap);
+    }
+
+    #[test]
+    fn k_zero_selects_nothing() {
+        let mut sel = FusedSelector::new(0);
+        sel.offer(1.0, 0, 0);
+        let mut out = vec![(0.0, 0)];
+        sel.emit_into(&mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn hierarchical_sink_matches_direct_push() {
+        use crate::kselect::HierarchicalConfig;
+        let mut rng = Rng::new(3);
+        let dists: Vec<f32> = (0..200).map(|_| rng.f32()).collect();
+        let cfg = HierarchicalConfig::exact(9, 4);
+        let mut via_sink = ApproxHierarchicalQueue::new(cfg);
+        let mut direct = ApproxHierarchicalQueue::new(cfg);
+        for (i, &d) in dists.iter().enumerate() {
+            DistanceSink::offer(&mut via_sink, d, i as u64, i as u64);
+            direct.push(d, i as u64);
+        }
+        assert_eq!(via_sink.finalize(), direct.finalize());
+    }
+}

@@ -3,11 +3,18 @@
 //! and the paper's contribution — the *approximate* hierarchical priority
 //! queue whose truncated L1 queues save an order of magnitude of hardware
 //! while keeping >= 99% of queries bit-identical.
+//!
+//! [`fused`] adds the software serving path: a threshold-pruned bounded
+//! max-heap ([`FusedSelector`]) that the ADC scan streams into directly
+//! (no materialized distance buffer), selectable per memory node via
+//! [`SelectMode`].
 
 pub mod binomial;
+pub mod fused;
 pub mod hierarchical;
 pub mod systolic;
 
 pub use binomial::{exceed_probability, required_depth};
+pub use fused::{DistanceSink, FusedSelector, SelectMode};
 pub use hierarchical::{ApproxHierarchicalQueue, HierarchicalConfig};
 pub use systolic::SystolicQueue;

@@ -26,8 +26,9 @@ use super::protocol::{
     BatchScanRequest, BatchScanResponse, Frame, Hello, Kind, ScanRequest, ScanResponse,
 };
 use crate::chamvs::backend::{ScanBackend, ScanJob};
-use crate::chamvs::dispatcher::build_lut_from_raw;
 use crate::chamvs::node::MemoryNode;
+use crate::pq::codebook::KSUB;
+use crate::pq::scan::build_lut_raw_into;
 
 /// A running memory-node server.
 pub struct NodeServer {
@@ -110,11 +111,14 @@ fn serve_conn(
     Hello {
         node_id: node.shard.node_id as u32,
         m: node.shard.m as u32,
-        nlist: node.shard.list_codes.len() as u32,
+        nlist: node.shard.n_lists() as u32,
     }
     .encode()
     .write_to(&mut writer)?;
     let mut reader = BufReader::new(stream);
+    // Reusable per-connection LUT arena (one (m, 256) table per request
+    // of a round; steady state allocates nothing).
+    let mut lut_arena: Vec<f32> = Vec::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
@@ -141,12 +145,14 @@ fn serve_conn(
             }
             Kind::ScanRequest => {
                 let req = ScanRequest::decode(&frame)?;
-                let mut resp = scan_round(node, codebook, nprobe, &[req])?;
+                let mut resp =
+                    scan_round(node, codebook, nprobe, &[req], &mut lut_arena)?;
                 resp.pop().expect("one response").encode().write_to(&mut writer)?;
             }
             Kind::BatchScanRequest => {
                 let req = BatchScanRequest::decode(&frame)?;
-                let items = scan_round(node, codebook, nprobe, &req.items)?;
+                let items =
+                    scan_round(node, codebook, nprobe, &req.items, &mut lut_arena)?;
                 BatchScanResponse { node_id: node.shard.node_id as u32, items }
                     .encode()
                     .write_to(&mut writer)?;
@@ -164,25 +170,37 @@ fn scan_round(
     codebook: &[f32],
     nprobe: usize,
     reqs: &[ScanRequest],
+    lut_arena: &mut Vec<f32>,
 ) -> Result<Vec<ScanResponse>> {
     let m = node.shard.m;
-    let nlist = node.shard.list_codes.len() as u32;
+    let nlist = node.shard.n_lists() as u32;
     // Defensive: drop list ids outside this shard (a buggy or malicious
     // coordinator must not kill the node).
     let filtered: Vec<Vec<u32>> = reqs
         .iter()
         .map(|r| r.lists.iter().copied().filter(|&l| l < nlist).collect())
         .collect();
+    // Build the round's ADC tables into the reusable arena, then the job
+    // list borrowing its slices (same shape as the dispatcher's round).
+    // Dim checks error the connection instead of panicking the node.
+    let lut_len = m * KSUB;
+    let dsub = codebook.len() / lut_len;
+    lut_arena.clear();
+    for r in reqs {
+        anyhow::ensure!(
+            r.query.len() == m * dsub && codebook.len() == lut_len * dsub,
+            "query dim {} does not match node geometry (m={m}, dsub={dsub})",
+            r.query.len()
+        );
+        let start = lut_arena.len();
+        lut_arena.resize(start + lut_len, 0.0);
+        build_lut_raw_into(codebook, &r.query, m, dsub, &mut lut_arena[start..]);
+    }
     let mut jobs = Vec::with_capacity(reqs.len());
-    for (r, lists) in reqs.iter().zip(&filtered) {
-        anyhow::ensure!(r.query.len() % m == 0, "query dim not divisible by m");
-        let dsub = r.query.len() / m;
-        jobs.push(ScanJob {
-            query: &r.query,
-            lists,
-            lut: build_lut_from_raw(codebook, &r.query, m, dsub),
-            nprobe,
-        });
+    for ((r, lists), lut) in
+        reqs.iter().zip(&filtered).zip(lut_arena.chunks_exact(lut_len))
+    {
+        jobs.push(ScanJob { query: &r.query, lists, lut, nprobe });
     }
     let results = node.scan_jobs(&jobs, codebook)?;
     Ok(reqs

@@ -7,16 +7,33 @@
 //! the scalar reference by unit + property tests.
 
 use super::codebook::{PqCodebook, KSUB};
+use crate::kselect::DistanceSink;
 
 /// Build the (m, 256) distance lookup table for one query.
 pub fn build_lut(cb: &PqCodebook, query: &[f32]) -> Vec<f32> {
     assert_eq!(query.len(), cb.d);
-    let dsub = cb.dsub();
     let mut lut = vec![0.0f32; cb.m * KSUB];
-    for i in 0..cb.m {
+    build_lut_raw_into(&cb.centroids, query, cb.m, cb.dsub(), &mut lut);
+    lut
+}
+
+/// Build a (m, 256) LUT into a caller-provided buffer straight from the
+/// raw (m, 256, dsub) centroid tensor — no codebook construction, no
+/// centroid copy, no allocation (the arena path of a dispatch round).
+pub fn build_lut_raw_into(
+    centroids: &[f32],
+    query: &[f32],
+    m: usize,
+    dsub: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(query.len(), m * dsub);
+    assert_eq!(centroids.len(), m * KSUB * dsub);
+    assert_eq!(out.len(), m * KSUB);
+    for i in 0..m {
         let sub = &query[i * dsub..(i + 1) * dsub];
-        let cents = &cb.centroids[i * KSUB * dsub..(i + 1) * KSUB * dsub];
-        let row = &mut lut[i * KSUB..(i + 1) * KSUB];
+        let cents = &centroids[i * KSUB * dsub..(i + 1) * KSUB * dsub];
+        let row = &mut out[i * KSUB..(i + 1) * KSUB];
         for (c, slot) in row.iter_mut().enumerate() {
             let cent = &cents[c * dsub..(c + 1) * dsub];
             let mut acc = 0.0f32;
@@ -27,7 +44,6 @@ pub fn build_lut(cb: &PqCodebook, query: &[f32]) -> Vec<f32> {
             *slot = acc;
         }
     }
-    lut
 }
 
 /// Scan `n` PQ codes against a LUT, returning one distance per code.
@@ -137,6 +153,47 @@ pub fn adc_one(code: &[u8], lut: &[f32]) -> f32 {
     code.iter().enumerate().map(|(i, &c)| lut[i * KSUB + c as usize]).sum()
 }
 
+/// Tile width of the fused scan+select path: distances are staged through
+/// an L1-resident scratch tile (4 KiB of f32) between the m-specialized
+/// scan kernels and the selector, so no O(n) distance buffer ever exists.
+pub const FUSED_TILE: usize = 1024;
+
+/// Fused scan+select over one list's code block, in place: scan `codes`
+/// (length `ids.len() * m`) against `lut` and stream every distance into
+/// `sink` tagged with its gather-order position (`order_base + i`) and
+/// global id (`ids[i]`).
+///
+/// This is the per-list entry point of the zero-copy pipeline: a shard
+/// scan calls it once per probed list with the list's in-place slices —
+/// no gather copy, no materialized distance vector. `scratch` is a
+/// reusable tile buffer (grown once to [`FUSED_TILE`], then steady-state
+/// allocation-free); tiling keeps the staging L1-resident while reusing
+/// the unrolled / cache-blocked `adc_scan_into` kernels per PQ width.
+pub fn scan_list_into_sink<S: DistanceSink>(
+    codes: &[u8],
+    m: usize,
+    lut: &[f32],
+    ids: &[u64],
+    order_base: u64,
+    scratch: &mut Vec<f32>,
+    sink: &mut S,
+) {
+    let n = ids.len();
+    assert_eq!(codes.len(), n * m);
+    if scratch.len() < FUSED_TILE {
+        scratch.resize(FUSED_TILE, 0.0);
+    }
+    let mut off = 0usize;
+    while off < n {
+        let t = (n - off).min(FUSED_TILE);
+        adc_scan_into(&codes[off * m..(off + t) * m], t, m, lut, &mut scratch[..t]);
+        for (i, &d) in scratch[..t].iter().enumerate() {
+            sink.offer(d, order_base + (off + i) as u64, ids[off + i]);
+        }
+        off += t;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +270,72 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn raw_lut_matches_codebook_lut() {
+        let mut rng = Rng::new(9);
+        let (n, d, m) = (400, 16, 4);
+        let data = rng.normal_vec(n * d);
+        let cb = PqCodebook::train(&data, n, d, m, 5);
+        let q = rng.normal_vec(d);
+        let want = build_lut(&cb, &q);
+        let mut got = vec![0.0f32; m * KSUB];
+        build_lut_raw_into(&cb.centroids, &q, m, cb.dsub(), &mut got);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_list_scan_matches_flat_scan() {
+        // Per-list fused scan+select over in-place slices must reproduce
+        // the gather-then-scan-then-sort reference bit for bit, across
+        // tile boundaries (n > FUSED_TILE) and tie groups.
+        use crate::kselect::FusedSelector;
+        let mut rng = Rng::new(10);
+        for &m in &[4usize, 16, 64] {
+            let lut: Vec<f32> =
+                (0..m * KSUB).map(|_| (rng.below(8) as f32) * 0.5).collect();
+            let lens = [3usize, 0, FUSED_TILE + 37, 129];
+            let lists: Vec<(Vec<u8>, Vec<u64>)> = lens
+                .iter()
+                .scan(0u64, |next_id, &n| {
+                    let codes =
+                        (0..n * m).map(|_| rng.below(256) as u8).collect();
+                    let ids = (*next_id..*next_id + n as u64).collect();
+                    *next_id += n as u64;
+                    Some((codes, ids))
+                })
+                .collect();
+            let k = 25;
+            let mut sel = FusedSelector::new(k);
+            let mut scratch = Vec::new();
+            let mut order = 0u64;
+            for (codes, ids) in &lists {
+                scan_list_into_sink(codes, m, &lut, ids, order, &mut scratch, &mut sel);
+                order += ids.len() as u64;
+            }
+            let mut got = Vec::new();
+            sel.emit_into(&mut got);
+
+            // Reference: concatenate, scan flat, stable sort, truncate.
+            let flat_codes: Vec<u8> =
+                lists.iter().flat_map(|(c, _)| c.iter().copied()).collect();
+            let flat_ids: Vec<u64> =
+                lists.iter().flat_map(|(_, i)| i.iter().copied()).collect();
+            let dists = adc_scan(&flat_codes, flat_ids.len(), m, &lut);
+            let mut all: Vec<(f32, u64)> =
+                dists.iter().zip(&flat_ids).map(|(&d, &i)| (d, i)).collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            all.truncate(k);
+            assert_eq!(got.len(), all.len(), "m={m}");
+            for (g, w) in got.iter().zip(&all) {
+                assert_eq!(g.0.to_bits(), w.0.to_bits(), "m={m}");
+                assert_eq!(g.1, w.1, "m={m}: tie order must match gather order");
+            }
+        }
     }
 
     #[test]

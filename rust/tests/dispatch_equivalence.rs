@@ -15,7 +15,7 @@ use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
-use chameleon::kselect::HierarchicalConfig;
+use chameleon::kselect::{HierarchicalConfig, SelectMode};
 use chameleon::pq::scan::{adc_scan, build_lut};
 use chameleon::util::rng::Rng;
 
@@ -45,7 +45,10 @@ fn build_nodes(idx: &IvfPqIndex, n_nodes: usize, k: usize) -> Vec<MemoryNode> {
         .map(|i| {
             let mut node =
                 MemoryNode::new(Shard::carve(idx, i, n_nodes), ScanEngine::Native, k);
-            // Exact K-selection for strict equivalence checking.
+            // This suite pins the *hierarchical* selection path (in its
+            // exact configuration) for strict equivalence checking; the
+            // fused serving default is pinned by tests/scan_pipeline.rs.
+            node.select = SelectMode::Hierarchical;
             node.kcfg = HierarchicalConfig::exact(k, node.kcfg.num_lanes);
             node
         })

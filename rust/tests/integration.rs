@@ -55,6 +55,10 @@ fn pjrt_scan_matches_native_scan() {
     let shard_native = Shard::carve(&index, 0, 1);
     let shard_pjrt = Shard::carve(&index, 0, 1);
     let mut native = MemoryNode::new(shard_native, ScanEngine::Native, 10);
+    // The artifact implements the approximate hierarchical top-K; compare
+    // against the software model of the same module, not the fused exact
+    // serving selector.
+    native.select = chameleon::kselect::SelectMode::Hierarchical;
     let mut pjrt = MemoryNode::with_pjrt(shard_pjrt, &rt, 10, 3).unwrap();
 
     for qi in 0..4 {

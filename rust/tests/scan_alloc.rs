@@ -1,0 +1,99 @@
+//! Steady-state allocation pin for the zero-copy scan pipeline.
+//!
+//! A counting global allocator measures how many heap allocations one
+//! batched dispatch round performs. After warmup (scratch tiles, selector
+//! pools, LUT arena and round maps grown once), every identical round
+//! must allocate exactly the same, bounded amount — the per-job result
+//! vectors and round bookkeeping, never per-code or per-list copies. A
+//! drifting count means a reuse buffer regressed into per-round
+//! allocation.
+//!
+//! This file holds a single test on purpose: the counter is global, so
+//! no sibling test may run concurrently in this binary.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::util::rng::Rng;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_rounds_allocate_a_constant_bounded_amount() {
+    let mut rng = Rng::new(41);
+    let (n, d, m, nlist) = (3000, 32, 8, 32);
+    let data = rng.normal_vec(n * d);
+    let idx = IvfPqIndex::build(&data, n, d, m, nlist, 3);
+    let nodes: Vec<MemoryNode> = (0..2)
+        .map(|i| MemoryNode::new(Shard::carve(&idx, i, 2), ScanEngine::Native, 10))
+        .collect();
+    let mut disp = Dispatcher::new(nodes, 10);
+    // Inline dispatch: thread spawns would charge runtime allocations to
+    // the round. The scan/select/arena reuse under test is identical at
+    // any width.
+    disp.n_threads = 1;
+
+    let queries: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(d)).collect();
+    let lists: Vec<Vec<u32>> = queries.iter().map(|q| idx.probe(q, 8)).collect();
+    let batch: Vec<BatchQuery> = queries
+        .iter()
+        .zip(&lists)
+        .map(|(q, l)| BatchQuery { query: q, lists: l })
+        .collect();
+
+    // Warmup: grows the LUT arena, distance tiles, selector pool and
+    // round maps to their steady-state capacity.
+    for _ in 0..3 {
+        disp.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
+    }
+
+    let mut per_round = Vec::new();
+    for _ in 0..5 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let r = disp.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(r.len(), batch.len());
+        drop(r);
+        per_round.push(after - before);
+    }
+    let min = *per_round.iter().min().unwrap();
+    let max = *per_round.iter().max().unwrap();
+    assert_eq!(
+        min, max,
+        "steady-state rounds must allocate a constant amount: {per_round:?}"
+    );
+    // 4 jobs x 2 nodes: per-job top-K vectors + round bookkeeping only.
+    // Gather copies / per-query LUT or scratch allocation would blow far
+    // past this.
+    assert!(max <= 96, "round allocated {max} times: {per_round:?}");
+}

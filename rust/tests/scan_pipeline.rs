@@ -1,0 +1,251 @@
+//! Correctness harness for the zero-copy list-major scan pipeline.
+//!
+//! Property: for random indexes and any node count in 1..=8, the
+//! gather-free fused scan+select path — single-query and list-major
+//! batched, in both [`SelectMode`]s (the hierarchical queue in its exact
+//! configuration) — reproduces the flat-scan reference's distance bits
+//! rank by rank, and a batched round is bit-identical (ids included) to
+//! the single-query path. On a single node in exact mode the fused
+//! selector's `(dist, gather-order)` key pins the *full* stable-sort
+//! order, ids and all. (Across nodes, which member of an equal-distance
+//! tie group survives the k boundary is representation-defined — PQ code
+//! collisions make tie groups real — so the cross-node pin is on
+//! distance bits.)
+//!
+//! Also pins the satellite rewrites: partial-selection `probe` and the
+//! fused `IvfPqIndex::search` against their full-sort references.
+
+use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::kselect::{HierarchicalConfig, SelectMode};
+use chameleon::pq::scan::{adc_scan, build_lut};
+use chameleon::util::rng::Rng;
+
+struct Universe {
+    idx: IvfPqIndex,
+    d: usize,
+    k: usize,
+    nprobe: usize,
+}
+
+fn random_universe(rng: &mut Rng) -> Universe {
+    let m = [4usize, 8][rng.below(2)];
+    let dsub = [2usize, 4][rng.below(2)];
+    let d = m * dsub;
+    let n = 400 + rng.below(500);
+    let nlist = 8 + rng.below(17);
+    let data = rng.normal_vec(n * d);
+    let idx = IvfPqIndex::build(&data, n, d, m, nlist, rng.next_u64());
+    let k = 1 + rng.below(16);
+    let nprobe = 1 + rng.below(nlist);
+    Universe { idx, d, k, nprobe }
+}
+
+fn build_nodes(
+    idx: &IvfPqIndex,
+    n_nodes: usize,
+    k: usize,
+    select: SelectMode,
+) -> Vec<MemoryNode> {
+    (0..n_nodes)
+        .map(|i| {
+            let mut node =
+                MemoryNode::new(Shard::carve(idx, i, n_nodes), ScanEngine::Native, k);
+            node.select = select;
+            // Exact queues so the hierarchical mode is strictly checkable.
+            node.kcfg = HierarchicalConfig::exact(k, node.kcfg.num_lanes);
+            node
+        })
+        .collect()
+}
+
+/// Flat-scan reference: ADC over every probed list in probe order, stable
+/// sort by distance, truncate to k — the ground truth both select modes
+/// must reproduce.
+fn flat_scan_reference(
+    idx: &IvfPqIndex,
+    query: &[f32],
+    lists: &[u32],
+    k: usize,
+) -> Vec<(f32, u64)> {
+    let lut = build_lut(&idx.pq, query);
+    let mut all: Vec<(f32, u64)> = Vec::new();
+    for &l in lists {
+        let codes = &idx.list_codes[l as usize];
+        let ids = &idx.list_ids[l as usize];
+        let dists = adc_scan(codes, ids.len(), idx.m, &lut);
+        for (i, &d) in dists.iter().enumerate() {
+            all.push((d, ids[i]));
+        }
+    }
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    all.truncate(k);
+    all
+}
+
+/// Distance bits must match rank by rank (the exact-selection multiset is
+/// unique even where tie-group membership at the k boundary is not).
+fn assert_dist_bits(got: &[(f32, u64)], want: &[(f32, u64)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (rank, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.0.to_bits(),
+            w.0.to_bits(),
+            "{ctx}: distance bits at rank {rank}: {} vs {}",
+            g.0,
+            w.0
+        );
+    }
+}
+
+/// The property body for one node count: for both select modes, the
+/// gather-free single-query scan and the list-major batched round
+/// reproduce the flat-scan reference, and batched == single bit-for-bit
+/// (ids included) within a mode.
+fn check_pipeline(n_nodes: usize, cases: usize, base_seed: u64) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let u = random_universe(&mut rng);
+        let queries: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(u.d)).collect();
+        let lists: Vec<Vec<u32>> =
+            queries.iter().map(|q| u.idx.probe(q, u.nprobe)).collect();
+        for select in [SelectMode::Exact, SelectMode::Hierarchical] {
+            let ctx = format!("nodes={n_nodes} seed={seed} {select:?}");
+            let mut disp =
+                Dispatcher::new(build_nodes(&u.idx, n_nodes, u.k, select), u.k);
+            disp.n_threads = [0usize, 1, 2][rng.below(3)];
+
+            let mut singles = Vec::new();
+            for (q, l) in queries.iter().zip(&lists) {
+                let got = disp.search(q, &u.idx.pq.centroids, l, u.nprobe).unwrap();
+                let want = flat_scan_reference(&u.idx, q, l, u.k);
+                assert_dist_bits(&got.topk, &want, &format!("{ctx} single"));
+                assert_eq!(got.n_scanned, u.idx.scan_count(l), "{ctx}");
+                singles.push(got.topk);
+            }
+
+            // List-major batched round: same bits as the single-query
+            // path, ids included (the (dist, order) key pins ties even
+            // though the round streams lists in a different order).
+            let batch: Vec<BatchQuery> = queries
+                .iter()
+                .zip(&lists)
+                .map(|(q, l)| BatchQuery { query: q, lists: l })
+                .collect();
+            let got_batch =
+                disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe).unwrap();
+            assert_eq!(got_batch.len(), queries.len());
+            for (qi, (got, single)) in got_batch.iter().zip(&singles).enumerate() {
+                assert_eq!(
+                    &got.topk, single,
+                    "{ctx} query {qi}: batched round must be bit-identical \
+                     to the single-query scan"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scan_pipeline_equivalence_1_node() {
+    check_pipeline(1, 3, 0x5CA_0001);
+}
+
+#[test]
+fn scan_pipeline_equivalence_2_nodes() {
+    check_pipeline(2, 3, 0x5CA_0002);
+}
+
+#[test]
+fn scan_pipeline_equivalence_4_nodes() {
+    check_pipeline(4, 3, 0x5CA_0004);
+}
+
+#[test]
+fn scan_pipeline_equivalence_8_nodes() {
+    check_pipeline(8, 3, 0x5CA_0008);
+}
+
+/// On a single node in exact mode, the fused path reproduces the flat
+/// reference's *ids* exactly, tie groups included: the `(dist, order)`
+/// selection key is the stable-sort order.
+#[test]
+fn single_node_exact_mode_pins_full_order() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..4 {
+        let u = random_universe(&mut rng);
+        let mut disp =
+            Dispatcher::new(build_nodes(&u.idx, 1, u.k, SelectMode::Exact), u.k);
+        for _ in 0..3 {
+            let q = rng.normal_vec(u.d);
+            let l = u.idx.probe(&q, u.nprobe);
+            let got = disp.search(&q, &u.idx.pq.centroids, &l, u.nprobe).unwrap();
+            let want = flat_scan_reference(&u.idx, &q, &l, u.k);
+            assert_eq!(got.topk.len(), want.len());
+            for (g, w) in got.topk.iter().zip(&want) {
+                assert_eq!(g.0.to_bits(), w.0.to_bits());
+                assert_eq!(g.1, w.1, "ids must match in stable-sort order");
+            }
+        }
+    }
+}
+
+/// Satellite pin: the partial-selection probe returns exactly what the
+/// old full-sort probe returned, in the same order.
+#[test]
+fn probe_partial_selection_matches_full_sort() {
+    let mut rng = Rng::new(0xBEE);
+    for _ in 0..5 {
+        let u = random_universe(&mut rng);
+        for _ in 0..4 {
+            let q = rng.normal_vec(u.d);
+            for nprobe in [0usize, 1, 3, u.idx.nlist / 2, u.idx.nlist, u.idx.nlist + 5]
+            {
+                let got = u.idx.probe(&q, nprobe);
+                // Full-sort reference (the seed implementation).
+                let mut dists: Vec<(f32, u32)> = (0..u.idx.nlist)
+                    .map(|l| {
+                        let c = &u.idx.centroids[l * u.d..(l + 1) * u.d];
+                        let dist: f32 =
+                            q.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+                        (dist, l as u32)
+                    })
+                    .collect();
+                dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let want: Vec<u32> = dists[..nprobe.min(u.idx.nlist)]
+                    .iter()
+                    .map(|&(_, l)| l)
+                    .collect();
+                assert_eq!(got, want, "nprobe={nprobe}");
+            }
+        }
+    }
+}
+
+/// Satellite pin: the fused `IvfPqIndex::search` is bit-identical (ids
+/// and distance bits) to the seed's scan-all-then-full-sort pipeline.
+#[test]
+fn index_search_matches_full_sort_reference() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..5 {
+        let u = random_universe(&mut rng);
+        for _ in 0..4 {
+            let q = rng.normal_vec(u.d);
+            let (got_ids, got_d) = u.idx.search(&q, u.nprobe, u.k);
+            let lists = u.idx.probe(&q, u.nprobe);
+            let want = flat_scan_reference(&u.idx, &q, &lists, u.k);
+            assert_eq!(got_ids.len(), want.len());
+            for ((gi, gd), (wd, wi)) in got_ids
+                .iter()
+                .zip(&got_d)
+                .zip(want.iter().map(|&(d, i)| (d, i)))
+            {
+                assert_eq!(gd.to_bits(), wd.to_bits());
+                assert_eq!(*gi, wi, "search ids must keep stable-sort order");
+            }
+        }
+    }
+}
