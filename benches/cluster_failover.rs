@@ -1,0 +1,238 @@
+//! Bench: the elastic retrieval tier — failover correctness/cost and the
+//! hedged-dispatch tail-latency A/B (EXPERIMENTS.md §Cluster).
+//!
+//! Part 1 (failover): a 2-shard x 2-replica in-process cluster loses one
+//! node mid-workload; every query must still succeed with top-k
+//! bit-identical to a flat single-replica reference.
+//!
+//! Part 2 (hedging): one replica of shard 0 is an intermittent straggler
+//! (sleeps 25 ms on every 5th scan). Static primary selection pins it as
+//! primary in both arms, so the A/B isolates hedging: the no-hedge arm
+//! eats the straggle at p99, the hedged arm fires a duplicate scan to the
+//! healthy replica at the recent-p25 deadline and takes the first
+//! response. The p99 improvement is asserted (>= 1.5x) *after*
+//! `BENCH_cluster.json` is written, so a failing bar still uploads the
+//! numbers that explain it.
+//!
+//! Run: `cargo bench --bench cluster_failover`
+//! Quick CI profile: `CHAM_BENCH_QUICK=1 cargo bench --bench cluster_failover`
+
+use std::time::{Duration, Instant};
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::chamvs::ScanBackend;
+use chameleon::cluster::{
+    ClusterConfig, ClusterEngine, ClusterMap, ClusterNode, FailingBackend, HedgeConfig,
+    SelectPolicy, StragglerBackend,
+};
+use chameleon::config::SIFT;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::util::json::{obj, Json};
+use chameleon::util::stats::Summary;
+
+fn mk_node(index: &IvfPqIndex, shard: usize, n_shards: usize, k: usize) -> Box<dyn ScanBackend> {
+    Box::new(MemoryNode::new(
+        Shard::carve(index, shard, n_shards),
+        ScanEngine::Native,
+        k,
+    ))
+}
+
+struct Workload {
+    index: IvfPqIndex,
+    queries: Vec<Vec<f32>>,
+    lists: Vec<Vec<u32>>,
+    k: usize,
+}
+
+fn build_workload(n: usize, n_queries: usize) -> Workload {
+    let ds = &SIFT;
+    let data = SyntheticDataset::generate_sized(ds, n, n_queries, 7);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 96, 9);
+    let queries: Vec<Vec<f32>> =
+        (0..n_queries).map(|i| data.query(i).to_vec()).collect();
+    let lists: Vec<Vec<u32>> =
+        queries.iter().map(|q| index.probe(q, ds.nprobe)).collect();
+    Workload { index, queries, lists, k: 10 }
+}
+
+/// Part 1: kill one node mid-workload at replication 2; count failures
+/// and result divergence against the flat reference.
+fn failover_part(w: &Workload) -> Json {
+    let (n_nodes, replication) = (4usize, 2usize);
+    let n_shards = n_nodes / replication;
+    let nodes_flat: Vec<MemoryNode> = (0..n_shards)
+        .map(|s| MemoryNode::new(Shard::carve(&w.index, s, n_shards), ScanEngine::Native, w.k))
+        .collect();
+    let mut flat = Dispatcher::new(nodes_flat, w.k);
+    let nprobe = SIFT.nprobe;
+    let want: Vec<Vec<(f32, u64)>> = w
+        .queries
+        .iter()
+        .zip(&w.lists)
+        .map(|(q, l)| {
+            flat.search(q, &w.index.pq.centroids, l, nprobe).unwrap().topk
+        })
+        .collect();
+
+    // Static selection pins the victim as shard 0's primary, so it
+    // deterministically serves every shard-0 round until it dies at
+    // `kill_at` — health-aware selection is sticky (only the serving
+    // replica's EWMA warms) and could starve the victim of scans, making
+    // the mid-run death a coin flip instead of a certainty.
+    let kill_at = w.queries.len() / 6;
+    let plan = ClusterMap::carve_plan(n_nodes, replication).unwrap();
+    let nodes: Vec<ClusterNode> = plan
+        .into_iter()
+        .map(|(id, shard)| {
+            let backend = mk_node(&w.index, shard, n_shards, w.k);
+            let backend = if id == 0 {
+                Box::new(FailingBackend::new(backend, kill_at)) as Box<dyn ScanBackend>
+            } else {
+                backend
+            };
+            ClusterNode { id, shard, backend }
+        })
+        .collect();
+    let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+    let engine = ClusterEngine::new(nodes, n_shards, cfg).unwrap();
+    let mut disp = Dispatcher::clustered(engine, w.k);
+
+    let mut failed = 0usize;
+    let mut diverged = 0usize;
+    let t0 = Instant::now();
+    for ((q, l), wtop) in w.queries.iter().zip(&w.lists).zip(&want) {
+        match disp.search(q, &w.index.pq.centroids, l, nprobe) {
+            Ok(r) => {
+                if &r.topk != wtop {
+                    diverged += 1;
+                }
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = disp.cluster().unwrap().stats();
+    println!(
+        "  failover: {} queries, {failed} failed, {diverged} diverged, \
+         {} retries, {} failovers ({:.1} ms total)",
+        w.queries.len(),
+        stats.retries,
+        stats.failovers,
+        wall * 1e3
+    );
+    assert_eq!(failed, 0, "replication 2 must absorb a single node death");
+    assert_eq!(diverged, 0, "failover results must stay bit-identical");
+    assert!(stats.failovers >= 1, "the dead node's replica must serve");
+    obj(vec![
+        ("queries", Json::Num(w.queries.len() as f64)),
+        ("failed", Json::Num(failed as f64)),
+        ("diverged", Json::Num(diverged as f64)),
+        ("retries", Json::Num(stats.retries as f64)),
+        ("failovers", Json::Num(stats.failovers as f64)),
+        ("breaker_trips", Json::Num(stats.breaker_trips as f64)),
+        ("wall_s", Json::Num(wall)),
+    ])
+}
+
+/// One hedging arm: per-query latency samples under an injected
+/// intermittent straggler, hedged or not.
+fn hedge_arm(w: &Workload, hedge: bool, straggle: Duration, every: usize) -> (Summary, u64) {
+    let nodes = vec![
+        ClusterNode {
+            id: 0,
+            shard: 0,
+            backend: Box::new(StragglerBackend::new(
+                mk_node(&w.index, 0, 1, w.k),
+                straggle,
+                every,
+            )) as Box<dyn ScanBackend>,
+        },
+        ClusterNode { id: 1, shard: 0, backend: mk_node(&w.index, 0, 1, w.k) },
+    ];
+    let cfg = ClusterConfig {
+        // Static selection pins the straggler as primary in BOTH arms:
+        // the A/B isolates hedging from health-aware routing (which
+        // handles *persistent* slowness; hedging exists for the
+        // unpredictable straggles selection cannot foresee).
+        select: SelectPolicy::Static,
+        hedge: hedge.then_some(HedgeConfig {
+            quantile: 0.25,
+            floor: Duration::from_micros(100),
+        }),
+        ..Default::default()
+    };
+    let engine = ClusterEngine::new(nodes, 1, cfg).unwrap();
+    let mut disp = Dispatcher::clustered(engine, w.k);
+    let nprobe = SIFT.nprobe;
+    // Warm the recent-latency window so the hedged arm has a deadline.
+    for i in 0..12 {
+        let qi = i % w.queries.len();
+        disp.search(&w.queries[qi], &w.index.pq.centroids, &w.lists[qi], nprobe)
+            .unwrap();
+    }
+    let mut samples = Vec::with_capacity(w.queries.len());
+    for (q, l) in w.queries.iter().zip(&w.lists) {
+        let t0 = Instant::now();
+        disp.search(q, &w.index.pq.centroids, l, nprobe).unwrap();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    (Summary::of(&samples), disp.cluster().unwrap().stats().hedges)
+}
+
+fn main() {
+    let quick = std::env::var("CHAM_BENCH_QUICK").is_ok();
+    let (n, n_queries) = if quick { (6_000, 60) } else { (12_000, 150) };
+    println!("== bench group: cluster_failover (n={n}, q={n_queries}) ==");
+    let w = build_workload(n, n_queries);
+
+    // Part 1: failover correctness under a mid-workload node death.
+    let failover = failover_part(&w);
+
+    // Part 2: hedged-dispatch tail-latency A/B under an intermittent
+    // straggler (25 ms sleep on every 5th scan of shard 0's primary).
+    let straggle = Duration::from_millis(25);
+    let every = 5;
+    let (no_hedge, _) = hedge_arm(&w, false, straggle, every);
+    let (hedged, hedges_fired) = hedge_arm(&w, true, straggle, every);
+    let improvement = no_hedge.p99 / hedged.p99.max(1e-9);
+    println!("{}", no_hedge.render_ms("no_hedge"));
+    println!("{}", hedged.render_ms(&format!("hedged ({hedges_fired} fired)")));
+    println!("    -> p99 improvement: {improvement:.2}x (bar: 1.5x)");
+
+    // Machine-readable record, written BEFORE the acceptance assert so a
+    // failing bar still leaves the numbers that explain it (house rule
+    // from BENCH_scan.json).
+    let report = obj(vec![
+        ("bench", Json::Str("cluster_failover".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("failover", failover),
+        (
+            "hedge",
+            obj(vec![
+                ("straggle_ms", Json::Num(straggle.as_secs_f64() * 1e3)),
+                ("straggle_every", Json::Num(every as f64)),
+                ("hedges_fired", Json::Num(hedges_fired as f64)),
+                ("no_hedge_p50_ms", Json::Num(no_hedge.p50 * 1e3)),
+                ("no_hedge_p99_ms", Json::Num(no_hedge.p99 * 1e3)),
+                ("hedged_p50_ms", Json::Num(hedged.p50 * 1e3)),
+                ("hedged_p99_ms", Json::Num(hedged.p99 * 1e3)),
+                ("p99_improvement", Json::Num(improvement)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_cluster.json", report.dump())
+        .expect("writing BENCH_cluster.json");
+    println!("\nwrote BENCH_cluster.json");
+
+    // Acceptance bar (ISSUE 5): hedged dispatch must show a measured p99
+    // improvement under the injected straggler.
+    assert!(
+        improvement >= 1.5,
+        "hedged dispatch must improve p99 by >= 1.5x under the injected \
+         straggler, got {improvement:.2}x"
+    );
+}

@@ -1,14 +1,20 @@
 //! `chamvs-node` — a standalone ChamVS disaggregated memory-node server.
 //!
-//! The coordinator and the nodes agree on (dataset, n, seed, node-id,
-//! n-nodes), so each process deterministically rebuilds its shard; in the
+//! The coordinator and the nodes agree on (dataset, n, seed, shard,
+//! shards), so each process deterministically rebuilds its shard; in the
 //! paper the coordinator ships the shard into the node's DRAM at init
 //! time, which here would move the same bytes over localhost.
 //!
 //! Usage:
 //!   chamvs-node --dataset SIFT --n 20000 --node-id 0 --nodes 2 [--k 100]
+//!              [--shard S --shards N]
+//! `--shard`/`--shards` pick the `Shard::carve` slice explicitly so
+//! several processes can serve *replicas* of the same shard (defaults:
+//! shard = node-id, shards = nodes — the unreplicated legacy layout).
 //! Prints `LISTENING <addr>` once ready; the coordinator (see
-//! examples/disaggregated.rs) connects to that address.
+//! examples/disaggregated.rs) connects to that address. The process exits
+//! on a client Shutdown frame, or after a Drain frame once its last
+//! connection closes.
 
 use anyhow::Result;
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
@@ -33,11 +39,19 @@ fn run() -> Result<()> {
     let n = args.get_usize("n", 20_000);
     let node_id = args.get_usize("node-id", 0);
     let n_nodes = args.get_usize("nodes", 1);
+    // Replication: several node processes may carve the SAME shard.
+    let shard_id = args.get_usize("shard", node_id);
+    let n_shards = args.get_usize("shards", n_nodes).max(1);
     let k = args.get_usize("k", 100);
     let seed = args.get_u64("seed", 42);
+    anyhow::ensure!(
+        shard_id < n_shards,
+        "--shard {shard_id} out of range for --shards {n_shards}"
+    );
 
     eprintln!(
-        "[chamvs-node {node_id}/{n_nodes}] building shard ({} n={n})",
+        "[chamvs-node {node_id}/{n_nodes}] building shard {shard_id}/{n_shards} \
+         ({} n={n})",
         ds.name
     );
     let data = SyntheticDataset::generate_sized(ds, n, 16, seed);
@@ -47,7 +61,7 @@ fn run() -> Result<()> {
 
     let mut server = NodeServer::spawn_with(
         move || {
-            let shard = Shard::carve(&index, node_id, n_nodes);
+            let shard = Shard::carve(&index, shard_id, n_shards);
             MemoryNode::new(shard, ScanEngine::Native, k)
         },
         codebook,

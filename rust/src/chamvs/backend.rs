@@ -70,6 +70,12 @@ pub trait ScanBackend: Send {
 
     /// Ask the backend to shut down (no-op for in-process nodes).
     fn shutdown(&mut self) {}
+
+    /// Ask the backend to retire gracefully: stop taking new work and
+    /// exit once idle. No-op for in-process nodes; a remote node forwards
+    /// a `Drain` frame so the `chamvs-node` process exits when its
+    /// connection closes (the cluster's live node-retirement path).
+    fn drain(&mut self) {}
 }
 
 /// Which Fig 9 system configuration.
@@ -235,7 +241,7 @@ impl SearchBackend {
     pub fn latency_model(&self, n_codes: usize) -> LatencyBreakdown {
         let ds = self.ds;
         let nlist = self.nlist();
-        let n_nodes = self.dispatcher.nodes.len().max(1);
+        let n_nodes = self.dispatcher.fan_out().max(1);
         let mut lat = LatencyBreakdown::default();
 
         // Stage 1: IVF index scan.
@@ -247,7 +253,7 @@ impl SearchBackend {
 
         // Stage 2+3: LUT construction + PQ scan.
         if self.kind.uses_fpga_scan() {
-            let fpga = self.dispatcher.nodes[0].fpga();
+            let fpga = self.dispatcher.fpga();
             let per_node = n_codes / n_nodes;
             let s = fpga.query_latency(per_node, ds.m, ds.nprobe, self.dispatcher.k);
             lat.lut_s = s.lut_s;

@@ -25,6 +25,16 @@
 //! and remote `chamvs-node` connections — a batched round over remote
 //! backends ships each node its whole job queue in one network round trip.
 //!
+//! A dispatcher may instead run over a replicated
+//! [`ClusterEngine`](crate::cluster::engine::ClusterEngine)
+//! ([`Dispatcher::clustered`]): rounds then fan out per *shard* with
+//! replica selection, retry-on-replica failover and optional hedging, and
+//! the per-shard winners feed the same k-way merge — results stay
+//! bit-identical to the flat node set as long as one replica per shard
+//! survives. Everything above this layer (speculation tickets, batched
+//! rounds, the retriever, the coordinator server) is oblivious to which
+//! engine runs the round.
+//!
 //! Speculative traffic ([`Dispatcher::submit`]) rides the same pool:
 //! queued tickets execute alongside the next batched round (or fan out in
 //! parallel on demand at [`Dispatcher::poll`]) and their results are
@@ -38,6 +48,8 @@ use anyhow::Result;
 
 use super::backend::{ScanBackend, ScanJob};
 use super::node::{MemoryNode, NodeResult};
+use crate::cluster::engine::ClusterEngine;
+use crate::hwmodel::fpga::FpgaModel;
 use crate::hwmodel::loggp::LogGp;
 use crate::pq::codebook::KSUB;
 use crate::pq::scan::build_lut_raw_into;
@@ -106,17 +118,24 @@ enum PendingState {
 /// [`ScanBackend`](super::backend::ScanBackend)).
 pub struct Dispatcher {
     pub nodes: Vec<Box<dyn ScanBackend>>,
+    /// Replicated-tier engine; when set, rounds run through it instead of
+    /// `nodes` (which stays empty) — see [`Dispatcher::clustered`].
+    cluster: Option<ClusterEngine>,
     pub net: LogGp,
     pub k: usize,
     /// Worker threads for node fan-out. 0 (the default) means one worker
     /// per node; values are clamped to the node count. 1 runs inline on
     /// the calling thread (the sequential baseline, no spawn overhead).
+    /// Ignored in cluster mode (the engine owns one worker per member).
     pub n_threads: usize,
     next_ticket: u64,
     pending: Vec<PendingScan>,
     /// Reusable per-round LUT arena: one (m, 256) table per job, built in
     /// place each round (steady state allocates nothing).
     lut_arena: Vec<f32>,
+    /// Latency-model fallback when no backend is reachable directly
+    /// (cluster mode owns its backends inside worker threads).
+    fallback_fpga: FpgaModel,
 }
 
 impl Dispatcher {
@@ -136,12 +155,61 @@ impl Dispatcher {
     pub fn over(nodes: Vec<Box<dyn ScanBackend>>, k: usize) -> Dispatcher {
         Dispatcher {
             nodes,
+            cluster: None,
             net: LogGp::default(),
             k,
             n_threads: 0,
             next_ticket: 0,
             pending: Vec::new(),
             lut_arena: Vec::new(),
+            fallback_fpga: FpgaModel::default(),
+        }
+    }
+
+    /// Dispatcher over a replicated cluster engine: rounds fan out per
+    /// shard with replica failover and optional hedging (see
+    /// [`crate::cluster`]). Results are bit-identical to a flat
+    /// [`Dispatcher::new`] over one node per shard while at least one
+    /// replica per shard survives.
+    pub fn clustered(engine: ClusterEngine, k: usize) -> Dispatcher {
+        let mut d = Dispatcher::over(Vec::new(), k);
+        d.cluster = Some(engine);
+        d
+    }
+
+    /// The cluster engine, if this dispatcher runs the replicated tier.
+    pub fn cluster(&self) -> Option<&ClusterEngine> {
+        self.cluster.as_ref()
+    }
+
+    /// Mutable cluster engine (membership transitions between rounds).
+    pub fn cluster_mut(&mut self) -> Option<&mut ClusterEngine> {
+        self.cluster.as_mut()
+    }
+
+    pub fn is_clustered(&self) -> bool {
+        self.cluster.is_some()
+    }
+
+    /// How many scan targets one round fans out to: shards in cluster
+    /// mode, nodes otherwise.
+    pub fn fan_out(&self) -> usize {
+        match &self.cluster {
+            Some(c) => c.n_shards(),
+            None => self.nodes.len(),
+        }
+    }
+
+    /// The FPGA cycle model pricing scans on this tier (first node's
+    /// model in flat mode; the shared default in cluster mode, matching
+    /// what remote nodes carry).
+    pub fn fpga(&self) -> &FpgaModel {
+        if let Some(c) = &self.cluster {
+            return c.fpga();
+        }
+        match self.nodes.first() {
+            Some(n) => n.fpga(),
+            None => &self.fallback_fpga,
         }
     }
 
@@ -217,14 +285,18 @@ impl Dispatcher {
         nprobe: usize,
         drain_speculative: bool,
     ) -> Result<Vec<SearchResult>> {
-        anyhow::ensure!(!self.nodes.is_empty(), "no memory nodes");
-        let m = self.nodes[0].m();
-        anyhow::ensure!(
-            self.nodes.iter().all(|n| n.m() == m),
-            "memory nodes disagree on PQ width m"
-        );
-        let need_lut = self.nodes.iter().any(|n| n.wants_lut());
-        let threads = self.effective_threads();
+        let (m, need_lut) = match &self.cluster {
+            Some(c) => (c.m(), c.wants_lut()),
+            None => {
+                anyhow::ensure!(!self.nodes.is_empty(), "no memory nodes");
+                let m = self.nodes[0].m();
+                anyhow::ensure!(
+                    self.nodes.iter().all(|n| n.m() == m),
+                    "memory nodes disagree on PQ width m"
+                );
+                (m, self.nodes.iter().any(|n| n.wants_lut()))
+            }
+        };
 
         // The query geometry a LUT-building round accepts: when this
         // round builds ADC tables, the query must match the codebook's
@@ -306,8 +378,21 @@ impl Dispatcher {
             jobs.push(ScanJob { query, lists, lut, nprobe: *sp_nprobe });
         }
 
-        let chunks = chunk_sizes(self.nodes.len(), threads);
-        let round = run_jobs(&mut self.nodes, &chunks, &jobs, codebook);
+        let (chunks, round) = match self.cluster.as_mut() {
+            Some(engine) => {
+                // Cluster mode: one replica answers per shard, each on
+                // its own worker — the wall partition is one chunk per
+                // shard.
+                (vec![1usize; engine.n_shards()], engine.run_round(&jobs, codebook))
+            }
+            None => {
+                let threads = self.effective_threads();
+                let chunks = chunk_sizes(self.nodes.len(), threads);
+                let round = run_jobs(&mut self.nodes, &chunks, &jobs, codebook);
+                (chunks, round)
+            }
+        };
+        let fan_out: usize = chunks.iter().sum();
         let per_job = match round {
             Ok(r) => r,
             Err(e) => {
@@ -318,7 +403,7 @@ impl Dispatcher {
         };
         let mut results: Vec<SearchResult> = Vec::with_capacity(per_job.len());
         for (node_results, job) in per_job.iter().zip(&jobs) {
-            results.push(self.aggregate(node_results, job, &chunks));
+            results.push(self.aggregate(node_results, job, &chunks, fan_out));
         }
         drop(jobs);
         self.lut_arena = arena;
@@ -336,19 +421,22 @@ impl Dispatcher {
     /// Merge one job's per-node results into a [`SearchResult`].
     /// `chunks` is the pool's node partition: the honest wall is the max
     /// across workers of the sum of their nodes' scan times (nodes within
-    /// one chunk run serially on that worker).
+    /// one chunk run serially on that worker). `fan_out` is the number of
+    /// scan targets the round broadcast to (nodes, or shards in cluster
+    /// mode), which prices the modeled network round trip.
     fn aggregate(
         &self,
         results: &[NodeResult],
         job: &ScanJob,
         chunks: &[usize],
+        fan_out: usize,
     ) -> SearchResult {
         let topk = merge_topk(results, self.k);
         let accel_s = results.iter().map(|r| r.modeled_s).fold(0.0, f64::max);
         let query_bytes = 4 * job.query.len() + 4 * job.lists.len();
         let result_bytes = 12 * self.k; // f32 dist + u64 id
         let network_s =
-            self.net.query_roundtrip(self.nodes.len(), query_bytes, result_bytes);
+            self.net.query_roundtrip(fan_out, query_bytes, result_bytes);
         let mut wall = 0.0f64;
         let mut start = 0usize;
         for &c in chunks {

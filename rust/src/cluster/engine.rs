@@ -1,0 +1,973 @@
+//! The replica-aware execution engine of the elastic retrieval tier: one
+//! persistent worker thread per member node (owning its [`ScanBackend`]),
+//! a per-round reply channel, and the failover/hedging state machine.
+//!
+//! A dispatch round sends each shard's job queue to one selected replica
+//! (breaker-closed first, latency-EWMA order under the default
+//! [`SelectPolicy::HealthAware`]). Because workers are persistent and
+//! replies arrive over a channel, the round never blocks on a single
+//! node:
+//!
+//! * **Failover** — a replica that returns an error (dead socket, injected
+//!   fault, poisoned connection) is recorded against its health and the
+//!   shard retries on the next replica. Replicas hold bit-identical
+//!   [`Shard::carve`](crate::ivf::shard::Shard::carve) slices and scans
+//!   are deterministic, so the merged top-K is identical to the healthy
+//!   cluster's as long as one replica per shard survives.
+//! * **Hedging** — with a [`HedgeConfig`], a shard whose reply has not
+//!   arrived by the recent-latency quantile deadline fires a duplicate
+//!   scan at the next replica; the first response wins and the loser is
+//!   discarded on arrival (its latency still feeds the health EWMA).
+//! * **Forced failover** — a shard with no reply after
+//!   [`ClusterConfig::attempt_timeout`] counts the outstanding attempts as
+//!   failures and tries the next replica, bounding detection of a hung
+//!   node (the remote transport's socket timeouts bound it first).
+//!
+//! Membership transitions ([`join`](ClusterEngine::join) /
+//! [`drain`](ClusterEngine::drain) / [`remove`](ClusterEngine::remove) /
+//! [`swap`](ClusterEngine::swap)) bump the [`ClusterMap`] epoch and take
+//! effect at the next round — the serving layer applies them between
+//! batches, so no in-flight request ever sees a half-updated view.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::health::HealthTracker;
+use super::map::{ClusterMap, NodeId};
+use crate::chamvs::backend::{ScanBackend, ScanJob};
+use crate::chamvs::node::{MemoryNode, NodeResult, ScanEngine};
+use crate::hwmodel::fpga::FpgaModel;
+use crate::ivf::index::IvfPqIndex;
+use crate::ivf::shard::Shard;
+
+/// How a shard's primary replica is chosen each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectPolicy {
+    /// Deterministic map order (rotation only). Used by the hedging A/B
+    /// bench so both arms face the same primaries.
+    Static,
+    /// Breaker-closed replicas first, fastest EWMA first (the default).
+    HealthAware,
+}
+
+/// Tail-latency hedging knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct HedgeConfig {
+    /// Recent-latency quantile that sets the hedge deadline (e.g. 0.95:
+    /// a scan slower than the recent p95 gets a duplicate fired).
+    pub quantile: f64,
+    /// Deadline floor — never hedge earlier than this, so micro-latency
+    /// jitter can't trigger hedge storms.
+    pub floor: Duration,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> HedgeConfig {
+        HedgeConfig { quantile: 0.95, floor: Duration::from_micros(200) }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Hedging (None = no duplicate scans; failover still works).
+    pub hedge: Option<HedgeConfig>,
+    /// Forced-failover deadline for a shard with zero replies.
+    pub attempt_timeout: Duration,
+    /// Consecutive failures that open a node's circuit breaker.
+    pub breaker_threshold: u32,
+    /// Primary-selection policy.
+    pub select: SelectPolicy,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            hedge: None,
+            attempt_timeout: Duration::from_secs(10),
+            breaker_threshold: 3,
+            select: SelectPolicy::HealthAware,
+        }
+    }
+}
+
+/// Counters over the engine's lifetime (observable via
+/// [`ClusterEngine::stats`]; the CLI report and the chaos smoke print
+/// them).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterStats {
+    /// Rounds executed.
+    pub rounds: u64,
+    /// Scan attempts sent to workers (primaries + retries + hedges).
+    pub attempts: u64,
+    /// Retries after a replica failure (failover sends).
+    pub retries: u64,
+    /// Rounds won by a retry replica (a failover actually served traffic).
+    pub failovers: u64,
+    /// Hedge scans fired.
+    pub hedges: u64,
+    /// Rounds won by the hedge replica.
+    pub hedge_wins: u64,
+    /// Circuit-breaker open transitions.
+    pub breaker_trips: u64,
+    /// Replies that arrived after their shard was already resolved.
+    pub late_responses: u64,
+}
+
+impl ClusterStats {
+    pub fn render(&self) -> String {
+        format!(
+            "rounds={} attempts={} retries={} failovers={} hedges={} \
+             hedge_wins={} breaker_trips={} late_responses={}",
+            self.rounds,
+            self.attempts,
+            self.retries,
+            self.failovers,
+            self.hedges,
+            self.hedge_wins,
+            self.breaker_trips,
+            self.late_responses
+        )
+    }
+}
+
+/// One member handed to the engine: identity, declared shard, backend.
+pub struct ClusterNode {
+    pub id: NodeId,
+    pub shard: usize,
+    pub backend: Box<dyn ScanBackend>,
+}
+
+/// An owned copy of one round's jobs, shared with the workers
+/// (hedged/raced scans outlive the dispatcher's borrowed job slices, so
+/// the cluster path pays one job copy per round for its fault
+/// tolerance). The codebook is invariant across rounds and shared via
+/// the engine's cached [`Arc`] instead of being re-copied.
+struct Round {
+    jobs: Vec<OwnedJob>,
+    codebook: Arc<Vec<f32>>,
+}
+
+struct OwnedJob {
+    query: Vec<f32>,
+    lists: Vec<u32>,
+    lut: Vec<f32>,
+    nprobe: usize,
+}
+
+/// One scan reply from a worker.
+struct ScanReply {
+    seq: u64,
+    shard: usize,
+    node: NodeId,
+    result: Result<Vec<NodeResult>>,
+    /// Worker-observed scan wall (execution on the replica, excluding
+    /// queue wait), feeding the EWMA and the hedge-deadline window.
+    latency_s: f64,
+}
+
+enum Command {
+    Scan { seq: u64, shard: usize, round: Arc<Round>, reply: Sender<ScanReply> },
+    /// Ask the backend to retire gracefully (remote: send a Drain frame).
+    Drain,
+    /// Stop the worker, killing the backend (remote: Shutdown frame).
+    Shutdown,
+    /// Stop the worker without killing the backend (connection just
+    /// drops; a drained remote node exits on disconnect).
+    Detach,
+}
+
+struct Worker {
+    tx: Sender<Command>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Worker {
+    fn spawn(id: NodeId, mut backend: Box<dyn ScanBackend>) -> Result<Worker> {
+        let (tx, rx) = channel::<Command>();
+        let handle = std::thread::Builder::new()
+            .name(format!("cluster-node-{id}"))
+            .spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Command::Scan { seq, shard, round, reply } => {
+                            let t0 = Instant::now();
+                            let jobs: Vec<ScanJob> = round
+                                .jobs
+                                .iter()
+                                .map(|j| ScanJob {
+                                    query: &j.query,
+                                    lists: &j.lists,
+                                    lut: &j.lut,
+                                    nprobe: j.nprobe,
+                                })
+                                .collect();
+                            let result = backend.scan_jobs(&jobs, &round.codebook);
+                            // The round may already be resolved (hedge
+                            // lost) and its receiver gone — ignore.
+                            let _ = reply.send(ScanReply {
+                                seq,
+                                shard,
+                                node: id,
+                                result,
+                                latency_s: t0.elapsed().as_secs_f64(),
+                            });
+                        }
+                        Command::Drain => backend.drain(),
+                        Command::Shutdown => {
+                            backend.shutdown();
+                            break;
+                        }
+                        Command::Detach => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawning cluster worker: {e}"))?;
+        Ok(Worker { tx, handle: Some(handle) })
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Detach);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-shard state of one in-flight round.
+struct ShardRound {
+    /// Selection-ordered candidate replicas (snapshot at round start).
+    cands: Vec<NodeId>,
+    /// Index of the next untried candidate.
+    next: usize,
+    /// Attempts in flight: (node, attempt kind, already penalized by a
+    /// forced-failover timeout — each hung attempt is recorded as a
+    /// failure at most once, not once per timeout window).
+    outstanding: Vec<(NodeId, Attempt, bool)>,
+    done: Option<Vec<NodeResult>>,
+    /// Armed hedge deadline; cleared once the hedge fires (a shard
+    /// hedges at most once per round).
+    hedge_at: Option<Instant>,
+    timeout_at: Instant,
+    /// Last failure seen, for the round's error message.
+    last_err: Option<anyhow::Error>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Attempt {
+    Primary,
+    Retry,
+    Hedge,
+}
+
+/// The elastic, replicated retrieval tier behind a
+/// [`Dispatcher`](crate::chamvs::dispatcher::Dispatcher).
+pub struct ClusterEngine {
+    map: ClusterMap,
+    health: HealthTracker,
+    workers: BTreeMap<NodeId, Worker>,
+    pub cfg: ClusterConfig,
+    stats: ClusterStats,
+    m: usize,
+    wants_lut: bool,
+    /// Members whose backend consumes dispatcher-built ADC tables, so
+    /// `wants_lut` can be recomputed when they leave (backends live
+    /// inside their workers and cannot be queried after spawn).
+    lut_nodes: std::collections::BTreeSet<NodeId>,
+    fpga: FpgaModel,
+    seq: u64,
+    /// One-copy codebook cache: rounds share one `Arc` instead of
+    /// re-copying ~100 KB per query. Validated by content comparison (a
+    /// cheap linear scan against the caller's slice), never by pointer
+    /// identity — a reallocated tensor at the same address must not
+    /// silently serve stale centroids.
+    codebook_cache: Option<Arc<Vec<f32>>>,
+}
+
+impl ClusterEngine {
+    /// Build an engine over an explicit member set. Validates PQ-width
+    /// agreement and full shard coverage.
+    pub fn new(
+        nodes: Vec<ClusterNode>,
+        n_shards: usize,
+        cfg: ClusterConfig,
+    ) -> Result<ClusterEngine> {
+        anyhow::ensure!(!nodes.is_empty(), "cluster needs at least one node");
+        let m = nodes[0].backend.m();
+        let mut engine = ClusterEngine {
+            map: ClusterMap::new(n_shards),
+            health: HealthTracker::new(cfg.breaker_threshold),
+            workers: BTreeMap::new(),
+            cfg,
+            stats: ClusterStats::default(),
+            m,
+            wants_lut: false,
+            lut_nodes: std::collections::BTreeSet::new(),
+            fpga: FpgaModel::default(),
+            seq: 0,
+            codebook_cache: None,
+        };
+        for node in nodes {
+            engine.join(node)?;
+        }
+        anyhow::ensure!(
+            engine.map.is_covered(),
+            "cluster does not cover all {} shards",
+            engine.map.n_shards()
+        );
+        Ok(engine)
+    }
+
+    /// Convenience builder: an in-process cluster over `n_nodes` fresh
+    /// [`MemoryNode`]s carved from `index` at replication factor
+    /// `replication` (the [`ClusterMap::carve_plan`] assignment).
+    pub fn local(
+        index: &IvfPqIndex,
+        n_nodes: usize,
+        replication: usize,
+        k: usize,
+        cfg: ClusterConfig,
+    ) -> Result<ClusterEngine> {
+        let (nodes, n_shards) = local_nodes(index, n_nodes, replication, k)?;
+        ClusterEngine::new(nodes, n_shards, cfg)
+    }
+
+    /// Add a member: spawns its worker and bumps the epoch. The node must
+    /// agree on the PQ width.
+    pub fn join(&mut self, node: ClusterNode) -> Result<u64> {
+        anyhow::ensure!(
+            node.backend.m() == self.m,
+            "node {} has PQ width m={} but the cluster uses m={}",
+            node.id,
+            node.backend.m(),
+            self.m
+        );
+        let epoch = self.map.join(node.id, node.shard)?;
+        if node.backend.wants_lut() {
+            self.lut_nodes.insert(node.id);
+        }
+        self.wants_lut = !self.lut_nodes.is_empty();
+        let worker = Worker::spawn(node.id, node.backend)?;
+        self.workers.insert(node.id, worker);
+        Ok(epoch)
+    }
+
+    /// Start retiring a member: excluded from new selection; a remote
+    /// backend is asked to drain (it exits once its connection closes at
+    /// [`remove`](Self::remove) time).
+    pub fn drain(&mut self, id: NodeId) -> Result<u64> {
+        let epoch = self.map.drain(id)?;
+        if let Some(w) = self.workers.get(&id) {
+            let _ = w.tx.send(Command::Drain);
+        }
+        Ok(epoch)
+    }
+
+    /// Remove a member: drops its worker (and connection) without killing
+    /// the backend process — a previously drained `chamvs-node` exits on
+    /// the disconnect.
+    pub fn remove(&mut self, id: NodeId) -> Result<u64> {
+        let epoch = self.map.remove(id)?;
+        self.workers.remove(&id); // Worker::drop detaches + joins
+        self.health.forget(id);
+        // Removing the last LUT consumer lets later rounds skip the
+        // per-query ADC-table build entirely.
+        self.lut_nodes.remove(&id);
+        self.wants_lut = !self.lut_nodes.is_empty();
+        Ok(epoch)
+    }
+
+    /// Live rebalance: replace the whole member set in one epoch (the new
+    /// nodes were re-carved from the index at a possibly different shard
+    /// count). Health history restarts; the map epoch stays monotonic.
+    pub fn swap(&mut self, nodes: Vec<ClusterNode>, n_shards: usize) -> Result<u64> {
+        anyhow::ensure!(!nodes.is_empty(), "cluster needs at least one node");
+        let m = nodes[0].backend.m();
+        anyhow::ensure!(
+            nodes.iter().all(|n| n.backend.m() == m),
+            "rebalanced nodes disagree on PQ width"
+        );
+        let members: Vec<(NodeId, usize)> =
+            nodes.iter().map(|n| (n.id, n.shard)).collect();
+        let lut_nodes: std::collections::BTreeSet<NodeId> = nodes
+            .iter()
+            .filter(|n| n.backend.wants_lut())
+            .map(|n| n.id)
+            .collect();
+        // Validate the membership on a CLONE, and spawn the replacement
+        // workers, before committing anything: a validation error or a
+        // failed thread spawn must leave the live engine fully intact
+        // (old map, old workers) instead of half-swapped.
+        let mut new_map = self.map.clone();
+        let epoch = new_map.swap(n_shards, &members)?;
+        let mut workers = BTreeMap::new();
+        for node in nodes {
+            workers.insert(node.id, Worker::spawn(node.id, node.backend)?);
+        }
+        self.map = new_map;
+        self.m = m;
+        self.wants_lut = !lut_nodes.is_empty();
+        self.lut_nodes = lut_nodes;
+        self.workers = workers; // old workers detach on drop
+        self.health = HealthTracker::new(self.cfg.breaker_threshold);
+        Ok(epoch)
+    }
+
+    /// Re-carve an in-process cluster from `index` at a new shape — the
+    /// "live shard rebalancing" path over [`Shard::carve`].
+    pub fn rebalance_local(
+        &mut self,
+        index: &IvfPqIndex,
+        n_nodes: usize,
+        replication: usize,
+        k: usize,
+    ) -> Result<u64> {
+        let (nodes, n_shards) = local_nodes(index, n_nodes, replication, k)?;
+        self.swap(nodes, n_shards)
+    }
+
+    /// Kill every backend (remote: Shutdown frames) and join the workers.
+    pub fn shutdown_all(&mut self) {
+        for w in std::mem::take(&mut self.workers).into_values() {
+            let _ = w.tx.send(Command::Shutdown);
+            // Worker::drop joins the thread.
+        }
+    }
+
+    pub fn map(&self) -> &ClusterMap {
+        &self.map
+    }
+
+    pub fn health(&self) -> &HealthTracker {
+        &self.health
+    }
+
+    pub fn stats(&self) -> ClusterStats {
+        self.stats
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.map.epoch()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.map.n_shards()
+    }
+
+    /// PQ width shared by every member.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Whether any member consumes dispatcher-built ADC tables.
+    pub fn wants_lut(&self) -> bool {
+        self.wants_lut
+    }
+
+    /// The FPGA cycle model pricing scans on this tier (replicas share
+    /// the default model, as remote nodes do).
+    pub fn fpga(&self) -> &FpgaModel {
+        &self.fpga
+    }
+
+    /// The round's shared codebook: reuse the cached `Arc` while the
+    /// caller keeps passing the same centroid tensor, copy once when it
+    /// changes. Validation is a content comparison (cheap next to a
+    /// scan; bit-equal floats only), so a reallocated tensor can never
+    /// alias a stale cache entry.
+    fn shared_codebook(&mut self, codebook: &[f32]) -> Arc<Vec<f32>> {
+        if let Some(arc) = &self.codebook_cache {
+            if arc.len() == codebook.len()
+                && arc.iter().zip(codebook).all(|(a, b)| a.to_bits() == b.to_bits())
+            {
+                return arc.clone();
+            }
+        }
+        let arc = Arc::new(codebook.to_vec());
+        self.codebook_cache = Some(arc.clone());
+        arc
+    }
+
+    /// Assignment + health + counters, for `chameleon cluster`.
+    pub fn render_report(&self) -> String {
+        format!(
+            "{}\n{}\nstats: {}\n",
+            self.map.render(),
+            self.health.render(),
+            self.stats.render()
+        )
+    }
+
+    /// Execute one round of jobs across the cluster, returning results
+    /// shaped `[job][shard]` (shard order 0..S — the exact shape the
+    /// dispatcher's flat path produces per node, so the k-way merge and
+    /// every downstream consumer are unchanged).
+    pub fn run_round(
+        &mut self,
+        jobs: &[ScanJob<'_>],
+        codebook: &[f32],
+    ) -> Result<Vec<Vec<NodeResult>>> {
+        let n_shards = self.map.n_shards();
+        let n_jobs = jobs.len();
+        self.seq += 1;
+        self.stats.rounds += 1;
+        let seq = self.seq;
+        let round = Arc::new(Round {
+            jobs: jobs
+                .iter()
+                .map(|j| OwnedJob {
+                    query: j.query.to_vec(),
+                    lists: j.lists.to_vec(),
+                    lut: j.lut.to_vec(),
+                    nprobe: j.nprobe,
+                })
+                .collect(),
+            codebook: self.shared_codebook(codebook),
+        });
+        let (tx, rx): (Sender<ScanReply>, Receiver<ScanReply>) = channel();
+
+        let health_aware = self.cfg.select == SelectPolicy::HealthAware;
+        let hedge_deadline: Option<Duration> = self.cfg.hedge.and_then(|h| {
+            self.health
+                .deadline_s(h.quantile)
+                .map(|d| Duration::from_secs_f64(d).max(h.floor))
+        });
+
+        // Seed every shard with its primary attempt.
+        let now = Instant::now();
+        let mut states: Vec<ShardRound> = Vec::with_capacity(n_shards);
+        for shard in 0..n_shards {
+            let cands = self.health.order(&self.map.replicas(shard), health_aware);
+            anyhow::ensure!(
+                !cands.is_empty(),
+                "shard {shard} has no active replicas (epoch {})",
+                self.map.epoch()
+            );
+            let mut st = ShardRound {
+                cands,
+                next: 0,
+                outstanding: Vec::new(),
+                done: None,
+                hedge_at: hedge_deadline.map(|d| now + d),
+                timeout_at: now + self.cfg.attempt_timeout,
+                last_err: None,
+            };
+            let ok = send_next(&self.workers, &mut st, Attempt::Primary, seq, shard, &round, &tx);
+            anyhow::ensure!(
+                ok,
+                "shard {shard}: no reachable replica worker (epoch {})",
+                self.map.epoch()
+            );
+            self.stats.attempts += 1;
+            states.push(st);
+        }
+
+        // Event loop: replies, hedge deadlines, forced-failover timeouts.
+        let mut remaining = n_shards;
+        while remaining > 0 {
+            let now = Instant::now();
+            let mut next_event: Option<Instant> = None;
+            for shard in 0..n_shards {
+                let st = &mut states[shard];
+                if st.done.is_some() {
+                    continue;
+                }
+                // Hedge: fire a duplicate scan once the deadline passes.
+                if let Some(h) = st.hedge_at {
+                    if now >= h {
+                        st.hedge_at = None;
+                        let fired =
+                            send_next(&self.workers, st, Attempt::Hedge, seq, shard, &round, &tx);
+                        if fired {
+                            self.stats.attempts += 1;
+                            self.stats.hedges += 1;
+                        }
+                    } else {
+                        next_event = Some(next_event.map_or(h, |e| e.min(h)));
+                    }
+                }
+                // Forced failover: a shard with replies outstanding past
+                // the attempt timeout counts them failed and moves on —
+                // and once every replica has been tried, the round FAILS
+                // rather than waiting forever on a wedged backend (the
+                // bounded-detection contract; socket-backed nodes error
+                // out earlier via their own transport timeouts).
+                if now >= st.timeout_at {
+                    for (id, _, penalized) in st.outstanding.iter_mut() {
+                        if !*penalized {
+                            *penalized = true;
+                            if self.health.record_failure(*id) {
+                                self.stats.breaker_trips += 1;
+                            }
+                        }
+                    }
+                    if send_next(&self.workers, st, Attempt::Retry, seq, shard, &round, &tx) {
+                        self.stats.attempts += 1;
+                        self.stats.retries += 1;
+                        st.timeout_at = now + self.cfg.attempt_timeout;
+                    } else {
+                        anyhow::bail!(
+                            "shard {shard}: all replicas timed out or failed{}",
+                            match &st.last_err {
+                                Some(e) => format!(" (last error: {e:#})"),
+                                None => String::new(),
+                            }
+                        );
+                    }
+                }
+                let t = st.timeout_at;
+                next_event = Some(next_event.map_or(t, |e| e.min(t)));
+            }
+
+            let wait = match next_event {
+                Some(t) => t
+                    .saturating_duration_since(Instant::now())
+                    .max(Duration::from_micros(50)),
+                None => Duration::from_millis(25),
+            };
+            let reply = match rx.recv_timeout(wait) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all cluster workers exited mid-round")
+                }
+            };
+            if reply.seq != seq || reply.shard >= n_shards {
+                // Defensive: replies from an older round come over that
+                // round's own (dropped) channel, so this never fires —
+                // but a bug there must not corrupt this round.
+                continue;
+            }
+            let st = &mut states[reply.shard];
+            let attempt = match st
+                .outstanding
+                .iter()
+                .position(|&(id, _, _)| id == reply.node)
+            {
+                Some(i) => st.outstanding.remove(i).1,
+                None => Attempt::Primary,
+            };
+            match reply.result {
+                Ok(results) => {
+                    self.health.record_ok(reply.node, reply.latency_s);
+                    if st.done.is_some() {
+                        // A hedge/retry raced and lost; its latency still
+                        // warmed the health window above.
+                        self.stats.late_responses += 1;
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        results.len() == n_jobs,
+                        "node {} answered {} results for {} jobs",
+                        reply.node,
+                        results.len(),
+                        n_jobs
+                    );
+                    st.done = Some(results);
+                    remaining -= 1;
+                    match attempt {
+                        Attempt::Hedge => self.stats.hedge_wins += 1,
+                        Attempt::Retry => self.stats.failovers += 1,
+                        Attempt::Primary => {}
+                    }
+                }
+                Err(e) => {
+                    if self.health.record_failure(reply.node) {
+                        self.stats.breaker_trips += 1;
+                    }
+                    if st.done.is_some() {
+                        self.stats.late_responses += 1;
+                        continue;
+                    }
+                    st.last_err = Some(e);
+                    // Retry immediately unless another attempt (e.g. a
+                    // hedge) is still in flight for this shard.
+                    if st.outstanding.is_empty() {
+                        let sent = send_next(
+                            &self.workers,
+                            st,
+                            Attempt::Retry,
+                            seq,
+                            reply.shard,
+                            &round,
+                            &tx,
+                        );
+                        if sent {
+                            self.stats.attempts += 1;
+                            self.stats.retries += 1;
+                            st.timeout_at = Instant::now() + self.cfg.attempt_timeout;
+                        } else {
+                            anyhow::bail!(
+                                "shard {} failed on all replicas: {:#}",
+                                reply.shard,
+                                st.last_err.take().expect("just set")
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // Transpose [shard][job] -> [job][shard]; shard order preserved.
+        let mut per_job: Vec<Vec<NodeResult>> =
+            (0..n_jobs).map(|_| Vec::with_capacity(n_shards)).collect();
+        for st in states {
+            let results = st.done.expect("all shards resolved");
+            for (j, r) in results.into_iter().enumerate() {
+                per_job[j].push(r);
+            }
+        }
+        Ok(per_job)
+    }
+}
+
+impl Drop for ClusterEngine {
+    fn drop(&mut self) {
+        // Workers detach (connections close; backends are not killed) —
+        // matching the flat dispatcher, where dropping never sends
+        // Shutdown frames. Use `shutdown_all` to kill remote processes.
+        self.workers.clear();
+    }
+}
+
+/// The carve-plan node set for an in-process cluster: `n_shards =
+/// n_nodes / replication` fresh [`MemoryNode`]s over [`Shard::carve`]
+/// slices. Shared by [`ClusterEngine::local`] and
+/// [`ClusterEngine::rebalance_local`] so the build and rebalance paths
+/// cannot drift apart.
+fn local_nodes(
+    index: &IvfPqIndex,
+    n_nodes: usize,
+    replication: usize,
+    k: usize,
+) -> Result<(Vec<ClusterNode>, usize)> {
+    let plan = ClusterMap::carve_plan(n_nodes, replication)?;
+    let n_shards = n_nodes / replication;
+    let nodes = plan
+        .into_iter()
+        .map(|(id, shard)| ClusterNode {
+            id,
+            shard,
+            backend: Box::new(MemoryNode::new(
+                Shard::carve(index, shard, n_shards),
+                ScanEngine::Native,
+                k,
+            )) as Box<dyn ScanBackend>,
+        })
+        .collect();
+    Ok((nodes, n_shards))
+}
+
+/// Send the shard's next untried candidate a scan command. Returns false
+/// when every candidate has been tried (or has no live worker).
+fn send_next(
+    workers: &BTreeMap<NodeId, Worker>,
+    st: &mut ShardRound,
+    attempt: Attempt,
+    seq: u64,
+    shard: usize,
+    round: &Arc<Round>,
+    reply: &Sender<ScanReply>,
+) -> bool {
+    while st.next < st.cands.len() {
+        let id = st.cands[st.next];
+        st.next += 1;
+        if let Some(w) = workers.get(&id) {
+            let cmd = Command::Scan {
+                seq,
+                shard,
+                round: round.clone(),
+                reply: reply.clone(),
+            };
+            if w.tx.send(cmd).is_ok() {
+                st.outstanding.push((id, attempt, false));
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fault::FailingBackend;
+    use crate::util::rng::Rng;
+
+    fn toy_index() -> (IvfPqIndex, usize) {
+        let mut rng = Rng::new(1);
+        let (n, d, m, nlist) = (2400, 32, 8, 24);
+        let data = rng.normal_vec(n * d);
+        (IvfPqIndex::build(&data, n, d, m, nlist, 3), d)
+    }
+
+    fn run_query(
+        engine: &mut ClusterEngine,
+        idx: &IvfPqIndex,
+        q: &[f32],
+    ) -> Result<Vec<Vec<NodeResult>>> {
+        let lists = idx.probe(q, 6);
+        let lut = crate::pq::scan::build_lut(&idx.pq, q);
+        let jobs = [ScanJob { query: q, lists: &lists, lut: &lut, nprobe: 6 }];
+        engine.run_round(&jobs, &idx.pq.centroids)
+    }
+
+    #[test]
+    fn round_shape_matches_shard_count() {
+        let (idx, d) = toy_index();
+        let mut engine = ClusterEngine::local(&idx, 4, 2, 10, ClusterConfig::default()).unwrap();
+        assert_eq!(engine.n_shards(), 2);
+        let mut rng = Rng::new(7);
+        let q = rng.normal_vec(d);
+        let per_job = run_query(&mut engine, &idx, &q).unwrap();
+        assert_eq!(per_job.len(), 1);
+        assert_eq!(per_job[0].len(), 2, "one result per shard");
+        assert_eq!(engine.stats().rounds, 1);
+        assert_eq!(engine.stats().retries, 0);
+    }
+
+    #[test]
+    fn failover_retries_on_replica() {
+        let (idx, d) = toy_index();
+        // Shard 0 primary dies after one call; its replica must take over
+        // with identical results.
+        let n_shards = 2;
+        let mk = |shard: usize| {
+            Box::new(MemoryNode::new(
+                Shard::carve(&idx, shard, n_shards),
+                ScanEngine::Native,
+                10,
+            )) as Box<dyn ScanBackend>
+        };
+        let nodes = vec![
+            ClusterNode { id: 0, shard: 0, backend: Box::new(FailingBackend::new(mk(0), 1)) },
+            ClusterNode { id: 1, shard: 0, backend: mk(0) },
+            ClusterNode { id: 2, shard: 1, backend: mk(1) },
+            ClusterNode { id: 3, shard: 1, backend: mk(1) },
+        ];
+        let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+        let mut engine = ClusterEngine::new(nodes, n_shards, cfg).unwrap();
+        let mut rng = Rng::new(9);
+        let q = rng.normal_vec(d);
+        let healthy = run_query(&mut engine, &idx, &q).unwrap();
+        let after = run_query(&mut engine, &idx, &q).unwrap();
+        assert_eq!(healthy[0].len(), after[0].len());
+        for (a, b) in healthy[0].iter().zip(&after[0]) {
+            assert_eq!(a.topk, b.topk, "failover result must be bit-identical");
+        }
+        assert!(engine.stats().retries >= 1);
+        assert!(engine.stats().failovers >= 1);
+    }
+
+    #[test]
+    fn breaker_routes_away_after_consecutive_failures() {
+        let (idx, d) = toy_index();
+        let mk = || {
+            Box::new(MemoryNode::new(
+                Shard::carve(&idx, 0, 1),
+                ScanEngine::Native,
+                10,
+            )) as Box<dyn ScanBackend>
+        };
+        let nodes = vec![
+            ClusterNode { id: 0, shard: 0, backend: Box::new(FailingBackend::new(mk(), 0)) },
+            ClusterNode { id: 1, shard: 0, backend: mk() },
+        ];
+        let cfg = ClusterConfig {
+            select: SelectPolicy::Static,
+            breaker_threshold: 2,
+            ..Default::default()
+        };
+        let mut engine = ClusterEngine::new(nodes, 1, cfg).unwrap();
+        let mut rng = Rng::new(5);
+        // Static order for shard 0 is [0, 1]: node 0 fails every call.
+        for _ in 0..3 {
+            let q = rng.normal_vec(d);
+            run_query(&mut engine, &idx, &q).unwrap();
+        }
+        assert!(engine.health().breaker_open(0), "breaker must be open");
+        assert_eq!(engine.stats().breaker_trips, 1);
+        let retries_so_far = engine.stats().retries;
+        // With the breaker open, node 1 is selected first: no new retries.
+        let q = rng.normal_vec(d);
+        run_query(&mut engine, &idx, &q).unwrap();
+        assert_eq!(engine.stats().retries, retries_so_far);
+    }
+
+    #[test]
+    fn all_replicas_dead_fails_the_round() {
+        let (idx, d) = toy_index();
+        let mk = || {
+            Box::new(MemoryNode::new(
+                Shard::carve(&idx, 0, 1),
+                ScanEngine::Native,
+                10,
+            )) as Box<dyn ScanBackend>
+        };
+        let nodes = vec![
+            ClusterNode { id: 0, shard: 0, backend: Box::new(FailingBackend::new(mk(), 0)) },
+            ClusterNode { id: 1, shard: 0, backend: Box::new(FailingBackend::new(mk(), 0)) },
+        ];
+        let mut engine = ClusterEngine::new(nodes, 1, ClusterConfig::default()).unwrap();
+        let mut rng = Rng::new(6);
+        let q = rng.normal_vec(d);
+        assert!(run_query(&mut engine, &idx, &q).is_err());
+    }
+
+    #[test]
+    fn membership_transitions_take_effect_next_round() {
+        let (idx, d) = toy_index();
+        let mut engine = ClusterEngine::local(&idx, 2, 1, 10, ClusterConfig::default()).unwrap();
+        let e0 = engine.epoch();
+        // Join a replica for shard 0, then drain + remove the original.
+        let replica = ClusterNode {
+            id: 10,
+            shard: 0,
+            backend: Box::new(MemoryNode::new(
+                Shard::carve(&idx, 0, 2),
+                ScanEngine::Native,
+                10,
+            )),
+        };
+        assert_eq!(engine.join(replica).unwrap(), e0 + 1);
+        assert_eq!(engine.drain(0).unwrap(), e0 + 2);
+        let mut rng = Rng::new(8);
+        let q = rng.normal_vec(d);
+        let r = run_query(&mut engine, &idx, &q).unwrap();
+        assert_eq!(r[0].len(), 2);
+        assert_eq!(engine.remove(0).unwrap(), e0 + 3);
+        let r2 = run_query(&mut engine, &idx, &q).unwrap();
+        for (a, b) in r[0].iter().zip(&r2[0]) {
+            assert_eq!(a.topk, b.topk, "results stable across the epoch swap");
+        }
+    }
+
+    #[test]
+    fn rebalance_recarves_and_preserves_results() {
+        let (idx, d) = toy_index();
+        let mut engine = ClusterEngine::local(&idx, 2, 1, 10, ClusterConfig::default()).unwrap();
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 6);
+        let lut = crate::pq::scan::build_lut(&idx.pq, &q);
+        let jobs = [ScanJob { query: &q, lists: &lists, lut: &lut, nprobe: 6 }];
+        let before = engine.run_round(&jobs, &idx.pq.centroids).unwrap();
+        let merged_before = crate::chamvs::dispatcher::merge_topk(&before[0], 10);
+        let e = engine.rebalance_local(&idx, 4, 1, 10).unwrap();
+        assert!(e > 2, "epoch stays monotonic");
+        assert_eq!(engine.n_shards(), 4);
+        let after = engine.run_round(&jobs, &idx.pq.centroids).unwrap();
+        assert_eq!(after[0].len(), 4);
+        let merged_after = crate::chamvs::dispatcher::merge_topk(&after[0], 10);
+        assert_eq!(
+            merged_before, merged_after,
+            "re-carved cluster must serve identical top-k"
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Fault-injection scan backends for failover and tail-latency testing:
+//! deterministic wrappers that make a healthy backend die or straggle on
+//! cue. Used by the failure tests, `benches/cluster_failover.rs` and the
+//! `chameleon cluster` demo — they live in the library (not `#[cfg(test)]`)
+//! so benches and the CLI can inject the same faults the tests pin.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::chamvs::backend::{ScanBackend, ScanJob};
+use crate::chamvs::node::NodeResult;
+use crate::hwmodel::fpga::FpgaModel;
+
+/// A backend that serves `healthy_calls` scans, then fails every scan
+/// after — the in-process model of a node dying mid-workload.
+pub struct FailingBackend {
+    inner: Box<dyn ScanBackend>,
+    healthy_calls: usize,
+    calls: usize,
+}
+
+impl FailingBackend {
+    pub fn new(inner: Box<dyn ScanBackend>, healthy_calls: usize) -> FailingBackend {
+        FailingBackend { inner, healthy_calls, calls: 0 }
+    }
+
+    /// Scan calls observed (healthy + failed).
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+}
+
+impl ScanBackend for FailingBackend {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn fpga(&self) -> &FpgaModel {
+        self.inner.fpga()
+    }
+
+    fn wants_lut(&self) -> bool {
+        self.inner.wants_lut()
+    }
+
+    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], codebook: &[f32]) -> Result<Vec<NodeResult>> {
+        self.calls += 1;
+        anyhow::ensure!(
+            self.calls <= self.healthy_calls,
+            "injected fault: node is down (call {} > {} healthy)",
+            self.calls,
+            self.healthy_calls
+        );
+        self.inner.scan_jobs(jobs, codebook)
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+
+    fn drain(&mut self) {
+        self.inner.drain();
+    }
+}
+
+/// A backend that sleeps `delay` before every `every`-th scan — an
+/// intermittent straggler (GC pause, page fault storm, noisy neighbor)
+/// that selection alone cannot route around, which is exactly the case
+/// hedged dispatch exists for.
+pub struct StragglerBackend {
+    inner: Box<dyn ScanBackend>,
+    delay: Duration,
+    every: usize,
+    calls: usize,
+}
+
+impl StragglerBackend {
+    pub fn new(inner: Box<dyn ScanBackend>, delay: Duration, every: usize) -> StragglerBackend {
+        StragglerBackend { inner, delay, every: every.max(1), calls: 0 }
+    }
+}
+
+impl ScanBackend for StragglerBackend {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn fpga(&self) -> &FpgaModel {
+        self.inner.fpga()
+    }
+
+    fn wants_lut(&self) -> bool {
+        self.inner.wants_lut()
+    }
+
+    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], codebook: &[f32]) -> Result<Vec<NodeResult>> {
+        self.calls += 1;
+        if self.calls % self.every == 0 {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.scan_jobs(jobs, codebook)
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+
+    fn drain(&mut self) {
+        self.inner.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chamvs::node::{MemoryNode, ScanEngine};
+    use crate::ivf::index::IvfPqIndex;
+    use crate::ivf::shard::Shard;
+    use crate::pq::scan::build_lut;
+    use crate::util::rng::Rng;
+
+    fn node() -> (Box<dyn ScanBackend>, IvfPqIndex, usize) {
+        let mut rng = Rng::new(1);
+        let (n, d, m, nlist) = (1200, 16, 4, 16);
+        let data = rng.normal_vec(n * d);
+        let idx = IvfPqIndex::build(&data, n, d, m, nlist, 2);
+        let node = MemoryNode::new(Shard::carve(&idx, 0, 1), ScanEngine::Native, 10);
+        (Box::new(node), idx, d)
+    }
+
+    #[test]
+    fn failing_backend_dies_on_cue() {
+        let (inner, idx, d) = node();
+        let mut b = FailingBackend::new(inner, 2);
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 4);
+        let lut = build_lut(&idx.pq, &q);
+        let jobs = [ScanJob { query: &q, lists: &lists, lut: &lut, nprobe: 4 }];
+        assert!(b.scan_jobs(&jobs, &idx.pq.centroids).is_ok());
+        assert!(b.scan_jobs(&jobs, &idx.pq.centroids).is_ok());
+        assert!(b.scan_jobs(&jobs, &idx.pq.centroids).is_err(), "third call fails");
+        assert!(b.scan_jobs(&jobs, &idx.pq.centroids).is_err(), "stays down");
+        assert_eq!(b.calls(), 4);
+    }
+
+    #[test]
+    fn straggler_preserves_results() {
+        let (inner, idx, d) = node();
+        let mut rng = Rng::new(5);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 4);
+        let lut = build_lut(&idx.pq, &q);
+        let jobs = [ScanJob { query: &q, lists: &lists, lut: &lut, nprobe: 4 }];
+        let (mut plain, _idx2, _d2) = node();
+        let want = plain.scan_jobs(&jobs, &idx.pq.centroids).unwrap();
+        let mut slow =
+            StragglerBackend::new(node().0, Duration::from_micros(200), 1);
+        let got = slow.scan_jobs(&jobs, &idx.pq.centroids).unwrap();
+        assert_eq!(got[0].topk, want[0].topk, "delay must not change numerics");
+    }
+}

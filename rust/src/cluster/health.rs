@@ -1,0 +1,235 @@
+//! Per-node health tracking for the elastic retrieval tier: a scan-latency
+//! EWMA per node, a consecutive-failure circuit breaker, and the recent
+//! round-trip latency window that prices hedge deadlines.
+//!
+//! Fed from dispatch results by the cluster engine: every reply records a
+//! success (with its coordinator-observed round-trip latency) or a
+//! failure. The breaker opens after `breaker_threshold` *consecutive*
+//! failures — an open node is deprioritized by replica selection (tried
+//! only when every closed replica is exhausted) and closes again on the
+//! first successful scan, so a node that recovers rejoins the rotation
+//! without an operator transition.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::map::NodeId;
+use crate::util::stats::percentile;
+
+/// Recent-latency window size for hedge-deadline quantiles.
+const RECENT_CAP: usize = 512;
+
+/// Health state of one node.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeHealth {
+    /// EWMA of coordinator-observed scan round-trip latency (seconds);
+    /// 0.0 until the first sample.
+    pub ewma_s: f64,
+    /// Successful scans recorded.
+    pub ok: u64,
+    /// Failed scans recorded.
+    pub failures: u64,
+    /// Current consecutive-failure run length.
+    pub consecutive_failures: u32,
+    /// Whether the circuit breaker is open (node deprioritized).
+    pub breaker_open: bool,
+}
+
+/// Health registry over the cluster's nodes.
+#[derive(Clone, Debug)]
+pub struct HealthTracker {
+    nodes: BTreeMap<NodeId, NodeHealth>,
+    /// EWMA weight of a new sample.
+    pub alpha: f64,
+    /// Consecutive failures that open the breaker.
+    pub breaker_threshold: u32,
+    /// Recent successful round-trip latencies across all nodes (ring).
+    recent: VecDeque<f64>,
+}
+
+impl Default for HealthTracker {
+    fn default() -> HealthTracker {
+        HealthTracker {
+            nodes: BTreeMap::new(),
+            alpha: 0.2,
+            breaker_threshold: 3,
+            recent: VecDeque::new(),
+        }
+    }
+}
+
+impl HealthTracker {
+    pub fn new(breaker_threshold: u32) -> HealthTracker {
+        HealthTracker { breaker_threshold: breaker_threshold.max(1), ..Default::default() }
+    }
+
+    /// Record a successful scan and its round-trip latency. Resets the
+    /// consecutive-failure run and closes the breaker.
+    pub fn record_ok(&mut self, id: NodeId, latency_s: f64) {
+        let h = self.nodes.entry(id).or_default();
+        h.ewma_s = if h.ok == 0 {
+            latency_s
+        } else {
+            self.alpha * latency_s + (1.0 - self.alpha) * h.ewma_s
+        };
+        h.ok += 1;
+        h.consecutive_failures = 0;
+        h.breaker_open = false;
+        self.recent.push_back(latency_s);
+        while self.recent.len() > RECENT_CAP {
+            self.recent.pop_front();
+        }
+    }
+
+    /// Record a failed scan. Returns `true` iff this failure tripped the
+    /// breaker open (the threshold crossing, not every failure beyond it).
+    pub fn record_failure(&mut self, id: NodeId) -> bool {
+        let threshold = self.breaker_threshold;
+        let h = self.nodes.entry(id).or_default();
+        h.failures += 1;
+        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+        let tripped = !h.breaker_open && h.consecutive_failures >= threshold;
+        if tripped {
+            h.breaker_open = true;
+        }
+        tripped
+    }
+
+    pub fn breaker_open(&self, id: NodeId) -> bool {
+        self.nodes.get(&id).map(|h| h.breaker_open).unwrap_or(false)
+    }
+
+    /// Latency EWMA, `None` before the first successful scan.
+    pub fn ewma(&self, id: NodeId) -> Option<f64> {
+        self.nodes.get(&id).filter(|h| h.ok > 0).map(|h| h.ewma_s)
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&NodeHealth> {
+        self.nodes.get(&id)
+    }
+
+    /// Forget a removed node's history.
+    pub fn forget(&mut self, id: NodeId) {
+        self.nodes.remove(&id);
+    }
+
+    /// Hedge deadline: the `q`-quantile of recent successful round-trip
+    /// latencies. `None` until enough samples exist to make the quantile
+    /// meaningful (a cold cluster never hedges — it has no baseline to
+    /// call a scan "late" against).
+    pub fn deadline_s(&self, q: f64) -> Option<f64> {
+        if self.recent.len() < 8 {
+            return None;
+        }
+        let samples: Vec<f64> = self.recent.iter().copied().collect();
+        Some(percentile(&samples, q))
+    }
+
+    /// Order replica candidates for selection: breaker-closed nodes first
+    /// (health-sorted by EWMA when `health_aware`, otherwise in the given
+    /// base order), breaker-open nodes last as the availability fallback.
+    pub fn order(&self, candidates: &[NodeId], health_aware: bool) -> Vec<NodeId> {
+        let mut closed: Vec<NodeId> = Vec::with_capacity(candidates.len());
+        let mut open: Vec<NodeId> = Vec::new();
+        for &id in candidates {
+            if self.breaker_open(id) {
+                open.push(id);
+            } else {
+                closed.push(id);
+            }
+        }
+        if health_aware {
+            // Unmeasured nodes sort first (ewma 0.0): give fresh joiners
+            // traffic so their EWMA warms up. Stable sort keeps the
+            // rotation order among ties.
+            closed.sort_by(|&a, &b| {
+                let ea = self.ewma(a).unwrap_or(0.0);
+                let eb = self.ewma(b).unwrap_or(0.0);
+                ea.partial_cmp(&eb).unwrap_or(std::cmp::Ordering::Equal)
+            });
+        }
+        closed.extend(open);
+        closed
+    }
+
+    /// Human-readable health table for the `chameleon cluster` report.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from(
+            "node   ewma_ms    ok       failures consec  breaker\n",
+        );
+        for (id, h) in &self.nodes {
+            let _ = writeln!(
+                out,
+                "{id:<6} {:<10.4} {:<8} {:<8} {:<7} {}",
+                h.ewma_s * 1e3,
+                h.ok,
+                h.failures,
+                h.consecutive_failures,
+                if h.breaker_open { "OPEN" } else { "closed" }
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_tracks_latency() {
+        let mut t = HealthTracker::default();
+        t.record_ok(1, 1.0);
+        assert!((t.ewma(1).unwrap() - 1.0).abs() < 1e-12, "first sample seeds");
+        t.record_ok(1, 2.0);
+        let e = t.ewma(1).unwrap();
+        assert!(e > 1.0 && e < 2.0, "{e}");
+        assert_eq!(t.ewma(2), None);
+    }
+
+    #[test]
+    fn breaker_opens_at_threshold_and_closes_on_success() {
+        let mut t = HealthTracker::new(3);
+        assert!(!t.record_failure(5));
+        assert!(!t.record_failure(5));
+        assert!(t.record_failure(5), "third consecutive failure trips");
+        assert!(t.breaker_open(5));
+        assert!(!t.record_failure(5), "already open: not a fresh trip");
+        t.record_ok(5, 0.001);
+        assert!(!t.breaker_open(5), "success closes the breaker");
+        assert!(!t.record_failure(5), "run length was reset");
+    }
+
+    #[test]
+    fn order_prefers_closed_then_fast() {
+        let mut t = HealthTracker::new(1);
+        t.record_ok(1, 0.010);
+        t.record_ok(2, 0.001);
+        t.record_failure(3); // breaker opens (threshold 1)
+        let order = t.order(&[1, 2, 3], true);
+        assert_eq!(order, vec![2, 1, 3]);
+        // Static policy keeps base order among closed nodes.
+        let order = t.order(&[1, 2, 3], false);
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_needs_warm_window() {
+        let mut t = HealthTracker::default();
+        assert_eq!(t.deadline_s(0.9), None);
+        for i in 0..20 {
+            t.record_ok(0, 0.001 + i as f64 * 1e-5);
+        }
+        let d = t.deadline_s(0.9).unwrap();
+        assert!(d >= 0.001 && d < 0.002, "{d}");
+    }
+
+    #[test]
+    fn forget_drops_history() {
+        let mut t = HealthTracker::new(1);
+        t.record_failure(9);
+        assert!(t.breaker_open(9));
+        t.forget(9);
+        assert!(!t.breaker_open(9));
+    }
+}

@@ -1,0 +1,336 @@
+//! Epoch-versioned cluster membership: which memory node serves which
+//! shard, at what lifecycle state.
+//!
+//! The map is pure metadata — no sockets, no backends — so membership
+//! logic is deterministic and unit-testable. Every transition
+//! ([`join`](ClusterMap::join) / [`drain`](ClusterMap::drain) /
+//! [`remove`](ClusterMap::remove) / wholesale [`swap`](ClusterMap::swap))
+//! bumps the epoch; the serving layer swaps epochs *between* dispatch
+//! rounds, so in-flight requests always run against one consistent view.
+//!
+//! A node serves exactly one shard replica (the shape of a `chamvs-node`
+//! process: one [`Shard::carve`](crate::ivf::shard::Shard::carve) slice in
+//! DRAM). Replication is therefore expressed as several nodes declaring
+//! the same shard; [`carve_plan`](ClusterMap::carve_plan) is the
+//! deterministic node→shard assignment used when (re)carving a cluster
+//! from an index.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+/// Cluster-unique node identity (the coordinator's handle for one
+/// backend; independent of the shard the node serves).
+pub type NodeId = u32;
+
+/// Lifecycle state of one member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Serving traffic; eligible for primary/replica selection.
+    Active,
+    /// Retiring: excluded from new selection, kept in the map so its
+    /// in-flight work can finish before [`ClusterMap::remove`].
+    Draining,
+}
+
+/// One member of the cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeMeta {
+    pub id: NodeId,
+    /// The shard this node holds a replica of.
+    pub shard: usize,
+    pub state: NodeState,
+}
+
+/// Epoch-versioned shard→replica-set assignment.
+#[derive(Clone, Debug)]
+pub struct ClusterMap {
+    epoch: u64,
+    n_shards: usize,
+    nodes: BTreeMap<NodeId, NodeMeta>,
+}
+
+impl ClusterMap {
+    pub fn new(n_shards: usize) -> ClusterMap {
+        ClusterMap { epoch: 0, n_shards: n_shards.max(1), nodes: BTreeMap::new() }
+    }
+
+    /// Current membership epoch (bumped by every transition).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Total members, any state.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&NodeMeta> {
+        self.nodes.get(&id)
+    }
+
+    /// All members in id order.
+    pub fn nodes(&self) -> impl Iterator<Item = &NodeMeta> {
+        self.nodes.values()
+    }
+
+    /// Deterministic node→shard assignment for a fresh cluster of
+    /// `n_nodes` nodes at replication factor `replication`: node `i`
+    /// serves shard `i % n_shards` with `n_shards = n_nodes /
+    /// replication`, so every shard gets exactly `replication` replicas.
+    /// Returns `(node_id, shard)` pairs — the carve instructions a
+    /// (re)balance executes via `Shard::carve(index, shard, n_shards)`.
+    pub fn carve_plan(n_nodes: usize, replication: usize) -> Result<Vec<(NodeId, usize)>> {
+        anyhow::ensure!(replication >= 1, "replication factor must be >= 1");
+        anyhow::ensure!(
+            n_nodes >= replication && n_nodes % replication == 0,
+            "{n_nodes} nodes cannot carry replication {replication} \
+             (need a positive multiple of it)"
+        );
+        let n_shards = n_nodes / replication;
+        Ok((0..n_nodes).map(|i| (i as NodeId, i % n_shards)).collect())
+    }
+
+    /// Add a node serving a replica of `shard`. Errors on duplicate id or
+    /// out-of-range shard. Returns the new epoch.
+    pub fn join(&mut self, id: NodeId, shard: usize) -> Result<u64> {
+        anyhow::ensure!(
+            shard < self.n_shards,
+            "shard {shard} out of range (cluster has {} shards)",
+            self.n_shards
+        );
+        anyhow::ensure!(
+            !self.nodes.contains_key(&id),
+            "node {id} is already a cluster member"
+        );
+        self.nodes.insert(id, NodeMeta { id, shard, state: NodeState::Active });
+        self.epoch += 1;
+        Ok(self.epoch)
+    }
+
+    /// Mark a node Draining: no new selection, existing work finishes.
+    /// Refuses to uncover a shard (the last active replica can't drain).
+    pub fn drain(&mut self, id: NodeId) -> Result<u64> {
+        let meta =
+            *self.nodes.get(&id).ok_or_else(|| anyhow::anyhow!("unknown node {id}"))?;
+        if meta.state == NodeState::Active {
+            anyhow::ensure!(
+                self.replication(meta.shard) > 1,
+                "draining node {id} would leave shard {} with no active replica",
+                meta.shard
+            );
+        }
+        self.nodes.get_mut(&id).unwrap().state = NodeState::Draining;
+        self.epoch += 1;
+        Ok(self.epoch)
+    }
+
+    /// Remove a node from the map entirely. Refuses to uncover a shard.
+    pub fn remove(&mut self, id: NodeId) -> Result<u64> {
+        let meta =
+            *self.nodes.get(&id).ok_or_else(|| anyhow::anyhow!("unknown node {id}"))?;
+        if meta.state == NodeState::Active {
+            anyhow::ensure!(
+                self.replication(meta.shard) > 1,
+                "removing node {id} would leave shard {} with no active replica",
+                meta.shard
+            );
+        }
+        self.nodes.remove(&id);
+        self.epoch += 1;
+        Ok(self.epoch)
+    }
+
+    /// Active replicas of one shard, in deterministic rotated order: ids
+    /// ascending, rotated left by `shard` so primaries spread across
+    /// nodes instead of piling on the lowest id. (Health-aware selection
+    /// may reorder on top of this; the rotation is the tie-free base.)
+    pub fn replicas(&self, shard: usize) -> Vec<NodeId> {
+        let mut ids: Vec<NodeId> = self
+            .nodes
+            .values()
+            .filter(|n| n.shard == shard && n.state == NodeState::Active)
+            .map(|n| n.id)
+            .collect();
+        if !ids.is_empty() {
+            ids.rotate_left(shard % ids.len());
+        }
+        ids
+    }
+
+    /// Number of *active* replicas of one shard.
+    pub fn replication(&self, shard: usize) -> usize {
+        self.nodes
+            .values()
+            .filter(|n| n.shard == shard && n.state == NodeState::Active)
+            .count()
+    }
+
+    /// Smallest active replication across all shards (0 = some shard is
+    /// uncovered and dispatch would fail).
+    pub fn min_replication(&self) -> usize {
+        (0..self.n_shards).map(|s| self.replication(s)).min().unwrap_or(0)
+    }
+
+    /// Whether every shard has at least one active replica.
+    pub fn is_covered(&self) -> bool {
+        self.min_replication() >= 1
+    }
+
+    /// Replace the whole membership in one transition (live rebalance:
+    /// the new node set was carved from the index at a new shard count).
+    /// The epoch stays monotonic across the swap.
+    pub fn swap(&mut self, n_shards: usize, members: &[(NodeId, usize)]) -> Result<u64> {
+        let n_shards = n_shards.max(1);
+        let mut nodes: BTreeMap<NodeId, NodeMeta> = BTreeMap::new();
+        for &(id, shard) in members {
+            anyhow::ensure!(shard < n_shards, "shard {shard} out of range");
+            anyhow::ensure!(
+                nodes
+                    .insert(id, NodeMeta { id, shard, state: NodeState::Active })
+                    .is_none(),
+                "duplicate node id {id} in swap"
+            );
+        }
+        for s in 0..n_shards {
+            anyhow::ensure!(
+                nodes.values().any(|n| n.shard == s),
+                "swap leaves shard {s} uncovered"
+            );
+        }
+        self.n_shards = n_shards;
+        self.nodes = nodes;
+        self.epoch += 1;
+        Ok(self.epoch)
+    }
+
+    /// Human-readable assignment table for the `chameleon cluster` report.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "cluster map: epoch {} | {} shards | {} nodes | min replication {}",
+            self.epoch,
+            self.n_shards,
+            self.nodes.len(),
+            self.min_replication()
+        );
+        for s in 0..self.n_shards {
+            let active = self.replicas(s);
+            let draining: Vec<NodeId> = self
+                .nodes
+                .values()
+                .filter(|n| n.shard == s && n.state == NodeState::Draining)
+                .map(|n| n.id)
+                .collect();
+            let _ = writeln!(
+                out,
+                "  shard {s}: active {active:?} draining {draining:?}"
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map_4x2() -> ClusterMap {
+        let mut m = ClusterMap::new(2);
+        for (id, shard) in ClusterMap::carve_plan(4, 2).unwrap() {
+            m.join(id, shard).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn carve_plan_gives_exact_replication() {
+        let plan = ClusterMap::carve_plan(6, 2).unwrap();
+        assert_eq!(plan.len(), 6);
+        for s in 0..3 {
+            assert_eq!(plan.iter().filter(|&&(_, sh)| sh == s).count(), 2);
+        }
+        // Deterministic: same inputs, same plan.
+        assert_eq!(plan, ClusterMap::carve_plan(6, 2).unwrap());
+        assert!(ClusterMap::carve_plan(5, 2).is_err());
+        assert!(ClusterMap::carve_plan(4, 0).is_err());
+    }
+
+    #[test]
+    fn transitions_bump_epoch() {
+        let mut m = map_4x2();
+        assert_eq!(m.epoch(), 4); // four joins
+        let e = m.drain(0).unwrap();
+        assert_eq!(e, 5);
+        let e = m.remove(0).unwrap();
+        assert_eq!(e, 6);
+        assert_eq!(m.len(), 3);
+        assert!(m.is_covered());
+    }
+
+    #[test]
+    fn replicas_are_rotated_and_active_only() {
+        let m = map_4x2();
+        // Shard 0: nodes {0, 2}; shard 1: nodes {1, 3} rotated by 1.
+        assert_eq!(m.replicas(0), vec![0, 2]);
+        assert_eq!(m.replicas(1), vec![3, 1]);
+        let mut m = m;
+        m.drain(3).unwrap();
+        assert_eq!(m.replicas(1), vec![1]);
+        assert_eq!(m.replication(1), 1);
+    }
+
+    #[test]
+    fn cannot_uncover_a_shard() {
+        let mut m = map_4x2();
+        m.drain(0).unwrap();
+        // Node 2 is now shard 0's last active replica.
+        assert!(m.drain(2).is_err());
+        assert!(m.remove(2).is_err());
+        // Removing the already-draining node is fine.
+        m.remove(0).unwrap();
+        assert!(m.is_covered());
+    }
+
+    #[test]
+    fn join_validates() {
+        let mut m = ClusterMap::new(2);
+        m.join(7, 0).unwrap();
+        assert!(m.join(7, 1).is_err(), "duplicate id");
+        assert!(m.join(8, 2).is_err(), "shard out of range");
+        assert!(!m.is_covered(), "shard 1 uncovered");
+    }
+
+    #[test]
+    fn swap_is_one_epoch_and_validates_coverage() {
+        let mut m = map_4x2();
+        let before = m.epoch();
+        let members: Vec<(NodeId, usize)> =
+            ClusterMap::carve_plan(4, 1).unwrap();
+        let e = m.swap(4, &members).unwrap();
+        assert_eq!(e, before + 1);
+        assert_eq!(m.n_shards(), 4);
+        assert_eq!(m.min_replication(), 1);
+        assert!(m.swap(2, &[(0, 0)]).is_err(), "shard 1 uncovered");
+        // Failed swap must not have mutated the map.
+        assert_eq!(m.n_shards(), 4);
+    }
+
+    #[test]
+    fn render_mentions_epoch_and_shards() {
+        let m = map_4x2();
+        let r = m.render();
+        assert!(r.contains("epoch 4"), "{r}");
+        assert!(r.contains("shard 0"), "{r}");
+    }
+}

@@ -1,0 +1,33 @@
+//! The elastic, replicated retrieval tier (membership, failover, hedged
+//! scans, live shard rebalancing) — the production layer that turns the
+//! fixed node set of the prototype into the independently-scalable
+//! ChamVS tier the paper's disaggregation argument promises.
+//!
+//! * [`map`] — [`ClusterMap`]: epoch-versioned shard→replica-set
+//!   assignment with join/drain/remove/swap transitions and the
+//!   deterministic [`ClusterMap::carve_plan`] node→shard assignment.
+//! * [`health`] — [`HealthTracker`]: per-node scan-latency EWMA, a
+//!   consecutive-failure circuit breaker, and the recent-latency window
+//!   that prices hedge deadlines.
+//! * [`engine`] — [`ClusterEngine`]: persistent per-node workers,
+//!   replica selection, retry-on-replica failover, and quantile-deadline
+//!   hedging with first-response-wins. Plugs into
+//!   [`Dispatcher`](crate::chamvs::dispatcher::Dispatcher) via
+//!   [`Dispatcher::clustered`](crate::chamvs::dispatcher::Dispatcher::clustered),
+//!   so the whole serving stack (retriever, coordinator server, CLI)
+//!   runs over the replicated tier unchanged.
+//! * [`fault`] — deterministic fault-injection backends (dying node,
+//!   intermittent straggler) shared by the failure tests, the
+//!   `cluster_failover` bench and the `chameleon cluster` demo.
+
+pub mod engine;
+pub mod fault;
+pub mod health;
+pub mod map;
+
+pub use engine::{
+    ClusterConfig, ClusterEngine, ClusterNode, ClusterStats, HedgeConfig, SelectPolicy,
+};
+pub use fault::{FailingBackend, StragglerBackend};
+pub use health::{HealthTracker, NodeHealth};
+pub use map::{ClusterMap, NodeId, NodeMeta, NodeState};

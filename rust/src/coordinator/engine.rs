@@ -123,11 +123,12 @@ impl RalmEngine {
         let interval = self.paper_model.interval.max(1);
         let retr_per_step = {
             // Batched retrieval: b queries pipelined through the FPGA.
-            let fpga = self.retriever.dispatcher.nodes[0].fpga();
+            let fpga = self.retriever.dispatcher.fpga();
             let ds = self.retriever.ds;
             let paper_codes = (ds.n_paper as f64 * ds.nprobe as f64
                 / ds.nlist_paper as f64) as usize;
-            let per_node = paper_codes / self.retriever.dispatcher.nodes.len();
+            let per_node =
+                paper_codes / self.retriever.dispatcher.fan_out().max(1);
             fpga.batch_latency(b, per_node, ds.m, ds.nprobe, self.retriever.k())
         };
         let encode_s = if self.paper_model.is_encdec() {

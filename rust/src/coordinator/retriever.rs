@@ -179,8 +179,9 @@ impl Retriever {
             // Rescale the FPGA stage to paper-scale codes per node.
             let paper_codes =
                 self.ds.n_paper as f64 * nprobe as f64 / self.ds.nlist_paper as f64;
-            let per_node = (paper_codes / self.dispatcher.nodes.len() as f64) as usize;
-            self.dispatcher.nodes[0]
+            let per_node =
+                (paper_codes / self.dispatcher.fan_out().max(1) as f64) as usize;
+            self.dispatcher
                 .fpga()
                 .query_latency(per_node, self.ds.m, nprobe, self.dispatcher.k)
                 .total()

@@ -21,6 +21,12 @@
 //!   completion at a time on the accept thread. Kept for A/B measurement
 //!   (`benches/coordinator_throughput.rs`, `chameleon serve --net
 //!   --sequential`).
+//!
+//! When the retriever dispatches over a replicated cluster (see
+//! [`crate::cluster`]), `ClusterUpdate` frames drive live membership
+//! transitions: the dispatch loop applies them strictly *between*
+//! batches, so epochs swap without dropping in-flight requests, and the
+//! admin connection receives a `ClusterAck` with the new epoch.
 
 use std::collections::HashMap;
 use std::io::BufReader;
@@ -31,9 +37,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::cluster::engine::ClusterNode;
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Pending, PrefetchTracker};
 use crate::coordinator::retriever::{RetrievalResult, Retriever};
-use crate::net::protocol::{Frame, Kind, RetrieveRequest, RetrieveResponse};
+use crate::net::client::RemoteNode;
+use crate::net::protocol::{
+    ClusterAck, ClusterOp, ClusterUpdate, Frame, Kind, RetrieveRequest, RetrieveResponse,
+};
 use crate::retcache::RetrievalSource;
 use crate::util::metrics::Metrics;
 
@@ -112,11 +122,15 @@ struct ServerRequest {
 /// dispatch loop.
 struct Shared {
     batcher: Mutex<DynamicBatcher<ServerRequest>>,
-    /// Woken on request arrival, teardown and stop.
+    /// Woken on request arrival, teardown, cluster transition and stop.
     cv: Condvar,
     /// Connections whose reader exited; the dispatch loop cancels their
     /// speculation slots (it owns the retriever).
     teardowns: Mutex<Vec<u64>>,
+    /// Pending cluster-membership transitions, applied by the dispatch
+    /// loop *between* batches (it owns the retriever, so epochs swap
+    /// without dropping in-flight requests).
+    cluster_ops: Mutex<Vec<(u64, ClusterUpdate)>>,
     /// Reply routes: connection id -> writer half.
     writers: Mutex<HashMap<u64, TcpStream>>,
     stop: AtomicBool,
@@ -162,6 +176,7 @@ impl CoordinatorServer {
             batcher: Mutex::new(DynamicBatcher::new(policy)),
             cv: Condvar::new(),
             teardowns: Mutex::new(Vec::new()),
+            cluster_ops: Mutex::new(Vec::new()),
             writers: Mutex::new(HashMap::new()),
             stop: AtomicBool::new(false),
             stats: Arc::new(ServerStats::default()),
@@ -246,6 +261,9 @@ fn serve_sequential(
     if retriever.retcache_enabled() {
         retriever.export_metrics(&metrics);
     }
+    if let Some(c) = retriever.dispatcher.cluster() {
+        eprintln!("[coordinator] cluster: epoch={} {}", c.epoch(), c.stats().render());
+    }
     eprintln!("[coordinator] metrics:\n{}", metrics.render());
 }
 
@@ -317,6 +335,13 @@ fn serve_gpu(
                     dists: r.dists,
                 };
                 resp.encode().write_to(&mut writer)?;
+            }
+            Kind::ClusterUpdate => {
+                let update = ClusterUpdate::decode(&frame)?;
+                // Sequential mode serves one connection at a time, so
+                // "between batches" is simply "right now".
+                let ack = apply_cluster_update(retriever, &update);
+                ack.encode().write_to(&mut writer)?;
             }
             other => anyhow::bail!("unexpected frame {other:?} at coordinator"),
         }
@@ -400,6 +425,13 @@ fn reader_loop(stream: TcpStream, conn_id: u64, addr: SocketAddr, shared: &Share
                 }
                 Err(_) => break,
             },
+            Kind::ClusterUpdate => match ClusterUpdate::decode(&frame) {
+                Ok(update) => {
+                    shared.cluster_ops.lock().unwrap().push((conn_id, update));
+                    shared.cv.notify_all();
+                }
+                Err(_) => break,
+            },
             _ => break,
         }
     }
@@ -414,17 +446,22 @@ enum Step {
     Batch(Vec<Pending<ServerRequest>>),
     /// Process pending connection teardowns first.
     Teardown,
+    /// Apply pending cluster-membership transitions (between batches).
+    Cluster,
     /// Stop flag set and the queue fully drained.
     Stop,
 }
 
-/// Block until the batch policy fires, a teardown is pending, or the
-/// server stops (draining any queued requests first).
+/// Block until the batch policy fires, a teardown or cluster transition
+/// is pending, or the server stops (draining any queued requests first).
 fn next_step(shared: &Shared) -> Step {
     let mut guard = shared.batcher.lock().unwrap();
     loop {
         if !shared.teardowns.lock().unwrap().is_empty() {
             return Step::Teardown;
+        }
+        if !shared.cluster_ops.lock().unwrap().is_empty() {
+            return Step::Cluster;
         }
         let now = Instant::now();
         if guard.ready(now) {
@@ -453,6 +490,24 @@ fn dispatch_loop(builder: impl FnOnce() -> Retriever, shared: &Shared) {
     loop {
         match next_step(shared) {
             Step::Stop => break,
+            Step::Cluster => {
+                // Membership transitions apply strictly between batches:
+                // the epoch the next round sees is fully swapped, and no
+                // queued request is dropped (it just dispatches under the
+                // new epoch).
+                let ops: Vec<(u64, ClusterUpdate)> =
+                    std::mem::take(&mut *shared.cluster_ops.lock().unwrap());
+                for (conn_id, update) in ops {
+                    let ack = apply_cluster_update(&mut retriever, &update);
+                    let mut writers = shared.writers.lock().unwrap();
+                    if let Some(stream) = writers.get_mut(&conn_id) {
+                        if ack.encode().write_to(stream).is_err() {
+                            let _ = stream.shutdown(std::net::Shutdown::Both);
+                            writers.remove(&conn_id);
+                        }
+                    }
+                }
+            }
             Step::Teardown => {
                 let dead: Vec<u64> = std::mem::take(&mut *shared.teardowns.lock().unwrap());
                 for conn_id in dead {
@@ -483,6 +538,9 @@ fn dispatch_loop(builder: impl FnOnce() -> Retriever, shared: &Shared) {
     }
     if retriever.retcache_enabled() {
         retriever.export_metrics(&metrics);
+    }
+    if let Some(c) = retriever.dispatcher.cluster() {
+        eprintln!("[coordinator] cluster: epoch={} {}", c.epoch(), c.stats().render());
     }
     eprintln!("[coordinator] metrics:\n{}", metrics.render());
 }
@@ -611,6 +669,65 @@ fn serve_batch(
     }
 }
 
+/// Apply one membership transition to the retriever's clustered
+/// dispatcher. Infallible at this layer: failures are reported in the
+/// ack (the serving loop must keep running whatever the admin sent).
+fn apply_cluster_update(retriever: &mut Retriever, update: &ClusterUpdate) -> ClusterAck {
+    let k = retriever.dispatcher.k;
+    let Some(engine) = retriever.dispatcher.cluster_mut() else {
+        return ClusterAck {
+            epoch: 0,
+            ok: false,
+            message: "coordinator is not running a clustered dispatcher".to_string(),
+        };
+    };
+    let outcome: crate::Result<u64> = match update.op {
+        ClusterOp::Join => update
+            .addr
+            .parse::<std::net::SocketAddr>()
+            .map_err(|_| anyhow::anyhow!("bad node address '{}'", update.addr))
+            .and_then(|addr| {
+                let node = RemoteNode::connect(addr, k)?;
+                anyhow::ensure!(
+                    node.shard() == update.shard as usize,
+                    "node at {} declares shard {} but the join names shard {}",
+                    update.addr,
+                    node.shard(),
+                    update.shard
+                );
+                // Same carve-shape contract the startup path enforces: a
+                // node carved at a different --shards would silently
+                // serve the wrong subset and corrupt the merged top-k.
+                anyhow::ensure!(
+                    node.n_shards() == engine.n_shards(),
+                    "node at {} was carved at {} shards but the cluster has {}",
+                    update.addr,
+                    node.n_shards(),
+                    engine.n_shards()
+                );
+                engine.join(ClusterNode {
+                    id: update.node_id,
+                    shard: update.shard as usize,
+                    backend: Box::new(node),
+                })
+            }),
+        ClusterOp::Drain => engine.drain(update.node_id),
+        ClusterOp::Remove => engine.remove(update.node_id),
+    };
+    match outcome {
+        Ok(epoch) => ClusterAck {
+            epoch,
+            ok: true,
+            message: format!("{:?} node {} -> epoch {epoch}", update.op, update.node_id),
+        },
+        Err(e) => ClusterAck {
+            epoch: retriever.dispatcher.cluster().map(|c| c.epoch()).unwrap_or(0),
+            ok: false,
+            message: format!("{e:#}"),
+        },
+    }
+}
+
 fn source_counter(source: RetrievalSource) -> &'static str {
     match source {
         RetrievalSource::Miss => "retrieve_miss",
@@ -713,5 +830,15 @@ impl CoordinatorClient {
 
     pub fn shutdown_coordinator(&mut self) {
         let _ = Frame { kind: Kind::Shutdown, payload: vec![] }.write_to(&mut self.stream);
+    }
+
+    /// Submit a live cluster-membership transition and wait for the
+    /// coordinator's ack. Call with no retrievals outstanding on this
+    /// connection (replies are FIFO per connection, so an interleaved
+    /// pipeline would race the ack ordering).
+    pub fn cluster_update(&mut self, update: &ClusterUpdate) -> Result<ClusterAck> {
+        update.encode().write_to(&mut self.stream)?;
+        let f = Frame::read_from(&mut self.reader)?;
+        ClusterAck::decode(&f)
     }
 }

@@ -142,6 +142,30 @@ mod tests {
     }
 
     #[test]
+    fn shard_carve_roundtrips_through_persistence() {
+        // Node restart-from-disk contract for failover: a shard carved
+        // from a loaded index must be byte-identical (codes, ids AND the
+        // flat (offset, len) extents) to one carved from the original —
+        // at every (shard, n_shards) a replicated cluster uses.
+        use crate::ivf::shard::Shard;
+        let idx = toy();
+        let path = tmp("shard_carve");
+        idx.save(&path).unwrap();
+        let back = IvfPqIndex::load(&path).unwrap();
+        for n_shards in [1usize, 2, 3] {
+            for s in 0..n_shards {
+                let a = Shard::carve(&idx, s, n_shards);
+                let b = Shard::carve(&back, s, n_shards);
+                assert_eq!(a.m, b.m);
+                assert_eq!(a.codes, b.codes, "codes, shard {s}/{n_shards}");
+                assert_eq!(a.ids, b.ids, "ids, shard {s}/{n_shards}");
+                assert_eq!(a.extents, b.extents, "extents, shard {s}/{n_shards}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn rejects_garbage_file() {
         let path = tmp("garbage");
         std::fs::write(&path, b"definitely not an index").unwrap();

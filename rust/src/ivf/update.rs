@@ -144,4 +144,107 @@ mod tests {
         assert_eq!(idx.remove(&ids), 100);
         assert_eq!(idx.remove(&ids), 0); // idempotent
     }
+
+    /// Apply a mixed add/remove/update history to an index.
+    fn apply_history(idx: &mut IvfPqIndex, d: usize) -> Vec<(u64, Vec<f32>)> {
+        let mut rng = Rng::new(77);
+        let mut live_new: Vec<(u64, Vec<f32>)> = Vec::new();
+        for i in 0..20u64 {
+            let v = rng.normal_vec(d);
+            idx.add(100_000 + i, &v);
+            live_new.push((100_000 + i, v));
+        }
+        let victims: HashSet<u64> = (0..50u64).collect();
+        idx.remove(&victims);
+        for (id, v) in live_new.iter_mut().take(5) {
+            let moved: Vec<f32> = v.iter().map(|x| x + 3.0).collect();
+            idx.update(*id, &moved);
+            *v = moved;
+        }
+        live_new
+    }
+
+    #[test]
+    fn updates_match_fresh_encoding_reference() {
+        // Pin add/remove/update against the reference behaviour under the
+        // *same trained codebooks*: every live inserted vector must sit in
+        // the list `nearest` assigns it, carrying exactly the code
+        // `pq.encode_one` produces — i.e. updates are indistinguishable
+        // from having encoded the vector fresh at build time.
+        let (mut idx, _, d) = toy();
+        let live_new = apply_history(&mut idx, d);
+        for (id, v) in &live_new {
+            let (want_list, _) = nearest(v, &idx.centroids, idx.nlist, idx.d);
+            let mut want_code = vec![0u8; idx.m];
+            idx.pq.encode_one(v, &mut want_code);
+            let mut found = 0usize;
+            for l in 0..idx.nlist {
+                for (j, &lid) in idx.list_ids[l].iter().enumerate() {
+                    if lid == *id {
+                        found += 1;
+                        assert_eq!(l, want_list, "id {id} in wrong list");
+                        assert_eq!(
+                            &idx.list_codes[l][j * idx.m..(j + 1) * idx.m],
+                            &want_code[..],
+                            "id {id} carries a stale code"
+                        );
+                    }
+                }
+            }
+            assert_eq!(found, 1, "id {id} must appear exactly once");
+        }
+        // Removed ids are gone everywhere.
+        for l in 0..idx.nlist {
+            assert!(idx.list_ids[l].iter().all(|&i| i >= 50));
+            assert_eq!(idx.list_codes[l].len(), idx.list_ids[l].len() * idx.m);
+        }
+    }
+
+    #[test]
+    fn carve_of_updated_index_yields_consistent_flat_extents() {
+        // Rebalancing re-carves live (updated) indexes: the flat Shard
+        // layout must stay consistent — extents tile the buffers exactly,
+        // shards partition the index, and per-list round-robin
+        // interleaving reconstructs each updated list verbatim.
+        use crate::ivf::shard::Shard;
+        let (mut idx, _, d) = toy();
+        apply_history(&mut idx, d);
+        for n_shards in [1usize, 2, 3] {
+            let shards: Vec<Shard> =
+                (0..n_shards).map(|s| Shard::carve(&idx, s, n_shards)).collect();
+            let total: usize = shards.iter().map(Shard::len).sum();
+            assert_eq!(total, idx.len(), "shards must partition the index");
+            for sh in &shards {
+                assert_eq!(sh.n_lists(), idx.nlist);
+                assert_eq!(sh.codes.len(), sh.ids.len() * sh.m);
+                let mut cursor = 0usize;
+                for (l, &(off, len)) in sh.extents.iter().enumerate() {
+                    assert_eq!(off, cursor, "extent gap at list {l}");
+                    cursor += len;
+                }
+                assert_eq!(cursor, sh.len(), "extents must tile the buffers");
+            }
+            // Round-robin reconstruction: vector j of list l lives at
+            // shard (j % n_shards), in list order.
+            for l in 0..idx.nlist {
+                let mut cursors = vec![0usize; n_shards];
+                for (j, &want_id) in idx.list_ids[l].iter().enumerate() {
+                    let s = j % n_shards;
+                    let ids = shards[s].list_ids(l);
+                    let codes = shards[s].list_codes(l);
+                    let c = cursors[s];
+                    assert_eq!(ids[c], want_id, "list {l} row {j}");
+                    assert_eq!(
+                        &codes[c * idx.m..(c + 1) * idx.m],
+                        &idx.list_codes[l][j * idx.m..(j + 1) * idx.m],
+                        "list {l} row {j} codes"
+                    );
+                    cursors[s] += 1;
+                }
+                for (s, &c) in cursors.iter().enumerate() {
+                    assert_eq!(c, shards[s].list_len(l), "shard {s} list {l} len");
+                }
+            }
+        }
+    }
 }

@@ -21,6 +21,7 @@
 
 pub mod chamlm;
 pub mod chamvs;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

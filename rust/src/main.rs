@@ -4,6 +4,8 @@
 //!   demo                quickstart: search + one generated sequence
 //!   search              vector search over a scaled dataset
 //!   serve               generate sequences end-to-end (RALM inference)
+//!   cluster             elastic retrieval tier report: replicated
+//!                       dispatch, mid-run node death, failover/hedging
 //!   report <id>         regenerate a paper table/figure
 //!                       (fig7 fig8 fig9 fig10 fig11 fig12 fig13
 //!                        table4 table5 recall retcache dispatch all)
@@ -15,6 +17,9 @@ use chameleon::chamlm::pool::WorkerPool;
 use chameleon::chamvs::backend::ScanBackend;
 use chameleon::chamvs::dispatcher::Dispatcher;
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::cluster::{
+    ClusterConfig, ClusterEngine, ClusterMap, ClusterNode, FailingBackend, HedgeConfig,
+};
 use chameleon::config::{self, SystemConfig};
 use chameleon::coordinator::batcher::BatchPolicy;
 use chameleon::coordinator::engine::RalmEngine;
@@ -46,6 +51,7 @@ fn run(args: &Args) -> Result<()> {
         Some("demo") => demo(args),
         Some("search") => search(args),
         Some("serve") => serve(args),
+        Some("cluster") => cluster_cmd(args),
         Some("report") => report_cmd(args),
         Some(other) => bail!("unknown subcommand '{other}' (try --help)"),
         None => {
@@ -66,8 +72,12 @@ fn print_help() {
          serve  [--model dec_tiny] [--tokens 64] [--sequences 2]\n\
          serve --net [--clients 4] [--queries 32] [--sequential]\n\
                 [--max-batch 16] [--max-wait-us 200] [--nodes 2]\n\
+                [--replication R] [--hedge-quantile q]\n\
                 [--remote host:port,host:port]   concurrent coordinator over\n\
-                TCP; --remote uses running chamvs-node memory nodes\n\
+                TCP; --remote uses running chamvs-node memory nodes;\n\
+                --replication > 1 runs the elastic replicated tier\n\
+         cluster [--nodes 4] [--replication 2] [--queries 32]\n\
+                [--hedge-quantile 0.95]   elastic-tier failover report\n\
          report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|dispatch|all>\n\
          \n\
          Common options: --n <scaled db size> --seed <u64> --artifacts <dir>"
@@ -232,10 +242,33 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
     let per_client = args.get_usize("queries", 32).max(1);
     let k = args.get_usize("k", 10);
     let sequential = args.flag("sequential");
+    let replication = args.get_usize("replication", 1).max(1);
+    let hedge_quantile = args.get_f64("hedge-quantile", 0.0);
+    let cluster_cfg = cluster_config(replication, hedge_quantile);
+    if cluster_cfg.is_some() {
+        println!(
+            "[serve-net] elastic tier: replication={replication} hedge_quantile={hedge_quantile}"
+        );
+    }
 
     let retriever = match args.get("remote") {
-        Some(spec) => build_remote_retriever(ds, n, k, sys.seed, spec)?,
-        None => build_retriever(ds, n, args.get_usize("nodes", 2), k, false, &sys)?.0,
+        Some(spec) => {
+            build_remote_retriever(ds, n, k, sys.seed, spec, &cluster_cfg)?
+        }
+        None => match &cluster_cfg {
+            Some(cfg) => build_local_clustered_retriever(
+                ds,
+                n,
+                args.get_usize("nodes", 2 * replication),
+                replication,
+                k,
+                *cfg,
+                &sys,
+            )?,
+            None => {
+                build_retriever(ds, n, args.get_usize("nodes", 2), k, false, &sys)?.0
+            }
+        },
     };
     let mode = if sequential {
         ServeMode::Sequential
@@ -298,22 +331,68 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
     Ok(())
 }
 
+/// Elastic-tier config from the serve knobs: `Some` when replication or
+/// hedging is requested, `None` for the flat legacy path.
+fn cluster_config(replication: usize, hedge_quantile: f64) -> Option<ClusterConfig> {
+    if replication <= 1 && hedge_quantile <= 0.0 {
+        return None;
+    }
+    let mut cfg = ClusterConfig::default();
+    if hedge_quantile > 0.0 {
+        cfg.hedge = Some(HedgeConfig {
+            quantile: hedge_quantile.min(0.999),
+            ..Default::default()
+        });
+    }
+    Some(cfg)
+}
+
+/// Retrieval stack over an in-process replicated cluster: the same index
+/// carved into `n_nodes / replication` shards with `replication` replicas
+/// each, dispatched through the cluster engine.
+fn build_local_clustered_retriever(
+    ds: &'static config::DatasetConfig,
+    n: usize,
+    n_nodes: usize,
+    replication: usize,
+    k: usize,
+    cfg: ClusterConfig,
+    sys: &SystemConfig,
+) -> Result<Retriever> {
+    let data = SyntheticDataset::generate_sized(ds, n, 256, sys.seed);
+    let nlist = (n as f64).sqrt() as usize;
+    eprintln!(
+        "[build] clustered dataset {} n={n} nlist={nlist} nodes={n_nodes} \
+         replication={replication}",
+        ds.name
+    );
+    let index =
+        IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, sys.seed ^ 1);
+    let engine = ClusterEngine::local(&index, n_nodes, replication, k, cfg)?;
+    let dispatcher = Dispatcher::clustered(engine, k);
+    let corpus = Corpus::generate(n, 2048, config::CHUNK_LEN, sys.seed ^ 2);
+    Ok(Retriever::new(ds, index, dispatcher, corpus))
+}
+
 /// Retrieval stack over running `chamvs-node` processes: mirror the node
 /// binary's deterministic (dataset, n, seed) shard contract for the probe
-/// index, and connect one `RemoteNode` backend per address — the same
-/// dispatcher then drives the remote tier.
+/// index, and connect one `RemoteNode` backend per address. With an
+/// elastic-tier config, nodes are placed into the cluster map by the
+/// shard they declare in their Hello (replicated addresses declare the
+/// same shard); otherwise the flat one-node-per-shard dispatcher is kept.
 fn build_remote_retriever(
     ds: &'static config::DatasetConfig,
     n: usize,
     k: usize,
     seed: u64,
     spec: &str,
+    cluster_cfg: &Option<ClusterConfig>,
 ) -> Result<Retriever> {
     let data = SyntheticDataset::generate_sized(ds, n, 16, seed);
     let nlist = (n as f64).sqrt() as usize;
     eprintln!("[serve-net] building probe index ({} n={n} nlist={nlist})", ds.name);
     let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
-    let mut backends: Vec<Box<dyn ScanBackend>> = Vec::new();
+    let mut remotes: Vec<RemoteNode> = Vec::new();
     for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
         let addr: std::net::SocketAddr = part
             .trim()
@@ -332,13 +411,151 @@ fn build_remote_retriever(
             ds.name,
             ds.m
         );
-        backends.push(Box::new(node));
-        eprintln!("[serve-net] connected memory node {}", part.trim());
+        eprintln!(
+            "[serve-net] connected memory node {} (shard {}/{})",
+            part.trim(),
+            node.shard(),
+            node.n_shards()
+        );
+        remotes.push(node);
     }
-    anyhow::ensure!(!backends.is_empty(), "--remote needs at least one address");
-    let dispatcher = Dispatcher::over(backends, k);
+    anyhow::ensure!(!remotes.is_empty(), "--remote needs at least one address");
+    let dispatcher = match cluster_cfg {
+        Some(cfg) => {
+            let n_shards = remotes[0].n_shards();
+            anyhow::ensure!(
+                remotes.iter().all(|r| r.n_shards() == n_shards),
+                "memory nodes disagree on the shard count — restart them \
+                 with one consistent --shards"
+            );
+            let nodes: Vec<ClusterNode> = remotes
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| ClusterNode {
+                    id: i as u32,
+                    shard: r.shard(),
+                    backend: Box::new(r) as Box<dyn ScanBackend>,
+                })
+                .collect();
+            let engine = ClusterEngine::new(nodes, n_shards, *cfg)?;
+            eprintln!(
+                "[serve-net] cluster: {} shards, min replication {}",
+                engine.n_shards(),
+                engine.map().min_replication()
+            );
+            Dispatcher::clustered(engine, k)
+        }
+        None => Dispatcher::over(
+            remotes
+                .into_iter()
+                .map(|r| Box::new(r) as Box<dyn ScanBackend>)
+                .collect(),
+            k,
+        ),
+    };
     let corpus = Corpus::generate(n, 2048, config::CHUNK_LEN, seed ^ 2);
     Ok(Retriever::new(ds, index, dispatcher, corpus))
+}
+
+/// `chameleon cluster` — build an in-process replicated cluster, kill one
+/// replica mid-workload, and report the elastic tier's behaviour:
+/// assignment map, per-node health, failover/hedge counters, and whether
+/// every post-failure result stayed bit-identical to a flat reference.
+fn cluster_cmd(args: &Args) -> Result<()> {
+    let sys = system_config(args);
+    let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 8000);
+    let n_nodes = args.get_usize("nodes", 4);
+    let replication = args.get_usize("replication", 2).max(1);
+    let n_queries = args.get_usize("queries", 32).max(2);
+    let hedge_quantile = args.get_f64("hedge-quantile", 0.0);
+    let k = args.get_usize("k", 10);
+
+    anyhow::ensure!(
+        n_nodes % replication == 0,
+        "--nodes {n_nodes} must be a multiple of --replication {replication}"
+    );
+    let n_shards = n_nodes / replication;
+    let data = SyntheticDataset::generate_sized(ds, n, n_queries, sys.seed);
+    let nlist = (n as f64).sqrt() as usize;
+    eprintln!(
+        "[cluster] building index ({} n={n} nlist={nlist}), {n_shards} shards x \
+         {replication} replicas",
+        ds.name
+    );
+    let index =
+        IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, sys.seed ^ 1);
+
+    let mut cfg = cluster_config(replication, hedge_quantile)
+        .unwrap_or_default();
+    // Survive a dead replica without waiting out long socket deadlines,
+    // and pin the victim as its shard's primary so the demo's mid-run
+    // death deterministically happens (health-aware selection is sticky
+    // and could starve the victim of scans).
+    cfg.attempt_timeout = Duration::from_secs(5);
+    cfg.select = chameleon::cluster::SelectPolicy::Static;
+    let plan = ClusterMap::carve_plan(n_nodes, replication)?;
+    let kill_at = (n_queries / 4).max(1);
+    let victim: u32 = 0;
+    let nodes: Vec<ClusterNode> = plan
+        .into_iter()
+        .map(|(id, shard)| {
+            let backend: Box<dyn ScanBackend> = Box::new(MemoryNode::new(
+                Shard::carve(&index, shard, n_shards),
+                ScanEngine::Native,
+                k,
+            ));
+            let backend = if id == victim && replication > 1 {
+                Box::new(FailingBackend::new(backend, kill_at))
+                    as Box<dyn ScanBackend>
+            } else {
+                backend
+            };
+            ClusterNode { id, shard, backend }
+        })
+        .collect();
+    let engine = ClusterEngine::new(nodes, n_shards, cfg)?;
+    let mut clustered = Dispatcher::clustered(engine, k);
+
+    // Flat reference: one node per shard over the same carve.
+    let flat_nodes: Vec<MemoryNode> = (0..n_shards)
+        .map(|s| {
+            MemoryNode::new(
+                Shard::carve(&index, s, n_shards),
+                ScanEngine::Native,
+                k,
+            )
+        })
+        .collect();
+    let mut flat = Dispatcher::new(flat_nodes, k);
+
+    if replication > 1 {
+        println!(
+            "[cluster] node {victim} dies after query {kill_at} (of {n_queries})"
+        );
+    }
+    let mut identical = 0usize;
+    for qi in 0..n_queries {
+        let q = data.query(qi % data.n_queries);
+        let lists = index.probe(q, ds.nprobe);
+        let want = flat.search(q, &index.pq.centroids, &lists, ds.nprobe)?;
+        let got = clustered.search(q, &index.pq.centroids, &lists, ds.nprobe)?;
+        if got.topk == want.topk {
+            identical += 1;
+        }
+    }
+    println!(
+        "[cluster] {identical}/{n_queries} queries bit-identical to the flat \
+         reference (zero failed)"
+    );
+    let engine = clustered.cluster().expect("clustered dispatcher");
+    println!("{}", engine.render_report());
+    anyhow::ensure!(
+        identical == n_queries,
+        "cluster results diverged from the flat reference"
+    );
+    Ok(())
 }
 
 fn report_cmd(args: &Args) -> Result<()> {

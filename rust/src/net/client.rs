@@ -13,6 +13,7 @@
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -24,6 +25,34 @@ use crate::chamvs::dispatcher::{BatchQuery, Dispatcher, SearchResult};
 use crate::chamvs::node::NodeResult;
 use crate::hwmodel::fpga::FpgaModel;
 
+/// Socket deadlines for a [`RemoteNode`] connection. A hung node used to
+/// block a dispatch round forever; these deadlines are the transport
+/// backstop that guarantees every exchange terminates. The defaults are
+/// deliberately generous — a *replicated* tier detects stragglers much
+/// earlier via the cluster engine's `attempt_timeout` and hedging, while
+/// the flat (unreplicated) path has no failover to hand a slow-but-alive
+/// node to, so a legitimate heavy round must not be killed by an
+/// impatient socket.
+#[derive(Clone, Copy, Debug)]
+pub struct NetTimeouts {
+    /// TCP connect deadline.
+    pub connect: Duration,
+    /// Per-read deadline while waiting for a scan response.
+    pub read: Duration,
+    /// Per-write deadline while sending a request.
+    pub write: Duration,
+}
+
+impl Default for NetTimeouts {
+    fn default() -> NetTimeouts {
+        NetTimeouts {
+            connect: Duration::from_secs(2),
+            read: Duration::from_secs(30),
+            write: Duration::from_secs(30),
+        }
+    }
+}
+
 /// A connection to one remote `chamvs-node` memory node, usable anywhere
 /// the dispatcher takes a scan backend.
 pub struct RemoteNode {
@@ -33,18 +62,35 @@ pub struct RemoteNode {
     /// Node identity from the connection handshake.
     pub node_id: u32,
     m: usize,
+    shard: usize,
+    n_shards: usize,
     k: usize,
+    timeouts: NetTimeouts,
     fpga: FpgaModel,
     next_id: u64,
+    /// Set after a timeout or I/O failure mid-exchange: the stream may
+    /// hold a stale half-delivered response, so every later scan on this
+    /// connection fails fast instead of merging desynced frames. A
+    /// poisoned node rejoins via [`reconnect`](Self::reconnect) (or a
+    /// fresh connection).
+    poisoned: bool,
 }
 
 impl RemoteNode {
-    /// Connect and complete the [`Hello`] handshake (which carries the
-    /// node's PQ width, so no out-of-band geometry contract is needed).
+    /// Connect with default timeouts and complete the [`Hello`] handshake
+    /// (which carries the node's PQ geometry and shard identity, so no
+    /// out-of-band contract is needed).
     pub fn connect(addr: SocketAddr, k: usize) -> Result<RemoteNode> {
-        let stream = TcpStream::connect(addr)
+        RemoteNode::connect_with(addr, k, NetTimeouts::default())
+    }
+
+    /// [`connect`](Self::connect) with explicit socket deadlines.
+    pub fn connect_with(addr: SocketAddr, k: usize, t: NetTimeouts) -> Result<RemoteNode> {
+        let stream = TcpStream::connect_timeout(&addr, t.connect)
             .with_context(|| format!("connecting to memory node {addr}"))?;
         stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(t.read))?;
+        stream.set_write_timeout(Some(t.write))?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let frame = Frame::read_from(&mut reader)
             .with_context(|| format!("reading hello from {addr}"))?;
@@ -56,10 +102,50 @@ impl RemoteNode {
             reader,
             node_id: hello.node_id,
             m: hello.m as usize,
+            shard: hello.shard as usize,
+            n_shards: hello.n_shards.max(1) as usize,
             k,
+            timeouts: t,
             fpga: FpgaModel::default(),
             next_id: 0,
+            poisoned: false,
         })
+    }
+
+    /// Which shard this node declared holding a replica of.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Shard count the node's carve was taken at.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Whether an earlier failure desynced this connection.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Re-dial the node and redo the handshake, clearing the poisoned
+    /// state — the recovery path for a connection a timeout desynced.
+    /// Fails (leaving the node poisoned) if the node is unreachable or
+    /// came back with a different geometry or shard placement.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let fresh = RemoteNode::connect_with(self.addr, self.k, self.timeouts)?;
+        anyhow::ensure!(
+            fresh.m == self.m && fresh.shard == self.shard && fresh.n_shards == self.n_shards,
+            "node {} changed identity across reconnect (m {}→{}, shard {}/{}→{}/{})",
+            self.addr,
+            self.m,
+            fresh.m,
+            self.shard,
+            self.n_shards,
+            fresh.shard,
+            fresh.n_shards
+        );
+        *self = fresh;
+        Ok(())
     }
 
     fn to_node_result(r: ScanResponse) -> NodeResult {
@@ -72,26 +158,10 @@ impl RemoteNode {
             n_scanned: r.n_scanned as usize,
         }
     }
-}
 
-impl ScanBackend for RemoteNode {
-    fn m(&self) -> usize {
-        self.m
-    }
-
-    fn fpga(&self) -> &FpgaModel {
-        &self.fpga
-    }
-
-    /// The node server builds its own ADC table; skip the client-side one.
-    fn wants_lut(&self) -> bool {
-        false
-    }
-
-    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], _codebook: &[f32]) -> Result<Vec<NodeResult>> {
-        if jobs.is_empty() {
-            return Ok(Vec::new());
-        }
+    /// One request/response exchange for a round of jobs (the fallible
+    /// half [`ScanBackend::scan_jobs`] wraps with poisoning).
+    fn scan_jobs_exchange(&mut self, jobs: &[ScanJob<'_>]) -> Result<Vec<NodeResult>> {
         let base = self.next_id;
         self.next_id += jobs.len() as u64;
         let k = self.k as u32;
@@ -138,9 +208,53 @@ impl ScanBackend for RemoteNode {
             Ok(out)
         }
     }
+}
+
+impl ScanBackend for RemoteNode {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn fpga(&self) -> &FpgaModel {
+        &self.fpga
+    }
+
+    /// The node server builds its own ADC table; skip the client-side one.
+    fn wants_lut(&self) -> bool {
+        false
+    }
+
+    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], _codebook: &[f32]) -> Result<Vec<NodeResult>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        anyhow::ensure!(
+            !self.poisoned,
+            "connection to memory node {} was poisoned by an earlier \
+             timeout/failure — reconnect to rejoin it",
+            self.addr
+        );
+        match self.scan_jobs_exchange(jobs) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                // The stream may now carry a late or partial response
+                // that would desync the next exchange: fail fast until
+                // the operator reconnects (bounded failure detection for
+                // the cluster engine — never a silently-wrong merge).
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
 
     fn shutdown(&mut self) {
         let _ = Frame { kind: Kind::Shutdown, payload: vec![] }.write_to(&mut self.stream);
+    }
+
+    /// Ask the node process to retire: it exits once this connection
+    /// closes (see the `Drain` handling in `net::server`).
+    fn drain(&mut self) {
+        let _ = Frame { kind: Kind::Drain, payload: vec![] }.write_to(&mut self.stream);
     }
 }
 

@@ -11,8 +11,9 @@ pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::{NodeClient, RemoteNode};
+pub use client::{NetTimeouts, NodeClient, RemoteNode};
 pub use protocol::{
-    BatchScanRequest, BatchScanResponse, Frame, Hello, ScanRequest, ScanResponse,
+    BatchScanRequest, BatchScanResponse, ClusterAck, ClusterOp, ClusterUpdate, Frame,
+    Hello, ScanRequest, ScanResponse,
 };
 pub use server::NodeServer;

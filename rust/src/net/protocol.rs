@@ -36,6 +36,15 @@ pub enum Kind {
     BatchScanRequest = 7,
     /// Node -> coordinator: per-query local top-Ks for one batch frame.
     BatchScanResponse = 8,
+    /// Admin -> coordinator: a live cluster-membership transition
+    /// (join/drain/remove a memory node); applied between dispatch
+    /// rounds, never mid-batch.
+    ClusterUpdate = 9,
+    /// Coordinator -> admin: the transition's outcome + new epoch.
+    ClusterAck = 10,
+    /// -> memory node: retire gracefully — finish in-flight work, stop
+    /// accepting new connections, exit once the current one closes.
+    Drain = 11,
 }
 
 impl Kind {
@@ -49,6 +58,9 @@ impl Kind {
             6 => Kind::Hello,
             7 => Kind::BatchScanRequest,
             8 => Kind::BatchScanResponse,
+            9 => Kind::ClusterUpdate,
+            10 => Kind::ClusterAck,
+            11 => Kind::Drain,
             other => bail!("unknown frame kind {other}"),
         })
     }
@@ -120,6 +132,16 @@ fn read_u64s(r: &mut &[u8], n: usize) -> Result<Vec<u64>> {
     Ok(v)
 }
 
+/// A length-prefixed UTF-8 string; the claimed length must fit in the
+/// remaining payload before anything is allocated.
+fn read_string(r: &mut &[u8]) -> Result<String> {
+    let n = r.read_u32::<LE>()? as usize;
+    anyhow::ensure!(n <= r.len(), "truncated frame: {n}-byte string > {} bytes", r.len());
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|e| anyhow::anyhow!("invalid utf-8 in frame string: {e}"))
+}
+
 /// An item count whose items occupy at least `min_item_bytes` each.
 fn read_count(r: &mut &[u8], min_item_bytes: usize) -> Result<usize> {
     let n = r.read_u32::<LE>()? as usize;
@@ -134,6 +156,9 @@ fn read_count(r: &mut &[u8], min_item_bytes: usize) -> Result<usize> {
 // ------------------------------------------------------------------ hello
 
 /// Node handshake, sent by a memory node once per accepted connection.
+/// `shard`/`n_shards` declare which carve of the database this node
+/// holds, so a coordinator can place replicated nodes into its cluster
+/// map without an out-of-band assignment contract.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Hello {
     pub node_id: u32,
@@ -141,14 +166,20 @@ pub struct Hello {
     pub m: u32,
     /// IVF list count of the node's shard.
     pub nlist: u32,
+    /// Which shard (of `n_shards`) this node holds a replica of.
+    pub shard: u32,
+    /// Shard count the node's carve was taken at.
+    pub n_shards: u32,
 }
 
 impl Hello {
     pub fn encode(&self) -> Frame {
-        let mut p = Vec::with_capacity(12);
+        let mut p = Vec::with_capacity(20);
         p.write_u32::<LE>(self.node_id).unwrap();
         p.write_u32::<LE>(self.m).unwrap();
         p.write_u32::<LE>(self.nlist).unwrap();
+        p.write_u32::<LE>(self.shard).unwrap();
+        p.write_u32::<LE>(self.n_shards).unwrap();
         Frame { kind: Kind::Hello, payload: p }
     }
 
@@ -161,7 +192,102 @@ impl Hello {
             node_id: r.read_u32::<LE>()?,
             m: r.read_u32::<LE>()?,
             nlist: r.read_u32::<LE>()?,
+            shard: r.read_u32::<LE>()?,
+            n_shards: r.read_u32::<LE>()?,
         })
+    }
+}
+
+// ---------------------------------------------------------------- cluster
+
+/// A cluster-membership transition kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterOp {
+    /// Add a memory node (the coordinator connects to `addr`).
+    Join = 1,
+    /// Retire a node: excluded from new selection, finishes in flight.
+    Drain = 2,
+    /// Drop a node from the map (its connection closes).
+    Remove = 3,
+}
+
+impl ClusterOp {
+    fn from_u32(x: u32) -> Result<ClusterOp> {
+        Ok(match x {
+            1 => ClusterOp::Join,
+            2 => ClusterOp::Drain,
+            3 => ClusterOp::Remove,
+            other => bail!("unknown cluster op {other}"),
+        })
+    }
+}
+
+/// Admin request for a live membership transition. For `Join`, `addr` is
+/// the node's `host:port` and `shard` is validated against the node's own
+/// Hello; for `Drain`/`Remove`, only `node_id` is meaningful.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterUpdate {
+    pub op: ClusterOp,
+    pub node_id: u32,
+    pub shard: u32,
+    pub addr: String,
+}
+
+impl ClusterUpdate {
+    pub fn encode(&self) -> Frame {
+        let bytes = self.addr.as_bytes();
+        let mut p = Vec::with_capacity(16 + bytes.len());
+        p.write_u32::<LE>(self.op as u32).unwrap();
+        p.write_u32::<LE>(self.node_id).unwrap();
+        p.write_u32::<LE>(self.shard).unwrap();
+        p.write_u32::<LE>(bytes.len() as u32).unwrap();
+        p.extend_from_slice(bytes);
+        Frame { kind: Kind::ClusterUpdate, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<ClusterUpdate> {
+        if f.kind != Kind::ClusterUpdate {
+            bail!("not a cluster update");
+        }
+        let mut r = &f.payload[..];
+        let op = ClusterOp::from_u32(r.read_u32::<LE>()?)?;
+        let node_id = r.read_u32::<LE>()?;
+        let shard = r.read_u32::<LE>()?;
+        let addr = read_string(&mut r)?;
+        Ok(ClusterUpdate { op, node_id, shard, addr })
+    }
+}
+
+/// Coordinator reply to a [`ClusterUpdate`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterAck {
+    /// Cluster-map epoch after the transition (unchanged on failure).
+    pub epoch: u64,
+    pub ok: bool,
+    /// Human-readable outcome (error text on failure).
+    pub message: String,
+}
+
+impl ClusterAck {
+    pub fn encode(&self) -> Frame {
+        let bytes = self.message.as_bytes();
+        let mut p = Vec::with_capacity(16 + bytes.len());
+        p.write_u64::<LE>(self.epoch).unwrap();
+        p.write_u32::<LE>(u32::from(self.ok)).unwrap();
+        p.write_u32::<LE>(bytes.len() as u32).unwrap();
+        p.extend_from_slice(bytes);
+        Frame { kind: Kind::ClusterAck, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<ClusterAck> {
+        if f.kind != Kind::ClusterAck {
+            bail!("not a cluster ack");
+        }
+        let mut r = &f.payload[..];
+        let epoch = r.read_u64::<LE>()?;
+        let ok = r.read_u32::<LE>()? != 0;
+        let message = read_string(&mut r)?;
+        Ok(ClusterAck { epoch, ok, message })
     }
 }
 
@@ -496,7 +622,17 @@ mod tests {
             .encode(),
             RetrieveResponse { query_id: 5, tokens: vec![10, 20], dists: vec![0.1, 0.2] }
                 .encode(),
-            Hello { node_id: 2, m: 16, nlist: 77 }.encode(),
+            Hello { node_id: 2, m: 16, nlist: 77, shard: 1, n_shards: 4 }.encode(),
+            ClusterUpdate {
+                op: ClusterOp::Join,
+                node_id: 9,
+                shard: 1,
+                addr: "127.0.0.1:4242".to_string(),
+            }
+            .encode(),
+            ClusterAck { epoch: 17, ok: true, message: "joined".to_string() }
+                .encode(),
+            Frame { kind: Kind::Drain, payload: vec![] },
             BatchScanRequest {
                 items: vec![sample_scan_request(), ScanRequest {
                     query_id: 43,
@@ -560,9 +696,58 @@ mod tests {
 
     #[test]
     fn hello_roundtrip() {
-        let h = Hello { node_id: 7, m: 32, nlist: 141 };
+        let h = Hello { node_id: 7, m: 32, nlist: 141, shard: 3, n_shards: 8 };
         let back = roundtrip(h.encode());
         assert_eq!(Hello::decode(&back).unwrap(), h);
+    }
+
+    #[test]
+    fn cluster_update_roundtrip() {
+        for op in [ClusterOp::Join, ClusterOp::Drain, ClusterOp::Remove] {
+            let u = ClusterUpdate {
+                op,
+                node_id: 3,
+                shard: 2,
+                addr: if op == ClusterOp::Join {
+                    "10.0.0.7:9000".to_string()
+                } else {
+                    String::new()
+                },
+            };
+            let back = roundtrip(u.encode());
+            assert_eq!(ClusterUpdate::decode(&back).unwrap(), u);
+        }
+    }
+
+    #[test]
+    fn cluster_ack_roundtrip() {
+        for (ok, msg) in [(true, "epoch advanced"), (false, "unknown node 9")] {
+            let a = ClusterAck { epoch: 42, ok, message: msg.to_string() };
+            let back = roundtrip(a.encode());
+            assert_eq!(ClusterAck::decode(&back).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn cluster_update_rejects_bad_strings() {
+        // Claimed string length beyond the payload must error up front.
+        let mut p = Vec::new();
+        p.write_u32::<LE>(1).unwrap(); // op: Join
+        p.write_u32::<LE>(0).unwrap(); // node_id
+        p.write_u32::<LE>(0).unwrap(); // shard
+        p.write_u32::<LE>(u32::MAX).unwrap(); // addr len: absurd
+        let f = Frame { kind: Kind::ClusterUpdate, payload: p };
+        assert!(ClusterUpdate::decode(&f).is_err());
+
+        // Non-UTF-8 bytes under a valid length must error, not panic.
+        let mut p = Vec::new();
+        p.write_u32::<LE>(1).unwrap();
+        p.write_u32::<LE>(0).unwrap();
+        p.write_u32::<LE>(0).unwrap();
+        p.write_u32::<LE>(2).unwrap();
+        p.extend_from_slice(&[0xff, 0xfe]);
+        let f = Frame { kind: Kind::ClusterUpdate, payload: p };
+        assert!(ClusterUpdate::decode(&f).is_err());
     }
 
     #[test]
@@ -657,6 +842,8 @@ mod tests {
             Kind::RetrieveResponse,
             Kind::BatchScanRequest,
             Kind::BatchScanResponse,
+            Kind::ClusterUpdate,
+            Kind::ClusterAck,
         ] {
             let f = Frame { kind, payload: junk.clone() };
             let failed = match kind {
@@ -666,6 +853,8 @@ mod tests {
                 Kind::RetrieveResponse => RetrieveResponse::decode(&f).is_err(),
                 Kind::BatchScanRequest => BatchScanRequest::decode(&f).is_err(),
                 Kind::BatchScanResponse => BatchScanResponse::decode(&f).is_err(),
+                Kind::ClusterUpdate => ClusterUpdate::decode(&f).is_err(),
+                Kind::ClusterAck => ClusterAck::decode(&f).is_err(),
                 _ => unreachable!(),
             };
             assert!(failed, "{kind:?} accepted garbage");

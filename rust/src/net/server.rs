@@ -3,11 +3,15 @@
 //! the paper's FPGA node with its hardware TCP/IP stack).
 //!
 //! Each accepted connection starts with a [`Hello`] handshake (node id +
-//! PQ geometry), then serves [`ScanRequest`] and [`BatchScanRequest`]
-//! frames. Scans execute through the same [`ScanBackend`] round path the
-//! in-process dispatcher uses, so local and networked nodes run identical
-//! code — a batch frame is one round of jobs, scanned node-major and
-//! answered in one response frame.
+//! PQ geometry + shard placement), then serves [`ScanRequest`] and
+//! [`BatchScanRequest`] frames. Scans execute through the same
+//! [`ScanBackend`] round path the in-process dispatcher uses, so local
+//! and networked nodes run identical code — a batch frame is one round of
+//! jobs, scanned node-major and answered in one response frame. A `Drain`
+//! frame retires the node gracefully: in-flight traffic finishes, no new
+//! connections are accepted, and the process exits once the draining
+//! connection closes — the node-side half of the cluster's live
+//! membership transitions.
 //!
 //! PJRT handles are not `Send` (the xla crate wraps `Rc` internals), so
 //! the node is *built inside* the server thread via a builder closure and
@@ -34,6 +38,7 @@ use crate::pq::scan::build_lut_raw_into;
 pub struct NodeServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -50,6 +55,8 @@ impl NodeServer {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let draining = Arc::new(AtomicBool::new(false));
+        let draining2 = draining.clone();
         let handle = std::thread::spawn(move || {
             let mut node = builder();
             for conn in listener.incoming() {
@@ -58,8 +65,15 @@ impl NodeServer {
                 }
                 match conn {
                     Ok(stream) => {
-                        let _ =
-                            serve_conn(stream, &mut node, &codebook, nprobe, &stop2);
+                        let _ = serve_conn(
+                            stream, &mut node, &codebook, nprobe, &stop2, &draining2,
+                        );
+                        // A drained node retires once the connection that
+                        // drained it (or any later one) closes: no new
+                        // accepts, clean exit.
+                        if draining2.load(Ordering::Relaxed) {
+                            stop2.store(true, Ordering::Relaxed);
+                        }
                         if stop2.load(Ordering::Relaxed) {
                             break;
                         }
@@ -68,7 +82,12 @@ impl NodeServer {
                 }
             }
         });
-        Ok(NodeServer { addr, stop, handle: Some(handle) })
+        Ok(NodeServer { addr, stop, draining, handle: Some(handle) })
+    }
+
+    /// Whether a client asked this node to retire (Drain frame).
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
     }
 
     /// Whether the server has been asked to stop (set by
@@ -101,17 +120,22 @@ fn serve_conn(
     codebook: &[f32],
     nprobe: usize,
     stop: &AtomicBool,
+    draining: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     // Poll the stop flag between frames so shutdown() can join even while
     // a client connection sits idle.
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
-    // Handshake: the client learns this node's identity and PQ geometry.
+    // Handshake: the client learns this node's identity, PQ geometry and
+    // shard placement (`Shard::carve(index, shard, n_shards)` identity —
+    // replicated nodes declare the same shard).
     Hello {
         node_id: node.shard.node_id as u32,
         m: node.shard.m as u32,
         nlist: node.shard.n_lists() as u32,
+        shard: node.shard.node_id as u32,
+        n_shards: node.shard.n_nodes as u32,
     }
     .encode()
     .write_to(&mut writer)?;
@@ -142,6 +166,12 @@ fn serve_conn(
             Kind::Shutdown => {
                 stop.store(true, Ordering::Relaxed);
                 return Ok(());
+            }
+            Kind::Drain => {
+                // Graceful retirement: keep serving this connection's
+                // in-flight traffic; the accept loop stops taking new
+                // connections and the process exits once this one closes.
+                draining.store(true, Ordering::Relaxed);
             }
             Kind::ScanRequest => {
                 let req = ScanRequest::decode(&frame)?;

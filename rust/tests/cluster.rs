@@ -1,0 +1,307 @@
+//! Elastic retrieval tier integration tests: replicated dispatch
+//! bit-identity, the ISSUE-5 acceptance pin (killing any single node at
+//! replication 2 yields zero failed queries and identical top-k), hedged
+//! dispatch, and live membership transitions through the coordinator
+//! server's epoch-swap path.
+
+use std::time::Duration;
+
+use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::chamvs::ScanBackend;
+use chameleon::cluster::{
+    ClusterConfig, ClusterEngine, ClusterMap, ClusterNode, FailingBackend, HedgeConfig,
+    SelectPolicy, StragglerBackend,
+};
+use chameleon::config;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorClient, CoordinatorServer};
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::net::client::RemoteNode;
+use chameleon::net::protocol::{ClusterOp, ClusterUpdate};
+use chameleon::net::server::NodeServer;
+use chameleon::util::rng::Rng;
+
+fn toy_index(seed: u64) -> (IvfPqIndex, usize) {
+    let mut rng = Rng::new(seed);
+    let (n, d, m, nlist) = (3000, 32, 8, 32);
+    let data = rng.normal_vec(n * d);
+    (IvfPqIndex::build(&data, n, d, m, nlist, seed ^ 1), d)
+}
+
+fn mk_node(index: &IvfPqIndex, shard: usize, n_shards: usize, k: usize) -> Box<dyn ScanBackend> {
+    Box::new(MemoryNode::new(Shard::carve(index, shard, n_shards), ScanEngine::Native, k))
+}
+
+/// Flat reference dispatcher: one node per shard over the same carve.
+fn flat_reference(index: &IvfPqIndex, n_shards: usize, k: usize) -> Dispatcher {
+    let nodes: Vec<MemoryNode> = (0..n_shards)
+        .map(|s| MemoryNode::new(Shard::carve(index, s, n_shards), ScanEngine::Native, k))
+        .collect();
+    Dispatcher::new(nodes, k)
+}
+
+#[test]
+fn clustered_dispatch_is_bit_identical_to_flat() {
+    let (idx, d) = toy_index(1);
+    let engine = ClusterEngine::local(&idx, 4, 2, 10, ClusterConfig::default()).unwrap();
+    let mut clustered = Dispatcher::clustered(engine, 10);
+    let mut flat = flat_reference(&idx, 2, 10);
+    let mut rng = Rng::new(5);
+    // Single-query rounds.
+    for _ in 0..4 {
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 8);
+        let want = flat.search(&q, &idx.pq.centroids, &lists, 8).unwrap();
+        let got = clustered.search(&q, &idx.pq.centroids, &lists, 8).unwrap();
+        assert_eq!(got.topk, want.topk);
+        assert_eq!(got.n_scanned, want.n_scanned);
+        assert!(got.measured_wall_s > 0.0);
+    }
+    // Batched rounds through the same engine.
+    let queries: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(d)).collect();
+    let lists: Vec<Vec<u32>> = queries.iter().map(|q| idx.probe(q, 8)).collect();
+    let batch: Vec<BatchQuery> = queries
+        .iter()
+        .zip(&lists)
+        .map(|(q, l)| BatchQuery { query: q, lists: l })
+        .collect();
+    let want = flat.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
+    let got = clustered.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.topk, w.topk);
+    }
+}
+
+/// ISSUE 5 acceptance: with replication factor 2, killing ANY single
+/// memory node mid-workload yields zero failed queries and top-k results
+/// bit-identical to the healthy cluster.
+#[test]
+fn killing_any_single_node_is_invisible_at_replication_2() {
+    let (idx, d) = toy_index(2);
+    let (n_nodes, replication, k) = (4usize, 2usize, 10usize);
+    let n_shards = n_nodes / replication;
+    let mut flat = flat_reference(&idx, n_shards, k);
+    let mut rng = Rng::new(9);
+    let queries: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(d)).collect();
+    let lists: Vec<Vec<u32>> = queries.iter().map(|q| idx.probe(q, 8)).collect();
+    let want: Vec<Vec<(f32, u64)>> = queries
+        .iter()
+        .zip(&lists)
+        .map(|(q, l)| flat.search(q, &idx.pq.centroids, l, 8).unwrap().topk)
+        .collect();
+
+    let kill_at = 3usize; // scans observed by the victim before dying
+    // Static selection makes each shard's primary deterministic (shard 0:
+    // node 0 of [0, 2]; shard 1: node 3 of the rotated [3, 1]), so a
+    // primary victim is GUARANTEED to serve, die mid-run, and fail over —
+    // health-aware selection is sticky and could starve the victim of
+    // scans, turning the death into a coin flip.
+    let static_primaries = [0u32, 3];
+    for victim in 0..n_nodes as u32 {
+        let plan = ClusterMap::carve_plan(n_nodes, replication).unwrap();
+        let nodes: Vec<ClusterNode> = plan
+            .into_iter()
+            .map(|(id, shard)| {
+                let backend = mk_node(&idx, shard, n_shards, k);
+                let backend = if id == victim {
+                    Box::new(FailingBackend::new(backend, kill_at)) as Box<dyn ScanBackend>
+                } else {
+                    backend
+                };
+                ClusterNode { id, shard, backend }
+            })
+            .collect();
+        let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+        let engine = ClusterEngine::new(nodes, n_shards, cfg).unwrap();
+        let mut disp = Dispatcher::clustered(engine, k);
+        for ((q, l), w) in queries.iter().zip(&lists).zip(&want) {
+            let got = disp
+                .search(q, &idx.pq.centroids, l, 8)
+                .unwrap_or_else(|e| panic!("victim {victim}: query failed: {e:#}"));
+            assert_eq!(&got.topk, w, "victim {victim}: top-k diverged");
+        }
+        // A serving (primary) victim must actually have died and been
+        // rescued; a standby victim's death is trivially invisible.
+        if static_primaries.contains(&victim) {
+            let stats = disp.cluster().unwrap().stats();
+            assert!(
+                stats.failovers >= 1,
+                "victim {victim} was a primary: its replica must have served \
+                 ({stats:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn hedge_fires_and_wins_against_a_blocked_primary() {
+    let (idx, d) = toy_index(3);
+    let k = 10;
+    // Shard 0's primary straggles on every second call; the replica is
+    // healthy. Static selection keeps the straggler primary, so only
+    // hedging can rescue the slow rounds. The fast rounds warm the
+    // recent-latency window with a sub-millisecond baseline, making a
+    // low quantile a tight deadline for the 40 ms straggles.
+    let straggler = StragglerBackend::new(mk_node(&idx, 0, 1, k), Duration::from_millis(40), 2);
+    let nodes = vec![
+        ClusterNode { id: 0, shard: 0, backend: Box::new(straggler) },
+        ClusterNode { id: 1, shard: 0, backend: mk_node(&idx, 0, 1, k) },
+    ];
+    let cfg = ClusterConfig {
+        select: SelectPolicy::Static,
+        hedge: Some(HedgeConfig { quantile: 0.25, floor: Duration::from_micros(100) }),
+        ..Default::default()
+    };
+    let mut engine = ClusterEngine::new(nodes, 1, cfg).unwrap();
+    let mut rng = Rng::new(13);
+    let run = |engine: &mut ClusterEngine, rng: &mut Rng| {
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 6);
+        let lut = chameleon::pq::scan::build_lut(&idx.pq, &q);
+        let jobs = [chameleon::chamvs::ScanJob {
+            query: &q,
+            lists: &lists,
+            lut: &lut,
+            nprobe: 6,
+        }];
+        engine.run_round(&jobs, &idx.pq.centroids).unwrap();
+    };
+    // Warm the latency window (hedging stays off until it has a
+    // baseline of at least 8 samples).
+    for _ in 0..12 {
+        run(&mut engine, &mut rng);
+    }
+    let before = engine.stats();
+    for _ in 0..8 {
+        run(&mut engine, &mut rng);
+    }
+    let after = engine.stats();
+    assert!(
+        after.hedges > before.hedges,
+        "hedges must fire once the window is warm: {after:?}"
+    );
+    assert!(
+        after.hedge_wins > before.hedge_wins,
+        "the healthy replica must win hedged rounds: {after:?}"
+    );
+}
+
+/// Live membership transitions through the coordinator server: join a
+/// replica, drain + remove the original — between batches, with requests
+/// flowing before and after, and the epoch visible in every ack.
+#[test]
+fn coordinator_applies_cluster_updates_between_batches() {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let seed = 31u64;
+    let n = 2000usize;
+    // Three node processes: two replicas of shard 0, one of shard 1
+    // (shard identity comes from the carve each server holds).
+    let spawn = |shard: usize| {
+        let data = SyntheticDataset::generate_sized(ds, n, 8, seed);
+        let idx = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 32, seed ^ 1);
+        let cb = idx.pq.centroids.clone();
+        NodeServer::spawn_with(
+            move || MemoryNode::new(Shard::carve(&idx, shard, 2), ScanEngine::Native, 10),
+            cb,
+            8,
+        )
+        .unwrap()
+    };
+    let node_a = spawn(0); // initial shard-0 member
+    let node_b = spawn(1); // shard-1 member
+    let node_c = spawn(0); // joins later as shard-0 replica
+    let c_addr = node_c.addr;
+
+    let (a_addr, b_addr) = (node_a.addr, node_b.addr);
+    let builder = move || {
+        let data = SyntheticDataset::generate_sized(ds, n, 8, seed);
+        let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 32, seed ^ 1);
+        let nodes = vec![
+            ClusterNode {
+                id: 0,
+                shard: 0,
+                backend: Box::new(RemoteNode::connect(a_addr, 10).unwrap())
+                    as Box<dyn ScanBackend>,
+            },
+            ClusterNode {
+                id: 1,
+                shard: 1,
+                backend: Box::new(RemoteNode::connect(b_addr, 10).unwrap())
+                    as Box<dyn ScanBackend>,
+            },
+        ];
+        let engine = ClusterEngine::new(nodes, 2, ClusterConfig::default()).unwrap();
+        let corpus = Corpus::generate(n, 2048, config::CHUNK_LEN, seed ^ 2);
+        Retriever::new(ds, index, Dispatcher::clustered(engine, 10), corpus)
+    };
+    let mut server = CoordinatorServer::spawn_with(builder).unwrap();
+    let mut client = CoordinatorClient::connect(server.addr, 0).unwrap();
+    let data = SyntheticDataset::generate_sized(ds, n, 8, seed);
+
+    let before = client.retrieve(data.query(0), &[], 10, false).unwrap();
+    assert_eq!(before.tokens.len(), 10);
+
+    // Join node C as a second shard-0 replica.
+    let ack = client
+        .cluster_update(&ClusterUpdate {
+            op: ClusterOp::Join,
+            node_id: 2,
+            shard: 0,
+            addr: c_addr.to_string(),
+        })
+        .unwrap();
+    assert!(ack.ok, "{}", ack.message);
+    let epoch_after_join = ack.epoch;
+
+    // Drain then remove the original shard-0 member; epochs advance.
+    let ack = client
+        .cluster_update(&ClusterUpdate {
+            op: ClusterOp::Drain,
+            node_id: 0,
+            shard: 0,
+            addr: String::new(),
+        })
+        .unwrap();
+    assert!(ack.ok, "{}", ack.message);
+    assert_eq!(ack.epoch, epoch_after_join + 1);
+    let ack = client
+        .cluster_update(&ClusterUpdate {
+            op: ClusterOp::Remove,
+            node_id: 0,
+            shard: 0,
+            addr: String::new(),
+        })
+        .unwrap();
+    assert!(ack.ok, "{}", ack.message);
+    assert_eq!(ack.epoch, epoch_after_join + 2);
+
+    // Traffic keeps flowing under the new epoch, with identical payloads
+    // (node C holds the same shard-0 carve node A did).
+    let after = client.retrieve(data.query(0), &[], 10, false).unwrap();
+    assert_eq!(after.tokens, before.tokens);
+    assert_eq!(after.dists, before.dists);
+
+    // Draining the last replica of a shard must be refused.
+    let ack = client
+        .cluster_update(&ClusterUpdate {
+            op: ClusterOp::Drain,
+            node_id: 1,
+            shard: 1,
+            addr: String::new(),
+        })
+        .unwrap();
+    assert!(!ack.ok, "uncovering shard 1 must be refused");
+
+    client.shutdown_coordinator();
+    server.shutdown();
+    drop(node_b);
+    drop(node_c);
+    // node_a was drained and removed: its connection closed, so the
+    // server retires on its own; dropping it here just joins the thread.
+    drop(node_a);
+}

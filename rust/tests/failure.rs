@@ -4,12 +4,15 @@
 use std::io::Write;
 use std::net::TcpStream;
 
+use chameleon::chamvs::dispatcher::Dispatcher;
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::chamvs::ScanBackend;
+use chameleon::cluster::{ClusterConfig, ClusterEngine, ClusterNode, SelectPolicy};
 use chameleon::config;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
-use chameleon::net::client::NodeClient;
+use chameleon::net::client::{NodeClient, RemoteNode};
 use chameleon::net::protocol::{Frame, Kind, ScanRequest};
 use chameleon::net::server::NodeServer;
 
@@ -110,4 +113,68 @@ fn scan_request_with_out_of_range_list_is_filtered() {
 fn runtime_missing_artifacts_dir_errors() {
     let r = chameleon::runtime::Runtime::new("/nonexistent/artifacts");
     assert!(r.is_err());
+}
+
+/// Two networked replicas of the same (whole-index) shard behind the
+/// cluster engine: killing the primary mid-workload must not fail the
+/// query — dispatch completes on the surviving replica with bit-identical
+/// top-k. (This upgrades `client_errors_when_node_dies_mid_query` from
+/// "the error is detected" to "the error is survived".)
+#[test]
+fn dispatch_fails_over_to_replica_with_identical_topk() {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let seed = 21u64;
+    let data = SyntheticDataset::generate_sized(ds, 1500, 8, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 16, seed ^ 1);
+    // Each replica process rebuilds the identical 1-shard carve.
+    let spawn_replica = || {
+        let data = SyntheticDataset::generate_sized(ds, 1500, 8, seed);
+        let idx = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 16, seed ^ 1);
+        let cb = idx.pq.centroids.clone();
+        NodeServer::spawn_with(
+            move || MemoryNode::new(Shard::carve(&idx, 0, 1), ScanEngine::Native, 10),
+            cb,
+            8,
+        )
+        .unwrap()
+    };
+    let mut primary = spawn_replica();
+    let secondary = spawn_replica();
+
+    let nodes = vec![
+        ClusterNode {
+            id: 0,
+            shard: 0,
+            backend: Box::new(RemoteNode::connect(primary.addr, 10).unwrap())
+                as Box<dyn ScanBackend>,
+        },
+        ClusterNode {
+            id: 1,
+            shard: 0,
+            backend: Box::new(RemoteNode::connect(secondary.addr, 10).unwrap())
+                as Box<dyn ScanBackend>,
+        },
+    ];
+    // Static selection pins node 0 as the primary so the kill is
+    // guaranteed to hit the serving replica.
+    let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+    let engine = ClusterEngine::new(nodes, 1, cfg).unwrap();
+    let mut disp = Dispatcher::clustered(engine, 10);
+
+    let q = data.query(0);
+    let lists = index.probe(q, 8);
+    let healthy = disp.search(q, &index.pq.centroids, &lists, 8).unwrap();
+    assert_eq!(healthy.topk.len(), 10);
+
+    // Kill the primary: the dead socket errors fast, the engine retries
+    // on the replica, and the caller sees zero failures.
+    primary.shutdown();
+    let after = disp.search(q, &index.pq.centroids, &lists, 8).unwrap();
+    assert_eq!(
+        after.topk, healthy.topk,
+        "failover result must be bit-identical to the healthy cluster"
+    );
+    let stats = disp.cluster().unwrap().stats();
+    assert!(stats.failovers >= 1, "replica must have served the round: {stats:?}");
+    drop(secondary);
 }
