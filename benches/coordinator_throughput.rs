@@ -8,6 +8,12 @@
 //! sequential queries/s (the PR acceptance bar; per-query results are
 //! pinned bit-identical by rust/tests/concurrent_serving.rs).
 //!
+//! Second bar: end-to-end tracing must be effectively free. The same
+//! concurrent workload runs with a live span ring, and the best-of-3
+//! traced q/s must stay within 5% of the best-of-3 untraced q/s
+//! (recording is a few atomics per span; rust/tests/trace_alloc.rs pins
+//! the zero-allocation half of that claim).
+//!
 //! Run: `cargo bench --bench coordinator_throughput`
 
 use std::time::{Duration, Instant};
@@ -22,6 +28,7 @@ use chameleon::data::corpus::Corpus;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
+use chameleon::trace::{SpanKind, Tracer};
 
 const CLIENTS: usize = 4;
 const PER_CLIENT: usize = 96;
@@ -44,8 +51,13 @@ fn build_retriever(seed: u64) -> Retriever {
 /// Serve CLIENTS x `per_client` blocking retrievals and return (q/s,
 /// rounds, max batch). The retriever is built untimed and moved in.
 fn run(mode: ServeMode, per_client: usize) -> (f64, u64, u64) {
+    run_traced(mode, per_client, Tracer::off())
+}
+
+fn run_traced(mode: ServeMode, per_client: usize, tracer: Tracer) -> (f64, u64, u64) {
     let retriever = build_retriever(7);
-    let mut server = CoordinatorServer::spawn(move || retriever, mode).unwrap();
+    let mut server =
+        CoordinatorServer::spawn_traced(move || retriever, mode, tracer).unwrap();
     let addr = server.addr;
     let qdata = SyntheticDataset::generate_sized(
         config::dataset_by_name("SIFT").unwrap(),
@@ -106,6 +118,54 @@ fn main() {
     assert!(
         speedup >= 1.5,
         "concurrent batched server must sustain >= 1.5x sequential q/s, got {speedup:.2}x"
+    );
+
+    // Tracing-overhead A/B: best-of-3 each way to squeeze out scheduler
+    // noise; the traced arm keeps a live 64K-slot ring the whole run.
+    let best = |mk: &dyn Fn() -> f64| (0..3).map(|_| mk()).fold(0.0, f64::max);
+    let untraced =
+        best(&|| run(ServeMode::Concurrent(policy), PER_CLIENT).0);
+    let mut spans = 0usize;
+    let mut kinds_seen = Vec::new();
+    let mut traced = 0.0f64;
+    for _ in 0..3 {
+        let tracer = Tracer::new(1 << 16);
+        let qps = run_traced(
+            ServeMode::Concurrent(policy),
+            PER_CLIENT,
+            tracer.clone(),
+        )
+        .0;
+        traced = traced.max(qps);
+        let events = tracer.snapshot();
+        spans = events.len();
+        kinds_seen = events.iter().map(|e| e.kind).collect();
+        kinds_seen.sort_unstable();
+        kinds_seen.dedup();
+    }
+    let ratio = traced / untraced;
+    println!(
+        "  tracing    : {traced:>8.0} q/s traced vs {untraced:>8.0} q/s untraced \
+         ({ratio:.3}x, {spans} spans/run, bar: >= 0.95x)"
+    );
+    for kind in [
+        SpanKind::QueueWait,
+        SpanKind::LutBuild,
+        SpanKind::NodeScan,
+        SpanKind::Merge,
+        SpanKind::ReplyWrite,
+        SpanKind::Total,
+    ] {
+        assert!(
+            kinds_seen.contains(&kind),
+            "traced run missing {} spans",
+            kind.name()
+        );
+    }
+    assert!(
+        ratio >= 0.95,
+        "tracing overhead too high: traced {traced:.0} q/s vs untraced \
+         {untraced:.0} q/s ({ratio:.3}x < 0.95x)"
     );
     println!("coordinator_throughput OK");
 }

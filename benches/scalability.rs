@@ -68,7 +68,7 @@ fn main() {
             let batch: Vec<BatchQuery> = (0..BATCH)
                 .map(|j| {
                     let i = (start + j) % queries.len();
-                    BatchQuery { query: &queries[i], lists: &lists[i] }
+                    BatchQuery { query: &queries[i], lists: &lists[i], trace_id: 0 }
                 })
                 .collect();
             start = (start + BATCH) % queries.len();

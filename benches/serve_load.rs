@@ -1,0 +1,191 @@
+//! Bench: open-loop offered-load sweep against the traced concurrent
+//! coordinator (EXPERIMENTS.md §Serve).
+//!
+//! A short saturation burst first estimates the server's capacity, then
+//! the sweep offers 0.25x / 0.5x / 1x / 2x that estimate. Open-loop
+//! arrivals keep sending on schedule regardless of replies, so the
+//! latency-vs-load curve shows the real knee: goodput flattens at
+//! capacity while p99 (measured from the *scheduled* arrival) blows up
+//! past it. The per-stage trace left by the run is fitted into the
+//! LogGP/M/M/1 capacity planner, whose predicted knee must land within
+//! 6x of the measured one — a deliberately loose band (the model ignores
+//! batching overlap) that still pins the order of magnitude.
+//!
+//! `BENCH_serve.json` is written BEFORE the acceptance asserts, so a
+//! failing bar still uploads the numbers that explain it.
+//!
+//! Run: `cargo bench --bench serve_load`
+//! Quick CI profile: `CHAM_BENCH_QUICK=1 cargo bench --bench serve_load`
+
+use std::time::Duration;
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::batcher::BatchPolicy;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorServer, ServeMode};
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::hwmodel::{CapacityPlanner, StageTimes};
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::loadgen::{drive, measured_knee_qps, schedule, LoadgenConfig, OpenLoopReport};
+use chameleon::trace::{analyze, SpanKind, Tracer};
+use chameleon::util::json::{obj, Json};
+
+const NODES: usize = 2;
+const K: usize = 10;
+
+fn build_retriever(n: usize, seed: u64) -> Retriever {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, n, 16, seed);
+    let nlist = (n as f64).sqrt() as usize;
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..NODES)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, NODES), ScanEngine::Native, K))
+        .collect();
+    let corpus = Corpus::generate(n, 2048, config::CHUNK_LEN, seed ^ 2);
+    Retriever::new(ds, index, Dispatcher::new(nodes, K), corpus)
+}
+
+fn run_point(
+    addr: std::net::SocketAddr,
+    queries: &[Vec<f32>],
+    qps: f64,
+    n_requests: usize,
+    seed: u64,
+) -> OpenLoopReport {
+    let cfg = LoadgenConfig {
+        qps,
+        n_requests,
+        n_unique: queries.len(),
+        seed,
+        ..LoadgenConfig::default()
+    };
+    let sched = schedule(&cfg);
+    let deadline = Duration::from_secs_f64(sched.span_s() + 30.0);
+    drive(addr, queries, K, &sched, 4, deadline).expect("open-loop run")
+}
+
+fn main() {
+    let quick = std::env::var("CHAM_BENCH_QUICK").is_ok();
+    let (n, reqs) = if quick { (4_000, 150) } else { (8_000, 400) };
+    println!("== bench group: serve_load (n={n}, reqs/point={reqs}) ==");
+
+    let retriever = build_retriever(n, 7);
+    let tracer = Tracer::new(1 << 17);
+    let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) };
+    let mut server = CoordinatorServer::spawn_traced(
+        move || retriever,
+        ServeMode::Concurrent(policy),
+        tracer.clone(),
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let qdata = SyntheticDataset::generate_sized(ds, 64, 64, 9);
+    let queries: Vec<Vec<f32>> =
+        (0..64).map(|i| qdata.query(i % qdata.n_queries).to_vec()).collect();
+
+    // Throwaway warmup (connection setup, page cache, allocator arenas),
+    // then a saturation burst: offer far beyond capacity; goodput ~
+    // capacity.
+    run_point(addr, &queries, 500.0, 50, 0);
+    let calib = run_point(addr, &queries, 50_000.0, reqs, 1);
+    let cap = calib.goodput_qps;
+    println!("  calibration: ~{cap:.0} q/s capacity estimate");
+
+    let mut points = Vec::new();
+    let mut sweep = Vec::new();
+    for (i, frac) in [0.25, 0.5, 1.0, 2.0].iter().enumerate() {
+        let qps = (cap * frac).max(10.0);
+        let rep = run_point(addr, &queries, qps, reqs, 2 + i as u64);
+        println!(
+            "  offered {:>7.0} q/s -> goodput {:>7.0} q/s  p50 {:8.2} ms  p99 {:8.2} ms  ({}/{})",
+            rep.offered_qps,
+            rep.goodput_qps,
+            rep.latency.p50 * 1e3,
+            rep.latency.p99 * 1e3,
+            rep.received,
+            rep.sent,
+        );
+        points.push(obj(vec![
+            ("offered_qps", Json::Num(rep.offered_qps)),
+            ("goodput_qps", Json::Num(rep.goodput_qps)),
+            ("received", Json::Num(rep.received as f64)),
+            ("p50_ms", Json::Num(rep.latency.p50 * 1e3)),
+            ("p99_ms", Json::Num(rep.latency.p99 * 1e3)),
+        ]));
+        sweep.push(rep);
+    }
+    let knee = measured_knee_qps(&sweep).max(calib.goodput_qps);
+    server.shutdown();
+
+    // Fit the capacity model from the spans the whole run left behind.
+    let events = tracer.snapshot();
+    let a = analyze(&events);
+    print!("{}", a.render());
+    let st = StageTimes::from_analysis(&a, NODES);
+    let planner = CapacityPlanner::new(st, 4 * ds.d, 12 * K);
+    let predicted = planner.saturation_qps(NODES);
+    println!("  measured knee {knee:.0} q/s, planner-predicted {predicted:.0} q/s");
+
+    let report = obj(vec![
+        ("bench", Json::Str("serve_load".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("n", Json::Num(n as f64)),
+        ("nodes", Json::Num(NODES as f64)),
+        ("requests_per_point", Json::Num(reqs as f64)),
+        ("calibration_goodput_qps", Json::Num(cap)),
+        ("sweep", Json::Arr(points)),
+        ("measured_knee_qps", Json::Num(knee)),
+        ("predicted_knee_qps", Json::Num(predicted)),
+        (
+            "stages",
+            obj(vec![
+                ("lut_s", Json::Num(st.lut_s)),
+                ("scan_s", Json::Num(st.scan_s)),
+                ("merge_s", Json::Num(st.merge_s)),
+                ("reply_s", Json::Num(st.reply_s)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_serve.json", report.dump()).expect("writing BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+
+    // Acceptance: the sweep saw a real knee (goodput stops tracking
+    // offered load) and latency degrades across it.
+    assert!(knee > 0.0 && knee.is_finite(), "no measured knee");
+    let under = &sweep[0];
+    let over = &sweep[3];
+    assert!(
+        over.goodput_qps < over.offered_qps * 0.9,
+        "2x-capacity point did not saturate: goodput {:.0} of offered {:.0}",
+        over.goodput_qps,
+        over.offered_qps
+    );
+    assert!(
+        over.latency.p99 > under.latency.p99,
+        "p99 must degrade past the knee: {:.2} ms vs {:.2} ms",
+        over.latency.p99 * 1e3,
+        under.latency.p99 * 1e3
+    );
+    // Core stages all traced.
+    for kind in
+        [SpanKind::QueueWait, SpanKind::LutBuild, SpanKind::NodeScan, SpanKind::Merge]
+    {
+        assert!(
+            a.kinds_present().contains(&kind),
+            "trace missing {} spans",
+            kind.name()
+        );
+    }
+    // The fitted planner pins the knee's order of magnitude.
+    assert!(
+        predicted >= knee / 6.0 && predicted <= knee * 6.0,
+        "planner knee {predicted:.0} q/s outside 6x of measured {knee:.0} q/s"
+    );
+    println!("serve_load OK");
+}

@@ -310,6 +310,7 @@ fn main() {
                 chameleon::chamvs::BatchQuery {
                     query: &queries[i],
                     lists: &lists[i],
+                    trace_id: 0,
                 }
             })
             .collect();

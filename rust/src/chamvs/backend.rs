@@ -223,7 +223,7 @@ impl SearchBackend {
         let batch: Vec<BatchQuery> = queries
             .iter()
             .zip(&lists)
-            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .map(|(q, l)| BatchQuery { query: q, lists: l, trace_id: 0 })
             .collect();
         let results =
             self.dispatcher.search_batch(&batch, &index.pq.centroids, nprobe)?;

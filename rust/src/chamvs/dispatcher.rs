@@ -53,6 +53,7 @@ use crate::hwmodel::fpga::FpgaModel;
 use crate::hwmodel::loggp::LogGp;
 use crate::pq::codebook::KSUB;
 use crate::pq::scan::build_lut_raw_into;
+use crate::trace::{SpanKind, Tracer};
 
 /// Aggregated search result for one query.
 #[derive(Clone, Debug)]
@@ -94,6 +95,10 @@ pub struct BatchQuery<'a> {
     pub query: &'a [f32],
     /// Probed IVF list ids (from ChamVS.idx).
     pub lists: &'a [u32],
+    /// End-to-end trace id allocated by the coordinator (0 = untraced;
+    /// per-stage spans are recorded under this id when the dispatcher's
+    /// tracer is enabled).
+    pub trace_id: u64,
 }
 
 /// A submitted-but-not-yet-collected scan request.
@@ -136,6 +141,9 @@ pub struct Dispatcher {
     /// Latency-model fallback when no backend is reachable directly
     /// (cluster mode owns its backends inside worker threads).
     fallback_fpga: FpgaModel,
+    /// Span sink for per-query stage attribution (off by default: every
+    /// record call is a single branch). See [`crate::trace`].
+    pub tracer: Tracer,
 }
 
 impl Dispatcher {
@@ -163,6 +171,7 @@ impl Dispatcher {
             pending: Vec::new(),
             lut_arena: Vec::new(),
             fallback_fpga: FpgaModel::default(),
+            tracer: Tracer::off(),
         }
     }
 
@@ -249,8 +258,22 @@ impl Dispatcher {
         lists: &[u32],
         nprobe: usize,
     ) -> Result<SearchResult> {
+        self.search_traced(query, codebook, lists, nprobe, 0)
+    }
+
+    /// [`search`](Self::search) carrying an end-to-end trace id: the
+    /// round's `lut_build`/`node_scan`/`merge` spans are recorded under
+    /// `trace_id` when the tracer is enabled (`0` = untraced).
+    pub fn search_traced(
+        &mut self,
+        query: &[f32],
+        codebook: &[f32],
+        lists: &[u32],
+        nprobe: usize,
+        trace_id: u64,
+    ) -> Result<SearchResult> {
         let mut out = self.dispatch_round(
-            &[BatchQuery { query, lists }],
+            &[BatchQuery { query, lists, trace_id }],
             codebook,
             nprobe,
             false,
@@ -285,6 +308,15 @@ impl Dispatcher {
         nprobe: usize,
         drain_speculative: bool,
     ) -> Result<Vec<SearchResult>> {
+        let tracing = self.tracer.enabled();
+        // Hedge activity is engine-global, not per-query: diff the
+        // cluster's counters around the round and log the deltas as
+        // trace-id-0 events (tag = count).
+        let pre_hedge = if tracing {
+            self.cluster.as_ref().map(|c| c.stats())
+        } else {
+            None
+        };
         let (m, need_lut) = match &self.cluster {
             Some(c) => (c.m(), c.wants_lut()),
             None => {
@@ -350,6 +382,7 @@ impl Dispatcher {
         // allocation and no codebook copy.
         let mut arena = std::mem::take(&mut self.lut_arena);
         arena.clear();
+        let t_arena = std::time::Instant::now();
         if need_lut {
             let queries = batch
                 .iter()
@@ -361,6 +394,13 @@ impl Dispatcher {
                 build_lut_raw_into(codebook, query, m, query.len() / m, &mut arena[start..]);
             }
         }
+        // Per-job share of the coordinator-side table-build wall; remote
+        // rounds add the node-side share carried in the response tail.
+        let arena_share_s = if tracing && need_lut {
+            t_arena.elapsed().as_secs_f64() / (batch.len() + spec.len()).max(1) as f64
+        } else {
+            0.0
+        };
 
         // Assemble the round's job list: the blocking batch first, then
         // the queued speculative tickets, each borrowing its arena slice.
@@ -402,11 +442,48 @@ impl Dispatcher {
             }
         };
         let mut results: Vec<SearchResult> = Vec::with_capacity(per_job.len());
-        for (node_results, job) in per_job.iter().zip(&jobs) {
-            results.push(self.aggregate(node_results, job, &chunks, fan_out));
+        for (i, (node_results, job)) in per_job.iter().zip(&jobs).enumerate() {
+            let trace_id = if i < batch.len() { batch[i].trace_id } else { 0 };
+            if tracing && trace_id != 0 {
+                let lut_s = arena_share_s
+                    + node_results.iter().map(|r| r.lut_s).sum::<f64>();
+                self.tracer.record(trace_id, SpanKind::LutBuild, 0, lut_s);
+                for (n, r) in node_results.iter().enumerate() {
+                    self.tracer.record(
+                        trace_id,
+                        SpanKind::NodeScan,
+                        n as u32,
+                        r.measured_s,
+                    );
+                }
+                let t_merge = std::time::Instant::now();
+                let merged = self.aggregate(node_results, job, &chunks, fan_out);
+                self.tracer.record(
+                    trace_id,
+                    SpanKind::Merge,
+                    0,
+                    t_merge.elapsed().as_secs_f64(),
+                );
+                results.push(merged);
+            } else {
+                results.push(self.aggregate(node_results, job, &chunks, fan_out));
+            }
         }
         drop(jobs);
         self.lut_arena = arena;
+        if let Some(pre) = pre_hedge {
+            if let Some(c) = self.cluster.as_ref() {
+                let post = c.stats();
+                let fired = post.hedges.saturating_sub(pre.hedges);
+                let won = post.hedge_wins.saturating_sub(pre.hedge_wins);
+                if fired > 0 {
+                    self.tracer.record(0, SpanKind::HedgeFired, fired as u32, 0.0);
+                }
+                if won > 0 {
+                    self.tracer.record(0, SpanKind::HedgeWon, won as u32, 0.0);
+                }
+            }
+        }
 
         // Park speculative results on their pending entries (the tail of
         // `results` matches `spec` in order).
@@ -508,7 +585,7 @@ impl Dispatcher {
                 // without draining other slots' queued tickets.
                 Some(
                     self.dispatch_round(
-                        &[BatchQuery { query: &query, lists: &lists }],
+                        &[BatchQuery { query: &query, lists: &lists, trace_id: 0 }],
                         codebook,
                         nprobe,
                         false,
@@ -749,7 +826,7 @@ mod tests {
         let batch: Vec<BatchQuery> = queries
             .iter()
             .zip(&lists)
-            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .map(|(q, l)| BatchQuery { query: q, lists: l, trace_id: 0 })
             .collect();
         let got = disp.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
         assert_eq!(got.len(), queries.len());
@@ -765,6 +842,7 @@ mod tests {
             measured_s: 0.0,
             modeled_s: 0.0,
             n_scanned: 0,
+            lut_s: 0.0,
         };
         let a = mk(vec![(1.0, 10), (4.0, 11)]);
         let b = mk(vec![(2.0, 20), (3.0, 21)]);
@@ -779,6 +857,7 @@ mod tests {
             measured_s: 0.0,
             modeled_s: 0.0,
             n_scanned: 0,
+            lut_s: 0.0,
         };
         let merged = merge_topk(&[mk(vec![(1.0, 1)]), mk(vec![])], 5);
         assert_eq!(merged.len(), 1);
@@ -803,6 +882,7 @@ mod tests {
                             measured_s: 0.0,
                             modeled_s: 0.0,
                             n_scanned: 0,
+                            lut_s: 0.0,
                         }
                     })
                     .collect();
@@ -852,7 +932,8 @@ mod tests {
         let other_lists = idx.probe(&other, 8);
         disp.search(&other, &idx.pq.centroids, &other_lists, 8).unwrap();
         // ... but a batched round drains it in the same parallel fan-out.
-        let batch = [BatchQuery { query: &other, lists: &other_lists }];
+        let batch =
+            [BatchQuery { query: &other, lists: &other_lists, trace_id: 0 }];
         disp.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
         assert_eq!(disp.in_flight(), 1, "still pending until polled");
         let got = disp.poll(t, &idx.pq.centroids).unwrap().unwrap();
@@ -887,7 +968,7 @@ mod tests {
         // Blocking and batched rounds still succeed: the malformed ticket
         // is left queued instead of failing the shared round.
         assert!(disp.search(&good, &idx.pq.centroids, &lists, 4).is_ok());
-        let batch = [BatchQuery { query: &good, lists: &lists }];
+        let batch = [BatchQuery { query: &good, lists: &lists, trace_id: 0 }];
         assert!(disp.search_batch(&batch, &idx.pq.centroids, 4).is_ok());
         assert_eq!(disp.in_flight(), 1);
         // The dim error surfaces at the owner's poll, and the ticket is

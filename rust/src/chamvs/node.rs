@@ -66,6 +66,11 @@ pub struct NodeResult {
     pub modeled_s: f64,
     /// PQ codes scanned (drives distributions + energy).
     pub n_scanned: usize,
+    /// Node-side ADC lookup-table build seconds attributed to this job.
+    /// 0.0 when the caller supplied prebuilt tables (the in-process
+    /// dispatcher's arena path) or when a remote peer omits the optional
+    /// timing tail; remote nodes report their own build share here.
+    pub lut_s: f64,
 }
 
 /// One disaggregated memory node.
@@ -243,6 +248,7 @@ impl MemoryNode {
                     measured_s: share,
                     modeled_s: self.fpga.query_latency(n, m, jobs[j].nprobe, self.k).total(),
                     n_scanned: n,
+                    lut_s: 0.0,
                 }
             })
             .collect())
@@ -290,6 +296,7 @@ impl MemoryNode {
                 measured_s: t0.elapsed().as_secs_f64(),
                 modeled_s: self.fpga.query_latency(scanned, m, job.nprobe, self.k).total(),
                 n_scanned: scanned,
+                lut_s: 0.0,
             });
         }
         Ok(results)
@@ -371,7 +378,7 @@ impl MemoryNode {
             .collect();
         let measured_s = t0.elapsed().as_secs_f64();
         let modeled_s = self.fpga.query_latency(n, m, job.nprobe, self.k).total();
-        Ok(NodeResult { topk, measured_s, modeled_s, n_scanned: n })
+        Ok(NodeResult { topk, measured_s, modeled_s, n_scanned: n, lut_s: 0.0 })
     }
 }
 

@@ -16,6 +16,7 @@ use crate::retcache::{
     charged_latency, CacheConfig, CachedEntry, RetrievalCache, RetrievalSource,
     RetrievalStats, SpecConfig, SpecSlots, SpecVerdict,
 };
+use crate::trace::{SpanKind, Tracer};
 use crate::util::metrics::Metrics;
 
 /// One retrieval's outcome.
@@ -110,6 +111,18 @@ impl Retriever {
                 self.dispatcher.cancel(t);
             }
         }
+    }
+
+    /// Install a span sink: retrieval stages (`cache_probe`,
+    /// `spec_verify`, and the dispatcher's `lut_build`/`node_scan`/
+    /// `merge`) are recorded for requests carrying a nonzero trace id.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.dispatcher.tracer = tracer;
+    }
+
+    /// The installed span sink (off by default).
+    pub fn tracer(&self) -> &Tracer {
+        &self.dispatcher.tracer
     }
 
     /// Whether [`retrieve_cached`](Self::retrieve_cached) does anything
@@ -218,14 +231,29 @@ impl Retriever {
 
     /// Full retrieval for one query vector.
     pub fn retrieve(&mut self, query: &[f32]) -> Result<RetrievalResult> {
+        self.retrieve_traced(query, 0)
+    }
+
+    /// [`retrieve`](Self::retrieve) carrying an end-to-end trace id (0 =
+    /// untraced): dispatcher-stage spans land under `trace_id` when a
+    /// tracer is installed.
+    pub fn retrieve_traced(
+        &mut self,
+        query: &[f32],
+        trace_id: u64,
+    ) -> Result<RetrievalResult> {
         let t0 = Instant::now();
         let nprobe = self.ds.nprobe;
         // Step 2: IVF index scan (GPU-colocated in the paper).
         let lists = self.index.probe(query, nprobe);
         // Steps 4-8: broadcast to memory nodes, scan, aggregate.
-        let r = self
-            .dispatcher
-            .search(query, &self.index.pq.centroids, &lists, nprobe)?;
+        let r = self.dispatcher.search_traced(
+            query,
+            &self.index.pq.centroids,
+            &lists,
+            nprobe,
+            trace_id,
+        )?;
         Ok(self.search_to_result(r, nprobe, t0))
     }
 
@@ -237,13 +265,28 @@ impl Retriever {
     /// is paid once instead of B times, and any queued speculative
     /// tickets execute in the same round.
     pub fn retrieve_many(&mut self, queries: &[&[f32]]) -> Result<Vec<RetrievalResult>> {
+        self.retrieve_many_traced(queries, &[])
+    }
+
+    /// [`retrieve_many`](Self::retrieve_many) with per-query trace ids
+    /// (shorter-than-batch or empty `trace_ids` leaves the tail untraced).
+    pub fn retrieve_many_traced(
+        &mut self,
+        queries: &[&[f32]],
+        trace_ids: &[u64],
+    ) -> Result<Vec<RetrievalResult>> {
         let nprobe = self.ds.nprobe;
         let lists: Vec<Vec<u32>> =
             queries.iter().map(|q| self.index.probe(q, nprobe)).collect();
         let batch: Vec<BatchQuery> = queries
             .iter()
             .zip(&lists)
-            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .enumerate()
+            .map(|(i, (q, l))| BatchQuery {
+                query: q,
+                lists: l,
+                trace_id: trace_ids.get(i).copied().unwrap_or(0),
+            })
             .collect();
         let rs = self
             .dispatcher
@@ -285,11 +328,33 @@ impl Retriever {
         slot: usize,
         query: &[f32],
     ) -> Result<CachedRetrieval> {
+        self.retrieve_cached_from_traced(slot, query, 0)
+    }
+
+    /// [`retrieve_cached_from`](Self::retrieve_cached_from) carrying an
+    /// end-to-end trace id: records `cache_probe` and `spec_verify` spans
+    /// (tag = hit flag) on top of the dispatcher's stage spans.
+    pub fn retrieve_cached_from_traced(
+        &mut self,
+        slot: usize,
+        query: &[f32],
+        trace_id: u64,
+    ) -> Result<CachedRetrieval> {
         let t0 = Instant::now();
         // 1) Retrieval cache.
         let mut hit: Option<RetrievalResult> = None;
         if let Some(cache) = self.cache.as_mut() {
-            if let Some(e) = cache.get(query) {
+            let t_probe = Instant::now();
+            let entry = cache.get(query);
+            if trace_id != 0 {
+                self.dispatcher.tracer.record(
+                    trace_id,
+                    SpanKind::CacheProbe,
+                    u32::from(entry.is_some()),
+                    t_probe.elapsed().as_secs_f64(),
+                );
+            }
+            if let Some(e) = entry {
                 hit = Some(RetrievalResult {
                     ids: e.ids.clone(),
                     dists: e.dists.clone(),
@@ -309,10 +374,20 @@ impl Retriever {
             return Ok(CachedRetrieval { result, source: RetrievalSource::CacheHit });
         }
         // 2) Speculative prefetch verification (this slot's lane only).
+        let t_verify = Instant::now();
         let verdict = match self.spec.as_mut() {
             Some(s) => s.verify_take(slot, query),
             None => SpecVerdict::Idle,
         };
+        if trace_id != 0 && self.spec.is_some() {
+            let spec_hit = matches!(&verdict, SpecVerdict::Hit(_));
+            self.dispatcher.tracer.record(
+                trace_id,
+                SpanKind::SpecVerify,
+                u32::from(spec_hit),
+                t_verify.elapsed().as_secs_f64(),
+            );
+        }
         let (result, source) = match verdict {
             SpecVerdict::Hit(ticket) => {
                 match self.dispatcher.poll(ticket, &self.index.pq.centroids) {
@@ -321,14 +396,18 @@ impl Retriever {
                         (result, RetrievalSource::SpecHit)
                     }
                     // Lost ticket (defensive): fall back to a real query.
-                    None => (self.retrieve(query)?, RetrievalSource::Miss),
+                    None => {
+                        (self.retrieve_traced(query, trace_id)?, RetrievalSource::Miss)
+                    }
                 }
             }
             SpecVerdict::Reject(ticket) => {
                 self.dispatcher.cancel(ticket);
-                (self.retrieve(query)?, RetrievalSource::Miss)
+                (self.retrieve_traced(query, trace_id)?, RetrievalSource::Miss)
             }
-            SpecVerdict::Idle => (self.retrieve(query)?, RetrievalSource::Miss),
+            SpecVerdict::Idle => {
+                (self.retrieve_traced(query, trace_id)?, RetrievalSource::Miss)
+            }
         };
         // 3) Refill the cache with the fresh result.
         if let Some(cache) = self.cache.as_mut() {

@@ -45,6 +45,7 @@ use crate::net::protocol::{
     ClusterAck, ClusterOp, ClusterUpdate, Frame, Kind, RetrieveRequest, RetrieveResponse,
 };
 use crate::retcache::RetrievalSource;
+use crate::trace::{SpanKind, Tracer};
 use crate::util::metrics::Metrics;
 
 /// How idle loops poll their stop flags.
@@ -116,6 +117,11 @@ struct ServerRequest {
     gpu_id: u32,
     want_chunks: bool,
     query: Vec<f32>,
+    /// End-to-end trace id (0 = untraced).
+    trace_id: u64,
+    /// When the reader decoded the request — start of the queue-wait
+    /// span and of the end-to-end total.
+    arrived: Instant,
 }
 
 /// State shared between the accept thread, per-connection readers and the
@@ -135,6 +141,24 @@ struct Shared {
     writers: Mutex<HashMap<u64, TcpStream>>,
     stop: AtomicBool,
     stats: Arc<ServerStats>,
+    /// Span sink shared by the readers (trace-id allocation) and the
+    /// dispatch loop (queue-wait/reply-write/total spans). Off by
+    /// default; see [`CoordinatorServer::spawn_traced`].
+    tracer: Tracer,
+    /// Trace-id allocator (0 is reserved for "untraced").
+    next_trace: AtomicU64,
+}
+
+impl Shared {
+    /// A fresh trace id — or 0 when tracing is off, so the untraced hot
+    /// path records nothing.
+    fn alloc_trace(&self) -> u64 {
+        if self.tracer.enabled() {
+            self.next_trace.fetch_add(1, Ordering::Relaxed)
+        } else {
+            0
+        }
+    }
 }
 
 /// A running coordinator server.
@@ -166,6 +190,18 @@ impl CoordinatorServer {
         builder: impl FnOnce() -> Retriever + Send + 'static,
         mode: ServeMode,
     ) -> Result<CoordinatorServer> {
+        Self::spawn_traced(builder, mode, Tracer::off())
+    }
+
+    /// [`spawn`](Self::spawn) with a span sink: every request gets a
+    /// fresh trace id, and its `queue_wait`, retrieval-stage,
+    /// `reply_write` and `total` spans land in the tracer's ring for
+    /// offline aggregation (`chameleon report trace`).
+    pub fn spawn_traced(
+        builder: impl FnOnce() -> Retriever + Send + 'static,
+        mode: ServeMode,
+        tracer: Tracer,
+    ) -> Result<CoordinatorServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let policy = match mode {
@@ -180,6 +216,8 @@ impl CoordinatorServer {
             writers: Mutex::new(HashMap::new()),
             stop: AtomicBool::new(false),
             stats: Arc::new(ServerStats::default()),
+            tracer,
+            next_trace: AtomicU64::new(1),
         });
         let mut handles = Vec::new();
         match mode {
@@ -233,6 +271,7 @@ fn serve_sequential(
     shared: &Shared,
 ) {
     let mut retriever = builder();
+    retriever.set_tracer(shared.tracer.clone());
     let metrics = Metrics::new();
     let mut prefetch = PrefetchTracker::new();
     for conn in listener.incoming() {
@@ -315,14 +354,20 @@ fn serve_gpu(
                 if prefetch.observe(slot) {
                     metrics.incr("retcache.prefetch_source_switches", 1);
                 }
+                let arrived = Instant::now();
+                let trace_id = shared.alloc_trace();
                 let r = if retriever.retcache_enabled() {
                     let cr = metrics.time("retrieve", || {
-                        retriever.retrieve_cached_from(slot, &req.query)
+                        retriever.retrieve_cached_from_traced(
+                            slot, &req.query, trace_id,
+                        )
                     })?;
                     metrics.incr(source_counter(cr.source), 1);
                     cr.result
                 } else {
-                    metrics.time("retrieve", || retriever.retrieve(&req.query))?
+                    metrics.time("retrieve", || {
+                        retriever.retrieve_traced(&req.query, trace_id)
+                    })?
                 };
                 let tokens = if req.want_chunks {
                     retriever.gather_chunks(&r.ids)
@@ -334,7 +379,25 @@ fn serve_gpu(
                     tokens,
                     dists: r.dists,
                 };
+                let t_write = Instant::now();
                 resp.encode().write_to(&mut writer)?;
+                if trace_id != 0 {
+                    // Sequential mode has no batching queue: the request
+                    // is served the moment it is decoded.
+                    shared.tracer.record(trace_id, SpanKind::QueueWait, 0, 0.0);
+                    shared.tracer.record(
+                        trace_id,
+                        SpanKind::ReplyWrite,
+                        0,
+                        t_write.elapsed().as_secs_f64(),
+                    );
+                    shared.tracer.record(
+                        trace_id,
+                        SpanKind::Total,
+                        0,
+                        arrived.elapsed().as_secs_f64(),
+                    );
+                }
             }
             Kind::ClusterUpdate => {
                 let update = ClusterUpdate::decode(&frame)?;
@@ -409,6 +472,7 @@ fn reader_loop(stream: TcpStream, conn_id: u64, addr: SocketAddr, shared: &Share
             }
             Kind::RetrieveRequest => match RetrieveRequest::decode(&frame) {
                 Ok(req) => {
+                    let trace_id = shared.alloc_trace();
                     let mut b = shared.batcher.lock().unwrap();
                     b.push(
                         req.gpu_id as usize,
@@ -418,6 +482,8 @@ fn reader_loop(stream: TcpStream, conn_id: u64, addr: SocketAddr, shared: &Share
                             gpu_id: req.gpu_id,
                             want_chunks: req.want_chunks,
                             query: req.query,
+                            trace_id,
+                            arrived: Instant::now(),
                         },
                     );
                     drop(b);
@@ -484,6 +550,7 @@ fn next_step(shared: &Shared) -> Step {
 /// cross-connection batches, and routes replies back by connection id.
 fn dispatch_loop(builder: impl FnOnce() -> Retriever, shared: &Shared) {
     let mut retriever = builder();
+    retriever.set_tracer(shared.tracer.clone());
     let metrics = Metrics::new();
     // Per-connection source tracking (slot hygiene + interleave metric).
     let mut trackers: HashMap<u64, PrefetchTracker> = HashMap::new();
@@ -577,6 +644,16 @@ fn serve_batch(
         if tracker.observe(p.payload.gpu_id as usize) {
             metrics.incr("retcache.prefetch_source_switches", 1);
         }
+        // Queue wait: reader decode -> batch drain (the batching delay
+        // plus any backlog behind earlier rounds).
+        if p.payload.trace_id != 0 {
+            shared.tracer.record(
+                p.payload.trace_id,
+                SpanKind::QueueWait,
+                0,
+                p.payload.arrived.elapsed().as_secs_f64(),
+            );
+        }
     }
     // A malformed query (wrong dimensionality) must fail only its own
     // connection — never the shared round the other clients are riding.
@@ -596,7 +673,11 @@ fn serve_batch(
                 let slot = p.payload.gpu_id as usize;
                 metrics
                     .time("retrieve", || {
-                        retriever.retrieve_cached_from(slot, &p.payload.query)
+                        retriever.retrieve_cached_from_traced(
+                            slot,
+                            &p.payload.query,
+                            p.payload.trace_id,
+                        )
                     })
                     .map(|cr| {
                         metrics.incr(source_counter(cr.source), 1);
@@ -617,8 +698,12 @@ fn serve_batch(
             .iter()
             .map(|&i| batch[i].payload.query.as_slice())
             .collect();
+        let trace_ids: Vec<u64> =
+            valid.iter().map(|&i| batch[i].payload.trace_id).collect();
         if !refs.is_empty() {
-            match metrics.time("retrieve", || retriever.retrieve_many(&refs)) {
+            match metrics
+                .time("retrieve", || retriever.retrieve_many_traced(&refs, &trace_ids))
+            {
                 Ok(rs) => {
                     for (&i, r) in valid.iter().zip(rs) {
                         results[i] = Ok(r);
@@ -647,6 +732,7 @@ fn serve_batch(
                     tokens,
                     dists: r.dists,
                 };
+                let t_write = Instant::now();
                 let mut writers = shared.writers.lock().unwrap();
                 if let Some(stream) = writers.get_mut(&p.payload.conn_id) {
                     if resp.encode().write_to(stream).is_err() {
@@ -655,6 +741,21 @@ fn serve_batch(
                         let _ = stream.shutdown(std::net::Shutdown::Both);
                         writers.remove(&p.payload.conn_id);
                     }
+                }
+                drop(writers);
+                if p.payload.trace_id != 0 {
+                    shared.tracer.record(
+                        p.payload.trace_id,
+                        SpanKind::ReplyWrite,
+                        0,
+                        t_write.elapsed().as_secs_f64(),
+                    );
+                    shared.tracer.record(
+                        p.payload.trace_id,
+                        SpanKind::Total,
+                        0,
+                        p.payload.arrived.elapsed().as_secs_f64(),
+                    );
                 }
             }
             Err(_) => {

@@ -1,0 +1,249 @@
+//! SLO-driven capacity planning: fit the per-stage service times observed
+//! by the tracer (see [`crate::trace`]) into the LogGP scalability model
+//! and answer "how many memory nodes / how much offered load for X QPS at
+//! Y ms p99" — the planning loop the paper runs by hand around Fig 10.
+//!
+//! The model is deliberately simple: the coordinator's dispatch pipeline
+//! serves one round at a time, so it is treated as an M/M/1 station whose
+//! service time is the fitted critical path — LUT build + (scan, rescaled
+//! inversely with node count from the fan-out it was observed at) + merge
+//! + reply write + the LogGP broadcast/reduce round trip at the candidate
+//! fan-out. Saturation ("the knee" of an open-loop latency-vs-load sweep)
+//! is where offered load meets `1 / service_time`.
+
+use crate::hwmodel::loggp::LogGp;
+use crate::trace::{SpanKind, TraceAnalysis};
+
+/// ln(100): multiplier from an M/M/1 mean sojourn time to its p99
+/// (sojourn time is exponential with rate `mu - lambda`).
+const P99_FACTOR: f64 = 4.605170185988091;
+
+/// Observed mean per-stage service times of one serving configuration
+/// (all seconds), as fitted from a trace snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct StageTimes {
+    /// ADC table build (coordinator share + node shares).
+    pub lut_s: f64,
+    /// Per-query critical-path scan: the per-trace *max* across nodes,
+    /// observed at `observed_nodes` fan-out.
+    pub scan_s: f64,
+    /// Top-K merge.
+    pub merge_s: f64,
+    /// Reply encode + socket write.
+    pub reply_s: f64,
+    /// Cache probe (0 when the retcache is off).
+    pub cache_probe_s: f64,
+    /// Speculation verify (0 when speculation is off).
+    pub spec_verify_s: f64,
+    /// Fan-out `scan_s` was measured at (scan work per node scales as
+    /// `observed_nodes / nodes` under the list-major carve).
+    pub observed_nodes: usize,
+}
+
+impl StageTimes {
+    /// Fit stage times from an aggregated trace (mean critical-path
+    /// contributions; `NodeScan` is already the per-trace max there).
+    pub fn from_analysis(a: &TraceAnalysis, observed_nodes: usize) -> StageTimes {
+        StageTimes {
+            lut_s: a.stage_mean_s(SpanKind::LutBuild),
+            scan_s: a.stage_mean_s(SpanKind::NodeScan),
+            merge_s: a.stage_mean_s(SpanKind::Merge),
+            reply_s: a.stage_mean_s(SpanKind::ReplyWrite),
+            cache_probe_s: a.stage_mean_s(SpanKind::CacheProbe),
+            spec_verify_s: a.stage_mean_s(SpanKind::SpecVerify),
+            observed_nodes: observed_nodes.max(1),
+        }
+    }
+}
+
+/// Capacity planner over fitted stage times + the LogGP network model.
+#[derive(Clone, Copy, Debug)]
+pub struct CapacityPlanner {
+    pub stages: StageTimes,
+    pub net: LogGp,
+    /// Broadcast payload per query (query vector + list ids).
+    pub query_bytes: usize,
+    /// Reduce payload per query (k results at 12 B each).
+    pub result_bytes: usize,
+}
+
+impl CapacityPlanner {
+    pub fn new(stages: StageTimes, query_bytes: usize, result_bytes: usize) -> CapacityPlanner {
+        CapacityPlanner { stages, net: LogGp::default(), query_bytes, result_bytes }
+    }
+
+    /// Modeled per-query service time at `nodes` fan-out: the fitted
+    /// critical path with the scan stage rescaled to the candidate node
+    /// count and the LogGP round trip priced at that fan-out.
+    pub fn service_s(&self, nodes: usize) -> f64 {
+        let nodes = nodes.max(1);
+        let s = &self.stages;
+        let scan = s.scan_s * s.observed_nodes as f64 / nodes as f64;
+        s.lut_s
+            + s.cache_probe_s
+            + s.spec_verify_s
+            + scan
+            + s.merge_s
+            + s.reply_s
+            + self.net.query_roundtrip(nodes, self.query_bytes, self.result_bytes)
+    }
+
+    /// Predicted saturation throughput (the open-loop knee): the single
+    /// dispatch pipeline serves at most one service time per query.
+    pub fn saturation_qps(&self, nodes: usize) -> f64 {
+        1.0 / self.service_s(nodes)
+    }
+
+    /// Predicted p99 latency at `qps` offered load (M/M/1 sojourn p99 =
+    /// `S / (1 - rho) * ln 100`). Infinite at or beyond saturation.
+    pub fn p99_s(&self, nodes: usize, qps: f64) -> f64 {
+        let s = self.service_s(nodes);
+        let rho = qps * s;
+        if rho >= 1.0 {
+            return f64::INFINITY;
+        }
+        s / (1.0 - rho) * P99_FACTOR
+    }
+
+    /// Largest offered load meeting a p99 SLO at `nodes` fan-out
+    /// (inverse of [`p99_s`](Self::p99_s); 0 when even an idle server
+    /// misses the target).
+    pub fn qps_for_p99(&self, nodes: usize, p99_target_s: f64) -> f64 {
+        let s = self.service_s(nodes);
+        if p99_target_s <= 0.0 {
+            return 0.0;
+        }
+        let rho = 1.0 - s * P99_FACTOR / p99_target_s;
+        (rho / s).max(0.0)
+    }
+
+    /// Smallest node count sustaining `qps` at the p99 SLO, or `None` if
+    /// no fan-out up to 4096 gets there (the network term eventually
+    /// dominates, so bigger is not always better).
+    pub fn nodes_for(&self, qps: f64, p99_target_s: f64) -> Option<usize> {
+        (1..=4096).find(|&n| self.p99_s(n, qps) <= p99_target_s)
+    }
+
+    /// Human-readable plan lines for a target SLO.
+    pub fn render(&self, qps: f64, p99_target_s: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "planner: fitted service {:.3} ms at {} nodes (knee {:.0} q/s)\n",
+            self.service_s(self.stages.observed_nodes) * 1e3,
+            self.stages.observed_nodes,
+            self.saturation_qps(self.stages.observed_nodes),
+        ));
+        match self.nodes_for(qps, p99_target_s) {
+            Some(n) => out.push_str(&format!(
+                "planner: {qps:.0} q/s at p99 <= {:.1} ms needs {n} node(s) \
+                 (predicted p99 {:.2} ms, knee {:.0} q/s)\n",
+                p99_target_s * 1e3,
+                self.p99_s(n, qps) * 1e3,
+                self.saturation_qps(n),
+            )),
+            None => out.push_str(&format!(
+                "planner: no fan-out <= 4096 sustains {qps:.0} q/s at p99 <= {:.1} ms\n",
+                p99_target_s * 1e3
+            )),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> CapacityPlanner {
+        CapacityPlanner::new(
+            StageTimes {
+                lut_s: 0.5e-3,
+                scan_s: 4.0e-3,
+                merge_s: 0.2e-3,
+                reply_s: 0.3e-3,
+                cache_probe_s: 0.0,
+                spec_verify_s: 0.0,
+                observed_nodes: 2,
+            },
+            4 * 128,
+            12 * 10,
+        )
+    }
+
+    #[test]
+    fn more_nodes_cut_the_scan_term() {
+        let p = fixture();
+        assert!(p.service_s(4) < p.service_s(2));
+        assert!(p.saturation_qps(4) > p.saturation_qps(2));
+        // The knee is exactly the inverse of the service time.
+        let s = p.service_s(3);
+        assert!((p.saturation_qps(3) * s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p99_grows_toward_saturation_and_diverges_past_it() {
+        let p = fixture();
+        let knee = p.saturation_qps(2);
+        let lo = p.p99_s(2, 0.2 * knee);
+        let hi = p.p99_s(2, 0.9 * knee);
+        assert!(lo.is_finite() && hi.is_finite());
+        assert!(hi > 2.0 * lo, "{lo} vs {hi}");
+        assert!(p.p99_s(2, knee).is_infinite());
+        assert!(p.p99_s(2, 1.5 * knee).is_infinite());
+        // Idle floor: p99 at ~zero load is the service time times ln 100.
+        let idle = p.p99_s(2, 1e-9);
+        assert!((idle - p.service_s(2) * P99_FACTOR).abs() / idle < 1e-3);
+    }
+
+    #[test]
+    fn qps_for_p99_inverts_p99() {
+        let p = fixture();
+        let qps = 0.6 * p.saturation_qps(2);
+        let target = p.p99_s(2, qps);
+        let back = p.qps_for_p99(2, target);
+        assert!((back - qps).abs() / qps < 1e-9, "{back} vs {qps}");
+        // Unmeetable target: even idle misses it.
+        assert_eq!(p.qps_for_p99(2, 1e-9), 0.0);
+    }
+
+    #[test]
+    fn nodes_for_finds_the_smallest_feasible_fan_out() {
+        let p = fixture();
+        // A load the 2-node knee cannot carry but more nodes can.
+        let qps = 1.2 * p.saturation_qps(2);
+        let n = p.nodes_for(qps, 0.1).expect("feasible");
+        assert!(n > 2, "needs more than the observed fan-out, got {n}");
+        assert!(p.p99_s(n, qps) <= 0.1);
+        if n > 1 {
+            assert!(p.p99_s(n - 1, qps) > 0.1, "not minimal");
+        }
+        // An SLO below the irreducible (non-scan) critical path is
+        // infeasible at any fan-out.
+        assert_eq!(p.nodes_for(10.0, 1e-6), None);
+        let text = p.render(qps, 0.1);
+        assert!(text.contains("node(s)"), "{text}");
+    }
+
+    #[test]
+    fn fits_from_a_trace_analysis() {
+        use crate::trace::{analyze, SpanEvent};
+        let ev = |kind, tag, dur_s| SpanEvent { trace_id: 1, kind, tag, t_us: 0, dur_s };
+        let evs = vec![
+            ev(SpanKind::QueueWait, 0, 0.001),
+            ev(SpanKind::LutBuild, 0, 0.0005),
+            ev(SpanKind::NodeScan, 0, 0.004),
+            ev(SpanKind::NodeScan, 1, 0.003),
+            ev(SpanKind::Merge, 0, 0.0002),
+            ev(SpanKind::ReplyWrite, 0, 0.0003),
+            ev(SpanKind::Total, 0, 0.006),
+        ];
+        let st = StageTimes::from_analysis(&analyze(&evs), 2);
+        assert!((st.scan_s - 0.004).abs() < 1e-9, "max across nodes");
+        assert!((st.lut_s - 0.0005).abs() < 1e-9);
+        assert!((st.merge_s - 0.0002).abs() < 1e-9);
+        assert_eq!(st.observed_nodes, 2);
+        let p = CapacityPlanner::new(st, 512, 120);
+        assert!(p.saturation_qps(2).is_finite());
+        assert!(p.saturation_qps(2) > 0.0);
+    }
+}

@@ -11,6 +11,7 @@
 //! This substitution is exactly the paper's own methodology for Fig 10,
 //! which extrapolates beyond its two physical FPGAs with LogGP sampling.
 
+pub mod capacity;
 pub mod cpu;
 pub mod energy;
 pub mod fpga;
@@ -18,6 +19,7 @@ pub mod gpu;
 pub mod loggp;
 pub mod tpu;
 
+pub use capacity::{CapacityPlanner, StageTimes};
 pub use cpu::CpuModel;
 pub use fpga::FpgaModel;
 pub use gpu::GpuModel;

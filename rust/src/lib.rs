@@ -28,11 +28,13 @@ pub mod data;
 pub mod hwmodel;
 pub mod ivf;
 pub mod kselect;
+pub mod loadgen;
 pub mod net;
 pub mod pq;
 pub mod report;
 pub mod retcache;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 pub use config::{DatasetConfig, ModelConfig, SystemConfig};

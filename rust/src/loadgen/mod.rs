@@ -1,0 +1,419 @@
+//! Open-loop load generation for the networked coordinator.
+//!
+//! Closed-loop benches (each client waits for its reply) famously hide
+//! queueing collapse: the arrival rate self-throttles to the service
+//! rate. This harness sends requests at their *scheduled* times whether
+//! or not earlier replies have arrived, so offered load is independent
+//! of server behavior and the latency-vs-load curve shows the real knee
+//! (`chameleon loadgen`, `benches/serve_load.rs`, BENCH_serve.json).
+//!
+//! Workloads are fully deterministic: [`schedule`] derives Poisson or
+//! bursty arrival times, Zipf-skewed query indices and request classes
+//! from a single seed with no wall-clock input, so two runs with the
+//! same seed replay the identical request stream (`--seed`).
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::net::protocol::{Frame, RetrieveRequest, RetrieveResponse};
+use crate::retcache::workload::zipf_stream;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Request arrival process at a target mean rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Memoryless: exponential inter-arrival gaps at `qps`.
+    Poisson,
+    /// On/off bursts: all arrivals compress into the first
+    /// `duty` fraction of each `period_s` window (Poisson within the
+    /// burst at `qps / duty`), preserving the long-run mean rate.
+    Bursty { period_s: f64, duty: f64 },
+}
+
+/// Request class mix: interactive requests fetch next-token ids,
+/// batch-class requests ask for whole chunks (bigger replies, the
+/// paper's throughput-oriented RALM consumers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqClass {
+    Interactive,
+    Batch,
+}
+
+impl ReqClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReqClass::Interactive => "interactive",
+            ReqClass::Batch => "batch",
+        }
+    }
+}
+
+/// Deterministic workload description.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Offered load (mean requests/second).
+    pub qps: f64,
+    pub n_requests: usize,
+    pub arrival: Arrival,
+    /// Zipf skew over the query pool (0.0 = uniform).
+    pub zipf_alpha: f64,
+    /// Distinct queries in the pool.
+    pub n_unique: usize,
+    /// Fraction of requests in the batch class.
+    pub batch_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            qps: 200.0,
+            n_requests: 400,
+            arrival: Arrival::Poisson,
+            zipf_alpha: 0.99,
+            n_unique: 64,
+            batch_fraction: 0.2,
+            seed: 42,
+        }
+    }
+}
+
+/// A materialized request stream: arrival offsets (seconds from run
+/// start, ascending), query-pool indices and classes, all index-aligned.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    pub arrivals_s: Vec<f64>,
+    pub query_idx: Vec<usize>,
+    pub classes: Vec<ReqClass>,
+}
+
+impl Schedule {
+    pub fn len(&self) -> usize {
+        self.arrivals_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals_s.is_empty()
+    }
+
+    /// Scheduled span from first to last arrival.
+    pub fn span_s(&self) -> f64 {
+        self.arrivals_s.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Materialize the deterministic request stream for `cfg`. Pure: no
+/// wall clock, no global state — same config, same schedule.
+pub fn schedule(cfg: &LoadgenConfig) -> Schedule {
+    assert!(cfg.qps > 0.0, "qps must be positive");
+    assert!(cfg.n_unique > 0);
+    let mut root = Rng::new(cfg.seed);
+    let mut arr_rng = root.fork(1);
+    let mut class_rng = root.fork(2);
+
+    // Poisson arrivals at the burst-local rate, then (for bursty) warp
+    // the timeline so arrivals land only inside on-windows.
+    let local_rate = match cfg.arrival {
+        Arrival::Poisson => cfg.qps,
+        Arrival::Bursty { duty, .. } => {
+            assert!(duty > 0.0 && duty <= 1.0, "duty must be in (0, 1]");
+            cfg.qps / duty
+        }
+    };
+    let mut t = 0.0f64;
+    let arrivals_s: Vec<f64> = (0..cfg.n_requests)
+        .map(|_| {
+            let u = arr_rng.f64();
+            t += -(1.0 - u).ln() / local_rate;
+            match cfg.arrival {
+                Arrival::Poisson => t,
+                Arrival::Bursty { period_s, duty } => {
+                    let on = period_s * duty;
+                    let window = (t / on).floor();
+                    window * period_s + (t - window * on)
+                }
+            }
+        })
+        .collect();
+
+    let query_idx = zipf_stream(
+        cfg.n_unique,
+        cfg.zipf_alpha.max(0.0),
+        cfg.n_requests,
+        cfg.seed ^ 0x51ff_c0de,
+    );
+    let classes = (0..cfg.n_requests)
+        .map(|_| {
+            if class_rng.f64() < cfg.batch_fraction {
+                ReqClass::Batch
+            } else {
+                ReqClass::Interactive
+            }
+        })
+        .collect();
+    Schedule { arrivals_s, query_idx, classes }
+}
+
+/// Outcome of one open-loop run at a fixed offered load.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    pub offered_qps: f64,
+    pub sent: usize,
+    pub received: usize,
+    /// Wall seconds from run start until the last reply (or timeout).
+    pub wall_s: f64,
+    /// Completed requests per second of wall time.
+    pub goodput_qps: f64,
+    /// Per-request latency measured from the *scheduled* arrival (so
+    /// sender backlog under overload counts, as it should open-loop).
+    pub latency: Summary,
+    pub interactive: Option<Summary>,
+    pub batch: Option<Summary>,
+}
+
+/// Drive `sched` against a live coordinator at `addr`, round-robining
+/// requests over `conns` connections. Each connection gets a writer
+/// thread (sends at scheduled times, never waits for replies) and a
+/// reader thread (drains replies, stamps completion). `deadline` bounds
+/// how long we wait for stragglers after the last send.
+pub fn drive(
+    addr: SocketAddr,
+    queries: &[Vec<f32>],
+    k: usize,
+    sched: &Schedule,
+    conns: usize,
+    deadline: Duration,
+) -> Result<OpenLoopReport> {
+    assert!(conns > 0);
+    assert!(!sched.is_empty(), "empty schedule");
+    assert!(!queries.is_empty());
+    let n = sched.len();
+
+    // Completion stamps, nanos since t0 (0 = not yet answered).
+    let done_ns: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let streams: Vec<TcpStream> = (0..conns)
+        .map(|_| {
+            let s = TcpStream::connect(addr).context("connecting to coordinator")?;
+            s.set_nodelay(true)?;
+            Ok(s)
+        })
+        .collect::<Result<_>>()?;
+
+    let t0 = Instant::now();
+    let mut sent_per_conn = vec![0usize; conns];
+    for i in 0..n {
+        sent_per_conn[i % conns] += 1;
+    }
+
+    std::thread::scope(|scope| -> Result<()> {
+        for (c, stream) in streams.iter().enumerate() {
+            let expect = sent_per_conn[c];
+            if expect == 0 {
+                continue;
+            }
+            // Writer: fire requests at their scheduled offsets.
+            let mut wtr = stream.try_clone()?;
+            let done_ns = &done_ns;
+            scope.spawn(move || {
+                for i in (c..n).step_by(conns) {
+                    let at = Duration::from_secs_f64(sched.arrivals_s[i]);
+                    if let Some(wait) = at.checked_sub(t0.elapsed()) {
+                        std::thread::sleep(wait);
+                    }
+                    let class = sched.classes[i];
+                    let req = RetrieveRequest {
+                        query_id: i as u64,
+                        // Class-segregated gpu ids keep speculation slots
+                        // and per-source stats separable downstream.
+                        gpu_id: match class {
+                            ReqClass::Interactive => c as u32,
+                            ReqClass::Batch => 1000 + c as u32,
+                        },
+                        query: queries[sched.query_idx[i] % queries.len()].clone(),
+                        lists: Vec::new(),
+                        k: k as u32,
+                        want_chunks: class == ReqClass::Batch,
+                    };
+                    if req.encode().write_to(&mut wtr).is_err() {
+                        return; // server closed the connection
+                    }
+                }
+            });
+            // Reader: drain replies until all expected or deadline.
+            let mut rdr = std::io::BufReader::new(stream.try_clone()?);
+            stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+            scope.spawn(move || {
+                let mut got = 0usize;
+                while got < expect && t0.elapsed() < deadline {
+                    match Frame::read_from(&mut rdr) {
+                        Ok(f) => {
+                            let Ok(resp) = RetrieveResponse::decode(&f) else { break };
+                            let i = resp.query_id as usize;
+                            if i < n {
+                                done_ns[i].store(
+                                    t0.elapsed().as_nanos().max(1) as u64,
+                                    Ordering::Relaxed,
+                                );
+                                got += 1;
+                            }
+                        }
+                        Err(e) => {
+                            if read_timed_out(&e) {
+                                continue;
+                            }
+                            break; // connection closed
+                        }
+                    }
+                }
+            });
+        }
+        Ok(())
+    })?;
+
+    // Aggregate: latency from scheduled arrival to completion stamp.
+    let mut lat = Vec::new();
+    let mut lat_interactive = Vec::new();
+    let mut lat_batch = Vec::new();
+    let mut last_done = 0.0f64;
+    for i in 0..n {
+        let ns = done_ns[i].load(Ordering::Relaxed);
+        if ns == 0 {
+            continue;
+        }
+        let done_s = ns as f64 * 1e-9;
+        last_done = last_done.max(done_s);
+        let l = (done_s - sched.arrivals_s[i]).max(0.0);
+        lat.push(l);
+        match sched.classes[i] {
+            ReqClass::Interactive => lat_interactive.push(l),
+            ReqClass::Batch => lat_batch.push(l),
+        }
+    }
+    let received = lat.len();
+    anyhow::ensure!(received > 0, "open-loop run received no replies");
+    let wall_s = last_done.max(sched.span_s()).max(1e-9);
+    Ok(OpenLoopReport {
+        offered_qps: n as f64 / sched.span_s().max(1e-9),
+        sent: n,
+        received,
+        wall_s,
+        goodput_qps: received as f64 / wall_s,
+        latency: Summary::of(&lat),
+        interactive: if lat_interactive.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&lat_interactive))
+        },
+        batch: if lat_batch.is_empty() { None } else { Some(Summary::of(&lat_batch)) },
+    })
+}
+
+/// The measured saturation knee of an offered-load sweep: the highest
+/// goodput any offered load sustained.
+pub fn measured_knee_qps(sweep: &[OpenLoopReport]) -> f64 {
+    sweep.iter().map(|r| r.goodput_qps).fold(0.0, f64::max)
+}
+
+fn read_timed_out(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let cfg = LoadgenConfig { seed: 7, ..Default::default() };
+        assert_eq!(schedule(&cfg), schedule(&cfg));
+        let other = schedule(&LoadgenConfig { seed: 8, ..Default::default() });
+        assert_ne!(schedule(&cfg), other);
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_close() {
+        let cfg = LoadgenConfig {
+            qps: 500.0,
+            n_requests: 20_000,
+            zipf_alpha: 0.0,
+            ..Default::default()
+        };
+        let s = schedule(&cfg);
+        let rate = s.len() as f64 / s.span_s();
+        assert!((rate / cfg.qps - 1.0).abs() < 0.05, "rate {rate}");
+        // Ascending arrivals.
+        assert!(s.arrivals_s.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn bursty_compresses_into_on_windows() {
+        let (period_s, duty) = (0.1, 0.25);
+        let cfg = LoadgenConfig {
+            qps: 1000.0,
+            n_requests: 10_000,
+            arrival: Arrival::Bursty { period_s, duty },
+            ..Default::default()
+        };
+        let s = schedule(&cfg);
+        // Every arrival lands inside an on-window, and the long-run
+        // rate still matches the target.
+        for &t in &s.arrivals_s {
+            let phase = t.rem_euclid(period_s);
+            assert!(phase <= period_s * duty + 1e-9, "arrival at off-phase {phase}");
+        }
+        let rate = s.len() as f64 / s.span_s();
+        assert!((rate / cfg.qps - 1.0).abs() < 0.1, "rate {rate}");
+        assert!(s.arrivals_s.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn zipf_skew_prefers_low_indices() {
+        let cfg = LoadgenConfig {
+            zipf_alpha: 1.2,
+            n_unique: 100,
+            n_requests: 10_000,
+            ..Default::default()
+        };
+        let s = schedule(&cfg);
+        let head = s.query_idx.iter().filter(|&&i| i < 10).count();
+        assert!(head > s.len() / 2, "head hits {head}");
+        assert!(s.query_idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn class_mix_matches_fraction() {
+        let cfg = LoadgenConfig {
+            batch_fraction: 0.3,
+            n_requests: 10_000,
+            ..Default::default()
+        };
+        let s = schedule(&cfg);
+        let batch = s.classes.iter().filter(|&&c| c == ReqClass::Batch).count();
+        let frac = batch as f64 / s.len() as f64;
+        assert!((frac - 0.3).abs() < 0.03, "batch fraction {frac}");
+    }
+
+    #[test]
+    fn knee_is_max_goodput() {
+        let mk = |g: f64| OpenLoopReport {
+            offered_qps: g,
+            sent: 1,
+            received: 1,
+            wall_s: 1.0,
+            goodput_qps: g,
+            latency: Summary::of(&[0.001]),
+            interactive: None,
+            batch: None,
+        };
+        assert_eq!(measured_knee_qps(&[mk(10.0), mk(35.0), mk(20.0)]), 35.0);
+    }
+}

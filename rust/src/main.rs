@@ -6,9 +6,12 @@
 //!   serve               generate sequences end-to-end (RALM inference)
 //!   cluster             elastic retrieval tier report: replicated
 //!                       dispatch, mid-run node death, failover/hedging
+//!   loadgen             open-loop load harness: traced coordinator +
+//!                       Poisson/bursty offered-load sweep, knee + fitted
+//!                       capacity plan (BENCH_serve.json)
 //!   report <id>         regenerate a paper table/figure
 //!                       (fig7 fig8 fig9 fig10 fig11 fig12 fig13
-//!                        table4 table5 recall retcache dispatch all)
+//!                        table4 table5 recall retcache dispatch trace all)
 
 use std::time::Duration;
 
@@ -52,6 +55,7 @@ fn run(args: &Args) -> Result<()> {
         Some("search") => search(args),
         Some("serve") => serve(args),
         Some("cluster") => cluster_cmd(args),
+        Some("loadgen") => loadgen_cmd(args),
         Some("report") => report_cmd(args),
         Some(other) => bail!("unknown subcommand '{other}' (try --help)"),
         None => {
@@ -78,7 +82,16 @@ fn print_help() {
                 --replication > 1 runs the elastic replicated tier\n\
          cluster [--nodes 4] [--replication 2] [--queries 32]\n\
                 [--hedge-quantile 0.95]   elastic-tier failover report\n\
-         report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|dispatch|all>\n\
+         loadgen [--qps 200 | --sweep 100,200,400] [--requests 400]\n\
+                [--conns 4] [--nodes 2] [--unique 64] [--zipf 0.99]\n\
+                [--batch-fraction 0.2] [--burst-period-s P --burst-duty D]\n\
+                [--remote host:port,...] [--out BENCH_serve.json]\n\
+                [--trace-out spans.json]   open-loop offered-load sweep\n\
+                against a traced coordinator; reports goodput, the latency\n\
+                knee and an SLO capacity plan fitted from the trace\n\
+         report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|dispatch|trace|all>\n\
+                report trace [--trace spans.json]   aggregate a span dump\n\
+                (default: a small in-process traced run)\n\
          \n\
          Common options: --n <scaled db size> --seed <u64> --artifacts <dir>"
     );
@@ -331,6 +344,191 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
     Ok(())
 }
 
+/// `chameleon loadgen` — the open-loop load harness: spawn a traced
+/// coordinator (or connect to running `chamvs-node` processes with
+/// `--remote`), replay a deterministic Poisson/bursty request schedule at
+/// one or more offered loads, and report goodput and latency-vs-load, the
+/// measured saturation knee, the per-stage trace breakdown, and a
+/// capacity plan fitted from the trace — all persisted to
+/// `BENCH_serve.json`.
+fn loadgen_cmd(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
+    use chameleon::hwmodel::{CapacityPlanner, StageTimes};
+    use chameleon::loadgen::{self, Arrival, LoadgenConfig};
+    use chameleon::trace::{analyze, events_to_json, Tracer};
+    use chameleon::util::json::{obj, Json};
+
+    let sys = system_config(args);
+    let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 8000);
+    let k = args.get_usize("k", 10);
+    let n_nodes = args.get_usize("nodes", 2);
+    let conns = args.get_usize("conns", 4).max(1);
+    let requests = args.get_usize("requests", 400).max(1);
+    let n_unique = args.get_usize("unique", 64).max(1);
+    let zipf_alpha = args.get_f64("zipf", 0.99);
+    let batch_fraction = args.get_f64("batch-fraction", 0.2).clamp(0.0, 1.0);
+    let policy = batch_policy(args);
+    let out_path = args.get_or("out", "BENCH_serve.json");
+
+    let arrival =
+        if args.get("burst-period-s").is_some() || args.get("burst-duty").is_some() {
+            Arrival::Bursty {
+                period_s: args.get_f64("burst-period-s", 0.2).max(1e-3),
+                duty: args.get_f64("burst-duty", 0.5).clamp(0.05, 1.0),
+            }
+        } else {
+            Arrival::Poisson
+        };
+    let sweep: Vec<f64> = match args.get("sweep") {
+        Some(s) => s
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| {
+                p.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad qps '{p}' in --sweep"))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![args.get_f64("qps", 200.0)],
+    };
+    anyhow::ensure!(
+        !sweep.is_empty() && sweep.iter().all(|&q| q > 0.0),
+        "offered loads must be positive"
+    );
+
+    // Fan-out the trace fit is observed at: the local node count, or the
+    // number of remote addresses.
+    let observed_nodes = match args.get("remote") {
+        Some(spec) => spec.split(',').filter(|p| !p.trim().is_empty()).count().max(1),
+        None => n_nodes,
+    };
+    let retriever = match args.get("remote") {
+        Some(spec) => build_remote_retriever(ds, n, k, sys.seed, spec, &None)?,
+        None => build_retriever(ds, n, n_nodes, k, false, &sys)?.0,
+    };
+    let tracer = Tracer::new(1 << 16);
+    let mut server = CoordinatorServer::spawn_traced(
+        move || retriever,
+        ServeMode::Concurrent(policy),
+        tracer.clone(),
+    )?;
+    let addr = server.addr;
+    println!(
+        "[loadgen] traced coordinator on {addr} ({observed_nodes} nodes, \
+         {requests} reqs/point, {conns} conns)"
+    );
+
+    // Query pool: `n_unique` vectors the Zipf stream indexes into.
+    let qdata = SyntheticDataset::generate_sized(ds, 64, n_unique, sys.seed ^ 9);
+    let queries: Vec<Vec<f32>> =
+        (0..n_unique).map(|i| qdata.query(i % qdata.n_queries).to_vec()).collect();
+
+    let mut points = Vec::new();
+    let mut reports = Vec::new();
+    for (pt, &qps) in sweep.iter().enumerate() {
+        let cfg = LoadgenConfig {
+            qps,
+            n_requests: requests,
+            arrival,
+            zipf_alpha,
+            n_unique,
+            batch_fraction,
+            seed: sys.seed.wrapping_add(pt as u64),
+        };
+        let sched = loadgen::schedule(&cfg);
+        let deadline = Duration::from_secs_f64(sched.span_s() + 30.0);
+        let rep = loadgen::drive(addr, &queries, k, &sched, conns, deadline)?;
+        println!(
+            "[loadgen] offered {:>6.0} q/s -> goodput {:>6.0} q/s  \
+             p50 {:7.2} ms  p95 {:7.2} ms  p99 {:7.2} ms  ({}/{} replies)",
+            rep.offered_qps,
+            rep.goodput_qps,
+            rep.latency.p50 * 1e3,
+            rep.latency.p95 * 1e3,
+            rep.latency.p99 * 1e3,
+            rep.received,
+            rep.sent,
+        );
+        points.push(obj(vec![
+            ("offered_qps", Json::Num(rep.offered_qps)),
+            ("goodput_qps", Json::Num(rep.goodput_qps)),
+            ("sent", Json::Num(rep.sent as f64)),
+            ("received", Json::Num(rep.received as f64)),
+            ("wall_s", Json::Num(rep.wall_s)),
+            ("p50_ms", Json::Num(rep.latency.p50 * 1e3)),
+            ("p95_ms", Json::Num(rep.latency.p95 * 1e3)),
+            ("p99_ms", Json::Num(rep.latency.p99 * 1e3)),
+            (
+                "interactive_p99_ms",
+                rep.interactive
+                    .as_ref()
+                    .map_or(Json::Null, |s| Json::Num(s.p99 * 1e3)),
+            ),
+            (
+                "batch_p99_ms",
+                rep.batch.as_ref().map_or(Json::Null, |s| Json::Num(s.p99 * 1e3)),
+            ),
+        ]));
+        reports.push(rep);
+    }
+    let knee = loadgen::measured_knee_qps(&reports);
+    println!("[loadgen] measured knee: {knee:.0} q/s");
+    server.shutdown();
+
+    // Offline half: aggregate the spans the run left in the ring.
+    let events = tracer.snapshot();
+    let a = analyze(&events);
+    print!("{}", a.render());
+    let present: Vec<&str> = a.kinds_present().iter().map(|kind| kind.name()).collect();
+    println!("TRACE_SPANS ok: {}", present.join(","));
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, events_to_json(&events).dump())
+            .with_context(|| format!("writing trace dump '{path}'"))?;
+        println!("[loadgen] wrote {path} ({} spans)", events.len());
+    }
+
+    // Fit the capacity model and compare its knee against the measured one.
+    let st = StageTimes::from_analysis(&a, observed_nodes);
+    let planner = CapacityPlanner::new(st, 4 * ds.d, 12 * k);
+    let predicted_knee = planner.saturation_qps(observed_nodes);
+    print!("{}", planner.render(knee.max(1.0), args.get_f64("p99-slo-ms", 50.0) * 1e-3));
+    println!(
+        "[loadgen] predicted knee at {observed_nodes} nodes: {predicted_knee:.0} q/s \
+         (measured {knee:.0} q/s)"
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("serve_loadgen".to_string())),
+        ("dataset", Json::Str(ds.name.to_string())),
+        ("n", Json::Num(n as f64)),
+        ("k", Json::Num(k as f64)),
+        ("nodes", Json::Num(observed_nodes as f64)),
+        ("conns", Json::Num(conns as f64)),
+        ("requests_per_point", Json::Num(requests as f64)),
+        ("seed", Json::Num(sys.seed as f64)),
+        ("sweep", Json::Arr(points)),
+        ("measured_knee_qps", Json::Num(knee)),
+        ("predicted_knee_qps", Json::Num(predicted_knee)),
+        (
+            "stages",
+            obj(vec![
+                ("lut_s", Json::Num(st.lut_s)),
+                ("scan_s", Json::Num(st.scan_s)),
+                ("merge_s", Json::Num(st.merge_s)),
+                ("reply_s", Json::Num(st.reply_s)),
+                ("cache_probe_s", Json::Num(st.cache_probe_s)),
+                ("spec_verify_s", Json::Num(st.spec_verify_s)),
+            ]),
+        ),
+    ]);
+    std::fs::write(out_path, report.dump())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 /// Elastic-tier config from the serve knobs: `Some` when replication or
 /// hedging is requested, `None` for the flat legacy path.
 fn cluster_config(replication: usize, hedge_quantile: f64) -> Option<ClusterConfig> {
@@ -577,6 +775,7 @@ fn report_cmd(args: &Args) -> Result<()> {
             "recall" => report::recall_report(n.min(20_000), q.min(32), seed),
             "retcache" => report::retcache_report(n.min(20_000), seed),
             "dispatch" => report::dispatch_report(n.min(20_000), q, seed),
+            "trace" => report::trace_report(args.get("trace"), n.min(8000), q.min(16), seed)?,
             other => bail!("unknown report '{other}'"),
         };
         println!("{text}");
@@ -585,7 +784,7 @@ fn report_cmd(args: &Args) -> Result<()> {
     if which == "all" {
         for id in [
             "fig7", "fig8", "table4", "table5", "fig9", "fig10", "fig11", "fig12",
-            "fig13", "recall", "retcache", "dispatch",
+            "fig13", "recall", "retcache", "dispatch", "trace",
         ] {
             run_one(id)?;
         }

@@ -156,6 +156,8 @@ impl RemoteNode {
             measured_s: r.measured_s,
             modeled_s: r.modeled_s,
             n_scanned: r.n_scanned as usize,
+            // Optional timing tail: zeros from a node that predates it.
+            lut_s: r.lut_s,
         }
     }
 

@@ -361,9 +361,27 @@ pub struct ScanResponse {
     pub measured_s: f64,
     /// PQ codes scanned on the node.
     pub n_scanned: u64,
+    /// Node-side ADC lookup-table build seconds attributed to this
+    /// query. Optional on the wire (timing tail): decodes to 0.0 from a
+    /// node that predates the per-stage breakdown.
+    pub lut_s: f64,
+    /// Node-side scan+select wall seconds (the per-stage twin of
+    /// `measured_s`; 0.0 from a node that omits the timing tail).
+    pub scan_s: f64,
 }
 
+/// Bytes of the optional per-stage timing tail (`lut_s`, `scan_s`).
+///
+/// Compatibility contract, both directions: decoders ignore trailing
+/// payload bytes they don't understand, so an old coordinator skips the
+/// tail a new node appends; a new decoder reads the tail when exactly
+/// present, falls back to zeros when absent, and only errors on a
+/// partial (torn) tail.
+pub const SCAN_TIMING_TAIL_BYTES: usize = 16;
+
 impl ScanResponse {
+    /// Serialized *legacy* body size — the timing tail rides after all
+    /// bodies, never inside them.
     fn body_len(&self) -> usize {
         40 + 12 * self.ids.len()
     }
@@ -384,6 +402,17 @@ impl ScanResponse {
         }
     }
 
+    fn write_tail(&self, p: &mut Vec<u8>) {
+        p.write_f64::<LE>(self.lut_s).unwrap();
+        p.write_f64::<LE>(self.scan_s).unwrap();
+    }
+
+    fn read_tail(&mut self, r: &mut &[u8]) -> Result<()> {
+        self.lut_s = r.read_f64::<LE>()?;
+        self.scan_s = r.read_f64::<LE>()?;
+        Ok(())
+    }
+
     fn read_body(r: &mut &[u8]) -> Result<ScanResponse> {
         let query_id = r.read_u64::<LE>()?;
         let node_id = r.read_u32::<LE>()?;
@@ -393,12 +422,23 @@ impl ScanResponse {
         let n = read_count(r, 12)?;
         let dists = read_f32s(r, n)?;
         let ids = read_u64s(r, n)?;
-        Ok(ScanResponse { query_id, node_id, dists, ids, modeled_s, measured_s, n_scanned })
+        Ok(ScanResponse {
+            query_id,
+            node_id,
+            dists,
+            ids,
+            modeled_s,
+            measured_s,
+            n_scanned,
+            lut_s: 0.0,
+            scan_s: 0.0,
+        })
     }
 
     pub fn encode(&self) -> Frame {
-        let mut p = Vec::with_capacity(self.body_len());
+        let mut p = Vec::with_capacity(self.body_len() + SCAN_TIMING_TAIL_BYTES);
         self.write_body(&mut p);
+        self.write_tail(&mut p);
         Frame { kind: Kind::ScanResponse, payload: p }
     }
 
@@ -406,7 +446,14 @@ impl ScanResponse {
         if f.kind != Kind::ScanResponse {
             bail!("not a scan response");
         }
-        Self::read_body(&mut &f.payload[..])
+        let mut r = &f.payload[..];
+        let mut resp = Self::read_body(&mut r)?;
+        match r.len() {
+            0 => {} // timing-less peer: stage fields stay zero
+            SCAN_TIMING_TAIL_BYTES => resp.read_tail(&mut r)?,
+            n => bail!("scan response with partial timing tail ({n} bytes)"),
+        }
+        Ok(resp)
     }
 }
 
@@ -454,11 +501,18 @@ pub struct BatchScanResponse {
 impl BatchScanResponse {
     pub fn encode(&self) -> Frame {
         let total: usize = self.items.iter().map(ScanResponse::body_len).sum();
-        let mut p = Vec::with_capacity(8 + total);
+        let mut p =
+            Vec::with_capacity(8 + total + self.items.len() * SCAN_TIMING_TAIL_BYTES);
         p.write_u32::<LE>(self.node_id).unwrap();
         p.write_u32::<LE>(self.items.len() as u32).unwrap();
         for it in &self.items {
             it.write_body(&mut p);
+        }
+        // Per-item timing tails after ALL bodies: unambiguous (the frame
+        // length bounds the payload) and invisible to old decoders,
+        // which stop after the last body.
+        for it in &self.items {
+            it.write_tail(&mut p);
         }
         Frame { kind: Kind::BatchScanResponse, payload: p }
     }
@@ -473,6 +527,17 @@ impl BatchScanResponse {
         let mut items = Vec::with_capacity(n);
         for _ in 0..n {
             items.push(ScanResponse::read_body(&mut r)?);
+        }
+        match r.len() {
+            0 => {} // timing-less peer
+            rem if rem == n * SCAN_TIMING_TAIL_BYTES => {
+                for it in &mut items {
+                    it.read_tail(&mut r)?;
+                }
+            }
+            rem => bail!(
+                "batch scan response with partial timing tail ({rem} bytes for {n} items)"
+            ),
         }
         Ok(BatchScanResponse { node_id, items })
     }
@@ -595,6 +660,8 @@ mod tests {
             modeled_s: 1.25e-3,
             measured_s: 0.75e-3,
             n_scanned: 1234,
+            lut_s: 0.25e-3,
+            scan_s: 0.5e-3,
         }
     }
 
@@ -804,10 +871,112 @@ mod tests {
 
     #[test]
     fn truncated_payload_decode_errors() {
-        let full = sample_scan_response(9).encode();
+        let resp = sample_scan_response(9);
+        let full = resp.encode();
+        let legacy_len = resp.body_len();
+        assert_eq!(full.payload.len(), legacy_len + SCAN_TIMING_TAIL_BYTES);
         for cut in 0..full.payload.len() {
             let f = Frame { kind: full.kind, payload: full.payload[..cut].to_vec() };
-            assert!(ScanResponse::decode(&f).is_err(), "cut={cut}");
+            if cut == legacy_len {
+                // A cut at exactly the legacy body is a valid frame from
+                // a timing-less peer: stage fields fall back to zeros.
+                let d = ScanResponse::decode(&f).unwrap();
+                assert_eq!((d.lut_s, d.scan_s), (0.0, 0.0));
+            } else {
+                assert!(ScanResponse::decode(&f).is_err(), "cut={cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn timing_tail_roundtrips() {
+        // New node -> new coordinator: the per-stage fields survive both
+        // the single and the batched frame shape.
+        let resp = sample_scan_response(4);
+        let d = ScanResponse::decode(&roundtrip(resp.encode())).unwrap();
+        assert_eq!(d, resp);
+        assert_eq!((d.lut_s, d.scan_s), (0.25e-3, 0.5e-3));
+
+        let batch = BatchScanResponse {
+            node_id: 2,
+            items: (0..3)
+                .map(|i| {
+                    let mut r = sample_scan_response(i);
+                    r.lut_s = i as f64 * 1e-4;
+                    r.scan_s = i as f64 * 2e-4;
+                    r
+                })
+                .collect(),
+        };
+        let d = BatchScanResponse::decode(&roundtrip(batch.encode())).unwrap();
+        assert_eq!(d, batch);
+    }
+
+    #[test]
+    fn timingless_peer_decodes_to_zeros() {
+        // Old node -> new coordinator: a payload that stops at the last
+        // legacy body must decode (never error), stage fields zeroed.
+        let mut want = sample_scan_response(7);
+        let mut p = Vec::new();
+        want.write_body(&mut p);
+        let d = ScanResponse::decode(&Frame { kind: Kind::ScanResponse, payload: p })
+            .unwrap();
+        want.lut_s = 0.0;
+        want.scan_s = 0.0;
+        assert_eq!(d, want);
+
+        let items: Vec<ScanResponse> =
+            (0..3).map(sample_scan_response).collect();
+        let mut p = Vec::new();
+        p.write_u32::<LE>(5).unwrap();
+        p.write_u32::<LE>(items.len() as u32).unwrap();
+        for it in &items {
+            it.write_body(&mut p);
+        }
+        let d =
+            BatchScanResponse::decode(&Frame { kind: Kind::BatchScanResponse, payload: p })
+                .unwrap();
+        assert_eq!(d.node_id, 5);
+        for (got, sent) in d.items.iter().zip(&items) {
+            assert_eq!((got.lut_s, got.scan_s), (0.0, 0.0));
+            assert_eq!(got.ids, sent.ids);
+            assert_eq!(got.measured_s, sent.measured_s);
+        }
+    }
+
+    #[test]
+    fn new_frames_keep_the_legacy_body_prefix() {
+        // New node -> old coordinator: an old decoder reads the legacy
+        // body and ignores trailing bytes, so the tail must ride strictly
+        // after an unchanged body encoding.
+        let resp = sample_scan_response(3);
+        let mut legacy = Vec::new();
+        resp.write_body(&mut legacy);
+        let f = resp.encode();
+        assert_eq!(&f.payload[..legacy.len()], &legacy[..]);
+
+        let batch = BatchScanResponse { node_id: 1, items: vec![sample_scan_response(8)] };
+        let mut legacy = Vec::new();
+        legacy.write_u32::<LE>(batch.node_id).unwrap();
+        legacy.write_u32::<LE>(1).unwrap();
+        batch.items[0].write_body(&mut legacy);
+        let f = batch.encode();
+        assert_eq!(&f.payload[..legacy.len()], &legacy[..]);
+        assert_eq!(f.payload.len(), legacy.len() + SCAN_TIMING_TAIL_BYTES);
+    }
+
+    #[test]
+    fn partial_batch_timing_tail_errors() {
+        let batch = BatchScanResponse {
+            node_id: 1,
+            items: (0..2).map(sample_scan_response).collect(),
+        };
+        let full = batch.encode();
+        let tail = batch.items.len() * SCAN_TIMING_TAIL_BYTES;
+        let body_end = full.payload.len() - tail;
+        for cut in body_end + 1..full.payload.len() {
+            let f = Frame { kind: full.kind, payload: full.payload[..cut].to_vec() };
+            assert!(BatchScanResponse::decode(&f).is_err(), "cut={cut}");
         }
     }
 

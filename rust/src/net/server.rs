@@ -216,6 +216,7 @@ fn scan_round(
     let lut_len = m * KSUB;
     let dsub = codebook.len() / lut_len;
     lut_arena.clear();
+    let t_lut = std::time::Instant::now();
     for r in reqs {
         anyhow::ensure!(
             r.query.len() == m * dsub && codebook.len() == lut_len * dsub,
@@ -226,6 +227,9 @@ fn scan_round(
         lut_arena.resize(start + lut_len, 0.0);
         build_lut_raw_into(codebook, &r.query, m, dsub, &mut lut_arena[start..]);
     }
+    // Per-request share of the round's table-build wall, reported in the
+    // response's timing tail for coordinator-side trace attribution.
+    let lut_share_s = t_lut.elapsed().as_secs_f64() / reqs.len().max(1) as f64;
     let mut jobs = Vec::with_capacity(reqs.len());
     for ((r, lists), lut) in
         reqs.iter().zip(&filtered).zip(lut_arena.chunks_exact(lut_len))
@@ -244,6 +248,8 @@ fn scan_round(
             modeled_s: nr.modeled_s,
             measured_s: nr.measured_s,
             n_scanned: nr.n_scanned as u64,
+            lut_s: lut_share_s,
+            scan_s: nr.measured_s,
         })
         .collect())
 }

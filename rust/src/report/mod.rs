@@ -5,12 +5,14 @@
 pub mod search;
 pub mod system;
 pub mod tables;
+pub mod trace;
 
 pub use search::{fig10_scalability, fig9_search_latency, recall_report};
 pub use system::{
     dispatch_report, fig11_latency, fig12_throughput, fig13_ratio, retcache_report,
 };
 pub use tables::{fig7_probability, fig8_resources, table4_resources, table5_energy};
+pub use trace::trace_report;
 
 /// Render a markdown-ish table row.
 pub fn row(cells: &[String]) -> String {

@@ -247,7 +247,7 @@ pub fn dispatch_report(n_scaled: usize, n_queries: usize, seed: u64) -> String {
     let batch: Vec<BatchQuery> = queries
         .iter()
         .zip(&lists)
-        .map(|(q, l)| BatchQuery { query: q, lists: l })
+        .map(|(q, l)| BatchQuery { query: q, lists: l, trace_id: 0 })
         .collect();
 
     let mut out = String::new();

@@ -1,0 +1,114 @@
+//! `chameleon report trace`: aggregate a span dump into per-stage
+//! percentiles, critical-path attribution and hedge/cache/speculation
+//! win rates — the offline half of the end-to-end query tracing pipeline
+//! (the online half is `chameleon loadgen --trace-out` or any server
+//! spawned with
+//! [`crate::coordinator::server::CoordinatorServer::spawn_traced`]).
+
+use anyhow::{Context, Result};
+
+use crate::chamvs::dispatcher::Dispatcher;
+use crate::chamvs::node::{MemoryNode, ScanEngine};
+use crate::config;
+use crate::coordinator::retriever::Retriever;
+use crate::data::corpus::Corpus;
+use crate::data::synthetic::SyntheticDataset;
+use crate::hwmodel::capacity::{CapacityPlanner, StageTimes};
+use crate::ivf::index::IvfPqIndex;
+use crate::ivf::shard::Shard;
+use crate::retcache::{CacheConfig, KeyPolicy, SpecConfig};
+use crate::trace::{analyze, events_from_json, SpanKind, Tracer};
+use crate::util::json::Json;
+
+/// Aggregate a trace dump file (or, with no path, a small in-process
+/// traced run) and render the report plus a fitted capacity plan.
+pub fn trace_report(
+    path: Option<&str>,
+    n: usize,
+    queries: usize,
+    seed: u64,
+) -> Result<String> {
+    let (events, observed_nodes) = match path {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading trace dump '{p}'"))?;
+            let j = Json::parse(&text).with_context(|| format!("parsing '{p}'"))?;
+            (events_from_json(&j)?, None)
+        }
+        None => (demo_events(n, queries, seed)?, Some(2)),
+    };
+    let a = analyze(&events);
+    let mut out = a.render();
+    // Fan-out for the planner fit: from the per-node span tags when the
+    // dump carries scans, else the demo's node count.
+    let nodes = observed_nodes.unwrap_or_else(|| a.per_node.len().max(1));
+    if a.totals.is_some() && a.stage_mean_s(SpanKind::NodeScan) > 0.0 {
+        let st = StageTimes::from_analysis(&a, nodes);
+        let planner = CapacityPlanner::new(st, 4 * 128, 12 * 10);
+        out.push_str(&planner.render(planner.saturation_qps(nodes) * 0.5, 0.05));
+    }
+    Ok(out)
+}
+
+/// Produce a span stream by running a traced closed loop over an
+/// in-process two-node retrieval stack with the retcache enabled — every
+/// core span kind except the server-owned queue wait shows up.
+fn demo_events(
+    n: usize,
+    queries: usize,
+    seed: u64,
+) -> Result<Vec<crate::trace::SpanEvent>> {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, n, queries.max(1), seed);
+    let nlist = (n as f64).sqrt() as usize;
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..2)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 2), ScanEngine::Native, 10))
+        .collect();
+    let dispatcher = Dispatcher::new(nodes, 10);
+    let corpus = Corpus::generate(n, 2048, config::CHUNK_LEN, seed ^ 2);
+    let mut retriever = Retriever::new(ds, index, dispatcher, corpus);
+    retriever.enable_cache(CacheConfig { key: KeyPolicy::Exact, ..CacheConfig::default() });
+    retriever.enable_speculation(SpecConfig::default());
+    let tracer = Tracer::new(16 * 1024);
+    retriever.set_tracer(tracer.clone());
+    for i in 0..queries.max(1) {
+        let trace_id = (i + 1) as u64;
+        let t0 = std::time::Instant::now();
+        // Repeat every query once so cache hits and speculation verifies
+        // both fire.
+        let q = data.query((i / 2) % data.n_queries);
+        retriever.retrieve_cached_from_traced(0, q, trace_id)?;
+        tracer.record(trace_id, SpanKind::QueueWait, 0, 0.0);
+        tracer.record(trace_id, SpanKind::Total, 0, t0.elapsed().as_secs_f64());
+    }
+    retriever.cancel_speculation();
+    Ok(tracer.snapshot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_report_carries_core_stages_and_plan() {
+        let text = trace_report(None, 4000, 8, 42).unwrap();
+        for stage in ["lut_build", "node_scan", "merge", "cache_probe", "total"] {
+            assert!(text.contains(stage), "missing {stage} in:\n{text}");
+        }
+        assert!(text.contains("planner:"), "{text}");
+    }
+
+    #[test]
+    fn dump_roundtrip_report() {
+        use crate::trace::events_to_json;
+        let evs = demo_events(4000, 6, 7).unwrap();
+        let dir = std::env::temp_dir().join("chameleon_trace_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        std::fs::write(&path, events_to_json(&evs).dump()).unwrap();
+        let text = trace_report(Some(path.to_str().unwrap()), 0, 0, 0).unwrap();
+        assert!(text.contains("node_scan"), "{text}");
+        assert!(trace_report(Some("/nonexistent/trace.json"), 0, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,372 @@
+//! Offline trace aggregation: per-stage percentiles, critical-path
+//! attribution and hedge/cache/speculation win rates over a snapshot of
+//! [`SpanEvent`]s (`chameleon report trace`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::span::{SpanEvent, SpanKind, ALL_KINDS};
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// Stage kinds that make up a query's server-side critical path.
+/// `NodeScan` contributes its per-trace max (nodes scan in parallel);
+/// every other kind contributes the sum of its spans.
+pub const CRITICAL_PATH: [SpanKind; 7] = [
+    SpanKind::QueueWait,
+    SpanKind::CacheProbe,
+    SpanKind::SpecVerify,
+    SpanKind::LutBuild,
+    SpanKind::NodeScan,
+    SpanKind::Merge,
+    SpanKind::ReplyWrite,
+];
+
+/// Aggregated view of one trace snapshot.
+#[derive(Clone, Debug)]
+pub struct TraceAnalysis {
+    pub n_events: usize,
+    /// Distinct nonzero trace ids.
+    pub n_traces: usize,
+    /// Per-kind summary over individual span durations.
+    pub per_stage: Vec<(SpanKind, Summary)>,
+    /// Per-node scan summary (tag = node index).
+    pub per_node: Vec<(u32, Summary)>,
+    /// End-to-end `Total` spans (server-side residency per query).
+    pub totals: Option<Summary>,
+    /// Mean share of each trace's `Total` attributed to each critical-
+    /// path stage, in [`CRITICAL_PATH`] order.
+    pub critical_share: Vec<(SpanKind, f64)>,
+    /// Per-trace (critical-path stage sum) / `Total` — the consistency
+    /// measure: near 1.0 means the spans explain the measured e2e time.
+    pub coverage: Option<Summary>,
+    pub hedges_fired: u64,
+    pub hedges_won: u64,
+    pub cache_probes: u64,
+    pub cache_hits: u64,
+    pub spec_verifies: u64,
+    pub spec_hits: u64,
+}
+
+/// Per-trace critical-path stage durations for one trace id.
+fn critical_durations(evs: &[&SpanEvent]) -> BTreeMap<SpanKind, f64> {
+    let mut out = BTreeMap::new();
+    for ev in evs {
+        match ev.kind {
+            SpanKind::NodeScan => {
+                let e = out.entry(SpanKind::NodeScan).or_insert(0.0f64);
+                *e = e.max(ev.dur_s);
+            }
+            SpanKind::Total | SpanKind::HedgeFired | SpanKind::HedgeWon => {}
+            k => *out.entry(k).or_insert(0.0) += ev.dur_s,
+        }
+    }
+    out
+}
+
+/// Aggregate a snapshot. Events with `trace_id == 0` still feed the
+/// per-stage and hedge/cache counters but not per-trace attribution.
+pub fn analyze(events: &[SpanEvent]) -> TraceAnalysis {
+    let mut by_kind: BTreeMap<SpanKind, Vec<f64>> = BTreeMap::new();
+    let mut by_node: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+    let mut by_trace: BTreeMap<u64, Vec<&SpanEvent>> = BTreeMap::new();
+    let (mut hf, mut hw) = (0u64, 0u64);
+    let (mut cp, mut ch, mut sv, mut sh) = (0u64, 0u64, 0u64, 0u64);
+    for ev in events {
+        by_kind.entry(ev.kind).or_default().push(ev.dur_s);
+        match ev.kind {
+            SpanKind::NodeScan => by_node.entry(ev.tag).or_default().push(ev.dur_s),
+            SpanKind::HedgeFired => hf += ev.tag as u64,
+            SpanKind::HedgeWon => hw += ev.tag as u64,
+            SpanKind::CacheProbe => {
+                cp += 1;
+                ch += (ev.tag == 1) as u64;
+            }
+            SpanKind::SpecVerify => {
+                sv += 1;
+                sh += (ev.tag == 1) as u64;
+            }
+            _ => {}
+        }
+        if ev.trace_id != 0 {
+            by_trace.entry(ev.trace_id).or_default().push(ev);
+        }
+    }
+
+    // Critical-path attribution over traces that carry a Total span.
+    let mut shares: BTreeMap<SpanKind, Vec<f64>> = BTreeMap::new();
+    let mut coverage = Vec::new();
+    for evs in by_trace.values() {
+        let total: f64 = evs
+            .iter()
+            .filter(|e| e.kind == SpanKind::Total)
+            .map(|e| e.dur_s)
+            .sum();
+        if total <= 0.0 {
+            continue;
+        }
+        let durs = critical_durations(evs);
+        let sum: f64 = durs.values().sum();
+        coverage.push(sum / total);
+        for k in CRITICAL_PATH {
+            shares.entry(k).or_default().push(durs.get(&k).copied().unwrap_or(0.0) / total);
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+
+    TraceAnalysis {
+        n_events: events.len(),
+        n_traces: by_trace.len(),
+        per_stage: ALL_KINDS
+            .iter()
+            .filter_map(|k| by_kind.get(k).map(|v| (*k, Summary::of(v))))
+            .collect(),
+        per_node: by_node.iter().map(|(n, v)| (*n, Summary::of(v))).collect(),
+        totals: by_kind.get(&SpanKind::Total).map(|v| Summary::of(v)),
+        critical_share: CRITICAL_PATH
+            .iter()
+            .map(|k| (*k, mean(shares.get(k).map(|v| &v[..]).unwrap_or(&[]))))
+            .collect(),
+        coverage: if coverage.is_empty() { None } else { Some(Summary::of(&coverage)) },
+        hedges_fired: hf,
+        hedges_won: hw,
+        cache_probes: cp,
+        cache_hits: ch,
+        spec_verifies: sv,
+        spec_hits: sh,
+    }
+}
+
+impl TraceAnalysis {
+    /// Span kinds present in the snapshot.
+    pub fn kinds_present(&self) -> Vec<SpanKind> {
+        self.per_stage.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Mean critical-path stage sum in seconds (for planner fitting).
+    pub fn stage_mean_s(&self, kind: SpanKind) -> f64 {
+        if kind == SpanKind::NodeScan {
+            // Per-trace max, not the per-span mean: recompute from the
+            // attribution shares times the mean total.
+            if let (Some(t), Some((_, share))) = (
+                &self.totals,
+                self.critical_share.iter().find(|(k, _)| *k == SpanKind::NodeScan),
+            ) {
+                return share * t.mean;
+            }
+        }
+        self.per_stage
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, s)| s.mean)
+            .unwrap_or(0.0)
+    }
+
+    /// Human-readable report table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace — {} events, {} traces\n",
+            self.n_events, self.n_traces
+        ));
+        out.push_str("stage          n       p50         p95         p99         mean\n");
+        for (k, s) in &self.per_stage {
+            out.push_str(&format!(
+                "{:<12} {:>6} {:>9.3}ms {:>9.3}ms {:>9.3}ms {:>9.3}ms\n",
+                k.name(),
+                s.n,
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                s.p99 * 1e3,
+                s.mean * 1e3,
+            ));
+        }
+        out.push_str("critical path (mean share of total):");
+        for (k, share) in &self.critical_share {
+            out.push_str(&format!(" {}={:.1}%", k.name(), share * 100.0));
+        }
+        out.push('\n');
+        if let Some(cov) = &self.coverage {
+            out.push_str(&format!(
+                "stage-sum coverage of e2e total: p50={:.2} mean={:.2}\n",
+                cov.p50, cov.mean
+            ));
+        }
+        if self.cache_probes > 0 {
+            out.push_str(&format!(
+                "cache: {}/{} hits ({:.1}%)\n",
+                self.cache_hits,
+                self.cache_probes,
+                100.0 * self.cache_hits as f64 / self.cache_probes as f64
+            ));
+        }
+        if self.spec_verifies > 0 {
+            out.push_str(&format!(
+                "speculation: {}/{} verified hits ({:.1}%)\n",
+                self.spec_hits,
+                self.spec_verifies,
+                100.0 * self.spec_hits as f64 / self.spec_verifies as f64
+            ));
+        }
+        if self.hedges_fired > 0 {
+            out.push_str(&format!(
+                "hedges: {} fired, {} won ({:.1}%)\n",
+                self.hedges_fired,
+                self.hedges_won,
+                100.0 * self.hedges_won as f64 / self.hedges_fired as f64
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let stage_json = |s: &Summary| {
+            obj(vec![
+                ("n", Json::Num(s.n as f64)),
+                ("p50", Json::Num(s.p50)),
+                ("p95", Json::Num(s.p95)),
+                ("p99", Json::Num(s.p99)),
+                ("mean", Json::Num(s.mean)),
+            ])
+        };
+        let mut stages = BTreeMap::new();
+        for (k, s) in &self.per_stage {
+            stages.insert(k.name().to_string(), stage_json(s));
+        }
+        let mut shares = BTreeMap::new();
+        for (k, v) in &self.critical_share {
+            shares.insert(k.name().to_string(), Json::Num(*v));
+        }
+        obj(vec![
+            ("n_events", Json::Num(self.n_events as f64)),
+            ("n_traces", Json::Num(self.n_traces as f64)),
+            ("stages", Json::Obj(stages)),
+            ("critical_share", Json::Obj(shares)),
+            (
+                "coverage_p50",
+                self.coverage.as_ref().map(|c| Json::Num(c.p50)).unwrap_or(Json::Null),
+            ),
+            ("hedges_fired", Json::Num(self.hedges_fired as f64)),
+            ("hedges_won", Json::Num(self.hedges_won as f64)),
+            ("cache_probes", Json::Num(self.cache_probes as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("spec_verifies", Json::Num(self.spec_verifies as f64)),
+            ("spec_hits", Json::Num(self.spec_hits as f64)),
+        ])
+    }
+}
+
+/// Serialize a snapshot for offline analysis (`--trace-out`).
+pub fn events_to_json(events: &[SpanEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|e| {
+                Json::Arr(vec![
+                    Json::Num(e.trace_id as f64),
+                    Json::Num(e.kind as u8 as f64),
+                    Json::Num(e.tag as f64),
+                    Json::Num(e.t_us as f64),
+                    Json::Num(e.dur_s),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Parse a snapshot dumped by [`events_to_json`].
+pub fn events_from_json(j: &Json) -> Result<Vec<SpanEvent>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("trace dump: expected array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, row) in arr.iter().enumerate() {
+        let f = row.as_arr().ok_or_else(|| anyhow!("trace dump row {i}: expected array"))?;
+        if f.len() != 5 {
+            return Err(anyhow!("trace dump row {i}: expected 5 fields, got {}", f.len()));
+        }
+        let num =
+            |j: &Json, what: &str| j.as_f64().ok_or_else(|| anyhow!("row {i}: bad {what}"));
+        let kind_v = num(&f[1], "kind")? as u8;
+        out.push(SpanEvent {
+            trace_id: num(&f[0], "trace_id")? as u64,
+            kind: SpanKind::from_u8(kind_v)
+                .ok_or_else(|| anyhow!("row {i}: unknown span kind {kind_v}"))?,
+            tag: num(&f[2], "tag")? as u32,
+            t_us: num(&f[3], "t_us")? as u64,
+            dur_s: num(&f[4], "dur_s")?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(trace_id: u64, kind: SpanKind, tag: u32, dur_s: f64) -> SpanEvent {
+        SpanEvent { trace_id, kind, tag, t_us: 0, dur_s }
+    }
+
+    /// One synthetic two-node query: stages sum exactly to the total.
+    fn synthetic_trace(id: u64) -> Vec<SpanEvent> {
+        vec![
+            ev(id, SpanKind::QueueWait, 0, 0.001),
+            ev(id, SpanKind::LutBuild, 0, 0.0005),
+            ev(id, SpanKind::NodeScan, 0, 0.004),
+            ev(id, SpanKind::NodeScan, 1, 0.003),
+            ev(id, SpanKind::Merge, 0, 0.0002),
+            ev(id, SpanKind::ReplyWrite, 0, 0.0003),
+            // total = queue + lut + max(scan) + merge + reply = 0.006
+            ev(id, SpanKind::Total, 0, 0.006),
+        ]
+    }
+
+    #[test]
+    fn attribution_uses_max_scan_and_sums_to_total() {
+        let mut evs = synthetic_trace(1);
+        evs.extend(synthetic_trace(2));
+        let a = analyze(&evs);
+        assert_eq!(a.n_traces, 2);
+        let cov = a.coverage.as_ref().unwrap();
+        assert!((cov.mean - 1.0).abs() < 1e-9, "coverage {}", cov.mean);
+        let scan_share = a
+            .critical_share
+            .iter()
+            .find(|(k, _)| *k == SpanKind::NodeScan)
+            .unwrap()
+            .1;
+        // max(0.004, 0.003) / 0.006
+        assert!((scan_share - 0.004 / 0.006).abs() < 1e-9);
+        // Per-node summaries keyed by tag.
+        assert_eq!(a.per_node.len(), 2);
+        assert!((a.stage_mean_s(SpanKind::NodeScan) - 0.004).abs() < 1e-9);
+        assert!((a.stage_mean_s(SpanKind::Merge) - 0.0002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_count_hits_and_hedges() {
+        let evs = vec![
+            ev(1, SpanKind::CacheProbe, 1, 1e-6),
+            ev(2, SpanKind::CacheProbe, 0, 1e-6),
+            ev(2, SpanKind::SpecVerify, 1, 1e-6),
+            ev(0, SpanKind::HedgeFired, 3, 0.0),
+            ev(0, SpanKind::HedgeWon, 1, 0.0),
+        ];
+        let a = analyze(&evs);
+        assert_eq!((a.cache_probes, a.cache_hits), (2, 1));
+        assert_eq!((a.spec_verifies, a.spec_hits), (1, 1));
+        assert_eq!((a.hedges_fired, a.hedges_won), (3, 1));
+        let text = a.render();
+        assert!(text.contains("cache: 1/2"));
+        assert!(text.contains("hedges: 3 fired"));
+    }
+
+    #[test]
+    fn events_roundtrip_through_json() {
+        let evs = synthetic_trace(7);
+        let j = events_to_json(&evs);
+        let back = events_from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(evs, back);
+        assert!(events_from_json(&Json::Num(1.0)).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! End-to-end query tracing for the serving stack.
+//!
+//! Execution emits cheap events, analysis aggregates offline: the hot
+//! path calls [`Tracer::record`], which stamps a [`SpanEvent`] into a
+//! preallocated lock-free [`TraceRing`] (no allocation, no locks, a few
+//! atomics per event — see `rust/tests/trace_alloc.rs`). After a run,
+//! [`TraceRing::snapshot`] drains the ring and [`analysis`] computes
+//! per-stage p50/p95/p99, critical-path attribution and
+//! hedge/cache/speculation win rates (`chameleon report trace`).
+//!
+//! Trace ids are allocated by `coordinator::server` (0 = untraced) and
+//! carried through the batcher, retriever and dispatcher; remote nodes
+//! report their stage timings back over the wire via the optional
+//! timing tail on `ScanResponse`/`BatchScanResponse`.
+
+pub mod analysis;
+pub mod ring;
+pub mod span;
+
+pub use analysis::{analyze, events_from_json, events_to_json, TraceAnalysis};
+pub use ring::{TraceRing, Tracer};
+pub use span::{SpanEvent, SpanKind};

@@ -1,0 +1,118 @@
+//! Span taxonomy: the stages of one query's life through the serving
+//! stack (paper Sec 6 decomposes latency over exactly these tiers).
+
+/// The stage a [`SpanEvent`] measures.
+///
+/// Stable `u8` discriminants — events round-trip through JSON dumps and
+/// (for node-side stages) the wire, so renumbering is a format break.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Arrival at the coordinator until the dynamic batcher drained the
+    /// request into a dispatch round.
+    QueueWait = 0,
+    /// ADC lookup-table build (coordinator arena fill + node-side share
+    /// reported over the wire).
+    LutBuild = 1,
+    /// One memory node's scan wall for this query (tag = node index;
+    /// nodes scan in parallel, so the critical path takes the max).
+    NodeScan = 2,
+    /// K-way merge of per-node top-k lists.
+    Merge = 3,
+    /// A hedged duplicate scan was fired this round (tag = count).
+    HedgeFired = 4,
+    /// A hedged duplicate won the race (tag = count).
+    HedgeWon = 5,
+    /// Retrieval-cache probe (tag: 1 = hit, 0 = miss).
+    CacheProbe = 6,
+    /// Speculative-retrieval verification (tag: 1 = hit, 0 = miss/idle).
+    SpecVerify = 7,
+    /// Encoding + writing the reply frame back to the client.
+    ReplyWrite = 8,
+    /// Whole server-side residency: arrival until the reply was written.
+    Total = 9,
+}
+
+/// Every kind, in discriminant order (drives report tables).
+pub const ALL_KINDS: [SpanKind; 10] = [
+    SpanKind::QueueWait,
+    SpanKind::LutBuild,
+    SpanKind::NodeScan,
+    SpanKind::Merge,
+    SpanKind::HedgeFired,
+    SpanKind::HedgeWon,
+    SpanKind::CacheProbe,
+    SpanKind::SpecVerify,
+    SpanKind::ReplyWrite,
+    SpanKind::Total,
+];
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::LutBuild => "lut_build",
+            SpanKind::NodeScan => "node_scan",
+            SpanKind::Merge => "merge",
+            SpanKind::HedgeFired => "hedge_fired",
+            SpanKind::HedgeWon => "hedge_won",
+            SpanKind::CacheProbe => "cache_probe",
+            SpanKind::SpecVerify => "spec_verify",
+            SpanKind::ReplyWrite => "reply_write",
+            SpanKind::Total => "total",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        ALL_KINDS.get(v as usize).copied()
+    }
+}
+
+/// One recorded stage measurement. Plain `Copy` data — the ring stores
+/// these inline; recording never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    /// Query trace id (0 = not tied to one query, e.g. hedge counters).
+    pub trace_id: u64,
+    pub kind: SpanKind,
+    /// Kind-specific tag: node index for `NodeScan`, hit flag for
+    /// `CacheProbe`/`SpecVerify`, count for hedge events.
+    pub tag: u32,
+    /// Microseconds since the tracer epoch (event completion time).
+    pub t_us: u64,
+    /// Stage duration in seconds.
+    pub dur_s: f64,
+}
+
+impl SpanEvent {
+    /// A zeroed placeholder (ring slots start in this state).
+    pub const EMPTY: SpanEvent = SpanEvent {
+        trace_id: 0,
+        kind: SpanKind::QueueWait,
+        tag: 0,
+        t_us: 0,
+        dur_s: 0.0,
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_discriminants_are_stable() {
+        for (i, k) in ALL_KINDS.iter().enumerate() {
+            assert_eq!(*k as u8, i as u8);
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+        }
+        assert_eq!(SpanKind::from_u8(10), None);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<&str> = ALL_KINDS.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ALL_KINDS.len());
+    }
+}

@@ -1,19 +1,34 @@
 //! Lightweight metrics: counters + latency histograms with JSON export —
 //! the observability layer of the coordinator (the paper's prototype logs
 //! equivalent per-stage timings for its evaluation).
+//!
+//! Latency series are held in fixed-capacity reservoirs
+//! ([`Reservoir`]), so memory stays bounded under sustained open-loop
+//! load; below capacity the sample is exact and summaries match a
+//! full-sample [`Summary`] bit-for-bit.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::json::{obj, Json};
-use super::stats::Summary;
+use super::stats::{Reservoir, Summary};
+
+/// Samples kept per latency series (exact below this, uniform beyond).
+pub const RESERVOIR_CAP: usize = 4096;
 
 /// A process-wide metrics registry (cheap enough for the request path).
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
-    samples: Mutex<BTreeMap<String, Vec<f64>>>,
+    samples: Mutex<BTreeMap<String, Reservoir>>,
+}
+
+/// Per-series reservoir seed: deterministic per name so runs reproduce.
+fn series_seed(name: &str) -> u64 {
+    name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    })
 }
 
 impl Metrics {
@@ -32,7 +47,7 @@ impl Metrics {
             .lock()
             .unwrap()
             .entry(name.to_string())
-            .or_default()
+            .or_insert_with(|| Reservoir::new(RESERVOIR_CAP, series_seed(name)))
             .push(secs);
     }
 
@@ -48,9 +63,15 @@ impl Metrics {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
 
+    /// Summary of a series; `n` is the true observation count even when
+    /// the reservoir has downsampled.
     pub fn summary(&self, name: &str) -> Option<Summary> {
-        let s = self.samples.lock().unwrap();
-        s.get(name).filter(|v| !v.is_empty()).map(|v| Summary::of(v))
+        self.samples.lock().unwrap().get(name).and_then(|r| r.summary())
+    }
+
+    /// Samples currently held for a series (<= RESERVOIR_CAP).
+    pub fn held(&self, name: &str) -> usize {
+        self.samples.lock().unwrap().get(name).map_or(0, |r| r.len())
     }
 
     /// Export everything as JSON (counters + per-histogram percentiles).
@@ -62,17 +83,15 @@ impl Metrics {
             c.insert(k.clone(), Json::Num(*v as f64));
         }
         let mut h = BTreeMap::new();
-        for (k, v) in samples.iter() {
-            if v.is_empty() {
-                continue;
-            }
-            let s = Summary::of(v);
+        for (k, r) in samples.iter() {
+            let Some(s) = r.summary() else { continue };
             h.insert(
                 k.clone(),
                 obj(vec![
                     ("n", Json::Num(s.n as f64)),
                     ("p50", Json::Num(s.p50)),
                     ("p90", Json::Num(s.p90)),
+                    ("p95", Json::Num(s.p95)),
                     ("p99", Json::Num(s.p99)),
                     ("mean", Json::Num(s.mean)),
                 ]),
@@ -87,9 +106,9 @@ impl Metrics {
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{k:<40} {v}\n"));
         }
-        for (k, v) in self.samples.lock().unwrap().iter() {
-            if !v.is_empty() {
-                out.push_str(&Summary::of(v).render_ms(k));
+        for (k, r) in self.samples.lock().unwrap().iter() {
+            if let Some(s) = r.summary() {
+                out.push_str(&s.render_ms(k));
                 out.push('\n');
             }
         }
@@ -119,6 +138,31 @@ mod tests {
         let s = m.summary("lat").unwrap();
         assert_eq!(s.n, 100);
         assert!((s.p50 - 0.0505).abs() < 1e-3);
+    }
+
+    #[test]
+    fn small_series_match_full_sample_summary() {
+        // Below reservoir capacity nothing is dropped: the summary must
+        // equal the old unbounded full-sample behavior exactly.
+        let m = Metrics::new();
+        let xs: Vec<f64> = (1..=500).map(|i| i as f64 / 250.0).collect();
+        for &x in &xs {
+            m.observe("lat", x);
+        }
+        assert_eq!(m.summary("lat").unwrap(), Summary::of(&xs));
+        assert_eq!(m.held("lat"), xs.len());
+    }
+
+    #[test]
+    fn sustained_series_stay_bounded() {
+        let m = Metrics::new();
+        for i in 0..10 * RESERVOIR_CAP {
+            m.observe("lat", (i % 100) as f64);
+        }
+        assert_eq!(m.held("lat"), RESERVOIR_CAP);
+        let s = m.summary("lat").unwrap();
+        assert_eq!(s.n, 10 * RESERVOIR_CAP);
+        assert!((s.p50 - 49.5).abs() < 10.0, "p50 {}", s.p50);
     }
 
     #[test]

@@ -11,16 +11,18 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub std: f64,
 }
 
 impl Summary {
-    /// Compute a summary; `samples` need not be sorted.
+    /// Compute a summary; `samples` need not be sorted. NaN samples are
+    /// ordered last (total order) instead of panicking the sort.
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "empty sample");
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         let mean = s.iter().sum::<f64>() / n as f64;
         let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -31,6 +33,7 @@ impl Summary {
             max: s[n - 1],
             p50: percentile_sorted(&s, 0.50),
             p90: percentile_sorted(&s, 0.90),
+            p95: percentile_sorted(&s, 0.95),
             p99: percentile_sorted(&s, 0.99),
             std: var.sqrt(),
         }
@@ -39,17 +42,26 @@ impl Summary {
     /// One-line human-readable rendering (times in ms).
     pub fn render_ms(&self, label: &str) -> String {
         format!(
-            "{label:<32} n={:<6} p50={:>9.3}ms p90={:>9.3}ms p99={:>9.3}ms mean={:>9.3}ms",
+            "{label:<32} n={:<6} p50={:>9.3}ms p95={:>9.3}ms p99={:>9.3}ms mean={:>9.3}ms",
             self.n,
             self.p50 * 1e3,
-            self.p90 * 1e3,
+            self.p95 * 1e3,
             self.p99 * 1e3,
             self.mean * 1e3,
         )
     }
 }
 
-/// Linear-interpolated percentile of an ascending-sorted slice, q in [0,1].
+/// Rank-interpolated percentile of an ascending-sorted slice, q in [0,1].
+///
+/// Uses the Hyndman–Fan type-7 estimator (the R/NumPy default): the
+/// target rank is `q * (n - 1)` and the value is linearly interpolated
+/// between the two bracketing order statistics. Small-n behavior is
+/// defined, not special-cased:
+///   - n = 1: every percentile is the single sample;
+///   - n = 2: p50 is the midpoint, p95 sits at rank 0.95 (i.e.
+///     `0.05*lo + 0.95*hi`);
+///   - n = 3: p50 is the middle sample exactly.
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty());
     let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
@@ -66,8 +78,81 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 /// Percentile of an unsorted slice.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     percentile_sorted(&s, q)
+}
+
+/// Fixed-capacity uniform reservoir (Vitter's algorithm R).
+///
+/// Keeps at most `cap` of the observations pushed so far; below capacity
+/// the sample is exact (summaries match the full-sample `Summary`
+/// bit-for-bit), beyond it each observation survives with probability
+/// `cap / seen`. Replacement choices come from a deterministic [`Rng`]
+/// stream so runs are reproducible. This bounds `util::metrics` memory
+/// under sustained open-loop load.
+///
+/// [`Rng`]: crate::util::rng::Rng
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    buf: Vec<f64>,
+    seen: u64,
+    cap: usize,
+    rng: crate::util::rng::Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be > 0");
+        Reservoir {
+            buf: Vec::new(),
+            seen: 0,
+            cap,
+            rng: crate::util::rng::Rng::new(seed ^ 0x5eed_5a3_917),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            // Algorithm R: replace a random slot with prob cap/seen.
+            let j = self.rng.below(self.seen as usize);
+            if j < self.cap {
+                self.buf[j] = x;
+            }
+        }
+    }
+
+    /// Total observations pushed (not the held sample size).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Held sample size: `min(seen, cap)`.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The held sample (insertion order below capacity).
+    pub fn samples(&self) -> &[f64] {
+        &self.buf
+    }
+
+    /// Summary over the held sample, with `n` reporting the true
+    /// observation count (`seen`), not the reservoir size.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut s = Summary::of(&self.buf);
+        s.n = self.seen as usize;
+        Some(s)
+    }
 }
 
 /// A fixed-bin histogram for rendering latency distributions in reports
@@ -117,11 +202,86 @@ mod tests {
 
     #[test]
     fn percentiles_of_known_sequence() {
+        // Hand-computed type-7 references for 1..=100: rank = q*99, so
+        // p50 = 50.5, p95 = 95.05, p99 = 99.01.
         let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         assert!((percentile(&s, 0.5) - 50.5).abs() < 1e-9);
         assert!((percentile(&s, 0.0) - 1.0).abs() < 1e-9);
         assert!((percentile(&s, 1.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&s, 0.95) - 95.05).abs() < 1e-9);
         assert!((percentile(&s, 0.99) - 99.01).abs() < 1e-9);
+        let sum = Summary::of(&s);
+        assert!((sum.p50 - 50.5).abs() < 1e-9);
+        assert!((sum.p95 - 95.05).abs() < 1e-9);
+        assert!((sum.p99 - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_below_four_samples_are_defined() {
+        // n = 1: everything is the sample.
+        let one = Summary::of(&[3.0]);
+        assert_eq!((one.p50, one.p95, one.p99), (3.0, 3.0, 3.0));
+        // n = 2: rank q*(n-1) = q, interpolated between the two samples.
+        let two = Summary::of(&[10.0, 20.0]);
+        assert!((two.p50 - 15.0).abs() < 1e-9);
+        assert!((two.p95 - 19.5).abs() < 1e-9);
+        assert!((two.p99 - 19.9).abs() < 1e-9);
+        // n = 3: rank q*2 -> p50 is exactly the middle sample.
+        let three = Summary::of(&[1.0, 2.0, 4.0]);
+        assert!((three.p50 - 2.0).abs() < 1e-9);
+        assert!((three.p95 - (2.0 * 0.1 + 4.0 * 0.9)).abs() < 1e-9);
+        // Order independence.
+        let shuffled = Summary::of(&[4.0, 1.0, 2.0]);
+        assert_eq!(three, shuffled);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // total_cmp orders NaN last; min/p50 of the finite mass survive.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert!((s.p50 - 2.0).abs() < 1e-9);
+        assert!(s.max.is_nan());
+    }
+
+    #[test]
+    fn reservoir_exact_below_capacity() {
+        let mut r = Reservoir::new(128, 7);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.seen(), 100);
+        // Below capacity the reservoir holds every sample, so the summary
+        // equals the full-sample summary exactly.
+        assert_eq!(r.summary().unwrap(), Summary::of(&xs));
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_stays_representative() {
+        let cap = 256;
+        let mut r = Reservoir::new(cap, 3);
+        for i in 0..100_000 {
+            r.push((i % 1000) as f64);
+        }
+        assert_eq!(r.len(), cap);
+        assert_eq!(r.seen(), 100_000);
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 100_000);
+        // Uniform 0..1000 input: the sampled median must land near 500.
+        assert!((s.p50 - 500.0).abs() < 120.0, "p50 {}", s.p50);
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let mut a = Reservoir::new(64, 9);
+        let mut b = Reservoir::new(64, 9);
+        for i in 0..10_000 {
+            a.push(i as f64);
+            b.push(i as f64);
+        }
+        assert_eq!(a.samples(), b.samples());
     }
 
     #[test]

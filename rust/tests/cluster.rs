@@ -67,7 +67,7 @@ fn clustered_dispatch_is_bit_identical_to_flat() {
     let batch: Vec<BatchQuery> = queries
         .iter()
         .zip(&lists)
-        .map(|(q, l)| BatchQuery { query: q, lists: l })
+        .map(|(q, l)| BatchQuery { query: q, lists: l, trace_id: 0 })
         .collect();
     let want = flat.search_batch(&batch, &idx.pq.centroids, 8).unwrap();
     let got = clustered.search_batch(&batch, &idx.pq.centroids, 8).unwrap();

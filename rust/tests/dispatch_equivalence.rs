@@ -131,7 +131,7 @@ fn check_equivalence(n_nodes: usize, cases: usize, base_seed: u64) {
         let batch: Vec<BatchQuery> = queries
             .iter()
             .zip(&lists)
-            .map(|(q, l)| BatchQuery { query: q, lists: l })
+            .map(|(q, l)| BatchQuery { query: q, lists: l, trace_id: 0 })
             .collect();
         let got_batch =
             disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe).unwrap();
@@ -234,6 +234,7 @@ fn slot_lifecycle_never_leaks_or_cross_delivers() {
                     let batch = [BatchQuery {
                         query: &queries[slot],
                         lists: &lists[slot],
+                        trace_id: 0,
                     }];
                     disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe)
                         .unwrap();
@@ -289,7 +290,7 @@ fn parked_results_survive_other_slot_teardown() {
     for _ in 0..2 {
         let other = rng.normal_vec(u.d);
         let ol = u.idx.probe(&other, u.nprobe);
-        let batch = [BatchQuery { query: &other, lists: &ol }];
+        let batch = [BatchQuery { query: &other, lists: &ol, trace_id: 0 }];
         disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe).unwrap();
     }
     // Other slots tear down; slot 7's parked result is untouched.

@@ -294,7 +294,11 @@ fn networked_nodes_match_local_dispatcher() {
     let batch: Vec<chameleon::chamvs::dispatcher::BatchQuery> = queries
         .iter()
         .zip(&lists)
-        .map(|(q, l)| chameleon::chamvs::dispatcher::BatchQuery { query: q, lists: l })
+        .map(|(q, l)| chameleon::chamvs::dispatcher::BatchQuery {
+            query: q,
+            lists: l,
+            trace_id: 0,
+        })
         .collect();
     let rs = client.search_batch(&batch).unwrap();
     assert_eq!(rs.len(), 3);

@@ -68,7 +68,7 @@ fn steady_state_rounds_allocate_a_constant_bounded_amount() {
     let batch: Vec<BatchQuery> = queries
         .iter()
         .zip(&lists)
-        .map(|(q, l)| BatchQuery { query: q, lists: l })
+        .map(|(q, l)| BatchQuery { query: q, lists: l, trace_id: 0 })
         .collect();
 
     // Warmup: grows the LUT arena, distance tiles, selector pool and

@@ -133,7 +133,7 @@ fn check_pipeline(n_nodes: usize, cases: usize, base_seed: u64) {
             let batch: Vec<BatchQuery> = queries
                 .iter()
                 .zip(&lists)
-                .map(|(q, l)| BatchQuery { query: q, lists: l })
+                .map(|(q, l)| BatchQuery { query: q, lists: l, trace_id: 0 })
                 .collect();
             let got_batch =
                 disp.search_batch(&batch, &u.idx.pq.centroids, u.nprobe).unwrap();

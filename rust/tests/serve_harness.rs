@@ -1,0 +1,136 @@
+//! Integration tests for the open-loop load harness against a traced
+//! concurrent coordinator: the run must leave a trace carrying every
+//! core span kind, the per-trace critical-path stage sums must be
+//! consistent with the independently measured end-to-end latency (the
+//! coverage band), the server-side residency cannot exceed what the
+//! client measured, and the deterministic workload must replay exactly
+//! under the same seed.
+
+use std::time::Duration;
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::batcher::BatchPolicy;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{CoordinatorServer, ServeMode};
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::loadgen::{drive, schedule, Arrival, LoadgenConfig};
+use chameleon::trace::{analyze, SpanKind, Tracer};
+
+fn build_retriever(seed: u64) -> Retriever {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, 3000, 16, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 48, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..2)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 2), ScanEngine::Native, 10))
+        .collect();
+    let corpus = Corpus::generate(3000, 2048, config::CHUNK_LEN, seed ^ 2);
+    Retriever::new(ds, index, Dispatcher::new(nodes, 10), corpus)
+}
+
+#[test]
+fn open_loop_run_leaves_a_consistent_trace() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+    };
+    let tracer = Tracer::new(1 << 14);
+    let mut server = CoordinatorServer::spawn_traced(
+        || build_retriever(31),
+        ServeMode::Concurrent(policy),
+        tracer.clone(),
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    let qdata = SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        64,
+        16,
+        33,
+    );
+    let queries: Vec<Vec<f32>> =
+        (0..16).map(|i| qdata.query(i).to_vec()).collect();
+
+    // Modest offered load (well under capacity) so queueing stays tame
+    // and the client-side latency is dominated by server residency.
+    let cfg = LoadgenConfig {
+        qps: 150.0,
+        n_requests: 120,
+        n_unique: queries.len(),
+        seed: 5,
+        ..LoadgenConfig::default()
+    };
+    let sched = schedule(&cfg);
+    let deadline = Duration::from_secs_f64(sched.span_s() + 30.0);
+    let rep = drive(addr, &queries, 10, &sched, 3, deadline).unwrap();
+    server.shutdown();
+
+    assert_eq!(rep.sent, 120);
+    assert!(rep.received > 0, "no replies");
+    assert!(rep.interactive.is_some() && rep.batch.is_some(), "class mix missing");
+
+    let a = analyze(&tracer.snapshot());
+    assert!(a.n_traces > 0, "no traced queries");
+    for kind in [
+        SpanKind::QueueWait,
+        SpanKind::LutBuild,
+        SpanKind::NodeScan,
+        SpanKind::Merge,
+        SpanKind::ReplyWrite,
+        SpanKind::Total,
+    ] {
+        assert!(
+            a.kinds_present().contains(&kind),
+            "missing {} spans in: {}",
+            kind.name(),
+            a.render()
+        );
+    }
+
+    // Consistency: the per-trace critical-path stage sum must explain
+    // the measured e2e residency — neither a sliver (missing spans) nor
+    // wildly more than the whole (double-counted spans).
+    let cov = a.coverage.as_ref().expect("no coverage");
+    assert!(
+        cov.p50 > 0.2 && cov.p50 < 1.3,
+        "stage sums inconsistent with e2e totals: coverage p50 {:.2}\n{}",
+        cov.p50,
+        a.render()
+    );
+
+    // Server-side residency cannot exceed what the client measured from
+    // the scheduled arrival (generous slack for clock jitter).
+    let totals = a.totals.as_ref().expect("no totals");
+    assert!(
+        totals.p50 <= rep.latency.p50 * 1.5 + 0.02,
+        "server residency p50 {:.2} ms vs client p50 {:.2} ms",
+        totals.p50 * 1e3,
+        rep.latency.p50 * 1e3
+    );
+}
+
+#[test]
+fn same_seed_replays_the_identical_workload() {
+    let cfg = LoadgenConfig {
+        qps: 300.0,
+        n_requests: 500,
+        arrival: Arrival::Bursty { period_s: 0.1, duty: 0.3 },
+        zipf_alpha: 1.1,
+        n_unique: 32,
+        batch_fraction: 0.25,
+        seed: 99,
+    };
+    let a = schedule(&cfg);
+    let b = schedule(&cfg);
+    // Bit-identical replay: arrivals, query stream AND class stream.
+    assert_eq!(a, b);
+
+    let other = schedule(&LoadgenConfig { seed: 100, ..cfg.clone() });
+    assert_ne!(a.arrivals_s, other.arrivals_s);
+    assert_ne!(a.query_idx, other.query_idx);
+}
