@@ -14,6 +14,14 @@
 //! (recording is a few atomics per span; rust/tests/trace_alloc.rs pins
 //! the zero-allocation half of that claim).
 //!
+//! Third bar: the event loop must scale in connection count, not thread
+//! count. A sweep over 4 / 64 / 512 simultaneously-open pipelined
+//! connections (same total request volume) must hold q/s at 512 within
+//! 20% of the 4-connection figure, without growing the server's thread
+//! count (fixed poll pool — checked via /proc/self/status) or its
+//! resident memory unboundedly. The thread-per-connection mode runs the
+//! small points as the A/B baseline.
+//!
 //! Run: `cargo bench --bench coordinator_throughput`
 
 use std::time::{Duration, Instant};
@@ -87,6 +95,121 @@ fn run_traced(mode: ServeMode, per_client: usize, tracer: Tracer) -> (f64, u64, 
     );
     server.shutdown();
     out
+}
+
+/// Read an integer field from /proc/self/status (`Threads`, `VmRSS` in
+/// kB). Returns None off-Linux so the sweep's resource checks degrade to
+/// prints instead of failing.
+fn proc_status(field: &str) -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = text.lines().find(|l| l.starts_with(field))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Open `conns` simultaneous connections, then drive ~`total` requests
+/// through them from a bounded driver pool, pipelined in windows of 8.
+/// Returns (q/s, process thread count while all connections sat open).
+fn run_conn_point(addr: std::net::SocketAddr, conns: usize, total: usize) -> (f64, u64) {
+    let qdata = SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        64,
+        64,
+        9,
+    );
+    let per_conn = (total / conns).max(8);
+    let mut clients: Vec<CoordinatorClient> = (0..conns)
+        .map(|c| CoordinatorClient::connect(addr, c as u32).unwrap())
+        .collect();
+    // Every connection is open and registered right now: a
+    // thread-per-connection server would show `conns` extra threads here.
+    let threads_open = proc_status("Threads").unwrap_or(0);
+    const DRIVERS: usize = 32;
+    let chunk = conns.div_ceil(DRIVERS);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for group in clients.chunks_mut(chunk) {
+            let qdata = &qdata;
+            s.spawn(move || {
+                for client in group {
+                    let queries: Vec<&[f32]> = (0..per_conn)
+                        .map(|i| qdata.query(i % qdata.n_queries))
+                        .collect();
+                    for win in queries.chunks(8) {
+                        let got = client.retrieve_pipelined(win, K, false).unwrap();
+                        assert_eq!(got.len(), win.len());
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    ((conns * per_conn) as f64 / wall, threads_open)
+}
+
+/// The connection-count sweep: one event-loop server, 4 -> 512 open
+/// connections at fixed request volume; q/s must not fall off a cliff
+/// and server threads/memory must stay flat.
+fn conn_sweep(policy: BatchPolicy) {
+    chameleon::util::poll::raise_nofile(4096);
+    const TOTAL: usize = 4096;
+    let retriever = build_retriever(7);
+    let mut server =
+        CoordinatorServer::spawn(move || retriever, ServeMode::Concurrent(policy))
+            .unwrap();
+    let addr = server.addr;
+    let pool = chameleon::coordinator::QosConfig::default().poll_threads;
+    let threads_base = proc_status("Threads").unwrap_or(0);
+    let rss_base_kb = proc_status("VmRSS").unwrap_or(0);
+
+    println!("  conn sweep (event loop, {TOTAL} requests/point):");
+    let mut qps_at = Vec::new();
+    for &conns in &[4usize, 64, 512] {
+        let (qps, threads_open) = run_conn_point(addr, conns, TOTAL);
+        let rss_kb = proc_status("VmRSS").unwrap_or(0);
+        println!(
+            "    {conns:>4} conns : {qps:>8.0} q/s  (threads {threads_open}, rss {} MiB)",
+            rss_kb / 1024
+        );
+        if threads_base > 0 {
+            // Driver threads haven't started at sample time; the only
+            // growth allowed is scheduler jitter, never one-per-conn.
+            assert!(
+                threads_open <= threads_base + 2,
+                "server grew threads with connection count: {threads_open} vs \
+                 base {threads_base} at {conns} conns (pool={pool})"
+            );
+        }
+        if rss_base_kb > 0 {
+            assert!(
+                rss_kb <= rss_base_kb + 1024 * 1024,
+                "resident set grew unboundedly: {rss_kb} kB vs base {rss_base_kb} kB"
+            );
+        }
+        qps_at.push((conns, qps));
+    }
+    server.shutdown();
+    let q4 = qps_at[0].1;
+    let q512 = qps_at[2].1;
+    println!("    512-conn retention: {:.2}x of 4-conn (bar: >= 0.8x)", q512 / q4);
+    assert!(
+        q512 >= 0.8 * q4,
+        "event loop q/s fell off with connections: {q512:.0} q/s at 512 conns \
+         vs {q4:.0} q/s at 4 (bar: within 20%)"
+    );
+
+    // A/B: the retained thread-per-connection mode at the small points.
+    let retriever = build_retriever(7);
+    let mut ab =
+        CoordinatorServer::spawn(move || retriever, ServeMode::Threaded(policy))
+            .unwrap();
+    for &conns in &[4usize, 64] {
+        let (qps, threads_open) = run_conn_point(ab.addr, conns, TOTAL);
+        println!(
+            "    {conns:>4} conns : {qps:>8.0} q/s  (threaded A/B baseline, \
+             threads {threads_open})"
+        );
+    }
+    ab.shutdown();
 }
 
 fn main() {
@@ -167,5 +290,7 @@ fn main() {
         "tracing overhead too high: traced {traced:.0} q/s vs untraced \
          {untraced:.0} q/s ({ratio:.3}x < 0.95x)"
     );
+
+    conn_sweep(policy);
     println!("coordinator_throughput OK");
 }

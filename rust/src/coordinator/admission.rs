@@ -1,0 +1,349 @@
+//! Tenant-aware admission control for the coordinator front door.
+//!
+//! Every request names a tenant (its `gpu_id`); tenants map onto two
+//! scheduling classes reusing the load generator's convention —
+//! interactive clients use small gpu ids, batch clients offset theirs by
+//! [`BATCH_TENANT_BASE`]. Admission enforces, per tenant, a bounded
+//! in-server queue and an optional token-bucket rate, and tells the
+//! server exactly what to put in the `Backpressure` frame when it sheds.
+//! Accepted requests are charged to the tenant until the dispatch loop
+//! drains them ([`Admission::release`]), so the bound covers queued and
+//! in-flight work, not just the batcher's queue.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Tenant ids at or above this are batch-class (the `loadgen` convention:
+/// interactive connection c sends gpu_id = c, batch sends 1000 + c).
+pub const BATCH_TENANT_BASE: u32 = 1000;
+
+/// Scheduling class of a tenant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosClass {
+    /// Latency-sensitive: drains ahead of batch in every round.
+    Interactive,
+    /// Throughput-oriented: fills leftover batch slots, shed first.
+    Batch,
+}
+
+impl QosClass {
+    /// Class of a tenant id (the request's `gpu_id`).
+    pub fn of_gpu(gpu_id: u32) -> QosClass {
+        if gpu_id >= BATCH_TENANT_BASE {
+            QosClass::Batch
+        } else {
+            QosClass::Interactive
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+}
+
+/// Why a request was shed (the `Backpressure.reason` wire code).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The tenant's bounded queue is full.
+    QueueFull,
+    /// The tenant's token bucket is empty.
+    RateLimited,
+}
+
+impl ShedReason {
+    pub fn code(self) -> u32 {
+        match self {
+            ShedReason::QueueFull => 1,
+            ShedReason::RateLimited => 2,
+        }
+    }
+}
+
+/// One shed decision: everything the server needs to fill a
+/// `Backpressure` frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Shed {
+    pub reason: ShedReason,
+    /// Tenant queue depth at decision time.
+    pub queue_depth: u32,
+    /// Suggested client backoff before retrying, in microseconds.
+    pub retry_after_us: u64,
+}
+
+/// Per-class admission knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantPolicy {
+    /// Max requests a tenant may have queued + in flight; beyond this the
+    /// server sheds with `QueueFull` instead of growing unboundedly.
+    pub queue_cap: usize,
+    /// Sustained admit rate in requests/s; <= 0 disables rate limiting.
+    pub rate_qps: f64,
+    /// Token-bucket burst size (floored at 1 when rate limiting is on).
+    pub burst: f64,
+}
+
+impl TenantPolicy {
+    pub fn unlimited_rate(queue_cap: usize) -> TenantPolicy {
+        TenantPolicy { queue_cap, rate_qps: 0.0, burst: 0.0 }
+    }
+}
+
+/// Front-door QoS configuration: per-class tenant policies plus the
+/// event-loop shape knobs that ride along with them.
+#[derive(Clone, Copy, Debug)]
+pub struct QosConfig {
+    pub interactive: TenantPolicy,
+    pub batch: TenantPolicy,
+    /// Poll threads in the concurrent server's fixed pool.
+    pub poll_threads: usize,
+    /// When true (the default) only the server's first accepted
+    /// connection may issue `Shutdown`; other tenants' shutdown frames
+    /// are counted and ignored.
+    pub admin_shutdown_only: bool,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        // Defaults are deliberately generous: existing single-tenant
+        // tests and benches must never shed. Isolation tests tighten the
+        // batch policy explicitly.
+        QosConfig {
+            interactive: TenantPolicy::unlimited_rate(4096),
+            batch: TenantPolicy::unlimited_rate(1024),
+            poll_threads: 2,
+            admin_shutdown_only: true,
+        }
+    }
+}
+
+impl QosConfig {
+    pub fn policy(&self, class: QosClass) -> TenantPolicy {
+        match class {
+            QosClass::Interactive => self.interactive,
+            QosClass::Batch => self.batch,
+        }
+    }
+}
+
+/// Token bucket refilled continuously at `rate` tokens/s up to `burst`.
+#[derive(Clone, Copy, Debug)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Option<Instant>,
+}
+
+impl TokenBucket {
+    pub fn new(rate_qps: f64, burst: f64) -> TokenBucket {
+        let burst = burst.max(1.0);
+        TokenBucket { rate: rate_qps, burst, tokens: burst, last: None }
+    }
+
+    /// Take one token at `now`; a bucket with rate <= 0 always grants.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let dt = self
+            .last
+            .map(|t| now.saturating_duration_since(t).as_secs_f64())
+            .unwrap_or(0.0);
+        self.last = Some(now);
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Microseconds until the next whole token exists (retry hint).
+    pub fn micros_to_token(&self) -> u64 {
+        if self.rate <= 0.0 || self.tokens >= 1.0 {
+            return 0;
+        }
+        ((1.0 - self.tokens) / self.rate * 1e6).ceil() as u64
+    }
+}
+
+struct TenantState {
+    queued: usize,
+    bucket: TokenBucket,
+}
+
+/// Admission state over all tenants seen so far.
+pub struct Admission {
+    cfg: QosConfig,
+    tenants: HashMap<u32, TenantState>,
+    shed: u64,
+}
+
+impl Admission {
+    pub fn new(cfg: QosConfig) -> Admission {
+        Admission { cfg, tenants: HashMap::new(), shed: 0 }
+    }
+
+    pub fn config(&self) -> &QosConfig {
+        &self.cfg
+    }
+
+    /// Total requests shed so far (both reasons, all tenants).
+    pub fn shed_count(&self) -> u64 {
+        self.shed
+    }
+
+    /// Requests currently charged to `tenant` (queued or in flight).
+    pub fn queued(&self, tenant: u32) -> usize {
+        self.tenants.get(&tenant).map(|t| t.queued).unwrap_or(0)
+    }
+
+    /// Try to admit one request from `tenant`. Success charges the
+    /// request to the tenant until [`release`](Self::release); failure
+    /// returns the shed verdict for the `Backpressure` reply.
+    pub fn admit(&mut self, tenant: u32, now: Instant) -> Result<(), Shed> {
+        let pol = self.cfg.policy(QosClass::of_gpu(tenant));
+        let st = self.tenants.entry(tenant).or_insert_with(|| TenantState {
+            queued: 0,
+            bucket: TokenBucket::new(pol.rate_qps, pol.burst),
+        });
+        if st.queued >= pol.queue_cap {
+            self.shed += 1;
+            return Err(Shed {
+                reason: ShedReason::QueueFull,
+                queue_depth: st.queued as u32,
+                // One queue's worth of service time is unknowable here;
+                // suggest a short fixed backoff — clients treat it as a
+                // hint, not a contract.
+                retry_after_us: 2_000,
+            });
+        }
+        if !st.bucket.try_take(now) {
+            self.shed += 1;
+            return Err(Shed {
+                reason: ShedReason::RateLimited,
+                queue_depth: st.queued as u32,
+                retry_after_us: st.bucket.micros_to_token().max(100),
+            });
+        }
+        st.queued += 1;
+        Ok(())
+    }
+
+    /// A previously admitted request left the server (served or its
+    /// connection died before serving).
+    pub fn release(&mut self, tenant: u32) {
+        if let Some(st) = self.tenants.get_mut(&tenant) {
+            st.queued = st.queued.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn class_follows_the_loadgen_tenant_convention() {
+        assert_eq!(QosClass::of_gpu(0), QosClass::Interactive);
+        assert_eq!(QosClass::of_gpu(999), QosClass::Interactive);
+        assert_eq!(QosClass::of_gpu(1000), QosClass::Batch);
+        assert_eq!(QosClass::of_gpu(1003), QosClass::Batch);
+    }
+
+    #[test]
+    fn queue_cap_shed_and_release_cycle() {
+        let cfg = QosConfig {
+            batch: TenantPolicy::unlimited_rate(2),
+            ..QosConfig::default()
+        };
+        let mut a = Admission::new(cfg);
+        let now = Instant::now();
+        assert!(a.admit(1000, now).is_ok());
+        assert!(a.admit(1000, now).is_ok());
+        let shed = a.admit(1000, now).unwrap_err();
+        assert_eq!(shed.reason, ShedReason::QueueFull);
+        assert_eq!(shed.queue_depth, 2);
+        assert!(shed.retry_after_us > 0);
+        assert_eq!(a.queued(1000), 2);
+        assert_eq!(a.shed_count(), 1);
+
+        // Draining one admits the next; release never underflows.
+        a.release(1000);
+        assert!(a.admit(1000, now).is_ok());
+        for _ in 0..5 {
+            a.release(1000);
+        }
+        assert_eq!(a.queued(1000), 0);
+        a.release(42); // unknown tenant is a no-op
+    }
+
+    #[test]
+    fn tenants_are_isolated_from_each_other() {
+        let cfg = QosConfig {
+            batch: TenantPolicy::unlimited_rate(1),
+            ..QosConfig::default()
+        };
+        let mut a = Admission::new(cfg);
+        let now = Instant::now();
+        assert!(a.admit(1000, now).is_ok());
+        assert!(a.admit(1000, now).is_err(), "flooder at its cap");
+        // A different batch tenant and an interactive tenant still admit.
+        assert!(a.admit(1001, now).is_ok());
+        assert!(a.admit(0, now).is_ok());
+        assert_eq!(a.queued(1000), 1);
+        assert_eq!(a.queued(1001), 1);
+    }
+
+    #[test]
+    fn token_bucket_refills_at_the_configured_rate() {
+        let mut b = TokenBucket::new(10.0, 2.0);
+        let t0 = Instant::now();
+        // Burst of 2, then dry.
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0));
+        let hint = b.micros_to_token();
+        assert!(hint > 0 && hint <= 100_000, "hint {hint}us at 10 qps");
+        // 100 ms at 10 tokens/s buys exactly one more.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.try_take(t1));
+        assert!(!b.try_take(t1));
+    }
+
+    #[test]
+    fn default_config_never_sheds_a_modest_workload() {
+        let mut a = Admission::new(QosConfig::default());
+        let now = Instant::now();
+        for _ in 0..1000 {
+            assert!(a.admit(0, now).is_ok());
+            assert!(a.admit(1000, now).is_ok());
+            a.release(0);
+            a.release(1000);
+        }
+        assert_eq!(a.shed_count(), 0);
+    }
+
+    #[test]
+    fn rate_limit_sheds_with_a_retry_hint() {
+        let cfg = QosConfig {
+            batch: TenantPolicy { queue_cap: 100, rate_qps: 5.0, burst: 1.0 },
+            ..QosConfig::default()
+        };
+        let mut a = Admission::new(cfg);
+        let now = Instant::now();
+        assert!(a.admit(1000, now).is_ok());
+        let shed = a.admit(1000, now).unwrap_err();
+        assert_eq!(shed.reason, ShedReason::RateLimited);
+        assert!(shed.retry_after_us >= 100);
+        // Interactive stays unlimited under the same config.
+        for _ in 0..50 {
+            assert!(a.admit(7, now).is_ok());
+        }
+    }
+}

@@ -2,7 +2,10 @@
 //! arriving from GPU processes before broadcasting to the memory nodes
 //! (paper Sec 3; batching behaviour drives the Fig 9/12 batch sweeps).
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+use crate::coordinator::admission::QosClass;
 
 /// A pending request tagged with its source (paper: "records the
 /// association between queries and GPU IDs").
@@ -29,18 +32,27 @@ impl Default for BatchPolicy {
 }
 
 /// A dynamic batcher accumulating requests until the policy fires.
+///
+/// The queue is a `VecDeque`: every dispatch round pops from the front,
+/// and a `Vec` would shift the whole backlog left on each round — O(n)
+/// per round, quadratic over a deep backlog (admission control bounds
+/// the depth, but the head-drain must stay O(batch) regardless).
 pub struct DynamicBatcher<T> {
     pub policy: BatchPolicy,
-    queue: Vec<Pending<T>>,
+    queue: VecDeque<Pending<T>>,
 }
 
 impl<T> DynamicBatcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
-        DynamicBatcher { policy, queue: Vec::new() }
+        DynamicBatcher { policy, queue: VecDeque::new() }
     }
 
     pub fn push(&mut self, source_gpu: usize, payload: T) {
-        self.queue.push(Pending { source_gpu, payload, arrived: Instant::now() });
+        self.queue.push_back(Pending {
+            source_gpu,
+            payload,
+            arrived: Instant::now(),
+        });
     }
 
     pub fn len(&self) -> usize {
@@ -57,7 +69,7 @@ impl<T> DynamicBatcher<T> {
             return true;
         }
         self.queue
-            .first()
+            .front()
             .map(|p| now.duration_since(p.arrived) >= self.policy.max_wait)
             .unwrap_or(false)
     }
@@ -66,15 +78,20 @@ impl<T> DynamicBatcher<T> {
     /// already overdue, `None` when the queue is empty) — the condvar
     /// timeout of the coordinator's dispatch loop.
     pub fn time_to_ready(&self, now: Instant) -> Option<Duration> {
-        self.queue.first().map(|p| {
+        self.queue.front().map(|p| {
             self.policy.max_wait.saturating_sub(now.duration_since(p.arrived))
         })
     }
 
+    /// Take up to `n` requests from the head (FIFO).
+    pub fn take_n(&mut self, n: usize) -> Vec<Pending<T>> {
+        let n = self.queue.len().min(n);
+        self.queue.drain(..n).collect()
+    }
+
     /// Take up to `max_batch` requests (FIFO).
     pub fn take_batch(&mut self) -> Vec<Pending<T>> {
-        let n = self.queue.len().min(self.policy.max_batch);
-        self.queue.drain(..n).collect()
+        self.take_n(self.policy.max_batch)
     }
 
     /// Take one dispatch round and group it by source GPU, preserving
@@ -90,6 +107,82 @@ impl<T> DynamicBatcher<T> {
             }
         }
         groups
+    }
+}
+
+/// Two-lane priority batcher: interactive requests ride a separate queue
+/// that drains ahead of the batch class in every dispatch round, with
+/// batch-class requests filling whatever slots remain up to `max_batch`.
+/// Each lane keeps FIFO order, so a flooding batch tenant can delay an
+/// interactive request by at most one in-flight round — the scheduling
+/// half of tenant isolation (admission bounds the queue depths).
+pub struct ClassedBatcher<T> {
+    interactive: DynamicBatcher<T>,
+    batch: DynamicBatcher<T>,
+}
+
+impl<T> ClassedBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        ClassedBatcher {
+            interactive: DynamicBatcher::new(policy),
+            batch: DynamicBatcher::new(policy),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.interactive.policy
+    }
+
+    pub fn push(&mut self, class: QosClass, source_gpu: usize, payload: T) {
+        match class {
+            QosClass::Interactive => self.interactive.push(source_gpu, payload),
+            QosClass::Batch => self.batch.push(source_gpu, payload),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.interactive.is_empty() && self.batch.is_empty()
+    }
+
+    /// Queued requests in the given lane (observability / shed hints).
+    pub fn lane_len(&self, class: QosClass) -> usize {
+        match class {
+            QosClass::Interactive => self.interactive.len(),
+            QosClass::Batch => self.batch.len(),
+        }
+    }
+
+    /// Dispatch now when either lane's policy fires, or when the lanes
+    /// together already fill a round.
+    pub fn ready(&self, now: Instant) -> bool {
+        self.interactive.ready(now)
+            || self.batch.ready(now)
+            || self.len() >= self.policy().max_batch
+    }
+
+    /// Condvar timeout for the dispatch loop: the nearer of the two
+    /// lanes' deadlines.
+    pub fn time_to_ready(&self, now: Instant) -> Option<Duration> {
+        match (self.interactive.time_to_ready(now), self.batch.time_to_ready(now))
+        {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, b) => b,
+        }
+    }
+
+    /// Take one round: the interactive lane drains first (FIFO), then
+    /// batch-class requests fill the remaining slots (FIFO).
+    pub fn take_batch(&mut self) -> Vec<Pending<T>> {
+        let cap = self.policy().max_batch;
+        let mut out = self.interactive.take_n(cap);
+        let mut fill = self.batch.take_n(cap - out.len());
+        out.append(&mut fill);
+        out
     }
 }
 
@@ -255,5 +348,98 @@ mod tests {
         let later = now + Duration::from_millis(500);
         assert_eq!(b.time_to_ready(later), Some(Duration::ZERO));
         assert!(b.ready(later));
+    }
+
+    #[test]
+    fn deep_backlog_drains_fifo_in_batch_rounds() {
+        // The head-drain regression pin: a deep backlog must come out in
+        // exact FIFO order, full rounds at a time, and grouped rounds must
+        // behave identically to before the VecDeque switch.
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_secs(1),
+        });
+        let n = 10_000;
+        for i in 0..n {
+            b.push(i % 3, i);
+        }
+        let mut seen = Vec::with_capacity(n);
+        while !b.is_empty() {
+            let round = b.take_batch();
+            assert!(round.len() <= 16);
+            assert!(round.len() == 16 || b.is_empty());
+            seen.extend(round.iter().map(|p| p.payload));
+        }
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+
+        // Same backlog through the grouped take: round contents unchanged
+        // (one round = the next 16 in FIFO order, split by source, order
+        // preserved within each source group).
+        for i in 0..48 {
+            b.push(i % 3, i);
+        }
+        let groups = b.take_batch_grouped();
+        let mut flat: Vec<usize> = Vec::new();
+        for (src, g) in &groups {
+            for p in g {
+                assert_eq!(p.source_gpu, *src);
+                flat.push(p.payload);
+            }
+        }
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<_>>(), "round = FIFO head");
+        for (_, g) in &groups {
+            for w in g.windows(2) {
+                assert!(w[0].payload < w[1].payload, "within-source FIFO");
+            }
+        }
+        assert_eq!(b.len(), 32);
+    }
+
+    #[test]
+    fn classed_batcher_serves_interactive_first() {
+        let mut b = ClassedBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(1),
+        });
+        // A batch-class flood ahead of two interactive arrivals.
+        for i in 0..10 {
+            b.push(QosClass::Batch, 1000, i);
+        }
+        b.push(QosClass::Interactive, 0, 100);
+        b.push(QosClass::Interactive, 0, 101);
+        assert_eq!(b.len(), 12);
+        assert_eq!(b.lane_len(QosClass::Interactive), 2);
+        assert!(b.ready(Instant::now()), "combined depth fills a round");
+
+        // Round 1: interactive head-of-line, batch fills the remainder.
+        let round: Vec<usize> =
+            b.take_batch().iter().map(|p| p.payload).collect();
+        assert_eq!(round, vec![100, 101, 0, 1]);
+        // Subsequent rounds drain the batch lane FIFO.
+        let round: Vec<usize> =
+            b.take_batch().iter().map(|p| p.payload).collect();
+        assert_eq!(round, vec![2, 3, 4, 5]);
+        assert_eq!(b.lane_len(QosClass::Batch), 4);
+    }
+
+    #[test]
+    fn classed_batcher_deadline_is_the_nearer_lane() {
+        let mut b = ClassedBatcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(50),
+        });
+        assert_eq!(b.time_to_ready(Instant::now()), None);
+        assert!(!b.ready(Instant::now()));
+        b.push(QosClass::Batch, 1000, 1u32);
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(QosClass::Interactive, 0, 2u32);
+        let now = Instant::now();
+        // The batch request arrived first, so its deadline is nearer.
+        let left = b.time_to_ready(now).unwrap();
+        assert!(left <= Duration::from_millis(50));
+        let later = now + Duration::from_millis(500);
+        assert!(b.ready(later), "overdue lane fires the round");
     }
 }

@@ -3,13 +3,15 @@
 //! vector IDs into tokens, batches requests across client connections,
 //! and hosts the end-to-end RALM engine used by the examples and benches.
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
 pub mod ratio;
 pub mod retriever;
 pub mod server;
 
-pub use batcher::{BatchPolicy, DynamicBatcher, PrefetchTracker};
+pub use admission::{Admission, QosClass, QosConfig, ShedReason, TenantPolicy};
+pub use batcher::{BatchPolicy, ClassedBatcher, DynamicBatcher, PrefetchTracker};
 pub use engine::RalmEngine;
 pub use retriever::{CachedRetrieval, RetrievalResult, Retriever};
-pub use server::{CoordinatorClient, CoordinatorServer, ServeMode, ServerStats};
+pub use server::{CoordinatorClient, CoordinatorServer, Reply, ServeMode, ServerStats};

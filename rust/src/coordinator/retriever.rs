@@ -14,7 +14,7 @@ use crate::hwmodel::gpu::GpuModel;
 use crate::ivf::index::IvfPqIndex;
 use crate::retcache::{
     charged_latency, CacheConfig, CachedEntry, RetrievalCache, RetrievalSource,
-    RetrievalStats, SpecConfig, SpecSlots, SpecVerdict,
+    RetrievalStats, SlicedCache, SpecConfig, SpecSlots, SpecVerdict,
 };
 use crate::trace::{SpanKind, Tracer};
 use crate::util::metrics::Metrics;
@@ -53,6 +53,11 @@ pub struct Retriever {
     pub paper_scale: bool,
     /// Retrieval cache (None = seed synchronous behaviour).
     pub cache: Option<RetrievalCache>,
+    /// Per-tenant slices of one retrieval-cache byte budget; requests
+    /// carrying a tenant id (`retrieve_cached_tenant_traced`) use their
+    /// tenant's slice instead of the shared `cache`, so one tenant's
+    /// working set can't evict another's.
+    pub tenant_cache: Option<SlicedCache>,
     /// Per-GPU speculative prefetch lanes (None = no speculation). Each
     /// request source (GPU id) owns an independent slot; see
     /// [`retrieve_cached_from`](Self::retrieve_cached_from).
@@ -76,6 +81,7 @@ impl Retriever {
             gpu: GpuModel::default(),
             paper_scale: true,
             cache: None,
+            tenant_cache: None,
             spec: None,
             rstats: RetrievalStats::default(),
         }
@@ -85,6 +91,16 @@ impl Retriever {
     /// cache.
     pub fn enable_cache(&mut self, cfg: CacheConfig) {
         self.cache = Some(RetrievalCache::new(cfg));
+    }
+
+    /// Enable per-tenant slicing of the retrieval-cache byte budget:
+    /// `cfg.capacity_bytes` is the *total*, re-divided evenly as tenants
+    /// appear. Requests carrying a tenant id
+    /// ([`retrieve_cached_tenant_traced`](Self::retrieve_cached_tenant_traced))
+    /// then probe/refill their own slice; tenant-less requests keep using
+    /// the shared cache, if any.
+    pub fn enable_tenant_cache(&mut self, cfg: CacheConfig) {
+        self.tenant_cache = Some(SlicedCache::new(cfg));
     }
 
     /// Enable (or reconfigure) speculative prefetching.
@@ -128,7 +144,7 @@ impl Retriever {
     /// Whether [`retrieve_cached`](Self::retrieve_cached) does anything
     /// beyond plain [`retrieve`](Self::retrieve).
     pub fn retcache_enabled(&self) -> bool {
-        self.cache.is_some() || self.spec.is_some()
+        self.cache.is_some() || self.tenant_cache.is_some() || self.spec.is_some()
     }
 
     /// Reset the retcache counters (benches reuse one retriever).
@@ -340,10 +356,27 @@ impl Retriever {
         query: &[f32],
         trace_id: u64,
     ) -> Result<CachedRetrieval> {
+        self.retrieve_cached_tenant_traced(slot, None, query, trace_id)
+    }
+
+    /// [`retrieve_cached_from_traced`](Self::retrieve_cached_from_traced)
+    /// on behalf of a tenant: when tenant cache slicing is enabled, the
+    /// probe and refill go through `tenant`'s slice of the shared byte
+    /// budget instead of the global cache. `None` (or slicing disabled)
+    /// falls back to the shared cache, preserving the old behaviour.
+    pub fn retrieve_cached_tenant_traced(
+        &mut self,
+        slot: usize,
+        tenant: Option<u32>,
+        query: &[f32],
+        trace_id: u64,
+    ) -> Result<CachedRetrieval> {
         let t0 = Instant::now();
         // 1) Retrieval cache.
         let mut hit: Option<RetrievalResult> = None;
-        if let Some(cache) = self.cache.as_mut() {
+        if let Some(cache) =
+            active_cache(&mut self.cache, &mut self.tenant_cache, tenant)
+        {
             let t_probe = Instant::now();
             let entry = cache.get(query);
             if trace_id != 0 {
@@ -410,7 +443,9 @@ impl Retriever {
             }
         };
         // 3) Refill the cache with the fresh result.
-        if let Some(cache) = self.cache.as_mut() {
+        if let Some(cache) =
+            active_cache(&mut self.cache, &mut self.tenant_cache, tenant)
+        {
             cache.insert(
                 query,
                 CachedEntry {
@@ -451,6 +486,22 @@ impl Retriever {
     /// Convert neighbor ids to concatenated chunks (EncDec payload).
     pub fn gather_chunks(&self, ids: &[u64]) -> Vec<u32> {
         self.corpus.gather_chunks(ids)
+    }
+}
+
+/// The cache a request probes/refills: the tenant's slice when slicing is
+/// on and the request names a tenant, else the shared cache. A free
+/// function over the two fields (not a method) so the returned borrow
+/// stays disjoint from `self.dispatcher` — the traced probe records spans
+/// while the cache borrow is live.
+fn active_cache<'a>(
+    shared: &'a mut Option<RetrievalCache>,
+    sliced: &'a mut Option<SlicedCache>,
+    tenant: Option<u32>,
+) -> Option<&'a mut RetrievalCache> {
+    match (tenant, sliced.as_mut()) {
+        (Some(t), Some(s)) => Some(s.slice_mut(t)),
+        _ => shared.as_mut(),
     }
 }
 
@@ -581,6 +632,62 @@ mod tests {
         r.retrieve_cached(q).unwrap(); // cache hit on q
         assert!(r.spec.as_ref().unwrap().predicts(0, q), "prediction refreshed");
         assert_eq!(r.dispatcher.in_flight(), 1);
+    }
+
+    #[test]
+    fn tenant_sliced_cache_isolates_and_matches_uncached() {
+        use crate::retcache::{CacheConfig, KeyPolicy, RetrievalSource};
+        let mut r = toy_retriever(2);
+        let ds = SyntheticDataset::generate_sized(&SIFT, 10, 16, 9);
+        let q0 = ds.query(0);
+        let want = r.retrieve(q0).unwrap();
+
+        // Entries are 696 bytes here (d=128 exact key 512 + ids 80 +
+        // dists 40 + overhead 64); the total budget holds ~5, re-divided
+        // across tenants as they appear (2 entries per tenant at two).
+        r.enable_tenant_cache(CacheConfig {
+            capacity_bytes: 4096,
+            key: KeyPolicy::Exact,
+            ..CacheConfig::default()
+        });
+        assert!(r.retcache_enabled());
+
+        // Tenant 0: miss then hit, bit-identical to the uncached path.
+        let a = r.retrieve_cached_tenant_traced(0, Some(0), q0, 0).unwrap();
+        assert_eq!(a.source, RetrievalSource::Miss);
+        assert_eq!(a.result.ids, want.ids);
+        let b = r.retrieve_cached_tenant_traced(0, Some(0), q0, 0).unwrap();
+        assert_eq!(b.source, RetrievalSource::CacheHit);
+        assert_eq!(b.result.ids, want.ids);
+        assert_eq!(b.result.dists, want.dists);
+
+        // A flooding batch tenant churns through its own slice only: the
+        // interactive tenant's entry still hits afterwards.
+        for round in 0..3 {
+            for i in 1..10 {
+                let cr = r
+                    .retrieve_cached_tenant_traced(1, Some(1000), ds.query(i), 0)
+                    .unwrap();
+                if round == 0 && i == 1 {
+                    assert_eq!(cr.source, RetrievalSource::Miss);
+                }
+            }
+        }
+        let tc = r.tenant_cache.as_ref().unwrap();
+        assert_eq!(tc.n_tenants(), 2);
+        assert!(tc.bytes() <= tc.total_capacity());
+        let c = r.retrieve_cached_tenant_traced(0, Some(0), q0, 0).unwrap();
+        assert_eq!(
+            c.source,
+            RetrievalSource::CacheHit,
+            "flood must not evict the other tenant's entry"
+        );
+
+        // Tenant-less requests fall back to the shared cache (none here),
+        // so they miss but still serve correctly.
+        let d = r.retrieve_cached_from(0, q0).unwrap();
+        assert_eq!(d.source, RetrievalSource::Miss);
+        assert_eq!(d.result.ids, want.ids);
     }
 
     #[test]

@@ -3,24 +3,37 @@
 //! k-way-merges results, converts vector ids to tokens, and replies
 //! (paper Sec 3, workflow steps 3-9 — the "CPU coordinator server").
 //!
-//! Two serving modes ([`ServeMode`]):
+//! Three serving modes ([`ServeMode`]):
 //!
-//! * **Concurrent** (the default) — the event loop that makes the
-//!   coordinator an actual multi-client server: one reader thread per
-//!   connection decodes [`RetrieveRequest`]s into a shared
-//!   [`DynamicBatcher`]; a single dispatch loop (which owns the
-//!   [`Retriever`]) drains cross-connection batches when the
-//!   [`BatchPolicy`] fires, runs them through
-//!   [`Retriever::retrieve_many`] (one parallel round through the memory
-//!   nodes — and one network round trip per remote node), and routes each
+//! * **Concurrent** (the default) — a nonblocking event loop: a small
+//!   fixed pool of poll threads watches all connections with readiness
+//!   polling ([`crate::util::poll`]); each connection owns a
+//!   [`FrameReader`] that decodes frames *incrementally*, buffering
+//!   partial header/payload bytes across readiness events, so a slow or
+//!   dribbling client can never desync the stream. Decoded
+//!   [`RetrieveRequest`]s pass tenant-aware admission control
+//!   ([`Admission`]: per-tenant bounded queues + token buckets; sheds
+//!   reply with an explicit [`Backpressure`] frame) and land in a
+//!   two-lane [`ClassedBatcher`] (interactive drains ahead of batch). A
+//!   single dispatch loop (which owns the [`Retriever`]) drains
+//!   cross-connection batches when the [`BatchPolicy`] fires, runs them
+//!   through one parallel round to the memory nodes, and routes each
 //!   reply back to its owning connection by request id. A connection's
-//!   replies keep FIFO order, so clients may pipeline. When a connection
-//!   closes, exactly the speculation slots its GPU sources touched are
-//!   cancelled (per-connection teardown, as in the sequential server).
+//!   *retrieval replies* keep FIFO order, so clients may pipeline;
+//!   `Backpressure` replies are written at admission time and may
+//!   interleave (match by `query_id`). Thread count is fixed — accept +
+//!   poll pool + dispatch — regardless of how many clients connect.
+//! * **Threaded** — the previous concurrent server: one blocking reader
+//!   thread per connection feeding the same batcher. Kept for A/B
+//!   measurement of the event loop (`benches/coordinator_throughput.rs`).
 //! * **Sequential** — the pre-batching baseline: one connection served to
-//!   completion at a time on the accept thread. Kept for A/B measurement
-//!   (`benches/coordinator_throughput.rs`, `chameleon serve --net
+//!   completion at a time on the accept thread (`chameleon serve --net
 //!   --sequential`).
+//!
+//! `Shutdown` frames are accepted only from the server's first connection
+//! by default ([`QosConfig::admin_shutdown_only`]) — any other tenant's
+//! shutdown is counted ([`ServerStats::shutdown_denied`]) and ignored, so
+//! one misbehaving client cannot kill everyone else's server.
 //!
 //! When the retriever dispatches over a replicated cluster (see
 //! [`crate::cluster`]), `ClusterUpdate` frames drive live membership
@@ -29,7 +42,7 @@
 //! admin connection receives a `ClusterAck` with the new epoch.
 
 use std::collections::HashMap;
-use std::io::BufReader;
+use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -38,18 +51,29 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cluster::engine::ClusterNode;
-use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Pending, PrefetchTracker};
+use crate::coordinator::admission::{Admission, QosClass, QosConfig};
+use crate::coordinator::batcher::{BatchPolicy, ClassedBatcher, Pending, PrefetchTracker};
 use crate::coordinator::retriever::{RetrievalResult, Retriever};
 use crate::net::client::RemoteNode;
 use crate::net::protocol::{
-    ClusterAck, ClusterOp, ClusterUpdate, Frame, Kind, RetrieveRequest, RetrieveResponse,
+    Backpressure, ClusterAck, ClusterOp, ClusterUpdate, Frame, FrameReader, Kind,
+    ReadProgress, RetrieveRequest, RetrieveResponse,
 };
 use crate::retcache::RetrievalSource;
 use crate::trace::{SpanKind, Tracer};
 use crate::util::metrics::Metrics;
+use crate::util::poll::{raw_fd, wait_readable, wait_writable};
 
 /// How idle loops poll their stop flags.
 const POLL: Duration = Duration::from_millis(25);
+
+/// Readiness-wait granularity of the event loop's poll threads (also how
+/// fast they notice the stop flag and adopt new connections).
+const EVENT_POLL: Duration = Duration::from_millis(10);
+
+/// Hard bound on how long one reply write may stall on a congested peer
+/// before the connection is declared dead.
+const WRITE_LIMIT: Duration = Duration::from_secs(5);
 
 /// How the coordinator serves its GPU clients.
 #[derive(Clone, Copy, Debug)]
@@ -57,8 +81,11 @@ pub enum ServeMode {
     /// One connection at a time, served to completion (the pre-batching
     /// baseline; kept for A/B throughput comparison).
     Sequential,
-    /// Multi-connection event loop with cross-connection dynamic batching
-    /// under the given policy.
+    /// One blocking reader thread per connection feeding the shared
+    /// batcher (the pre-event-loop server; kept for A/B comparison).
+    Threaded(BatchPolicy),
+    /// Nonblocking event loop: a fixed poll-thread pool, incremental
+    /// frame decode, admission control, cross-connection batching.
     Concurrent(BatchPolicy),
 }
 
@@ -72,6 +99,10 @@ pub struct ServerStats {
     batches_ge2: AtomicU64,
     max_batch: AtomicU64,
     teardowns: AtomicU64,
+    accept_drops: AtomicU64,
+    nodelay_fallbacks: AtomicU64,
+    shed: AtomicU64,
+    shutdown_denied: AtomicU64,
 }
 
 impl ServerStats {
@@ -108,6 +139,30 @@ impl ServerStats {
     pub fn teardowns(&self) -> u64 {
         self.teardowns.load(Ordering::Relaxed)
     }
+
+    /// Connections dropped at accept because their socket could not be
+    /// set up (e.g. `try_clone` failed) — closed explicitly, not leaked.
+    pub fn accept_drops(&self) -> u64 {
+        self.accept_drops.load(Ordering::Relaxed)
+    }
+
+    /// Connections served *without* TCP_NODELAY because setting it
+    /// failed (previously such connections were silently dropped).
+    pub fn nodelay_fallbacks(&self) -> u64 {
+        self.nodelay_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Requests refused by admission control (a `Backpressure` frame was
+    /// sent instead of a retrieval reply).
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// `Shutdown` frames ignored because they came from a non-admin
+    /// connection.
+    pub fn shutdown_denied(&self) -> u64 {
+        self.shutdown_denied.load(Ordering::Relaxed)
+    }
 }
 
 /// One decoded request waiting in the shared batcher.
@@ -124,10 +179,13 @@ struct ServerRequest {
     arrived: Instant,
 }
 
-/// State shared between the accept thread, per-connection readers and the
-/// dispatch loop.
+/// State shared between the accept thread, the readers (poll pool or
+/// per-connection threads) and the dispatch loop.
 struct Shared {
-    batcher: Mutex<DynamicBatcher<ServerRequest>>,
+    batcher: Mutex<ClassedBatcher<ServerRequest>>,
+    /// Per-tenant admission state (bounded queues + token buckets).
+    admission: Mutex<Admission>,
+    qos: QosConfig,
     /// Woken on request arrival, teardown, cluster transition and stop.
     cv: Condvar,
     /// Connections whose reader exited; the dispatch loop cancels their
@@ -137,8 +195,13 @@ struct Shared {
     /// loop *between* batches (it owns the retriever, so epochs swap
     /// without dropping in-flight requests).
     cluster_ops: Mutex<Vec<(u64, ClusterUpdate)>>,
-    /// Reply routes: connection id -> writer half.
+    /// Reply routes: connection id -> writer half. All frame writes to a
+    /// connection happen under this lock, so admission-time
+    /// `Backpressure` frames never interleave bytes with batch replies.
     writers: Mutex<HashMap<u64, TcpStream>>,
+    /// Freshly accepted nonblocking connections awaiting adoption by
+    /// their poll thread (event-loop mode only).
+    injected: Mutex<Vec<(u64, TcpStream)>>,
     stop: AtomicBool,
     stats: Arc<ServerStats>,
     /// Span sink shared by the readers (trace-id allocation) and the
@@ -202,18 +265,34 @@ impl CoordinatorServer {
         mode: ServeMode,
         tracer: Tracer,
     ) -> Result<CoordinatorServer> {
+        Self::spawn_qos(builder, mode, QosConfig::default(), tracer)
+    }
+
+    /// Fully explicit spawn: serving mode, QoS/admission configuration
+    /// and span sink. The default [`QosConfig`] is deliberately generous
+    /// (single-tenant workloads never shed); multi-tenant deployments
+    /// tighten the per-class policies here.
+    pub fn spawn_qos(
+        builder: impl FnOnce() -> Retriever + Send + 'static,
+        mode: ServeMode,
+        qos: QosConfig,
+        tracer: Tracer,
+    ) -> Result<CoordinatorServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let policy = match mode {
             ServeMode::Sequential => BatchPolicy::default(),
-            ServeMode::Concurrent(p) => p,
+            ServeMode::Threaded(p) | ServeMode::Concurrent(p) => p,
         };
         let shared = Arc::new(Shared {
-            batcher: Mutex::new(DynamicBatcher::new(policy)),
+            batcher: Mutex::new(ClassedBatcher::new(policy)),
+            admission: Mutex::new(Admission::new(qos)),
+            qos,
             cv: Condvar::new(),
             teardowns: Mutex::new(Vec::new()),
             cluster_ops: Mutex::new(Vec::new()),
             writers: Mutex::new(HashMap::new()),
+            injected: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
             stats: Arc::new(ServerStats::default()),
             tracer,
@@ -227,14 +306,31 @@ impl CoordinatorServer {
                     serve_sequential(listener, builder, &sh);
                 }));
             }
-            ServeMode::Concurrent(_) => {
+            ServeMode::Threaded(_) => {
                 let sh = shared.clone();
                 handles.push(std::thread::spawn(move || {
                     dispatch_loop(builder, &sh);
                 }));
                 let sh = shared.clone();
                 handles.push(std::thread::spawn(move || {
-                    accept_loop(listener, addr, &sh);
+                    accept_loop(listener, addr, &sh, false);
+                }));
+            }
+            ServeMode::Concurrent(_) => {
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    dispatch_loop(builder, &sh);
+                }));
+                let pool = qos.poll_threads.max(1);
+                for tid in 0..pool {
+                    let sh = shared.clone();
+                    handles.push(std::thread::spawn(move || {
+                        poll_loop(tid, pool, addr, &sh);
+                    }));
+                }
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    accept_loop(listener, addr, &sh, true);
                 }));
             }
         }
@@ -261,6 +357,52 @@ impl Drop for CoordinatorServer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Write one frame with a hard time bound, riding out `WouldBlock` on
+/// nonblocking sockets by waiting for write readiness. Used for every
+/// reply write in the threaded/concurrent servers: in event-loop mode
+/// the registered writer halves share their file description with the
+/// nonblocking read side, so a plain `write_all` could fail spuriously
+/// on a congested peer.
+fn write_frame_bounded(
+    stream: &mut TcpStream,
+    frame: &Frame,
+    limit: Duration,
+) -> std::io::Result<()> {
+    let bytes = frame.to_bytes();
+    let deadline = Instant::now() + limit;
+    let mut off = 0;
+    while off < bytes.len() {
+        match stream.write(&bytes[off..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "peer stopped accepting bytes",
+                ))
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "reply write exceeded its time bound",
+                    ));
+                }
+                let wait = (deadline - now).min(Duration::from_millis(50));
+                wait_writable(raw_fd(stream), wait);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 // ------------------------------------------------------- sequential mode
@@ -307,28 +449,28 @@ fn serve_sequential(
 }
 
 fn serve_gpu(
-    stream: TcpStream,
+    mut stream: TcpStream,
     retriever: &mut Retriever,
     metrics: &Metrics,
     prefetch: &mut PrefetchTracker,
     shared: &Shared,
 ) -> Result<()> {
-    stream.set_nodelay(true)?;
+    if stream.set_nodelay(true).is_err() {
+        shared.stats.nodelay_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
     stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
+    // Incremental decode: a read timeout mid-frame keeps the partial
+    // bytes buffered instead of restarting the parse mid-stream.
+    let mut frames = FrameReader::new();
     loop {
         if shared.stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        let frame = match Frame::read_from(&mut reader) {
-            Ok(f) => f,
-            Err(e) => {
-                if read_timed_out(&e) {
-                    continue;
-                }
-                return Ok(());
-            }
+        let frame = match frames.poll(&mut stream) {
+            Ok(ReadProgress::Frame(f)) => f,
+            Ok(ReadProgress::Idle) => continue,
+            Ok(ReadProgress::Closed) | Err(_) => return Ok(()),
         };
         match frame.kind {
             Kind::Shutdown => {
@@ -358,8 +500,11 @@ fn serve_gpu(
                 let trace_id = shared.alloc_trace();
                 let r = if retriever.retcache_enabled() {
                     let cr = metrics.time("retrieve", || {
-                        retriever.retrieve_cached_from_traced(
-                            slot, &req.query, trace_id,
+                        retriever.retrieve_cached_tenant_traced(
+                            slot,
+                            Some(req.gpu_id),
+                            &req.query,
+                            trace_id,
                         )
                     })?;
                     metrics.incr(source_counter(cr.source), 1);
@@ -411,11 +556,14 @@ fn serve_gpu(
     }
 }
 
-// ------------------------------------------------------- concurrent mode
+// --------------------------------------------- concurrent + threaded mode
 
-/// Accept connections, register their writer halves, and spawn one reader
-/// thread per connection.
-fn accept_loop(listener: TcpListener, addr: SocketAddr, shared: &Arc<Shared>) {
+/// Accept connections and register their writer halves. In event-loop
+/// mode (`event_loop`) the connection is made nonblocking and handed to
+/// its poll thread via the injection queue; in threaded mode a blocking
+/// reader thread is spawned per connection. Socket-setup failures close
+/// the connection explicitly and are counted — never silently leaked.
+fn accept_loop(listener: TcpListener, addr: SocketAddr, shared: &Arc<Shared>, event_loop: bool) {
     let mut next_conn = 0u64;
     for conn in listener.incoming() {
         if shared.stop.load(Ordering::Relaxed) {
@@ -423,87 +571,235 @@ fn accept_loop(listener: TcpListener, addr: SocketAddr, shared: &Arc<Shared>) {
         }
         match conn {
             Ok(stream) => {
+                // Best effort: a connection that can't get TCP_NODELAY is
+                // served anyway (it only costs latency), and counted.
                 if stream.set_nodelay(true).is_err() {
-                    continue;
+                    shared.stats.nodelay_fallbacks.fetch_add(1, Ordering::Relaxed);
                 }
                 let writer = match stream.try_clone() {
                     Ok(w) => w,
-                    Err(_) => continue,
+                    Err(_) => {
+                        // Can't build a reply route: close the socket
+                        // explicitly (dropping it here) so the peer sees
+                        // a reset instead of a half-open black hole.
+                        shared.stats.accept_drops.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
                 };
+                if event_loop && stream.set_nonblocking(true).is_err() {
+                    shared.stats.accept_drops.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
                 let conn_id = next_conn;
                 next_conn += 1;
                 shared.writers.lock().unwrap().insert(conn_id, writer);
-                let sh = shared.clone();
-                // Readers are detached: they exit on disconnect or within
-                // one poll interval of the stop flag.
-                std::thread::spawn(move || reader_loop(stream, conn_id, addr, &sh));
+                if event_loop {
+                    shared.injected.lock().unwrap().push((conn_id, stream));
+                } else {
+                    let sh = shared.clone();
+                    // Readers are detached: they exit on disconnect or
+                    // within one poll interval of the stop flag.
+                    std::thread::spawn(move || reader_loop(stream, conn_id, addr, &sh));
+                }
             }
             Err(_) => break,
         }
     }
 }
 
-/// Decode one connection's frames into the shared batcher. On exit (peer
-/// closed, protocol error, or server stop) the connection is deregistered
-/// and queued for speculation-slot teardown on the dispatch loop.
-fn reader_loop(stream: TcpStream, conn_id: u64, addr: SocketAddr, shared: &Shared) {
+/// What to do with a connection after handling one of its frames.
+enum FrameOutcome {
+    /// Keep reading.
+    Continue,
+    /// Protocol error or dead reply route: drop the connection.
+    Close,
+    /// Server shutdown was accepted; stop flag is already set.
+    Stop,
+}
+
+/// Handle one decoded frame from connection `conn_id` — shared by the
+/// event loop's poll threads and the threaded mode's reader threads.
+/// Replies (`Backpressure` here, retrieval replies in the dispatch loop)
+/// go through the registered writer under the `writers` lock, which
+/// serializes all frame writes to a connection.
+fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) -> FrameOutcome {
+    match frame.kind {
+        Kind::Shutdown => {
+            // Only the admin connection (the first accepted) may stop the
+            // server for everyone; other tenants' shutdowns are counted
+            // and ignored.
+            if shared.qos.admin_shutdown_only && conn_id != 0 {
+                shared.stats.shutdown_denied.fetch_add(1, Ordering::Relaxed);
+                return FrameOutcome::Continue;
+            }
+            shared.stop.store(true, Ordering::Relaxed);
+            shared.cv.notify_all();
+            // Nudge the accept loop so it observes the stop flag.
+            let _ = TcpStream::connect(addr);
+            FrameOutcome::Stop
+        }
+        Kind::RetrieveRequest => match RetrieveRequest::decode(frame) {
+            Ok(req) => {
+                let tenant = req.gpu_id;
+                let verdict = shared.admission.lock().unwrap().admit(tenant, Instant::now());
+                match verdict {
+                    Ok(()) => {
+                        let trace_id = shared.alloc_trace();
+                        let mut b = shared.batcher.lock().unwrap();
+                        b.push(
+                            QosClass::of_gpu(tenant),
+                            tenant as usize,
+                            ServerRequest {
+                                conn_id,
+                                query_id: req.query_id,
+                                gpu_id: tenant,
+                                want_chunks: req.want_chunks,
+                                query: req.query,
+                                trace_id,
+                                arrived: Instant::now(),
+                            },
+                        );
+                        drop(b);
+                        shared.cv.notify_all();
+                    }
+                    Err(shed) => {
+                        // Shed: tell the client explicitly instead of
+                        // queueing unboundedly or going silent. Written
+                        // at admission time, so it can overtake earlier
+                        // retrieval replies — clients match by query_id.
+                        shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                        let bp = Backpressure {
+                            query_id: req.query_id,
+                            tenant,
+                            reason: shed.reason.code(),
+                            queue_depth: shed.queue_depth,
+                            retry_after_us: shed.retry_after_us,
+                        };
+                        let mut writers = shared.writers.lock().unwrap();
+                        if let Some(stream) = writers.get_mut(&conn_id) {
+                            if write_frame_bounded(stream, &bp.encode(), WRITE_LIMIT).is_err() {
+                                let _ = stream.shutdown(std::net::Shutdown::Both);
+                                writers.remove(&conn_id);
+                                return FrameOutcome::Close;
+                            }
+                        }
+                    }
+                }
+                FrameOutcome::Continue
+            }
+            Err(_) => FrameOutcome::Close,
+        },
+        Kind::ClusterUpdate => match ClusterUpdate::decode(frame) {
+            Ok(update) => {
+                shared.cluster_ops.lock().unwrap().push((conn_id, update));
+                shared.cv.notify_all();
+                FrameOutcome::Continue
+            }
+            Err(_) => FrameOutcome::Close,
+        },
+        _ => FrameOutcome::Close,
+    }
+}
+
+/// Deregister a connection and queue its speculation-slot teardown for
+/// the dispatch loop.
+fn retire_conn(conn_id: u64, shared: &Shared) {
+    shared.writers.lock().unwrap().remove(&conn_id);
+    shared.teardowns.lock().unwrap().push(conn_id);
+    shared.cv.notify_all();
+}
+
+/// Threaded mode: decode one connection's frames into the shared batcher
+/// on a dedicated blocking thread. On exit (peer closed, protocol error,
+/// or server stop) the connection is deregistered and queued for
+/// speculation-slot teardown on the dispatch loop.
+fn reader_loop(mut stream: TcpStream, conn_id: u64, addr: SocketAddr, shared: &Shared) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    let mut reader = BufReader::new(stream);
+    let mut frames = FrameReader::new();
     loop {
         if shared.stop.load(Ordering::Relaxed) {
             break;
         }
-        let frame = match Frame::read_from(&mut reader) {
-            Ok(f) => f,
-            Err(e) => {
-                if read_timed_out(&e) {
-                    continue;
+        match frames.poll(&mut stream) {
+            Ok(ReadProgress::Frame(frame)) => {
+                match handle_frame(conn_id, &frame, addr, shared) {
+                    FrameOutcome::Continue => {}
+                    FrameOutcome::Close | FrameOutcome::Stop => break,
                 }
-                break;
             }
-        };
-        match frame.kind {
-            Kind::Shutdown => {
-                shared.stop.store(true, Ordering::Relaxed);
-                shared.cv.notify_all();
-                // Nudge the accept loop so it observes the stop flag.
-                let _ = TcpStream::connect(addr);
-                break;
-            }
-            Kind::RetrieveRequest => match RetrieveRequest::decode(&frame) {
-                Ok(req) => {
-                    let trace_id = shared.alloc_trace();
-                    let mut b = shared.batcher.lock().unwrap();
-                    b.push(
-                        req.gpu_id as usize,
-                        ServerRequest {
-                            conn_id,
-                            query_id: req.query_id,
-                            gpu_id: req.gpu_id,
-                            want_chunks: req.want_chunks,
-                            query: req.query,
-                            trace_id,
-                            arrived: Instant::now(),
-                        },
-                    );
-                    drop(b);
-                    shared.cv.notify_all();
-                }
-                Err(_) => break,
-            },
-            Kind::ClusterUpdate => match ClusterUpdate::decode(&frame) {
-                Ok(update) => {
-                    shared.cluster_ops.lock().unwrap().push((conn_id, update));
-                    shared.cv.notify_all();
-                }
-                Err(_) => break,
-            },
-            _ => break,
+            // Read timeout: only idleness — any partial frame stays
+            // buffered in the FrameReader (the old per-frame decode
+            // restarted parsing here and desynced on slow clients).
+            Ok(ReadProgress::Idle) => continue,
+            Ok(ReadProgress::Closed) | Err(_) => break,
         }
     }
-    shared.writers.lock().unwrap().remove(&conn_id);
-    shared.teardowns.lock().unwrap().push(conn_id);
-    shared.cv.notify_all();
+    retire_conn(conn_id, shared);
+}
+
+/// One poll thread of the event loop: owns every connection with
+/// `conn_id % pool == tid`, waits for read readiness across all of them
+/// at once, and pumps each ready connection's [`FrameReader`] until it
+/// goes idle. Per-connection state is one `FrameReader` (at most one
+/// frame buffered) — no thread, no stack, regardless of client count.
+fn poll_loop(tid: usize, pool: usize, addr: SocketAddr, shared: &Arc<Shared>) {
+    struct Conn {
+        id: u64,
+        stream: TcpStream,
+        frames: FrameReader,
+    }
+    let mut conns: Vec<Conn> = Vec::new();
+    while !shared.stop.load(Ordering::Relaxed) {
+        // Adopt freshly accepted connections sharded to this thread.
+        {
+            let mut inj = shared.injected.lock().unwrap();
+            let mut i = 0;
+            while i < inj.len() {
+                if (inj[i].0 as usize) % pool == tid {
+                    let (id, stream) = inj.remove(i);
+                    conns.push(Conn { id, stream, frames: FrameReader::new() });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // Readiness over the whole shard; with no connections this just
+        // parks for one tick.
+        let fds: Vec<i32> = conns.iter().map(|c| raw_fd(&c.stream)).collect();
+        let ready = wait_readable(&fds, EVENT_POLL);
+        let mut dead: Vec<usize> = Vec::new();
+        for (i, c) in conns.iter_mut().enumerate() {
+            if !ready[i] {
+                continue;
+            }
+            // Pump until the socket runs dry: nonblocking reads hit
+            // `WouldBlock` (-> Idle) when the kernel buffer empties,
+            // with any partial frame held in the FrameReader.
+            loop {
+                match c.frames.poll(&mut c.stream) {
+                    Ok(ReadProgress::Frame(frame)) => {
+                        match handle_frame(c.id, &frame, addr, shared) {
+                            FrameOutcome::Continue => {}
+                            FrameOutcome::Close | FrameOutcome::Stop => {
+                                dead.push(i);
+                                break;
+                            }
+                        }
+                    }
+                    Ok(ReadProgress::Idle) => break,
+                    Ok(ReadProgress::Closed) | Err(_) => {
+                        dead.push(i);
+                        break;
+                    }
+                }
+            }
+        }
+        // Indices were pushed in ascending order; remove back to front.
+        for &i in dead.iter().rev() {
+            let c = conns.remove(i);
+            retire_conn(c.id, shared);
+        }
+    }
 }
 
 /// What the dispatch loop should do next.
@@ -568,7 +864,7 @@ fn dispatch_loop(builder: impl FnOnce() -> Retriever, shared: &Shared) {
                     let ack = apply_cluster_update(&mut retriever, &update);
                     let mut writers = shared.writers.lock().unwrap();
                     if let Some(stream) = writers.get_mut(&conn_id) {
-                        if ack.encode().write_to(stream).is_err() {
+                        if write_frame_bounded(stream, &ack.encode(), WRITE_LIMIT).is_err() {
                             let _ = stream.shutdown(std::net::Shutdown::Both);
                             writers.remove(&conn_id);
                         }
@@ -622,6 +918,15 @@ fn serve_batch(
     shared: &Shared,
     trackers: &mut HashMap<u64, PrefetchTracker>,
 ) {
+    // Every drained request leaves its bounded tenant queue *now* — even
+    // one whose connection died below — so admission's queued-count
+    // matches reality and a tenant's cap frees up as its work drains.
+    {
+        let mut adm = shared.admission.lock().unwrap();
+        for p in batch {
+            adm.release(p.payload.gpu_id);
+        }
+    }
     // Drop requests whose connection is already gone (reader exited): they
     // have no reply route, and serving them would resurrect a tracker —
     // and possibly launch speculation on a slot — *after* that
@@ -664,6 +969,8 @@ fn serve_batch(
     let results: Vec<Result<RetrievalResult>> = if retriever.retcache_enabled() {
         // The cache-aware path is per-request (hits skip the round trip
         // entirely); requests still arrived and reply in batch order.
+        // Each tenant probes its own slice of the cache byte budget, so
+        // one tenant's churn cannot evict another tenant's entries.
         batch
             .iter()
             .map(|p| {
@@ -673,8 +980,9 @@ fn serve_batch(
                 let slot = p.payload.gpu_id as usize;
                 metrics
                     .time("retrieve", || {
-                        retriever.retrieve_cached_from_traced(
+                        retriever.retrieve_cached_tenant_traced(
                             slot,
+                            Some(p.payload.gpu_id),
                             &p.payload.query,
                             p.payload.trace_id,
                         )
@@ -735,9 +1043,9 @@ fn serve_batch(
                 let t_write = Instant::now();
                 let mut writers = shared.writers.lock().unwrap();
                 if let Some(stream) = writers.get_mut(&p.payload.conn_id) {
-                    if resp.encode().write_to(stream).is_err() {
-                        // Dead peer: drop the route; the reader thread
-                        // will queue the teardown.
+                    if write_frame_bounded(stream, &resp.encode(), WRITE_LIMIT).is_err() {
+                        // Dead peer: drop the route; the reader side will
+                        // queue the teardown.
                         let _ = stream.shutdown(std::net::Shutdown::Both);
                         writers.remove(&p.payload.conn_id);
                     }
@@ -837,16 +1145,15 @@ fn source_counter(source: RetrievalSource) -> &'static str {
     }
 }
 
-fn read_timed_out(e: &anyhow::Error) -> bool {
-    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-        matches!(
-            io.kind(),
-            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-        )
-    })
-}
-
 // ------------------------------------------------------------ GPU client
+
+/// One reply from the coordinator: the retrieval result, or an explicit
+/// admission-control shed telling the client to back off.
+#[derive(Debug)]
+pub enum Reply {
+    Response(RetrieveResponse),
+    Backpressure(Backpressure),
+}
 
 /// GPU-process-side client of the coordinator.
 pub struct CoordinatorClient {
@@ -865,15 +1172,15 @@ impl CoordinatorClient {
         Ok(CoordinatorClient { stream, reader, gpu_id, next_id: 0 })
     }
 
-    /// One blocking retrieval round trip (the per-token path for
-    /// decoder-only models).
-    pub fn retrieve(
+    /// One blocking round trip that surfaces backpressure to the caller:
+    /// either the retrieval result or the server's shed verdict.
+    pub fn try_retrieve(
         &mut self,
         query: &[f32],
         lists: &[u32],
         k: usize,
         want_chunks: bool,
-    ) -> Result<RetrieveResponse> {
+    ) -> Result<Reply> {
         let id = self.next_id;
         self.next_id += 1;
         RetrieveRequest {
@@ -887,15 +1194,44 @@ impl CoordinatorClient {
         .encode()
         .write_to(&mut self.stream)?;
         let f = Frame::read_from(&mut self.reader)?;
+        if f.kind == Kind::Backpressure {
+            let bp = Backpressure::decode(&f)?;
+            anyhow::ensure!(bp.query_id == id, "backpressure id mismatch");
+            return Ok(Reply::Backpressure(bp));
+        }
         let resp = RetrieveResponse::decode(&f)?;
         anyhow::ensure!(resp.query_id == id, "response id mismatch");
-        Ok(resp)
+        Ok(Reply::Response(resp))
+    }
+
+    /// One blocking retrieval round trip (the per-token path for
+    /// decoder-only models). A shed is an error at this level; callers
+    /// that want to back off and retry use
+    /// [`try_retrieve`](Self::try_retrieve).
+    pub fn retrieve(
+        &mut self,
+        query: &[f32],
+        lists: &[u32],
+        k: usize,
+        want_chunks: bool,
+    ) -> Result<RetrieveResponse> {
+        match self.try_retrieve(query, lists, k, want_chunks)? {
+            Reply::Response(r) => Ok(r),
+            Reply::Backpressure(bp) => anyhow::bail!(
+                "request shed by admission control (tenant {}, reason {}, retry in {}us)",
+                bp.tenant,
+                bp.reason,
+                bp.retry_after_us
+            ),
+        }
     }
 
     /// Send a window of requests back-to-back, then collect the replies —
-    /// the concurrent coordinator answers one connection's requests in
-    /// FIFO order, so pipelining feeds the batcher without waiting a
-    /// round trip per query.
+    /// the concurrent coordinator answers one connection's *retrieval*
+    /// replies in FIFO order, so pipelining feeds the batcher without
+    /// waiting a round trip per query. Valid while the tenant is within
+    /// its admission limits: a `Backpressure` frame (which may overtake
+    /// FIFO replies) is an error here.
     pub fn retrieve_pipelined(
         &mut self,
         queries: &[&[f32]],
@@ -919,6 +1255,14 @@ impl CoordinatorClient {
         let mut out = Vec::with_capacity(queries.len());
         for i in 0..queries.len() {
             let f = Frame::read_from(&mut self.reader)?;
+            if f.kind == Kind::Backpressure {
+                let bp = Backpressure::decode(&f)?;
+                anyhow::bail!(
+                    "pipelined request {} shed by admission control (reason {})",
+                    bp.query_id,
+                    bp.reason
+                );
+            }
             let resp = RetrieveResponse::decode(&f)?;
             anyhow::ensure!(
                 resp.query_id == base + i as u64,

@@ -18,7 +18,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::net::protocol::{Frame, RetrieveRequest, RetrieveResponse};
+use crate::net::protocol::{
+    Backpressure, FrameReader, Kind, ReadProgress, RetrieveRequest, RetrieveResponse,
+};
 use crate::retcache::workload::zipf_stream;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -164,6 +166,10 @@ pub struct OpenLoopReport {
     pub offered_qps: f64,
     pub sent: usize,
     pub received: usize,
+    /// Requests the server refused with an explicit `Backpressure` frame
+    /// (admission control). Accounted, not lost: every sent request is
+    /// either received or shed when the server is healthy.
+    pub shed: usize,
     /// Wall seconds from run start until the last reply (or timeout).
     pub wall_s: f64,
     /// Completed requests per second of wall time.
@@ -195,6 +201,8 @@ pub fn drive(
 
     // Completion stamps, nanos since t0 (0 = not yet answered).
     let done_ns: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    // Admission-control sheds (1 = the server answered `Backpressure`).
+    let shed_flags: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
     let streams: Vec<TcpStream> = (0..conns)
         .map(|_| {
             let s = TcpStream::connect(addr).context("connecting to coordinator")?;
@@ -243,14 +251,30 @@ pub fn drive(
                     }
                 }
             });
-            // Reader: drain replies until all expected or deadline.
-            let mut rdr = std::io::BufReader::new(stream.try_clone()?);
+            // Reader: drain replies until all expected or deadline. A
+            // FrameReader keeps partial frames buffered across read
+            // timeouts — a slow server mid-frame is idleness, not desync.
+            let mut rdr = stream.try_clone()?;
             stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+            let shed_flags = &shed_flags;
             scope.spawn(move || {
+                let mut frames = FrameReader::new();
                 let mut got = 0usize;
                 while got < expect && t0.elapsed() < deadline {
-                    match Frame::read_from(&mut rdr) {
-                        Ok(f) => {
+                    match frames.poll(&mut rdr) {
+                        Ok(ReadProgress::Frame(f)) => {
+                            // A shed is a reply too: stamp it so the
+                            // accounting (received + shed == sent) holds
+                            // and the reader doesn't wait on it forever.
+                            if f.kind == Kind::Backpressure {
+                                let Ok(bp) = Backpressure::decode(&f) else { break };
+                                let i = bp.query_id as usize;
+                                if i < n {
+                                    shed_flags[i].store(1, Ordering::Relaxed);
+                                    got += 1;
+                                }
+                                continue;
+                            }
                             let Ok(resp) = RetrieveResponse::decode(&f) else { break };
                             let i = resp.query_id as usize;
                             if i < n {
@@ -261,12 +285,8 @@ pub fn drive(
                                 got += 1;
                             }
                         }
-                        Err(e) => {
-                            if read_timed_out(&e) {
-                                continue;
-                            }
-                            break; // connection closed
-                        }
+                        Ok(ReadProgress::Idle) => continue,
+                        Ok(ReadProgress::Closed) | Err(_) => break,
                     }
                 }
             });
@@ -294,12 +314,14 @@ pub fn drive(
         }
     }
     let received = lat.len();
+    let shed = shed_flags.iter().filter(|f| f.load(Ordering::Relaxed) != 0).count();
     anyhow::ensure!(received > 0, "open-loop run received no replies");
     let wall_s = last_done.max(sched.span_s()).max(1e-9);
     Ok(OpenLoopReport {
         offered_qps: n as f64 / sched.span_s().max(1e-9),
         sent: n,
         received,
+        shed,
         wall_s,
         goodput_qps: received as f64 / wall_s,
         latency: Summary::of(&lat),
@@ -316,15 +338,6 @@ pub fn drive(
 /// goodput any offered load sustained.
 pub fn measured_knee_qps(sweep: &[OpenLoopReport]) -> f64 {
     sweep.iter().map(|r| r.goodput_qps).fold(0.0, f64::max)
-}
-
-fn read_timed_out(e: &anyhow::Error) -> bool {
-    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-        matches!(
-            io.kind(),
-            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-        )
-    })
 }
 
 #[cfg(test)]
@@ -408,6 +421,7 @@ mod tests {
             offered_qps: g,
             sent: 1,
             received: 1,
+            shed: 0,
             wall_s: 1.0,
             goodput_qps: g,
             latency: Summary::of(&[0.001]),

@@ -74,8 +74,9 @@ fn print_help() {
          demo                      quickstart search + generation\n\
          search [--dataset SIFT] [--queries 64] [--nodes 2] [--batch 1] [--pjrt]\n\
          serve  [--model dec_tiny] [--tokens 64] [--sequences 2]\n\
-         serve --net [--clients 4] [--queries 32] [--sequential]\n\
-                [--max-batch 16] [--max-wait-us 200] [--nodes 2]\n\
+         serve --net [--clients 4] [--queries 32] [--sequential | --threaded]\n\
+                [--poll-threads 2] [--interactive-queue 4096] [--batch-queue 1024]\n\
+                [--batch-rate QPS] [--max-batch 16] [--max-wait-us 200] [--nodes 2]\n\
                 [--replication R] [--hedge-quantile q]\n\
                 [--remote host:port,host:port]   concurrent coordinator over\n\
                 TCP; --remote uses running chamvs-node memory nodes;\n\
@@ -241,12 +242,16 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Networked serving: spawn the coordinator (concurrent event loop by
-/// default, `--sequential` for the one-connection-at-a-time baseline) and
-/// drive it with N in-process GPU clients. With `--remote a:p,b:p` the
-/// retrieval tier is running `chamvs-node` processes; otherwise local
-/// in-process memory nodes.
+/// Networked serving: spawn the coordinator (nonblocking event loop by
+/// default; `--threaded` for the thread-per-connection A/B baseline,
+/// `--sequential` for the one-connection-at-a-time baseline) and drive it
+/// with N in-process GPU clients. With `--remote a:p,b:p` the retrieval
+/// tier is running `chamvs-node` processes; otherwise local in-process
+/// memory nodes.
 fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
+    use chameleon::coordinator::admission::{QosConfig, TenantPolicy};
+    use chameleon::trace::Tracer;
+
     let sys = system_config(args);
     let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
         .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
@@ -255,6 +260,7 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
     let per_client = args.get_usize("queries", 32).max(1);
     let k = args.get_usize("k", 10);
     let sequential = args.flag("sequential");
+    let threaded = args.flag("threaded");
     let replication = args.get_usize("replication", 1).max(1);
     let hedge_quantile = args.get_f64("hedge-quantile", 0.0);
     let cluster_cfg = cluster_config(replication, hedge_quantile);
@@ -285,14 +291,42 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
     };
     let mode = if sequential {
         ServeMode::Sequential
+    } else if threaded {
+        ServeMode::Threaded(policy)
     } else {
         ServeMode::Concurrent(policy)
     };
-    let mut server = CoordinatorServer::spawn(move || retriever, mode)?;
+    let mode_name = if sequential {
+        "sequential"
+    } else if threaded {
+        "threaded"
+    } else {
+        "event-loop"
+    };
+    // Front-door QoS: generous defaults (single-tenant runs never shed);
+    // the knobs exist so operators can tighten multi-tenant deployments.
+    let base = QosConfig::default();
+    let qos = QosConfig {
+        poll_threads: args.get_usize("poll-threads", base.poll_threads).max(1),
+        interactive: TenantPolicy {
+            queue_cap: args
+                .get_usize("interactive-queue", base.interactive.queue_cap)
+                .max(1),
+            ..base.interactive
+        },
+        batch: TenantPolicy {
+            queue_cap: args.get_usize("batch-queue", base.batch.queue_cap).max(1),
+            rate_qps: args.get_f64("batch-rate", base.batch.rate_qps),
+            ..base.batch
+        },
+        ..base
+    };
+    let mut server =
+        CoordinatorServer::spawn_qos(move || retriever, mode, qos, Tracer::off())?;
     let addr = server.addr;
     println!(
-        "[serve-net] coordinator on {addr} ({} mode), {n_clients} clients x {per_client} queries",
-        if sequential { "sequential" } else { "concurrent" }
+        "[serve-net] coordinator on {addr} ({mode_name} mode), \
+         {n_clients} clients x {per_client} queries"
     );
 
     // Deterministic query stream (tiny db, many queries — only the query
@@ -340,6 +374,13 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
         stats.max_batch(),
         stats.batches_ge2()
     );
+    println!(
+        "[serve-net] shed={} accept_drops={} nodelay_fallbacks={} shutdown_denied={}",
+        stats.shed(),
+        stats.accept_drops(),
+        stats.nodelay_fallbacks(),
+        stats.shutdown_denied()
+    );
     server.shutdown();
     Ok(())
 }
@@ -365,6 +406,9 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     let k = args.get_usize("k", 10);
     let n_nodes = args.get_usize("nodes", 2);
     let conns = args.get_usize("conns", 4).max(1);
+    // Wide sweeps (hundreds of pipelined connections, each with a reader
+    // clone) need more fds than the usual 1024 soft limit.
+    let _ = chameleon::util::poll::raise_nofile((conns as u64 * 2 + 64).max(1024));
     let requests = args.get_usize("requests", 400).max(1);
     let n_unique = args.get_usize("unique", 64).max(1);
     let zipf_alpha = args.get_f64("zipf", 0.99);
@@ -442,7 +486,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         let rep = loadgen::drive(addr, &queries, k, &sched, conns, deadline)?;
         println!(
             "[loadgen] offered {:>6.0} q/s -> goodput {:>6.0} q/s  \
-             p50 {:7.2} ms  p95 {:7.2} ms  p99 {:7.2} ms  ({}/{} replies)",
+             p50 {:7.2} ms  p95 {:7.2} ms  p99 {:7.2} ms  ({}/{} replies, {} shed)",
             rep.offered_qps,
             rep.goodput_qps,
             rep.latency.p50 * 1e3,
@@ -450,12 +494,23 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
             rep.latency.p99 * 1e3,
             rep.received,
             rep.sent,
+            rep.shed,
+        );
+        // Conservation line for smoke checks: every sent request must be
+        // either answered or explicitly shed — lost=0 on a healthy server.
+        println!(
+            "[loadgen] accounting: sent={} received={} shed={} lost={}",
+            rep.sent,
+            rep.received,
+            rep.shed,
+            rep.sent.saturating_sub(rep.received + rep.shed),
         );
         points.push(obj(vec![
             ("offered_qps", Json::Num(rep.offered_qps)),
             ("goodput_qps", Json::Num(rep.goodput_qps)),
             ("sent", Json::Num(rep.sent as f64)),
             ("received", Json::Num(rep.received as f64)),
+            ("shed", Json::Num(rep.shed as f64)),
             ("wall_s", Json::Num(rep.wall_s)),
             ("p50_ms", Json::Num(rep.latency.p50 * 1e3)),
             ("p95_ms", Json::Num(rep.latency.p95 * 1e3)),

@@ -45,6 +45,12 @@ pub enum Kind {
     /// -> memory node: retire gracefully — finish in-flight work, stop
     /// accepting new connections, exit once the current one closes.
     Drain = 11,
+    /// Coordinator -> GPU: the request was shed by admission control
+    /// (tenant queue full or rate limit); the payload names the shed
+    /// request and a retry hint. Sent *instead of* a `RetrieveResponse`,
+    /// out of band with respect to the connection's FIFO reply stream —
+    /// match on `query_id`, not on arrival order.
+    Backpressure = 12,
 }
 
 impl Kind {
@@ -61,6 +67,7 @@ impl Kind {
             9 => Kind::ClusterUpdate,
             10 => Kind::ClusterAck,
             11 => Kind::Drain,
+            12 => Kind::Backpressure,
             other => bail!("unknown frame kind {other}"),
         })
     }
@@ -73,6 +80,12 @@ pub struct Frame {
     pub payload: Vec<u8>,
 }
 
+/// Bytes in the fixed frame header (`magic | kind | payload_len`).
+pub const FRAME_HEADER_BYTES: usize = 16;
+
+/// Largest accepted payload (defensive cap shared by every decode path).
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+
 impl Frame {
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
         w.write_u32::<LE>(MAGIC)?;
@@ -83,6 +96,22 @@ impl Frame {
         Ok(())
     }
 
+    /// The full wire image (header + payload) as one buffer — the shape a
+    /// nonblocking writer needs so a partial `write` can resume at a byte
+    /// offset instead of mid-`write_to`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(FRAME_HEADER_BYTES + self.payload.len());
+        buf.write_u32::<LE>(MAGIC).unwrap();
+        buf.write_u32::<LE>(self.kind as u32).unwrap();
+        buf.write_u64::<LE>(self.payload.len() as u64).unwrap();
+        buf.extend_from_slice(&self.payload);
+        buf
+    }
+
+    /// Blocking frame read. NOT resumable: a read timeout mid-frame loses
+    /// the bytes already consumed, so on a stream with a read timeout use
+    /// [`FrameReader`] instead (the serving loops all do). Kept for
+    /// clients that block without timeouts (request/response round trips).
     pub fn read_from(r: &mut impl Read) -> Result<Frame> {
         let magic = r.read_u32::<LE>()?;
         if magic != MAGIC {
@@ -90,13 +119,125 @@ impl Frame {
         }
         let kind = Kind::from_u32(r.read_u32::<LE>()?)?;
         let len = r.read_u64::<LE>()? as usize;
-        if len > 1 << 30 {
+        if len > MAX_PAYLOAD_BYTES {
             bail!("frame too large: {len}");
         }
         let mut payload = vec![0u8; len];
         r.read_exact(&mut payload)?;
         Ok(Frame { kind, payload })
     }
+}
+
+/// Outcome of one [`FrameReader::poll`] pump.
+#[derive(Debug)]
+pub enum ReadProgress {
+    /// A complete frame was decoded.
+    Frame(Frame),
+    /// The source has no more bytes right now (`WouldBlock`/timeout);
+    /// any partial header/payload bytes stay buffered for the next poll.
+    Idle,
+    /// Clean EOF exactly on a frame boundary.
+    Closed,
+}
+
+/// Incremental frame decoder: a resumable state machine that buffers
+/// partial header/payload bytes across reads, so a `WouldBlock` or read
+/// timeout *mid-frame* suspends the parse instead of desyncing it (the
+/// slow-client bug: `Frame::read_from` restarted parsing mid-stream after
+/// a timeout had already consumed part of the header).
+///
+/// One `FrameReader` per connection; feed it the connection's stream —
+/// blocking with a read timeout, or nonblocking under a readiness loop —
+/// and pump [`poll`](Self::poll) until `Idle`.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    header: [u8; FRAME_HEADER_BYTES],
+    /// Header bytes buffered so far (< FRAME_HEADER_BYTES while partial).
+    have: usize,
+    /// Decoded header + payload buffer being filled (`Some` once the
+    /// header is complete and validated).
+    body: Option<(Kind, Vec<u8>)>,
+    filled: usize,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Whether any bytes of the next frame have been consumed — the
+    /// "timeout is only idleness at a frame boundary" predicate.
+    pub fn mid_frame(&self) -> bool {
+        self.have > 0 || self.body.is_some()
+    }
+
+    /// Pump the reader: consume available bytes from `r` and return the
+    /// first complete frame, `Idle` on `WouldBlock`/timeout (state kept),
+    /// or `Closed` on EOF at a frame boundary. EOF mid-frame and protocol
+    /// garbage (bad magic/kind/length) are errors.
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<ReadProgress> {
+        // Phase 1: fill the 16-byte header.
+        while self.body.is_none() {
+            match r.read(&mut self.header[self.have..]) {
+                Ok(0) => {
+                    if self.have == 0 {
+                        return Ok(ReadProgress::Closed);
+                    }
+                    bail!("eof mid-frame ({} header bytes buffered)", self.have);
+                }
+                Ok(n) => {
+                    self.have += n;
+                    if self.have == FRAME_HEADER_BYTES {
+                        self.body = Some(self.decode_header()?);
+                    }
+                }
+                Err(e) if would_block(&e) => return Ok(ReadProgress::Idle),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // Phase 2: fill the payload.
+        let (_, payload) = self.body.as_mut().unwrap();
+        while self.filled < payload.len() {
+            match r.read(&mut payload[self.filled..]) {
+                Ok(0) => bail!(
+                    "eof mid-frame ({}/{} payload bytes)",
+                    self.filled,
+                    payload.len()
+                ),
+                Ok(n) => self.filled += n,
+                Err(e) if would_block(&e) => return Ok(ReadProgress::Idle),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let (kind, payload) = self.body.take().unwrap();
+        self.have = 0;
+        self.filled = 0;
+        Ok(ReadProgress::Frame(Frame { kind, payload }))
+    }
+
+    /// Validate the buffered header and allocate the payload buffer.
+    fn decode_header(&self) -> Result<(Kind, Vec<u8>)> {
+        let mut h = &self.header[..];
+        let magic = h.read_u32::<LE>()?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let kind = Kind::from_u32(h.read_u32::<LE>()?)?;
+        let len = h.read_u64::<LE>()? as usize;
+        if len > MAX_PAYLOAD_BYTES {
+            bail!("frame too large: {len}");
+        }
+        Ok((kind, vec![0u8; len]))
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
 }
 
 // ---------------------------------------------------------------- readers
@@ -638,6 +779,49 @@ impl RetrieveResponse {
     }
 }
 
+/// Coordinator reply when admission control sheds a request instead of
+/// queueing it: names the shed `query_id`, the tenant it was charged to,
+/// why it was shed, and a retry hint. Pipelined clients must match on
+/// `query_id` — a backpressure reply is written immediately at admission
+/// time, ahead of responses for earlier requests still in the batcher.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Backpressure {
+    pub query_id: u64,
+    /// Tenant the request was charged to (the request's `gpu_id`).
+    pub tenant: u32,
+    /// Shed reason code: 1 = tenant queue full, 2 = rate limited.
+    pub reason: u32,
+    /// Tenant queue depth at shed time (sizing hint for the client).
+    pub queue_depth: u32,
+    /// Suggested client backoff before retrying, in microseconds.
+    pub retry_after_us: u64,
+}
+
+impl Backpressure {
+    pub fn encode(&self) -> Frame {
+        let mut p = Vec::with_capacity(28);
+        p.write_u64::<LE>(self.query_id).unwrap();
+        p.write_u32::<LE>(self.tenant).unwrap();
+        p.write_u32::<LE>(self.reason).unwrap();
+        p.write_u32::<LE>(self.queue_depth).unwrap();
+        p.write_u64::<LE>(self.retry_after_us).unwrap();
+        Frame { kind: Kind::Backpressure, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<Backpressure> {
+        if f.kind != Kind::Backpressure {
+            bail!("not a backpressure frame");
+        }
+        let mut r = &f.payload[..];
+        let query_id = r.read_u64::<LE>()?;
+        let tenant = r.read_u32::<LE>()?;
+        let reason = r.read_u32::<LE>()?;
+        let queue_depth = r.read_u32::<LE>()?;
+        let retry_after_us = r.read_u64::<LE>()?;
+        Ok(Backpressure { query_id, tenant, reason, queue_depth, retry_after_us })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1028,5 +1212,168 @@ mod tests {
             };
             assert!(failed, "{kind:?} accepted garbage");
         }
+    }
+
+    #[test]
+    fn backpressure_roundtrip() {
+        let b = Backpressure {
+            query_id: 77,
+            tenant: 1002,
+            reason: 1,
+            queue_depth: 16,
+            retry_after_us: 2500,
+        };
+        let back = roundtrip(b.encode());
+        assert_eq!(Backpressure::decode(&back).unwrap(), b);
+    }
+
+    #[test]
+    fn backpressure_rejects_truncation_and_wrong_kind() {
+        let f = Backpressure {
+            query_id: 1,
+            tenant: 2,
+            reason: 2,
+            queue_depth: 3,
+            retry_after_us: 4,
+        }
+        .encode();
+        for cut in 0..f.payload.len() {
+            let t = Frame { kind: f.kind, payload: f.payload[..cut].to_vec() };
+            assert!(Backpressure::decode(&t).is_err(), "cut={cut}");
+        }
+        let wrong = Frame { kind: Kind::Shutdown, payload: f.payload };
+        assert!(Backpressure::decode(&wrong).is_err());
+    }
+
+    /// A reader that serves the wire bytes in fixed-size slivers and
+    /// interposes a `WouldBlock` between every sliver — the worst-case
+    /// dribbling peer a nonblocking frame reader has to survive.
+    struct Dribble {
+        bytes: Vec<u8>,
+        pos: usize,
+        chunk: usize,
+        ready: bool,
+    }
+
+    impl std::io::Read for Dribble {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if !self.ready {
+                self.ready = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.ready = false;
+            let n = self.chunk.min(buf.len()).min(self.bytes.len() - self.pos);
+            buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frame_reader_resumes_across_would_block_at_every_chunk_size() {
+        let frames = vec![
+            sample_scan_request().encode(),
+            Frame { kind: Kind::Shutdown, payload: vec![] },
+            sample_scan_response(3).encode(),
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            f.write_to(&mut wire).unwrap();
+        }
+        // Every sliver size — including 1 byte at a time, which splits
+        // both the header and the payload mid-field.
+        for chunk in [1usize, 2, 3, 7, 16, 17, 64] {
+            let mut src =
+                Dribble { bytes: wire.clone(), pos: 0, chunk, ready: false };
+            let mut fr = FrameReader::new();
+            let mut got = Vec::new();
+            loop {
+                match fr.poll(&mut src).unwrap() {
+                    ReadProgress::Frame(f) => got.push(f),
+                    ReadProgress::Idle => continue,
+                    ReadProgress::Closed => break,
+                }
+            }
+            assert_eq!(got.len(), frames.len(), "chunk={chunk}");
+            for (g, want) in got.iter().zip(&frames) {
+                assert_eq!(g.kind, want.kind, "chunk={chunk}");
+                assert_eq!(g.payload, want.payload, "chunk={chunk}");
+            }
+            assert!(!fr.mid_frame());
+        }
+    }
+
+    #[test]
+    fn frame_reader_tracks_mid_frame_state() {
+        let mut wire = Vec::new();
+        sample_scan_request().encode().write_to(&mut wire).unwrap();
+
+        // Partial header: the reader buffers 7 bytes, reports Idle on the
+        // WouldBlock, and remembers it is mid-frame.
+        let mut fr = FrameReader::new();
+        let mut src =
+            Dribble { bytes: wire[..7].to_vec(), pos: 0, chunk: 7, ready: true };
+        assert!(matches!(fr.poll(&mut src).unwrap(), ReadProgress::Idle));
+        assert!(fr.mid_frame());
+
+        // Partial payload: header complete, body buffered, still mid-frame.
+        let mut fr = FrameReader::new();
+        let cut = FRAME_HEADER_BYTES + 3;
+        let mut src =
+            Dribble { bytes: wire[..cut].to_vec(), pos: 0, chunk: cut, ready: true };
+        assert!(matches!(fr.poll(&mut src).unwrap(), ReadProgress::Idle));
+        assert!(fr.mid_frame());
+
+        // Feeding the rest completes the original frame exactly.
+        let mut rest = &wire[cut..];
+        match fr.poll(&mut rest).unwrap() {
+            ReadProgress::Frame(f) => {
+                assert_eq!(ScanRequest::decode(&f).unwrap(), sample_scan_request());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert!(!fr.mid_frame());
+    }
+
+    #[test]
+    fn frame_reader_closed_only_at_frame_boundary() {
+        // Clean EOF between frames is a graceful close...
+        let mut wire = Vec::new();
+        sample_scan_request().encode().write_to(&mut wire).unwrap();
+        let mut fr = FrameReader::new();
+        let mut r = &wire[..];
+        assert!(matches!(fr.poll(&mut r).unwrap(), ReadProgress::Frame(_)));
+        assert!(matches!(fr.poll(&mut r).unwrap(), ReadProgress::Closed));
+
+        // ...but EOF mid-header and mid-payload are hard errors.
+        for cut in [1, 8, 15, FRAME_HEADER_BYTES + 2] {
+            let mut fr = FrameReader::new();
+            let mut r = &wire[..cut];
+            let err = loop {
+                match fr.poll(&mut r) {
+                    Ok(ReadProgress::Idle) => continue,
+                    Ok(other) => panic!("cut={cut}: expected error, got {other:?}"),
+                    Err(e) => break e,
+                }
+            };
+            assert!(err.to_string().contains("eof mid-frame"), "cut={cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn frame_reader_rejects_garbage_header_immediately() {
+        // Bad magic fails as soon as the 16 header bytes are in — the
+        // reader never waits for a bogus multi-gigabyte "payload".
+        let mut fr = FrameReader::new();
+        let garbage = [0xabu8; FRAME_HEADER_BYTES];
+        assert!(fr.poll(&mut &garbage[..]).is_err());
+
+        // Oversized length claim with a valid magic also fails up front.
+        let mut h = Vec::new();
+        h.write_u32::<LE>(MAGIC).unwrap();
+        h.write_u32::<LE>(Kind::Shutdown as u32).unwrap();
+        h.write_u64::<LE>((MAX_PAYLOAD_BYTES as u64) + 1).unwrap();
+        let mut fr = FrameReader::new();
+        assert!(fr.poll(&mut &h[..]).is_err());
     }
 }

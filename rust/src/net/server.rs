@@ -19,7 +19,6 @@
 //! paper's single accelerator pipeline per node, which also processes one
 //! scan at a time.
 
-use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -27,7 +26,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::protocol::{
-    BatchScanRequest, BatchScanResponse, Frame, Hello, Kind, ScanRequest, ScanResponse,
+    BatchScanRequest, BatchScanResponse, FrameReader, Hello, Kind, ReadProgress,
+    ScanRequest, ScanResponse,
 };
 use crate::chamvs::backend::{ScanBackend, ScanJob};
 use crate::chamvs::node::MemoryNode;
@@ -115,7 +115,7 @@ impl Drop for NodeServer {
 }
 
 fn serve_conn(
-    stream: TcpStream,
+    mut stream: TcpStream,
     node: &mut MemoryNode,
     codebook: &[f32],
     nprobe: usize,
@@ -139,7 +139,10 @@ fn serve_conn(
     }
     .encode()
     .write_to(&mut writer)?;
-    let mut reader = BufReader::new(stream);
+    // Incremental decode: a stop-flag poll timeout that lands mid-frame
+    // keeps the partial bytes buffered instead of desyncing the stream
+    // on a slow coordinator.
+    let mut frames = FrameReader::new();
     // Reusable per-connection LUT arena (one (m, 256) table per request
     // of a round; steady state allocates nothing).
     let mut lut_arena: Vec<f32> = Vec::new();
@@ -147,20 +150,11 @@ fn serve_conn(
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        let frame = match Frame::read_from(&mut reader) {
-            Ok(f) => f,
-            Err(e) => {
-                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-                    matches!(
-                        io.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    )
-                });
-                if timed_out {
-                    continue;
-                }
-                return Ok(()); // peer closed / protocol error
-            }
+        let frame = match frames.poll(&mut stream) {
+            Ok(ReadProgress::Frame(f)) => f,
+            Ok(ReadProgress::Idle) => continue,
+            // Peer closed / protocol error.
+            Ok(ReadProgress::Closed) | Err(_) => return Ok(()),
         };
         match frame.kind {
             Kind::Shutdown => {

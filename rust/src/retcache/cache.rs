@@ -250,6 +250,19 @@ impl RetrievalCache {
         }
     }
 
+    /// Re-budget the cache to `bytes`, evicting under the configured
+    /// policy until the live set fits — the resize primitive behind
+    /// per-tenant cache slicing (a shrink pays its evictions immediately
+    /// so no tenant holds more than its slice).
+    pub fn set_capacity(&mut self, bytes: usize) {
+        self.cfg.capacity_bytes = bytes;
+        while self.bytes > self.cfg.capacity_bytes {
+            if !self.evict_one() {
+                break;
+            }
+        }
+    }
+
     /// Lifetime hit rate in [0, 1] (0 when never queried).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
@@ -484,6 +497,36 @@ mod tests {
             }
             assert!(cache.evictions > 20, "trace must exercise eviction");
         }
+    }
+
+    #[test]
+    fn set_capacity_shrink_evicts_to_fit_and_grow_is_free() {
+        let mut c = RetrievalCache::new(cfg(6 * E, EvictionPolicy::Lru));
+        for i in 0..6 {
+            c.insert(&q(i), entry(10, 1e-3));
+        }
+        assert_eq!(c.len(), 6);
+
+        // Shrinking to half pays the evictions now, in LRU order.
+        c.set_capacity(3 * E);
+        assert_eq!(c.len(), 3);
+        assert!(c.bytes() <= 3 * E);
+        for i in 0..3 {
+            assert!(!c.would_hit(&q(i)), "oldest entries evicted first");
+        }
+        for i in 3..6 {
+            assert!(c.would_hit(&q(i)), "recent entries survive the shrink");
+        }
+
+        // Growing back changes the budget only; live set untouched, and
+        // the headroom is immediately usable.
+        let before = c.len();
+        c.set_capacity(6 * E);
+        assert_eq!(c.len(), before);
+        for i in 6..9 {
+            c.insert(&q(i), entry(10, 1e-3));
+        }
+        assert_eq!(c.len(), 6);
     }
 
     #[test]

@@ -31,12 +31,14 @@
 pub mod cache;
 pub mod key;
 pub mod model;
+pub mod slices;
 pub mod spec;
 pub mod stats;
 pub mod workload;
 
 pub use cache::{CacheConfig, CachedEntry, EvictionPolicy, RetrievalCache, CACHE_LOOKUP_S};
 pub use key::{CacheKey, KeyPolicy};
+pub use slices::SlicedCache;
 pub use model::{ModeledServe, ServeModel};
 pub use spec::{SpecConfig, SpecSlots, SpecVerdict, Speculator};
 pub use stats::{RetrievalSource, RetrievalStats};

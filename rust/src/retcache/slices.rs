@@ -1,0 +1,155 @@
+//! Per-tenant slices of one retrieval-cache byte budget.
+//!
+//! A shared cache is a side channel between tenants: one flooding tenant
+//! can evict everyone else's entries and claim the whole budget. The
+//! sliced cache gives each tenant its own `RetrievalCache` carved from a
+//! single total byte budget — the budget is re-divided evenly whenever a
+//! new tenant appears, and shrinking slices pay their evictions
+//! immediately (`RetrievalCache::set_capacity`), so the sum of slice
+//! budgets never exceeds the configured total.
+
+use std::collections::HashMap;
+
+use super::cache::{CacheConfig, RetrievalCache};
+
+/// Per-tenant retrieval caches over one shared byte budget.
+pub struct SlicedCache {
+    /// Template config; `capacity_bytes` holds the *total* budget.
+    base: CacheConfig,
+    slices: HashMap<u32, RetrievalCache>,
+}
+
+impl SlicedCache {
+    pub fn new(base: CacheConfig) -> SlicedCache {
+        SlicedCache { base, slices: HashMap::new() }
+    }
+
+    /// The shared budget the slices are carved from.
+    pub fn total_capacity(&self) -> usize {
+        self.base.capacity_bytes
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Bytes currently cached across all tenants.
+    pub fn bytes(&self) -> usize {
+        self.slices.values().map(|c| c.bytes()).sum()
+    }
+
+    /// The tenant's slice, created on first sight — creation re-divides
+    /// the total budget evenly across all known tenants, shrinking the
+    /// existing slices (with immediate evictions) to make room.
+    pub fn slice_mut(&mut self, tenant: u32) -> &mut RetrievalCache {
+        if !self.slices.contains_key(&tenant) {
+            self.slices.insert(tenant, RetrievalCache::new(self.base));
+            let per = self.base.capacity_bytes / self.slices.len();
+            for c in self.slices.values_mut() {
+                c.set_capacity(per);
+            }
+        }
+        self.slices.get_mut(&tenant).unwrap()
+    }
+
+    /// Read-only view of a tenant's slice, if the tenant exists.
+    pub fn slice(&self, tenant: u32) -> Option<&RetrievalCache> {
+        self.slices.get(&tenant)
+    }
+
+    /// Aggregate lifetime hit rate across all slices (0 if never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let (hits, misses) = self
+            .slices
+            .values()
+            .fold((0u64, 0u64), |(h, m), c| (h + c.hits, m + c.misses));
+        if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retcache::cache::{CachedEntry, EvictionPolicy};
+    use crate::retcache::key::KeyPolicy;
+
+    // Entry size with KeyPolicy::Exact, d=8, k=10: key 32 + ids 80 +
+    // dists 40 + overhead 64 = 216 bytes (matches cache.rs tests).
+    const E: usize = 216;
+
+    fn base(total: usize) -> CacheConfig {
+        CacheConfig {
+            capacity_bytes: total,
+            policy: EvictionPolicy::Lru,
+            key: KeyPolicy::Exact,
+        }
+    }
+
+    fn entry() -> CachedEntry {
+        CachedEntry {
+            ids: (0..10).collect(),
+            dists: vec![0.5; 10],
+            modeled_s: 1e-3,
+        }
+    }
+
+    fn q(i: usize) -> Vec<f32> {
+        vec![i as f32; 8]
+    }
+
+    #[test]
+    fn new_tenant_rebalances_the_budget_evenly() {
+        let mut s = SlicedCache::new(base(4 * E));
+        // Sole tenant owns the whole budget.
+        for i in 0..4 {
+            s.slice_mut(7).insert(&q(i), entry());
+        }
+        assert_eq!(s.slice(7).unwrap().len(), 4);
+
+        // A second tenant halves every slice; tenant 7 evicts down to 2
+        // entries immediately (LRU order: oldest first).
+        s.slice_mut(1000);
+        assert_eq!(s.n_tenants(), 2);
+        let t7 = s.slice(7).unwrap();
+        assert_eq!(t7.len(), 2);
+        assert!(t7.would_hit(&q(2)) && t7.would_hit(&q(3)));
+
+        // Both slices honor their halves; the total never exceeds budget.
+        for i in 0..10 {
+            s.slice_mut(1000).insert(&q(i), entry());
+            s.slice_mut(7).insert(&q(100 + i), entry());
+        }
+        assert_eq!(s.slice(1000).unwrap().len(), 2);
+        assert_eq!(s.slice(7).unwrap().len(), 2);
+        assert!(s.bytes() <= s.total_capacity());
+    }
+
+    #[test]
+    fn one_tenants_flood_cannot_evict_another() {
+        let mut s = SlicedCache::new(base(8 * E));
+        // Both tenants exist before the flood, so each owns 4*E.
+        s.slice_mut(0).insert(&q(1), entry());
+        s.slice_mut(1000);
+        for i in 0..1000 {
+            s.slice_mut(1000).insert(&q(i), entry());
+        }
+        assert!(
+            s.slice(0).unwrap().would_hit(&q(1)),
+            "interactive tenant's entry survived the batch flood"
+        );
+        assert!(s.slice(1000).unwrap().len() <= 4);
+    }
+
+    #[test]
+    fn aggregate_hit_rate_spans_tenants() {
+        let mut s = SlicedCache::new(base(8 * E));
+        s.slice_mut(0).insert(&q(1), entry());
+        assert!(s.slice_mut(0).get(&q(1)).is_some()); // hit
+        assert!(s.slice_mut(5).get(&q(1)).is_none()); // miss (own slice)
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

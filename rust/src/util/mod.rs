@@ -9,6 +9,7 @@
 pub mod cli;
 pub mod json;
 pub mod metrics;
+pub mod poll;
 pub mod prop;
 pub mod rng;
 pub mod stats;

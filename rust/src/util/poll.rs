@@ -1,0 +1,179 @@
+//! Minimal readiness and resource-limit shims over raw syscalls.
+//!
+//! The build is fully offline and vendors no `libc` crate, so the two
+//! POSIX facilities the nonblocking coordinator needs — `poll(2)`
+//! readiness over a set of sockets, and a raised `RLIMIT_NOFILE` soft
+//! limit for high-connection benches — are declared directly as C FFI
+//! on 64-bit Unix. Elsewhere the API degrades to a conservative
+//! busy-poll fallback: sleep briefly and report everything ready, which
+//! is correct (the sockets are nonblocking, so spurious readiness just
+//! costs a `WouldBlock`) but burns a little CPU.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// `poll(2)` event bits (Linux/BSD share these values).
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+
+/// The raw fd of a socket, or -1 where raw fds don't exist. `poll(2)`
+/// ignores negative fds (their `revents` comes back 0), so a -1 entry
+/// simply never reports ready.
+#[cfg(unix)]
+pub fn raw_fd(s: &TcpStream) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn raw_fd(_s: &TcpStream) -> i32 {
+    -1
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    #[repr(C)]
+    pub struct RLimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+
+    pub const RLIMIT_NOFILE: i32 = 7;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+        pub fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+}
+
+/// Wait up to `timeout` for any of `fds` to become readable (or hit
+/// error/hangup, which a subsequent read surfaces). Returns one flag per
+/// fd: "a read will make progress". An empty set just sleeps out the
+/// timeout, so an event loop with no connections parks here instead of
+/// spinning.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub fn wait_readable(fds: &[i32], timeout: Duration) -> Vec<bool> {
+    let mut pfds: Vec<sys::PollFd> = fds
+        .iter()
+        .map(|&fd| sys::PollFd { fd, events: POLLIN, revents: 0 })
+        .collect();
+    let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+    let rc = unsafe { sys::poll(pfds.as_mut_ptr(), pfds.len() as u64, ms) };
+    if rc <= 0 {
+        // Timeout (or EINTR): nothing ready this round.
+        return vec![false; fds.len()];
+    }
+    pfds.iter()
+        .map(|p| p.revents & (POLLIN | POLLERR | POLLHUP) != 0)
+        .collect()
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+pub fn wait_readable(fds: &[i32], timeout: Duration) -> Vec<bool> {
+    std::thread::sleep(timeout.min(Duration::from_millis(1)));
+    vec![true; fds.len()]
+}
+
+/// Wait up to `timeout` for `fd` to accept more written bytes. Used by
+/// the reply path when a nonblocking send hits a full socket buffer.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub fn wait_writable(fd: i32, timeout: Duration) -> bool {
+    let mut pfd = sys::PollFd { fd, events: POLLOUT, revents: 0 };
+    let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+    let rc = unsafe { sys::poll(&mut pfd, 1, ms) };
+    rc > 0 && pfd.revents & (POLLOUT | POLLERR | POLLHUP) != 0
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+pub fn wait_writable(_fd: i32, timeout: Duration) -> bool {
+    std::thread::sleep(timeout.min(Duration::from_millis(1)));
+    true
+}
+
+/// Best-effort raise of the open-file soft limit toward `target` (the
+/// 512-connection sweep needs > 1024 fds in one process). Returns the
+/// soft limit actually in effect afterwards; callers treat it as a
+/// ceiling, not a guarantee. With `target` at or below the current soft
+/// limit this is a pure query.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub fn raise_nofile(target: u64) -> u64 {
+    let mut lim = sys::RLimit { cur: 0, max: 0 };
+    if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut lim) } != 0 {
+        return target;
+    }
+    if lim.cur >= target {
+        return lim.cur;
+    }
+    lim.cur = target.min(lim.max);
+    unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &lim) };
+    if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut lim) } != 0 {
+        return target;
+    }
+    lim.cur
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+pub fn raise_nofile(target: u64) -> u64 {
+    target
+}
+
+#[cfg(test)]
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    #[test]
+    fn readiness_tracks_actual_bytes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+        let fd = raw_fd(&rx);
+
+        // Nothing written yet: a short poll times out quiet.
+        let r = wait_readable(&[fd], Duration::from_millis(20));
+        assert_eq!(r, vec![false]);
+
+        tx.write_all(b"ping").unwrap();
+        tx.flush().unwrap();
+        let r = wait_readable(&[fd], Duration::from_millis(500));
+        assert_eq!(r, vec![true]);
+
+        // An idle socket's send buffer has room.
+        assert!(wait_writable(fd, Duration::from_millis(100)));
+
+        // Peer hangup also reports ready (the read then sees EOF).
+        drop(tx);
+        let r = wait_readable(&[fd], Duration::from_millis(500));
+        assert_eq!(r, vec![true]);
+    }
+
+    #[test]
+    fn negative_fds_never_report_ready() {
+        let r = wait_readable(&[-1, -1], Duration::from_millis(5));
+        assert_eq!(r, vec![false, false]);
+    }
+
+    #[test]
+    fn raise_nofile_is_monotone() {
+        let cur = raise_nofile(0);
+        assert!(cur > 0, "soft NOFILE limit reported as 0");
+        // Re-raising to the current value is a no-op query.
+        assert_eq!(raise_nofile(cur), cur);
+        // Raising toward a higher target never lowers the limit.
+        assert!(raise_nofile(cur + 16) >= cur);
+    }
+}

@@ -1,0 +1,340 @@
+//! Front-door QoS and framing robustness tests: the slow-writer
+//! regression (a frame dribbled over many read timeouts must decode, not
+//! desync), tenant isolation (a flooding batch tenant sheds via explicit
+//! `Backpressure` instead of starving interactive traffic), shutdown
+//! gating (only the first/admin connection may stop the server), and the
+//! thread-per-connection A/B baseline staying bit-identical.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::admission::{
+    QosConfig, TenantPolicy, BATCH_TENANT_BASE,
+};
+use chameleon::coordinator::batcher::BatchPolicy;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{
+    CoordinatorClient, CoordinatorServer, Reply, ServeMode,
+};
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::net::protocol::{
+    Backpressure, Frame, Kind, RetrieveRequest, RetrieveResponse,
+};
+use chameleon::trace::Tracer;
+
+fn build_retriever(seed: u64) -> Retriever {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, 2000, 32, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 32, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..2)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 2), ScanEngine::Native, 10))
+        .collect();
+    let corpus = Corpus::generate(2000, 2048, config::CHUNK_LEN, seed ^ 2);
+    Retriever::new(ds, index, Dispatcher::new(nodes, 10), corpus)
+}
+
+fn queries(seed: u64) -> SyntheticDataset {
+    SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        2000,
+        32,
+        seed,
+    )
+}
+
+/// Trickle one `RetrieveRequest` frame over a raw socket in three chunks
+/// with 150 ms pauses — each pause is longer than the server's 100 ms
+/// read timeout, and the total spans > 3x of it. The reply must be the
+/// correct retrieval result, and a second request on the same connection
+/// must still work (no desync, no disconnect).
+fn dribble_roundtrip(addr: std::net::SocketAddr, seed: u64) {
+    let ds = queries(seed);
+    let mut local = build_retriever(seed);
+    let q = ds.query(0);
+    let want = local.retrieve(q).unwrap();
+    let want_tokens = local.gather_next_tokens(&want.ids);
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let bytes = RetrieveRequest {
+        query_id: 0,
+        gpu_id: 0,
+        query: q.to_vec(),
+        lists: vec![],
+        k: 10,
+        want_chunks: false,
+    }
+    .encode()
+    .to_bytes();
+    // Split mid-header (10 < 16) and then mid-payload.
+    let cuts = [10usize, bytes.len() / 2, bytes.len()];
+    let mut start = 0;
+    for &end in &cuts {
+        stream.write_all(&bytes[start..end]).unwrap();
+        stream.flush().unwrap();
+        start = end;
+        if end < bytes.len() {
+            std::thread::sleep(Duration::from_millis(150));
+        }
+    }
+    let f = Frame::read_from(&mut stream).unwrap();
+    assert_eq!(f.kind, Kind::RetrieveResponse, "dribbled frame desynced");
+    let resp = RetrieveResponse::decode(&f).unwrap();
+    assert_eq!(resp.query_id, 0);
+    assert_eq!(resp.tokens, want_tokens, "dribbled request got wrong reply");
+    assert_eq!(resp.dists, want.dists);
+
+    // The connection must survive the slow frame: a normal follow-up
+    // request round-trips on the same stream.
+    let q1 = ds.query(1);
+    let want1 = local.retrieve(q1).unwrap();
+    let want_tokens1 = local.gather_next_tokens(&want1.ids);
+    RetrieveRequest {
+        query_id: 1,
+        gpu_id: 0,
+        query: q1.to_vec(),
+        lists: vec![],
+        k: 10,
+        want_chunks: false,
+    }
+    .encode()
+    .write_to(&mut stream)
+    .unwrap();
+    let f1 = Frame::read_from(&mut stream).unwrap();
+    let resp1 = RetrieveResponse::decode(&f1).unwrap();
+    assert_eq!(resp1.query_id, 1);
+    assert_eq!(resp1.tokens, want_tokens1, "follow-up after dribble broken");
+}
+
+#[test]
+fn slow_writer_dribble_event_loop() {
+    let mut server = CoordinatorServer::spawn(
+        || build_retriever(51),
+        ServeMode::Concurrent(BatchPolicy::default()),
+    )
+    .unwrap();
+    dribble_roundtrip(server.addr, 51);
+    server.shutdown();
+}
+
+#[test]
+fn slow_writer_dribble_sequential() {
+    let mut server = CoordinatorServer::spawn_sequential(|| build_retriever(52)).unwrap();
+    dribble_roundtrip(server.addr, 52);
+    server.shutdown();
+}
+
+#[test]
+fn slow_writer_dribble_threaded() {
+    let mut server = CoordinatorServer::spawn(
+        || build_retriever(53),
+        ServeMode::Threaded(BatchPolicy::default()),
+    )
+    .unwrap();
+    dribble_roundtrip(server.addr, 53);
+    server.shutdown();
+}
+
+/// A batch tenant flooding the server must shed via explicit
+/// `Backpressure` frames (never lost requests), and interactive latency
+/// must stay within 2x of its unloaded p99 (plus scheduling grace).
+#[test]
+fn flooding_batch_tenant_cannot_starve_interactive() {
+    let base = QosConfig::default();
+    let qos = QosConfig {
+        // Tiny batch queue so the flood sheds quickly.
+        batch: TenantPolicy::unlimited_rate(4),
+        ..base
+    };
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) };
+    let mut server = CoordinatorServer::spawn_qos(
+        || build_retriever(61),
+        ServeMode::Concurrent(policy),
+        qos,
+        Tracer::off(),
+    )
+    .unwrap();
+    let addr = server.addr;
+    let stats = server.stats();
+    let ds = queries(61);
+
+    // Unloaded interactive baseline.
+    let mut interactive = CoordinatorClient::connect(addr, 0).unwrap();
+    let mut unloaded = Vec::new();
+    for i in 0..20 {
+        let t0 = Instant::now();
+        interactive.retrieve(ds.query(i % 32), &[], 10, false).unwrap();
+        unloaded.push(t0.elapsed());
+    }
+    unloaded.sort();
+    let unloaded_p99 = *unloaded.last().unwrap();
+
+    // Flood from the batch tenant while interactive keeps its cadence.
+    // Bursts are pipelined raw frames — a blocking client could never
+    // overfill its own queue — then exactly one reply per request is
+    // collected (Backpressure frames arrive out of FIFO order).
+    let flood = std::thread::spawn(move || {
+        let ds = queries(61);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let (mut sent, mut served, mut shed) = (0usize, 0usize, 0usize);
+        for burst in 0..25u64 {
+            for i in 0..16u64 {
+                RetrieveRequest {
+                    query_id: burst * 16 + i,
+                    gpu_id: BATCH_TENANT_BASE,
+                    query: ds.query(i as usize % 32).to_vec(),
+                    lists: vec![],
+                    k: 10,
+                    want_chunks: false,
+                }
+                .encode()
+                .write_to(&mut stream)
+                .unwrap();
+                sent += 1;
+            }
+            for _ in 0..16 {
+                let f = Frame::read_from(&mut stream).unwrap();
+                match f.kind {
+                    Kind::RetrieveResponse => served += 1,
+                    Kind::Backpressure => {
+                        let bp = Backpressure::decode(&f).unwrap();
+                        assert_eq!(bp.tenant, BATCH_TENANT_BASE);
+                        assert!(bp.reason == 1 || bp.reason == 2);
+                        shed += 1;
+                    }
+                    other => panic!("unexpected reply frame {other:?}"),
+                }
+            }
+        }
+        (sent, served, shed)
+    });
+
+    let mut loaded = Vec::new();
+    for i in 0..40 {
+        let t0 = Instant::now();
+        match interactive.try_retrieve(ds.query(i % 32), &[], 10, false).unwrap() {
+            Reply::Response(_) => {}
+            Reply::Backpressure(bp) => {
+                panic!("interactive request shed under batch flood: {bp:?}")
+            }
+        }
+        loaded.push(t0.elapsed());
+    }
+    loaded.sort();
+    let loaded_p99 = loaded[loaded.len() * 99 / 100];
+
+    let (sent, served, shed) = flood.join().unwrap();
+    // Conservation: every flooded request was answered or explicitly
+    // shed — nothing silently dropped.
+    assert_eq!(served + shed, sent, "flooder lost replies");
+    assert!(shed >= 1, "flood never saw Backpressure (queue_cap 4, bursts of 16)");
+    assert_eq!(stats.shed(), shed as u64);
+
+    // Isolation: interactive latency bounded despite the flood. The
+    // floor absorbs scheduler noise on loaded CI machines.
+    let bound = (unloaded_p99 * 2).max(Duration::from_millis(250));
+    assert!(
+        loaded_p99 <= bound,
+        "interactive starved: loaded p99 {loaded_p99:?} vs unloaded {unloaded_p99:?}"
+    );
+    server.shutdown();
+}
+
+/// Only the first (admin) connection may stop the server: a later
+/// client's Shutdown frame is counted and ignored, and service
+/// continues; the admin's Shutdown actually stops the front door.
+#[test]
+fn shutdown_gated_to_admin_connection() {
+    let mut server = CoordinatorServer::spawn(
+        || build_retriever(71),
+        ServeMode::Concurrent(BatchPolicy::default()),
+    )
+    .unwrap();
+    let addr = server.addr;
+    let stats = server.stats();
+    let ds = queries(71);
+
+    // conn 0 is the admin; connect it first and prove it works.
+    let mut admin = CoordinatorClient::connect(addr, 0).unwrap();
+    admin.retrieve(ds.query(0), &[], 10, false).unwrap();
+
+    // A second tenant's Shutdown must be denied.
+    let mut rogue = CoordinatorClient::connect(addr, 1).unwrap();
+    rogue.retrieve(ds.query(1), &[], 10, false).unwrap();
+    rogue.shutdown_coordinator();
+    let t0 = Instant::now();
+    while stats.shutdown_denied() == 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(stats.shutdown_denied() >= 1, "rogue shutdown not recorded");
+
+    // The server still serves existing and new connections.
+    rogue.retrieve(ds.query(2), &[], 10, false).unwrap();
+    let mut late = CoordinatorClient::connect(addr, 2).unwrap();
+    late.retrieve(ds.query(3), &[], 10, false).unwrap();
+
+    // The admin's Shutdown goes through: new connections are refused
+    // once the accept loop exits.
+    admin.shutdown_coordinator();
+    let t0 = Instant::now();
+    let mut stopped = false;
+    while t0.elapsed() < Duration::from_secs(10) {
+        match TcpStream::connect(addr) {
+            Err(_) => {
+                stopped = true;
+                break;
+            }
+            Ok(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    assert!(stopped, "admin shutdown did not stop the accept loop");
+    server.shutdown();
+}
+
+/// A/B baseline: the thread-per-connection mode must produce
+/// bit-identical results to in-process serving, pipelined.
+#[test]
+fn threaded_baseline_matches_reference() {
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) };
+    let mut server = CoordinatorServer::spawn(
+        || build_retriever(81),
+        ServeMode::Threaded(policy),
+    )
+    .unwrap();
+    let addr = server.addr;
+    let ds = queries(81);
+    let mut local = build_retriever(81);
+
+    let got: Vec<(usize, Vec<RetrieveResponse>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2usize)
+            .map(|c| {
+                let ds = &ds;
+                s.spawn(move || {
+                    let mut client =
+                        CoordinatorClient::connect(addr, c as u32).unwrap();
+                    let window: Vec<&[f32]> =
+                        (0..4).map(|i| ds.query(c * 4 + i)).collect();
+                    (c, client.retrieve_pipelined(&window, 10, false).unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (c, resps) in got {
+        assert_eq!(resps.len(), 4);
+        for (i, r) in resps.iter().enumerate() {
+            let want = local.retrieve(ds.query(c * 4 + i)).unwrap();
+            assert_eq!(r.tokens, local.gather_next_tokens(&want.ids), "c{c} q{i}");
+            assert_eq!(r.dists, want.dists, "c{c} q{i}");
+        }
+    }
+    server.shutdown();
+}
