@@ -24,8 +24,9 @@ use chameleon::config::DATASETS;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
-use chameleon::kselect::{ApproxHierarchicalQueue, HierarchicalConfig, SelectMode};
-use chameleon::pq::scan::{adc_scan, adc_scan_into, build_lut};
+use chameleon::kselect::{ApproxHierarchicalQueue, FusedSelector, HierarchicalConfig, SelectMode};
+use chameleon::pq::scan::{adc_scan, adc_scan_into, build_lut, scan_list_into_sink};
+use chameleon::pq::simd::{self, IsaKind, ScanKernels};
 use chameleon::util::json::{obj, Json};
 use chameleon::util::rng::Rng;
 use chameleon::util::timer::Bench;
@@ -202,6 +203,91 @@ fn scan_pipeline_ab(quick: bool) -> (Json, f64, f64) {
     (json, single_speedup, batch_speedup)
 }
 
+/// Scalar-vs-SIMD kernel ablation (ISSUE 8): GB/s/core per paper width
+/// for the scalar reference kernels vs the runtime-dispatched active set,
+/// with full-buffer bit-identity plus an end-to-end top-k pin through the
+/// fused sink. Returns the JSON block and per-width speedups; `main`
+/// asserts the >= 2x floor *after* `BENCH_scan.json` is written.
+fn simd_ablation(quick: bool) -> (Json, Vec<(usize, f64)>) {
+    let kernels = simd::active();
+    let scalar = ScanKernels::scalar();
+    let n = if quick { 20_000 } else { 60_000 };
+    let (warmup, iters) = if quick { (2, 10) } else { (3, 30) };
+    let mut bench = Bench::new("simd_vs_scalar_adc");
+    let mut rng = Rng::new(7);
+    let mut widths: BTreeMap<String, Json> = BTreeMap::new();
+    let mut speedups = Vec::new();
+    for m in [16usize, 32, 64] {
+        let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+        let lut: Vec<f32> = (0..m * 256).map(|_| rng.f32()).collect();
+        let mut out_sc = vec![0.0f32; n];
+        let mut out_si = vec![0.0f32; n];
+
+        // Full-buffer bit identity before timing anything.
+        scalar.scan_into(&codes, n, m, &lut, &mut out_sc);
+        kernels.scan_into(&codes, n, m, &lut, &mut out_si);
+        for (a, b) in out_sc.iter().zip(&out_si) {
+            assert_eq!(a.to_bits(), b.to_bits(), "m={m}: SIMD diverged from scalar");
+        }
+
+        // End-to-end top-k pin: the fused sink (which routes through the
+        // active kernels via `adc_scan_into`) must reproduce a selector
+        // fed by the scalar reference exactly — bits, ids, tie order.
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let mut sel = FusedSelector::new(100);
+        let mut scratch = Vec::new();
+        scan_list_into_sink(&codes, m, &lut, &ids, 0, &mut scratch, &mut sel);
+        let mut got = Vec::new();
+        sel.emit_into(&mut got);
+        let mut sel_ref = FusedSelector::new(100);
+        for (i, &d) in out_sc.iter().enumerate() {
+            sel_ref.offer(d, i as u64, ids[i]);
+        }
+        let mut want = Vec::new();
+        sel_ref.emit_into(&mut want);
+        assert_eq!(got.len(), want.len(), "m={m}: top-k lengths diverged");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.0.to_bits(), w.0.to_bits(), "m={m}: top-k bits diverged");
+            assert_eq!(g.1, w.1, "m={m}: top-k ids/tie order diverged");
+        }
+
+        let bytes = (n * m) as f64;
+        let sc = bench.case_n(&format!("scalar_m{m}"), warmup, iters, || {
+            scalar.scan_into(&codes, n, m, &lut, &mut out_sc);
+            out_sc[0]
+        });
+        let name = format!("{}_m{m}", kernels.kind.name());
+        let si = bench.case_n(&name, warmup, iters, || {
+            kernels.scan_into(&codes, n, m, &lut, &mut out_si);
+            out_si[0]
+        });
+        let speedup = sc.p50 / si.p50;
+        println!(
+            "    -> m={m}: scalar {:.2} GB/s/core, {} {:.2} GB/s/core ({speedup:.2}x)",
+            bytes / sc.p50 / 1e9,
+            kernels.kind.name(),
+            bytes / si.p50 / 1e9
+        );
+        widths.insert(
+            format!("m{m}"),
+            obj(vec![
+                ("scalar_gb_per_s", Json::Num(bytes / sc.p50 / 1e9)),
+                ("simd_gb_per_s", Json::Num(bytes / si.p50 / 1e9)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        );
+        speedups.push((m, speedup));
+    }
+    let json = obj(vec![
+        ("isa_detected", Json::Str(simd::detect().name().to_string())),
+        ("isa_features", Json::Str(simd::detected_features())),
+        ("kernel_active", Json::Str(kernels.kind.name().to_string())),
+        ("n_codes", Json::Num(n as f64)),
+        ("widths", Json::Obj(widths)),
+    ]);
+    (json, speedups)
+}
+
 fn main() {
     let quick = std::env::var("CHAM_BENCH_QUICK").is_ok();
 
@@ -237,6 +323,9 @@ fn main() {
     // Part 2b: the zero-copy scan-pipeline A/B.
     let (ab, single_speedup, batch_speedup) = scan_pipeline_ab(quick);
 
+    // Part 2c: scalar-vs-SIMD kernel ablation (ISSUE 8).
+    let (simd_json, simd_speedups) = simd_ablation(quick);
+
     // Machine-readable §Perf record for the cross-PR trajectory — written
     // *before* the acceptance asserts so a failing bar still uploads the
     // numbers that explain it.
@@ -245,6 +334,7 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("gb_per_s", Json::Obj(gb_per_s)),
         ("scan_pipeline", ab),
+        ("simd_ablation", simd_json),
     ]);
     std::fs::write("BENCH_scan.json", report.dump()).expect("writing BENCH_scan.json");
     println!("\nwrote BENCH_scan.json");
@@ -260,6 +350,26 @@ fn main() {
         "list-major batched round at B=8 must be >= 1.5x the query-major \
          round's throughput, got {batch_speedup:.2}x"
     );
+
+    // SIMD floor (ISSUE 8): >= 2x GB/s/core over the scalar unrolled
+    // kernels at m=16/32. Only meaningful when a SIMD ISA is active —
+    // forced-scalar runs and SIMD-less hosts skip with a printed reason.
+    if simd::active().kind == IsaKind::Scalar {
+        println!(
+            "simd-vs-scalar floor skipped: active kernel set is scalar \
+             (forced via env, or no SIMD ISA detected on this host)"
+        );
+    } else {
+        for &(m, s) in &simd_speedups {
+            if m == 64 {
+                continue; // L1-blocked m=64 is reported, not gated
+            }
+            assert!(
+                s >= 2.0,
+                "SIMD ADC scan at m={m} must be >= 2x scalar GB/s/core, got {s:.2}x"
+            );
+        }
+    }
 
     if quick {
         return;

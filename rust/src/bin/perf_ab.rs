@@ -1,25 +1,149 @@
-// §Perf A/B harness: unblocked vs L1-blocked m=64 ADC scan, clean core.
-use chameleon::pq::scan::{adc_scan_into, scan_unrolled_m64_unblocked};
+// §Perf A/B harness for the ADC scan path, clean core:
+//  * scalar vs SIMD GB/s/core per paper PQ width (m = 16/32/64),
+//  * the historical m=64 unblocked vs L1-blocked scalar comparison,
+//  * scalar vs SIMD LUT build over the shipped dataset geometries.
+//
+// `--kernel scalar|simd|avx2|avx512|neon|auto` picks the SIMD side without
+// env vars (requests are clamped to host capability); `--n` / `--iters`
+// resize the scan workload.
+use chameleon::pq::scan::{scan_blocked_64, scan_unrolled_m64_unblocked};
+use chameleon::pq::simd::{self, IsaKind, ScanKernels};
+use chameleon::util::cli::Args;
 use chameleon::util::rng::Rng;
-use chameleon::util::timer::sample;
 use chameleon::util::stats::Summary;
+use chameleon::util::timer::sample;
 
 fn main() {
+    let args = Args::parse();
+    let req = args.get_or("kernel", "auto");
+    let Some(kind) = IsaKind::parse(req) else {
+        eprintln!("unknown --kernel '{req}' (want scalar|simd|avx2|avx512|neon|auto)");
+        std::process::exit(2);
+    };
+    let simd_set = ScanKernels::for_kind(kind);
+    let scalar_set = ScanKernels::scalar();
+    let n = args.get_usize("n", 60_000);
+    let iters = args.get_usize("iters", 30);
+
+    println!(
+        "detected ISA: {} ({})",
+        simd::detect().name(),
+        simd::detected_features()
+    );
+    let active = simd::active();
+    for m in [16usize, 32, 64] {
+        println!("installed kernel m={m:>2}: {}", active.kernel_name(m));
+    }
+    println!(
+        "A/B kernel set: {} (requested '{req}', clamped to host)",
+        simd_set.kind.name()
+    );
+
+    // Scalar vs SIMD ADC scan, one row per paper width. Outputs are also
+    // checked bit-identical so the harness can't silently compare
+    // different answers.
+    println!("\nADC scan, n={n} codes/list:");
+    println!(
+        "{:<6} {:>12} {:>12} {:>9}",
+        "width", "scalar GB/s", "simd GB/s", "speedup"
+    );
     let mut rng = Rng::new(1);
-    let (n, m) = (60_000usize, 64usize);
-    let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
-    let lut: Vec<f32> = (0..m * 256).map(|_| rng.f32()).collect();
-    let mut out = vec![0.0f32; n];
-    let bytes = (n * m) as f64;
-    let a = Summary::of(&sample(5, 30, || {
-        scan_unrolled_m64_unblocked(&codes, n, &lut, &mut out);
-        out[0]
-    }));
-    let b = Summary::of(&sample(5, 30, || {
-        adc_scan_into(&codes, n, m, &lut, &mut out);
-        out[0]
-    }));
-    println!("m64 unblocked: p50={:.3}ms  {:.2} GB/s/core", a.p50*1e3, bytes/a.p50/1e9);
-    println!("m64 blocked:   p50={:.3}ms  {:.2} GB/s/core", b.p50*1e3, bytes/b.p50/1e9);
-    println!("speedup: {:.2}x", a.p50 / b.p50);
+    for m in [16usize, 32, 64] {
+        let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+        let lut: Vec<f32> = (0..m * 256).map(|_| rng.f32()).collect();
+        let bytes = (n * m) as f64;
+        let mut out_sc = vec![0.0f32; n];
+        let mut out_si = vec![0.0f32; n];
+        scalar_set.scan_into(&codes, n, m, &lut, &mut out_sc);
+        simd_set.scan_into(&codes, n, m, &lut, &mut out_si);
+        assert_eq!(
+            out_sc.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            out_si.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            "m={m}: SIMD kernel diverged from scalar reference"
+        );
+        let sc = Summary::of(&sample(3, iters, || {
+            scalar_set.scan_into(&codes, n, m, &lut, &mut out_sc);
+            out_sc[0]
+        }));
+        let si = Summary::of(&sample(3, iters, || {
+            simd_set.scan_into(&codes, n, m, &lut, &mut out_si);
+            out_si[0]
+        }));
+        println!(
+            "m={m:<4} {:>12.2} {:>12.2} {:>8.2}x",
+            bytes / sc.p50 / 1e9,
+            bytes / si.p50 / 1e9,
+            sc.p50 / si.p50
+        );
+    }
+
+    // Historical scalar-vs-scalar A/B: is L1 column blocking still worth
+    // it at m=64 on this host?
+    {
+        let m = 64usize;
+        let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+        let lut: Vec<f32> = (0..m * 256).map(|_| rng.f32()).collect();
+        let mut out = vec![0.0f32; n];
+        let bytes = (n * m) as f64;
+        let a = Summary::of(&sample(3, iters, || {
+            scan_unrolled_m64_unblocked(&codes, n, &lut, &mut out);
+            out[0]
+        }));
+        let b = Summary::of(&sample(3, iters, || {
+            scan_blocked_64(&codes, n, &lut, &mut out);
+            out[0]
+        }));
+        println!("\nm=64 scalar blocking A/B:");
+        println!(
+            "unblocked: p50={:.3}ms  {:.2} GB/s/core",
+            a.p50 * 1e3,
+            bytes / a.p50 / 1e9
+        );
+        println!(
+            "blocked:   p50={:.3}ms  {:.2} GB/s/core",
+            b.p50 * 1e3,
+            bytes / b.p50 / 1e9
+        );
+        println!("speedup: {:.2}x", a.p50 / b.p50);
+    }
+
+    // Scalar vs SIMD LUT build over the shipped dataset geometries.
+    println!("\nLUT build (one query), scalar vs simd:");
+    println!(
+        "{:<10} {:>9} {:>13} {:>11} {:>9}",
+        "dataset", "m x dsub", "scalar us", "simd us", "speedup"
+    );
+    for (name, m, dsub) in [
+        ("sift", 16usize, 8usize),
+        ("deep", 16, 6),
+        ("syn512", 32, 16),
+        ("syn1024", 64, 16),
+    ] {
+        let centroids: Vec<f32> = (0..m * 256 * dsub).map(|_| rng.f32()).collect();
+        let query: Vec<f32> = (0..m * dsub).map(|_| rng.f32()).collect();
+        let mut lut_sc = vec![0.0f32; m * 256];
+        let mut lut_si = vec![0.0f32; m * 256];
+        scalar_set.build_lut_into(&centroids, &query, m, dsub, &mut lut_sc);
+        simd_set.build_lut_into(&centroids, &query, m, dsub, &mut lut_si);
+        assert_eq!(
+            lut_sc.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            lut_si.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            "{name}: SIMD LUT build diverged from scalar reference"
+        );
+        let sc = Summary::of(&sample(10, 200, || {
+            scalar_set.build_lut_into(&centroids, &query, m, dsub, &mut lut_sc);
+            lut_sc[0]
+        }));
+        let si = Summary::of(&sample(10, 200, || {
+            simd_set.build_lut_into(&centroids, &query, m, dsub, &mut lut_si);
+            lut_si[0]
+        }));
+        let geom = format!("{m}x{dsub}");
+        println!(
+            "{name:<10} {geom:>9} {:>13.2} {:>11.2} {:>8.2}x",
+            sc.p50 * 1e6,
+            si.p50 * 1e6,
+            sc.p50 / si.p50
+        );
+    }
 }

@@ -133,6 +133,15 @@ pub struct Dispatcher {
     /// the calling thread (the sequential baseline, no spawn overhead).
     /// Ignored in cluster mode (the engine owns one worker per member).
     pub n_threads: usize,
+    /// Pin each pool worker of a fan-out round to a planned CPU
+    /// (`util::affinity::worker_cpus`: round-robin across NUMA nodes) so
+    /// memory-bound scans stay near their shard's arena. Defaults to the
+    /// `CHAM_PIN` env knob (the CLI's `--pin-workers` sets it); no-op
+    /// where affinity is unsupported, and never applied to the inline
+    /// single-chunk path (pinning the caller would leak past the round).
+    /// Cluster mode pins via
+    /// [`crate::cluster::engine::ClusterConfig::pin_workers`] instead.
+    pub pin_workers: bool,
     next_ticket: u64,
     pending: Vec<PendingScan>,
     /// Reusable per-round LUT arena: one (m, 256) table per job, built in
@@ -167,6 +176,7 @@ impl Dispatcher {
             net: LogGp::default(),
             k,
             n_threads: 0,
+            pin_workers: crate::util::affinity::env_pin_requested(),
             next_ticket: 0,
             pending: Vec::new(),
             lut_arena: Vec::new(),
@@ -184,6 +194,13 @@ impl Dispatcher {
         let mut d = Dispatcher::over(Vec::new(), k);
         d.cluster = Some(engine);
         d
+    }
+
+    /// Builder: enable/disable NUMA pinning of pool workers (see
+    /// [`Dispatcher::pin_workers`]) without going through `CHAM_PIN`.
+    pub fn with_pinning(mut self, pin: bool) -> Dispatcher {
+        self.pin_workers = pin;
+        self
     }
 
     /// The cluster engine, if this dispatcher runs the replicated tier.
@@ -428,7 +445,13 @@ impl Dispatcher {
             None => {
                 let threads = self.effective_threads();
                 let chunks = chunk_sizes(self.nodes.len(), threads);
-                let round = run_jobs(&mut self.nodes, &chunks, &jobs, codebook);
+                let round = run_jobs(
+                    &mut self.nodes,
+                    &chunks,
+                    &jobs,
+                    codebook,
+                    self.pin_workers,
+                );
                 (chunks, round)
             }
         };
@@ -657,20 +680,36 @@ fn run_jobs(
     chunks: &[usize],
     jobs: &[ScanJob],
     codebook: &[f32],
+    pin: bool,
 ) -> Result<Vec<Vec<NodeResult>>> {
     let n_nodes = nodes.len();
     let per_node: Vec<Vec<NodeResult>> = if chunks.len() <= 1 {
+        // Inline on the caller — never pinned (a lingering affinity mask
+        // on the dispatcher thread would outlive the round).
         scan_chunk(nodes, jobs, codebook)?
     } else {
+        // One planned CPU per pool worker, interleaved across NUMA nodes
+        // so co-scheduled chunks spread over sockets.
+        let plan = if pin {
+            crate::util::affinity::worker_cpus(chunks.len())
+        } else {
+            Vec::new()
+        };
         let joined = std::thread::scope(|s| {
             let mut rest = nodes;
             let mut handles = Vec::with_capacity(chunks.len());
-            for &c in chunks {
+            for (w, &c) in chunks.iter().enumerate() {
                 // `take` moves the tail out of `rest` so the split halves
                 // keep the full outer lifetime the spawned thread needs.
                 let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(c);
                 rest = tail;
-                handles.push(s.spawn(move || scan_chunk(chunk, jobs, codebook)));
+                let pin_cpu = plan.get(w).copied();
+                handles.push(s.spawn(move || {
+                    if let Some(cpu) = pin_cpu {
+                        let _ = crate::util::affinity::pin_to_cpu(cpu);
+                    }
+                    scan_chunk(chunk, jobs, codebook)
+                }));
             }
             handles.into_iter().map(|h| h.join()).collect::<Vec<_>>()
         });

@@ -82,6 +82,12 @@ pub struct ClusterConfig {
     pub breaker_threshold: u32,
     /// Primary-selection policy.
     pub select: SelectPolicy,
+    /// Pin each worker thread to a planned CPU (`util::affinity`:
+    /// round-robin across NUMA nodes), so a replica's memory-bound scans
+    /// stay on the socket owning its flat arena. No-op where affinity is
+    /// unsupported; successfully pinned workers report their CPU in
+    /// [`ClusterStats::pinned`].
+    pub pin_workers: bool,
 }
 
 impl Default for ClusterConfig {
@@ -91,6 +97,7 @@ impl Default for ClusterConfig {
             attempt_timeout: Duration::from_secs(10),
             breaker_threshold: 3,
             select: SelectPolicy::HealthAware,
+            pin_workers: false,
         }
     }
 }
@@ -98,7 +105,7 @@ impl Default for ClusterConfig {
 /// Counters over the engine's lifetime (observable via
 /// [`ClusterEngine::stats`]; the CLI report and the chaos smoke print
 /// them).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct ClusterStats {
     /// Rounds executed.
     pub rounds: u64,
@@ -116,11 +123,16 @@ pub struct ClusterStats {
     pub breaker_trips: u64,
     /// Replies that arrived after their shard was already resolved.
     pub late_responses: u64,
+    /// `(node, cpu)` for every worker that successfully pinned and has
+    /// served at least one scan since — empty unless
+    /// [`ClusterConfig::pin_workers`] is on and the platform supports
+    /// affinity.
+    pub pinned: Vec<(NodeId, usize)>,
 }
 
 impl ClusterStats {
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "rounds={} attempts={} retries={} failovers={} hedges={} \
              hedge_wins={} breaker_trips={} late_responses={}",
             self.rounds,
@@ -131,7 +143,18 @@ impl ClusterStats {
             self.hedge_wins,
             self.breaker_trips,
             self.late_responses
-        )
+        );
+        if !self.pinned.is_empty() {
+            s.push_str(" pinned=[");
+            for (i, (node, cpu)) in self.pinned.iter().enumerate() {
+                if i > 0 {
+                    s.push(' ');
+                }
+                s.push_str(&format!("n{node}@cpu{cpu}"));
+            }
+            s.push(']');
+        }
+        s
     }
 }
 
@@ -168,6 +191,9 @@ struct ScanReply {
     /// Worker-observed scan wall (execution on the replica, excluding
     /// queue wait), feeding the EWMA and the hedge-deadline window.
     latency_s: f64,
+    /// CPU the worker executed on, when it was successfully pinned
+    /// (None: unpinned worker or unsupported platform).
+    cpu: Option<usize>,
 }
 
 enum Command {
@@ -187,11 +213,20 @@ struct Worker {
 }
 
 impl Worker {
-    fn spawn(id: NodeId, mut backend: Box<dyn ScanBackend>) -> Result<Worker> {
+    /// `pin_cpu`: planned CPU from `util::affinity::worker_cpu` — the
+    /// thread pins itself at startup; if the kernel refuses (sandbox,
+    /// unsupported platform) it runs unpinned and reports no CPU.
+    fn spawn(
+        id: NodeId,
+        mut backend: Box<dyn ScanBackend>,
+        pin_cpu: Option<usize>,
+    ) -> Result<Worker> {
         let (tx, rx) = channel::<Command>();
         let handle = std::thread::Builder::new()
             .name(format!("cluster-node-{id}"))
             .spawn(move || {
+                let pinned =
+                    pin_cpu.is_some_and(crate::util::affinity::pin_to_cpu);
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Command::Scan { seq, shard, round, reply } => {
@@ -215,6 +250,11 @@ impl Worker {
                                 node: id,
                                 result,
                                 latency_s: t0.elapsed().as_secs_f64(),
+                                cpu: if pinned {
+                                    crate::util::affinity::current_cpu()
+                                } else {
+                                    None
+                                },
                             });
                         }
                         Command::Drain => backend.drain(),
@@ -282,6 +322,12 @@ pub struct ClusterEngine {
     lut_nodes: std::collections::BTreeSet<NodeId>,
     fpga: FpgaModel,
     seq: u64,
+    /// Workers spawned so far — indexes into the NUMA-interleaved CPU
+    /// plan (`util::affinity::worker_cpu`) when pinning is on.
+    spawned: usize,
+    /// node → observed CPU for successfully pinned workers (from scan
+    /// replies; surfaced via [`ClusterStats::pinned`]).
+    pinned: BTreeMap<NodeId, usize>,
     /// One-copy codebook cache: rounds share one `Arc` instead of
     /// re-copying ~100 KB per query. Validated by content comparison (a
     /// cheap linear scan against the caller's slice), never by pointer
@@ -311,6 +357,8 @@ impl ClusterEngine {
             lut_nodes: std::collections::BTreeSet::new(),
             fpga: FpgaModel::default(),
             seq: 0,
+            spawned: 0,
+            pinned: BTreeMap::new(),
             codebook_cache: None,
         };
         for node in nodes {
@@ -353,9 +401,20 @@ impl ClusterEngine {
             self.lut_nodes.insert(node.id);
         }
         self.wants_lut = !self.lut_nodes.is_empty();
-        let worker = Worker::spawn(node.id, node.backend)?;
+        let worker = Worker::spawn(node.id, node.backend, self.next_pin_cpu())?;
         self.workers.insert(node.id, worker);
         Ok(epoch)
+    }
+
+    /// Planned CPU for the next worker: round-robin over the
+    /// NUMA-interleaved plan when pinning is enabled.
+    fn next_pin_cpu(&mut self) -> Option<usize> {
+        if !self.cfg.pin_workers {
+            return None;
+        }
+        let cpu = crate::util::affinity::worker_cpu(self.spawned);
+        self.spawned += 1;
+        cpu
     }
 
     /// Start retiring a member: excluded from new selection; a remote
@@ -375,6 +434,7 @@ impl ClusterEngine {
     pub fn remove(&mut self, id: NodeId) -> Result<u64> {
         let epoch = self.map.remove(id)?;
         self.workers.remove(&id); // Worker::drop detaches + joins
+        self.pinned.remove(&id);
         self.health.forget(id);
         // Removing the last LUT consumer lets later rounds skip the
         // per-query ADC-table build entirely.
@@ -406,9 +466,14 @@ impl ClusterEngine {
         // (old map, old workers) instead of half-swapped.
         let mut new_map = self.map.clone();
         let epoch = new_map.swap(n_shards, &members)?;
+        // The replacement set restarts the CPU plan from slot 0 (the old
+        // workers are all about to detach).
+        self.spawned = 0;
+        self.pinned.clear();
         let mut workers = BTreeMap::new();
         for node in nodes {
-            workers.insert(node.id, Worker::spawn(node.id, node.backend)?);
+            let pin_cpu = self.next_pin_cpu();
+            workers.insert(node.id, Worker::spawn(node.id, node.backend, pin_cpu)?);
         }
         self.map = new_map;
         self.m = m;
@@ -449,7 +514,9 @@ impl ClusterEngine {
     }
 
     pub fn stats(&self) -> ClusterStats {
-        self.stats
+        let mut s = self.stats.clone();
+        s.pinned = self.pinned.iter().map(|(&n, &c)| (n, c)).collect();
+        s
     }
 
     pub fn epoch(&self) -> u64 {
@@ -500,7 +567,7 @@ impl ClusterEngine {
             "{}\n{}\nstats: {}\n",
             self.map.render(),
             self.health.render(),
-            self.stats.render()
+            self.stats().render()
         )
     }
 
@@ -643,6 +710,9 @@ impl ClusterEngine {
                 // round's own (dropped) channel, so this never fires —
                 // but a bug there must not corrupt this round.
                 continue;
+            }
+            if let Some(cpu) = reply.cpu {
+                self.pinned.insert(reply.node, cpu);
             }
             let st = &mut states[reply.shard];
             let attempt = match st

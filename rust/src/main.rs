@@ -50,6 +50,12 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    if args.flag("pin-workers") {
+        // Funnel the flag through the env knob so every layer that
+        // spawns scan workers (dispatcher pools, cluster engines) sees
+        // it without threading a bool through each constructor.
+        std::env::set_var("CHAM_PIN", "1");
+    }
     match args.subcommand.as_deref() {
         Some("demo") => demo(args),
         Some("search") => search(args),
@@ -77,12 +83,14 @@ fn print_help() {
          serve --net [--clients 4] [--queries 32] [--sequential | --threaded]\n\
                 [--poll-threads 2] [--interactive-queue 4096] [--batch-queue 1024]\n\
                 [--batch-rate QPS] [--max-batch 16] [--max-wait-us 200] [--nodes 2]\n\
-                [--replication R] [--hedge-quantile q]\n\
+                [--replication R] [--hedge-quantile q] [--pin-workers]\n\
                 [--remote host:port,host:port]   concurrent coordinator over\n\
                 TCP; --remote uses running chamvs-node memory nodes;\n\
-                --replication > 1 runs the elastic replicated tier\n\
+                --replication > 1 runs the elastic replicated tier;\n\
+                --pin-workers NUMA-pins scan workers (also CHAM_PIN=1)\n\
          cluster [--nodes 4] [--replication 2] [--queries 32]\n\
-                [--hedge-quantile 0.95]   elastic-tier failover report\n\
+                [--hedge-quantile 0.95] [--pin-workers]   elastic-tier\n\
+                failover report (pinned CPUs appear in the stats line)\n\
          loadgen [--qps 200 | --sweep 100,200,400] [--requests 400]\n\
                 [--conns 4] [--nodes 2] [--unique 64] [--zipf 0.99]\n\
                 [--batch-fraction 0.2] [--burst-period-s P --burst-duty D]\n\
@@ -94,7 +102,9 @@ fn print_help() {
                 report trace [--trace spans.json]   aggregate a span dump\n\
                 (default: a small in-process traced run)\n\
          \n\
-         Common options: --n <scaled db size> --seed <u64> --artifacts <dir>"
+         Common options: --n <scaled db size> --seed <u64> --artifacts <dir>\n\
+         Scan kernels: runtime SIMD dispatch (see `perf-ab`); override with\n\
+                CHAM_KERNEL=scalar|avx2|avx512|neon|auto or CHAM_FORCE_SCALAR=1"
     );
 }
 
@@ -267,6 +277,13 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
     if cluster_cfg.is_some() {
         println!(
             "[serve-net] elastic tier: replication={replication} hedge_quantile={hedge_quantile}"
+        );
+    }
+    if chameleon::util::affinity::env_pin_requested() {
+        println!(
+            "[serve-net] worker pinning: on (affinity supported={}, cpus={})",
+            chameleon::util::affinity::supported(),
+            chameleon::util::affinity::allowed_cpus().len()
         );
     }
 
@@ -590,7 +607,10 @@ fn cluster_config(replication: usize, hedge_quantile: f64) -> Option<ClusterConf
     if replication <= 1 && hedge_quantile <= 0.0 {
         return None;
     }
-    let mut cfg = ClusterConfig::default();
+    let mut cfg = ClusterConfig {
+        pin_workers: chameleon::util::affinity::env_pin_requested(),
+        ..Default::default()
+    };
     if hedge_quantile > 0.0 {
         cfg.hedge = Some(HedgeConfig {
             quantile: hedge_quantile.min(0.999),
@@ -742,6 +762,7 @@ fn cluster_cmd(args: &Args) -> Result<()> {
 
     let mut cfg = cluster_config(replication, hedge_quantile)
         .unwrap_or_default();
+    cfg.pin_workers = chameleon::util::affinity::env_pin_requested();
     // Survive a dead replica without waiting out long socket deadlines,
     // and pin the victim as its shard's primary so the demo's mid-run
     // death deterministically happens (health-aware selection is sticky

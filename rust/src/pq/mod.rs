@@ -9,6 +9,7 @@ pub mod codebook;
 pub mod flat;
 pub mod kmeans;
 pub mod scan;
+pub mod simd;
 
 pub use codebook::PqCodebook;
 pub use kmeans::kmeans;

@@ -30,6 +30,21 @@ pub fn build_lut_raw_into(
     assert_eq!(query.len(), m * dsub);
     assert_eq!(centroids.len(), m * KSUB * dsub);
     assert_eq!(out.len(), m * KSUB);
+    super::simd::active().build_lut_into(centroids, query, m, dsub, out);
+}
+
+/// Scalar reference LUT build — the pre-SIMD hot loop, kept as the
+/// bit-identity ground truth and the `CHAM_FORCE_SCALAR` fallback.
+pub fn build_lut_scalar_into(
+    centroids: &[f32],
+    query: &[f32],
+    m: usize,
+    dsub: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(query.len(), m * dsub);
+    assert_eq!(centroids.len(), m * KSUB * dsub);
+    assert_eq!(out.len(), m * KSUB);
     for i in 0..m {
         let sub = &query[i * dsub..(i + 1) * dsub];
         let cents = &centroids[i * KSUB * dsub..(i + 1) * KSUB * dsub];
@@ -55,9 +70,21 @@ pub fn adc_scan(codes: &[u8], n: usize, m: usize, lut: &[f32]) -> Vec<f32> {
 
 /// Scan into a caller-provided buffer (hot path: zero allocation).
 ///
-/// Dispatches to an m-specialized unrolled loop for the paper's PQ widths;
-/// the generic path handles anything else.
+/// Dispatches through the process-wide kernel set (`pq::simd::active()`):
+/// explicit-SIMD kernels for the paper's PQ widths where the host supports
+/// them, the scalar m-specialized loops otherwise — bit-identical either
+/// way. Override with `CHAM_FORCE_SCALAR=1` / `CHAM_KERNEL=...`.
 pub fn adc_scan_into(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+    assert_eq!(codes.len(), n * m);
+    assert_eq!(lut.len(), m * KSUB);
+    assert!(out.len() >= n);
+    super::simd::active().scan_into(codes, n, m, lut, out);
+}
+
+/// Scalar m-specialized scan — the pre-SIMD hot path, kept as the
+/// bit-identity ground truth, the SIMD kernels' row-tail handler, and the
+/// `CHAM_FORCE_SCALAR` fallback.
+pub fn adc_scan_scalar_into(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
     assert_eq!(codes.len(), n * m);
     assert_eq!(lut.len(), m * KSUB);
     assert!(out.len() >= n);
@@ -88,7 +115,10 @@ pub fn scan_generic(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f3
 /// Const-generic unrolled scan: four independent accumulators break the
 /// lookup->add dependency chain the paper blames for CPU inefficiency
 /// (Sec 2.3); the compiler keeps the LUT base addresses in registers.
-fn scan_unrolled<const M: usize>(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+///
+/// Public so the SIMD dispatcher (`pq::simd`) can install it as the
+/// scalar kernel set and A/B harnesses can time it directly.
+pub fn scan_unrolled<const M: usize>(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
     debug_assert_eq!(M % 4, 0);
     for v in 0..n {
         let code = &codes[v * M..(v + 1) * M];
@@ -116,7 +146,7 @@ pub fn scan_unrolled_m64_unblocked(codes: &[u8], n: usize, lut: &[f32], out: &mu
 /// the first's partial sums; code rows are 64 B (one cache line), so the
 /// extra pass re-reads each line once — cheap next to the avoided LUT
 /// misses.
-fn scan_blocked_64(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+pub fn scan_blocked_64(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
     const M: usize = 64;
     const HALF: usize = 32;
     for v in 0..n {
@@ -208,18 +238,55 @@ mod tests {
     fn unrolled_matches_generic_for_paper_widths() {
         let mut rng = Rng::new(1);
         for &m in &[16usize, 32, 64] {
-            let n = 257; // deliberately not a multiple of anything
-            let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
-            let lut = random_lut(&mut rng, m);
-            let mut fast = vec![0.0f32; n];
-            let mut slow = vec![0.0f32; n];
-            adc_scan_into(&codes, n, m, &lut, &mut fast);
-            scan_generic(&codes, n, m, &lut, &mut slow);
-            for (a, b) in fast.iter().zip(&slow) {
-                // Different accumulation order: relative f32 tolerance.
-                assert!((a - b).abs() < 1e-5 * a.abs().max(1.0), "{a} vs {b}");
+            // Not a multiple of anything — and below, sizes exercising
+            // empty input and every SIMD lane-count tail (4/8/16).
+            for &n in &[257usize, 0, 1, 7, 9, 15, 17, 33] {
+                let codes: Vec<u8> =
+                    (0..n * m).map(|_| rng.below(256) as u8).collect();
+                let lut = random_lut(&mut rng, m);
+                let mut fast = vec![0.0f32; n];
+                let mut slow = vec![0.0f32; n];
+                let mut scalar = vec![0.0f32; n];
+                adc_scan_into(&codes, n, m, &lut, &mut fast);
+                scan_generic(&codes, n, m, &lut, &mut slow);
+                adc_scan_scalar_into(&codes, n, m, &lut, &mut scalar);
+                for (a, b) in fast.iter().zip(&slow) {
+                    // Different accumulation order: relative f32 tolerance.
+                    assert!((a - b).abs() < 1e-5 * a.abs().max(1.0), "{a} vs {b}");
+                }
+                // Whatever kernel set is active (SIMD or scalar), the
+                // dispatched result is bit-identical to the scalar
+                // m-specialized reference.
+                for (a, b) in fast.iter().zip(&scalar) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "m={m} n={n}: {a} vs {b}");
+                }
             }
         }
+    }
+
+    #[test]
+    fn prop_active_kernels_bit_match_scalar_reference() {
+        prop::check(
+            "adc-scan-simd-bit-identity",
+            |rng| {
+                let m = [16, 32, 64][rng.below(3)];
+                let n = rng.below(300); // includes n = 0
+                let codes: Vec<u8> =
+                    (0..n * m).map(|_| rng.below(256) as u8).collect();
+                let lut: Vec<f32> =
+                    (0..m * KSUB).map(|_| rng.normal().abs()).collect();
+                (m, n, codes, lut)
+            },
+            |(m, n, codes, lut)| {
+                let mut fast = vec![f32::NAN; *n];
+                let mut scalar = vec![f32::NAN; *n];
+                adc_scan_into(codes, *n, *m, lut, &mut fast);
+                adc_scan_scalar_into(codes, *n, *m, lut, &mut scalar);
+                for (a, b) in fast.iter().zip(&scalar) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "m={m} n={n}");
+                }
+            },
+        );
     }
 
     #[test]
@@ -285,6 +352,26 @@ mod tests {
         assert_eq!(got.len(), want.len());
         for (a, b) in got.iter().zip(&want) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn dispatched_lut_bit_matches_scalar_reference() {
+        // Every shipped dataset geometry (dsub 2/6/8/16) plus an odd
+        // width hitting the generic arm: the active (possibly SIMD) LUT
+        // build must be bit-identical to the scalar loop.
+        let mut rng = Rng::new(11);
+        for &(m, dsub) in &[(16usize, 8usize), (16, 6), (32, 16), (64, 16), (4, 2), (8, 5)] {
+            let centroids: Vec<f32> =
+                (0..m * KSUB * dsub).map(|_| rng.normal()).collect();
+            let q: Vec<f32> = (0..m * dsub).map(|_| rng.normal()).collect();
+            let mut fast = vec![f32::NAN; m * KSUB];
+            let mut scalar = vec![f32::NAN; m * KSUB];
+            build_lut_raw_into(&centroids, &q, m, dsub, &mut fast);
+            build_lut_scalar_into(&centroids, &q, m, dsub, &mut scalar);
+            for (i, (a, b)) in fast.iter().zip(&scalar).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "m={m} dsub={dsub} slot {i}");
+            }
         }
     }
 

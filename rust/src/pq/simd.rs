@@ -1,0 +1,980 @@
+//! Explicit-SIMD ADC scan kernels with one-time runtime dispatch.
+//!
+//! The paper's CPU-inefficiency argument (Sec 2.3) is that PQ distance
+//! scanning lands around ~1 GB/s/core even "SIMD-optimized"; the scalar
+//! unrolled kernels in `pq::scan` sit in exactly that band. This module
+//! pushes the scan toward the roofline with `core::arch` intrinsics (no
+//! new crates): AVX2 on x86-64, AVX-512 behind the opt-in `avx512` cargo
+//! feature, and NEON on aarch64, all behind the existing m-specialized
+//! kernel interface so `adc_scan_into`, `scan_list_into_sink`, and the
+//! fused selector are untouched as callers.
+//!
+//! **Bit-identity contract.** Kernels vectorize *across vectors*: each
+//! SIMD lane owns one code row, and accumulator `u` (of four) sums
+//! columns `4g + u` in ascending `g` — exactly the scalar unrolled
+//! kernel's `a0..a3` assignment — before the final `(a0+a1)+(a2+a3)`
+//! combine. Per lane the float additions happen in the same order as the
+//! scalar m-specialized reference (`adc_scan_scalar_into`), so distances
+//! — and therefore top-k — are bit-for-bit identical at every width.
+//! The m=64 kernel keeps the two-pass L1 column-blocking structure
+//! (32-column halves). Row tails that don't fill a SIMD block fall back
+//! to the scalar kernel, which preserves per-row operation order.
+//!
+//! The LUT build (`build_lut_raw_into`, the other per-query hot loop)
+//! gets the same treatment: lanes own centroids, the subtract-square
+//! accumulation runs in scalar `j` order with explicit sub/mul/add (no
+//! FMA contraction), so LUT entries are bit-identical too.
+//!
+//! **Dispatch.** `active()` resolves the kernel set once per process
+//! (`OnceLock`): runtime feature detection picks the best compiled-in
+//! ISA, overridable via `CHAM_FORCE_SCALAR=1` or
+//! `CHAM_KERNEL=scalar|avx2|avx512|neon|auto`. Env-free A/B (perf-ab,
+//! benches, tests) goes through `ScanKernels::for_kind`, which clamps
+//! the request to what the host actually supports.
+
+use std::sync::OnceLock;
+
+use super::scan;
+
+/// Scan kernel signature: `(codes, n, lut, out)` with a fixed PQ width
+/// baked into the kernel (`codes.len() == n * m`, `lut.len() == m * 256`).
+pub type ScanFn = fn(&[u8], usize, &[f32], &mut [f32]);
+
+/// LUT-build kernel signature: `(centroids, query, m, dsub, out)`.
+pub type LutFn = fn(&[f32], &[f32], usize, usize, &mut [f32]);
+
+/// Instruction-set families a kernel set can be built from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IsaKind {
+    /// The scalar m-specialized reference kernels in `pq::scan`.
+    Scalar,
+    /// 8-lane x86-64 kernels (`vgatherdps` + `vaddps`).
+    Avx2,
+    /// 16-lane x86-64 kernels; requires building with `--features avx512`
+    /// *and* runtime `avx512f`, otherwise clamps to AVX2.
+    Avx512,
+    /// 4-lane aarch64 kernels (NEON is baseline on aarch64).
+    Neon,
+}
+
+impl IsaKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsaKind::Scalar => "scalar",
+            IsaKind::Avx2 => "avx2",
+            IsaKind::Avx512 => "avx512",
+            IsaKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a kernel-override token (`CHAM_KERNEL`, `perf-ab --kernel`).
+    /// `auto`/`simd` resolve to the detected best; unknown tokens are
+    /// `None` so callers can fall through to auto.
+    pub fn parse(s: &str) -> Option<IsaKind> {
+        match s {
+            "scalar" => Some(IsaKind::Scalar),
+            "avx2" => Some(IsaKind::Avx2),
+            "avx512" => Some(IsaKind::Avx512),
+            "neon" => Some(IsaKind::Neon),
+            "auto" | "simd" => Some(detect()),
+            _ => None,
+        }
+    }
+}
+
+/// Best ISA this binary can actually run on this host: compile-time
+/// gates (arch, the `avx512` feature) intersected with runtime CPUID.
+pub fn detect() -> IsaKind {
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> IsaKind {
+    #[cfg(feature = "avx512")]
+    {
+        if is_x86_feature_detected!("avx512f") {
+            return IsaKind::Avx512;
+        }
+    }
+    if is_x86_feature_detected!("avx2") {
+        IsaKind::Avx2
+    } else {
+        IsaKind::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> IsaKind {
+    // NEON is mandatory in AArch64; every Rust aarch64 target has it.
+    IsaKind::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> IsaKind {
+    IsaKind::Scalar
+}
+
+/// Human-readable runtime feature summary for banners (`perf-ab`,
+/// bench records). Reports what the *CPU* has, independent of what this
+/// build can use — e.g. `avx512f` shows up even without `--features
+/// avx512`, so a capability gap is visible in the output.
+pub fn detected_features() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    fill_features(&mut feats);
+    if feats.is_empty() {
+        "none".to_string()
+    } else {
+        feats.join("+")
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn fill_features(feats: &mut Vec<&'static str>) {
+    if is_x86_feature_detected!("avx2") {
+        feats.push("avx2");
+    }
+    if is_x86_feature_detected!("avx512f") {
+        feats.push("avx512f");
+    }
+    if is_x86_feature_detected!("avx512bw") {
+        feats.push("avx512bw");
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn fill_features(feats: &mut Vec<&'static str>) {
+    feats.push("neon");
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn fill_features(_feats: &mut Vec<&'static str>) {}
+
+/// A resolved kernel set: one scan kernel per paper PQ width plus the
+/// LUT-build kernel. Widths outside {16, 32, 64} always take the scalar
+/// `scan_generic` path (they are not hot in any shipped dataset).
+#[derive(Clone, Copy)]
+pub struct ScanKernels {
+    pub kind: IsaKind,
+    m16: ScanFn,
+    m32: ScanFn,
+    m64: ScanFn,
+    lut: LutFn,
+}
+
+impl ScanKernels {
+    /// The scalar reference set (the pre-SIMD hot kernels).
+    pub fn scalar() -> ScanKernels {
+        ScanKernels {
+            kind: IsaKind::Scalar,
+            m16: scan::scan_unrolled::<16>,
+            m32: scan::scan_unrolled::<32>,
+            m64: scan::scan_blocked_64,
+            lut: scan::build_lut_scalar_into,
+        }
+    }
+
+    /// Kernel set for `req`, clamped to what this build + host supports
+    /// (asking for `avx512` without the feature or CPU yields AVX2;
+    /// asking for any SIMD on a scalar-only host yields scalar). This is
+    /// the env-free entry point for A/B harnesses.
+    pub fn for_kind(req: IsaKind) -> ScanKernels {
+        let kind = clamp(req, detect());
+        match kind {
+            #[cfg(target_arch = "x86_64")]
+            IsaKind::Avx2 => x86::kernels_avx2(),
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            IsaKind::Avx512 => x86_512::kernels(),
+            #[cfg(target_arch = "aarch64")]
+            IsaKind::Neon => neon::kernels(),
+            _ => ScanKernels::scalar(),
+        }
+    }
+
+    /// m-dispatched ADC scan through this kernel set. Same contract as
+    /// `pq::scan::adc_scan_into`.
+    pub fn scan_into(&self, codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+        match m {
+            16 => (self.m16)(codes, n, lut, out),
+            32 => (self.m32)(codes, n, lut, out),
+            64 => (self.m64)(codes, n, lut, out),
+            _ => scan::scan_generic(codes, n, m, lut, out),
+        }
+    }
+
+    /// LUT build through this kernel set. Same contract as
+    /// `pq::scan::build_lut_raw_into`.
+    pub fn build_lut_into(
+        &self,
+        centroids: &[f32],
+        query: &[f32],
+        m: usize,
+        dsub: usize,
+        out: &mut [f32],
+    ) {
+        (self.lut)(centroids, query, m, dsub, out)
+    }
+
+    /// Name of the kernel serving width `m` in this set.
+    pub fn kernel_name(&self, m: usize) -> &'static str {
+        match m {
+            16 | 32 | 64 => self.kind.name(),
+            _ => "scalar-generic",
+        }
+    }
+}
+
+/// Clamp a requested ISA to the detected best: scalar always wins a
+/// scalar request (or a scalar host); a SIMD request on a host from a
+/// different family resolves to that host's best.
+fn clamp(req: IsaKind, best: IsaKind) -> IsaKind {
+    use IsaKind::*;
+    match (req, best) {
+        (Scalar, _) | (_, Scalar) => Scalar,
+        (Avx512, Avx512) => Avx512,
+        (Avx512, b) => b,
+        (Avx2, Avx512) | (Avx2, Avx2) => Avx2,
+        (Avx2, b) => b,
+        (Neon, Neon) => Neon,
+        (Neon, b) => b,
+    }
+}
+
+/// `CHAM_FORCE_SCALAR` / `CHAM_KERNEL` override, if any.
+fn env_override() -> Option<IsaKind> {
+    if let Some(v) = std::env::var_os("CHAM_FORCE_SCALAR") {
+        if !v.is_empty() && v != "0" {
+            return Some(IsaKind::Scalar);
+        }
+    }
+    let v = std::env::var("CHAM_KERNEL").ok()?;
+    IsaKind::parse(&v)
+}
+
+static ACTIVE: OnceLock<ScanKernels> = OnceLock::new();
+
+/// The process-wide kernel set: resolved once on first use from runtime
+/// detection, honoring `CHAM_FORCE_SCALAR=1` and
+/// `CHAM_KERNEL=scalar|avx2|avx512|neon|auto`.
+pub fn active() -> &'static ScanKernels {
+    ACTIVE.get_or_init(|| ScanKernels::for_kind(env_override().unwrap_or_else(detect)))
+}
+
+/// Geometry asserts shared by every SIMD kernel wrapper: the unsafe
+/// gather bodies rely on exactly these bounds.
+#[allow(dead_code)] // unused on ISAs with no SIMD kernels compiled in
+fn check_scan(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+    assert_eq!(codes.len(), n * m, "codes length mismatch");
+    assert_eq!(lut.len(), m * crate::pq::codebook::KSUB, "lut length mismatch");
+    assert!(out.len() >= n, "out buffer too small");
+}
+
+#[allow(dead_code)]
+fn check_lut(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+    let ksub = crate::pq::codebook::KSUB;
+    assert_eq!(query.len(), m * dsub, "query length mismatch");
+    assert_eq!(centroids.len(), m * ksub * dsub, "centroid table mismatch");
+    assert_eq!(out.len(), m * ksub, "lut out mismatch");
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86-64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use super::{check_lut, check_scan, IsaKind, ScanKernels};
+    use crate::pq::codebook::KSUB;
+    use crate::pq::scan;
+
+    const LANES: usize = 8;
+
+    pub fn kernels_avx2() -> ScanKernels {
+        ScanKernels {
+            kind: IsaKind::Avx2,
+            m16: scan_m16,
+            m32: scan_m32,
+            m64: scan_m64,
+            lut: lut_build,
+        }
+    }
+
+    /// Accumulate an 8-row block over columns `[c0, c0 + cols)` (cols a
+    /// multiple of 4). Lane `l` owns row `v + l`; `acc[u]` sums columns
+    /// `c0 + 4g + u` in ascending `g` — the scalar kernel's `a0..a3`.
+    ///
+    /// Safety: caller guarantees AVX2, `v + 8 <= n`, `c0 + cols <= m`,
+    /// `codes.len() == n * m`, `lut.len() == m * KSUB`.
+    #[inline(always)]
+    unsafe fn block8(
+        codes: &[u8],
+        v: usize,
+        m: usize,
+        c0: usize,
+        cols: usize,
+        lut: &[f32],
+        acc: &mut [__m256; 4],
+    ) {
+        let mask = _mm256_set1_epi32(0xFF);
+        let row0 = codes.as_ptr().add(v * m);
+        for g in 0..cols / 4 {
+            let col = c0 + 4 * g;
+            // One unaligned u32 load grabs 4 consecutive code bytes per
+            // row; little-endian x86 puts code[col] in byte 0.
+            let mut packed = [0u32; LANES];
+            for (l, slot) in packed.iter_mut().enumerate() {
+                *slot = (row0.add(l * m + col) as *const u32).read_unaligned();
+            }
+            let pack = _mm256_loadu_si256(packed.as_ptr() as *const __m256i);
+            let i0 = _mm256_and_si256(pack, mask);
+            let i1 = _mm256_and_si256(_mm256_srli_epi32::<8>(pack), mask);
+            let i2 = _mm256_and_si256(_mm256_srli_epi32::<16>(pack), mask);
+            let i3 = _mm256_srli_epi32::<24>(pack);
+            let l0 = lut.as_ptr().add(col * KSUB);
+            acc[0] = _mm256_add_ps(acc[0], _mm256_i32gather_ps::<4>(l0, i0));
+            acc[1] = _mm256_add_ps(acc[1], _mm256_i32gather_ps::<4>(l0.add(KSUB), i1));
+            acc[2] = _mm256_add_ps(acc[2], _mm256_i32gather_ps::<4>(l0.add(2 * KSUB), i2));
+            acc[3] = _mm256_add_ps(acc[3], _mm256_i32gather_ps::<4>(l0.add(3 * KSUB), i3));
+        }
+    }
+
+    /// `(a0 + a1) + (a2 + a3)` — the scalar kernel's combine tree.
+    #[inline(always)]
+    unsafe fn combine(acc: [__m256; 4]) -> __m256 {
+        _mm256_add_ps(_mm256_add_ps(acc[0], acc[1]), _mm256_add_ps(acc[2], acc[3]))
+    }
+
+    /// Single-pass scan (LUT fits L1): m = 16 or 32.
+    #[inline(always)]
+    unsafe fn flat_body(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+        let blocks = n / LANES * LANES;
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [_mm256_setzero_ps(); 4];
+            block8(codes, v, m, 0, m, lut, &mut acc);
+            _mm256_storeu_ps(out.as_mut_ptr().add(v), combine(acc));
+            v += LANES;
+        }
+        if blocks < n {
+            scan::adc_scan_scalar_into(
+                &codes[blocks * m..n * m],
+                n - blocks,
+                m,
+                lut,
+                &mut out[blocks..n],
+            );
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scan_m16_avx2(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        flat_body(codes, n, 16, lut, out)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scan_m32_avx2(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        flat_body(codes, n, 32, lut, out)
+    }
+
+    /// m=64 keeps the scalar kernel's two-pass column blocking: each pass
+    /// touches a 32 KiB half-LUT that stays L1-resident.
+    #[target_feature(enable = "avx2")]
+    unsafe fn scan_m64_avx2(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        const M: usize = 64;
+        const HALF: usize = 32;
+        let blocks = n / LANES * LANES;
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [_mm256_setzero_ps(); 4];
+            block8(codes, v, M, 0, HALF, lut, &mut acc);
+            _mm256_storeu_ps(out.as_mut_ptr().add(v), combine(acc));
+            v += LANES;
+        }
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [_mm256_setzero_ps(); 4];
+            block8(codes, v, M, HALF, HALF, lut, &mut acc);
+            let prev = _mm256_loadu_ps(out.as_ptr().add(v));
+            _mm256_storeu_ps(out.as_mut_ptr().add(v), _mm256_add_ps(prev, combine(acc)));
+            v += LANES;
+        }
+        if blocks < n {
+            scan::adc_scan_scalar_into(
+                &codes[blocks * M..n * M],
+                n - blocks,
+                M,
+                lut,
+                &mut out[blocks..n],
+            );
+        }
+    }
+
+    /// Subtract-square-accumulate over `dsub` dims, 8 centroids per
+    /// vector. Lane `l` owns centroid `c + l` (gather stride `dsub`);
+    /// the `j` loop runs in scalar order with explicit sub/mul/add so no
+    /// FMA contraction can change bits.
+    #[inline(always)]
+    unsafe fn lut_body(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        let stride = _mm256_setr_epi32(
+            0,
+            dsub as i32,
+            2 * dsub as i32,
+            3 * dsub as i32,
+            4 * dsub as i32,
+            5 * dsub as i32,
+            6 * dsub as i32,
+            7 * dsub as i32,
+        );
+        for i in 0..m {
+            let sub = query.as_ptr().add(i * dsub);
+            let cents = centroids.as_ptr().add(i * KSUB * dsub);
+            let row = out.as_mut_ptr().add(i * KSUB);
+            let mut c = 0;
+            while c < KSUB {
+                let mut acc = _mm256_setzero_ps();
+                let base = cents.add(c * dsub);
+                for j in 0..dsub {
+                    let q = _mm256_set1_ps(*sub.add(j));
+                    let g = _mm256_i32gather_ps::<4>(base.add(j), stride);
+                    let t = _mm256_sub_ps(q, g);
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(t, t));
+                }
+                _mm256_storeu_ps(row.add(c), acc);
+                c += LANES;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn lut_avx2(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        // The dsub match lets constant propagation specialize the inner
+        // loop for every shipped dataset geometry.
+        match dsub {
+            2 => lut_body(centroids, query, m, 2, out),
+            4 => lut_body(centroids, query, m, 4, out),
+            6 => lut_body(centroids, query, m, 6, out),
+            8 => lut_body(centroids, query, m, 8, out),
+            16 => lut_body(centroids, query, m, 16, out),
+            _ => lut_body(centroids, query, m, dsub, out),
+        }
+    }
+
+    // Safe wrappers: geometry asserts make the raw gathers in-bounds,
+    // and these fns are only installed after AVX2 was detected.
+
+    fn scan_m16(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 16, lut, out);
+        unsafe { scan_m16_avx2(codes, n, lut, out) }
+    }
+
+    fn scan_m32(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 32, lut, out);
+        unsafe { scan_m32_avx2(codes, n, lut, out) }
+    }
+
+    fn scan_m64(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 64, lut, out);
+        unsafe { scan_m64_avx2(codes, n, lut, out) }
+    }
+
+    fn lut_build(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        check_lut(centroids, query, m, dsub, out);
+        unsafe { lut_avx2(centroids, query, m, dsub, out) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512 (x86-64, opt-in `avx512` cargo feature)
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod x86_512 {
+    use core::arch::x86_64::*;
+
+    use super::{check_lut, check_scan, IsaKind, ScanKernels};
+    use crate::pq::codebook::KSUB;
+    use crate::pq::scan;
+
+    const LANES: usize = 16;
+
+    pub fn kernels() -> ScanKernels {
+        ScanKernels {
+            kind: IsaKind::Avx512,
+            m16: scan_m16,
+            m32: scan_m32,
+            m64: scan_m64,
+            lut: lut_build,
+        }
+    }
+
+    /// 16-row block over columns `[c0, c0 + cols)`; same accumulator
+    /// assignment and combine tree as the AVX2/scalar kernels.
+    #[inline(always)]
+    unsafe fn block16(
+        codes: &[u8],
+        v: usize,
+        m: usize,
+        c0: usize,
+        cols: usize,
+        lut: &[f32],
+        acc: &mut [__m512; 4],
+    ) {
+        let row0 = codes.as_ptr().add(v * m);
+        for g in 0..cols / 4 {
+            for (u, a) in acc.iter_mut().enumerate() {
+                let col = c0 + 4 * g + u;
+                let mut idx = [0i32; LANES];
+                for (l, slot) in idx.iter_mut().enumerate() {
+                    *slot = *row0.add(l * m + col) as i32;
+                }
+                let iv: __m512i = core::mem::transmute(idx);
+                let base = lut.as_ptr().add(col * KSUB);
+                *a = _mm512_add_ps(*a, _mm512_i32gather_ps::<4>(iv, base as *const _));
+            }
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn combine(acc: [__m512; 4]) -> __m512 {
+        _mm512_add_ps(_mm512_add_ps(acc[0], acc[1]), _mm512_add_ps(acc[2], acc[3]))
+    }
+
+    #[inline(always)]
+    unsafe fn flat_body(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+        let blocks = n / LANES * LANES;
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [_mm512_setzero_ps(); 4];
+            block16(codes, v, m, 0, m, lut, &mut acc);
+            _mm512_storeu_ps(out.as_mut_ptr().add(v), combine(acc));
+            v += LANES;
+        }
+        if blocks < n {
+            scan::adc_scan_scalar_into(
+                &codes[blocks * m..n * m],
+                n - blocks,
+                m,
+                lut,
+                &mut out[blocks..n],
+            );
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn scan_m16_512(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        flat_body(codes, n, 16, lut, out)
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn scan_m32_512(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        flat_body(codes, n, 32, lut, out)
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn scan_m64_512(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        const M: usize = 64;
+        const HALF: usize = 32;
+        let blocks = n / LANES * LANES;
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [_mm512_setzero_ps(); 4];
+            block16(codes, v, M, 0, HALF, lut, &mut acc);
+            _mm512_storeu_ps(out.as_mut_ptr().add(v), combine(acc));
+            v += LANES;
+        }
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [_mm512_setzero_ps(); 4];
+            block16(codes, v, M, HALF, HALF, lut, &mut acc);
+            let prev = _mm512_loadu_ps(out.as_ptr().add(v));
+            _mm512_storeu_ps(out.as_mut_ptr().add(v), _mm512_add_ps(prev, combine(acc)));
+            v += LANES;
+        }
+        if blocks < n {
+            scan::adc_scan_scalar_into(
+                &codes[blocks * M..n * M],
+                n - blocks,
+                M,
+                lut,
+                &mut out[blocks..n],
+            );
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn lut_body(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        let mut stride = [0i32; LANES];
+        for (l, slot) in stride.iter_mut().enumerate() {
+            *slot = (l * dsub) as i32;
+        }
+        let stride: __m512i = core::mem::transmute(stride);
+        for i in 0..m {
+            let sub = query.as_ptr().add(i * dsub);
+            let cents = centroids.as_ptr().add(i * KSUB * dsub);
+            let row = out.as_mut_ptr().add(i * KSUB);
+            let mut c = 0;
+            while c < KSUB {
+                let mut acc = _mm512_setzero_ps();
+                let base = cents.add(c * dsub);
+                for j in 0..dsub {
+                    let q = _mm512_set1_ps(*sub.add(j));
+                    let g = _mm512_i32gather_ps::<4>(stride, base.add(j) as *const _);
+                    let t = _mm512_sub_ps(q, g);
+                    acc = _mm512_add_ps(acc, _mm512_mul_ps(t, t));
+                }
+                _mm512_storeu_ps(row.add(c), acc);
+                c += LANES;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn lut_512(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        match dsub {
+            2 => lut_body(centroids, query, m, 2, out),
+            4 => lut_body(centroids, query, m, 4, out),
+            6 => lut_body(centroids, query, m, 6, out),
+            8 => lut_body(centroids, query, m, 8, out),
+            16 => lut_body(centroids, query, m, 16, out),
+            _ => lut_body(centroids, query, m, dsub, out),
+        }
+    }
+
+    fn scan_m16(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 16, lut, out);
+        unsafe { scan_m16_512(codes, n, lut, out) }
+    }
+
+    fn scan_m32(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 32, lut, out);
+        unsafe { scan_m32_512(codes, n, lut, out) }
+    }
+
+    fn scan_m64(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 64, lut, out);
+        unsafe { scan_m64_512(codes, n, lut, out) }
+    }
+
+    fn lut_build(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        check_lut(centroids, query, m, dsub, out);
+        unsafe { lut_512(centroids, query, m, dsub, out) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    use super::{check_lut, check_scan, IsaKind, ScanKernels};
+    use crate::pq::codebook::KSUB;
+    use crate::pq::scan;
+
+    const LANES: usize = 4;
+
+    pub fn kernels() -> ScanKernels {
+        ScanKernels {
+            kind: IsaKind::Neon,
+            m16: scan_m16,
+            m32: scan_m32,
+            m64: scan_m64,
+            lut: lut_build,
+        }
+    }
+
+    /// NEON has no gather; assemble each 4-lane LUT read on the stack.
+    /// Accumulator/combine structure matches the scalar kernel exactly.
+    #[inline(always)]
+    unsafe fn block4(
+        codes: &[u8],
+        v: usize,
+        m: usize,
+        c0: usize,
+        cols: usize,
+        lut: &[f32],
+        acc: &mut [float32x4_t; 4],
+    ) {
+        let row0 = codes.as_ptr().add(v * m);
+        for g in 0..cols / 4 {
+            for (u, a) in acc.iter_mut().enumerate() {
+                let col = c0 + 4 * g + u;
+                let lrow = lut.as_ptr().add(col * KSUB);
+                let vals = [
+                    *lrow.add(*row0.add(col) as usize),
+                    *lrow.add(*row0.add(m + col) as usize),
+                    *lrow.add(*row0.add(2 * m + col) as usize),
+                    *lrow.add(*row0.add(3 * m + col) as usize),
+                ];
+                *a = vaddq_f32(*a, vld1q_f32(vals.as_ptr()));
+            }
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn combine(acc: [float32x4_t; 4]) -> float32x4_t {
+        vaddq_f32(vaddq_f32(acc[0], acc[1]), vaddq_f32(acc[2], acc[3]))
+    }
+
+    #[inline(always)]
+    unsafe fn flat_body(codes: &[u8], n: usize, m: usize, lut: &[f32], out: &mut [f32]) {
+        let blocks = n / LANES * LANES;
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [vdupq_n_f32(0.0); 4];
+            block4(codes, v, m, 0, m, lut, &mut acc);
+            vst1q_f32(out.as_mut_ptr().add(v), combine(acc));
+            v += LANES;
+        }
+        if blocks < n {
+            scan::adc_scan_scalar_into(
+                &codes[blocks * m..n * m],
+                n - blocks,
+                m,
+                lut,
+                &mut out[blocks..n],
+            );
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scan_m16_neon(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        flat_body(codes, n, 16, lut, out)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scan_m32_neon(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        flat_body(codes, n, 32, lut, out)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn scan_m64_neon(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        const M: usize = 64;
+        const HALF: usize = 32;
+        let blocks = n / LANES * LANES;
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [vdupq_n_f32(0.0); 4];
+            block4(codes, v, M, 0, HALF, lut, &mut acc);
+            vst1q_f32(out.as_mut_ptr().add(v), combine(acc));
+            v += LANES;
+        }
+        let mut v = 0;
+        while v < blocks {
+            let mut acc = [vdupq_n_f32(0.0); 4];
+            block4(codes, v, M, HALF, HALF, lut, &mut acc);
+            let prev = vld1q_f32(out.as_ptr().add(v));
+            vst1q_f32(out.as_mut_ptr().add(v), vaddq_f32(prev, combine(acc)));
+            v += LANES;
+        }
+        if blocks < n {
+            scan::adc_scan_scalar_into(
+                &codes[blocks * M..n * M],
+                n - blocks,
+                M,
+                lut,
+                &mut out[blocks..n],
+            );
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn lut_body(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        for i in 0..m {
+            let sub = query.as_ptr().add(i * dsub);
+            let cents = centroids.as_ptr().add(i * KSUB * dsub);
+            let row = out.as_mut_ptr().add(i * KSUB);
+            let mut c = 0;
+            while c < KSUB {
+                let mut acc = vdupq_n_f32(0.0);
+                let base = cents.add(c * dsub);
+                for j in 0..dsub {
+                    let q = vdupq_n_f32(*sub.add(j));
+                    let vals = [
+                        *base.add(j),
+                        *base.add(dsub + j),
+                        *base.add(2 * dsub + j),
+                        *base.add(3 * dsub + j),
+                    ];
+                    let t = vsubq_f32(q, vld1q_f32(vals.as_ptr()));
+                    acc = vaddq_f32(acc, vmulq_f32(t, t));
+                }
+                vst1q_f32(row.add(c), acc);
+                c += LANES;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn lut_neon(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        match dsub {
+            2 => lut_body(centroids, query, m, 2, out),
+            4 => lut_body(centroids, query, m, 4, out),
+            6 => lut_body(centroids, query, m, 6, out),
+            8 => lut_body(centroids, query, m, 8, out),
+            16 => lut_body(centroids, query, m, 16, out),
+            _ => lut_body(centroids, query, m, dsub, out),
+        }
+    }
+
+    fn scan_m16(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 16, lut, out);
+        unsafe { scan_m16_neon(codes, n, lut, out) }
+    }
+
+    fn scan_m32(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 32, lut, out);
+        unsafe { scan_m32_neon(codes, n, lut, out) }
+    }
+
+    fn scan_m64(codes: &[u8], n: usize, lut: &[f32], out: &mut [f32]) {
+        check_scan(codes, n, 64, lut, out);
+        unsafe { scan_m64_neon(codes, n, lut, out) }
+    }
+
+    fn lut_build(centroids: &[f32], query: &[f32], m: usize, dsub: usize, out: &mut [f32]) {
+        check_lut(centroids, query, m, dsub, out);
+        unsafe { lut_neon(centroids, query, m, dsub, out) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::codebook::KSUB;
+    use crate::util::rng::Rng;
+
+    /// Every kernel set that is real on this host (dedup'd: a clamped
+    /// request that resolves to an already-listed kind is skipped).
+    fn available_sets() -> Vec<ScanKernels> {
+        let mut kinds = vec![IsaKind::Scalar];
+        for req in [IsaKind::Avx2, IsaKind::Avx512, IsaKind::Neon] {
+            let set = ScanKernels::for_kind(req);
+            if !kinds.contains(&set.kind) {
+                kinds.push(set.kind);
+            }
+        }
+        kinds.into_iter().map(ScanKernels::for_kind).collect()
+    }
+
+    fn random_case(rng: &mut Rng, n: usize, m: usize) -> (Vec<u8>, Vec<f32>) {
+        let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+        let lut: Vec<f32> = (0..m * KSUB).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        (codes, lut)
+    }
+
+    #[test]
+    fn simd_scan_bit_identical_to_scalar_all_widths_and_tails() {
+        let scalar = ScanKernels::scalar();
+        let mut rng = Rng::new(0xADC5);
+        for set in available_sets() {
+            for &m in &[16usize, 32, 64] {
+                // Cover empty input, sub-block sizes, exact blocks for
+                // every lane count (4/8/16), and off-by-one tails.
+                for &n in &[0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 257, 1000] {
+                    let (codes, lut) = random_case(&mut rng, n, m);
+                    let mut a = vec![f32::NAN; n];
+                    let mut b = vec![f32::NAN; n];
+                    scalar.scan_into(&codes, n, m, &lut, &mut a);
+                    set.scan_into(&codes, n, m, &lut, &mut b);
+                    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "kind={} m={m} n={n} row {i}: scalar {x} vs simd {y}",
+                            set.kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generic_widths_route_to_scalar_generic() {
+        let mut rng = Rng::new(7);
+        for set in available_sets() {
+            for &m in &[4usize, 12, 20, 48] {
+                let n = 37;
+                let (codes, lut) = random_case(&mut rng, n, m);
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                scan::scan_generic(&codes, n, m, &lut, &mut a);
+                set.scan_into(&codes, n, m, &lut, &mut b);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "kind={} m={m}", set.kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_lut_build_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0x1007);
+        // Shipped geometries (dsub 2/4/6/8/16) plus odd ones hitting the
+        // generic fallback arm.
+        for set in available_sets() {
+            for &(m, dsub) in &[(16usize, 8usize), (16, 6), (32, 16), (64, 2), (8, 3), (4, 5)] {
+                let centroids: Vec<f32> =
+                    (0..m * KSUB * dsub).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                let query: Vec<f32> = (0..m * dsub).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                let mut a = vec![f32::NAN; m * KSUB];
+                let mut b = vec![f32::NAN; m * KSUB];
+                scan::build_lut_scalar_into(&centroids, &query, m, dsub, &mut a);
+                set.build_lut_into(&centroids, &query, m, dsub, &mut b);
+                for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "kind={} m={m} dsub={dsub} slot {i}",
+                        set.kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_kind_clamps_to_host_capability() {
+        assert_eq!(ScanKernels::for_kind(IsaKind::Scalar).kind, IsaKind::Scalar);
+        let best = detect();
+        // Asking for the detected best yields it; asking for anything
+        // never yields a kind the host can't run.
+        assert_eq!(ScanKernels::for_kind(best).kind, best);
+        for req in [IsaKind::Avx2, IsaKind::Avx512, IsaKind::Neon] {
+            let got = ScanKernels::for_kind(req).kind;
+            assert_eq!(got, clamp(req, best));
+        }
+    }
+
+    #[test]
+    fn kernel_override_tokens_parse() {
+        assert_eq!(IsaKind::parse("scalar"), Some(IsaKind::Scalar));
+        assert_eq!(IsaKind::parse("avx2"), Some(IsaKind::Avx2));
+        assert_eq!(IsaKind::parse("avx512"), Some(IsaKind::Avx512));
+        assert_eq!(IsaKind::parse("neon"), Some(IsaKind::Neon));
+        assert_eq!(IsaKind::parse("auto"), Some(detect()));
+        assert_eq!(IsaKind::parse("simd"), Some(detect()));
+        assert_eq!(IsaKind::parse("mmx"), None);
+    }
+
+    #[test]
+    fn active_resolves_to_an_available_kind() {
+        let k = active();
+        let avail: Vec<IsaKind> = available_sets().iter().map(|s| s.kind).collect();
+        assert!(avail.contains(&k.kind), "active kind {:?} not available", k.kind);
+        // And it scans correctly end to end.
+        let mut rng = Rng::new(3);
+        let (codes, lut) = random_case(&mut rng, 40, 16);
+        let mut a = vec![0.0f32; 40];
+        let mut b = vec![0.0f32; 40];
+        ScanKernels::scalar().scan_into(&codes, 40, 16, &lut, &mut a);
+        k.scan_into(&codes, 40, 16, &lut, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! CPU affinity + NUMA placement for scan workers — raw `sched_setaffinity`
+//! / `sched_getcpu` FFI on 64-bit Linux (no libc crate, matching the
+//! `util::poll` idiom), portable no-op fallback elsewhere.
+//!
+//! The point (ROADMAP item 2, paper Sec 2.3): an ADC scan is memory-bound
+//! on its shard's flat arena, so a worker bouncing between sockets pays
+//! remote-DRAM latency on every code line. `worker_cpus` plans one CPU per
+//! worker, round-robining across NUMA nodes (parsed from
+//! `/sys/devices/system/node/node*/cpulist`) so co-resident workers spread
+//! over sockets instead of piling onto one; `cluster::engine` and
+//! `chamvs::Dispatcher` pin their scan threads to the plan when pinning is
+//! enabled (`--pin-workers` / `CHAM_PIN=1`), and the engine surfaces the
+//! observed per-node CPU in `ClusterStats`.
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod sys {
+    /// 16 x 64 bits = 1024 CPUs, the kernel's default CONFIG_NR_CPUS cap.
+    pub const MASK_WORDS: usize = 16;
+
+    extern "C" {
+        /// pid 0 = the calling thread.
+        pub fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        pub fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+        pub fn sched_getcpu() -> i32;
+    }
+}
+
+/// Whether pinning is real on this platform.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub fn supported() -> bool {
+    true
+}
+
+/// The CPU the calling thread is executing on right now.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub fn current_cpu() -> Option<usize> {
+    let cpu = unsafe { sys::sched_getcpu() };
+    (cpu >= 0).then_some(cpu as usize)
+}
+
+/// CPUs the calling thread is currently allowed to run on, ascending.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub fn allowed_cpus() -> Vec<usize> {
+    let mut mask = [0u64; sys::MASK_WORDS];
+    let rc = unsafe {
+        sys::sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr())
+    };
+    if rc != 0 {
+        return Vec::new();
+    }
+    let mut cpus = Vec::new();
+    for (w, &word) in mask.iter().enumerate() {
+        for b in 0..64 {
+            if word >> b & 1 == 1 {
+                cpus.push(w * 64 + b);
+            }
+        }
+    }
+    cpus
+}
+
+/// Pin the calling thread to a set of CPUs. Returns whether the kernel
+/// accepted the mask (false on empty input, out-of-range CPUs, or a
+/// sandbox that denies sched_setaffinity — callers treat that as "not
+/// pinned" and carry on).
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub fn pin_to_cpus(cpus: &[usize]) -> bool {
+    let mut mask = [0u64; sys::MASK_WORDS];
+    let mut any = false;
+    for &c in cpus {
+        if c < sys::MASK_WORDS * 64 {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    let rc = unsafe {
+        sys::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr())
+    };
+    rc == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn supported() -> bool {
+    false
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn current_cpu() -> Option<usize> {
+    None
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn allowed_cpus() -> Vec<usize> {
+    Vec::new()
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn pin_to_cpus(_cpus: &[usize]) -> bool {
+    false
+}
+
+/// Pin the calling thread to one CPU.
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    pin_to_cpus(&[cpu])
+}
+
+/// NUMA topology visible to this process: one CPU list per node,
+/// intersected with the allowed mask, empty nodes dropped. Falls back to
+/// a single pseudo-node holding every allowed CPU when sysfs is absent
+/// (non-NUMA kernels, containers masking /sys).
+pub fn numa_nodes() -> Vec<Vec<usize>> {
+    let allowed = allowed_cpus();
+    if allowed.is_empty() {
+        return Vec::new();
+    }
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir("/sys/devices/system/node") {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy().into_owned();
+            let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            let cpus: Vec<usize> = parse_cpulist(list.trim())
+                .into_iter()
+                .filter(|c| allowed.binary_search(c).is_ok())
+                .collect();
+            if !cpus.is_empty() {
+                nodes.push((idx, cpus));
+            }
+        }
+    }
+    if nodes.is_empty() {
+        return vec![allowed];
+    }
+    nodes.sort_by_key(|(idx, _)| *idx);
+    nodes.into_iter().map(|(_, cpus)| cpus).collect()
+}
+
+/// Parse a sysfs cpulist like `0-15,32-47` into ascending CPU numbers.
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.parse::<usize>(), hi.parse::<usize>()) {
+                cpus.extend(lo..=hi);
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            cpus.push(c);
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// CPU assignment plan for `n` workers: round-robin across NUMA nodes
+/// first (worker 0 → node 0's first CPU, worker 1 → node 1's first CPU,
+/// ...), so a worker pool spreads its memory-bound scans over sockets;
+/// wraps when `n` exceeds the CPU count. Empty when affinity is
+/// unsupported — callers skip pinning entirely.
+pub fn worker_cpus(n: usize) -> Vec<usize> {
+    let order = interleaved();
+    if order.is_empty() {
+        return Vec::new();
+    }
+    (0..n).map(|i| order[i % order.len()]).collect()
+}
+
+/// The CPU the `i`-th worker of a pool should pin to (same plan as
+/// `worker_cpus`, usable incrementally as workers join).
+pub fn worker_cpu(i: usize) -> Option<usize> {
+    let order = interleaved();
+    if order.is_empty() {
+        None
+    } else {
+        Some(order[i % order.len()])
+    }
+}
+
+/// All allowed CPUs, interleaved round-robin across NUMA nodes.
+fn interleaved() -> Vec<usize> {
+    let nodes = numa_nodes();
+    let mut order = Vec::new();
+    let mut depth = 0;
+    loop {
+        let mut any = false;
+        for node in &nodes {
+            if let Some(&c) = node.get(depth) {
+                order.push(c);
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        depth += 1;
+    }
+    order
+}
+
+/// Whether pinning was requested via environment (`CHAM_PIN=1`); the
+/// CLI's `--pin-workers` flag sets this so every layer below sees it.
+pub fn env_pin_requested() -> bool {
+    std::env::var_os("CHAM_PIN").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-2,8,16-17"), vec![0, 1, 2, 8, 16, 17]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("junk,3"), vec![3]);
+    }
+
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    #[test]
+    fn pin_query_round_trip() {
+        let before = allowed_cpus();
+        assert!(!before.is_empty(), "a running thread must be allowed somewhere");
+        let here = current_cpu().expect("sched_getcpu works on linux");
+        assert!(before.contains(&here), "current cpu {here} not in {before:?}");
+
+        // Some sandboxes deny sched_setaffinity; re-applying the current
+        // mask probes that without changing anything.
+        if !pin_to_cpus(&before) {
+            eprintln!("sched_setaffinity denied here; skipping pin round-trip");
+            return;
+        }
+        let target = before[0];
+        assert!(pin_to_cpu(target));
+        assert_eq!(allowed_cpus(), vec![target]);
+        assert_eq!(current_cpu(), Some(target));
+        // Restore so the test thread doesn't skew parallel tests.
+        assert!(pin_to_cpus(&before));
+        assert_eq!(allowed_cpus(), before);
+    }
+
+    #[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+    #[test]
+    fn unsupported_platform_is_a_graceful_noop() {
+        assert!(!supported());
+        assert_eq!(current_cpu(), None);
+        assert!(allowed_cpus().is_empty());
+        assert!(!pin_to_cpu(0));
+        assert!(numa_nodes().is_empty());
+        assert!(worker_cpus(4).is_empty());
+        assert_eq!(worker_cpu(0), None);
+    }
+
+    #[test]
+    fn numa_plan_covers_allowed_cpus() {
+        let allowed = allowed_cpus();
+        let nodes = numa_nodes();
+        if allowed.is_empty() {
+            assert!(nodes.is_empty());
+            return;
+        }
+        let mut union: Vec<usize> = nodes.iter().flatten().copied().collect();
+        union.sort_unstable();
+        assert_eq!(union, allowed, "numa nodes must partition the allowed set");
+
+        let plan = worker_cpus(allowed.len() + 3);
+        assert_eq!(plan.len(), allowed.len() + 3);
+        assert!(plan.iter().all(|c| allowed.contains(c)));
+        for (i, &c) in plan.iter().enumerate() {
+            assert_eq!(worker_cpu(i), Some(c), "incremental plan agrees");
+        }
+    }
+}

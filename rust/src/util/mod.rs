@@ -6,6 +6,7 @@
 //! so they are implemented from scratch here and unit-tested like any
 //! other module.
 
+pub mod affinity;
 pub mod cli;
 pub mod json;
 pub mod metrics;

@@ -305,3 +305,61 @@ fn coordinator_applies_cluster_updates_between_batches() {
     // server retires on its own; dropping it here just joins the thread.
     drop(node_a);
 }
+
+/// ISSUE-8 pin: with `pin_workers` on, engine workers pin to the
+/// NUMA-interleaved plan and surface a stable observed CPU per node in
+/// `ClusterStats::pinned`. Skips (with a printed reason) where affinity
+/// is unsupported or the sandbox denies `sched_setaffinity`.
+#[test]
+fn pinned_workers_report_stable_cpus_in_cluster_stats() {
+    use chameleon::cluster::NodeId;
+    use chameleon::util::affinity;
+    use std::collections::BTreeMap;
+
+    if !affinity::supported() {
+        eprintln!("affinity unsupported on this platform; skipping pin test");
+        return;
+    }
+    let allowed = affinity::allowed_cpus();
+    // Re-applying the current mask probes whether the sandbox allows
+    // sched_setaffinity at all, without changing anything.
+    if allowed.is_empty() || !affinity::pin_to_cpus(&allowed) {
+        eprintln!("sched_setaffinity denied here; skipping pin test");
+        return;
+    }
+
+    let (idx, d) = toy_index(21);
+    let cfg = ClusterConfig { pin_workers: true, ..Default::default() };
+    let engine = ClusterEngine::local(&idx, 4, 2, 10, cfg).unwrap();
+    let mut disp = Dispatcher::clustered(engine, 10);
+    let mut rng = Rng::new(33);
+
+    let mut prev: BTreeMap<NodeId, usize> = BTreeMap::new();
+    for round in 0..6 {
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 8);
+        disp.search(&q, &idx.pq.centroids, &lists, 8).unwrap();
+
+        let stats = disp.cluster().unwrap().stats();
+        for &(node, cpu) in &stats.pinned {
+            assert!(
+                allowed.contains(&cpu),
+                "round {round}: node {node} reports cpu {cpu} outside the \
+                 allowed set {allowed:?}"
+            );
+            // A worker pins once at spawn: its observed CPU never moves.
+            if let Some(&seen) = prev.get(&node) {
+                assert_eq!(
+                    seen, cpu,
+                    "round {round}: node {node} moved from cpu {seen} to {cpu}"
+                );
+            }
+            prev.insert(node, cpu);
+        }
+    }
+    assert!(
+        !prev.is_empty(),
+        "pinning enabled and sched_setaffinity works, yet no worker ever \
+         reported a pinned CPU"
+    );
+}

@@ -19,8 +19,10 @@ use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
-use chameleon::kselect::{HierarchicalConfig, SelectMode};
-use chameleon::pq::scan::{adc_scan, build_lut};
+use chameleon::kselect::{FusedSelector, HierarchicalConfig, SelectMode};
+use chameleon::pq::scan::{
+    adc_scan, adc_scan_scalar_into, build_lut, scan_list_into_sink, FUSED_TILE,
+};
 use chameleon::util::rng::Rng;
 
 struct Universe {
@@ -189,6 +191,64 @@ fn single_node_exact_mode_pins_full_order() {
                 assert_eq!(g.0.to_bits(), w.0.to_bits());
                 assert_eq!(g.1, w.1, "ids must match in stable-sort order");
             }
+        }
+    }
+}
+
+/// SIMD pin (ISSUE 8): `scan_list_into_sink` + `FusedSelector` — which
+/// route through the runtime-dispatched kernel set inside `adc_scan_into`
+/// — reproduce a scalar flat scan + stable sort exactly at every paper
+/// width: distance bits, ids, and tie order, across list lengths that
+/// exercise empty lists, sub-lane tails, and tile boundaries.
+#[test]
+fn fused_sink_through_simd_kernels_matches_scalar_reference() {
+    let mut rng = Rng::new(0x51D);
+    let k = 40usize;
+    for m in [16usize, 32, 64] {
+        // Coarse LUT values force real distance ties across rows, so the
+        // (dist, order) tie-break is actually exercised.
+        let lut: Vec<f32> =
+            (0..m * 256).map(|_| (rng.below(8) as f32) * 0.5).collect();
+        let lens = [5usize, 0, FUSED_TILE + 33, 200, 7];
+
+        let mut sel = FusedSelector::new(k);
+        let mut scratch = Vec::new();
+        let mut reference: Vec<(f32, u64, u64)> = Vec::new(); // (dist, order, id)
+        let mut order_base = 0u64;
+        let mut next_id = 0u64;
+        for &len in &lens {
+            let codes: Vec<u8> = (0..len * m).map(|_| rng.below(256) as u8).collect();
+            let ids: Vec<u64> = (0..len as u64).map(|i| next_id + i).collect();
+            next_id += len as u64;
+
+            // Fused path: tiled scan through the active kernels into the
+            // exact selector.
+            scan_list_into_sink(&codes, m, &lut, &ids, order_base, &mut scratch, &mut sel);
+
+            // Scalar reference: explicit scalar kernels, flat buffer.
+            let mut dists = vec![0.0f32; len];
+            adc_scan_scalar_into(&codes, len, m, &lut, &mut dists);
+            for (i, &d) in dists.iter().enumerate() {
+                reference.push((d, order_base + i as u64, ids[i]));
+            }
+            order_base += len as u64;
+        }
+
+        let mut got = Vec::new();
+        sel.emit_into(&mut got);
+        // Stable sort on (dist, order) — the fused selector's key.
+        reference.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        reference.truncate(k);
+        assert_eq!(got.len(), reference.len(), "m={m}: top-k length");
+        for (rank, (g, w)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                g.0.to_bits(),
+                w.0.to_bits(),
+                "m={m} rank {rank}: distance bits diverged from scalar"
+            );
+            assert_eq!(g.1, w.2, "m={m} rank {rank}: id/tie order diverged");
         }
     }
 }
