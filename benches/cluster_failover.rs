@@ -14,6 +14,10 @@
 //! `BENCH_cluster.json` is written, so a failing bar still uploads the
 //! numbers that explain it.
 //!
+//! Part 3 (degraded serving): with a whole shard dark, FailFast vs
+//! ServePartial availability A/B, plus an end-to-end deadline bounding a
+//! straggling round's p99 to within 2x the budget.
+//!
 //! Run: `cargo bench --bench cluster_failover`
 //! Quick CI profile: `CHAM_BENCH_QUICK=1 cargo bench --bench cluster_failover`
 
@@ -23,8 +27,8 @@ use chameleon::chamvs::dispatcher::Dispatcher;
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
 use chameleon::chamvs::ScanBackend;
 use chameleon::cluster::{
-    ClusterConfig, ClusterEngine, ClusterMap, ClusterNode, FailingBackend, HedgeConfig,
-    SelectPolicy, StragglerBackend,
+    ClusterConfig, ClusterEngine, ClusterMap, ClusterNode, DegradedPolicy,
+    FailingBackend, HedgeConfig, RoundOptions, SelectPolicy, StragglerBackend,
 };
 use chameleon::config::SIFT;
 use chameleon::data::synthetic::SyntheticDataset;
@@ -183,6 +187,83 @@ fn hedge_arm(w: &Workload, hedge: bool, straggle: Duration, every: usize) -> (Su
     (Summary::of(&samples), disp.cluster().unwrap().stats().hedges)
 }
 
+/// One degraded-policy arm over a cluster whose shard 0 is completely
+/// dark (both replicas dead from the first scan). Returns
+/// (answered, partial, latency) — FailFast answers nothing that touches
+/// the dark shard (i.e. nothing: every round fans out to all shards),
+/// ServePartial answers everything as a coverage-tagged partial.
+fn dark_shard_arm(w: &Workload, policy: DegradedPolicy) -> (usize, usize, Summary) {
+    let (n_nodes, replication) = (4usize, 2usize);
+    let n_shards = n_nodes / replication;
+    let plan = ClusterMap::carve_plan(n_nodes, replication).unwrap();
+    let nodes: Vec<ClusterNode> = plan
+        .into_iter()
+        .map(|(id, shard)| {
+            let backend = mk_node(&w.index, shard, n_shards, w.k);
+            let backend = if shard == 0 {
+                Box::new(FailingBackend::new(backend, 0)) as Box<dyn ScanBackend>
+            } else {
+                backend
+            };
+            ClusterNode { id, shard, backend }
+        })
+        .collect();
+    let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+    let engine = ClusterEngine::new(nodes, n_shards, cfg).unwrap();
+    let mut disp = Dispatcher::clustered(engine, w.k);
+    let nprobe = SIFT.nprobe;
+    let opts = RoundOptions { degraded: policy, deadline: None };
+    let (mut ok, mut partial) = (0usize, 0usize);
+    let mut samples = Vec::with_capacity(w.queries.len());
+    for (qi, (q, l)) in w.queries.iter().zip(&w.lists).enumerate() {
+        let t0 = Instant::now();
+        if let Ok(r) =
+            disp.search_opts(q, &w.index.pq.centroids, l, nprobe, qi as u64, &opts)
+        {
+            ok += 1;
+            if r.is_partial() {
+                partial += 1;
+            }
+        }
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    (ok, partial, Summary::of(&samples))
+}
+
+/// Deadline arm: the only replica straggles on every scan; an end-to-end
+/// budget plus ServePartial must bound the round at the deadline instead
+/// of eating the full straggle. Returns (partials, latency).
+fn deadline_arm(w: &Workload, budget: Duration, straggle: Duration) -> (usize, Summary) {
+    let nodes = vec![ClusterNode {
+        id: 0,
+        shard: 0,
+        backend: Box::new(StragglerBackend::new(mk_node(&w.index, 0, 1, w.k), straggle, 1))
+            as Box<dyn ScanBackend>,
+    }];
+    let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+    let engine = ClusterEngine::new(nodes, 1, cfg).unwrap();
+    let mut disp = Dispatcher::clustered(engine, w.k);
+    let nprobe = SIFT.nprobe;
+    let mut partials = 0usize;
+    let mut samples = Vec::with_capacity(w.queries.len());
+    for (qi, (q, l)) in w.queries.iter().zip(&w.lists).enumerate() {
+        let opts = RoundOptions {
+            degraded: DegradedPolicy::ServePartial { min_coverage: 0.0 },
+            deadline: Some(Instant::now() + budget),
+        };
+        let t0 = Instant::now();
+        if let Ok(r) =
+            disp.search_opts(q, &w.index.pq.centroids, l, nprobe, qi as u64, &opts)
+        {
+            if r.is_partial() {
+                partials += 1;
+            }
+        }
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    (partials, Summary::of(&samples))
+}
+
 fn main() {
     let quick = std::env::var("CHAM_BENCH_QUICK").is_ok();
     let (n, n_queries) = if quick { (6_000, 60) } else { (12_000, 150) };
@@ -202,6 +283,35 @@ fn main() {
     println!("{}", no_hedge.render_ms("no_hedge"));
     println!("{}", hedged.render_ms(&format!("hedged ({hedges_fired} fired)")));
     println!("    -> p99 improvement: {improvement:.2}x (bar: 1.5x)");
+
+    // Part 3: degraded-mode ablation (ISSUE 9). Shard 0 is completely
+    // dark (both replicas dead): FailFast loses every query, ServePartial
+    // answers all of them at coverage 1/2. Then the deadline arm bounds a
+    // straggling round at an end-to-end budget.
+    let (ff_ok, _, ff_lat) = dark_shard_arm(&w, DegradedPolicy::FailFast);
+    let (sp_ok, sp_partial, sp_lat) =
+        dark_shard_arm(&w, DegradedPolicy::ServePartial { min_coverage: 0.0 });
+    println!(
+        "  dark shard: fail_fast answered {ff_ok}/{} (p99 {:.2} ms), \
+         serve_partial answered {sp_ok}/{} ({sp_partial} partial, p99 {:.2} ms)",
+        w.queries.len(),
+        ff_lat.p99 * 1e3,
+        w.queries.len(),
+        sp_lat.p99 * 1e3,
+    );
+    assert_eq!(ff_ok, 0, "FailFast must drop every round touching the dark shard");
+    assert_eq!(sp_ok, w.queries.len(), "ServePartial must answer every round");
+    assert_eq!(sp_partial, w.queries.len(), "every answer must be coverage-tagged");
+
+    let budget = Duration::from_millis(10);
+    let (dl_partials, dl_lat) = deadline_arm(&w, budget, straggle);
+    println!(
+        "  deadline: {:.0} ms budget under a 25 ms every-scan straggler -> \
+         p99 {:.2} ms, {dl_partials}/{} partial (bar: p99 <= 2x budget)",
+        budget.as_secs_f64() * 1e3,
+        dl_lat.p99 * 1e3,
+        w.queries.len(),
+    );
 
     // Machine-readable record, written BEFORE the acceptance assert so a
     // failing bar still leaves the numbers that explain it (house rule
@@ -223,6 +333,19 @@ fn main() {
                 ("p99_improvement", Json::Num(improvement)),
             ]),
         ),
+        (
+            "degraded",
+            obj(vec![
+                ("fail_fast_answered", Json::Num(ff_ok as f64)),
+                ("fail_fast_p99_ms", Json::Num(ff_lat.p99 * 1e3)),
+                ("serve_partial_answered", Json::Num(sp_ok as f64)),
+                ("serve_partial_partial", Json::Num(sp_partial as f64)),
+                ("serve_partial_p99_ms", Json::Num(sp_lat.p99 * 1e3)),
+                ("deadline_budget_ms", Json::Num(budget.as_secs_f64() * 1e3)),
+                ("deadline_p99_ms", Json::Num(dl_lat.p99 * 1e3)),
+                ("deadline_partials", Json::Num(dl_partials as f64)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_cluster.json", report.dump())
         .expect("writing BENCH_cluster.json");
@@ -234,5 +357,14 @@ fn main() {
         improvement >= 1.5,
         "hedged dispatch must improve p99 by >= 1.5x under the injected \
          straggler, got {improvement:.2}x"
+    );
+
+    // Acceptance bar (ISSUE 9): an end-to-end budget must bound the tail
+    // of a straggling round — p99 within 2x the budget, not the straggle.
+    assert!(
+        dl_lat.p99 <= 2.0 * budget.as_secs_f64(),
+        "deadline must bound the round: p99 {:.2} ms > 2x {:.0} ms budget",
+        dl_lat.p99 * 1e3,
+        budget.as_secs_f64() * 1e3
     );
 }

@@ -48,7 +48,7 @@ use anyhow::Result;
 
 use super::backend::{ScanBackend, ScanJob};
 use super::node::{MemoryNode, NodeResult};
-use crate::cluster::engine::ClusterEngine;
+use crate::cluster::engine::{ClusterEngine, RoundOptions};
 use crate::hwmodel::fpga::FpgaModel;
 use crate::hwmodel::loggp::LogGp;
 use crate::pq::codebook::KSUB;
@@ -75,12 +75,33 @@ pub struct SearchResult {
     pub measured_cpu_s: f64,
     /// Total codes scanned across nodes.
     pub n_scanned: usize,
+    /// Shards that contributed to this result (cluster mode under a
+    /// [`DegradedPolicy::ServePartial`](crate::cluster::engine::DegradedPolicy)
+    /// round). `0/0` means flat dispatch — by construction complete.
+    pub shards_answered: u32,
+    /// Total shards the round fanned out to (`0` = flat dispatch).
+    pub n_shards: u32,
 }
 
 impl SearchResult {
     /// Modeled end-to-end retrieval latency (paper's FPGA-side total).
     pub fn modeled_total(&self) -> f64 {
         self.accel_s + self.network_s
+    }
+
+    /// Fraction of shards that contributed (`1.0` = complete; flat
+    /// dispatch is always complete).
+    pub fn coverage(&self) -> f64 {
+        if self.n_shards == 0 {
+            1.0
+        } else {
+            self.shards_answered as f64 / self.n_shards as f64
+        }
+    }
+
+    /// Whether some shard's results are missing from the merged top-k.
+    pub fn is_partial(&self) -> bool {
+        self.n_shards != 0 && self.shards_answered < self.n_shards
     }
 }
 
@@ -289,11 +310,29 @@ impl Dispatcher {
         nprobe: usize,
         trace_id: u64,
     ) -> Result<SearchResult> {
+        self.search_opts(query, codebook, lists, nprobe, trace_id, &RoundOptions::default())
+    }
+
+    /// [`search_traced`](Self::search_traced) with per-round options: an
+    /// end-to-end deadline and a degraded-mode policy, honored by the
+    /// cluster engine (flat dispatch has no replicas to degrade over and
+    /// runs the round as usual; budget enforcement for the flat path
+    /// happens at admission).
+    pub fn search_opts(
+        &mut self,
+        query: &[f32],
+        codebook: &[f32],
+        lists: &[u32],
+        nprobe: usize,
+        trace_id: u64,
+        opts: &RoundOptions,
+    ) -> Result<SearchResult> {
         let mut out = self.dispatch_round(
             &[BatchQuery { query, lists, trace_id }],
             codebook,
             nprobe,
             false,
+            opts,
         )?;
         Ok(out.pop().expect("one result per query"))
     }
@@ -312,7 +351,20 @@ impl Dispatcher {
         codebook: &[f32],
         nprobe: usize,
     ) -> Result<Vec<SearchResult>> {
-        self.dispatch_round(batch, codebook, nprobe, true)
+        self.dispatch_round(batch, codebook, nprobe, true, &RoundOptions::default())
+    }
+
+    /// [`search_batch`](Self::search_batch) with per-round options (see
+    /// [`search_opts`](Self::search_opts)); the round's single deadline
+    /// should be the tightest of its queries' budgets.
+    pub fn search_batch_opts(
+        &mut self,
+        batch: &[BatchQuery],
+        codebook: &[f32],
+        nprobe: usize,
+        opts: &RoundOptions,
+    ) -> Result<Vec<SearchResult>> {
+        self.dispatch_round(batch, codebook, nprobe, true, opts)
     }
 
     /// Run one parallel round over `batch` (+ optionally the queued
@@ -324,6 +376,7 @@ impl Dispatcher {
         codebook: &[f32],
         nprobe: usize,
         drain_speculative: bool,
+        opts: &RoundOptions,
     ) -> Result<Vec<SearchResult>> {
         let tracing = self.tracer.enabled();
         // Hedge activity is engine-global, not per-query: diff the
@@ -435,12 +488,22 @@ impl Dispatcher {
             jobs.push(ScanJob { query, lists, lut, nprobe: *sp_nprobe });
         }
 
+        // Cluster coverage of this round: (answered, total) shards; None
+        // for flat dispatch (by construction complete).
+        let mut round_coverage: Option<(u32, u32)> = None;
         let (chunks, round) = match self.cluster.as_mut() {
             Some(engine) => {
                 // Cluster mode: one replica answers per shard, each on
                 // its own worker — the wall partition is one chunk per
-                // shard.
-                (vec![1usize; engine.n_shards()], engine.run_round(&jobs, codebook))
+                // *answered* shard (a degraded round contributes fewer
+                // rows per job).
+                match engine.run_round_opts(&jobs, codebook, opts) {
+                    Ok(out) => {
+                        round_coverage = Some((out.shards_answered, out.n_shards));
+                        (vec![1usize; out.shards_answered as usize], Ok(out.per_job))
+                    }
+                    Err(e) => (Vec::new(), Err(e)),
+                }
             }
             None => {
                 let threads = self.effective_threads();
@@ -455,7 +518,12 @@ impl Dispatcher {
                 (chunks, round)
             }
         };
-        let fan_out: usize = chunks.iter().sum();
+        // Network pricing fans out to every shard the round *broadcast*
+        // to, answered or not.
+        let fan_out: usize = match round_coverage {
+            Some((_, total)) => total as usize,
+            None => chunks.iter().sum(),
+        };
         let per_job = match round {
             Ok(r) => r,
             Err(e) => {
@@ -490,6 +558,15 @@ impl Dispatcher {
                 results.push(merged);
             } else {
                 results.push(self.aggregate(node_results, job, &chunks, fan_out));
+            }
+        }
+        // Stamp the round's coverage onto every result (blocking and
+        // speculative alike — a ticket collected later still reports how
+        // much of the cluster its round saw).
+        if let Some((answered, total)) = round_coverage {
+            for r in results.iter_mut() {
+                r.shards_answered = answered;
+                r.n_shards = total;
             }
         }
         drop(jobs);
@@ -552,6 +629,8 @@ impl Dispatcher {
             measured_wall_s: wall,
             measured_cpu_s: results.iter().map(|r| r.measured_s).sum(),
             n_scanned: results.iter().map(|r| r.n_scanned).sum(),
+            shards_answered: 0,
+            n_shards: 0,
         }
     }
 
@@ -612,6 +691,7 @@ impl Dispatcher {
                         codebook,
                         nprobe,
                         false,
+                        &RoundOptions::default(),
                     )
                     .map(|mut v| v.pop().expect("one result per query")),
                 )
@@ -1057,6 +1137,54 @@ mod tests {
         // Cancel-after-complete is a clean no-op.
         assert!(!disp.cancel(t1));
         assert_eq!(disp.cancel_slot(1), 0);
+    }
+
+    #[test]
+    fn cluster_partial_round_reports_coverage() {
+        use crate::cluster::engine::{
+            ClusterConfig, ClusterNode, DegradedPolicy, SelectPolicy,
+        };
+        use crate::cluster::fault::FailingBackend;
+        let mut rng = Rng::new(41);
+        let (n, d, m, nlist) = (2400, 32, 8, 24);
+        let data = rng.normal_vec(n * d);
+        let idx = IvfPqIndex::build(&data, n, d, m, nlist, 3);
+        let n_shards = 2;
+        let mk = |shard: usize| {
+            Box::new(MemoryNode::new(
+                Shard::carve(&idx, shard, n_shards),
+                ScanEngine::Native,
+                10,
+            )) as Box<dyn ScanBackend>
+        };
+        // Shard 0's only replica is dead; shard 1 is healthy.
+        let nodes = vec![
+            ClusterNode { id: 0, shard: 0, backend: Box::new(FailingBackend::new(mk(0), 0)) },
+            ClusterNode { id: 1, shard: 1, backend: mk(1) },
+        ];
+        let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+        let engine = ClusterEngine::new(nodes, n_shards, cfg).unwrap();
+        let mut disp = Dispatcher::clustered(engine, 10);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 6);
+        // The default (fail-fast) round errors ...
+        assert!(disp.search(&q, &idx.pq.centroids, &lists, 6).is_err());
+        // ... ServePartial returns the live shard's half, tagged.
+        let opts = RoundOptions {
+            degraded: DegradedPolicy::ServePartial { min_coverage: 0.0 },
+            deadline: None,
+        };
+        let r = disp.search_opts(&q, &idx.pq.centroids, &lists, 6, 0, &opts).unwrap();
+        assert!(r.is_partial());
+        assert!((r.coverage() - 0.5).abs() < 1e-9);
+        assert!(!r.topk.is_empty(), "the live shard still contributes");
+        // Flat dispatch always reports complete coverage.
+        let (mut flat, idx2, d2) = build_dispatcher(2, false);
+        let q2 = rng.normal_vec(d2);
+        let l2 = idx2.probe(&q2, 4);
+        let r2 = flat.search(&q2, &idx2.pq.centroids, &l2, 4).unwrap();
+        assert!(!r2.is_partial());
+        assert!((r2.coverage() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -71,6 +71,68 @@ impl Default for HedgeConfig {
     }
 }
 
+/// How a round treats shards that cannot answer (no active replica, all
+/// replicas failed, or the round's deadline expired first).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DegradedPolicy {
+    /// Any unanswered shard fails the whole round (the legacy contract:
+    /// a result is always complete or absent).
+    FailFast,
+    /// Serve the merged top-k from the shards that answered, tagged with
+    /// the coverage fraction — as long as `shards_answered / n_shards`
+    /// stays at or above `min_coverage`. Below the floor the round fails.
+    ServePartial {
+        /// Coverage floor in [0, 1]; 0.0 accepts any non-empty answer.
+        min_coverage: f64,
+    },
+}
+
+impl Default for DegradedPolicy {
+    fn default() -> DegradedPolicy {
+        DegradedPolicy::FailFast
+    }
+}
+
+/// Per-round execution options (per-query knobs threaded down from the
+/// coordinator; [`Default`] reproduces the legacy fail-fast round).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundOptions {
+    /// Partial-result gating for unanswered shards.
+    pub degraded: DegradedPolicy,
+    /// Absolute end-to-end deadline for this round. Retries and hedges
+    /// are only launched while budget remains; shards unresolved at the
+    /// deadline are abandoned (failing the round under
+    /// [`DegradedPolicy::FailFast`], shrinking coverage under
+    /// [`DegradedPolicy::ServePartial`]).
+    pub deadline: Option<Instant>,
+}
+
+/// Outcome of one [`ClusterEngine::run_round_opts`] call.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    /// Results shaped `[job][answered shard]`, shard order 0..S with
+    /// unanswered shards omitted (full rounds keep the legacy shape).
+    pub per_job: Vec<Vec<NodeResult>>,
+    /// Shards that contributed results this round.
+    pub shards_answered: u32,
+    /// Total shards in the map.
+    pub n_shards: u32,
+}
+
+impl RoundOutcome {
+    /// Fraction of shards that answered.
+    pub fn coverage(&self) -> f64 {
+        if self.n_shards == 0 {
+            return 1.0;
+        }
+        self.shards_answered as f64 / self.n_shards as f64
+    }
+
+    pub fn is_partial(&self) -> bool {
+        self.shards_answered < self.n_shards
+    }
+}
+
 /// Engine configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterConfig {
@@ -123,6 +185,18 @@ pub struct ClusterStats {
     pub breaker_trips: u64,
     /// Replies that arrived after their shard was already resolved.
     pub late_responses: u64,
+    /// Probation probes sent to breaker-open nodes whose backoff elapsed.
+    pub probes: u64,
+    /// Probes that answered but were NOT bit-identical to the shard's
+    /// winning result (the replica stays out of selection).
+    pub probe_mismatches: u64,
+    /// Rounds that returned with partial coverage (ServePartial).
+    pub partial_rounds: u64,
+    /// Shard-rounds that went unanswered (each partial round contributes
+    /// `n_shards - shards_answered`).
+    pub unanswered_shards: u64,
+    /// Shard-rounds abandoned because the round deadline expired.
+    pub deadline_expired_shards: u64,
     /// `(node, cpu)` for every worker that successfully pinned and has
     /// served at least one scan since — empty unless
     /// [`ClusterConfig::pin_workers`] is on and the platform supports
@@ -134,7 +208,9 @@ impl ClusterStats {
     pub fn render(&self) -> String {
         let mut s = format!(
             "rounds={} attempts={} retries={} failovers={} hedges={} \
-             hedge_wins={} breaker_trips={} late_responses={}",
+             hedge_wins={} breaker_trips={} late_responses={} probes={} \
+             probe_mismatches={} partial_rounds={} unanswered_shards={} \
+             deadline_expired_shards={}",
             self.rounds,
             self.attempts,
             self.retries,
@@ -142,7 +218,12 @@ impl ClusterStats {
             self.hedges,
             self.hedge_wins,
             self.breaker_trips,
-            self.late_responses
+            self.late_responses,
+            self.probes,
+            self.probe_mismatches,
+            self.partial_rounds,
+            self.unanswered_shards,
+            self.deadline_expired_shards
         );
         if !self.pinned.is_empty() {
             s.push_str(" pinned=[");
@@ -291,6 +372,13 @@ struct ShardRound {
     /// failure at most once, not once per timeout window).
     outstanding: Vec<(NodeId, Attempt, bool)>,
     done: Option<Vec<NodeResult>>,
+    /// Shard abandoned this round (no replica answered, or the deadline
+    /// expired): resolved-without-results under `ServePartial`.
+    failed: bool,
+    /// A probation probe's result that arrived before the shard's winner:
+    /// held for the bit-identity comparison (or adopted outright if every
+    /// regular replica ends up failing).
+    probe_result: Option<(NodeId, Vec<NodeResult>, f64)>,
     /// Armed hedge deadline; cleared once the hedge fires (a shard
     /// hedges at most once per round).
     hedge_at: Option<Instant>,
@@ -304,6 +392,11 @@ enum Attempt {
     Primary,
     Retry,
     Hedge,
+    /// Half-open probation: the one scan a breaker-open node gets after
+    /// its backoff elapses. Its result never races for the shard win
+    /// while regular replicas are alive — it is compared bit-identically
+    /// against the winner to decide whether the node rejoins selection.
+    Probe,
 }
 
 /// The elastic, replicated retrieval tier behind a
@@ -513,6 +606,13 @@ impl ClusterEngine {
         &self.health
     }
 
+    /// Mutable health access, for tuning tracker knobs (EWMA weight,
+    /// probation backoff) after construction — tests and the chaos
+    /// harness shrink the backoff so rejoin happens on their clock.
+    pub fn health_mut(&mut self) -> &mut HealthTracker {
+        &mut self.health
+    }
+
     pub fn stats(&self) -> ClusterStats {
         let mut s = self.stats.clone();
         s.pinned = self.pinned.iter().map(|(&n, &c)| (n, c)).collect();
@@ -574,14 +674,32 @@ impl ClusterEngine {
     /// Execute one round of jobs across the cluster, returning results
     /// shaped `[job][shard]` (shard order 0..S — the exact shape the
     /// dispatcher's flat path produces per node, so the k-way merge and
-    /// every downstream consumer are unchanged).
+    /// every downstream consumer are unchanged). Legacy fail-fast
+    /// contract: every shard answered or the round errored.
     pub fn run_round(
         &mut self,
         jobs: &[ScanJob<'_>],
         codebook: &[f32],
     ) -> Result<Vec<Vec<NodeResult>>> {
+        Ok(self.run_round_opts(jobs, codebook, &RoundOptions::default())?.per_job)
+    }
+
+    /// [`run_round`](Self::run_round) with per-round options: a
+    /// [`DegradedPolicy`] deciding whether unanswered shards fail the
+    /// round or shrink its coverage, and an end-to-end deadline that
+    /// every retry and hedge draws from. Also runs half-open probation:
+    /// a breaker-open replica whose backoff has elapsed gets exactly one
+    /// probe scan riding the round, and rejoins selection only if its
+    /// result is bit-identical to the shard's winning result.
+    pub fn run_round_opts(
+        &mut self,
+        jobs: &[ScanJob<'_>],
+        codebook: &[f32],
+        opts: &RoundOptions,
+    ) -> Result<RoundOutcome> {
         let n_shards = self.map.n_shards();
         let n_jobs = jobs.len();
+        let fail_fast = matches!(opts.degraded, DegradedPolicy::FailFast);
         self.seq += 1;
         self.stats.rounds += 1;
         let seq = self.seq;
@@ -606,54 +724,114 @@ impl ClusterEngine {
                 .map(|d| Duration::from_secs_f64(d).max(h.floor))
         });
 
-        // Seed every shard with its primary attempt.
+        // Seed every shard with its primary attempt, plus at most one
+        // probation probe to a breaker-open replica whose backoff is up.
         let now = Instant::now();
         let mut states: Vec<ShardRound> = Vec::with_capacity(n_shards);
+        let mut remaining = 0usize;
+        let mut probes_out = 0usize;
         for shard in 0..n_shards {
             let cands = self.health.order(&self.map.replicas(shard), health_aware);
-            anyhow::ensure!(
-                !cands.is_empty(),
-                "shard {shard} has no active replicas (epoch {})",
-                self.map.epoch()
-            );
             let mut st = ShardRound {
                 cands,
                 next: 0,
                 outstanding: Vec::new(),
                 done: None,
+                failed: false,
+                probe_result: None,
                 hedge_at: hedge_deadline.map(|d| now + d),
                 timeout_at: now + self.cfg.attempt_timeout,
                 last_err: None,
             };
-            let ok = send_next(&self.workers, &mut st, Attempt::Primary, seq, shard, &round, &tx);
-            anyhow::ensure!(
-                ok,
-                "shard {shard}: no reachable replica worker (epoch {})",
-                self.map.epoch()
-            );
-            self.stats.attempts += 1;
+            let seeded =
+                send_next(&self.workers, &mut st, Attempt::Primary, seq, shard, &round, &tx);
+            if seeded {
+                self.stats.attempts += 1;
+                remaining += 1;
+                let probe_cand = st.cands.iter().copied().find(|&id| {
+                    self.health.probe_due(id)
+                        && !st.outstanding.iter().any(|&(o, _, _)| o == id)
+                });
+                if let Some(id) = probe_cand {
+                    if self.health.begin_probe(id)
+                        && send_to(&self.workers, id, &mut st, Attempt::Probe, seq, shard, &round, &tx)
+                    {
+                        self.stats.attempts += 1;
+                        self.stats.probes += 1;
+                        probes_out += 1;
+                    }
+                }
+            } else if fail_fast {
+                anyhow::bail!(
+                    "shard {shard} has no reachable replica (epoch {})",
+                    self.map.epoch()
+                );
+            } else {
+                st.failed = true;
+            }
             states.push(st);
         }
 
-        // Event loop: replies, hedge deadlines, forced-failover timeouts.
-        let mut remaining = n_shards;
-        while remaining > 0 {
+        // Event loop: replies, hedge deadlines, forced-failover timeouts,
+        // the round deadline, and a short probe-drain grace at the end.
+        let mut drain_started: Option<Instant> = None;
+        'round: while remaining > 0 || probes_out > 0 {
             let now = Instant::now();
+            // End-to-end deadline: abandon every unresolved shard and
+            // stop waiting for probes. Abandonment is NOT a node failure
+            // — the budget ran out, not the replica.
+            if let Some(dl) = opts.deadline {
+                if now >= dl {
+                    let mut expired = 0usize;
+                    for st in states.iter_mut() {
+                        if st.done.is_none() && !st.failed {
+                            st.failed = true;
+                            expired += 1;
+                            remaining -= 1;
+                            self.stats.deadline_expired_shards += 1;
+                        }
+                    }
+                    if fail_fast && expired > 0 {
+                        anyhow::bail!(
+                            "round deadline expired with {expired} shard(s) unanswered"
+                        );
+                    }
+                    break 'round;
+                }
+            }
+            // Probe drain: the round itself is resolved; wait only a
+            // short grace for outstanding probes instead of stalling the
+            // caller on a wedged node.
+            if remaining == 0 {
+                let t0 = *drain_started.get_or_insert(now);
+                if now >= t0 + PROBE_DRAIN {
+                    break 'round;
+                }
+            }
             let mut next_event: Option<Instant> = None;
             for shard in 0..n_shards {
                 let st = &mut states[shard];
-                if st.done.is_some() {
+                if st.done.is_some() || st.failed {
                     continue;
                 }
-                // Hedge: fire a duplicate scan once the deadline passes.
+                // Hedge: fire a duplicate scan once the deadline passes —
+                // but only if the round's remaining budget could still
+                // fit the duplicate (pricing against the recent-latency
+                // quantile the hedge deadline itself came from).
                 if let Some(h) = st.hedge_at {
                     if now >= h {
                         st.hedge_at = None;
-                        let fired =
-                            send_next(&self.workers, st, Attempt::Hedge, seq, shard, &round, &tx);
-                        if fired {
-                            self.stats.attempts += 1;
-                            self.stats.hedges += 1;
+                        let est = hedge_deadline.unwrap_or(Duration::ZERO);
+                        let affordable =
+                            opts.deadline.map_or(true, |dl| now + est <= dl);
+                        if affordable {
+                            let fired = send_next(
+                                &self.workers, st, Attempt::Hedge, seq, shard, &round, &tx,
+                            );
+                            if fired {
+                                self.stats.attempts += 1;
+                                self.stats.hedges += 1;
+                            }
                         }
                     } else {
                         next_event = Some(next_event.map_or(h, |e| e.min(h)));
@@ -661,10 +839,11 @@ impl ClusterEngine {
                 }
                 // Forced failover: a shard with replies outstanding past
                 // the attempt timeout counts them failed and moves on —
-                // and once every replica has been tried, the round FAILS
-                // rather than waiting forever on a wedged backend (the
-                // bounded-detection contract; socket-backed nodes error
-                // out earlier via their own transport timeouts).
+                // and once every replica has been tried, the shard is
+                // abandoned (failing the round under FailFast) rather
+                // than waited on forever (the bounded-detection contract;
+                // socket-backed nodes error out earlier via their own
+                // transport timeouts).
                 if now >= st.timeout_at {
                     for (id, _, penalized) in st.outstanding.iter_mut() {
                         if !*penalized {
@@ -678,7 +857,7 @@ impl ClusterEngine {
                         self.stats.attempts += 1;
                         self.stats.retries += 1;
                         st.timeout_at = now + self.cfg.attempt_timeout;
-                    } else {
+                    } else if fail_fast {
                         anyhow::bail!(
                             "shard {shard}: all replicas timed out or failed{}",
                             match &st.last_err {
@@ -686,6 +865,10 @@ impl ClusterEngine {
                                 None => String::new(),
                             }
                         );
+                    } else {
+                        st.failed = true;
+                        remaining -= 1;
+                        continue;
                     }
                 }
                 let t = st.timeout_at;
@@ -697,6 +880,14 @@ impl ClusterEngine {
                     .saturating_duration_since(Instant::now())
                     .max(Duration::from_micros(50)),
                 None => Duration::from_millis(25),
+            };
+            // Never sleep past the round deadline or the probe grace.
+            let wait = match opts.deadline {
+                Some(dl) => wait.min(
+                    dl.saturating_duration_since(Instant::now())
+                        .max(Duration::from_micros(50)),
+                ),
+                None => wait,
             };
             let reply = match rx.recv_timeout(wait) {
                 Ok(r) => r,
@@ -723,12 +914,32 @@ impl ClusterEngine {
                 Some(i) => st.outstanding.remove(i).1,
                 None => Attempt::Primary,
             };
+            if attempt == Attempt::Probe {
+                probes_out -= 1;
+                match reply.result {
+                    Ok(results) => {
+                        // Held for the bit-identity comparison after the
+                        // round resolves (or adoption if no regular
+                        // replica ends up answering).
+                        st.probe_result = Some((reply.node, results, reply.latency_s));
+                    }
+                    Err(e) => {
+                        // Failed probe: re-opens with doubled backoff.
+                        if self.health.record_failure(reply.node) {
+                            self.stats.breaker_trips += 1;
+                        }
+                        st.last_err = Some(e);
+                    }
+                }
+                continue;
+            }
             match reply.result {
                 Ok(results) => {
                     self.health.record_ok(reply.node, reply.latency_s);
-                    if st.done.is_some() {
-                        // A hedge/retry raced and lost; its latency still
-                        // warmed the health window above.
+                    if st.done.is_some() || st.failed {
+                        // A hedge/retry raced and lost (or its shard was
+                        // already abandoned); its latency still warmed
+                        // the health window above.
                         self.stats.late_responses += 1;
                         continue;
                     }
@@ -744,14 +955,14 @@ impl ClusterEngine {
                     match attempt {
                         Attempt::Hedge => self.stats.hedge_wins += 1,
                         Attempt::Retry => self.stats.failovers += 1,
-                        Attempt::Primary => {}
+                        Attempt::Primary | Attempt::Probe => {}
                     }
                 }
                 Err(e) => {
                     if self.health.record_failure(reply.node) {
                         self.stats.breaker_trips += 1;
                     }
-                    if st.done.is_some() {
+                    if st.done.is_some() || st.failed {
                         self.stats.late_responses += 1;
                         continue;
                     }
@@ -772,28 +983,102 @@ impl ClusterEngine {
                             self.stats.attempts += 1;
                             self.stats.retries += 1;
                             st.timeout_at = Instant::now() + self.cfg.attempt_timeout;
-                        } else {
+                        } else if fail_fast {
                             anyhow::bail!(
                                 "shard {} failed on all replicas: {:#}",
                                 reply.shard,
                                 st.last_err.take().expect("just set")
                             );
+                        } else {
+                            st.failed = true;
+                            remaining -= 1;
                         }
                     }
                 }
             }
         }
 
-        // Transpose [shard][job] -> [job][shard]; shard order preserved.
+        // Resolve probation: compare every held probe result against its
+        // shard's winner (bit-identity decides whether the replica
+        // rejoins), adopt it outright when no regular replica answered,
+        // and fail probes that never replied — no node may be stranded in
+        // half-open past the round.
+        for st in states.iter_mut() {
+            let unanswered_probe = st
+                .outstanding
+                .iter()
+                .any(|&(_, attempt, _)| attempt == Attempt::Probe);
+            if let Some((id, results, latency_s)) = st.probe_result.take() {
+                if st.done.is_none() && results.len() == n_jobs {
+                    // The probed replica is the only one that answered:
+                    // adopt its result — probation recovery of a shard
+                    // whose regular replicas are all dark.
+                    self.health.record_ok(id, latency_s);
+                    st.done = Some(results);
+                    st.failed = false;
+                    self.stats.failovers += 1;
+                } else if st
+                    .done
+                    .as_ref()
+                    .is_some_and(|d| results_identical(d, &results))
+                {
+                    self.health.record_ok(id, latency_s);
+                } else {
+                    self.stats.probe_mismatches += 1;
+                    if self.health.record_failure(id) {
+                        self.stats.breaker_trips += 1;
+                    }
+                }
+            } else if unanswered_probe {
+                for &(id, attempt, _) in st.outstanding.iter() {
+                    if attempt == Attempt::Probe {
+                        if self.health.record_failure(id) {
+                            self.stats.breaker_trips += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        let shards_answered = states.iter().filter(|s| s.done.is_some()).count();
+        if let DegradedPolicy::ServePartial { min_coverage } = opts.degraded {
+            let coverage = if n_shards == 0 {
+                1.0
+            } else {
+                shards_answered as f64 / n_shards as f64
+            };
+            if coverage + 1e-9 < min_coverage.clamp(0.0, 1.0) {
+                anyhow::bail!(
+                    "degraded round coverage {coverage:.3} below floor {min_coverage:.3} \
+                     ({shards_answered}/{n_shards} shards answered{})",
+                    match states.iter().find_map(|s| s.last_err.as_ref()) {
+                        Some(e) => format!("; last error: {e:#}"),
+                        None => String::new(),
+                    }
+                );
+            }
+            if shards_answered < n_shards {
+                self.stats.partial_rounds += 1;
+                self.stats.unanswered_shards += (n_shards - shards_answered) as u64;
+            }
+        }
+
+        // Transpose [shard][job] -> [job][answered shard]; shard order
+        // preserved, unanswered shards omitted.
         let mut per_job: Vec<Vec<NodeResult>> =
             (0..n_jobs).map(|_| Vec::with_capacity(n_shards)).collect();
         for st in states {
-            let results = st.done.expect("all shards resolved");
-            for (j, r) in results.into_iter().enumerate() {
-                per_job[j].push(r);
+            if let Some(results) = st.done {
+                for (j, r) in results.into_iter().enumerate() {
+                    per_job[j].push(r);
+                }
             }
         }
-        Ok(per_job)
+        Ok(RoundOutcome {
+            per_job,
+            shards_answered: shards_answered as u32,
+            n_shards: n_shards as u32,
+        })
     }
 }
 
@@ -834,8 +1119,49 @@ fn local_nodes(
     Ok((nodes, n_shards))
 }
 
+/// How long a resolved round waits for its outstanding probation probes
+/// before abandoning them (an abandoned probe counts as a failed one) —
+/// a wedged half-open node must not stall an otherwise-fast round.
+const PROBE_DRAIN: Duration = Duration::from_millis(250);
+
+/// Bit-identity comparison for probation: a probed replica rejoins only
+/// if its per-job top-K (distances AND ids) matches the winner exactly.
+fn results_identical(a: &[NodeResult], b: &[NodeResult]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.topk == y.topk)
+}
+
+/// Send a scan command to one *specific* replica (probation probes target
+/// the half-open node directly) without advancing the shard's failover
+/// cursor. Returns false when the node has no live worker.
+#[allow(clippy::too_many_arguments)]
+fn send_to(
+    workers: &BTreeMap<NodeId, Worker>,
+    id: NodeId,
+    st: &mut ShardRound,
+    attempt: Attempt,
+    seq: u64,
+    shard: usize,
+    round: &Arc<Round>,
+    reply: &Sender<ScanReply>,
+) -> bool {
+    if let Some(w) = workers.get(&id) {
+        let cmd = Command::Scan {
+            seq,
+            shard,
+            round: round.clone(),
+            reply: reply.clone(),
+        };
+        if w.tx.send(cmd).is_ok() {
+            st.outstanding.push((id, attempt, false));
+            return true;
+        }
+    }
+    false
+}
+
 /// Send the shard's next untried candidate a scan command. Returns false
 /// when every candidate has been tried (or has no live worker).
+#[allow(clippy::too_many_arguments)]
 fn send_next(
     workers: &BTreeMap<NodeId, Worker>,
     st: &mut ShardRound,
@@ -867,7 +1193,7 @@ fn send_next(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::fault::FailingBackend;
+    use crate::cluster::fault::{FailingBackend, OutageBackend, StragglerBackend};
     use crate::util::rng::Rng;
 
     fn toy_index() -> (IvfPqIndex, usize) {
@@ -1039,5 +1365,147 @@ mod tests {
             merged_before, merged_after,
             "re-carved cluster must serve identical top-k"
         );
+    }
+
+    #[test]
+    fn serve_partial_covers_live_shards_when_one_is_dark() {
+        let (idx, d) = toy_index();
+        let n_shards = 2;
+        let mk = |shard: usize| {
+            Box::new(MemoryNode::new(
+                Shard::carve(&idx, shard, n_shards),
+                ScanEngine::Native,
+                10,
+            )) as Box<dyn ScanBackend>
+        };
+        // Both replicas of shard 0 are dead from the first call; shard 1
+        // is healthy.
+        let nodes = vec![
+            ClusterNode { id: 0, shard: 0, backend: Box::new(FailingBackend::new(mk(0), 0)) },
+            ClusterNode { id: 1, shard: 0, backend: Box::new(FailingBackend::new(mk(0), 0)) },
+            ClusterNode { id: 2, shard: 1, backend: mk(1) },
+            ClusterNode { id: 3, shard: 1, backend: mk(1) },
+        ];
+        let cfg = ClusterConfig { select: SelectPolicy::Static, ..Default::default() };
+        let mut engine = ClusterEngine::new(nodes, n_shards, cfg).unwrap();
+        let mut rng = Rng::new(12);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 6);
+        let lut = crate::pq::scan::build_lut(&idx.pq, &q);
+        let jobs = [ScanJob { query: &q, lists: &lists, lut: &lut, nprobe: 6 }];
+        let opts = RoundOptions {
+            degraded: DegradedPolicy::ServePartial { min_coverage: 0.5 },
+            ..Default::default()
+        };
+        let out = engine.run_round_opts(&jobs, &idx.pq.centroids, &opts).unwrap();
+        assert_eq!(out.n_shards, 2);
+        assert_eq!(out.shards_answered, 1);
+        assert!(out.is_partial());
+        assert!((out.coverage() - 0.5).abs() < 1e-9);
+        assert_eq!(out.per_job[0].len(), 1, "only the live shard contributes");
+        let stats = engine.stats();
+        assert_eq!(stats.partial_rounds, 1);
+        assert_eq!(stats.unanswered_shards, 1);
+        // A floor above the achievable coverage fails the round instead.
+        let opts = RoundOptions {
+            degraded: DegradedPolicy::ServePartial { min_coverage: 0.9 },
+            ..Default::default()
+        };
+        assert!(engine.run_round_opts(&jobs, &idx.pq.centroids, &opts).is_err());
+    }
+
+    #[test]
+    fn deadline_bounds_a_straggling_round() {
+        let (idx, d) = toy_index();
+        let mk = || {
+            Box::new(MemoryNode::new(
+                Shard::carve(&idx, 0, 1),
+                ScanEngine::Native,
+                10,
+            )) as Box<dyn ScanBackend>
+        };
+        // The shard's only replica sleeps far past the deadline on every
+        // scan; the attempt timeout is set high so only the round deadline
+        // can end the wait.
+        let slow = Box::new(StragglerBackend::new(mk(), Duration::from_millis(400), 1));
+        let nodes = vec![ClusterNode { id: 0, shard: 0, backend: slow }];
+        let cfg = ClusterConfig {
+            select: SelectPolicy::Static,
+            attempt_timeout: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let mut engine = ClusterEngine::new(nodes, 1, cfg).unwrap();
+        let mut rng = Rng::new(13);
+        let q = rng.normal_vec(d);
+        let lists = idx.probe(&q, 6);
+        let lut = crate::pq::scan::build_lut(&idx.pq, &q);
+        let jobs = [ScanJob { query: &q, lists: &lists, lut: &lut, nprobe: 6 }];
+        let t0 = Instant::now();
+        let opts = RoundOptions {
+            degraded: DegradedPolicy::ServePartial { min_coverage: 0.0 },
+            deadline: Some(Instant::now() + Duration::from_millis(40)),
+        };
+        let out = engine.run_round_opts(&jobs, &idx.pq.centroids, &opts).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(300),
+            "deadline must bound the round, took {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(out.shards_answered, 0);
+        assert_eq!(engine.stats().deadline_expired_shards, 1);
+        assert!(
+            !engine.health().breaker_open(0),
+            "deadline expiry is a budget event, not a node failure"
+        );
+        // Under FailFast the expired deadline is an error instead.
+        let opts = RoundOptions {
+            degraded: DegradedPolicy::FailFast,
+            deadline: Some(Instant::now() + Duration::from_millis(40)),
+        };
+        assert!(engine.run_round_opts(&jobs, &idx.pq.centroids, &opts).is_err());
+    }
+
+    #[test]
+    fn probation_probe_rejoins_node_with_bit_identical_results() {
+        let (idx, d) = toy_index();
+        let mk = || {
+            Box::new(MemoryNode::new(
+                Shard::carve(&idx, 0, 1),
+                ScanEngine::Native,
+                10,
+            )) as Box<dyn ScanBackend>
+        };
+        // Node 0 fails its first two scans (opening the breaker at
+        // threshold 2), then heals; node 1 stays healthy throughout.
+        let nodes = vec![
+            ClusterNode { id: 0, shard: 0, backend: Box::new(OutageBackend::new(mk(), 0, 2)) },
+            ClusterNode { id: 1, shard: 0, backend: mk() },
+        ];
+        let cfg = ClusterConfig {
+            select: SelectPolicy::Static,
+            breaker_threshold: 2,
+            ..Default::default()
+        };
+        let mut engine = ClusterEngine::new(nodes, 1, cfg).unwrap();
+        engine.health_mut().breaker_backoff = Duration::from_millis(5);
+        let mut rng = Rng::new(14);
+        let q = rng.normal_vec(d);
+        let r1 = run_query(&mut engine, &idx, &q).unwrap();
+        let r2 = run_query(&mut engine, &idx, &q).unwrap();
+        assert!(engine.health().breaker_open(0), "breaker open after threshold");
+        // Wait out the probation backoff, then run a round: node 1 serves
+        // it while node 0 gets its one probe (now healed), which must
+        // match the winner bit-identically before the breaker closes.
+        std::thread::sleep(Duration::from_millis(20));
+        let r3 = run_query(&mut engine, &idx, &q).unwrap();
+        assert_eq!(engine.stats().probes, 1);
+        assert_eq!(engine.stats().probe_mismatches, 0);
+        assert!(
+            !engine.health().breaker_open(0),
+            "identical probe result closes the breaker"
+        );
+        for (a, b) in r1[0].iter().zip(&r3[0]).chain(r2[0].iter().zip(&r3[0])) {
+            assert_eq!(a.topk, b.topk, "results stable through outage and rejoin");
+        }
     }
 }

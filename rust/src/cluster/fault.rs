@@ -64,6 +64,66 @@ impl ScanBackend for FailingBackend {
     }
 }
 
+/// A backend that fails every scan inside the call window
+/// `[down_from, down_to)` (0-based call index) and serves normally
+/// outside it — a transient outage that heals, for exercising the
+/// breaker's half-open probation and rejoin path.
+pub struct OutageBackend {
+    inner: Box<dyn ScanBackend>,
+    down_from: usize,
+    down_to: usize,
+    calls: usize,
+}
+
+impl OutageBackend {
+    pub fn new(
+        inner: Box<dyn ScanBackend>,
+        down_from: usize,
+        down_to: usize,
+    ) -> OutageBackend {
+        OutageBackend { inner, down_from, down_to, calls: 0 }
+    }
+
+    /// Scan calls observed (healthy + failed).
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+}
+
+impl ScanBackend for OutageBackend {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn fpga(&self) -> &FpgaModel {
+        self.inner.fpga()
+    }
+
+    fn wants_lut(&self) -> bool {
+        self.inner.wants_lut()
+    }
+
+    fn scan_jobs(&mut self, jobs: &[ScanJob<'_>], codebook: &[f32]) -> Result<Vec<NodeResult>> {
+        let call = self.calls;
+        self.calls += 1;
+        anyhow::ensure!(
+            call < self.down_from || call >= self.down_to,
+            "injected fault: node is down (outage window {}..{}, call {call})",
+            self.down_from,
+            self.down_to
+        );
+        self.inner.scan_jobs(jobs, codebook)
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+
+    fn drain(&mut self) {
+        self.inner.drain();
+    }
+}
+
 /// A backend that sleeps `delay` before every `every`-th scan — an
 /// intermittent straggler (GC pause, page fault storm, noisy neighbor)
 /// that selection alone cannot route around, which is exactly the case

@@ -6,17 +6,39 @@
 //! success (with its coordinator-observed round-trip latency) or a
 //! failure. The breaker opens after `breaker_threshold` *consecutive*
 //! failures — an open node is deprioritized by replica selection (tried
-//! only when every closed replica is exhausted) and closes again on the
-//! first successful scan, so a node that recovers rejoins the rotation
-//! without an operator transition.
+//! only when every closed replica is exhausted). Recovery goes through
+//! **half-open probation**: once the breaker's backoff elapses, exactly
+//! one probe query is admitted ([`begin_probe`](HealthTracker::begin_probe));
+//! a failed probe re-opens the breaker with a doubled backoff, a
+//! successful one (the engine additionally demands bit-identical results
+//! against a healthy replica) closes it and restores selection weight —
+//! so a node that recovers rejoins the rotation without an operator
+//! transition, and a flapping node is retried ever more rarely.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
 
 use super::map::NodeId;
 use crate::util::stats::percentile;
 
 /// Recent-latency window size for hedge-deadline quantiles.
 const RECENT_CAP: usize = 512;
+
+/// Ceiling on the breaker's re-open backoff (doubles per failed probe).
+const BREAKER_BACKOFF_CAP: Duration = Duration::from_secs(10);
+
+/// Circuit-breaker state of one node.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Breaker {
+    /// Healthy: full selection weight.
+    #[default]
+    Closed,
+    /// Tripped: deprioritized until `until`, when one probe may run.
+    Open { until: Instant, backoff: Duration },
+    /// Probation: the one admitted probe is in flight; no other traffic
+    /// is steered here until it reports.
+    HalfOpen { backoff: Duration },
+}
 
 /// Health state of one node.
 #[derive(Clone, Copy, Debug, Default)]
@@ -30,8 +52,8 @@ pub struct NodeHealth {
     pub failures: u64,
     /// Current consecutive-failure run length.
     pub consecutive_failures: u32,
-    /// Whether the circuit breaker is open (node deprioritized).
-    pub breaker_open: bool,
+    /// Circuit-breaker state (non-`Closed` nodes are deprioritized).
+    pub breaker: Breaker,
 }
 
 /// Health registry over the cluster's nodes.
@@ -42,6 +64,9 @@ pub struct HealthTracker {
     pub alpha: f64,
     /// Consecutive failures that open the breaker.
     pub breaker_threshold: u32,
+    /// First probation backoff after the breaker opens; doubles on every
+    /// failed probe, capped at [`BREAKER_BACKOFF_CAP`].
+    pub breaker_backoff: Duration,
     /// Recent successful round-trip latencies across all nodes (ring).
     recent: VecDeque<f64>,
 }
@@ -52,6 +77,7 @@ impl Default for HealthTracker {
             nodes: BTreeMap::new(),
             alpha: 0.2,
             breaker_threshold: 3,
+            breaker_backoff: Duration::from_millis(200),
             recent: VecDeque::new(),
         }
     }
@@ -63,7 +89,9 @@ impl HealthTracker {
     }
 
     /// Record a successful scan and its round-trip latency. Resets the
-    /// consecutive-failure run and closes the breaker.
+    /// consecutive-failure run and closes the breaker — from `HalfOpen`
+    /// this is the probe succeeding, which ends probation and restores
+    /// full selection weight.
     pub fn record_ok(&mut self, id: NodeId, latency_s: f64) {
         let h = self.nodes.entry(id).or_default();
         h.ewma_s = if h.ok == 0 {
@@ -73,7 +101,7 @@ impl HealthTracker {
         };
         h.ok += 1;
         h.consecutive_failures = 0;
-        h.breaker_open = false;
+        h.breaker = Breaker::Closed;
         self.recent.push_back(latency_s);
         while self.recent.len() > RECENT_CAP {
             self.recent.pop_front();
@@ -81,21 +109,67 @@ impl HealthTracker {
     }
 
     /// Record a failed scan. Returns `true` iff this failure tripped the
-    /// breaker open (the threshold crossing, not every failure beyond it).
+    /// breaker open (the threshold crossing or a failed probe re-opening
+    /// it — not every failure beyond them). A failure during `HalfOpen`
+    /// probation re-opens with a *doubled* backoff, so a flapping node
+    /// gets exponentially rarer probes.
     pub fn record_failure(&mut self, id: NodeId) -> bool {
         let threshold = self.breaker_threshold;
+        let base = self.breaker_backoff;
         let h = self.nodes.entry(id).or_default();
         h.failures += 1;
         h.consecutive_failures = h.consecutive_failures.saturating_add(1);
-        let tripped = !h.breaker_open && h.consecutive_failures >= threshold;
-        if tripped {
-            h.breaker_open = true;
+        match h.breaker {
+            Breaker::Closed if h.consecutive_failures >= threshold => {
+                h.breaker = Breaker::Open { until: Instant::now() + base, backoff: base };
+                true
+            }
+            Breaker::HalfOpen { backoff } => {
+                let next = backoff.saturating_mul(2).min(BREAKER_BACKOFF_CAP);
+                h.breaker = Breaker::Open { until: Instant::now() + next, backoff: next };
+                true
+            }
+            _ => false,
         }
-        tripped
     }
 
+    /// Whether the node is out of normal selection (breaker `Open` or in
+    /// `HalfOpen` probation).
     pub fn breaker_open(&self, id: NodeId) -> bool {
-        self.nodes.get(&id).map(|h| h.breaker_open).unwrap_or(false)
+        self.nodes.get(&id).map(|h| h.breaker != Breaker::Closed).unwrap_or(false)
+    }
+
+    /// The node's breaker state (`Closed` for unknown nodes).
+    pub fn breaker(&self, id: NodeId) -> Breaker {
+        self.nodes.get(&id).map(|h| h.breaker).unwrap_or_default()
+    }
+
+    /// Whether an open node's backoff has elapsed, making it eligible for
+    /// a probation probe.
+    pub fn probe_due(&self, id: NodeId) -> bool {
+        matches!(
+            self.nodes.get(&id).map(|h| h.breaker),
+            Some(Breaker::Open { until, .. }) if Instant::now() >= until
+        )
+    }
+
+    /// Admit the single probation probe for an open node whose backoff
+    /// has elapsed: transitions `Open` → `HalfOpen` and returns `true`.
+    /// Returns `false` for closed nodes, nodes still inside their
+    /// backoff, and nodes whose probe is already in flight — so exactly
+    /// one probe runs per backoff expiry no matter how many rounds race
+    /// past it. Report the probe through [`record_ok`](Self::record_ok)
+    /// (close) or [`record_failure`](Self::record_failure) (re-open,
+    /// doubled backoff).
+    pub fn begin_probe(&mut self, id: NodeId) -> bool {
+        let Some(h) = self.nodes.get_mut(&id) else { return false };
+        match h.breaker {
+            Breaker::Open { until, backoff } if Instant::now() >= until => {
+                h.breaker = Breaker::HalfOpen { backoff };
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Latency EWMA, `None` before the first successful scan.
@@ -165,7 +239,11 @@ impl HealthTracker {
                 h.ok,
                 h.failures,
                 h.consecutive_failures,
-                if h.breaker_open { "OPEN" } else { "closed" }
+                match h.breaker {
+                    Breaker::Closed => "closed",
+                    Breaker::Open { .. } => "OPEN",
+                    Breaker::HalfOpen { .. } => "PROBE",
+                }
             );
         }
         out
@@ -187,6 +265,25 @@ mod tests {
         assert_eq!(t.ewma(2), None);
     }
 
+    /// A tracker whose probation backoff is short enough for tests to
+    /// wait out without slowing the suite.
+    fn fast_tracker(threshold: u32) -> HealthTracker {
+        let mut t = HealthTracker::new(threshold);
+        t.breaker_backoff = Duration::from_millis(5);
+        t
+    }
+
+    fn wait_probe_due(t: &HealthTracker, id: NodeId) {
+        let t0 = Instant::now();
+        while !t.probe_due(id) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "probe never became due"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
     #[test]
     fn breaker_opens_at_threshold_and_closes_on_success() {
         let mut t = HealthTracker::new(3);
@@ -194,10 +291,75 @@ mod tests {
         assert!(!t.record_failure(5));
         assert!(t.record_failure(5), "third consecutive failure trips");
         assert!(t.breaker_open(5));
+        assert!(matches!(t.breaker(5), Breaker::Open { .. }));
         assert!(!t.record_failure(5), "already open: not a fresh trip");
         t.record_ok(5, 0.001);
         assert!(!t.breaker_open(5), "success closes the breaker");
         assert!(!t.record_failure(5), "run length was reset");
+    }
+
+    #[test]
+    fn probation_admits_exactly_one_probe() {
+        let mut t = fast_tracker(1);
+        assert!(t.record_failure(7), "threshold 1 trips immediately");
+        assert!(
+            !t.begin_probe(7),
+            "no probe inside the backoff window"
+        );
+        wait_probe_due(&t, 7);
+        assert!(t.begin_probe(7), "first probe admitted after backoff");
+        assert!(matches!(t.breaker(7), Breaker::HalfOpen { .. }));
+        assert!(!t.probe_due(7), "half-open is not due again");
+        assert!(
+            !t.begin_probe(7),
+            "second concurrent probe must be refused"
+        );
+        assert!(t.breaker_open(7), "probation still out of selection");
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_doubled_backoff() {
+        let mut t = fast_tracker(1);
+        t.record_failure(3);
+        let Breaker::Open { backoff: first, .. } = t.breaker(3) else {
+            panic!("breaker must be open");
+        };
+        wait_probe_due(&t, 3);
+        assert!(t.begin_probe(3));
+        assert!(t.record_failure(3), "failed probe re-opens the breaker");
+        let Breaker::Open { backoff: second, .. } = t.breaker(3) else {
+            panic!("breaker must re-open after a failed probe");
+        };
+        assert_eq!(second, first * 2, "backoff doubles per failed probe");
+        // And doubles again on the next failed probe.
+        wait_probe_due(&t, 3);
+        assert!(t.begin_probe(3));
+        assert!(t.record_failure(3));
+        let Breaker::Open { backoff: third, .. } = t.breaker(3) else {
+            panic!("breaker must re-open again");
+        };
+        assert_eq!(third, second * 2);
+    }
+
+    #[test]
+    fn successful_probe_restores_selection_weight() {
+        let mut t = fast_tracker(1);
+        t.record_ok(1, 0.002);
+        t.record_ok(2, 0.001);
+        t.record_failure(1);
+        // Out of selection while open: ordered last even under the
+        // static policy that otherwise keeps base order.
+        assert_eq!(t.order(&[1, 2], false), vec![2, 1]);
+        wait_probe_due(&t, 1);
+        assert!(t.begin_probe(1));
+        t.record_ok(1, 0.0005);
+        assert!(!t.breaker_open(1), "successful probe closes the breaker");
+        assert!(
+            matches!(t.breaker(1), Breaker::Closed),
+            "probation over: full selection weight"
+        );
+        // Restored: back in the closed pool, base order again.
+        assert_eq!(t.order(&[1, 2], false), vec![1, 2]);
     }
 
     #[test]

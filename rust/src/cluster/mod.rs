@@ -26,8 +26,9 @@ pub mod health;
 pub mod map;
 
 pub use engine::{
-    ClusterConfig, ClusterEngine, ClusterNode, ClusterStats, HedgeConfig, SelectPolicy,
+    ClusterConfig, ClusterEngine, ClusterNode, ClusterStats, DegradedPolicy, HedgeConfig,
+    RoundOptions, RoundOutcome, SelectPolicy,
 };
-pub use fault::{FailingBackend, StragglerBackend};
-pub use health::{HealthTracker, NodeHealth};
+pub use fault::{FailingBackend, OutageBackend, StragglerBackend};
+pub use health::{Breaker, HealthTracker, NodeHealth};
 pub use map::{ClusterMap, NodeId, NodeMeta, NodeState};

@@ -13,6 +13,8 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use crate::cluster::engine::DegradedPolicy;
+
 /// Tenant ids at or above this are batch-class (the `loadgen` convention:
 /// interactive connection c sends gpu_id = c, batch sends 1000 + c).
 pub const BATCH_TENANT_BASE: u32 = 1000;
@@ -51,6 +53,10 @@ pub enum ShedReason {
     QueueFull,
     /// The tenant's token bucket is empty.
     RateLimited,
+    /// The request's end-to-end deadline budget expired while it waited
+    /// in the server queue — running the round would waste cluster work
+    /// on an answer the client has already written off.
+    DeadlineExpired,
 }
 
 impl ShedReason {
@@ -58,6 +64,7 @@ impl ShedReason {
         match self {
             ShedReason::QueueFull => 1,
             ShedReason::RateLimited => 2,
+            ShedReason::DeadlineExpired => 3,
         }
     }
 }
@@ -103,6 +110,11 @@ pub struct QosConfig {
     /// connection may issue `Shutdown`; other tenants' shutdown frames
     /// are counted and ignored.
     pub admin_shutdown_only: bool,
+    /// How retrieval rounds treat unanswered shards. The default
+    /// (`FailFast`) is the legacy contract — a reply is complete or the
+    /// connection is dropped; `ServePartial` serves coverage-tagged
+    /// partial results when replicas are dark or the deadline expires.
+    pub degraded: DegradedPolicy,
 }
 
 impl Default for QosConfig {
@@ -115,6 +127,7 @@ impl Default for QosConfig {
             batch: TenantPolicy::unlimited_rate(1024),
             poll_threads: 2,
             admin_shutdown_only: true,
+            degraded: DegradedPolicy::FailFast,
         }
     }
 }

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::chamvs::backend::ScanBackend;
 use crate::chamvs::dispatcher::{BatchQuery, Dispatcher, SearchResult};
+use crate::cluster::engine::RoundOptions;
 use crate::config::DatasetConfig;
 use crate::data::corpus::Corpus;
 use crate::hwmodel::gpu::GpuModel;
@@ -29,6 +30,27 @@ pub struct RetrievalResult {
     pub modeled_s: f64,
     /// Host wall-clock actually spent.
     pub measured_s: f64,
+    /// Shards that contributed / total shards of the round (`0/0` = flat
+    /// dispatch or complete by construction) — see
+    /// [`SearchResult::coverage`].
+    pub shards_answered: u32,
+    pub n_shards: u32,
+}
+
+impl RetrievalResult {
+    /// Fraction of shards that contributed (`1.0` = complete).
+    pub fn coverage(&self) -> f64 {
+        if self.n_shards == 0 {
+            1.0
+        } else {
+            self.shards_answered as f64 / self.n_shards as f64
+        }
+    }
+
+    /// Whether some shard's results are missing.
+    pub fn is_partial(&self) -> bool {
+        self.n_shards != 0 && self.shards_answered < self.n_shards
+    }
 }
 
 /// A retrieval served through the cache-aware path: the result plus where
@@ -242,6 +264,8 @@ impl Retriever {
             dists: r.topk.iter().map(|&(d, _)| d).collect(),
             modeled_s,
             measured_s,
+            shards_answered: r.shards_answered,
+            n_shards: r.n_shards,
         }
     }
 
@@ -258,17 +282,31 @@ impl Retriever {
         query: &[f32],
         trace_id: u64,
     ) -> Result<RetrievalResult> {
+        self.retrieve_with(query, trace_id, &RoundOptions::default())
+    }
+
+    /// [`retrieve_traced`](Self::retrieve_traced) with per-round options:
+    /// the remaining end-to-end deadline budget and the degraded-mode
+    /// policy, enforced by the cluster engine (see
+    /// [`Dispatcher::search_opts`]).
+    pub fn retrieve_with(
+        &mut self,
+        query: &[f32],
+        trace_id: u64,
+        opts: &RoundOptions,
+    ) -> Result<RetrievalResult> {
         let t0 = Instant::now();
         let nprobe = self.ds.nprobe;
         // Step 2: IVF index scan (GPU-colocated in the paper).
         let lists = self.index.probe(query, nprobe);
         // Steps 4-8: broadcast to memory nodes, scan, aggregate.
-        let r = self.dispatcher.search_traced(
+        let r = self.dispatcher.search_opts(
             query,
             &self.index.pq.centroids,
             &lists,
             nprobe,
             trace_id,
+            opts,
         )?;
         Ok(self.search_to_result(r, nprobe, t0))
     }
@@ -291,6 +329,18 @@ impl Retriever {
         queries: &[&[f32]],
         trace_ids: &[u64],
     ) -> Result<Vec<RetrievalResult>> {
+        self.retrieve_many_with(queries, trace_ids, &RoundOptions::default())
+    }
+
+    /// [`retrieve_many_traced`](Self::retrieve_many_traced) with
+    /// per-round options; the shared round's deadline should be the
+    /// tightest of the batched queries' budgets.
+    pub fn retrieve_many_with(
+        &mut self,
+        queries: &[&[f32]],
+        trace_ids: &[u64],
+        opts: &RoundOptions,
+    ) -> Result<Vec<RetrievalResult>> {
         let nprobe = self.ds.nprobe;
         let lists: Vec<Vec<u32>> =
             queries.iter().map(|q| self.index.probe(q, nprobe)).collect();
@@ -306,7 +356,7 @@ impl Retriever {
             .collect();
         let rs = self
             .dispatcher
-            .search_batch(&batch, &self.index.pq.centroids, nprobe)?;
+            .search_batch_opts(&batch, &self.index.pq.centroids, nprobe, opts)?;
         // Per-query measured time is the job's own parallel wall — the
         // round's elapsed time would absorb piggybacked speculative scans
         // from other slots, which the dispatcher's accounting contract
@@ -371,6 +421,21 @@ impl Retriever {
         query: &[f32],
         trace_id: u64,
     ) -> Result<CachedRetrieval> {
+        self.retrieve_cached_opts(slot, tenant, query, trace_id, &RoundOptions::default())
+    }
+
+    /// [`retrieve_cached_tenant_traced`](Self::retrieve_cached_tenant_traced)
+    /// with per-round options: the deadline budget and degraded-mode
+    /// policy apply to the full-round-trip fallback (cache and
+    /// speculation hits are always complete results and pay no round).
+    pub fn retrieve_cached_opts(
+        &mut self,
+        slot: usize,
+        tenant: Option<u32>,
+        query: &[f32],
+        trace_id: u64,
+        opts: &RoundOptions,
+    ) -> Result<CachedRetrieval> {
         let t0 = Instant::now();
         // 1) Retrieval cache.
         let mut hit: Option<RetrievalResult> = None;
@@ -393,6 +458,10 @@ impl Retriever {
                     dists: e.dists.clone(),
                     modeled_s: e.modeled_s,
                     measured_s: t0.elapsed().as_secs_f64(),
+                    // Only complete results are inserted, so a hit is
+                    // always full-coverage.
+                    shards_answered: 0,
+                    n_shards: 0,
                 });
             }
         }
@@ -430,30 +499,34 @@ impl Retriever {
                     }
                     // Lost ticket (defensive): fall back to a real query.
                     None => {
-                        (self.retrieve_traced(query, trace_id)?, RetrievalSource::Miss)
+                        (self.retrieve_with(query, trace_id, opts)?, RetrievalSource::Miss)
                     }
                 }
             }
             SpecVerdict::Reject(ticket) => {
                 self.dispatcher.cancel(ticket);
-                (self.retrieve_traced(query, trace_id)?, RetrievalSource::Miss)
+                (self.retrieve_with(query, trace_id, opts)?, RetrievalSource::Miss)
             }
             SpecVerdict::Idle => {
-                (self.retrieve_traced(query, trace_id)?, RetrievalSource::Miss)
+                (self.retrieve_with(query, trace_id, opts)?, RetrievalSource::Miss)
             }
         };
-        // 3) Refill the cache with the fresh result.
-        if let Some(cache) =
-            active_cache(&mut self.cache, &mut self.tenant_cache, tenant)
-        {
-            cache.insert(
-                query,
-                CachedEntry {
-                    ids: result.ids.clone(),
-                    dists: result.dists.clone(),
-                    modeled_s: result.modeled_s,
-                },
-            );
+        // 3) Refill the cache with the fresh result — complete results
+        // only: a degraded round's partial top-k must not masquerade as a
+        // full answer on a later hit.
+        if !result.is_partial() {
+            if let Some(cache) =
+                active_cache(&mut self.cache, &mut self.tenant_cache, tenant)
+            {
+                cache.insert(
+                    query,
+                    CachedEntry {
+                        ids: result.ids.clone(),
+                        dists: result.dists.clone(),
+                        modeled_s: result.modeled_s,
+                    },
+                );
+            }
         }
         // 4) Launch the next speculative query while the GPU decodes.
         self.issue_speculation(slot, query);

@@ -50,8 +50,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::cluster::engine::ClusterNode;
-use crate::coordinator::admission::{Admission, QosClass, QosConfig};
+use crate::cluster::engine::{ClusterNode, RoundOptions};
+use crate::coordinator::admission::{Admission, QosClass, QosConfig, ShedReason};
 use crate::coordinator::batcher::{BatchPolicy, ClassedBatcher, Pending, PrefetchTracker};
 use crate::coordinator::retriever::{RetrievalResult, Retriever};
 use crate::net::client::RemoteNode;
@@ -103,6 +103,8 @@ pub struct ServerStats {
     nodelay_fallbacks: AtomicU64,
     shed: AtomicU64,
     shutdown_denied: AtomicU64,
+    deadline_shed: AtomicU64,
+    partial: AtomicU64,
 }
 
 impl ServerStats {
@@ -163,6 +165,17 @@ impl ServerStats {
     pub fn shutdown_denied(&self) -> u64 {
         self.shutdown_denied.load(Ordering::Relaxed)
     }
+
+    /// Requests shed because their end-to-end deadline expired while
+    /// they waited in the server queue (a subset of [`shed`](Self::shed)).
+    pub fn deadline_shed(&self) -> u64 {
+        self.deadline_shed.load(Ordering::Relaxed)
+    }
+
+    /// Replies served with coverage below 1.0 (degraded partial results).
+    pub fn partial(&self) -> u64 {
+        self.partial.load(Ordering::Relaxed)
+    }
 }
 
 /// One decoded request waiting in the shared batcher.
@@ -177,6 +190,9 @@ struct ServerRequest {
     /// When the reader decoded the request — start of the queue-wait
     /// span and of the end-to-end total.
     arrived: Instant,
+    /// Absolute end-to-end deadline (from the request's `deadline_us`
+    /// budget, anchored at arrival); `None` = unbounded legacy request.
+    deadline: Option<Instant>,
 }
 
 /// State shared between the accept thread, the readers (poll pool or
@@ -405,6 +421,17 @@ fn write_frame_bounded(
     Ok(())
 }
 
+/// Convert a request's relative `deadline_us` budget into the absolute
+/// deadline every downstream stage (queue, dispatch, scan, retry, hedge)
+/// draws from. 0 = no deadline (legacy clients).
+fn deadline_from_us(arrived: Instant, deadline_us: u64) -> Option<Instant> {
+    if deadline_us == 0 {
+        None
+    } else {
+        Some(arrived + Duration::from_micros(deadline_us))
+    }
+}
+
 // ------------------------------------------------------- sequential mode
 
 fn serve_sequential(
@@ -498,20 +525,25 @@ fn serve_gpu(
                 }
                 let arrived = Instant::now();
                 let trace_id = shared.alloc_trace();
+                let opts = RoundOptions {
+                    degraded: shared.qos.degraded,
+                    deadline: deadline_from_us(arrived, req.deadline_us),
+                };
                 let r = if retriever.retcache_enabled() {
                     let cr = metrics.time("retrieve", || {
-                        retriever.retrieve_cached_tenant_traced(
+                        retriever.retrieve_cached_opts(
                             slot,
                             Some(req.gpu_id),
                             &req.query,
                             trace_id,
+                            &opts,
                         )
                     })?;
                     metrics.incr(source_counter(cr.source), 1);
                     cr.result
                 } else {
                     metrics.time("retrieve", || {
-                        retriever.retrieve_traced(&req.query, trace_id)
+                        retriever.retrieve_with(&req.query, trace_id, &opts)
                     })?
                 };
                 let tokens = if req.want_chunks {
@@ -519,10 +551,15 @@ fn serve_gpu(
                 } else {
                     retriever.gather_next_tokens(&r.ids)
                 };
+                if r.is_partial() {
+                    shared.stats.partial.fetch_add(1, Ordering::Relaxed);
+                }
                 let resp = RetrieveResponse {
                     query_id: req.query_id,
                     tokens,
                     dists: r.dists,
+                    shards_answered: r.shards_answered,
+                    n_shards: r.n_shards,
                 };
                 let t_write = Instant::now();
                 resp.encode().write_to(&mut writer)?;
@@ -645,6 +682,7 @@ fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) 
                 match verdict {
                     Ok(()) => {
                         let trace_id = shared.alloc_trace();
+                        let arrived = Instant::now();
                         let mut b = shared.batcher.lock().unwrap();
                         b.push(
                             QosClass::of_gpu(tenant),
@@ -656,7 +694,8 @@ fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) 
                                 want_chunks: req.want_chunks,
                                 query: req.query,
                                 trace_id,
-                                arrived: Instant::now(),
+                                arrived,
+                                deadline: deadline_from_us(arrived, req.deadline_us),
                             },
                         );
                         drop(b);
@@ -938,6 +977,33 @@ fn serve_batch(
             .filter(|p| writers.contains_key(&p.payload.conn_id))
             .collect()
     };
+    // Shed requests whose end-to-end budget expired while they queued:
+    // running the round would spend cluster work on answers the clients
+    // have already written off. The client gets an explicit
+    // `Backpressure` verdict (reason `DeadlineExpired`), not silence.
+    let now = Instant::now();
+    let (batch, expired): (Vec<_>, Vec<_>) = batch
+        .into_iter()
+        .partition(|p| p.payload.deadline.map_or(true, |dl| now < dl));
+    for p in expired {
+        shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+        shared.stats.deadline_shed.fetch_add(1, Ordering::Relaxed);
+        let bp = Backpressure {
+            query_id: p.payload.query_id,
+            tenant: p.payload.gpu_id,
+            reason: ShedReason::DeadlineExpired.code(),
+            queue_depth: 0,
+            // The budget is gone; retrying this request is pointless.
+            retry_after_us: 0,
+        };
+        let mut writers = shared.writers.lock().unwrap();
+        if let Some(stream) = writers.get_mut(&p.payload.conn_id) {
+            if write_frame_bounded(stream, &bp.encode(), WRITE_LIMIT).is_err() {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                writers.remove(&p.payload.conn_id);
+            }
+        }
+    }
     if batch.is_empty() {
         return;
     }
@@ -978,13 +1044,18 @@ fn serve_batch(
                     return Err(bad_dim(p));
                 }
                 let slot = p.payload.gpu_id as usize;
+                let opts = RoundOptions {
+                    degraded: shared.qos.degraded,
+                    deadline: p.payload.deadline,
+                };
                 metrics
                     .time("retrieve", || {
-                        retriever.retrieve_cached_tenant_traced(
+                        retriever.retrieve_cached_opts(
                             slot,
                             Some(p.payload.gpu_id),
                             &p.payload.query,
                             p.payload.trace_id,
+                            &opts,
                         )
                     })
                     .map(|cr| {
@@ -1009,8 +1080,18 @@ fn serve_batch(
         let trace_ids: Vec<u64> =
             valid.iter().map(|&i| batch[i].payload.trace_id).collect();
         if !refs.is_empty() {
+            // The whole round shares one deadline: the tightest budget in
+            // the batch (requests ride a shared fan-out, so the round can
+            // only be as patient as its most impatient member).
+            let opts = RoundOptions {
+                degraded: shared.qos.degraded,
+                deadline: valid
+                    .iter()
+                    .filter_map(|&i| batch[i].payload.deadline)
+                    .min(),
+            };
             match metrics
-                .time("retrieve", || retriever.retrieve_many_traced(&refs, &trace_ids))
+                .time("retrieve", || retriever.retrieve_many_with(&refs, &trace_ids, &opts))
             {
                 Ok(rs) => {
                     for (&i, r) in valid.iter().zip(rs) {
@@ -1035,10 +1116,15 @@ fn serve_batch(
                 } else {
                     retriever.gather_next_tokens(&r.ids)
                 };
+                if r.is_partial() {
+                    shared.stats.partial.fetch_add(1, Ordering::Relaxed);
+                }
                 let resp = RetrieveResponse {
                     query_id: p.payload.query_id,
                     tokens,
                     dists: r.dists,
+                    shards_answered: r.shards_answered,
+                    n_shards: r.n_shards,
                 };
                 let t_write = Instant::now();
                 let mut writers = shared.writers.lock().unwrap();
@@ -1181,6 +1267,24 @@ impl CoordinatorClient {
         k: usize,
         want_chunks: bool,
     ) -> Result<Reply> {
+        self.try_retrieve_deadline(query, lists, k, want_chunks, 0)
+    }
+
+    /// [`try_retrieve`](Self::try_retrieve) with an end-to-end deadline
+    /// budget in microseconds (0 = unbounded). The coordinator charges
+    /// queueing, dispatch, scans, retries and hedges against it; an
+    /// expired-in-queue request comes back as a `Backpressure` shed
+    /// (reason `DeadlineExpired`), one that expires mid-scan comes back
+    /// as a coverage-tagged partial result when the server's degraded
+    /// policy allows it.
+    pub fn try_retrieve_deadline(
+        &mut self,
+        query: &[f32],
+        lists: &[u32],
+        k: usize,
+        want_chunks: bool,
+        deadline_us: u64,
+    ) -> Result<Reply> {
         let id = self.next_id;
         self.next_id += 1;
         RetrieveRequest {
@@ -1190,6 +1294,7 @@ impl CoordinatorClient {
             lists: lists.to_vec(),
             k: k as u32,
             want_chunks,
+            deadline_us,
         }
         .encode()
         .write_to(&mut self.stream)?;
@@ -1248,6 +1353,7 @@ impl CoordinatorClient {
                 lists: Vec::new(),
                 k: k as u32,
                 want_chunks,
+                deadline_us: 0,
             }
             .encode()
             .write_to(&mut self.stream)?;

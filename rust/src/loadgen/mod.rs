@@ -12,12 +12,15 @@
 //! from a single seed with no wall-clock input, so two runs with the
 //! same seed replay the identical request stream (`--seed`).
 
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::admission::ShedReason;
 use crate::net::protocol::{
     Backpressure, FrameReader, Kind, ReadProgress, RetrieveRequest, RetrieveResponse,
 };
@@ -160,6 +163,41 @@ pub fn schedule(cfg: &LoadgenConfig) -> Schedule {
     Schedule { arrivals_s, query_idx, classes }
 }
 
+/// Client-side retry behavior on `Backpressure` sheds.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Max re-sends per request (0 = a shed is final, the legacy
+    /// behavior).
+    pub max_retries: u32,
+    /// Backoff floor; the server's `retry_after_us` hint raises it,
+    /// never lowers it.
+    pub base_backoff: Duration,
+    /// Cap on the exponentially growing backoff.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Per-run knobs beyond the schedule itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DriveOptions {
+    /// End-to-end deadline budget stamped on every request, in
+    /// microseconds (0 = unbounded). The coordinator sheds
+    /// queue-expired requests and serves deadline-clipped partials
+    /// (under its degraded policy) against this budget.
+    pub deadline_us: u64,
+    /// Backoff-and-retry behavior on admission sheds.
+    pub retry: RetryPolicy,
+}
+
 /// Outcome of one open-loop run at a fixed offered load.
 #[derive(Clone, Debug)]
 pub struct OpenLoopReport {
@@ -170,6 +208,15 @@ pub struct OpenLoopReport {
     /// (admission control). Accounted, not lost: every sent request is
     /// either received or shed when the server is healthy.
     pub shed: usize,
+    /// Received replies that were degraded partials (coverage < 1.0).
+    /// `complete + partial + shed == sent` when every reply made it
+    /// back before the run deadline.
+    pub partial: usize,
+    /// Backoff re-sends after `Backpressure` (0 unless retries are on).
+    pub retries: usize,
+    /// Requests that were shed at least once and still completed after
+    /// backing off — the retry machinery's success count.
+    pub retry_success: usize,
     /// Wall seconds from run start until the last reply (or timeout).
     pub wall_s: f64,
     /// Completed requests per second of wall time.
@@ -179,6 +226,23 @@ pub struct OpenLoopReport {
     pub latency: Summary,
     pub interactive: Option<Summary>,
     pub batch: Option<Summary>,
+}
+
+impl OpenLoopReport {
+    /// Replies that covered every shard.
+    pub fn complete(&self) -> usize {
+        self.received - self.partial
+    }
+
+    /// Fraction of ever-shed requests that a backoff retry rescued;
+    /// 1.0 when nothing was ever shed.
+    pub fn retry_success_rate(&self) -> f64 {
+        let ever_shed = self.retry_success + self.shed;
+        if ever_shed == 0 {
+            return 1.0;
+        }
+        self.retry_success as f64 / ever_shed as f64
+    }
 }
 
 /// Drive `sched` against a live coordinator at `addr`, round-robining
@@ -194,6 +258,22 @@ pub fn drive(
     conns: usize,
     deadline: Duration,
 ) -> Result<OpenLoopReport> {
+    drive_opts(addr, queries, k, sched, conns, deadline, &DriveOptions::default())
+}
+
+/// [`drive`] with per-run options: an end-to-end deadline budget stamped
+/// on every request, and capped-exponential backoff retries on
+/// `Backpressure` sheds (honoring the server's `retry_after_us` hint).
+/// A `DeadlineExpired` shed is never retried — its budget is gone.
+pub fn drive_opts(
+    addr: SocketAddr,
+    queries: &[Vec<f32>],
+    k: usize,
+    sched: &Schedule,
+    conns: usize,
+    deadline: Duration,
+    opts: &DriveOptions,
+) -> Result<OpenLoopReport> {
     assert!(conns > 0);
     assert!(!sched.is_empty(), "empty schedule");
     assert!(!queries.is_empty());
@@ -201,8 +281,13 @@ pub fn drive(
 
     // Completion stamps, nanos since t0 (0 = not yet answered).
     let done_ns: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-    // Admission-control sheds (1 = the server answered `Backpressure`).
+    // Admission-control sheds (1 = the server's `Backpressure` verdict
+    // stood — retries, if any, were also shed or the budget ran out).
     let shed_flags: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    // Degraded partial replies (coverage < 1.0).
+    let partial_flags: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let retries_sent = AtomicU64::new(0);
+    let retry_ok = AtomicU64::new(0);
     let streams: Vec<TcpStream> = (0..conns)
         .map(|_| {
             let s = TcpStream::connect(addr).context("connecting to coordinator")?;
@@ -210,6 +295,12 @@ pub fn drive(
             Ok(s)
         })
         .collect::<Result<_>>()?;
+    // Per-connection retry queues (due time, request index) — filled by
+    // the reader on a retryable shed, drained by the writer (replies are
+    // per-connection FIFO, so the retry must ride its original stream).
+    let retryqs: Vec<Mutex<Vec<(Instant, usize)>>> =
+        (0..conns).map(|_| Mutex::new(Vec::new())).collect();
+    let readers_live: Vec<AtomicU64> = (0..conns).map(|_| AtomicU64::new(1)).collect();
 
     let t0 = Instant::now();
     let mut sent_per_conn = vec![0usize; conns];
@@ -221,34 +312,78 @@ pub fn drive(
         for (c, stream) in streams.iter().enumerate() {
             let expect = sent_per_conn[c];
             if expect == 0 {
+                readers_live[c].store(0, Ordering::Relaxed);
                 continue;
             }
-            // Writer: fire requests at their scheduled offsets.
+            let mk_req = move |i: usize| {
+                let class = sched.classes[i];
+                RetrieveRequest {
+                    query_id: i as u64,
+                    // Class-segregated gpu ids keep speculation slots
+                    // and per-source stats separable downstream.
+                    gpu_id: match class {
+                        ReqClass::Interactive => c as u32,
+                        ReqClass::Batch => 1000 + c as u32,
+                    },
+                    query: queries[sched.query_idx[i] % queries.len()].clone(),
+                    lists: Vec::new(),
+                    k: k as u32,
+                    want_chunks: class == ReqClass::Batch,
+                    deadline_us: opts.deadline_us,
+                }
+            };
+            // Writer: fire requests at their scheduled offsets, weaving
+            // due retries into the gaps; after the schedule drains it
+            // keeps serving retries until its reader finishes.
             let mut wtr = stream.try_clone()?;
-            let done_ns = &done_ns;
+            let retryq = &retryqs[c];
+            let reader_live = &readers_live[c];
+            let retries_sent = &retries_sent;
             scope.spawn(move || {
+                let fire_due = |wtr: &mut TcpStream| -> bool {
+                    let due: Vec<usize> = {
+                        let mut q = retryq.lock().unwrap();
+                        let now = Instant::now();
+                        let mut d = Vec::new();
+                        let mut j = 0;
+                        while j < q.len() {
+                            if q[j].0 <= now {
+                                d.push(q.swap_remove(j).1);
+                            } else {
+                                j += 1;
+                            }
+                        }
+                        d
+                    };
+                    for i in due {
+                        retries_sent.fetch_add(1, Ordering::Relaxed);
+                        if mk_req(i).encode().write_to(wtr).is_err() {
+                            return false;
+                        }
+                    }
+                    true
+                };
                 for i in (c..n).step_by(conns) {
                     let at = Duration::from_secs_f64(sched.arrivals_s[i]);
-                    if let Some(wait) = at.checked_sub(t0.elapsed()) {
-                        std::thread::sleep(wait);
+                    // Sleep in short slices so a due retry doesn't wait
+                    // out a long inter-arrival gap.
+                    while let Some(wait) = at.checked_sub(t0.elapsed()) {
+                        if !fire_due(&mut wtr) {
+                            return;
+                        }
+                        std::thread::sleep(wait.min(Duration::from_millis(5)));
                     }
-                    let class = sched.classes[i];
-                    let req = RetrieveRequest {
-                        query_id: i as u64,
-                        // Class-segregated gpu ids keep speculation slots
-                        // and per-source stats separable downstream.
-                        gpu_id: match class {
-                            ReqClass::Interactive => c as u32,
-                            ReqClass::Batch => 1000 + c as u32,
-                        },
-                        query: queries[sched.query_idx[i] % queries.len()].clone(),
-                        lists: Vec::new(),
-                        k: k as u32,
-                        want_chunks: class == ReqClass::Batch,
-                    };
-                    if req.encode().write_to(&mut wtr).is_err() {
+                    if !fire_due(&mut wtr) || mk_req(i).encode().write_to(&mut wtr).is_err()
+                    {
                         return; // server closed the connection
                     }
+                }
+                while reader_live.load(Ordering::Relaxed) != 0 && t0.elapsed() < deadline
+                {
+                    if !fire_due(&mut wtr) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
                 }
             });
             // Reader: drain replies until all expected or deadline. A
@@ -257,22 +392,53 @@ pub fn drive(
             let mut rdr = stream.try_clone()?;
             stream.set_read_timeout(Some(Duration::from_millis(100)))?;
             let shed_flags = &shed_flags;
+            let partial_flags = &partial_flags;
+            let done_ns = &done_ns;
+            let retry = opts.retry;
+            let retry_ok = &retry_ok;
             scope.spawn(move || {
                 let mut frames = FrameReader::new();
                 let mut got = 0usize;
+                let mut expect = expect;
+                // Shed count per request, for backoff growth and the
+                // retry budget (indices are conn-partitioned, so this
+                // reader sees every reply for its requests).
+                let mut attempts: HashMap<usize, u32> = HashMap::new();
                 while got < expect && t0.elapsed() < deadline {
                     match frames.poll(&mut rdr) {
                         Ok(ReadProgress::Frame(f)) => {
-                            // A shed is a reply too: stamp it so the
-                            // accounting (received + shed == sent) holds
-                            // and the reader doesn't wait on it forever.
+                            // A shed is a reply too: stamp or retry it so
+                            // the accounting (complete + partial + shed
+                            // == sent) holds and the reader doesn't wait
+                            // on it forever.
                             if f.kind == Kind::Backpressure {
                                 let Ok(bp) = Backpressure::decode(&f) else { break };
                                 let i = bp.query_id as usize;
-                                if i < n {
-                                    shed_flags[i].store(1, Ordering::Relaxed);
-                                    got += 1;
+                                if i >= n {
+                                    continue;
                                 }
+                                got += 1;
+                                let a = attempts.get(&i).copied().unwrap_or(0);
+                                let expired =
+                                    bp.reason == ShedReason::DeadlineExpired.code();
+                                if expired || a >= retry.max_retries {
+                                    shed_flags[i].store(1, Ordering::Relaxed);
+                                    continue;
+                                }
+                                // Capped exponential backoff, floored at
+                                // the server's retry hint.
+                                let hint = Duration::from_micros(bp.retry_after_us);
+                                let backoff = retry
+                                    .base_backoff
+                                    .max(hint)
+                                    .saturating_mul(1u32 << a.min(16))
+                                    .min(retry.max_backoff);
+                                attempts.insert(i, a + 1);
+                                retryq
+                                    .lock()
+                                    .unwrap()
+                                    .push((Instant::now() + backoff, i));
+                                expect += 1; // the retry owes one more reply
                                 continue;
                             }
                             let Ok(resp) = RetrieveResponse::decode(&f) else { break };
@@ -282,6 +448,12 @@ pub fn drive(
                                     t0.elapsed().as_nanos().max(1) as u64,
                                     Ordering::Relaxed,
                                 );
+                                if resp.is_partial() {
+                                    partial_flags[i].store(1, Ordering::Relaxed);
+                                }
+                                if attempts.contains_key(&i) {
+                                    retry_ok.fetch_add(1, Ordering::Relaxed);
+                                }
                                 got += 1;
                             }
                         }
@@ -289,6 +461,7 @@ pub fn drive(
                         Ok(ReadProgress::Closed) | Err(_) => break,
                     }
                 }
+                reader_live.store(0, Ordering::Relaxed);
             });
         }
         Ok(())
@@ -315,6 +488,8 @@ pub fn drive(
     }
     let received = lat.len();
     let shed = shed_flags.iter().filter(|f| f.load(Ordering::Relaxed) != 0).count();
+    let partial =
+        partial_flags.iter().filter(|f| f.load(Ordering::Relaxed) != 0).count();
     anyhow::ensure!(received > 0, "open-loop run received no replies");
     let wall_s = last_done.max(sched.span_s()).max(1e-9);
     Ok(OpenLoopReport {
@@ -322,6 +497,9 @@ pub fn drive(
         sent: n,
         received,
         shed,
+        partial,
+        retries: retries_sent.load(Ordering::Relaxed) as usize,
+        retry_success: retry_ok.load(Ordering::Relaxed) as usize,
         wall_s,
         goodput_qps: received as f64 / wall_s,
         latency: Summary::of(&lat),
@@ -422,6 +600,9 @@ mod tests {
             sent: 1,
             received: 1,
             shed: 0,
+            partial: 0,
+            retries: 0,
+            retry_success: 0,
             wall_s: 1.0,
             goodput_qps: g,
             latency: Summary::of(&[0.001]),

@@ -6,6 +6,10 @@
 //!   serve               generate sequences end-to-end (RALM inference)
 //!   cluster             elastic retrieval tier report: replicated
 //!                       dispatch, mid-run node death, failover/hedging
+//!   chaos               seeded network-fault harness: nodes behind
+//!                       flip/cut/stall proxies, a mid-run shard blackout
+//!                       served as coverage-tagged partials, probation
+//!                       rejoin back to bit-identical results
 //!   loadgen             open-loop load harness: traced coordinator +
 //!                       Poisson/bursty offered-load sweep, knee + fitted
 //!                       capacity plan (BENCH_serve.json)
@@ -61,6 +65,7 @@ fn run(args: &Args) -> Result<()> {
         Some("search") => search(args),
         Some("serve") => serve(args),
         Some("cluster") => cluster_cmd(args),
+        Some("chaos") => chaos_cmd(args),
         Some("loadgen") => loadgen_cmd(args),
         Some("report") => report_cmd(args),
         Some(other) => bail!("unknown subcommand '{other}' (try --help)"),
@@ -91,10 +96,18 @@ fn print_help() {
          cluster [--nodes 4] [--replication 2] [--queries 32]\n\
                 [--hedge-quantile 0.95] [--pin-workers]   elastic-tier\n\
                 failover report (pinned CPUs appear in the stats line)\n\
+         chaos  [--seed N] [--nodes 4] [--replication 2] [--queries 48]\n\
+                [--min-coverage 0.0] [--deadline-ms 500] [--blackout-ms 400]\n\
+                [--flips 2] [--cuts 1] [--stalls 1]   seeded network-fault\n\
+                harness: memory nodes behind fault-injecting proxies, a\n\
+                mid-run shard blackout served as coverage-tagged partials,\n\
+                and post-heal probation back to bit-identical results\n\
          loadgen [--qps 200 | --sweep 100,200,400] [--requests 400]\n\
                 [--conns 4] [--nodes 2] [--unique 64] [--zipf 0.99]\n\
                 [--batch-fraction 0.2] [--burst-period-s P --burst-duty D]\n\
                 [--remote host:port,...] [--out BENCH_serve.json]\n\
+                [--deadline-us 0] [--retries 0]   per-request end-to-end\n\
+                budget + shed-retry backoff (honors server retry_after_us)\n\
                 [--trace-out spans.json]   open-loop offered-load sweep\n\
                 against a traced coordinator; reports goodput, the latency\n\
                 knee and an SLO capacity plan fitted from the trace\n\
@@ -412,7 +425,7 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
 fn loadgen_cmd(args: &Args) -> Result<()> {
     use anyhow::Context as _;
     use chameleon::hwmodel::{CapacityPlanner, StageTimes};
-    use chameleon::loadgen::{self, Arrival, LoadgenConfig};
+    use chameleon::loadgen::{self, Arrival, DriveOptions, LoadgenConfig, RetryPolicy};
     use chameleon::trace::{analyze, events_to_json, Tracer};
     use chameleon::util::json::{obj, Json};
 
@@ -432,6 +445,16 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     let batch_fraction = args.get_f64("batch-fraction", 0.2).clamp(0.0, 1.0);
     let policy = batch_policy(args);
     let out_path = args.get_or("out", "BENCH_serve.json");
+    // Per-request end-to-end budget stamped on the wire (0 = unlimited)
+    // and a client retry policy for shed replies that carry a
+    // `retry_after_us` hint.
+    let drive_opts = DriveOptions {
+        deadline_us: args.get_u64("deadline-us", 0),
+        retry: RetryPolicy {
+            max_retries: args.get_u64("retries", 0) as u32,
+            ..RetryPolicy::default()
+        },
+    };
 
     let arrival =
         if args.get("burst-period-s").is_some() || args.get("burst-duty").is_some() {
@@ -500,7 +523,8 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         };
         let sched = loadgen::schedule(&cfg);
         let deadline = Duration::from_secs_f64(sched.span_s() + 30.0);
-        let rep = loadgen::drive(addr, &queries, k, &sched, conns, deadline)?;
+        let rep =
+            loadgen::drive_opts(addr, &queries, k, &sched, conns, deadline, &drive_opts)?;
         println!(
             "[loadgen] offered {:>6.0} q/s -> goodput {:>6.0} q/s  \
              p50 {:7.2} ms  p95 {:7.2} ms  p99 {:7.2} ms  ({}/{} replies, {} shed)",
@@ -514,20 +538,33 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
             rep.shed,
         );
         // Conservation line for smoke checks: every sent request must be
-        // either answered or explicitly shed — lost=0 on a healthy server.
+        // either answered (complete or partial) or explicitly shed —
+        // lost=0 on a healthy server.
         println!(
-            "[loadgen] accounting: sent={} received={} shed={} lost={}",
+            "[loadgen] accounting: sent={} complete={} partial={} shed={} lost={}",
             rep.sent,
-            rep.received,
+            rep.complete(),
+            rep.partial,
             rep.shed,
             rep.sent.saturating_sub(rep.received + rep.shed),
         );
+        if rep.retries > 0 {
+            println!(
+                "[loadgen] retries: {} sent, {} recovered (retry-success rate {:.0}%)",
+                rep.retries,
+                rep.retry_success,
+                rep.retry_success_rate() * 100.0,
+            );
+        }
         points.push(obj(vec![
             ("offered_qps", Json::Num(rep.offered_qps)),
             ("goodput_qps", Json::Num(rep.goodput_qps)),
             ("sent", Json::Num(rep.sent as f64)),
             ("received", Json::Num(rep.received as f64)),
+            ("partial", Json::Num(rep.partial as f64)),
             ("shed", Json::Num(rep.shed as f64)),
+            ("retries", Json::Num(rep.retries as f64)),
+            ("retry_success", Json::Num(rep.retry_success as f64)),
             ("wall_s", Json::Num(rep.wall_s)),
             ("p50_ms", Json::Num(rep.latency.p50 * 1e3)),
             ("p95_ms", Json::Num(rep.latency.p95 * 1e3)),
@@ -829,6 +866,232 @@ fn cluster_cmd(args: &Args) -> Result<()> {
         identical == n_queries,
         "cluster results diverged from the flat reference"
     );
+    Ok(())
+}
+
+/// `chameleon chaos` — seeded end-to-end fault-injection harness. Real
+/// memory-node servers sit behind deterministic chaos proxies (bit flips,
+/// connection cuts, stalls, all derived from `--seed`); mid-run every
+/// replica of shard 0 blacks out, and the cluster must keep answering as
+/// coverage-tagged partial results with zero hard failures. After the
+/// blackout the healed replicas must pass half-open probation and return
+/// the tier to results bit-identical to a fault-free flat reference.
+fn chaos_cmd(args: &Args) -> Result<()> {
+    use chameleon::cluster::{DegradedPolicy, RoundOptions, SelectPolicy};
+    use chameleon::net::fault::{ChaosProxy, FaultProfile};
+    use chameleon::net::server::NodeServer;
+    use std::time::Instant;
+
+    let sys = system_config(args);
+    let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let n = args.get_usize("n", 4000);
+    let n_nodes = args.get_usize("nodes", 4);
+    let replication = args.get_usize("replication", 2).max(1);
+    let n_queries = args.get_usize("queries", 48).max(6);
+    let k = args.get_usize("k", 10);
+    let min_coverage = args.get_f64("min-coverage", 0.0).clamp(0.0, 1.0);
+    let deadline = Duration::from_millis(args.get_u64("deadline-ms", 500));
+    let blackout = Duration::from_millis(args.get_u64("blackout-ms", 400));
+    let profile = FaultProfile {
+        flips: args.get_usize("flips", 2),
+        cuts: args.get_usize("cuts", 1),
+        stalls: args.get_usize("stalls", 1),
+        ..FaultProfile::default()
+    };
+    anyhow::ensure!(
+        n_nodes % replication == 0,
+        "--nodes {n_nodes} must be a multiple of --replication {replication}"
+    );
+    anyhow::ensure!(
+        replication > 1,
+        "--replication must be >= 2: the blackout darkens every replica of \
+         one shard, and with r=1 that is the whole dataset"
+    );
+    let n_shards = n_nodes / replication;
+
+    let data = SyntheticDataset::generate_sized(ds, n, n_queries, sys.seed);
+    let nlist = (n as f64).sqrt() as usize;
+    eprintln!(
+        "[chaos] seed {}: {n_shards} shards x {replication} replicas behind \
+         fault proxies ({} flips / {} cuts / {} stalls per connection)",
+        sys.seed, profile.flips, profile.cuts, profile.stalls
+    );
+    let index =
+        IvfPqIndex::build(&data.data, data.n, data.d, ds.m, nlist, sys.seed ^ 1);
+
+    // One real node server per replica, each rebuilding its carve from the
+    // same deterministic (dataset, n, seed) contract, each reachable only
+    // through its own seeded chaos proxy.
+    let plan = ClusterMap::carve_plan(n_nodes, replication)?;
+    let mut servers: Vec<NodeServer> = Vec::new();
+    let mut proxies: Vec<ChaosProxy> = Vec::new();
+    let mut proxy_shards: Vec<usize> = Vec::new();
+    let mut nodes: Vec<ClusterNode> = Vec::new();
+    for (id, shard) in plan {
+        let (seed, nq) = (sys.seed, n_queries);
+        let cb = index.pq.centroids.clone();
+        let server = NodeServer::spawn_with(
+            move || {
+                let d = SyntheticDataset::generate_sized(ds, n, nq, seed);
+                let idx =
+                    IvfPqIndex::build(&d.data, d.n, d.d, ds.m, nlist, seed ^ 1);
+                MemoryNode::new(
+                    Shard::carve(&idx, shard, n_shards),
+                    ScanEngine::Native,
+                    k,
+                )
+            },
+            cb,
+            ds.nprobe,
+        )?;
+        let proxy = ChaosProxy::spawn(
+            server.addr,
+            sys.seed ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            profile,
+        )?;
+        // A seeded flip can land inside the very first Hello exchange;
+        // each retry opens a fresh proxied connection with a new schedule.
+        let mut remote = None;
+        for _ in 0..5 {
+            match RemoteNode::connect(proxy.addr, k) {
+                Ok(r) => {
+                    remote = Some(r);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+        let remote = remote
+            .ok_or_else(|| anyhow::anyhow!("node {id} unreachable through its proxy"))?;
+        nodes.push(ClusterNode { id, shard, backend: Box::new(remote) });
+        proxy_shards.push(shard);
+        proxies.push(proxy);
+        servers.push(server);
+    }
+
+    let cfg = ClusterConfig {
+        select: SelectPolicy::Static,
+        attempt_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+    let mut engine = ClusterEngine::new(nodes, n_shards, cfg)?;
+    // Short probation backoff so healed replicas re-probe within the run.
+    engine.health_mut().breaker_backoff = Duration::from_millis(100);
+    let mut clustered = Dispatcher::clustered(engine, k);
+
+    // Fault-free flat reference over the same carve.
+    let flat_nodes: Vec<MemoryNode> = (0..n_shards)
+        .map(|s| {
+            MemoryNode::new(
+                Shard::carve(&index, s, n_shards),
+                ScanEngine::Native,
+                k,
+            )
+        })
+        .collect();
+    let mut flat = Dispatcher::new(flat_nodes, k);
+
+    let opts = RoundOptions {
+        degraded: DegradedPolicy::ServePartial { min_coverage },
+        deadline: None,
+    };
+    let kill_at = n_queries / 3;
+    let (mut complete, mut partial, mut failed, mut mismatched) =
+        (0usize, 0usize, 0usize, 0usize);
+    for qi in 0..n_queries {
+        if qi == kill_at {
+            println!(
+                "[chaos] blackout: every replica of shard 0 dark for {blackout:?} \
+                 (after query {kill_at} of {n_queries})"
+            );
+            for (p, &shard) in proxies.iter().zip(&proxy_shards) {
+                if shard == 0 {
+                    p.blackout(blackout);
+                }
+            }
+        }
+        let q = data.query(qi % data.n_queries);
+        let lists = index.probe(q, ds.nprobe);
+        let want = flat.search(q, &index.pq.centroids, &lists, ds.nprobe)?;
+        let per_query =
+            RoundOptions { deadline: Some(Instant::now() + deadline), ..opts };
+        match clustered.search_opts(
+            q,
+            &index.pq.centroids,
+            &lists,
+            ds.nprobe,
+            qi as u64,
+            &per_query,
+        ) {
+            Ok(got) if got.is_partial() => partial += 1,
+            Ok(got) => {
+                complete += 1;
+                if got.topk != want.topk {
+                    mismatched += 1;
+                }
+            }
+            Err(e) => {
+                failed += 1;
+                eprintln!("[chaos] query {qi} hard-failed: {e:#}");
+            }
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Recovery: keep probing with one reference query until the healed
+    // replicas clear half-open probation and the answer is complete and
+    // bit-identical again.
+    let q = data.query(0);
+    let lists = index.probe(q, ds.nprobe);
+    let want = flat.search(q, &index.pq.centroids, &lists, ds.nprobe)?;
+    let t0 = Instant::now();
+    let mut recovered = false;
+    while t0.elapsed() < Duration::from_secs(15) {
+        if let Ok(got) =
+            clustered.search_opts(q, &index.pq.centroids, &lists, ds.nprobe, 0, &opts)
+        {
+            if !got.is_partial() && got.topk == want.topk {
+                recovered = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let engine = clustered.cluster().expect("clustered dispatcher");
+    println!("{}", engine.render_report());
+    anyhow::ensure!(
+        failed == 0,
+        "{failed} hard failures — ServePartial must absorb a dark shard"
+    );
+    anyhow::ensure!(
+        mismatched == 0,
+        "{mismatched} complete results diverged from the flat reference \
+         (corruption slipped past the frame checksums)"
+    );
+    anyhow::ensure!(
+        complete + partial == n_queries,
+        "accounting hole: complete {complete} + partial {partial} != sent {n_queries}"
+    );
+    anyhow::ensure!(
+        partial >= 1,
+        "blackout produced no partial results — the degraded path never ran"
+    );
+    anyhow::ensure!(
+        recovered,
+        "tier never returned to complete, bit-identical service after the blackout"
+    );
+    println!(
+        "CHAOS ok: sent={n_queries} complete={complete} partial={partial} \
+         failed=0 recovered=yes"
+    );
+    for p in &mut proxies {
+        p.stop();
+    }
+    for s in &mut servers {
+        s.shutdown();
+    }
     Ok(())
 }
 

@@ -13,17 +13,42 @@
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::protocol::{
-    BatchScanRequest, BatchScanResponse, Frame, Hello, Kind, ScanRequest, ScanResponse,
+    BatchScanRequest, BatchScanResponse, Frame, Hello, Kind, NodeError, ScanRequest,
+    ScanResponse, HELLO_CAP_CHECKSUMS,
 };
 use crate::chamvs::backend::{ScanBackend, ScanJob};
 use crate::chamvs::dispatcher::{BatchQuery, Dispatcher, SearchResult};
 use crate::chamvs::node::NodeResult;
 use crate::hwmodel::fpga::FpgaModel;
+use crate::util::rng::Rng;
+
+/// First reconnect-backoff step after a poisoned exchange; doubles per
+/// failed heal attempt up to [`RECONNECT_CAP`], plus deterministic jitter.
+const RECONNECT_BASE: Duration = Duration::from_millis(50);
+/// Ceiling on the reconnect backoff.
+const RECONNECT_CAP: Duration = Duration::from_secs(2);
+
+/// A memory node answered a well-framed request with a [`NodeError`]
+/// frame: the request was rejected but the stream is still in sync, so
+/// the connection is NOT poisoned.
+#[derive(Debug)]
+pub struct NodeRejected {
+    pub query_id: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for NodeRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "memory node rejected query {}: {}", self.query_id, self.message)
+    }
+}
+
+impl std::error::Error for NodeRejected {}
 
 /// Socket deadlines for a [`RemoteNode`] connection. A hung node used to
 /// block a dispatch round forever; these deadlines are the transport
@@ -71,9 +96,18 @@ pub struct RemoteNode {
     /// Set after a timeout or I/O failure mid-exchange: the stream may
     /// hold a stale half-delivered response, so every later scan on this
     /// connection fails fast instead of merging desynced frames. A
-    /// poisoned node rejoins via [`reconnect`](Self::reconnect) (or a
-    /// fresh connection).
+    /// poisoned node self-heals on the next scan once its reconnect
+    /// backoff elapses (see [`try_heal`](Self::try_heal)), or rejoins
+    /// immediately via an explicit [`reconnect`](Self::reconnect).
     poisoned: bool,
+    /// Whether this connection negotiated checksummed framing.
+    checksums: bool,
+    /// Failed self-heal attempts since the connection was poisoned.
+    heal_attempts: u32,
+    /// Earliest instant the next self-heal attempt is allowed.
+    heal_after: Option<Instant>,
+    /// Seed for deterministic reconnect jitter.
+    heal_seed: u64,
 }
 
 impl RemoteNode {
@@ -86,7 +120,7 @@ impl RemoteNode {
 
     /// [`connect`](Self::connect) with explicit socket deadlines.
     pub fn connect_with(addr: SocketAddr, k: usize, t: NetTimeouts) -> Result<RemoteNode> {
-        let stream = TcpStream::connect_timeout(&addr, t.connect)
+        let mut stream = TcpStream::connect_timeout(&addr, t.connect)
             .with_context(|| format!("connecting to memory node {addr}"))?;
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(t.read))?;
@@ -96,6 +130,18 @@ impl RemoteNode {
             .with_context(|| format!("reading hello from {addr}"))?;
         let hello = Hello::decode(&frame)?;
         anyhow::ensure!(hello.m > 0, "node {addr} reported m=0");
+        // Capability negotiation: a node that advertises checksummed
+        // framing gets a Hello answer carrying the same flag (the answer
+        // itself is plain — Hello frames always are), after which both
+        // directions append payload checksums. Old nodes never advertise,
+        // so mixed fleets interop on plain framing.
+        let checksums = hello.wants_checksums();
+        if checksums {
+            Hello { flags: HELLO_CAP_CHECKSUMS, ..hello }
+                .encode()
+                .write_to(&mut stream)
+                .with_context(|| format!("answering hello to {addr}"))?;
+        }
         Ok(RemoteNode {
             addr,
             stream,
@@ -109,6 +155,10 @@ impl RemoteNode {
             fpga: FpgaModel::default(),
             next_id: 0,
             poisoned: false,
+            checksums,
+            heal_attempts: 0,
+            heal_after: None,
+            heal_seed: addr.port() as u64,
         })
     }
 
@@ -125,6 +175,63 @@ impl RemoteNode {
     /// Whether an earlier failure desynced this connection.
     pub fn is_poisoned(&self) -> bool {
         self.poisoned
+    }
+
+    /// Failed self-heal attempts since this connection was poisoned.
+    pub fn heal_attempts(&self) -> u32 {
+        self.heal_attempts
+    }
+
+    /// How long until the next self-heal attempt is allowed (None when a
+    /// heal may run immediately).
+    pub fn heal_backoff_remaining(&self) -> Option<Duration> {
+        let at = self.heal_after?;
+        at.checked_duration_since(Instant::now())
+    }
+
+    /// Self-heal a poisoned connection: re-dial once the capped
+    /// exponential backoff (with deterministic jitter) has elapsed. Inside
+    /// the backoff window this fails fast without touching the network, so
+    /// a dispatch round never stalls behind a dead node's dial timeout.
+    /// Called automatically at the top of every scan on a poisoned node.
+    pub fn try_heal(&mut self) -> Result<()> {
+        if !self.poisoned {
+            return Ok(());
+        }
+        if let Some(left) = self.heal_backoff_remaining() {
+            anyhow::bail!(
+                "memory node {} poisoned; reconnect backoff has {:?} left \
+                 (attempt {})",
+                self.addr,
+                left,
+                self.heal_attempts
+            );
+        }
+        let attempt = self.heal_attempts;
+        match self.reconnect() {
+            // Success replaced *self with a fresh connection, which reset
+            // the heal counters.
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.heal_attempts = attempt.saturating_add(1);
+                let backoff = RECONNECT_BASE
+                    .saturating_mul(1u32 << attempt.min(6))
+                    .min(RECONNECT_CAP);
+                // Deterministic jitter in [0, backoff/4): replicas that
+                // died together don't re-dial in lockstep, and a given
+                // (port, attempt) pair replays the same schedule.
+                let span_us = (backoff.as_micros() as u64 / 4).max(1);
+                let jitter_us = Rng::new(self.heal_seed ^ ((attempt as u64) << 32))
+                    .next_u64()
+                    % span_us;
+                self.heal_after =
+                    Some(Instant::now() + backoff + Duration::from_micros(jitter_us));
+                Err(e.context(format!(
+                    "self-heal attempt {attempt} for memory node {} failed",
+                    self.addr
+                )))
+            }
+        }
     }
 
     /// Re-dial the node and redo the handshake, clearing the poisoned
@@ -146,6 +253,36 @@ impl RemoteNode {
         );
         *self = fresh;
         Ok(())
+    }
+
+    /// Write one frame, checksummed if this connection negotiated it.
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        if self.checksums {
+            frame.write_to_checksummed(&mut self.stream)
+        } else {
+            frame.write_to(&mut self.stream)
+        }
+    }
+
+    /// Read one reply frame: verify/strip the checksum trailer when
+    /// negotiated, and surface a [`NodeError`] frame as a typed
+    /// [`NodeRejected`] error (the stream stays in sync — the caller must
+    /// not poison the connection for it).
+    fn read_reply(&mut self, what: &str) -> Result<Frame> {
+        let mut f = Frame::read_from(&mut self.reader)
+            .with_context(|| format!("reading {what} from {}", self.addr))?;
+        if self.checksums {
+            f.verify_strip_checksum()
+                .with_context(|| format!("verifying {what} from {}", self.addr))?;
+        }
+        if f.kind == Kind::NodeError {
+            let e = NodeError::decode(&f)?;
+            return Err(anyhow::Error::new(NodeRejected {
+                query_id: e.query_id,
+                message: e.message,
+            }));
+        }
+        Ok(f)
     }
 
     fn to_node_result(r: ScanResponse) -> NodeResult {
@@ -175,23 +312,21 @@ impl RemoteNode {
         };
         if jobs.len() == 1 {
             // Single-query broadcast round (paper step 5/7).
-            request(0)
-                .encode()
-                .write_to(&mut self.stream)
+            let frame = request(0).encode();
+            self.send(&frame)
                 .with_context(|| format!("sending scan to {}", self.addr))?;
-            let f = Frame::read_from(&mut self.reader)
-                .with_context(|| format!("reading response from {}", self.addr))?;
+            let f = self.read_reply("response")?;
             let resp = ScanResponse::decode(&f)?;
             anyhow::ensure!(resp.query_id == base, "scan response id mismatch");
             Ok(vec![Self::to_node_result(resp)])
         } else {
             // Batched round: the whole job queue in one round trip.
-            BatchScanRequest { items: (0..jobs.len()).map(request).collect() }
-                .encode()
-                .write_to(&mut self.stream)
+            let frame =
+                BatchScanRequest { items: (0..jobs.len()).map(request).collect() }
+                    .encode();
+            self.send(&frame)
                 .with_context(|| format!("sending batch scan to {}", self.addr))?;
-            let f = Frame::read_from(&mut self.reader)
-                .with_context(|| format!("reading batch response from {}", self.addr))?;
+            let f = self.read_reply("batch response")?;
             let resp = BatchScanResponse::decode(&f)?;
             anyhow::ensure!(
                 resp.items.len() == jobs.len(),
@@ -230,33 +365,34 @@ impl ScanBackend for RemoteNode {
         if jobs.is_empty() {
             return Ok(Vec::new());
         }
-        anyhow::ensure!(
-            !self.poisoned,
-            "connection to memory node {} was poisoned by an earlier \
-             timeout/failure — reconnect to rejoin it",
-            self.addr
-        );
+        // Self-heal: a poisoned connection re-dials once its backoff
+        // elapses; inside the window this fails fast with no I/O.
+        self.try_heal()?;
         match self.scan_jobs_exchange(jobs) {
             Ok(out) => Ok(out),
             Err(e) => {
-                // The stream may now carry a late or partial response
-                // that would desync the next exchange: fail fast until
-                // the operator reconnects (bounded failure detection for
-                // the cluster engine — never a silently-wrong merge).
-                self.poisoned = true;
+                // A NodeError reply means the node rejected the request
+                // but answered in sync — the connection is fine. Anything
+                // else (timeout, I/O, checksum mismatch, decode) may have
+                // left a stale half-delivered response on the stream:
+                // poison it so the next scan heals instead of merging
+                // desynced frames.
+                if e.downcast_ref::<NodeRejected>().is_none() {
+                    self.poisoned = true;
+                }
                 Err(e)
             }
         }
     }
 
     fn shutdown(&mut self) {
-        let _ = Frame { kind: Kind::Shutdown, payload: vec![] }.write_to(&mut self.stream);
+        let _ = self.send(&Frame { kind: Kind::Shutdown, payload: vec![] });
     }
 
     /// Ask the node process to retire: it exits once this connection
     /// closes (see the `Drain` handling in `net::server`).
     fn drain(&mut self) {
-        let _ = Frame { kind: Kind::Drain, payload: vec![] }.write_to(&mut self.stream);
+        let _ = self.send(&Frame { kind: Kind::Drain, payload: vec![] });
     }
 }
 

@@ -8,12 +8,14 @@
 //! per connection.
 
 pub mod client;
+pub mod fault;
 pub mod protocol;
 pub mod server;
 
-pub use client::{NetTimeouts, NodeClient, RemoteNode};
+pub use client::{NetTimeouts, NodeClient, NodeRejected, RemoteNode};
+pub use fault::{ChaosProxy, Fault, FaultProfile, FaultSchedule, FaultyStream};
 pub use protocol::{
     BatchScanRequest, BatchScanResponse, ClusterAck, ClusterOp, ClusterUpdate, Frame,
-    Hello, ScanRequest, ScanResponse,
+    Hello, NodeError, ScanRequest, ScanResponse,
 };
 pub use server::NodeServer;

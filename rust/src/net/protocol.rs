@@ -51,6 +51,11 @@ pub enum Kind {
     /// out of band with respect to the connection's FIFO reply stream —
     /// match on `query_id`, not on arrival order.
     Backpressure = 12,
+    /// Memory node -> coordinator: a well-framed request failed to decode
+    /// or execute. Sent instead of a response so one malformed request
+    /// doesn't tear down a connection carrying other tenants' traffic;
+    /// only unframeable bytes (bad magic/kind/length) close the stream.
+    NodeError = 13,
 }
 
 impl Kind {
@@ -68,6 +73,7 @@ impl Kind {
             10 => Kind::ClusterAck,
             11 => Kind::Drain,
             12 => Kind::Backpressure,
+            13 => Kind::NodeError,
             other => bail!("unknown frame kind {other}"),
         })
     }
@@ -86,12 +92,44 @@ pub const FRAME_HEADER_BYTES: usize = 16;
 /// Largest accepted payload (defensive cap shared by every decode path).
 pub const MAX_PAYLOAD_BYTES: usize = 1 << 30;
 
+/// Bytes of the per-frame payload checksum trailer (FNV-1a 64 over the
+/// payload), appended when both peers negotiated checksums via [`Hello`]
+/// capability flags. The trailer is *inside* `payload_len`, so a
+/// non-negotiating peer never sees it — checksummed frames only flow
+/// between peers that both advertised [`HELLO_CAP_CHECKSUMS`].
+pub const CHECKSUM_TRAILER_BYTES: usize = 8;
+
+/// FNV-1a 64 over a byte slice: the frame payload checksum. Not
+/// cryptographic — it exists to catch injected bit flips and truncation
+/// before corrupt distances get merged, not to resist an adversary.
+pub fn payload_checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 impl Frame {
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
         w.write_u32::<LE>(MAGIC)?;
         w.write_u32::<LE>(self.kind as u32)?;
         w.write_u64::<LE>(self.payload.len() as u64)?;
         w.write_all(&self.payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// [`write_to`](Self::write_to) with the negotiated checksum trailer
+    /// appended (and counted in `payload_len`).
+    pub fn write_to_checksummed(&self, w: &mut impl Write) -> Result<()> {
+        let len = self.payload.len() + CHECKSUM_TRAILER_BYTES;
+        w.write_u32::<LE>(MAGIC)?;
+        w.write_u32::<LE>(self.kind as u32)?;
+        w.write_u64::<LE>(len as u64)?;
+        w.write_all(&self.payload)?;
+        w.write_u64::<LE>(payload_checksum(&self.payload))?;
         w.flush()?;
         Ok(())
     }
@@ -106,6 +144,27 @@ impl Frame {
         buf.write_u64::<LE>(self.payload.len() as u64).unwrap();
         buf.extend_from_slice(&self.payload);
         buf
+    }
+
+    /// Verify and strip a checksum trailer in place. Call on frames read
+    /// from a connection that negotiated checksums.
+    pub fn verify_strip_checksum(&mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.payload.len() >= CHECKSUM_TRAILER_BYTES,
+            "{:?} frame too short for checksum trailer ({} bytes)",
+            self.kind,
+            self.payload.len()
+        );
+        let body_len = self.payload.len() - CHECKSUM_TRAILER_BYTES;
+        let want = (&self.payload[body_len..]).read_u64::<LE>()?;
+        let got = payload_checksum(&self.payload[..body_len]);
+        anyhow::ensure!(
+            got == want,
+            "{:?} frame payload checksum mismatch (corruption on the wire)",
+            self.kind
+        );
+        self.payload.truncate(body_len);
+        Ok(())
     }
 
     /// Blocking frame read. NOT resumable: a read timeout mid-frame loses
@@ -158,11 +217,22 @@ pub struct FrameReader {
     /// header is complete and validated).
     body: Option<(Kind, Vec<u8>)>,
     filled: usize,
+    /// When set (checksums negotiated via Hello), every completed frame
+    /// must carry a valid [`CHECKSUM_TRAILER_BYTES`] trailer, which is
+    /// verified and stripped before the frame is handed up.
+    checksums: bool,
 }
 
 impl FrameReader {
     pub fn new() -> FrameReader {
         FrameReader::default()
+    }
+
+    /// Enable (or disable) checksum-trailer verification on every
+    /// subsequent frame. Flip this the moment checksum negotiation
+    /// completes — at a frame boundary, never mid-frame.
+    pub fn set_checksums(&mut self, on: bool) {
+        self.checksums = on;
     }
 
     /// Whether any bytes of the next frame have been consumed — the
@@ -214,7 +284,11 @@ impl FrameReader {
         let (kind, payload) = self.body.take().unwrap();
         self.have = 0;
         self.filled = 0;
-        Ok(ReadProgress::Frame(Frame { kind, payload }))
+        let mut frame = Frame { kind, payload };
+        if self.checksums {
+            frame.verify_strip_checksum()?;
+        }
+        Ok(ReadProgress::Frame(frame))
     }
 
     /// Validate the buffered header and allocate the payload buffer.
@@ -296,10 +370,23 @@ fn read_count(r: &mut &[u8], min_item_bytes: usize) -> Result<usize> {
 
 // ------------------------------------------------------------------ hello
 
+/// Capability bit in [`Hello::flags`]: the sender can verify and emit
+/// per-frame payload checksum trailers. Checksums turn on for a
+/// connection only after BOTH directions advertised the bit (the node in
+/// its accept-time Hello, the client in the Hello it sends back); either
+/// side omitting it keeps the legacy plain framing, so old peers interop.
+pub const HELLO_CAP_CHECKSUMS: u32 = 1 << 0;
+
+/// Bytes of the optional capability-flags tail on [`Hello`].
+pub const HELLO_FLAGS_TAIL_BYTES: usize = 4;
+
 /// Node handshake, sent by a memory node once per accepted connection.
 /// `shard`/`n_shards` declare which carve of the database this node
 /// holds, so a coordinator can place replicated nodes into its cluster
-/// map without an out-of-band assignment contract.
+/// map without an out-of-band assignment contract. A client that wants
+/// to negotiate capabilities answers with a Hello of its own (old
+/// clients never do, and old nodes treat an unexpected frame as an
+/// error reply — negotiation stays opt-in at both ends).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Hello {
     pub node_id: u32,
@@ -311,16 +398,19 @@ pub struct Hello {
     pub shard: u32,
     /// Shard count the node's carve was taken at.
     pub n_shards: u32,
+    /// Capability flags (optional tail on the wire; 0 from old peers).
+    pub flags: u32,
 }
 
 impl Hello {
     pub fn encode(&self) -> Frame {
-        let mut p = Vec::with_capacity(20);
+        let mut p = Vec::with_capacity(20 + HELLO_FLAGS_TAIL_BYTES);
         p.write_u32::<LE>(self.node_id).unwrap();
         p.write_u32::<LE>(self.m).unwrap();
         p.write_u32::<LE>(self.nlist).unwrap();
         p.write_u32::<LE>(self.shard).unwrap();
         p.write_u32::<LE>(self.n_shards).unwrap();
+        p.write_u32::<LE>(self.flags).unwrap();
         Frame { kind: Kind::Hello, payload: p }
     }
 
@@ -329,13 +419,28 @@ impl Hello {
             bail!("not a hello");
         }
         let mut r = &f.payload[..];
-        Ok(Hello {
+        let mut h = Hello {
             node_id: r.read_u32::<LE>()?,
             m: r.read_u32::<LE>()?,
             nlist: r.read_u32::<LE>()?,
             shard: r.read_u32::<LE>()?,
             n_shards: r.read_u32::<LE>()?,
-        })
+            flags: 0,
+        };
+        match r.len() {
+            0 => {} // pre-capability peer: no flags
+            HELLO_FLAGS_TAIL_BYTES => h.flags = r.read_u32::<LE>()?,
+            // A longer tail is a future peer advertising more than we
+            // understand: read our flags word, ignore the rest.
+            n if n > HELLO_FLAGS_TAIL_BYTES => h.flags = r.read_u32::<LE>()?,
+            n => bail!("hello with partial flags tail ({n} bytes)"),
+        }
+        Ok(h)
+    }
+
+    /// Whether this peer advertised checksummed framing.
+    pub fn wants_checksums(&self) -> bool {
+        self.flags & HELLO_CAP_CHECKSUMS != 0
     }
 }
 
@@ -701,12 +806,24 @@ pub struct RetrieveRequest {
     pub k: u32,
     /// True for EncDec models: respond with chunk tokens, not next-tokens.
     pub want_chunks: bool,
+    /// End-to-end latency budget in microseconds, measured from the
+    /// coordinator's decode of this frame; 0 = no deadline. Queue wait,
+    /// retries, hedges and reconnects all draw from this one budget:
+    /// expired in queue -> shed with `Backpressure`, expired mid-scan ->
+    /// partial result. Optional tail on the wire (0 from old clients).
+    pub deadline_us: u64,
 }
+
+/// Bytes of the optional deadline tail on [`RetrieveRequest`].
+pub const RETRIEVE_DEADLINE_TAIL_BYTES: usize = 8;
 
 impl RetrieveRequest {
     pub fn encode(&self) -> Frame {
-        let mut p =
-            Vec::with_capacity(28 + 4 * self.query.len() + 4 * self.lists.len());
+        let mut p = Vec::with_capacity(
+            28 + 4 * self.query.len()
+                + 4 * self.lists.len()
+                + RETRIEVE_DEADLINE_TAIL_BYTES,
+        );
         p.write_u64::<LE>(self.query_id).unwrap();
         p.write_u32::<LE>(self.gpu_id).unwrap();
         p.write_u32::<LE>(self.k).unwrap();
@@ -719,6 +836,7 @@ impl RetrieveRequest {
         for &l in &self.lists {
             p.write_u32::<LE>(l).unwrap();
         }
+        p.write_u64::<LE>(self.deadline_us).unwrap();
         Frame { kind: Kind::RetrieveRequest, payload: p }
     }
 
@@ -735,11 +853,26 @@ impl RetrieveRequest {
         let ln = r.read_u32::<LE>()? as usize;
         let query = read_f32s(&mut r, qn)?;
         let lists = read_u32s(&mut r, ln)?;
-        Ok(RetrieveRequest { query_id, gpu_id, query, lists, k, want_chunks })
+        let deadline_us = match r.len() {
+            0 => 0, // pre-deadline client
+            RETRIEVE_DEADLINE_TAIL_BYTES => r.read_u64::<LE>()?,
+            n => bail!("retrieve request with partial deadline tail ({n} bytes)"),
+        };
+        Ok(RetrieveRequest {
+            query_id,
+            gpu_id,
+            query,
+            lists,
+            k,
+            want_chunks,
+            deadline_us,
+        })
     }
 }
 
-/// Coordinator reply: retrieved token payload + distances.
+/// Coordinator reply: retrieved token payload + distances, plus shard
+/// coverage (how many shards contributed to the merged top-k) so clients
+/// can tell a complete answer from a degraded partial one.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RetrieveResponse {
     pub query_id: u64,
@@ -747,12 +880,43 @@ pub struct RetrieveResponse {
     /// chunk tokens (EncDec, K*chunk_len long).
     pub tokens: Vec<u32>,
     pub dists: Vec<f32>,
+    /// Shards whose scans made it into the merge (coverage tail;
+    /// 0 from a pre-coverage coordinator — treat as complete).
+    pub shards_answered: u32,
+    /// Total shards the query fanned out to (0 from an old coordinator).
+    pub n_shards: u32,
 }
 
+/// Bytes of the optional coverage tail on [`RetrieveResponse`].
+pub const RETRIEVE_COVERAGE_TAIL_BYTES: usize = 8;
+
 impl RetrieveResponse {
+    /// A response covering every shard (the only shape an old
+    /// coordinator can produce, and the common case on a new one).
+    pub fn complete(query_id: u64, tokens: Vec<u32>, dists: Vec<f32>) -> Self {
+        RetrieveResponse { query_id, tokens, dists, shards_answered: 0, n_shards: 0 }
+    }
+
+    /// Fraction of shards that answered; 1.0 when the coverage tail is
+    /// absent (old coordinator) or every shard answered.
+    pub fn coverage(&self) -> f64 {
+        if self.n_shards == 0 {
+            return 1.0;
+        }
+        self.shards_answered as f64 / self.n_shards as f64
+    }
+
+    /// Whether this is a degraded partial result (some shard unanswered).
+    pub fn is_partial(&self) -> bool {
+        self.n_shards != 0 && self.shards_answered < self.n_shards
+    }
+
     pub fn encode(&self) -> Frame {
-        let mut p =
-            Vec::with_capacity(16 + 4 * self.tokens.len() + 4 * self.dists.len());
+        let mut p = Vec::with_capacity(
+            16 + 4 * self.tokens.len()
+                + 4 * self.dists.len()
+                + RETRIEVE_COVERAGE_TAIL_BYTES,
+        );
         p.write_u64::<LE>(self.query_id).unwrap();
         p.write_u32::<LE>(self.tokens.len() as u32).unwrap();
         p.write_u32::<LE>(self.dists.len() as u32).unwrap();
@@ -762,6 +926,8 @@ impl RetrieveResponse {
         for &d in &self.dists {
             p.write_f32::<LE>(d).unwrap();
         }
+        p.write_u32::<LE>(self.shards_answered).unwrap();
+        p.write_u32::<LE>(self.n_shards).unwrap();
         Frame { kind: Kind::RetrieveResponse, payload: p }
     }
 
@@ -775,7 +941,14 @@ impl RetrieveResponse {
         let dn = r.read_u32::<LE>()? as usize;
         let tokens = read_u32s(&mut r, tn)?;
         let dists = read_f32s(&mut r, dn)?;
-        Ok(RetrieveResponse { query_id, tokens, dists })
+        let (shards_answered, n_shards) = match r.len() {
+            0 => (0, 0), // pre-coverage coordinator
+            RETRIEVE_COVERAGE_TAIL_BYTES => {
+                (r.read_u32::<LE>()?, r.read_u32::<LE>()?)
+            }
+            n => bail!("retrieve response with partial coverage tail ({n} bytes)"),
+        };
+        Ok(RetrieveResponse { query_id, tokens, dists, shards_answered, n_shards })
     }
 }
 
@@ -819,6 +992,39 @@ impl Backpressure {
         let queue_depth = r.read_u32::<LE>()?;
         let retry_after_us = r.read_u64::<LE>()?;
         Ok(Backpressure { query_id, tenant, reason, queue_depth, retry_after_us })
+    }
+}
+
+// ------------------------------------------------------------- node error
+
+/// Error reply for a well-framed request that failed to decode or
+/// execute. The connection stays alive: the sender answers the one bad
+/// request and keeps serving the rest, tearing down only on unframeable
+/// bytes. `query_id` is 0 when the bad request's id could not be parsed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeError {
+    pub query_id: u64,
+    pub message: String,
+}
+
+impl NodeError {
+    pub fn encode(&self) -> Frame {
+        let bytes = self.message.as_bytes();
+        let mut p = Vec::with_capacity(12 + bytes.len());
+        p.write_u64::<LE>(self.query_id).unwrap();
+        p.write_u32::<LE>(bytes.len() as u32).unwrap();
+        p.extend_from_slice(bytes);
+        Frame { kind: Kind::NodeError, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<NodeError> {
+        if f.kind != Kind::NodeError {
+            bail!("not a node error frame");
+        }
+        let mut r = &f.payload[..];
+        let query_id = r.read_u64::<LE>()?;
+        let message = read_string(&mut r)?;
+        Ok(NodeError { query_id, message })
     }
 }
 
@@ -869,11 +1075,13 @@ mod tests {
                 lists: vec![3, 1],
                 k: 10,
                 want_chunks: true,
+                deadline_us: 5_000,
             }
             .encode(),
-            RetrieveResponse { query_id: 5, tokens: vec![10, 20], dists: vec![0.1, 0.2] }
+            RetrieveResponse::complete(5, vec![10, 20], vec![0.1, 0.2]).encode(),
+            Hello { node_id: 2, m: 16, nlist: 77, shard: 1, n_shards: 4, flags: 0 }
                 .encode(),
-            Hello { node_id: 2, m: 16, nlist: 77, shard: 1, n_shards: 4 }.encode(),
+            NodeError { query_id: 9, message: "bad request".to_string() }.encode(),
             ClusterUpdate {
                 op: ClusterOp::Join,
                 node_id: 9,
@@ -915,9 +1123,36 @@ mod tests {
             lists: vec![3, 1],
             k: 10,
             want_chunks: true,
+            deadline_us: 12_500,
         };
         let back = roundtrip(req.encode());
         assert_eq!(RetrieveRequest::decode(&back).unwrap(), req);
+    }
+
+    #[test]
+    fn retrieve_request_deadline_tail_compat() {
+        // Old client -> new coordinator: a payload stopping at the legacy
+        // body decodes with no deadline.
+        let req = RetrieveRequest {
+            query_id: 7,
+            gpu_id: 1,
+            query: vec![1.0, 2.0],
+            lists: vec![4],
+            k: 3,
+            want_chunks: false,
+            deadline_us: 9999,
+        };
+        let f = req.encode();
+        let legacy_len = f.payload.len() - RETRIEVE_DEADLINE_TAIL_BYTES;
+        let legacy = Frame { kind: f.kind, payload: f.payload[..legacy_len].to_vec() };
+        let d = RetrieveRequest::decode(&legacy).unwrap();
+        assert_eq!(d.deadline_us, 0);
+        assert_eq!(d.query, req.query);
+        // A torn tail is an error, not a silent zero.
+        for cut in legacy_len + 1..f.payload.len() {
+            let t = Frame { kind: f.kind, payload: f.payload[..cut].to_vec() };
+            assert!(RetrieveRequest::decode(&t).is_err(), "cut={cut}");
+        }
     }
 
     #[test]
@@ -926,9 +1161,38 @@ mod tests {
             query_id: 5,
             tokens: vec![10, 20, 30],
             dists: vec![0.1, 0.2, 0.3],
+            shards_answered: 3,
+            n_shards: 4,
         };
         let back = roundtrip(resp.encode());
-        assert_eq!(RetrieveResponse::decode(&back).unwrap(), resp);
+        let d = RetrieveResponse::decode(&back).unwrap();
+        assert_eq!(d, resp);
+        assert!(d.is_partial());
+        assert!((d.coverage() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retrieve_response_coverage_tail_compat() {
+        // Old coordinator -> new client: no coverage tail reads as a
+        // complete answer (coverage 1.0, not partial).
+        let resp = RetrieveResponse::complete(5, vec![10], vec![0.5]);
+        let f = resp.encode();
+        let legacy_len = f.payload.len() - RETRIEVE_COVERAGE_TAIL_BYTES;
+        let legacy = Frame { kind: f.kind, payload: f.payload[..legacy_len].to_vec() };
+        let d = RetrieveResponse::decode(&legacy).unwrap();
+        assert_eq!(d.coverage(), 1.0);
+        assert!(!d.is_partial());
+        for cut in legacy_len + 1..f.payload.len() {
+            let t = Frame { kind: f.kind, payload: f.payload[..cut].to_vec() };
+            assert!(RetrieveResponse::decode(&t).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn node_error_roundtrip() {
+        let e = NodeError { query_id: 3, message: "scan failed: dim".to_string() };
+        let back = roundtrip(e.encode());
+        assert_eq!(NodeError::decode(&back).unwrap(), e);
     }
 
     #[test]
@@ -947,9 +1211,75 @@ mod tests {
 
     #[test]
     fn hello_roundtrip() {
-        let h = Hello { node_id: 7, m: 32, nlist: 141, shard: 3, n_shards: 8 };
+        let h = Hello {
+            node_id: 7,
+            m: 32,
+            nlist: 141,
+            shard: 3,
+            n_shards: 8,
+            flags: HELLO_CAP_CHECKSUMS,
+        };
         let back = roundtrip(h.encode());
-        assert_eq!(Hello::decode(&back).unwrap(), h);
+        let d = Hello::decode(&back).unwrap();
+        assert_eq!(d, h);
+        assert!(d.wants_checksums());
+    }
+
+    #[test]
+    fn hello_flags_tail_compat() {
+        // Old node -> new client: a 20-byte Hello decodes with flags 0.
+        let h = Hello { node_id: 1, m: 8, nlist: 32, shard: 0, n_shards: 2, flags: 7 };
+        let f = h.encode();
+        let legacy = Frame {
+            kind: f.kind,
+            payload: f.payload[..f.payload.len() - HELLO_FLAGS_TAIL_BYTES].to_vec(),
+        };
+        let d = Hello::decode(&legacy).unwrap();
+        assert_eq!(d.flags, 0);
+        assert!(!d.wants_checksums());
+        // Future peer with a longer tail: our flags word still reads.
+        let mut longer = f.payload.clone();
+        longer.extend_from_slice(&[0u8; 12]);
+        let d = Hello::decode(&Frame { kind: f.kind, payload: longer }).unwrap();
+        assert_eq!(d.flags, 7);
+    }
+
+    #[test]
+    fn checksummed_frame_roundtrip_and_detection() {
+        let f = sample_scan_request().encode();
+        let mut wire = Vec::new();
+        f.write_to_checksummed(&mut wire).unwrap();
+
+        // A checksum-aware reader verifies, strips, and hands up the
+        // original payload.
+        let mut fr = FrameReader::new();
+        fr.set_checksums(true);
+        match fr.poll(&mut &wire[..]).unwrap() {
+            ReadProgress::Frame(got) => {
+                assert_eq!(got.payload, f.payload);
+                assert_eq!(ScanRequest::decode(&got).unwrap(), sample_scan_request());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+
+        // Flip any payload byte: the reader must error, never deliver.
+        for i in FRAME_HEADER_BYTES..wire.len() {
+            let mut bad = wire.clone();
+            bad[i] ^= 0x10;
+            let mut fr = FrameReader::new();
+            fr.set_checksums(true);
+            assert!(fr.poll(&mut &bad[..]).is_err(), "flip at byte {i} undetected");
+        }
+    }
+
+    #[test]
+    fn checksum_strip_requires_trailer() {
+        // Plain frames fed to a checksumming reader must error (too
+        // short / mismatch), not silently pass.
+        let mut short = Frame { kind: Kind::Shutdown, payload: vec![] };
+        assert!(short.verify_strip_checksum().is_err());
+        let mut plain = sample_scan_request().encode();
+        assert!(plain.verify_strip_checksum().is_err());
     }
 
     #[test]
@@ -1358,6 +1688,174 @@ mod tests {
             };
             assert!(err.to_string().contains("eof mid-frame"), "cut={cut}: {err}");
         }
+    }
+
+    /// Serves a byte stream in pre-chosen chunk sizes with a `WouldBlock`
+    /// between chunks, then clean EOF — the property-test source.
+    struct Chunked {
+        bytes: Vec<u8>,
+        pos: usize,
+        sizes: Vec<usize>,
+        next: usize,
+        ready: bool,
+    }
+
+    impl std::io::Read for Chunked {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if !self.ready {
+                self.ready = true;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.ready = false;
+            if self.pos >= self.bytes.len() {
+                return Ok(0);
+            }
+            let want = self.sizes[self.next % self.sizes.len()].max(1);
+            self.next += 1;
+            let n = want.min(buf.len()).min(self.bytes.len() - self.pos);
+            buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    /// One generated fuzz case: a stream of random frames, a re-chunking
+    /// schedule, and an optional injected mutilation.
+    struct FuzzCase {
+        frames: Vec<Frame>,
+        wire: Vec<u8>,
+        sizes: Vec<usize>,
+        /// None = pristine; Some((i, 0)) = truncate at byte i;
+        /// Some((i, mask != 0)) = flip `mask` into byte i.
+        mutation: Option<(usize, u8)>,
+        checksums: bool,
+    }
+
+    fn gen_fuzz_case(rng: &mut crate::util::rng::Rng) -> FuzzCase {
+        let kinds = [
+            Kind::ScanRequest,
+            Kind::ScanResponse,
+            Kind::Shutdown,
+            Kind::RetrieveRequest,
+            Kind::Backpressure,
+            Kind::NodeError,
+        ];
+        let checksums = rng.below(2) == 0;
+        let n = 1 + rng.below(4);
+        let frames: Vec<Frame> = (0..n)
+            .map(|_| {
+                let len = rng.below(160);
+                let payload: Vec<u8> =
+                    (0..len).map(|_| rng.next_u64() as u8).collect();
+                Frame { kind: kinds[rng.below(kinds.len())], payload }
+            })
+            .collect();
+        let mut wire = Vec::new();
+        for f in &frames {
+            if checksums {
+                f.write_to_checksummed(&mut wire).unwrap();
+            } else {
+                f.write_to(&mut wire).unwrap();
+            }
+        }
+        let sizes: Vec<usize> =
+            (0..1 + rng.below(8)).map(|_| 1 + rng.below(64)).collect();
+        let mutation = match rng.below(3) {
+            0 => None,
+            1 => Some((rng.below(wire.len()), 0)), // truncation
+            _ => Some((rng.below(wire.len()), 1 << rng.below(8) as u8)),
+        };
+        FuzzCase { frames, wire, sizes, mutation, checksums }
+    }
+
+    /// Satellite property: arbitrary re-chunking with injected bit flips
+    /// and truncations never panics the reader and never lets it resync
+    /// mid-frame — the outcome is always clean frames followed by either
+    /// a clean close or one error, and (under checksums) every delivered
+    /// frame's payload is byte-identical to what was sent.
+    #[test]
+    fn frame_reader_fuzz_never_panics_or_resyncs() {
+        crate::util::prop::check("frame-reader-fuzz", gen_fuzz_case, |case| {
+            let mut bytes = case.wire.clone();
+            let mut truncated = false;
+            match case.mutation {
+                Some((at, 0)) => {
+                    bytes.truncate(at);
+                    truncated = true;
+                }
+                Some((at, mask)) => bytes[at] ^= mask,
+                None => {}
+            }
+            let mut src = Chunked {
+                bytes,
+                pos: 0,
+                sizes: case.sizes.clone(),
+                next: 0,
+                ready: false,
+            };
+            let mut fr = FrameReader::new();
+            fr.set_checksums(case.checksums);
+            let mut got: Vec<Frame> = Vec::new();
+            let mut errored = false;
+            let mut closed = false;
+            // Bounded pump: the source alternates WouldBlock/data, so
+            // 4x the wire length comfortably covers every schedule.
+            for _ in 0..8 * case.wire.len() + 64 {
+                match fr.poll(&mut src) {
+                    Ok(ReadProgress::Frame(f)) => got.push(f),
+                    Ok(ReadProgress::Idle) => continue,
+                    Ok(ReadProgress::Closed) => {
+                        closed = true;
+                        break;
+                    }
+                    Err(_) => {
+                        errored = true;
+                        break;
+                    }
+                }
+            }
+            assert!(
+                errored || closed,
+                "reader neither closed nor errored (stuck mid-frame)"
+            );
+            assert!(got.len() <= case.frames.len(), "more frames out than in");
+            match case.mutation {
+                None => {
+                    // Pristine stream: everything delivered, clean close.
+                    assert!(closed, "pristine stream must close cleanly");
+                    assert_eq!(got.len(), case.frames.len());
+                    for (g, w) in got.iter().zip(&case.frames) {
+                        assert_eq!(g.kind, w.kind);
+                        assert_eq!(g.payload, w.payload);
+                    }
+                }
+                Some((_, 0)) => {
+                    // Truncation: delivered frames are an exact prefix;
+                    // EOF mid-frame is an error, at a boundary a close.
+                    assert!(truncated);
+                    for (g, w) in got.iter().zip(&case.frames) {
+                        assert_eq!(g.kind, w.kind);
+                        assert_eq!(g.payload, w.payload);
+                    }
+                    if closed {
+                        assert!(!fr.mid_frame(), "closed while mid-frame");
+                    }
+                }
+                Some(_) => {
+                    // Bit flip: under checksums no corrupted payload may
+                    // ever be delivered — each delivered frame's payload
+                    // is byte-identical to the one sent in its slot.
+                    if case.checksums {
+                        for (g, w) in got.iter().zip(&case.frames) {
+                            assert_eq!(
+                                g.payload, w.payload,
+                                "corrupted payload delivered despite checksums"
+                            );
+                        }
+                    }
+                }
+            }
+        });
     }
 
     #[test]

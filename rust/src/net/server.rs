@@ -26,8 +26,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::protocol::{
-    BatchScanRequest, BatchScanResponse, FrameReader, Hello, Kind, ReadProgress,
-    ScanRequest, ScanResponse,
+    BatchScanRequest, BatchScanResponse, Frame, FrameReader, Hello, Kind, NodeError,
+    ReadProgress, ScanRequest, ScanResponse, HELLO_CAP_CHECKSUMS,
 };
 use crate::chamvs::backend::{ScanBackend, ScanJob};
 use crate::chamvs::node::MemoryNode;
@@ -136,6 +136,7 @@ fn serve_conn(
         nlist: node.shard.n_lists() as u32,
         shard: node.shard.node_id as u32,
         n_shards: node.shard.n_nodes as u32,
+        flags: HELLO_CAP_CHECKSUMS,
     }
     .encode()
     .write_to(&mut writer)?;
@@ -143,6 +144,9 @@ fn serve_conn(
     // keeps the partial bytes buffered instead of desyncing the stream
     // on a slow coordinator.
     let mut frames = FrameReader::new();
+    // Whether this connection negotiated checksummed framing (set once
+    // the client answers our Hello with the capability flag).
+    let mut checksums = false;
     // Reusable per-connection LUT arena (one (m, 256) table per request
     // of a round; steady state allocates nothing).
     let mut lut_arena: Vec<f32> = Vec::new();
@@ -153,7 +157,10 @@ fn serve_conn(
         let frame = match frames.poll(&mut stream) {
             Ok(ReadProgress::Frame(f)) => f,
             Ok(ReadProgress::Idle) => continue,
-            // Peer closed / protocol error.
+            // Peer closed, or the stream itself is unframeable (bad
+            // magic, oversized length, checksum mismatch): the byte
+            // stream can no longer be trusted — tear down. Malformed
+            // *payloads* inside a good frame are answered below instead.
             Ok(ReadProgress::Closed) | Err(_) => return Ok(()),
         };
         match frame.kind {
@@ -167,23 +174,79 @@ fn serve_conn(
                 // connections and the process exits once this one closes.
                 draining.store(true, Ordering::Relaxed);
             }
-            Kind::ScanRequest => {
-                let req = ScanRequest::decode(&frame)?;
-                let mut resp =
-                    scan_round(node, codebook, nprobe, &[req], &mut lut_arena)?;
-                resp.pop().expect("one response").encode().write_to(&mut writer)?;
+            Kind::Hello => {
+                // Capability answer to our accept-time Hello: a client
+                // that also speaks checksums flips the connection to
+                // checksummed framing in both directions from here on.
+                if let Ok(h) = Hello::decode(&frame) {
+                    if h.wants_checksums() {
+                        checksums = true;
+                        frames.set_checksums(true);
+                    }
+                }
             }
-            Kind::BatchScanRequest => {
-                let req = BatchScanRequest::decode(&frame)?;
-                let items =
-                    scan_round(node, codebook, nprobe, &req.items, &mut lut_arena)?;
-                BatchScanResponse { node_id: node.shard.node_id as u32, items }
-                    .encode()
-                    .write_to(&mut writer)?;
+            Kind::ScanRequest => match ScanRequest::decode(&frame) {
+                Ok(req) => {
+                    let qid = req.query_id;
+                    match scan_round(node, codebook, nprobe, &[req], &mut lut_arena)
+                    {
+                        Ok(mut resp) => send_frame(
+                            &mut writer,
+                            &resp.pop().expect("one response").encode(),
+                            checksums,
+                        )?,
+                        Err(e) => send_error(&mut writer, qid, &e, checksums)?,
+                    }
+                }
+                Err(e) => send_error(&mut writer, 0, &e, checksums)?,
+            },
+            Kind::BatchScanRequest => match BatchScanRequest::decode(&frame) {
+                Ok(req) => {
+                    match scan_round(node, codebook, nprobe, &req.items, &mut lut_arena)
+                    {
+                        Ok(items) => send_frame(
+                            &mut writer,
+                            &BatchScanResponse {
+                                node_id: node.shard.node_id as u32,
+                                items,
+                            }
+                            .encode(),
+                            checksums,
+                        )?,
+                        Err(e) => send_error(&mut writer, 0, &e, checksums)?,
+                    }
+                }
+                Err(e) => send_error(&mut writer, 0, &e, checksums)?,
+            },
+            other => {
+                // Well-framed but nonsensical: answer with an error frame
+                // and keep the connection — the stream is still in sync.
+                let err = anyhow::anyhow!("unexpected frame {other:?} at memory node");
+                send_error(&mut writer, 0, &err, checksums)?;
             }
-            other => anyhow::bail!("unexpected frame {other:?} at memory node"),
         }
     }
+}
+
+/// Write one frame, checksummed if this connection negotiated it.
+fn send_frame(w: &mut TcpStream, frame: &Frame, checksums: bool) -> Result<()> {
+    if checksums {
+        frame.write_to_checksummed(w)
+    } else {
+        frame.write_to(w)
+    }
+}
+
+/// Answer a malformed-but-framed request with a [`NodeError`] frame: the
+/// coordinator learns the query failed, the connection stays alive.
+fn send_error(
+    w: &mut TcpStream,
+    query_id: u64,
+    err: &anyhow::Error,
+    checksums: bool,
+) -> Result<()> {
+    let f = NodeError { query_id, message: format!("{err:#}") }.encode();
+    send_frame(w, &f, checksums)
 }
 
 /// Execute one round of scan requests through the node's [`ScanBackend`]

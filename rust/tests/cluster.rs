@@ -10,8 +10,9 @@ use chameleon::chamvs::dispatcher::{BatchQuery, Dispatcher};
 use chameleon::chamvs::node::{MemoryNode, ScanEngine};
 use chameleon::chamvs::ScanBackend;
 use chameleon::cluster::{
-    ClusterConfig, ClusterEngine, ClusterMap, ClusterNode, FailingBackend, HedgeConfig,
-    SelectPolicy, StragglerBackend,
+    ClusterConfig, ClusterEngine, ClusterMap, ClusterNode, DegradedPolicy,
+    FailingBackend, HedgeConfig, OutageBackend, RoundOptions, SelectPolicy,
+    StragglerBackend,
 };
 use chameleon::config;
 use chameleon::coordinator::retriever::Retriever;
@@ -136,6 +137,98 @@ fn killing_any_single_node_is_invisible_at_replication_2() {
             );
         }
     }
+}
+
+/// ISSUE 9 acceptance: with BOTH of shard 0's replicas dead mid-workload
+/// under `DegradedPolicy::ServePartial`, every query still answers —
+/// tagged `coverage < 1.0`, zero hard failures — and once the replicas
+/// heal and pass half-open probation, top-k returns to bit-identical
+/// with the no-fault flat reference.
+#[test]
+fn dark_shard_serves_partials_then_rejoins_bit_identical() {
+    let (idx, d) = toy_index(7);
+    let (n_nodes, replication, k) = (4usize, 2usize, 10usize);
+    let n_shards = n_nodes / replication;
+    let mut flat = flat_reference(&idx, n_shards, k);
+    let mut rng = Rng::new(17);
+    let q = rng.normal_vec(d);
+    let lists = idx.probe(&q, 8);
+    let want = flat.search(&q, &idx.pq.centroids, &lists, 8).unwrap().topk;
+
+    // Outage windows are per-node *call* counts: the static primary
+    // (node 0) serves two healthy scans then dies; its replica (node 2)
+    // is dead from its very first scan — so from query 2 on, shard 0 has
+    // no healthy replica until both outages end and probation readmits
+    // them. Shard 1 stays healthy throughout.
+    let plan = ClusterMap::carve_plan(n_nodes, replication).unwrap();
+    let nodes: Vec<ClusterNode> = plan
+        .into_iter()
+        .map(|(id, shard)| {
+            let backend = mk_node(&idx, shard, n_shards, k);
+            let backend = match id {
+                0 => Box::new(OutageBackend::new(backend, 2, 4)) as Box<dyn ScanBackend>,
+                2 => Box::new(OutageBackend::new(backend, 0, 2)) as Box<dyn ScanBackend>,
+                _ => backend,
+            };
+            ClusterNode { id, shard, backend }
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        select: SelectPolicy::Static,
+        breaker_threshold: 1,
+        ..Default::default()
+    };
+    let mut engine = ClusterEngine::new(nodes, n_shards, cfg).unwrap();
+    engine.health_mut().breaker_backoff = Duration::from_millis(5);
+    let mut disp = Dispatcher::clustered(engine, k);
+    let opts = RoundOptions {
+        degraded: DegradedPolicy::ServePartial { min_coverage: 0.0 },
+        ..Default::default()
+    };
+
+    // Healthy phase: shard 0's primary serves its two good scans.
+    for _ in 0..2 {
+        let got = disp
+            .search_opts(&q, &idx.pq.centroids, &lists, 8, 0, &opts)
+            .expect("healthy phase must not fail");
+        assert!(!got.is_partial(), "healthy phase must be complete");
+        assert_eq!(got.topk, want);
+    }
+
+    // Dark phase: keep querying until probation readmits a healed
+    // replica and a complete round comes back. Every answer in between
+    // must be a coverage-tagged partial — never a hard failure.
+    let mut partials = 0usize;
+    let mut recovered = false;
+    for _ in 0..200 {
+        let got = disp
+            .search_opts(&q, &idx.pq.centroids, &lists, 8, 0, &opts)
+            .expect("ServePartial must absorb the dark shard");
+        if got.is_partial() {
+            assert!(
+                (got.coverage() - 0.5).abs() < 1e-9,
+                "one of two shards answered: coverage must be 1/2"
+            );
+            partials += 1;
+            std::thread::sleep(Duration::from_millis(10));
+        } else {
+            assert_eq!(got.topk, want, "post-rejoin top-k must be bit-identical");
+            recovered = true;
+            break;
+        }
+    }
+    assert!(partials >= 1, "the dark window must have produced partials");
+    assert!(recovered, "probation never readmitted the healed replicas");
+
+    // Steady state after rejoin: complete and bit-identical again, the
+    // probe(s) that readmitted the nodes matched the winner exactly.
+    let got = disp.search_opts(&q, &idx.pq.centroids, &lists, 8, 0, &opts).unwrap();
+    assert!(!got.is_partial());
+    assert_eq!(got.topk, want);
+    let stats = disp.cluster().unwrap().stats();
+    assert!(stats.probes >= 1, "rejoin must go through half-open probation: {stats:?}");
+    assert_eq!(stats.probe_mismatches, 0, "probes over identical carves match");
+    assert!(stats.partial_rounds as usize >= partials);
 }
 
 #[test]

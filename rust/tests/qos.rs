@@ -70,6 +70,7 @@ fn dribble_roundtrip(addr: std::net::SocketAddr, seed: u64) {
         lists: vec![],
         k: 10,
         want_chunks: false,
+        deadline_us: 0,
     }
     .encode()
     .to_bytes();
@@ -103,6 +104,7 @@ fn dribble_roundtrip(addr: std::net::SocketAddr, seed: u64) {
         lists: vec![],
         k: 10,
         want_chunks: false,
+        deadline_us: 0,
     }
     .encode()
     .write_to(&mut stream)
@@ -194,6 +196,7 @@ fn flooding_batch_tenant_cannot_starve_interactive() {
                     lists: vec![],
                     k: 10,
                     want_chunks: false,
+                    deadline_us: 0,
                 }
                 .encode()
                 .write_to(&mut stream)
