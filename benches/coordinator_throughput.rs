@@ -22,8 +22,17 @@
 //! resident memory unboundedly. The thread-per-connection mode runs the
 //! small points as the A/B baseline.
 //!
+//! Fourth bar: the live telemetry plane must be effectively free. The
+//! same workload runs with the full plane on (SLO burn tracking,
+//! per-tenant windowed histograms, tail sampling) AND a scraper thread
+//! hammering the Prometheus listener the whole run, vs
+//! `Telemetry::off()`; best-of-3 q/s with telemetry on must stay within
+//! 3% of best-of-3 with it off.
+//!
 //! Run: `cargo bench --bench coordinator_throughput`
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use chameleon::chamvs::dispatcher::Dispatcher;
@@ -32,10 +41,12 @@ use chameleon::config;
 use chameleon::coordinator::batcher::BatchPolicy;
 use chameleon::coordinator::retriever::Retriever;
 use chameleon::coordinator::server::{CoordinatorClient, CoordinatorServer, ServeMode};
+use chameleon::coordinator::{QosConfig, SloObjective};
 use chameleon::data::corpus::Corpus;
 use chameleon::data::synthetic::SyntheticDataset;
 use chameleon::ivf::index::IvfPqIndex;
 use chameleon::ivf::shard::Shard;
+use chameleon::telemetry::{MetricsServer, Telemetry};
 use chameleon::trace::{SpanKind, Tracer};
 
 const CLIENTS: usize = 4;
@@ -95,6 +106,90 @@ fn run_traced(mode: ServeMode, per_client: usize, tracer: Tracer) -> (f64, u64, 
     );
     server.shutdown();
     out
+}
+
+/// q/s for one telemetry-overhead arm. With `on` the server runs the
+/// full plane — SLO objectives on both QoS classes (burn tracking,
+/// per-tenant windowed histograms, tail sampling) — plus a Prometheus
+/// listener with a scraper thread hammering it for the whole run. With
+/// `!on` the plane is [`Telemetry::off`], so per-request observation is
+/// a branch-and-return.
+fn run_telemetry_arm(policy: BatchPolicy, on: bool) -> f64 {
+    let retriever = build_retriever(7);
+    let mode = ServeMode::Concurrent(policy);
+    let mut server = if on {
+        let qos = QosConfig {
+            slo_interactive: Some(SloObjective::default()),
+            slo_batch: Some(SloObjective::default()),
+            ..QosConfig::default()
+        };
+        CoordinatorServer::spawn_qos(move || retriever, mode, qos, Tracer::off()).unwrap()
+    } else {
+        CoordinatorServer::spawn_telemetry(
+            move || retriever,
+            mode,
+            QosConfig::default(),
+            Tracer::off(),
+            Telemetry::off(),
+        )
+        .unwrap()
+    };
+    let addr = server.addr;
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut metrics = None;
+    let mut scraper = None;
+    if on {
+        let m = MetricsServer::spawn("127.0.0.1:0", server.telemetry()).unwrap();
+        let maddr = m.addr;
+        metrics = Some(m);
+        let stop2 = Arc::clone(&stop);
+        scraper = Some(std::thread::spawn(move || {
+            use std::io::{Read, Write};
+            let mut scrapes = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                if let Ok(mut s) = std::net::TcpStream::connect(maddr) {
+                    let mut body = String::new();
+                    if s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").is_ok()
+                        && s.read_to_string(&mut body).is_ok()
+                        && body.contains("coordinator_requests")
+                    {
+                        scrapes += 1;
+                    }
+                }
+            }
+            scrapes
+        }));
+    }
+    let qdata = SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        64,
+        64,
+        9,
+    );
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let qdata = &qdata;
+            s.spawn(move || {
+                let mut client = CoordinatorClient::connect(addr, c as u32).unwrap();
+                for i in 0..PER_CLIENT {
+                    let q = qdata.query((c * 13 + i) % qdata.n_queries);
+                    client.retrieve(q, &[], K, false).unwrap();
+                }
+            });
+        }
+    });
+    let qps = (CLIENTS * PER_CLIENT) as f64 / t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = scraper {
+        let scrapes = h.join().unwrap();
+        assert!(scrapes > 0, "scraper never completed a scrape during the run");
+    }
+    if let Some(m) = metrics.as_mut() {
+        m.shutdown();
+    }
+    server.shutdown();
+    qps
 }
 
 /// Read an integer field from /proc/self/status (`Threads`, `VmRSS` in
@@ -289,6 +384,21 @@ fn main() {
         ratio >= 0.95,
         "tracing overhead too high: traced {traced:.0} q/s vs untraced \
          {untraced:.0} q/s ({ratio:.3}x < 0.95x)"
+    );
+
+    // Telemetry-overhead A/B: full plane plus a live scraper vs the
+    // disabled plane, best-of-3 each arm.
+    let telem_off = best(&|| run_telemetry_arm(policy, false));
+    let telem_on = best(&|| run_telemetry_arm(policy, true));
+    let telem_ratio = telem_on / telem_off;
+    println!(
+        "  telemetry  : {telem_on:>8.0} q/s on vs {telem_off:>8.0} q/s off \
+         ({telem_ratio:.3}x, scraper live, bar: >= 0.97x)"
+    );
+    assert!(
+        telem_ratio >= 0.97,
+        "telemetry overhead too high: {telem_on:.0} q/s on vs {telem_off:.0} q/s \
+         off ({telem_ratio:.3}x < 0.97x)"
     );
 
     conn_sweep(policy);

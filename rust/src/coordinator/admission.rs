@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::cluster::engine::DegradedPolicy;
+use crate::telemetry::SloObjective;
 
 /// Tenant ids at or above this are batch-class (the `loadgen` convention:
 /// interactive connection c sends gpu_id = c, batch sends 1000 + c).
@@ -115,6 +116,18 @@ pub struct QosConfig {
     /// connection is dropped; `ServePartial` serves coverage-tagged
     /// partial results when replicas are dark or the deadline expires.
     pub degraded: DegradedPolicy,
+    /// Latency/availability objective for interactive-class tenants;
+    /// `None` (the default) records latency histograms but no burn
+    /// rates.
+    pub slo_interactive: Option<SloObjective>,
+    /// Objective for batch-class tenants.
+    pub slo_batch: Option<SloObjective>,
+    /// When true, `StatsRequest` is honored only on the server's first
+    /// accepted connection (the `admin_shutdown_only` gate, applied to
+    /// the read-only stats plane). Off by default: stats expose no
+    /// tenant payload data and `chameleon top` dials in as an ordinary
+    /// connection.
+    pub stats_admin_only: bool,
 }
 
 impl Default for QosConfig {
@@ -128,6 +141,9 @@ impl Default for QosConfig {
             poll_threads: 2,
             admin_shutdown_only: true,
             degraded: DegradedPolicy::FailFast,
+            slo_interactive: None,
+            slo_batch: None,
+            stats_admin_only: false,
         }
     }
 }
@@ -253,6 +269,16 @@ impl Admission {
         if let Some(st) = self.tenants.get_mut(&tenant) {
             st.queued = st.queued.saturating_sub(1);
         }
+    }
+
+    /// Current per-tenant charged depth, sorted by tenant id — the
+    /// telemetry plane mirrors these into `admission.queued{tenant}`
+    /// gauges on every scrape-visible update.
+    pub fn depths(&self) -> Vec<(u32, usize)> {
+        let mut v: Vec<(u32, usize)> =
+            self.tenants.iter().map(|(t, st)| (*t, st.queued)).collect();
+        v.sort_unstable();
+        v
     }
 }
 

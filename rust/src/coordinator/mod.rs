@@ -11,6 +11,7 @@ pub mod retriever;
 pub mod server;
 
 pub use admission::{Admission, QosClass, QosConfig, ShedReason, TenantPolicy};
+pub use crate::telemetry::SloObjective;
 pub use batcher::{BatchPolicy, ClassedBatcher, DynamicBatcher, PrefetchTracker};
 pub use engine::RalmEngine;
 pub use retriever::{CachedRetrieval, RetrievalResult, Retriever};

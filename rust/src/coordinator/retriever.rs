@@ -184,6 +184,16 @@ impl Retriever {
         self.rstats.export(m, self.cache.as_ref(), self.spec.as_ref());
     }
 
+    /// Mirror the retcache counters into the live telemetry registry as
+    /// absolute gauges (repeat-safe; called after every served batch).
+    /// No-op when the retcache path is disabled.
+    pub fn export_telemetry(&self, reg: &crate::telemetry::Registry) {
+        if self.retcache_enabled() {
+            self.rstats
+                .export_telemetry(reg, self.cache.as_ref(), self.spec.as_ref());
+        }
+    }
+
     /// The decode window a speculative prefetch may overlap with:
     /// `interval * speculation_depth` decode steps.
     pub fn overlap_window_s(&self, decode_s: f64, interval: usize) -> f64 {

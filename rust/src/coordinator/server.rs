@@ -57,10 +57,13 @@ use crate::coordinator::retriever::{RetrievalResult, Retriever};
 use crate::net::client::RemoteNode;
 use crate::net::protocol::{
     Backpressure, ClusterAck, ClusterOp, ClusterUpdate, Frame, FrameReader, Kind,
-    ReadProgress, RetrieveRequest, RetrieveResponse,
+    ReadProgress, RetrieveRequest, RetrieveResponse, StatsRequest, StatsResponse,
+    STATS_REVISION,
 };
 use crate::retcache::RetrievalSource;
+use crate::telemetry::{Counter, Gauge, Outcome, Registry, Telemetry, TelemetryConfig};
 use crate::trace::{SpanKind, Tracer};
+use crate::util::json::{obj, Json};
 use crate::util::metrics::Metrics;
 use crate::util::poll::{raw_fd, wait_readable, wait_writable};
 
@@ -89,92 +92,238 @@ pub enum ServeMode {
     Concurrent(BatchPolicy),
 }
 
-/// Serving counters, observable while the server runs (atomics shared via
-/// [`CoordinatorServer::stats`]). `max_batch >= 2` is the "batching
-/// actually happened" witness the integration tests assert on.
-#[derive(Debug, Default)]
+/// Serving counters, observable while the server runs (registry-backed
+/// handles shared via [`CoordinatorServer::stats`]). `max_batch >= 2` is
+/// the "batching actually happened" witness the integration tests assert
+/// on.
+///
+/// Every counter lives in the server's telemetry [`Registry`] under a
+/// stable dotted name (see `telemetry` module docs), so mid-run scrapes
+/// see exactly what these getters see — the shutdown-time print is no
+/// longer the only window. [`snapshot`](Self::snapshot) reads all of
+/// them tear-free.
+#[derive(Debug)]
 pub struct ServerStats {
-    requests: AtomicU64,
-    rounds: AtomicU64,
-    batches_ge2: AtomicU64,
-    max_batch: AtomicU64,
-    teardowns: AtomicU64,
-    accept_drops: AtomicU64,
-    nodelay_fallbacks: AtomicU64,
-    shed: AtomicU64,
-    shutdown_denied: AtomicU64,
-    deadline_shed: AtomicU64,
-    partial: AtomicU64,
+    requests: Arc<Counter>,
+    rounds: Arc<Counter>,
+    batches_ge2: Arc<Counter>,
+    max_batch: Arc<Gauge>,
+    teardowns: Arc<Counter>,
+    accept_drops: Arc<Counter>,
+    nodelay_fallbacks: Arc<Counter>,
+    shed: Arc<Counter>,
+    shutdown_denied: Arc<Counter>,
+    deadline_shed: Arc<Counter>,
+    partial: Arc<Counter>,
+    received: Arc<Counter>,
+    replies: Arc<Counter>,
+    backpressure: Arc<Counter>,
+    stats_denied: Arc<Counter>,
+    /// Shed-reason split, indexed by `ShedReason::code() - 1`.
+    shed_reasons: [Arc<Counter>; 3],
+}
+
+/// One tear-free copy of every serving counter: [`ServerStats::snapshot`]
+/// re-reads until two consecutive passes agree, so related counters
+/// (`received` vs `replies` vs `shed`) come from one consistent cut
+/// instead of a field-by-field race.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub rounds: u64,
+    pub batches_ge2: u64,
+    pub max_batch: u64,
+    pub teardowns: u64,
+    pub accept_drops: u64,
+    pub nodelay_fallbacks: u64,
+    pub shed: u64,
+    pub shutdown_denied: u64,
+    pub deadline_shed: u64,
+    pub partial: u64,
+    pub received: u64,
+    pub replies: u64,
+    pub backpressure: u64,
+    pub stats_denied: u64,
+    pub shed_queue_full: u64,
+    pub shed_rate_limited: u64,
+    pub shed_deadline: u64,
 }
 
 impl ServerStats {
-    fn record_round(&self, batch: u64) {
-        self.requests.fetch_add(batch, Ordering::Relaxed);
-        self.rounds.fetch_add(1, Ordering::Relaxed);
-        self.max_batch.fetch_max(batch, Ordering::Relaxed);
-        if batch >= 2 {
-            self.batches_ge2.fetch_add(1, Ordering::Relaxed);
+    /// Register the serving counters in `reg` under their stable names.
+    pub fn new(reg: &Registry) -> ServerStats {
+        ServerStats {
+            requests: reg.counter("coordinator.requests"),
+            rounds: reg.counter("coordinator.rounds"),
+            batches_ge2: reg.counter("coordinator.batches_ge2"),
+            max_batch: reg.gauge("coordinator.max_batch"),
+            teardowns: reg.counter("coordinator.teardowns"),
+            accept_drops: reg.counter("coordinator.accept_drops"),
+            nodelay_fallbacks: reg.counter("coordinator.nodelay_fallbacks"),
+            shed: reg.counter("coordinator.shed"),
+            shutdown_denied: reg.counter("coordinator.shutdown_denied"),
+            deadline_shed: reg.counter("coordinator.deadline_shed"),
+            partial: reg.counter("coordinator.replies.partial"),
+            received: reg.counter("coordinator.requests.received"),
+            replies: reg.counter("coordinator.replies"),
+            backpressure: reg.counter("coordinator.backpressure_frames"),
+            stats_denied: reg.counter("coordinator.stats_denied"),
+            shed_reasons: [
+                reg.counter_with("coordinator.shed_reason", &[("reason", "queue_full")]),
+                reg.counter_with("coordinator.shed_reason", &[("reason", "rate_limited")]),
+                reg.counter_with(
+                    "coordinator.shed_reason",
+                    &[("reason", "deadline_expired")],
+                ),
+            ],
         }
+    }
+
+    fn record_round(&self, batch: u64) {
+        self.requests.add(batch);
+        self.rounds.inc();
+        self.max_batch.set_max(batch);
+        if batch >= 2 {
+            self.batches_ge2.inc();
+        }
+    }
+
+    /// Count one shed under its wire reason code (see
+    /// [`ShedReason::code`]); unknown codes land on the deadline bucket
+    /// (code 3 is the current max).
+    fn record_shed_reason(&self, code: u32) {
+        let idx = (code.clamp(1, 3) - 1) as usize;
+        self.shed_reasons[idx].inc();
+    }
+
+    fn read_once(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.requests.get(),
+            rounds: self.rounds.get(),
+            batches_ge2: self.batches_ge2.get(),
+            max_batch: self.max_batch.get(),
+            teardowns: self.teardowns.get(),
+            accept_drops: self.accept_drops.get(),
+            nodelay_fallbacks: self.nodelay_fallbacks.get(),
+            shed: self.shed.get(),
+            shutdown_denied: self.shutdown_denied.get(),
+            deadline_shed: self.deadline_shed.get(),
+            partial: self.partial.get(),
+            received: self.received.get(),
+            replies: self.replies.get(),
+            backpressure: self.backpressure.get(),
+            stats_denied: self.stats_denied.get(),
+            shed_queue_full: self.shed_reasons[0].get(),
+            shed_rate_limited: self.shed_reasons[1].get(),
+            shed_deadline: self.shed_reasons[2].get(),
+        }
+    }
+
+    /// Tear-free snapshot: loop until two consecutive whole-struct reads
+    /// agree (bounded retries; under a write storm the last read wins,
+    /// which is still a point-in-time cut no worse than one pass).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut prev = self.read_once();
+        for _ in 0..16 {
+            let cur = self.read_once();
+            if cur == prev {
+                return cur;
+            }
+            prev = cur;
+        }
+        prev
     }
 
     /// Requests served.
     pub fn requests(&self) -> u64 {
-        self.requests.load(Ordering::Relaxed)
+        self.requests.get()
     }
 
     /// Dispatch rounds run (== requests in sequential mode).
     pub fn rounds(&self) -> u64 {
-        self.rounds.load(Ordering::Relaxed)
+        self.rounds.get()
     }
 
     /// Rounds that carried at least two requests.
     pub fn batches_ge2(&self) -> u64 {
-        self.batches_ge2.load(Ordering::Relaxed)
+        self.batches_ge2.get()
     }
 
     /// Largest dispatched batch.
     pub fn max_batch(&self) -> u64 {
-        self.max_batch.load(Ordering::Relaxed)
+        self.max_batch.get()
     }
 
     /// Connection teardowns processed (speculation-slot hygiene ran).
     pub fn teardowns(&self) -> u64 {
-        self.teardowns.load(Ordering::Relaxed)
+        self.teardowns.get()
     }
 
     /// Connections dropped at accept because their socket could not be
     /// set up (e.g. `try_clone` failed) — closed explicitly, not leaked.
     pub fn accept_drops(&self) -> u64 {
-        self.accept_drops.load(Ordering::Relaxed)
+        self.accept_drops.get()
     }
 
     /// Connections served *without* TCP_NODELAY because setting it
     /// failed (previously such connections were silently dropped).
     pub fn nodelay_fallbacks(&self) -> u64 {
-        self.nodelay_fallbacks.load(Ordering::Relaxed)
+        self.nodelay_fallbacks.get()
     }
 
     /// Requests refused by admission control (a `Backpressure` frame was
     /// sent instead of a retrieval reply).
     pub fn shed(&self) -> u64 {
-        self.shed.load(Ordering::Relaxed)
+        self.shed.get()
     }
 
     /// `Shutdown` frames ignored because they came from a non-admin
     /// connection.
     pub fn shutdown_denied(&self) -> u64 {
-        self.shutdown_denied.load(Ordering::Relaxed)
+        self.shutdown_denied.get()
     }
 
     /// Requests shed because their end-to-end deadline expired while
     /// they waited in the server queue (a subset of [`shed`](Self::shed)).
     pub fn deadline_shed(&self) -> u64 {
-        self.deadline_shed.load(Ordering::Relaxed)
+        self.deadline_shed.get()
     }
 
     /// Replies served with coverage below 1.0 (degraded partial results).
     pub fn partial(&self) -> u64 {
-        self.partial.load(Ordering::Relaxed)
+        self.partial.get()
+    }
+
+    /// Well-formed `RetrieveRequest`s decoded (admitted or shed).
+    pub fn received(&self) -> u64 {
+        self.received.get()
+    }
+
+    /// Retrieval replies written (complete + partial). Conservation:
+    /// `received == replies + shed + in-flight` at any instant, with
+    /// in-flight = 0 once the server quiesces.
+    pub fn replies(&self) -> u64 {
+        self.replies.get()
+    }
+
+    /// `Backpressure` frames produced (== [`shed`](Self::shed) — pinned
+    /// by the CI scrape check).
+    pub fn backpressure_frames(&self) -> u64 {
+        self.backpressure.get()
+    }
+
+    /// `StatsRequest` frames refused by the admin gate.
+    pub fn stats_denied(&self) -> u64 {
+        self.stats_denied.get()
+    }
+}
+
+impl Default for ServerStats {
+    /// Stand-alone stats backed by a private registry (tests construct
+    /// these; servers use [`ServerStats::new`] with their telemetry
+    /// registry so scrapes see the counters).
+    fn default() -> Self {
+        ServerStats::new(&Registry::default())
     }
 }
 
@@ -220,6 +369,11 @@ struct Shared {
     injected: Mutex<Vec<(u64, TcpStream)>>,
     stop: AtomicBool,
     stats: Arc<ServerStats>,
+    /// The live telemetry plane: metrics registry, per-tenant SLO burn
+    /// tracking, tail sampler. `Telemetry::off()` short-circuits every
+    /// observation (the A/B baseline); see
+    /// [`CoordinatorServer::spawn_telemetry`].
+    telemetry: Arc<Telemetry>,
     /// Span sink shared by the readers (trace-id allocation) and the
     /// dispatch loop (queue-wait/reply-write/total spans). Off by
     /// default; see [`CoordinatorServer::spawn_traced`].
@@ -294,6 +448,27 @@ impl CoordinatorServer {
         qos: QosConfig,
         tracer: Tracer,
     ) -> Result<CoordinatorServer> {
+        let telemetry = Telemetry::new(TelemetryConfig {
+            slo_interactive: qos.slo_interactive,
+            slo_batch: qos.slo_batch,
+            ..TelemetryConfig::default()
+        });
+        Self::spawn_telemetry(builder, mode, qos, tracer, telemetry)
+    }
+
+    /// [`spawn_qos`](Self::spawn_qos) with an explicit telemetry plane.
+    /// Pass [`Telemetry::off`] to measure the plane's overhead (the
+    /// serving counters keep working either way — they are plain
+    /// registry handles); anything else makes every counter, per-tenant
+    /// histogram, burn rate and tail sample live-scrapeable via
+    /// `StatsRequest` frames or a [`crate::telemetry::MetricsServer`].
+    pub fn spawn_telemetry(
+        builder: impl FnOnce() -> Retriever + Send + 'static,
+        mode: ServeMode,
+        qos: QosConfig,
+        tracer: Tracer,
+        telemetry: Arc<Telemetry>,
+    ) -> Result<CoordinatorServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let policy = match mode {
@@ -310,7 +485,8 @@ impl CoordinatorServer {
             writers: Mutex::new(HashMap::new()),
             injected: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
-            stats: Arc::new(ServerStats::default()),
+            stats: Arc::new(ServerStats::new(telemetry.registry())),
+            telemetry,
             tracer,
             next_trace: AtomicU64::new(1),
         });
@@ -356,6 +532,14 @@ impl CoordinatorServer {
     /// Live serving counters (shared handle; stays valid after shutdown).
     pub fn stats(&self) -> Arc<ServerStats> {
         self.shared.stats.clone()
+    }
+
+    /// The server's telemetry plane (registry + SLO tracking + tail
+    /// sampler). Hand it to a [`crate::telemetry::MetricsServer`] to
+    /// expose a Prometheus-text scrape endpoint alongside the protocol's
+    /// `StatsRequest` path.
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.shared.telemetry.clone()
     }
 
     pub fn shutdown(&mut self) {
@@ -458,7 +642,7 @@ fn serve_sequential(
                     retriever.cancel_slot_speculation(slot);
                 }
                 prefetch.reset();
-                shared.stats.teardowns.fetch_add(1, Ordering::Relaxed);
+                shared.stats.teardowns.inc();
                 if shared.stop.load(Ordering::Relaxed) {
                     break;
                 }
@@ -483,7 +667,7 @@ fn serve_gpu(
     shared: &Shared,
 ) -> Result<()> {
     if stream.set_nodelay(true).is_err() {
-        shared.stats.nodelay_fallbacks.fetch_add(1, Ordering::Relaxed);
+        shared.stats.nodelay_fallbacks.inc();
     }
     stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
@@ -514,6 +698,7 @@ fn serve_gpu(
                 );
                 metrics.incr("retrieve_requests", 1);
                 metrics.incr(&format!("gpu_{}_requests", req.gpu_id), 1);
+                shared.stats.received.inc();
                 shared.stats.record_round(1);
                 // Retcache path: each GPU source owns its own speculation
                 // slot, so interleaved sources no longer cancel each
@@ -551,8 +736,9 @@ fn serve_gpu(
                 } else {
                     retriever.gather_next_tokens(&r.ids)
                 };
-                if r.is_partial() {
-                    shared.stats.partial.fetch_add(1, Ordering::Relaxed);
+                let partial = r.is_partial();
+                if partial {
+                    shared.stats.partial.inc();
                 }
                 let resp = RetrieveResponse {
                     query_id: req.query_id,
@@ -563,6 +749,13 @@ fn serve_gpu(
                 };
                 let t_write = Instant::now();
                 resp.encode().write_to(&mut writer)?;
+                shared.stats.replies.inc();
+                shared.telemetry.observe(
+                    req.gpu_id,
+                    arrived.elapsed().as_micros() as u64,
+                    if partial { Outcome::Partial } else { Outcome::Complete },
+                    trace_id,
+                );
                 if trace_id != 0 {
                     // Sequential mode has no batching queue: the request
                     // is served the moment it is decoded.
@@ -588,6 +781,16 @@ fn serve_gpu(
                 let ack = apply_cluster_update(retriever, &update);
                 ack.encode().write_to(&mut writer)?;
             }
+            Kind::StatsRequest => {
+                let req = StatsRequest::decode(&frame)?;
+                // Refresh the pull-model gauges (cluster, retcache,
+                // admission depths) so the scrape sees the live values.
+                export_side_stats(retriever, shared);
+                // Sequential mode serves one connection at a time; it is
+                // by definition the first (admin) connection.
+                let resp = stats_response_frame(0, &req, shared);
+                resp.write_to(&mut writer)?;
+            }
             other => anyhow::bail!("unexpected frame {other:?} at coordinator"),
         }
     }
@@ -611,7 +814,7 @@ fn accept_loop(listener: TcpListener, addr: SocketAddr, shared: &Arc<Shared>, ev
                 // Best effort: a connection that can't get TCP_NODELAY is
                 // served anyway (it only costs latency), and counted.
                 if stream.set_nodelay(true).is_err() {
-                    shared.stats.nodelay_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.nodelay_fallbacks.inc();
                 }
                 let writer = match stream.try_clone() {
                     Ok(w) => w,
@@ -619,12 +822,12 @@ fn accept_loop(listener: TcpListener, addr: SocketAddr, shared: &Arc<Shared>, ev
                         // Can't build a reply route: close the socket
                         // explicitly (dropping it here) so the peer sees
                         // a reset instead of a half-open black hole.
-                        shared.stats.accept_drops.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.accept_drops.inc();
                         continue;
                     }
                 };
                 if event_loop && stream.set_nonblocking(true).is_err() {
-                    shared.stats.accept_drops.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.accept_drops.inc();
                     continue;
                 }
                 let conn_id = next_conn;
@@ -666,7 +869,7 @@ fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) 
             // server for everyone; other tenants' shutdowns are counted
             // and ignored.
             if shared.qos.admin_shutdown_only && conn_id != 0 {
-                shared.stats.shutdown_denied.fetch_add(1, Ordering::Relaxed);
+                shared.stats.shutdown_denied.inc();
                 return FrameOutcome::Continue;
             }
             shared.stop.store(true, Ordering::Relaxed);
@@ -678,6 +881,7 @@ fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) 
         Kind::RetrieveRequest => match RetrieveRequest::decode(frame) {
             Ok(req) => {
                 let tenant = req.gpu_id;
+                shared.stats.received.inc();
                 let verdict = shared.admission.lock().unwrap().admit(tenant, Instant::now());
                 match verdict {
                     Ok(()) => {
@@ -706,7 +910,9 @@ fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) 
                         // queueing unboundedly or going silent. Written
                         // at admission time, so it can overtake earlier
                         // retrieval replies — clients match by query_id.
-                        shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.shed.inc();
+                        shared.stats.record_shed_reason(shed.reason.code());
+                        shared.telemetry.observe(tenant, 0, Outcome::Shed, 0);
                         let bp = Backpressure {
                             query_id: req.query_id,
                             tenant,
@@ -716,6 +922,10 @@ fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) 
                         };
                         let mut writers = shared.writers.lock().unwrap();
                         if let Some(stream) = writers.get_mut(&conn_id) {
+                            // Counted adjacent to the write so the
+                            // scrape-side invariant `sheds ==
+                            // backpressure_frames` holds exactly.
+                            shared.stats.backpressure.inc();
                             if write_frame_bounded(stream, &bp.encode(), WRITE_LIMIT).is_err() {
                                 let _ = stream.shutdown(std::net::Shutdown::Both);
                                 writers.remove(&conn_id);
@@ -732,6 +942,25 @@ fn handle_frame(conn_id: u64, frame: &Frame, addr: SocketAddr, shared: &Shared) 
             Ok(update) => {
                 shared.cluster_ops.lock().unwrap().push((conn_id, update));
                 shared.cv.notify_all();
+                FrameOutcome::Continue
+            }
+            Err(_) => FrameOutcome::Close,
+        },
+        Kind::StatsRequest => match StatsRequest::decode(frame) {
+            Ok(req) => {
+                // Served inline on the reader/poll thread: the snapshot
+                // only reads registry handles, never the retriever, so a
+                // scrape cannot stall the dispatch loop. Cluster/retcache
+                // gauges are as fresh as the last served batch.
+                let resp = stats_response_frame(conn_id, &req, shared);
+                let mut writers = shared.writers.lock().unwrap();
+                if let Some(stream) = writers.get_mut(&conn_id) {
+                    if write_frame_bounded(stream, &resp, WRITE_LIMIT).is_err() {
+                        let _ = stream.shutdown(std::net::Shutdown::Both);
+                        writers.remove(&conn_id);
+                        return FrameOutcome::Close;
+                    }
+                }
                 FrameOutcome::Continue
             }
             Err(_) => FrameOutcome::Close,
@@ -927,7 +1156,7 @@ fn dispatch_loop(builder: impl FnOnce() -> Retriever, shared: &Shared) {
                             }
                         }
                     }
-                    shared.stats.teardowns.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.teardowns.inc();
                 }
             }
             Step::Batch(batch) => {
@@ -935,9 +1164,15 @@ fn dispatch_loop(builder: impl FnOnce() -> Retriever, shared: &Shared) {
                     continue;
                 }
                 serve_batch(&batch, &mut retriever, &metrics, shared, &mut trackers);
+                // Refresh the pull-model gauges (cluster round counters,
+                // retcache hit rates, admission queue depths) after every
+                // served batch so a mid-run scrape is at most one batch
+                // stale.
+                export_side_stats(&retriever, shared);
             }
         }
     }
+    export_side_stats(&retriever, shared);
     if retriever.retcache_enabled() {
         retriever.export_metrics(&metrics);
     }
@@ -986,8 +1221,15 @@ fn serve_batch(
         .into_iter()
         .partition(|p| p.payload.deadline.map_or(true, |dl| now < dl));
     for p in expired {
-        shared.stats.shed.fetch_add(1, Ordering::Relaxed);
-        shared.stats.deadline_shed.fetch_add(1, Ordering::Relaxed);
+        shared.stats.shed.inc();
+        shared.stats.deadline_shed.inc();
+        shared.stats.record_shed_reason(ShedReason::DeadlineExpired.code());
+        shared.telemetry.observe(
+            p.payload.gpu_id,
+            p.payload.arrived.elapsed().as_micros() as u64,
+            Outcome::Shed,
+            p.payload.trace_id,
+        );
         let bp = Backpressure {
             query_id: p.payload.query_id,
             tenant: p.payload.gpu_id,
@@ -998,6 +1240,9 @@ fn serve_batch(
         };
         let mut writers = shared.writers.lock().unwrap();
         if let Some(stream) = writers.get_mut(&p.payload.conn_id) {
+            // Adjacent to the frame write: sheds with a live reply route
+            // always produce exactly one Backpressure frame.
+            shared.stats.backpressure.inc();
             if write_frame_bounded(stream, &bp.encode(), WRITE_LIMIT).is_err() {
                 let _ = stream.shutdown(std::net::Shutdown::Both);
                 writers.remove(&p.payload.conn_id);
@@ -1116,8 +1361,9 @@ fn serve_batch(
                 } else {
                     retriever.gather_next_tokens(&r.ids)
                 };
-                if r.is_partial() {
-                    shared.stats.partial.fetch_add(1, Ordering::Relaxed);
+                let partial = r.is_partial();
+                if partial {
+                    shared.stats.partial.inc();
                 }
                 let resp = RetrieveResponse {
                     query_id: p.payload.query_id,
@@ -1137,6 +1383,13 @@ fn serve_batch(
                     }
                 }
                 drop(writers);
+                shared.stats.replies.inc();
+                shared.telemetry.observe(
+                    p.payload.gpu_id,
+                    p.payload.arrived.elapsed().as_micros() as u64,
+                    if partial { Outcome::Partial } else { Outcome::Complete },
+                    p.payload.trace_id,
+                );
                 if p.payload.trace_id != 0 {
                     shared.tracer.record(
                         p.payload.trace_id,
@@ -1231,6 +1484,125 @@ fn source_counter(source: RetrievalSource) -> &'static str {
     }
 }
 
+// ------------------------------------------------------- stats scraping
+
+/// Mirror the pull-model stats (cluster engine counters, retcache hit
+/// rates, admission queue depths) into the registry as absolute gauges.
+/// Runs on the serving loops only — scrape threads read the registry and
+/// must never touch the retriever.
+fn export_side_stats(retriever: &Retriever, shared: &Shared) {
+    if !shared.telemetry.enabled() {
+        return;
+    }
+    let reg = shared.telemetry.registry();
+    if let Some(c) = retriever.dispatcher.cluster() {
+        let s = c.stats();
+        reg.gauge("cluster.epoch").set(c.epoch());
+        reg.gauge("cluster.rounds").set(s.rounds);
+        reg.gauge("cluster.attempts").set(s.attempts);
+        reg.gauge("cluster.retries").set(s.retries);
+        reg.gauge("cluster.failovers").set(s.failovers);
+        reg.gauge("cluster.hedges").set(s.hedges);
+        reg.gauge("cluster.hedge_wins").set(s.hedge_wins);
+        reg.gauge("cluster.breaker_trips").set(s.breaker_trips);
+        reg.gauge("cluster.late_responses").set(s.late_responses);
+        reg.gauge("cluster.probes").set(s.probes);
+        reg.gauge("cluster.probe_mismatches").set(s.probe_mismatches);
+        reg.gauge("cluster.partial_rounds").set(s.partial_rounds);
+        reg.gauge("cluster.unanswered_shards").set(s.unanswered_shards);
+        reg.gauge("cluster.deadline_expired_shards").set(s.deadline_expired_shards);
+    }
+    retriever.export_telemetry(reg);
+    for (tenant, depth) in shared.admission.lock().unwrap().depths() {
+        let t = tenant.to_string();
+        reg.gauge_with("admission.queued", &[("tenant", t.as_str())])
+            .set(depth as u64);
+    }
+}
+
+/// The full stats document served over a `StatsResponse`: the telemetry
+/// plane's sections (`uptime_s`, `tenants`, `slo`, `metrics`, `global`,
+/// `tail`) plus the coordinator's own `server` counters and `admission`
+/// queue depths. A non-empty request prefix filters registry metric
+/// names, shrinking the frame for targeted pollers.
+fn stats_json(req: &StatsRequest, shared: &Shared) -> Json {
+    let Json::Obj(mut doc) = shared.telemetry.stats_json() else {
+        return Json::Null;
+    };
+    if !req.prefix.is_empty() {
+        for section in ["metrics", "global"] {
+            if let Some(Json::Obj(groups)) = doc.get_mut(section) {
+                for v in groups.values_mut() {
+                    if let Json::Obj(m) = v {
+                        m.retain(|k, _| k.starts_with(&req.prefix));
+                    }
+                }
+            }
+        }
+    }
+    let s = shared.stats.snapshot();
+    doc.insert(
+        "server".to_string(),
+        obj(vec![
+            ("received", Json::Num(s.received as f64)),
+            ("replies", Json::Num(s.replies as f64)),
+            ("partial", Json::Num(s.partial as f64)),
+            ("shed", Json::Num(s.shed as f64)),
+            ("backpressure_frames", Json::Num(s.backpressure as f64)),
+            ("requests", Json::Num(s.requests as f64)),
+            ("rounds", Json::Num(s.rounds as f64)),
+            ("batches_ge2", Json::Num(s.batches_ge2 as f64)),
+            ("max_batch", Json::Num(s.max_batch as f64)),
+            ("teardowns", Json::Num(s.teardowns as f64)),
+            ("accept_drops", Json::Num(s.accept_drops as f64)),
+            ("nodelay_fallbacks", Json::Num(s.nodelay_fallbacks as f64)),
+            ("shutdown_denied", Json::Num(s.shutdown_denied as f64)),
+            ("stats_denied", Json::Num(s.stats_denied as f64)),
+            ("deadline_shed", Json::Num(s.deadline_shed as f64)),
+            ("shed_queue_full", Json::Num(s.shed_queue_full as f64)),
+            ("shed_rate_limited", Json::Num(s.shed_rate_limited as f64)),
+            ("shed_deadline", Json::Num(s.shed_deadline as f64)),
+        ]),
+    );
+    doc.insert(
+        "admission".to_string(),
+        Json::Arr(
+            shared
+                .admission
+                .lock()
+                .unwrap()
+                .depths()
+                .into_iter()
+                .map(|(t, d)| {
+                    obj(vec![
+                        ("tenant", Json::Num(t as f64)),
+                        ("queued", Json::Num(d as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(doc)
+}
+
+/// Build the `StatsResponse` frame for one `StatsRequest`, enforcing the
+/// optional admin gate (mirrors `admin_shutdown_only`: connection 0 is
+/// the admin). Denied pollers get a well-formed `{"error": ...}` body,
+/// not a dropped connection — stats refusal must not kill a tenant's
+/// serving stream.
+fn stats_response_frame(conn_id: u64, req: &StatsRequest, shared: &Shared) -> Frame {
+    let body = if shared.qos.stats_admin_only && conn_id != 0 {
+        shared.stats.stats_denied.inc();
+        obj(vec![(
+            "error",
+            Json::Str("stats are admin-only on this coordinator".to_string()),
+        )])
+    } else {
+        stats_json(req, shared)
+    };
+    StatsResponse { revision: STATS_REVISION, json: body.dump() }.encode()
+}
+
 // ------------------------------------------------------------ GPU client
 
 /// One reply from the coordinator: the retrieval result, or an explicit
@@ -1307,6 +1679,24 @@ impl CoordinatorClient {
         let resp = RetrieveResponse::decode(&f)?;
         anyhow::ensure!(resp.query_id == id, "response id mismatch");
         Ok(Reply::Response(resp))
+    }
+
+    /// Fetch the coordinator's live stats document over the protocol
+    /// (`StatsRequest`/`StatsResponse`, revision-tagged). `prefix`
+    /// filters registry metric names server-side (`""` = everything).
+    /// Powers `chameleon top --remote`; callers must not interleave this
+    /// with in-flight pipelined retrievals on the same connection.
+    pub fn stats(&mut self, prefix: &str) -> Result<Json> {
+        StatsRequest { prefix: prefix.to_string(), flags: 0 }
+            .encode()
+            .write_to(&mut self.stream)?;
+        let f = Frame::read_from(&mut self.reader)?;
+        let resp = StatsResponse::decode(&f)?;
+        // The JSON body is self-describing; newer revisions only add
+        // keys, so any revision >= 1 is readable here.
+        anyhow::ensure!(resp.revision >= 1, "bad stats revision 0");
+        Json::parse(&resp.json)
+            .map_err(|e| anyhow::anyhow!("malformed stats JSON from coordinator: {e:?}"))
     }
 
     /// One blocking retrieval round trip (the per-token path for

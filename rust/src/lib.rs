@@ -34,6 +34,7 @@ pub mod pq;
 pub mod report;
 pub mod retcache;
 pub mod runtime;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 

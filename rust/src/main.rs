@@ -13,6 +13,9 @@
 //!   loadgen             open-loop load harness: traced coordinator +
 //!                       Poisson/bursty offered-load sweep, knee + fitted
 //!                       capacity plan (BENCH_serve.json)
+//!   top                 live dashboard over a running coordinator's
+//!                       stats frames (per-tenant latency, SLO burn,
+//!                       cluster health, flagged tail traces)
 //!   report <id>         regenerate a paper table/figure
 //!                       (fig7 fig8 fig9 fig10 fig11 fig12 fig13
 //!                        table4 table5 recall retcache dispatch trace all)
@@ -67,6 +70,7 @@ fn run(args: &Args) -> Result<()> {
         Some("cluster") => cluster_cmd(args),
         Some("chaos") => chaos_cmd(args),
         Some("loadgen") => loadgen_cmd(args),
+        Some("top") => top_cmd(args),
         Some("report") => report_cmd(args),
         Some(other) => bail!("unknown subcommand '{other}' (try --help)"),
         None => {
@@ -111,9 +115,21 @@ fn print_help() {
                 [--trace-out spans.json]   open-loop offered-load sweep\n\
                 against a traced coordinator; reports goodput, the latency\n\
                 knee and an SLO capacity plan fitted from the trace\n\
+                [--slo-ms 50 --slo-target 0.99 --batch-slo-ms 200]  SLO\n\
+                objectives tracked live as multi-window burn rates\n\
+                [--metrics-addr 127.0.0.1:0]  Prometheus-text scrape\n\
+                endpoint over the run  [--scrape-linger-ms 0]  keep the\n\
+                coordinator up after the sweep for external scrapes\n\
+                [--json]  machine-readable report on stdout (chatter\n\
+                moves to stderr; keys match BENCH_serve.json)\n\
+         top    --remote host:port [--once] [--json] [--prefix coordinator.]\n\
+                [--interval-ms 1000]   live dashboard scraped over the\n\
+                stats protocol frames of any running coordinator\n\
          report <fig7|fig8|fig9|fig10|fig11|fig12|fig13|table4|table5|recall|retcache|dispatch|trace|all>\n\
-                report trace [--trace spans.json]   aggregate a span dump\n\
-                (default: a small in-process traced run)\n\
+                report trace [--trace spans.json] [--json]\n\
+                [--slo-ms MS --slo-target 0.99]   aggregate a span dump\n\
+                (default: a small in-process traced run); with an SLO,\n\
+                append the burn implied by the dump's Total spans\n\
          \n\
          Common options: --n <scaled db size> --seed <u64> --artifacts <dir>\n\
          Scan kernels: runtime SIMD dispatch (see `perf-ab`); override with\n\
@@ -358,6 +374,14 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
         "[serve-net] coordinator on {addr} ({mode_name} mode), \
          {n_clients} clients x {per_client} queries"
     );
+    let mut metrics_srv = match args.get("metrics-addr") {
+        Some(bind) => {
+            let m = chameleon::telemetry::MetricsServer::spawn(bind, server.telemetry())?;
+            println!("[serve-net] metrics on {}", m.addr);
+            Some(m)
+        }
+        None => None,
+    };
 
     // Deterministic query stream (tiny db, many queries — only the query
     // vectors are used).
@@ -411,6 +435,9 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
         stats.nodelay_fallbacks(),
         stats.shutdown_denied()
     );
+    if let Some(m) = metrics_srv.as_mut() {
+        m.shutdown();
+    }
     server.shutdown();
     Ok(())
 }
@@ -424,10 +451,22 @@ fn serve_net(args: &Args, policy: BatchPolicy) -> Result<()> {
 /// `BENCH_serve.json`.
 fn loadgen_cmd(args: &Args) -> Result<()> {
     use anyhow::Context as _;
+    use chameleon::coordinator::admission::QosConfig;
+    use chameleon::coordinator::SloObjective;
     use chameleon::hwmodel::{CapacityPlanner, StageTimes};
     use chameleon::loadgen::{self, Arrival, DriveOptions, LoadgenConfig, RetryPolicy};
     use chameleon::trace::{analyze, events_to_json, Tracer};
     use chameleon::util::json::{obj, Json};
+
+    // With `--json` stdout carries exactly one JSON document (the same
+    // object written to `--out`); all human chatter moves to stderr so
+    // `chameleon loadgen --json | jq` works.
+    let json_out = args.flag("json");
+    macro_rules! say {
+        ($($t:tt)*) => {
+            if json_out { eprintln!($($t)*) } else { println!($($t)*) }
+        };
+    }
 
     let sys = system_config(args);
     let ds = config::dataset_by_name(args.get_or("dataset", "SIFT"))
@@ -493,16 +532,43 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         None => build_retriever(ds, n, n_nodes, k, false, &sys)?.0,
     };
     let tracer = Tracer::new(1 << 16);
-    let mut server = CoordinatorServer::spawn_traced(
+    // Per-class SLO objectives, tracked live by the telemetry plane as
+    // multi-window burn rates (scrapeable mid-run, reported at the end).
+    let slo_ms = args.get_f64("slo-ms", 50.0);
+    let slo_target = args.get_f64("slo-target", 0.99);
+    let batch_slo_ms = args.get_f64("batch-slo-ms", slo_ms * 4.0);
+    let qos = QosConfig {
+        slo_interactive: Some(SloObjective {
+            latency_us: (slo_ms * 1e3) as u64,
+            target: slo_target,
+            ..SloObjective::default()
+        }),
+        slo_batch: Some(SloObjective {
+            latency_us: (batch_slo_ms * 1e3) as u64,
+            target: slo_target,
+            ..SloObjective::default()
+        }),
+        ..QosConfig::default()
+    };
+    let mut server = CoordinatorServer::spawn_qos(
         move || retriever,
         ServeMode::Concurrent(policy),
+        qos,
         tracer.clone(),
     )?;
     let addr = server.addr;
-    println!(
+    say!(
         "[loadgen] traced coordinator on {addr} ({observed_nodes} nodes, \
          {requests} reqs/point, {conns} conns)"
     );
+    let mut metrics_srv = match args.get("metrics-addr") {
+        Some(bind) => {
+            let m = chameleon::telemetry::MetricsServer::spawn(bind, server.telemetry())?;
+            say!("[loadgen] metrics on {}", m.addr);
+            Some(m)
+        }
+        None => None,
+    };
 
     // Query pool: `n_unique` vectors the Zipf stream indexes into.
     let qdata = SyntheticDataset::generate_sized(ds, 64, n_unique, sys.seed ^ 9);
@@ -525,7 +591,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         let deadline = Duration::from_secs_f64(sched.span_s() + 30.0);
         let rep =
             loadgen::drive_opts(addr, &queries, k, &sched, conns, deadline, &drive_opts)?;
-        println!(
+        say!(
             "[loadgen] offered {:>6.0} q/s -> goodput {:>6.0} q/s  \
              p50 {:7.2} ms  p95 {:7.2} ms  p99 {:7.2} ms  ({}/{} replies, {} shed)",
             rep.offered_qps,
@@ -540,7 +606,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         // Conservation line for smoke checks: every sent request must be
         // either answered (complete or partial) or explicitly shed —
         // lost=0 on a healthy server.
-        println!(
+        say!(
             "[loadgen] accounting: sent={} complete={} partial={} shed={} lost={}",
             rep.sent,
             rep.complete(),
@@ -549,7 +615,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
             rep.sent.saturating_sub(rep.received + rep.shed),
         );
         if rep.retries > 0 {
-            println!(
+            say!(
                 "[loadgen] retries: {} sent, {} recovered (retry-success rate {:.0}%)",
                 rep.retries,
                 rep.retry_success,
@@ -583,27 +649,67 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         reports.push(rep);
     }
     let knee = loadgen::measured_knee_qps(&reports);
-    println!("[loadgen] measured knee: {knee:.0} q/s");
+    say!("[loadgen] measured knee: {knee:.0} q/s");
+
+    // Keep the coordinator (and metrics endpoint) alive after the sweep
+    // so external scrapers / `chameleon top --remote` can read the final
+    // counters before teardown.
+    let linger_ms = args.get_u64("scrape-linger-ms", 0);
+    if linger_ms > 0 {
+        say!("[loadgen] lingering {linger_ms} ms for external scrapes");
+        std::thread::sleep(Duration::from_millis(linger_ms));
+    }
+
+    // SLO burn reports straight off the live telemetry plane.
+    let fin = |v: f64| if v.is_finite() { v } else { 1e9 };
+    let burns = server.telemetry().burn_rates();
+    for b in &burns {
+        say!(
+            "[loadgen] slo tenant={} class={} latency_burn {:.2}/{:.2} \
+             availability_burn {:.2}/{:.2} p99 {:.2} ms ({} in window)",
+            b.tenant,
+            b.class,
+            fin(b.latency.fast),
+            fin(b.latency.slow),
+            fin(b.availability.fast),
+            fin(b.availability.slow),
+            b.p99_us as f64 / 1e3,
+            b.window_count,
+        );
+    }
+    if let Some(m) = metrics_srv.as_mut() {
+        m.shutdown();
+    }
     server.shutdown();
 
     // Offline half: aggregate the spans the run left in the ring.
     let events = tracer.snapshot();
     let a = analyze(&events);
-    print!("{}", a.render());
+    let rendered = a.render();
+    if json_out {
+        eprint!("{rendered}");
+    } else {
+        print!("{rendered}");
+    }
     let present: Vec<&str> = a.kinds_present().iter().map(|kind| kind.name()).collect();
-    println!("TRACE_SPANS ok: {}", present.join(","));
+    say!("TRACE_SPANS ok: {}", present.join(","));
     if let Some(path) = args.get("trace-out") {
         std::fs::write(path, events_to_json(&events).dump())
             .with_context(|| format!("writing trace dump '{path}'"))?;
-        println!("[loadgen] wrote {path} ({} spans)", events.len());
+        say!("[loadgen] wrote {path} ({} spans)", events.len());
     }
 
     // Fit the capacity model and compare its knee against the measured one.
     let st = StageTimes::from_analysis(&a, observed_nodes);
     let planner = CapacityPlanner::new(st, 4 * ds.d, 12 * k);
     let predicted_knee = planner.saturation_qps(observed_nodes);
-    print!("{}", planner.render(knee.max(1.0), args.get_f64("p99-slo-ms", 50.0) * 1e-3));
-    println!(
+    let plan = planner.render(knee.max(1.0), args.get_f64("p99-slo-ms", slo_ms) * 1e-3);
+    if json_out {
+        eprint!("{plan}");
+    } else {
+        print!("{plan}");
+    }
+    say!(
         "[loadgen] predicted knee at {observed_nodes} nodes: {predicted_knee:.0} q/s \
          (measured {knee:.0} q/s)"
     );
@@ -620,6 +726,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         ("sweep", Json::Arr(points)),
         ("measured_knee_qps", Json::Num(knee)),
         ("predicted_knee_qps", Json::Num(predicted_knee)),
+        ("slo", Json::Arr(burns.iter().map(|b| b.to_json()).collect())),
         (
             "stages",
             obj(vec![
@@ -634,8 +741,50 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     ]);
     std::fs::write(out_path, report.dump())
         .with_context(|| format!("writing {out_path}"))?;
-    println!("wrote {out_path}");
+    say!("wrote {out_path}");
+    if json_out {
+        println!("{}", report.dump());
+    }
     Ok(())
+}
+
+/// `chameleon top` — live dashboard over a running coordinator, scraped
+/// through the `StatsRequest`/`StatsResponse` protocol frames (the same
+/// wire the tenants use, so it works against any reachable coordinator,
+/// no sidecar needed).
+fn top_cmd(args: &Args) -> Result<()> {
+    use chameleon::telemetry::render_dashboard;
+
+    let addr: std::net::SocketAddr = args
+        .get("remote")
+        .ok_or_else(|| anyhow::anyhow!("top needs --remote host:port"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad --remote address: {e}"))?;
+    let once = args.flag("once");
+    let json = args.flag("json");
+    let prefix = args.get_or("prefix", "");
+    let interval =
+        Duration::from_millis(args.get_u64("interval-ms", 1000).max(100));
+    let mut client = CoordinatorClient::connect(addr, 0)?;
+    loop {
+        let doc = client.stats(prefix)?;
+        if let Some(err) = doc.get("error").and_then(|e| e.as_str()) {
+            bail!("coordinator refused stats: {err}");
+        }
+        if json {
+            println!("{}", doc.dump());
+        } else {
+            if !once {
+                // Clear + home between refreshes, full-screen style.
+                print!("\x1b[2J\x1b[H");
+            }
+            print!("{}", render_dashboard(&doc));
+        }
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 /// Elastic-tier config from the serve knobs: `Some` when replication or
@@ -1114,7 +1263,30 @@ fn report_cmd(args: &Args) -> Result<()> {
             "recall" => report::recall_report(n.min(20_000), q.min(32), seed),
             "retcache" => report::retcache_report(n.min(20_000), seed),
             "dispatch" => report::dispatch_report(n.min(20_000), q, seed),
-            "trace" => report::trace_report(args.get("trace"), n.min(8000), q.min(16), seed)?,
+            "trace" => {
+                let slo = args
+                    .get("slo-ms")
+                    .map(|_| {
+                        (args.get_f64("slo-ms", 50.0), args.get_f64("slo-target", 0.99))
+                    });
+                if args.flag("json") {
+                    report::trace_report_json(
+                        args.get("trace"),
+                        n.min(8000),
+                        q.min(16),
+                        seed,
+                        slo,
+                    )?
+                } else {
+                    report::trace_report(
+                        args.get("trace"),
+                        n.min(8000),
+                        q.min(16),
+                        seed,
+                        slo,
+                    )?
+                }
+            }
             other => bail!("unknown report '{other}'"),
         };
         println!("{text}");

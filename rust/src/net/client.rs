@@ -25,7 +25,26 @@ use crate::chamvs::backend::{ScanBackend, ScanJob};
 use crate::chamvs::dispatcher::{BatchQuery, Dispatcher, SearchResult};
 use crate::chamvs::node::NodeResult;
 use crate::hwmodel::fpga::FpgaModel;
+use crate::telemetry::{Counter, Registry};
 use crate::util::rng::Rng;
+
+/// Process-global connection-health counters. Remote nodes have no
+/// per-server registry handle, so poison/heal/reconnect events land in
+/// [`Registry::global`] and are merged into every coordinator scrape.
+fn net_poisonings() -> &'static Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<Counter>> = std::sync::OnceLock::new();
+    C.get_or_init(|| Registry::global().counter("net.poisonings"))
+}
+
+fn net_reconnects() -> &'static Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<Counter>> = std::sync::OnceLock::new();
+    C.get_or_init(|| Registry::global().counter("net.reconnects"))
+}
+
+fn net_heal_failures() -> &'static Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<Counter>> = std::sync::OnceLock::new();
+    C.get_or_init(|| Registry::global().counter("net.heal_failures"))
+}
 
 /// First reconnect-backoff step after a poisoned exchange; doubles per
 /// failed heal attempt up to [`RECONNECT_CAP`], plus deterministic jitter.
@@ -213,6 +232,7 @@ impl RemoteNode {
             // the heal counters.
             Ok(()) => Ok(()),
             Err(e) => {
+                net_heal_failures().inc();
                 self.heal_attempts = attempt.saturating_add(1);
                 let backoff = RECONNECT_BASE
                     .saturating_mul(1u32 << attempt.min(6))
@@ -252,6 +272,7 @@ impl RemoteNode {
             fresh.n_shards
         );
         *self = fresh;
+        net_reconnects().inc();
         Ok(())
     }
 
@@ -379,6 +400,7 @@ impl ScanBackend for RemoteNode {
                 // desynced frames.
                 if e.downcast_ref::<NodeRejected>().is_none() {
                     self.poisoned = true;
+                    net_poisonings().inc();
                 }
                 Err(e)
             }

@@ -56,6 +56,17 @@ pub enum Kind {
     /// doesn't tear down a connection carrying other tenants' traffic;
     /// only unframeable bytes (bad magic/kind/length) close the stream.
     NodeError = 13,
+    /// -> coordinator: ask for a live telemetry snapshot (counters,
+    /// per-tenant latency/burn, tail-sampled traces). Optionally gated
+    /// to the admin connection like [`Shutdown`](Kind::Shutdown). Peers
+    /// predating the stats plane close the connection on this kind —
+    /// the caller uses a dedicated connection so serving traffic never
+    /// shares a stream with a stats probe.
+    StatsRequest = 14,
+    /// Coordinator -> caller: the snapshot, as a versioned JSON document
+    /// (stats are a cold path; JSON keeps the schema evolvable without a
+    /// wire change, and the revision field pins compatibility).
+    StatsResponse = 15,
 }
 
 impl Kind {
@@ -74,6 +85,8 @@ impl Kind {
             11 => Kind::Drain,
             12 => Kind::Backpressure,
             13 => Kind::NodeError,
+            14 => Kind::StatsRequest,
+            15 => Kind::StatsResponse,
             other => bail!("unknown frame kind {other}"),
         })
     }
@@ -1028,6 +1041,82 @@ impl NodeError {
     }
 }
 
+// ------------------------------------------------------------ stats plane
+
+/// Wire revision of the [`StatsResponse`] JSON schema. Bumped when keys
+/// documented in README §Live telemetry change incompatibly; readers
+/// must tolerate unknown keys at the same revision.
+pub const STATS_REVISION: u32 = 1;
+
+/// Ask a coordinator for a live telemetry snapshot.
+///
+/// `prefix` restricts the registry dump to metric names with that dotted
+/// prefix (empty = everything); `flags` is reserved (0). An **empty
+/// payload decodes to the defaults**, so a minimal peer can probe with a
+/// bare kind-14 frame — and, like `Hello`, the decoder reads the fields
+/// it knows and ignores a longer tail, pinning old-peer interop in both
+/// directions.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatsRequest {
+    pub prefix: String,
+    pub flags: u32,
+}
+
+impl StatsRequest {
+    pub fn encode(&self) -> Frame {
+        let bytes = self.prefix.as_bytes();
+        let mut p = Vec::with_capacity(8 + bytes.len());
+        p.write_u32::<LE>(self.flags).unwrap();
+        p.write_u32::<LE>(bytes.len() as u32).unwrap();
+        p.extend_from_slice(bytes);
+        Frame { kind: Kind::StatsRequest, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<StatsRequest> {
+        if f.kind != Kind::StatsRequest {
+            bail!("not a stats request");
+        }
+        if f.payload.is_empty() {
+            return Ok(StatsRequest::default());
+        }
+        let mut r = &f.payload[..];
+        let flags = r.read_u32::<LE>()?;
+        let prefix = read_string(&mut r)?;
+        // Trailing bytes are a future tail from a newer peer: ignore.
+        Ok(StatsRequest { prefix, flags })
+    }
+}
+
+/// The telemetry snapshot: a [`STATS_REVISION`]-versioned JSON document
+/// (see README §Live telemetry for the key catalog). Trailing payload
+/// bytes beyond the string are ignored, mirroring [`StatsRequest`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StatsResponse {
+    pub revision: u32,
+    pub json: String,
+}
+
+impl StatsResponse {
+    pub fn encode(&self) -> Frame {
+        let bytes = self.json.as_bytes();
+        let mut p = Vec::with_capacity(8 + bytes.len());
+        p.write_u32::<LE>(self.revision).unwrap();
+        p.write_u32::<LE>(bytes.len() as u32).unwrap();
+        p.extend_from_slice(bytes);
+        Frame { kind: Kind::StatsResponse, payload: p }
+    }
+
+    pub fn decode(f: &Frame) -> Result<StatsResponse> {
+        if f.kind != Kind::StatsResponse {
+            bail!("not a stats response");
+        }
+        let mut r = &f.payload[..];
+        let revision = r.read_u32::<LE>()?;
+        let json = read_string(&mut r)?;
+        Ok(StatsResponse { revision, json })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1873,5 +1962,113 @@ mod tests {
         h.write_u64::<LE>((MAX_PAYLOAD_BYTES as u64) + 1).unwrap();
         let mut fr = FrameReader::new();
         assert!(fr.poll(&mut &h[..]).is_err());
+    }
+
+    // ------------------------------------------------------ stats plane
+
+    #[test]
+    fn stats_kinds_pin_wire_numbers() {
+        // 14/15 are wire contract: old peers key their close-on-unknown
+        // behavior off these exact numbers.
+        assert_eq!(Kind::StatsRequest as u32, 14);
+        assert_eq!(Kind::StatsResponse as u32, 15);
+        assert_eq!(Kind::from_u32(14).unwrap(), Kind::StatsRequest);
+        assert_eq!(Kind::from_u32(15).unwrap(), Kind::StatsResponse);
+    }
+
+    #[test]
+    fn stats_request_roundtrip() {
+        let req = StatsRequest { prefix: "coordinator.".to_string(), flags: 0 };
+        let back = roundtrip(req.encode());
+        assert_eq!(StatsRequest::decode(&back).unwrap(), req);
+    }
+
+    #[test]
+    fn stats_response_roundtrip() {
+        let resp = StatsResponse {
+            revision: STATS_REVISION,
+            json: r#"{"uptime_s":1.5,"tenants":[]}"#.to_string(),
+        };
+        let back = roundtrip(resp.encode());
+        assert_eq!(StatsResponse::decode(&back).unwrap(), resp);
+    }
+
+    #[test]
+    fn stats_request_empty_payload_is_default() {
+        // A minimal (or older) peer probing with a bare kind-14 frame
+        // gets the "dump everything" defaults.
+        let f = Frame { kind: Kind::StatsRequest, payload: Vec::new() };
+        assert_eq!(StatsRequest::decode(&f).unwrap(), StatsRequest::default());
+    }
+
+    #[test]
+    fn stats_frames_ignore_future_tails() {
+        // A newer peer may append fields; today's decoder reads what it
+        // knows and ignores the rest (the Hello idiom).
+        let mut f = StatsRequest { prefix: "net.".to_string(), flags: 7 }.encode();
+        f.payload.extend_from_slice(&[0xde, 0xad, 0xbe, 0xef]);
+        let got = StatsRequest::decode(&f).unwrap();
+        assert_eq!(got.prefix, "net.");
+        assert_eq!(got.flags, 7);
+
+        let mut f = StatsResponse { revision: 9, json: "{}".to_string() }.encode();
+        f.payload.extend_from_slice(&[1, 2, 3]);
+        let got = StatsResponse::decode(&f).unwrap();
+        assert_eq!(got.revision, 9);
+        assert_eq!(got.json, "{}");
+    }
+
+    #[test]
+    fn stats_frames_reject_truncation_garbage_and_wrong_kind() {
+        let req = StatsRequest { prefix: "abc".to_string(), flags: 1 }.encode();
+        // Every non-empty strict prefix of the payload must error (the
+        // empty payload is the documented minimal-probe form).
+        for cut in 1..req.payload.len() {
+            let t = Frame { kind: req.kind, payload: req.payload[..cut].to_vec() };
+            assert!(StatsRequest::decode(&t).is_err(), "request cut={cut}");
+        }
+        let resp = StatsResponse { revision: 1, json: "{\"k\":1}".to_string() }.encode();
+        for cut in 0..resp.payload.len() {
+            let t = Frame { kind: resp.kind, payload: resp.payload[..cut].to_vec() };
+            assert!(StatsResponse::decode(&t).is_err(), "response cut={cut}");
+        }
+
+        // A string length claiming more bytes than the payload holds
+        // must fail before allocating.
+        let mut p = Vec::new();
+        p.write_u32::<LE>(STATS_REVISION).unwrap();
+        p.write_u32::<LE>(u32::MAX).unwrap();
+        p.extend_from_slice(b"tiny");
+        let f = Frame { kind: Kind::StatsResponse, payload: p };
+        assert!(StatsResponse::decode(&f).is_err());
+
+        // Non-UTF8 string bytes are garbage, not a panic.
+        let mut p = Vec::new();
+        p.write_u32::<LE>(STATS_REVISION).unwrap();
+        p.write_u32::<LE>(2).unwrap();
+        p.extend_from_slice(&[0xff, 0xfe]);
+        let f = Frame { kind: Kind::StatsResponse, payload: p };
+        assert!(StatsResponse::decode(&f).is_err());
+
+        let wrong = Frame { kind: Kind::Shutdown, payload: req.payload };
+        assert!(StatsRequest::decode(&wrong).is_err());
+    }
+
+    #[test]
+    fn pre_stats_peer_interop_is_pinned() {
+        // A peer built before the stats plane rejects kind 14/15 at the
+        // framing layer (unknown kind => connection error), which is the
+        // documented old-peer behavior: stats probes use a dedicated
+        // connection precisely so this close is harmless. Pin the
+        // guardrail by checking the next unassigned kind still errors —
+        // the same code path an old peer takes for 14.
+        assert!(Kind::from_u32(16).is_err());
+        assert!(Kind::from_u32(0).is_err());
+
+        // And a new coordinator never confuses a stats frame with the
+        // frames an old peer does know.
+        let f = StatsRequest::default().encode();
+        assert!(Backpressure::decode(&f).is_err());
+        assert!(NodeError::decode(&f).is_err());
     }
 }

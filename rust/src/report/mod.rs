@@ -12,7 +12,7 @@ pub use system::{
     dispatch_report, fig11_latency, fig12_throughput, fig13_ratio, retcache_report,
 };
 pub use tables::{fig7_probability, fig8_resources, table4_resources, table5_energy};
-pub use trace::trace_report;
+pub use trace::{trace_report, trace_report_json};
 
 /// Render a markdown-ish table row.
 pub fn row(cells: &[String]) -> String {

@@ -17,26 +17,22 @@ use crate::hwmodel::capacity::{CapacityPlanner, StageTimes};
 use crate::ivf::index::IvfPqIndex;
 use crate::ivf::shard::Shard;
 use crate::retcache::{CacheConfig, KeyPolicy, SpecConfig};
-use crate::trace::{analyze, events_from_json, SpanKind, Tracer};
-use crate::util::json::Json;
+use crate::telemetry::burn_rate;
+use crate::trace::{analyze, events_from_json, SpanEvent, SpanKind, Tracer};
+use crate::util::json::{obj, Json};
 
 /// Aggregate a trace dump file (or, with no path, a small in-process
-/// traced run) and render the report plus a fitted capacity plan.
+/// traced run) and render the report plus a fitted capacity plan. With
+/// `slo = Some((latency_ms, target))` the report appends the SLO burn
+/// implied by the `Total` spans in the dump.
 pub fn trace_report(
     path: Option<&str>,
     n: usize,
     queries: usize,
     seed: u64,
+    slo: Option<(f64, f64)>,
 ) -> Result<String> {
-    let (events, observed_nodes) = match path {
-        Some(p) => {
-            let text = std::fs::read_to_string(p)
-                .with_context(|| format!("reading trace dump '{p}'"))?;
-            let j = Json::parse(&text).with_context(|| format!("parsing '{p}'"))?;
-            (events_from_json(&j)?, None)
-        }
-        None => (demo_events(n, queries, seed)?, Some(2)),
-    };
+    let (events, observed_nodes) = load_events(path, n, queries, seed)?;
     let a = analyze(&events);
     let mut out = a.render();
     // Fan-out for the planner fit: from the per-node span tags when the
@@ -47,7 +43,111 @@ pub fn trace_report(
         let planner = CapacityPlanner::new(st, 4 * 128, 12 * 10);
         out.push_str(&planner.render(planner.saturation_qps(nodes) * 0.5, 0.05));
     }
+    if let Some((slo_ms, target)) = slo {
+        let s = slo_from_totals(&events, slo_ms, target);
+        out.push_str(&format!(
+            "slo: {:.1} ms @ {:.4} — {}/{} breaches, burn {:.2}\n",
+            slo_ms,
+            target,
+            s.breaches,
+            s.total,
+            if s.burn.is_finite() { s.burn } else { 1e9 },
+        ));
+    }
     Ok(out)
+}
+
+/// Machine-readable variant of [`trace_report`]: the trace analysis JSON
+/// plus the fitted stage times under `stage_fit` (same inner keys as the
+/// `stages` object in `BENCH_serve.json`: `lut_s`, `scan_s`, `merge_s`,
+/// `reply_s`, `cache_probe_s`, `spec_verify_s`) and, given an SLO, the
+/// burn implied by the `Total` spans.
+pub fn trace_report_json(
+    path: Option<&str>,
+    n: usize,
+    queries: usize,
+    seed: u64,
+    slo: Option<(f64, f64)>,
+) -> Result<String> {
+    let (events, observed_nodes) = load_events(path, n, queries, seed)?;
+    let a = analyze(&events);
+    let nodes = observed_nodes.unwrap_or_else(|| a.per_node.len().max(1));
+    let Json::Obj(mut doc) = a.to_json() else {
+        anyhow::bail!("trace analysis did not serialize to an object");
+    };
+    let st = StageTimes::from_analysis(&a, nodes);
+    doc.insert(
+        "stage_fit".to_string(),
+        obj(vec![
+            ("lut_s", Json::Num(st.lut_s)),
+            ("scan_s", Json::Num(st.scan_s)),
+            ("merge_s", Json::Num(st.merge_s)),
+            ("reply_s", Json::Num(st.reply_s)),
+            ("cache_probe_s", Json::Num(st.cache_probe_s)),
+            ("spec_verify_s", Json::Num(st.spec_verify_s)),
+        ]),
+    );
+    doc.insert("nodes".to_string(), Json::Num(nodes as f64));
+    if let Some((slo_ms, target)) = slo {
+        let s = slo_from_totals(&events, slo_ms, target);
+        doc.insert(
+            "slo".to_string(),
+            obj(vec![
+                ("slo_ms", Json::Num(slo_ms)),
+                ("target", Json::Num(target)),
+                ("total_spans", Json::Num(s.total as f64)),
+                ("breaches", Json::Num(s.breaches as f64)),
+                (
+                    "burn",
+                    Json::Num(if s.burn.is_finite() { s.burn } else { 1e9 }),
+                ),
+            ]),
+        );
+    }
+    Ok(Json::Obj(doc).dump())
+}
+
+fn load_events(
+    path: Option<&str>,
+    n: usize,
+    queries: usize,
+    seed: u64,
+) -> Result<(Vec<SpanEvent>, Option<usize>)> {
+    match path {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading trace dump '{p}'"))?;
+            let j = Json::parse(&text).with_context(|| format!("parsing '{p}'"))?;
+            Ok((events_from_json(&j)?, None))
+        }
+        None => Ok((demo_events(n, queries, seed)?, Some(2))),
+    }
+}
+
+struct SloFromTotals {
+    total: u64,
+    breaches: u64,
+    burn: f64,
+}
+
+/// Offline SLO accounting over the dump's end-to-end `Total` spans — the
+/// same `burn_rate` formula the live telemetry plane uses, applied to a
+/// recorded trace instead of the sliding windows.
+fn slo_from_totals(events: &[SpanEvent], slo_ms: f64, target: f64) -> SloFromTotals {
+    let slo_s = slo_ms * 1e-3;
+    let mut total = 0u64;
+    let mut breaches = 0u64;
+    for e in events.iter().filter(|e| e.kind == SpanKind::Total) {
+        total += 1;
+        if e.dur_s > slo_s {
+            breaches += 1;
+        }
+    }
+    SloFromTotals {
+        total,
+        breaches,
+        burn: burn_rate(breaches, total, 1.0 - target),
+    }
 }
 
 /// Produce a span stream by running a traced closed loop over an
@@ -92,7 +192,7 @@ mod tests {
 
     #[test]
     fn demo_report_carries_core_stages_and_plan() {
-        let text = trace_report(None, 4000, 8, 42).unwrap();
+        let text = trace_report(None, 4000, 8, 42, None).unwrap();
         for stage in ["lut_build", "node_scan", "merge", "cache_probe", "total"] {
             assert!(text.contains(stage), "missing {stage} in:\n{text}");
         }
@@ -107,8 +207,20 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("trace.json");
         std::fs::write(&path, events_to_json(&evs).dump()).unwrap();
-        let text = trace_report(Some(path.to_str().unwrap()), 0, 0, 0).unwrap();
+        let text =
+            trace_report(Some(path.to_str().unwrap()), 0, 0, 0, Some((0.0, 0.99))).unwrap();
         assert!(text.contains("node_scan"), "{text}");
-        assert!(trace_report(Some("/nonexistent/trace.json"), 0, 0, 0).is_err());
+        assert!(text.contains("burn"), "{text}");
+        assert!(trace_report(Some("/nonexistent/trace.json"), 0, 0, 0, None).is_err());
+        let j = trace_report_json(Some(path.to_str().unwrap()), 0, 0, 0, Some((0.0, 0.99)))
+            .unwrap();
+        let doc = Json::parse(&j).unwrap();
+        assert!(doc.get("stage_fit").is_some(), "{j}");
+        let slo = doc.get("slo").unwrap();
+        // A 0 ms SLO makes every Total span a breach.
+        assert_eq!(
+            slo.get("breaches").unwrap().as_f64(),
+            slo.get("total_spans").unwrap().as_f64(),
+        );
     }
 }

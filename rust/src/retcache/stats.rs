@@ -100,6 +100,35 @@ impl RetrievalStats {
         }
     }
 
+    /// Mirror the counters into a telemetry [`Registry`] as *absolute*
+    /// gauges under `retcache.*`. Unlike [`export`](Self::export) this is
+    /// repeat-safe: the serving loop calls it after every batch so
+    /// mid-run scrapes see live hit rates, and re-exporting just
+    /// overwrites with the current value.
+    pub fn export_telemetry(
+        &self,
+        reg: &crate::telemetry::Registry,
+        cache: Option<&RetrievalCache>,
+        spec: Option<&SpecSlots>,
+    ) {
+        reg.gauge("retcache.misses").set(self.misses);
+        reg.gauge("retcache.cache_hits").set(self.cache_hits);
+        reg.gauge("retcache.spec_hits").set(self.spec_hits);
+        reg.gauge("retcache.saved_modeled_ms")
+            .set((self.saved_modeled_s * 1e3) as u64);
+        if let Some(c) = cache {
+            reg.gauge("retcache.cache_bytes").set(c.bytes() as u64);
+            reg.gauge("retcache.cache_entries").set(c.len() as u64);
+            reg.gauge("retcache.cache_evictions").set(c.evictions);
+        }
+        if let Some(s) = spec {
+            reg.gauge("retcache.spec_issued").set(s.issued());
+            reg.gauge("retcache.spec_verified").set(s.verified());
+            reg.gauge("retcache.spec_rejected").set(s.rejected());
+            reg.gauge("retcache.spec_slots").set(s.n_slots() as u64);
+        }
+    }
+
     /// JSON export for report plumbing.
     pub fn to_json(&self) -> Json {
         obj(vec![

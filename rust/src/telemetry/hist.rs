@@ -1,0 +1,307 @@
+//! Sliding-window log-bucketed latency histograms.
+//!
+//! The hot path (`record`) is lock-free and allocation-free: every window
+//! slot is preallocated at construction and recycled in place with a
+//! seqlock-style generation word, the same idiom as [`crate::trace::ring`].
+//! Writers bump atomic bucket counters; readers double-check the slot
+//! generation and treat a slot that changed mid-read as empty. A torn or
+//! racing sample is dropped from the *window* view (never from the
+//! cumulative totals), which is the right trade for a sampling
+//! instrument — the serving path must never wait on the observer.
+//!
+//! Values are recorded in microseconds into power-of-two buckets: bucket 0
+//! holds the value 0 and bucket `b >= 1` covers `[2^(b-1), 2^b - 1]` µs.
+//! With 32 buckets the top bucket is open-ended (> ~35 min), far beyond
+//! any deadline this system serves.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Number of log2 buckets. Bucket 31 is the +Inf bucket.
+pub const N_BUCKETS: usize = 32;
+
+/// Log2 bucket for a microsecond value: 0 -> 0, v -> floor(log2(v)) + 1,
+/// clamped to the open-ended top bucket.
+pub fn bucket_index(v_us: u64) -> usize {
+    (64 - v_us.leading_zeros() as usize).min(N_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of a bucket in microseconds (`u64::MAX` for the
+/// open-ended top bucket). `bucket_index(bucket_upper_us(b)) == b` for
+/// every closed bucket.
+pub fn bucket_upper_us(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= N_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// Shape of the sliding window: `windows` slots of `window` each; the
+/// retained horizon is their product. Burn-rate math reads the newest
+/// slot as the fast window and the whole horizon as the slow window.
+#[derive(Clone, Copy, Debug)]
+pub struct HistogramConfig {
+    pub window: Duration,
+    pub windows: usize,
+}
+
+impl Default for HistogramConfig {
+    fn default() -> Self {
+        HistogramConfig {
+            window: Duration::from_secs(10),
+            windows: 6,
+        }
+    }
+}
+
+/// One recyclable window slot. `seq` holds `2 * n` while the slot stably
+/// contains window number `n`, and an odd value while a writer is zeroing
+/// it for reuse — readers that observe an odd or changed `seq` discard
+/// the slot.
+struct WindowSlot {
+    seq: AtomicU64,
+    counts: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl WindowSlot {
+    fn new(window_no: u64) -> Self {
+        WindowSlot {
+            seq: AtomicU64::new(2 * window_no),
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Aggregated view over one or more window slots (plain data, no atomics).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistAgg {
+    pub counts: [u64; N_BUCKETS],
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl HistAgg {
+    /// Number of samples strictly greater than `threshold_us`. Exact when
+    /// the threshold is a bucket boundary (`2^k - 1` µs); otherwise the
+    /// threshold is rounded up to its bucket's upper bound, so the result
+    /// is a lower bound on the true breach count.
+    pub fn count_above(&self, threshold_us: u64) -> u64 {
+        let b = bucket_index(threshold_us);
+        self.counts[b + 1..].iter().sum()
+    }
+
+    /// Upper bucket bound of the q-quantile (q in [0, 1]).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let rank = rank.max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_us(b);
+            }
+        }
+        bucket_upper_us(N_BUCKETS - 1)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &HistAgg) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+}
+
+/// Sliding-window histogram with cumulative lifetime totals.
+///
+/// Window slots answer "what happened recently" (SLO burn, `top`); the
+/// cumulative per-bucket totals back the Prometheus exposition, which
+/// expects monotone counters.
+pub struct WindowedHistogram {
+    cfg: HistogramConfig,
+    epoch: Instant,
+    slots: Box<[WindowSlot]>,
+    total_counts: [AtomicU64; N_BUCKETS],
+    total_count: AtomicU64,
+    total_sum_us: AtomicU64,
+}
+
+impl WindowedHistogram {
+    pub fn new(cfg: HistogramConfig) -> Self {
+        let windows = cfg.windows.max(2);
+        let cfg = HistogramConfig {
+            window: cfg.window.max(Duration::from_millis(1)),
+            windows,
+        };
+        WindowedHistogram {
+            cfg,
+            epoch: Instant::now(),
+            slots: (0..windows as u64).map(WindowSlot::new).collect(),
+            total_counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total_count: AtomicU64::new(0),
+            total_sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> HistogramConfig {
+        self.cfg
+    }
+
+    /// Record a value now.
+    pub fn record(&self, v_us: u64) {
+        self.record_at(v_us, self.epoch.elapsed());
+    }
+
+    /// Record a value at an explicit offset from the histogram epoch.
+    /// The deterministic entry point for rotation tests; `record` is a
+    /// thin wrapper over this.
+    pub fn record_at(&self, v_us: u64, elapsed: Duration) {
+        let b = bucket_index(v_us);
+        // Lifetime totals never miss a sample.
+        self.total_counts[b].fetch_add(1, Ordering::Relaxed);
+        self.total_count.fetch_add(1, Ordering::Relaxed);
+        self.total_sum_us.fetch_add(v_us, Ordering::Relaxed);
+
+        let wn = self.window_no(elapsed);
+        let slot = &self.slots[(wn % self.cfg.windows as u64) as usize];
+        // Claim the slot for window `wn`, recycling it if it still holds
+        // an older window. `seq` stores the absolute window number, so a
+        // slot lapped while we stalled shows `seq > 2 * wn` and the
+        // sample stays totals-only.
+        loop {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == 2 * wn {
+                break;
+            }
+            if seq > 2 * wn {
+                return;
+            }
+            if seq & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            // `2 * wn - 1` is the odd in-progress marker for window `wn`;
+            // wn >= 1 here because slot i is born stable at window i.
+            if slot
+                .seq
+                .compare_exchange(seq, 2 * wn - 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                for c in slot.counts.iter() {
+                    c.store(0, Ordering::Relaxed);
+                }
+                slot.count.store(0, Ordering::Relaxed);
+                slot.sum_us.store(0, Ordering::Relaxed);
+                slot.seq.store(2 * wn, Ordering::Release);
+                break;
+            }
+        }
+        slot.counts[b].fetch_add(1, Ordering::Relaxed);
+        slot.count.fetch_add(1, Ordering::Relaxed);
+        slot.sum_us.fetch_add(v_us, Ordering::Relaxed);
+    }
+
+    fn window_no(&self, elapsed: Duration) -> u64 {
+        (elapsed.as_nanos() / self.cfg.window.as_nanos().max(1)) as u64
+    }
+
+    /// Aggregate the newest `last_n` windows (including the current,
+    /// possibly partial, one) as of `elapsed` past the epoch.
+    pub fn aggregate_at(&self, last_n: usize, elapsed: Duration) -> HistAgg {
+        let now_wn = self.window_no(elapsed);
+        let first = now_wn.saturating_sub(last_n.max(1) as u64 - 1);
+        let mut agg = HistAgg::default();
+        for wn in first..=now_wn {
+            let slot = &self.slots[(wn % self.cfg.windows as u64) as usize];
+            // Seqlock read: two matching even observations of `2 * wn`
+            // bracket a consistent copy. A slot holding another window
+            // (or mid-recycle) contributes nothing.
+            for _ in 0..8 {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 != 2 * wn {
+                    break;
+                }
+                let mut counts = [0u64; N_BUCKETS];
+                for (dst, src) in counts.iter_mut().zip(slot.counts.iter()) {
+                    *dst = src.load(Ordering::Relaxed);
+                }
+                let count = slot.count.load(Ordering::Relaxed);
+                let sum = slot.sum_us.load(Ordering::Relaxed);
+                if slot.seq.load(Ordering::Acquire) == s1 {
+                    agg.merge(&HistAgg {
+                        counts,
+                        count,
+                        sum_us: sum,
+                    });
+                    break;
+                }
+            }
+        }
+        agg
+    }
+
+    /// Aggregate the newest `last_n` windows as of now.
+    pub fn aggregate(&self, last_n: usize) -> HistAgg {
+        self.aggregate_at(last_n, self.epoch.elapsed())
+    }
+
+    /// The whole retained horizon (all windows).
+    pub fn window_agg(&self) -> HistAgg {
+        self.aggregate(self.cfg.windows)
+    }
+
+    /// The newest window only (the "fast" burn-rate window).
+    pub fn fast_agg(&self) -> HistAgg {
+        self.aggregate(1)
+    }
+
+    /// Lifetime totals (monotone; backs the Prometheus exposition).
+    pub fn totals(&self) -> HistAgg {
+        let mut counts = [0u64; N_BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(self.total_counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistAgg {
+            counts,
+            count: self.total_count.load(Ordering::Relaxed),
+            sum_us: self.total_sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        for b in 0..N_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_upper_us(b)), b, "upper of {b}");
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! Live telemetry plane: unified metrics registry, SLO burn-rate
+//! tracking, and tail-based trace sampling.
+//!
+//! One [`Telemetry`] handle per coordinator owns a [`Registry`] (stable
+//! dotted metric names, per-tenant/per-class labels), a per-tenant SLO
+//! tracker fed by the same windowed histograms, and a [`TailSampler`]
+//! keeping exemplar + breaching traces. The serving hot path calls
+//! [`Telemetry::observe`] once per finished request; everything else
+//! (protocol stats frames, the Prometheus listener, `chameleon top`)
+//! reads snapshots. `Telemetry::off()` short-circuits the whole plane
+//! for A/B overhead measurement, mirroring `Tracer::off()`.
+//!
+//! Metric name catalog (see README §Live telemetry):
+//! - `coordinator.requests.received`, `coordinator.replies`,
+//!   `coordinator.replies.partial`, `coordinator.shed`,
+//!   `coordinator.backpressure_frames`, `coordinator.rounds`,
+//!   `coordinator.batches_ge2`, `coordinator.max_batch`,
+//!   `coordinator.teardowns`, `coordinator.accept_drops`,
+//!   `coordinator.nodelay_fallbacks`, `coordinator.shutdown_denied`,
+//!   `coordinator.stats_denied`, `coordinator.deadline_shed`
+//! - `coordinator.shed_reason{reason=queue_full|rate_limited|deadline_expired}`
+//! - `coordinator.request_latency_us{tenant,class}` (windowed histogram)
+//! - `slo.latency_events{tenant}` / `slo.availability_events{tenant}`
+//!   (windowed 0/1 histograms the burn rates are computed from)
+//! - `admission.queued{tenant}` (gauge)
+//! - `cluster.*` (rounds, retries, failovers, hedges, ... gauges
+//!   mirrored from `ClusterStats` each dispatch round)
+//! - `retcache.*` (misses, cache_hits, spec_hits, cache_bytes, ...)
+//! - `net.reconnects`, `net.poisonings`, `net.heal_failures`
+//!   (process-global: they live in `Registry::global()` and are merged
+//!   into every scrape)
+
+pub mod hist;
+pub mod registry;
+pub mod sampler;
+pub mod scrape;
+pub mod slo;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::admission::QosClass;
+use crate::util::json::{obj, Json};
+
+pub use hist::{bucket_index, bucket_upper_us, HistAgg, HistogramConfig, WindowedHistogram};
+pub use registry::{Counter, Gauge, Registry, Sample, SampleValue};
+pub use sampler::{TailRecord, TailSampler, TailSnapshot, Verdict};
+pub use scrape::MetricsServer;
+pub use slo::{burn_rate, BurnPair, BurnReport, SloObjective};
+
+/// How a served request ended, as the telemetry plane sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Complete,
+    Partial,
+    Shed,
+}
+
+/// Telemetry plane configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryConfig {
+    pub hist: HistogramConfig,
+    /// Latency/availability objective per class; `None` disables burn
+    /// tracking for that class (latency histograms still record).
+    pub slo_interactive: Option<SloObjective>,
+    pub slo_batch: Option<SloObjective>,
+    pub reservoir_cap: usize,
+    pub flagged_cap: usize,
+    pub sampler_seed: u64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            hist: HistogramConfig::default(),
+            slo_interactive: None,
+            slo_batch: None,
+            reservoir_cap: 64,
+            flagged_cap: 256,
+            sampler_seed: 0x5eed,
+        }
+    }
+}
+
+/// Per-tenant handles: the latency histogram plus the 0/1 event
+/// histograms burn rates are computed from. All lock-free to record.
+pub struct TenantTelemetry {
+    pub tenant: u32,
+    pub class: QosClass,
+    pub objective: Option<SloObjective>,
+    pub latency: Arc<WindowedHistogram>,
+    /// 0 = met the latency objective, 1 = breached it.
+    pub latency_events: Arc<WindowedHistogram>,
+    /// 0 = completed fully, 1 = partial or shed.
+    pub availability_events: Arc<WindowedHistogram>,
+}
+
+impl TenantTelemetry {
+    /// Burn report over (fast = newest window, slow = whole horizon).
+    pub fn burn(&self) -> Option<BurnReport> {
+        let o = self.objective?;
+        let burn_of = |h: &WindowedHistogram, allowed: f64| BurnPair {
+            fast: {
+                let a = h.fast_agg();
+                burn_rate(a.count_above(0), a.count, allowed)
+            },
+            slow: {
+                let a = h.window_agg();
+                burn_rate(a.count_above(0), a.count, allowed)
+            },
+        };
+        let win = self.latency.window_agg();
+        Some(BurnReport {
+            tenant: self.tenant,
+            class: self.class.name(),
+            objective: o,
+            latency: burn_of(&self.latency_events, 1.0 - o.target),
+            availability: burn_of(&self.availability_events, 1.0 - o.availability),
+            window_count: win.count,
+            p99_us: win.quantile_us(0.99),
+        })
+    }
+}
+
+pub struct Telemetry {
+    enabled: bool,
+    start: Instant,
+    cfg: TelemetryConfig,
+    registry: Registry,
+    sampler: TailSampler,
+    tenants: Mutex<HashMap<u32, Arc<TenantTelemetry>>>,
+}
+
+impl Telemetry {
+    pub fn new(cfg: TelemetryConfig) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            enabled: true,
+            start: Instant::now(),
+            cfg,
+            registry: Registry::new(cfg.hist),
+            sampler: TailSampler::new(cfg.reservoir_cap, cfg.flagged_cap, cfg.sampler_seed),
+            tenants: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// A disabled plane: `observe` is a branch-and-return, nothing is
+    /// registered or sampled. The baseline arm of the overhead A/B.
+    pub fn off() -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            enabled: false,
+            start: Instant::now(),
+            cfg: TelemetryConfig::default(),
+            registry: Registry::default(),
+            sampler: TailSampler::new(1, 1, 0),
+            tenants: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn sampler(&self) -> &TailSampler {
+        &self.sampler
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn objective_for(&self, class: QosClass) -> Option<SloObjective> {
+        match class {
+            QosClass::Interactive => self.cfg.slo_interactive,
+            QosClass::Batch => self.cfg.slo_batch,
+        }
+    }
+
+    /// Get-or-create the per-tenant handles. Callers on the hot path
+    /// cache the returned `Arc` per tenant; the map lock is only taken
+    /// on first sight of a tenant (and here, for snapshot readers).
+    pub fn tenant(&self, tenant: u32) -> Arc<TenantTelemetry> {
+        let mut g = self.tenants.lock().unwrap();
+        if let Some(t) = g.get(&tenant) {
+            return t.clone();
+        }
+        let class = QosClass::of_gpu(tenant);
+        let tstr = tenant.to_string();
+        let labels: &[(&str, &str)] = &[("tenant", tstr.as_str()), ("class", class.name())];
+        let t = Arc::new(TenantTelemetry {
+            tenant,
+            class,
+            objective: self.objective_for(class),
+            latency: self
+                .registry
+                .histogram_with("coordinator.request_latency_us", labels),
+            latency_events: self
+                .registry
+                .histogram_with("slo.latency_events", &[("tenant", tstr.as_str())]),
+            availability_events: self
+                .registry
+                .histogram_with("slo.availability_events", &[("tenant", tstr.as_str())]),
+        });
+        g.insert(tenant, t.clone());
+        t
+    }
+
+    /// Record one finished request: latency histogram, SLO event
+    /// histograms, and a tail-sampler offer. `latency_us` is meaningful
+    /// for `Complete`/`Partial`; sheds record availability only.
+    pub fn observe(&self, tenant: u32, latency_us: u64, outcome: Outcome, trace_id: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.tenant(tenant);
+        self.observe_with(&t, latency_us, outcome, trace_id);
+    }
+
+    /// Same as [`observe`](Self::observe) with a pre-fetched tenant
+    /// handle (the dispatch loop caches these).
+    pub fn observe_with(
+        &self,
+        t: &TenantTelemetry,
+        latency_us: u64,
+        outcome: Outcome,
+        trace_id: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let breached = match outcome {
+            Outcome::Shed => {
+                t.availability_events.record(1);
+                false
+            }
+            Outcome::Partial => {
+                t.latency.record(latency_us);
+                t.availability_events.record(1);
+                self.record_latency_event(t, latency_us)
+            }
+            Outcome::Complete => {
+                t.latency.record(latency_us);
+                t.availability_events.record(0);
+                self.record_latency_event(t, latency_us)
+            }
+        };
+        let verdict = match outcome {
+            Outcome::Shed => Verdict::Shed,
+            Outcome::Partial => Verdict::Partial,
+            Outcome::Complete if breached => Verdict::SloBreach,
+            Outcome::Complete => Verdict::Ok,
+        };
+        self.sampler.offer(TailRecord {
+            trace_id,
+            tenant: t.tenant,
+            total_us: latency_us,
+            verdict,
+        });
+    }
+
+    fn record_latency_event(&self, t: &TenantTelemetry, latency_us: u64) -> bool {
+        match t.objective {
+            Some(o) => {
+                let breached = latency_us > o.latency_us;
+                t.latency_events.record(breached as u64);
+                breached
+            }
+            None => false,
+        }
+    }
+
+    /// Burn reports for every tenant seen so far (tenants without an
+    /// objective are skipped).
+    pub fn burn_rates(&self) -> Vec<BurnReport> {
+        let tenants: Vec<Arc<TenantTelemetry>> =
+            self.tenants.lock().unwrap().values().cloned().collect();
+        let mut out: Vec<BurnReport> = tenants.iter().filter_map(|t| t.burn()).collect();
+        out.sort_by_key(|b| b.tenant);
+        out
+    }
+
+    /// Per-tenant latency summaries (always available, SLO or not).
+    pub fn tenant_summaries(&self) -> Vec<Json> {
+        let mut tenants: Vec<Arc<TenantTelemetry>> =
+            self.tenants.lock().unwrap().values().cloned().collect();
+        tenants.sort_by_key(|t| t.tenant);
+        tenants
+            .iter()
+            .map(|t| {
+                let win = t.latency.window_agg();
+                let tot = t.latency.totals();
+                let mut fields = vec![
+                    ("tenant", Json::Num(t.tenant as f64)),
+                    ("class", Json::Str(t.class.name().to_string())),
+                    ("count", Json::Num(tot.count as f64)),
+                    ("window_count", Json::Num(win.count as f64)),
+                    ("p50_us", Json::Num(win.quantile_us(0.50) as f64)),
+                    ("p95_us", Json::Num(win.quantile_us(0.95) as f64)),
+                    ("p99_us", Json::Num(win.quantile_us(0.99) as f64)),
+                    ("mean_us", Json::Num(win.mean_us())),
+                ];
+                if let Some(b) = t.burn() {
+                    fields.push(("slo", b.to_json()));
+                }
+                obj(fields)
+            })
+            .collect()
+    }
+
+    /// Prometheus exposition: this plane's registry, then the
+    /// process-global registry (net counters), then derived burn-rate
+    /// gauges so alert rules need no PromQL gymnastics.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = self.registry.render_prometheus();
+        out.push_str(&Registry::global().render_prometheus());
+        for b in self.burn_rates() {
+            let t = b.tenant.to_string();
+            out.push_str(&format!(
+                "# TYPE slo_latency_burn gauge\n\
+                 slo_latency_burn{{tenant=\"{t}\",window=\"fast\"}} {:.6}\n\
+                 slo_latency_burn{{tenant=\"{t}\",window=\"slow\"}} {:.6}\n\
+                 # TYPE slo_availability_burn gauge\n\
+                 slo_availability_burn{{tenant=\"{t}\",window=\"fast\"}} {:.6}\n\
+                 slo_availability_burn{{tenant=\"{t}\",window=\"slow\"}} {:.6}\n",
+                finite_prom(b.latency.fast),
+                finite_prom(b.latency.slow),
+                finite_prom(b.availability.fast),
+                finite_prom(b.availability.slow),
+            ));
+        }
+        out.push_str(&format!(
+            "# TYPE telemetry_uptime_seconds gauge\ntelemetry_uptime_seconds {:.3}\n",
+            self.uptime_s()
+        ));
+        out
+    }
+
+    /// The JSON body of a `StatsResponse` (minus server-specific
+    /// sections the coordinator appends). Stable keys; see README.
+    pub fn stats_json(&self) -> Json {
+        obj(vec![
+            ("uptime_s", Json::Num(self.uptime_s())),
+            ("tenants", Json::Arr(self.tenant_summaries())),
+            (
+                "slo",
+                Json::Arr(self.burn_rates().iter().map(|b| b.to_json()).collect()),
+            ),
+            ("metrics", self.registry.to_json()),
+            ("global", Registry::global().to_json()),
+            ("tail", self.sampler.snapshot().to_json(16)),
+        ])
+    }
+}
+
+fn finite_prom(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        1e9
+    }
+}
+
+/// Render the `chameleon top` dashboard from a stats JSON document (as
+/// returned over a `StatsResponse` frame).
+pub fn render_dashboard(j: &Json) -> String {
+    let num = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let mut out = String::new();
+    let up = num(j, "uptime_s");
+    out.push_str(&format!("chameleon top — coordinator up {up:.1}s\n"));
+    if let Some(server) = j.get("server") {
+        out.push_str(&format!(
+            "requests: received {:>8}  replies {:>8}  partial {:>6}  shed {:>6}\n\
+             rounds:   {:>8}  max batch {:>4}  teardowns {:>4}  accept drops {:>4}\n",
+            num(server, "received") as u64,
+            num(server, "replies") as u64,
+            num(server, "partial") as u64,
+            num(server, "shed") as u64,
+            num(server, "rounds") as u64,
+            num(server, "max_batch") as u64,
+            num(server, "teardowns") as u64,
+            num(server, "accept_drops") as u64,
+        ));
+    }
+    if let Some(Json::Arr(tenants)) = j.get("tenants") {
+        out.push_str(&format!(
+            "\n{:>7} {:>12} {:>9} {:>9} {:>9} {:>9} {:>10} {:>10}\n",
+            "tenant", "class", "win_reqs", "p50_ms", "p95_ms", "p99_ms", "lat_burn", "avail_burn"
+        ));
+        for t in tenants {
+            let (lat_burn, avail_burn) = match t.get("slo") {
+                Some(s) => (
+                    format!("{:.2}", num(&s.get("latency_burn").cloned().unwrap_or(Json::Null), "fast")),
+                    format!(
+                        "{:.2}",
+                        num(&s.get("availability_burn").cloned().unwrap_or(Json::Null), "fast")
+                    ),
+                ),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            out.push_str(&format!(
+                "{:>7} {:>12} {:>9} {:>9.2} {:>9.2} {:>9.2} {:>10} {:>10}\n",
+                num(t, "tenant") as u64,
+                t.get("class").and_then(|c| c.as_str()).unwrap_or("?"),
+                num(t, "window_count") as u64,
+                num(t, "p50_us") / 1e3,
+                num(t, "p95_us") / 1e3,
+                num(t, "p99_us") / 1e3,
+                lat_burn,
+                avail_burn,
+            ));
+        }
+    }
+    if let Some(g) = j.get("metrics").and_then(|m| m.get("gauges")) {
+        if let Some(m) = g.as_obj() {
+            let cluster: Vec<String> = m
+                .iter()
+                .filter(|(k, _)| k.starts_with("cluster."))
+                .map(|(k, v)| {
+                    format!("{} {}", &k["cluster.".len()..], v.as_f64().unwrap_or(0.0) as u64)
+                })
+                .collect();
+            if !cluster.is_empty() {
+                out.push_str(&format!("\ncluster: {}\n", cluster.join("  ")));
+            }
+        }
+    }
+    if let Some(tail) = j.get("tail") {
+        out.push_str(&format!(
+            "\ntail: sampled {} — {} flagged traces retained\n",
+            num(tail, "seen") as u64,
+            num(tail, "flagged_total") as u64,
+        ));
+        if let Some(Json::Arr(flagged)) = tail.get("flagged") {
+            for f in flagged.iter().take(5) {
+                out.push_str(&format!(
+                    "  trace {:>16x} tenant {:>4} {:>9.2} ms  {}\n",
+                    num(f, "trace_id") as u64,
+                    num(f, "tenant") as u64,
+                    num(f, "total_us") / 1e3,
+                    f.get("verdict").and_then(|v| v.as_str()).unwrap_or("?"),
+                ));
+            }
+        }
+    }
+    out
+}

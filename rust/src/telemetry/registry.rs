@@ -1,0 +1,320 @@
+//! Process-wide metrics registry: named counters, gauges, and windowed
+//! histograms behind stable dotted names with optional labels.
+//!
+//! Registration (name lookup) takes a mutex and may allocate — callers do
+//! it once and hold the returned `Arc` handle. The handles themselves are
+//! plain atomics: the steady-state path never locks or allocates.
+//! Snapshots are tear-free at the counter level: the reader loops until
+//! two consecutive passes over every scalar agree, so a scrape observes
+//! one consistent cut of related counters instead of a field-by-field
+//! race.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::{obj, Json};
+
+use super::hist::{bucket_upper_us, HistAgg, HistogramConfig, WindowedHistogram};
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value (queue depth, cache bytes, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Label set: small sorted `(key, value)` list, e.g.
+/// `[("class", "interactive"), ("tenant", "3")]`.
+pub type Labels = Vec<(String, String)>;
+
+fn labels_of(pairs: &[(&str, &str)]) -> Labels {
+    let mut v: Labels = pairs
+        .iter()
+        .map(|(k, val)| (k.to_string(), val.to_string()))
+        .collect();
+    v.sort();
+    v
+}
+
+#[derive(Clone)]
+enum Slot {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<WindowedHistogram>),
+}
+
+/// One metric in a snapshot (plain data).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Labels,
+    pub value: SampleValue,
+}
+
+#[derive(Clone, Debug)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(u64),
+    /// `(lifetime totals, sliding-window view)`.
+    Histogram(HistAgg, HistAgg),
+}
+
+pub struct Registry {
+    metrics: Mutex<BTreeMap<(String, Labels), Slot>>,
+    hist_cfg: HistogramConfig,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new(HistogramConfig::default())
+    }
+}
+
+impl Registry {
+    pub fn new(hist_cfg: HistogramConfig) -> Self {
+        Registry {
+            metrics: Mutex::new(BTreeMap::new()),
+            hist_cfg,
+        }
+    }
+
+    /// The process-global registry. Layers with no natural owner (the
+    /// net client's reconnect/poison counters) register here; servers
+    /// own their own registry so concurrent tests don't cross-talk, and
+    /// merge the global one into their scrape output.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::default)
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counter_with(name, &[])
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let key = (name.to_string(), labels_of(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Slot::Counter(Arc::new(Counter::default())))
+        {
+            Slot::Counter(c) => c.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauge_with(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let key = (name.to_string(), labels_of(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Slot::Gauge(Arc::new(Gauge::default())))
+        {
+            Slot::Gauge(g) => g.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<WindowedHistogram> {
+        self.histogram_with(name, &[])
+    }
+
+    pub fn histogram_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<WindowedHistogram> {
+        let key = (name.to_string(), labels_of(labels));
+        let cfg = self.hist_cfg;
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Slot::Histogram(Arc::new(WindowedHistogram::new(cfg))))
+        {
+            Slot::Histogram(h) => h.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    /// Tear-free snapshot: re-reads every scalar until two consecutive
+    /// passes agree (bounded retries), so counters that move together
+    /// (requests vs replies) are observed from one consistent cut.
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let slots: Vec<((String, Labels), Slot)> = {
+            let m = self.metrics.lock().unwrap();
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let read_scalars = |slots: &[((String, Labels), Slot)]| -> Vec<u64> {
+            slots
+                .iter()
+                .map(|(_, s)| match s {
+                    Slot::Counter(c) => c.get(),
+                    Slot::Gauge(g) => g.get(),
+                    Slot::Histogram(h) => h.totals().count,
+                })
+                .collect()
+        };
+        let mut prev = read_scalars(&slots);
+        for _ in 0..16 {
+            let cur = read_scalars(&slots);
+            if cur == prev {
+                break;
+            }
+            prev = cur;
+        }
+        slots
+            .into_iter()
+            .zip(prev)
+            .map(|(((name, labels), slot), scalar)| Sample {
+                name,
+                labels,
+                value: match slot {
+                    Slot::Counter(_) => SampleValue::Counter(scalar),
+                    Slot::Gauge(_) => SampleValue::Gauge(scalar),
+                    Slot::Histogram(h) => {
+                        SampleValue::Histogram(h.totals(), h.window_agg())
+                    }
+                },
+            })
+            .collect()
+    }
+
+    /// Prometheus text exposition (version 0.0.4). Dotted names become
+    /// underscore names; histograms emit cumulative `_bucket{le=...}`,
+    /// `_sum` (seconds), and `_count` series from the lifetime totals.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for s in self.snapshot() {
+            let name = s.name.replace('.', "_");
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    out.push_str(&format!(
+                        "# TYPE {name} counter\n{name}{} {v}\n",
+                        prom_labels(&s.labels, &[])
+                    ));
+                }
+                SampleValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "# TYPE {name} gauge\n{name}{} {v}\n",
+                        prom_labels(&s.labels, &[])
+                    ));
+                }
+                SampleValue::Histogram(tot, _) => {
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    let mut cum = 0u64;
+                    for (b, c) in tot.counts.iter().enumerate() {
+                        cum += c;
+                        let le = if b >= super::hist::N_BUCKETS - 1 {
+                            "+Inf".to_string()
+                        } else {
+                            format!("{:.6}", bucket_upper_us(b) as f64 / 1e6)
+                        };
+                        out.push_str(&format!(
+                            "{name}_bucket{} {cum}\n",
+                            prom_labels(&s.labels, &[("le", &le)])
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{name}_sum{} {:.6}\n",
+                        prom_labels(&s.labels, &[]),
+                        tot.sum_us as f64 / 1e6
+                    ));
+                    out.push_str(&format!(
+                        "{name}_count{} {}\n",
+                        prom_labels(&s.labels, &[]),
+                        tot.count
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON view of the registry: counters and gauges keyed by
+    /// `name{label=value,...}`, histograms with quantiles over the
+    /// sliding window plus lifetime count/sum.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut hists = Vec::new();
+        for s in self.snapshot() {
+            let key = flat_key(&s.name, &s.labels);
+            match s.value {
+                SampleValue::Counter(v) => counters.push((key, Json::Num(v as f64))),
+                SampleValue::Gauge(v) => gauges.push((key, Json::Num(v as f64))),
+                SampleValue::Histogram(tot, win) => hists.push((
+                    key,
+                    obj(vec![
+                        ("count", Json::Num(tot.count as f64)),
+                        ("sum_us", Json::Num(tot.sum_us as f64)),
+                        ("window_count", Json::Num(win.count as f64)),
+                        ("p50_us", Json::Num(win.quantile_us(0.50) as f64)),
+                        ("p95_us", Json::Num(win.quantile_us(0.95) as f64)),
+                        ("p99_us", Json::Num(win.quantile_us(0.99) as f64)),
+                    ]),
+                )),
+            }
+        }
+        let owned = |v: Vec<(String, Json)>| Json::Obj(v.into_iter().collect());
+        obj(vec![
+            ("counters", owned(counters)),
+            ("gauges", owned(gauges)),
+            ("histograms", owned(hists)),
+        ])
+    }
+}
+
+fn flat_key(name: &str, labels: &Labels) -> String {
+    if labels.is_empty() {
+        name.to_string()
+    } else {
+        let inner: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("{name}{{{}}}", inner.join(","))
+    }
+}
+
+fn prom_labels(labels: &Labels, extra: &[(&str, &str)]) -> String {
+    if labels.is_empty() && extra.is_empty() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect();
+    parts.extend(extra.iter().map(|(k, v)| format!("{k}=\"{v}\"")));
+    format!("{{{}}}", parts.join(","))
+}

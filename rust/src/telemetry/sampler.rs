@@ -1,0 +1,227 @@
+//! Tail-based continuous trace sampling.
+//!
+//! Keeps three things, all bounded and preallocated-ish (the vectors are
+//! reserved to capacity up front; steady state never grows them):
+//!
+//! - an Algorithm-R reservoir of exemplar requests, a uniform sample of
+//!   all traffic;
+//! - every flagged request (SLO breach / partial / shed), newest-wins in
+//!   a bounded ring;
+//! - the latest exemplar per latency histogram bucket, so "p99 regressed"
+//!   links straight to a trace id living in the regressed bucket.
+//!
+//! This is a cold-ish path (one short uncontended mutex per completed
+//! request, orders of magnitude cheaper than the retrieval it annotates);
+//! the serving hot loop never blocks on a reader because snapshots copy
+//! out under the same short lock.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+use super::hist::{bucket_index, N_BUCKETS};
+
+/// How a request ended, from the SLO's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Ok,
+    SloBreach,
+    Partial,
+    Shed,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::SloBreach => "slo_breach",
+            Verdict::Partial => "partial",
+            Verdict::Shed => "shed",
+        }
+    }
+
+    pub fn flagged(&self) -> bool {
+        !matches!(self, Verdict::Ok)
+    }
+}
+
+/// One sampled request.
+#[derive(Clone, Copy, Debug)]
+pub struct TailRecord {
+    pub trace_id: u64,
+    pub tenant: u32,
+    pub total_us: u64,
+    pub verdict: Verdict,
+}
+
+impl TailRecord {
+    pub fn bucket(&self) -> usize {
+        bucket_index(self.total_us)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("trace_id", Json::Num(self.trace_id as f64)),
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("bucket", Json::Num(self.bucket() as f64)),
+            ("verdict", Json::Str(self.verdict.as_str().to_string())),
+        ])
+    }
+}
+
+struct Inner {
+    rng: Rng,
+    seen: u64,
+    reservoir: Vec<TailRecord>,
+    flagged: VecDeque<TailRecord>,
+    flagged_dropped: u64,
+    /// Latest record per latency bucket; flagged records displace
+    /// unflagged ones, never the other way around within a scrape
+    /// interval — the exemplar a bucket links to should be the
+    /// interesting one.
+    exemplars: Vec<Option<TailRecord>>,
+}
+
+pub struct TailSampler {
+    reservoir_cap: usize,
+    flagged_cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl TailSampler {
+    pub fn new(reservoir_cap: usize, flagged_cap: usize, seed: u64) -> Self {
+        let reservoir_cap = reservoir_cap.max(1);
+        let flagged_cap = flagged_cap.max(1);
+        TailSampler {
+            reservoir_cap,
+            flagged_cap,
+            inner: Mutex::new(Inner {
+                rng: Rng::new(seed ^ 0x7a11_5a3d_9e37_79b9),
+                seen: 0,
+                reservoir: Vec::with_capacity(reservoir_cap),
+                flagged: VecDeque::with_capacity(flagged_cap),
+                flagged_dropped: 0,
+                exemplars: vec![None; N_BUCKETS],
+            }),
+        }
+    }
+
+    /// Offer a completed request to the sampler.
+    pub fn offer(&self, rec: TailRecord) {
+        let mut g = self.inner.lock().unwrap();
+        g.seen += 1;
+
+        // Algorithm R over all traffic.
+        if g.reservoir.len() < self.reservoir_cap {
+            g.reservoir.push(rec);
+        } else {
+            let seen = g.seen as usize;
+            let j = g.rng.below(seen);
+            if j < self.reservoir_cap {
+                g.reservoir[j] = rec;
+            }
+        }
+
+        // Every flagged trace is kept until the ring wraps.
+        if rec.verdict.flagged() {
+            if g.flagged.len() == self.flagged_cap {
+                g.flagged.pop_front();
+                g.flagged_dropped += 1;
+            }
+            g.flagged.push_back(rec);
+        }
+
+        // Bucket exemplar: flagged beats unflagged.
+        let b = rec.bucket();
+        match &g.exemplars[b] {
+            Some(prev) if prev.verdict.flagged() && !rec.verdict.flagged() => {}
+            _ => g.exemplars[b] = Some(rec),
+        }
+    }
+
+    /// The latest exemplar whose latency fell in `bucket`.
+    pub fn exemplar(&self, bucket: usize) -> Option<TailRecord> {
+        let g = self.inner.lock().unwrap();
+        g.exemplars.get(bucket).copied().flatten()
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.inner.lock().unwrap().seen
+    }
+
+    pub fn flagged_count(&self) -> usize {
+        self.inner.lock().unwrap().flagged.len()
+    }
+
+    /// Copy out everything (bounded by the configured caps).
+    pub fn snapshot(&self) -> TailSnapshot {
+        let g = self.inner.lock().unwrap();
+        TailSnapshot {
+            seen: g.seen,
+            flagged_dropped: g.flagged_dropped,
+            reservoir: g.reservoir.clone(),
+            flagged: g.flagged.iter().copied().collect(),
+            exemplars: g
+                .exemplars
+                .iter()
+                .enumerate()
+                .filter_map(|(b, r)| r.map(|r| (b, r)))
+                .collect(),
+        }
+    }
+}
+
+/// Plain-data copy of the sampler state.
+#[derive(Clone, Debug)]
+pub struct TailSnapshot {
+    pub seen: u64,
+    pub flagged_dropped: u64,
+    pub reservoir: Vec<TailRecord>,
+    pub flagged: Vec<TailRecord>,
+    pub exemplars: Vec<(usize, TailRecord)>,
+}
+
+impl TailSnapshot {
+    /// JSON for the stats frame / scrape. Caps the embedded lists so a
+    /// stats reply stays small even with large reservoirs.
+    pub fn to_json(&self, max_items: usize) -> Json {
+        let arr = |v: &[TailRecord]| {
+            Json::Arr(v.iter().take(max_items).map(|r| r.to_json()).collect())
+        };
+        obj(vec![
+            ("seen", Json::Num(self.seen as f64)),
+            ("flagged_total", Json::Num(self.flagged.len() as f64)),
+            ("flagged_dropped", Json::Num(self.flagged_dropped as f64)),
+            ("reservoir", arr(&self.reservoir)),
+            (
+                "flagged",
+                Json::Arr(
+                    self.flagged
+                        .iter()
+                        .rev()
+                        .take(max_items)
+                        .map(|r| r.to_json())
+                        .collect(),
+                ),
+            ),
+            (
+                "exemplars",
+                Json::Arr(
+                    self.exemplars
+                        .iter()
+                        .map(|(b, r)| {
+                            let mut j = r.to_json();
+                            if let Json::Obj(m) = &mut j {
+                                m.insert("bucket".to_string(), Json::Num(*b as f64));
+                            }
+                            j
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal Prometheus text-exposition listener.
+//!
+//! Hand-rolled HTTP/1.0 over `std::net` + `util::poll` — enough for
+//! `curl` and a Prometheus scraper, no crates. Every request (any path)
+//! gets the full exposition and a `Connection: close`. The accept loop
+//! runs on one thread, nonblocking, and exits promptly on `shutdown()`
+//! via a stop flag plus a self-connect nudge (the same pattern the
+//! coordinator's accept loop uses).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::poll::wait_readable;
+
+use super::Telemetry;
+
+pub struct MetricsServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `bind` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and
+    /// serve `telemetry`'s exposition until `shutdown()`.
+    pub fn spawn(bind: &str, telemetry: Arc<Telemetry>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(bind)
+            .with_context(|| format!("binding metrics listener on {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("metrics-scrape".into())
+            .spawn(move || accept_loop(listener, telemetry, stop2))?;
+        Ok(MetricsServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop out of its poll wait.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(unix)]
+fn listener_fd(l: &TcpListener) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn listener_fd(_l: &TcpListener) -> i32 {
+    -1
+}
+
+fn accept_loop(listener: TcpListener, telemetry: Arc<Telemetry>, stop: Arc<AtomicBool>) {
+    let fd = listener_fd(&listener);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let _ = handle_scrape(stream, &telemetry);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if fd >= 0 {
+                    let _ = wait_readable(&[fd], Duration::from_millis(200));
+                } else {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_scrape(mut stream: TcpStream, telemetry: &Telemetry) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read the request head (we only need it consumed; any path works).
+    let mut buf = [0u8; 1024];
+    let mut head = Vec::new();
+    loop {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let body = telemetry.render_prometheus();
+    let reply = format!(
+        "HTTP/1.0 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(reply.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}

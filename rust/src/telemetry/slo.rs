@@ -1,0 +1,105 @@
+//! SLO objectives and multi-window burn-rate algebra.
+//!
+//! An objective says "p<target> latency stays under `latency_us`, and at
+//! least `availability` of requests complete fully". Burn rate is the
+//! standard SRE ratio: observed bad fraction over allowed bad fraction.
+//! 1.0 means the error budget is being consumed exactly at the sustainable
+//! pace; 10.0 means ten times too fast. Burn is computed over two windows
+//! of the same windowed histograms — the newest window (fast: reacts
+//! within one window to a breach) and the whole retained horizon (slow:
+//! smooths transients) — so an alert can require both to fire.
+
+use crate::util::json::{obj, Json};
+
+/// Per-class service level objective.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloObjective {
+    /// Latency threshold in microseconds.
+    pub latency_us: u64,
+    /// Quantile that must meet the threshold, e.g. 0.99 allows 1% of
+    /// requests over `latency_us`.
+    pub target: f64,
+    /// Fraction of requests that must complete fully (not partial, not
+    /// shed), e.g. 0.999 allows one bad request per thousand.
+    pub availability: f64,
+}
+
+impl Default for SloObjective {
+    fn default() -> Self {
+        SloObjective {
+            latency_us: 50_000,
+            target: 0.99,
+            availability: 0.999,
+        }
+    }
+}
+
+/// Burn rate: `(bad / total) / allowed_bad_fraction`.
+///
+/// Degenerate cases pin down to: no traffic burns nothing (0.0); a zero
+/// error budget with any bad event burns infinitely fast.
+pub fn burn_rate(bad: u64, total: u64, allowed_bad_fraction: f64) -> f64 {
+    if total == 0 || bad == 0 {
+        return 0.0;
+    }
+    let frac = bad as f64 / total as f64;
+    if allowed_bad_fraction <= 0.0 {
+        return f64::INFINITY;
+    }
+    frac / allowed_bad_fraction
+}
+
+/// Fast/slow burn pair for one dimension (latency or availability).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BurnPair {
+    pub fast: f64,
+    pub slow: f64,
+}
+
+impl BurnPair {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("fast", Json::Num(finite(self.fast))),
+            ("slow", Json::Num(finite(self.slow))),
+        ])
+    }
+}
+
+/// JSON has no Infinity; clamp to a large sentinel the dashboards treat
+/// as "budget exhausted instantly".
+fn finite(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        1e9
+    }
+}
+
+/// Burn-rate report for one tenant.
+#[derive(Clone, Debug)]
+pub struct BurnReport {
+    pub tenant: u32,
+    pub class: &'static str,
+    pub objective: SloObjective,
+    pub latency: BurnPair,
+    pub availability: BurnPair,
+    /// Sliding-window sample count backing the latency burn.
+    pub window_count: u64,
+    pub p99_us: u64,
+}
+
+impl BurnReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("class", Json::Str(self.class.to_string())),
+            ("slo_latency_us", Json::Num(self.objective.latency_us as f64)),
+            ("slo_target", Json::Num(self.objective.target)),
+            ("slo_availability", Json::Num(self.objective.availability)),
+            ("latency_burn", self.latency.to_json()),
+            ("availability_burn", self.availability.to_json()),
+            ("window_count", Json::Num(self.window_count as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+        ])
+    }
+}

@@ -1,0 +1,446 @@
+//! Live telemetry plane tests: windowed-histogram bucket math against a
+//! scalar reference, burn-rate fixtures, tear-free stats snapshots, the
+//! tail sampler's retention rules, and the two live read paths — stats
+//! protocol frames (conservation, SLO burn, flagged traces, the admin
+//! gate) and the hand-rolled Prometheus scrape listener.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use chameleon::chamvs::dispatcher::Dispatcher;
+use chameleon::chamvs::node::{MemoryNode, ScanEngine};
+use chameleon::config;
+use chameleon::coordinator::admission::{QosConfig, BATCH_TENANT_BASE};
+use chameleon::coordinator::batcher::BatchPolicy;
+use chameleon::coordinator::retriever::Retriever;
+use chameleon::coordinator::server::{
+    CoordinatorClient, CoordinatorServer, ServeMode, ServerStats,
+};
+use chameleon::coordinator::SloObjective;
+use chameleon::data::corpus::Corpus;
+use chameleon::data::synthetic::SyntheticDataset;
+use chameleon::ivf::index::IvfPqIndex;
+use chameleon::ivf::shard::Shard;
+use chameleon::telemetry::{
+    bucket_index, bucket_upper_us, burn_rate, HistogramConfig, MetricsServer, Outcome,
+    Registry, TailRecord, TailSampler, Telemetry, TelemetryConfig, Verdict,
+    WindowedHistogram,
+};
+use chameleon::trace::Tracer;
+use chameleon::util::json::Json;
+
+fn build_retriever(seed: u64) -> Retriever {
+    let ds = config::dataset_by_name("SIFT").unwrap();
+    let data = SyntheticDataset::generate_sized(ds, 2000, 32, seed);
+    let index = IvfPqIndex::build(&data.data, data.n, data.d, ds.m, 32, seed ^ 1);
+    let nodes: Vec<MemoryNode> = (0..2)
+        .map(|i| MemoryNode::new(Shard::carve(&index, i, 2), ScanEngine::Native, 10))
+        .collect();
+    let corpus = Corpus::generate(2000, 2048, config::CHUNK_LEN, seed ^ 2);
+    Retriever::new(ds, index, Dispatcher::new(nodes, 10), corpus)
+}
+
+fn queries(seed: u64) -> SyntheticDataset {
+    SyntheticDataset::generate_sized(
+        config::dataset_by_name("SIFT").unwrap(),
+        2000,
+        32,
+        seed,
+    )
+}
+
+fn num(j: &Json, k: &str) -> i64 {
+    j.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0) as i64
+}
+
+/// Deterministic window rotation via `record_at`: values land in their
+/// log2 buckets, the fast window sees only the newest slot, and values
+/// older than the retained horizon expire from the window view while the
+/// lifetime totals keep them.
+#[test]
+fn windowed_histogram_rotation_and_expiry() {
+    let h = WindowedHistogram::new(HistogramConfig {
+        window: Duration::from_secs(1),
+        windows: 3,
+    });
+    h.record_at(100, Duration::from_millis(500)); // window 0
+    h.record_at(200, Duration::from_millis(1500)); // window 1
+    h.record_at(400, Duration::from_millis(2500)); // window 2
+
+    let t2 = Duration::from_millis(2500);
+    let fast = h.aggregate_at(1, t2);
+    assert_eq!(fast.count, 1, "fast window is the newest slot only");
+    assert_eq!(fast.sum_us, 400);
+    let all = h.aggregate_at(3, t2);
+    assert_eq!(all.count, 3);
+    assert_eq!(all.sum_us, 700);
+
+    // Window 3 recycles slot 0 — the value 100 falls off the horizon.
+    h.record_at(800, Duration::from_millis(3500));
+    let t3 = Duration::from_millis(3500);
+    let horizon = h.aggregate_at(3, t3);
+    assert_eq!(horizon.count, 3, "expired slot still counted");
+    assert_eq!(horizon.sum_us, 200 + 400 + 800);
+    // count_above at the 255 boundary (2^8 - 1) is exact: 400 and 800.
+    assert_eq!(horizon.count_above(255), 2);
+    assert_eq!(horizon.quantile_us(1.0), bucket_upper_us(bucket_index(800)));
+
+    // Totals never drop a sample.
+    let tot = h.totals();
+    assert_eq!(tot.count, 4);
+    assert_eq!(tot.sum_us, 1500);
+}
+
+/// Histogram quantiles against a sorted scalar reference: the reported
+/// quantile must be the upper bound of the bucket the true rank value
+/// falls in.
+#[test]
+fn windowed_histogram_quantiles_match_scalar_reference() {
+    let h = WindowedHistogram::new(HistogramConfig::default());
+    let mut vals: Vec<u64> = Vec::new();
+    let mut x: u64 = 0x3c6e_f372_fe94_f82b;
+    for _ in 0..500 {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let v = (x >> 33) % 100_000;
+        vals.push(v);
+        h.record(v);
+    }
+    vals.sort_unstable();
+    let tot = h.totals();
+    assert_eq!(tot.count, 500);
+    assert_eq!(tot.sum_us, vals.iter().sum::<u64>());
+    for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+        let rank = ((q * 500.0).ceil() as usize).clamp(1, 500);
+        let truth = vals[rank - 1];
+        assert_eq!(
+            tot.quantile_us(q),
+            bucket_upper_us(bucket_index(truth)),
+            "q={q} truth={truth}"
+        );
+    }
+    // Breach counting vs the reference at an exact bucket boundary.
+    let threshold = (1u64 << 12) - 1;
+    let truth_above = vals.iter().filter(|&&v| v > threshold).count() as u64;
+    assert_eq!(tot.count_above(threshold), truth_above);
+}
+
+/// Hand-computed burn-rate fixtures, including the degenerate corners.
+#[test]
+fn burn_rate_fixtures() {
+    assert_eq!(burn_rate(2, 100, 0.01), 2.0);
+    assert_eq!(burn_rate(5, 100, 0.05), 1.0);
+    assert_eq!(burn_rate(0, 0, 0.01), 0.0, "no traffic burns nothing");
+    assert_eq!(burn_rate(0, 100, 0.0), 0.0, "no bad events burns nothing");
+    assert!(
+        burn_rate(1, 100, 0.0).is_infinite(),
+        "zero budget + a bad event burns infinitely fast"
+    );
+}
+
+/// A breach shows up in the fast burn window immediately (the fast window
+/// is the current slot, so no rotation has to pass first), and completes
+/// leave availability burn at zero.
+#[test]
+fn burn_reacts_within_one_window() {
+    let telemetry = Telemetry::new(TelemetryConfig {
+        slo_interactive: Some(SloObjective {
+            latency_us: 1000,
+            target: 0.9,
+            availability: 0.999,
+        }),
+        ..TelemetryConfig::default()
+    });
+    for i in 0..5 {
+        telemetry.observe(0, 10_000, Outcome::Complete, 100 + i);
+    }
+    let burns = telemetry.burn_rates();
+    assert_eq!(burns.len(), 1);
+    let b = &burns[0];
+    assert_eq!(b.tenant, 0);
+    // Every request breached the 1 ms objective: (5/5) / (1 - 0.9) = 10.
+    assert!((b.latency.fast - 10.0).abs() < 1e-9, "fast burn {}", b.latency.fast);
+    assert!((b.latency.slow - 10.0).abs() < 1e-9);
+    assert_eq!(b.availability.fast, 0.0, "all requests completed fully");
+    assert_eq!(b.window_count, 5);
+    assert!(b.p99_us >= 10_000);
+    // Every breach was flagged by the tail sampler, trace ids intact.
+    let tail = telemetry.sampler().snapshot();
+    assert_eq!(tail.flagged.len(), 5);
+    assert!(tail.flagged.iter().all(|r| r.verdict == Verdict::SloBreach));
+    assert!(tail.flagged.iter().any(|r| r.trace_id == 104));
+}
+
+/// `ServerStats::snapshot` under a write storm: monotone across reads,
+/// never crashes, and exact once writers quiesce. The writers drive the
+/// same registry handles the server's hot path holds.
+#[test]
+fn server_stats_snapshot_tear_free() {
+    let reg = Registry::default();
+    let stats = ServerStats::new(&reg);
+    let received = reg.counter("coordinator.requests.received");
+    let replies = reg.counter("coordinator.replies");
+    const WRITERS: usize = 4;
+    const PER: u64 = 20_000;
+    std::thread::scope(|s| {
+        for _ in 0..WRITERS {
+            let received = received.clone();
+            let replies = replies.clone();
+            s.spawn(move || {
+                for _ in 0..PER {
+                    received.inc();
+                    replies.inc();
+                }
+            });
+        }
+        let mut last = 0u64;
+        for _ in 0..200 {
+            let snap = stats.snapshot();
+            assert!(snap.received >= last, "received went backwards");
+            last = snap.received;
+        }
+    });
+    let snap = stats.snapshot();
+    assert_eq!(snap.received, WRITERS as u64 * PER);
+    assert_eq!(snap.replies, WRITERS as u64 * PER);
+    assert_eq!(stats.received(), snap.received, "getters agree with snapshot");
+}
+
+/// Reservoir stays bounded, flagged traces are retained newest-wins, and
+/// a flagged exemplar is never displaced by an unflagged one.
+#[test]
+fn tail_sampler_retention_rules() {
+    let sampler = TailSampler::new(8, 4, 42);
+    for i in 0..100u64 {
+        sampler.offer(TailRecord {
+            trace_id: i,
+            tenant: 0,
+            total_us: 500,
+            verdict: Verdict::Ok,
+        });
+    }
+    assert_eq!(sampler.seen(), 100);
+    assert_eq!(sampler.flagged_count(), 0);
+    let snap = sampler.snapshot();
+    assert_eq!(snap.reservoir.len(), 8, "reservoir bounded at its cap");
+
+    // Six flagged records through a cap of 4: the oldest two fall off.
+    for i in 0..6u64 {
+        sampler.offer(TailRecord {
+            trace_id: 1000 + i,
+            tenant: 3,
+            total_us: 90_000,
+            verdict: Verdict::SloBreach,
+        });
+    }
+    let snap = sampler.snapshot();
+    assert_eq!(snap.flagged.len(), 4);
+    assert_eq!(snap.flagged_dropped, 2);
+    let ids: Vec<u64> = snap.flagged.iter().map(|r| r.trace_id).collect();
+    assert_eq!(ids, vec![1002, 1003, 1004, 1005], "newest-wins ring");
+
+    // The 90 ms bucket's exemplar is flagged, and an unflagged arrival in
+    // the same bucket does not displace it.
+    let b = bucket_index(90_000);
+    assert_eq!(sampler.exemplar(b).unwrap().verdict, Verdict::SloBreach);
+    sampler.offer(TailRecord {
+        trace_id: 7,
+        tenant: 0,
+        total_us: 90_000,
+        verdict: Verdict::Ok,
+    });
+    let ex = sampler.exemplar(b).unwrap();
+    assert_eq!(ex.verdict, Verdict::SloBreach, "flagged exemplar sticky");
+}
+
+/// End-to-end over the stats protocol frames: drive two tenant classes,
+/// then assert conservation (`received == replies + shed`), a fast burn
+/// > 1 under an intentionally impossible 1 µs SLO, breaching traces
+/// retrievable from the tail section, and the prefix filter.
+#[test]
+fn live_stats_frame_conservation_burn_and_tail() {
+    let qos = QosConfig {
+        slo_interactive: Some(SloObjective {
+            latency_us: 1, // every real retrieval breaches
+            target: 0.9,
+            availability: 0.999,
+        }),
+        slo_batch: Some(SloObjective::default()),
+        ..QosConfig::default()
+    };
+    let mut server = CoordinatorServer::spawn_qos(
+        || build_retriever(91),
+        ServeMode::Concurrent(BatchPolicy::default()),
+        qos,
+        Tracer::off(),
+    )
+    .unwrap();
+    let addr = server.addr;
+    let ds = queries(91);
+    let mut client = CoordinatorClient::connect(addr, 0).unwrap();
+    for i in 0..12 {
+        client.retrieve(ds.query(i % 32), &[], 10, false).unwrap();
+    }
+    let mut batch = CoordinatorClient::connect(addr, BATCH_TENANT_BASE).unwrap();
+    for i in 0..4 {
+        batch.retrieve(ds.query(i), &[], 10, false).unwrap();
+    }
+
+    // Reply counters are bumped just after the reply bytes go out, so
+    // poll briefly for the final increment to land.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let doc = loop {
+        let doc = client.stats("").unwrap();
+        let srv = doc.get("server").expect("server section");
+        if num(srv, "received") == 16 && num(srv, "replies") + num(srv, "shed") == 16 {
+            break doc;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "conservation never converged: {}",
+            doc.dump()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+
+    // Tight SLO: every interactive request breached, so the fast latency
+    // burn is (12/12) / (1 - 0.9) = 10.
+    let slo = doc.get("slo").and_then(|s| s.as_arr()).expect("slo array");
+    let interactive = slo.iter().find(|b| num(b, "tenant") == 0).expect("tenant 0");
+    let fast = interactive
+        .get("latency_burn")
+        .and_then(|b| b.get("fast"))
+        .and_then(|f| f.as_f64())
+        .unwrap();
+    assert!(fast > 1.0, "fast burn should exceed 1.0, got {fast}");
+
+    // The breaching traces are retrievable from the tail section.
+    let tail = doc.get("tail").expect("tail section");
+    assert!(num(tail, "flagged_total") >= 12, "{}", doc.dump());
+    let flagged = tail.get("flagged").and_then(|f| f.as_arr()).unwrap();
+    assert!(flagged
+        .iter()
+        .any(|f| f.get("verdict").and_then(|v| v.as_str()) == Some("slo_breach")));
+
+    // Prefix filtering narrows the metrics map to the asked-for subtree.
+    let filtered = client.stats("coordinator.").unwrap();
+    let counters = filtered
+        .get("metrics")
+        .and_then(|m| m.get("counters"))
+        .and_then(|c| c.as_obj())
+        .unwrap();
+    assert!(!counters.is_empty());
+    assert!(
+        counters.keys().all(|k| k.starts_with("coordinator.")),
+        "{}",
+        filtered.dump()
+    );
+
+    server.shutdown();
+}
+
+/// The admin gate: with `stats_admin_only`, a non-admin connection gets a
+/// well-formed `{"error": ...}` body (not a dropped connection), the
+/// denial is counted, and the admin connection still reads full stats.
+#[test]
+fn stats_admin_gate() {
+    let qos = QosConfig {
+        stats_admin_only: true,
+        ..QosConfig::default()
+    };
+    let mut server = CoordinatorServer::spawn_qos(
+        || build_retriever(92),
+        ServeMode::Concurrent(BatchPolicy::default()),
+        qos,
+        Tracer::off(),
+    )
+    .unwrap();
+    let addr = server.addr;
+    let ds = queries(92);
+
+    // conn 0 is the admin; connect it first.
+    let mut admin = CoordinatorClient::connect(addr, 0).unwrap();
+    admin.retrieve(ds.query(0), &[], 10, false).unwrap();
+    let mut rogue = CoordinatorClient::connect(addr, 1).unwrap();
+    rogue.retrieve(ds.query(1), &[], 10, false).unwrap();
+
+    let denied = rogue.stats("").unwrap();
+    assert!(
+        denied.get("error").and_then(|e| e.as_str()).is_some(),
+        "non-admin stats should carry an error body: {}",
+        denied.dump()
+    );
+    assert!(server.stats().stats_denied() >= 1);
+    // The rogue connection survives the denial.
+    rogue.retrieve(ds.query(2), &[], 10, false).unwrap();
+
+    let ok = admin.stats("").unwrap();
+    assert!(ok.get("error").is_none());
+    assert!(ok.get("server").is_some(), "{}", ok.dump());
+    server.shutdown();
+}
+
+fn http_get(addr: std::net::SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Exact-name series value from a Prometheus text body (trailing space
+/// keeps `coordinator_shed` from matching `coordinator_shed_reason{...}`).
+fn prom_value(body: &str, name: &str) -> i64 {
+    let prefix = format!("{name} ");
+    body.lines()
+        .find_map(|l| l.strip_prefix(prefix.as_str()))
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .map(|v| v as i64)
+        .unwrap_or(-1)
+}
+
+/// The hand-rolled HTTP listener serves a parseable exposition whose
+/// counters satisfy the same conservation invariant mid-run scrapers
+/// rely on in CI.
+#[test]
+fn http_scrape_exposes_conservation() {
+    let mut server = CoordinatorServer::spawn_qos(
+        || build_retriever(93),
+        ServeMode::Concurrent(BatchPolicy::default()),
+        QosConfig::default(),
+        Tracer::off(),
+    )
+    .unwrap();
+    let addr = server.addr;
+    let ds = queries(93);
+    let mut client = CoordinatorClient::connect(addr, 0).unwrap();
+    for i in 0..8 {
+        client.retrieve(ds.query(i % 32), &[], 10, false).unwrap();
+    }
+    let mut metrics = MetricsServer::spawn("127.0.0.1:0", server.telemetry()).unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let body = http_get(metrics.addr);
+        assert!(body.starts_with("HTTP/1.0 200"), "bad scrape reply: {body}");
+        let received = prom_value(&body, "coordinator_requests_received");
+        let replies = prom_value(&body, "coordinator_replies");
+        let shed = prom_value(&body, "coordinator_shed");
+        let backpressure = prom_value(&body, "coordinator_backpressure_frames");
+        if received == 8 && replies + shed == 8 {
+            assert_eq!(shed, backpressure, "sheds must equal Backpressure frames");
+            assert!(body.contains("telemetry_uptime_seconds"));
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "scrape conservation never converged:\n{body}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    metrics.shutdown();
+    server.shutdown();
+}
